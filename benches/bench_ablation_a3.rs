@@ -1,0 +1,113 @@
+//! Ablations on the design choices behind the proposed algorithms:
+//!
+//! 1. **A3 restart budget** — η as a function of restarts (1/10/100);
+//!    the paper repeats A3 100× (200× for R'). Shows diminishing returns.
+//! 2. **Permutation vs split** — the proposed algorithms change *two*
+//!    things relative to Yan et al.: the ordering heuristic and the
+//!    equal-token (vs equal-count) split. This ablation crosses them:
+//!    {uniform, A3-stratified} × {equal-count, equal-mass}, attributing
+//!    the gain to each component.
+//! 3. **Restart-equalized comparison** — baseline with the same wallclock
+//!    budget as A3 (same restarts) still loses: the stratified proposal
+//!    distribution, not the search budget, is the win.
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::{eta, partition, permutation, split, Algorithm};
+use pplda::util::rng::Rng;
+use pplda::util::tsv::{f, Table};
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let scale = if fast { 20 } else { 1 };
+    let seed = 42;
+    let p = 30;
+
+    let bow = generate(&Profile::nips_like().scaled(scale), seed);
+    println!(
+        "bench_ablation_a3: D={} W={} N={} P={p}\n",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    // ---- 1. restart budget ----
+    let mut t1 = Table::new(["restarts", "A3_eta", "baseline_eta"]);
+    let budgets: &[usize] = if fast { &[1, 4, 10] } else { &[1, 10, 100] };
+    let mut prev_a3 = 0.0;
+    for &r in budgets {
+        let a3 = partition(&bow, p, Algorithm::A3 { restarts: r }, seed).eta;
+        let base = partition(&bow, p, Algorithm::Baseline { restarts: r }, seed).eta;
+        t1.row([r.to_string(), f(a3, 4), f(base, 4)]);
+        assert!(a3 >= prev_a3 - 1e-12, "A3 eta must be monotone in restarts");
+        assert!(a3 > base, "A3 beats baseline at equal budget {r}");
+        prev_a3 = a3;
+    }
+    println!("restart budget:\n{}", t1.to_aligned());
+
+    // ---- 2. permutation × split cross ----
+    let mut t2 = Table::new(["permutation", "split", "eta"]);
+    let mut rng = Rng::stream(seed, 1);
+    let orders: [(&str, Vec<u32>, Vec<u32>); 2] = [
+        (
+            "uniform (Yan)",
+            permutation::uniform_shuffle(bow.num_docs(), &mut rng),
+            permutation::uniform_shuffle(bow.num_words(), &mut rng),
+        ),
+        (
+            "A3 stratified",
+            permutation::stratified_shuffle(bow.row_sums(), p, &mut rng),
+            permutation::stratified_shuffle(bow.col_sums(), p, &mut rng),
+        ),
+    ];
+    let mut cross = std::collections::BTreeMap::new();
+    for (oname, dorder, worder) in &orders {
+        for (sname, equal_mass) in [("equal-count", false), ("equal-mass", true)] {
+            let (dg, wg) = if equal_mass {
+                (
+                    split::split_equal_mass(dorder, bow.row_sums(), p),
+                    split::split_equal_mass(worder, bow.col_sums(), p),
+                )
+            } else {
+                (
+                    split::split_equal_count(dorder, p),
+                    split::split_equal_count(worder, p),
+                )
+            };
+            let e = eta::eta(&bow, &dg, &wg, p).eta;
+            t2.row([oname.to_string(), sname.to_string(), f(e, 4)]);
+            cross.insert((*oname, sname), e);
+        }
+    }
+    println!("permutation × split (single draw each):\n{}", t2.to_aligned());
+    // Both components must contribute on the skewed corpus.
+    assert!(
+        cross[&("uniform (Yan)", "equal-mass")] > cross[&("uniform (Yan)", "equal-count")],
+        "equal-mass split alone should improve on Yan's equal-count"
+    );
+    assert!(
+        cross[&("A3 stratified", "equal-count")]
+            > cross[&("uniform (Yan)", "equal-count")],
+        "stratification should improve on uniform under the equal-count split"
+    );
+    // Under the equal-mass split, single draws of stratified vs uniform
+    // are comparable (wide tolerance): stratification's value there is
+    // variance reduction across restarts, which section 1/3 measure.
+    assert!(
+        cross[&("A3 stratified", "equal-mass")]
+            >= cross[&("uniform (Yan)", "equal-mass")] - 0.06,
+        "stratified permutation should not substantially hurt"
+    );
+
+    // ---- 3. equalized-budget head-to-head ----
+    let r = if fast { 10 } else { 100 };
+    let a3 = partition(&bow, p, Algorithm::A3 { restarts: r }, seed);
+    let base = partition(&bow, p, Algorithm::Baseline { restarts: r }, seed);
+    println!(
+        "equal budget ({r} restarts): A3 {} vs baseline {} -> A3 wins by {:.2}%",
+        f(a3.eta, 4),
+        f(base.eta, 4),
+        100.0 * (a3.eta - base.eta) / base.eta
+    );
+    assert!(a3.eta > base.eta);
+    println!("\nablation checks passed");
+}

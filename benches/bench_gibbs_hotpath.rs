@@ -1,0 +1,79 @@
+//! Hot-path microbenchmark: native collapsed-Gibbs sampling throughput
+//! (tokens/sec, ns/token) as a function of K, for the serial kernel and
+//! the partitioned engine — the L3 perf deliverable's primary meter.
+
+use pplda::bench::{Bench, BenchConfig};
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::gibbs::serial::SerialLda;
+use pplda::partition::{partition, Algorithm};
+use pplda::scheduler::exec::{ExecMode, ParallelLda};
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let scale = if fast { 40 } else { 10 };
+    let seed = 42;
+    let bow = generate(&Profile::nips_like().scaled(scale), seed);
+    let n = bow.num_tokens() as f64;
+    println!(
+        "bench_gibbs_hotpath: D={} W={} N={}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    let ks: &[usize] = if fast { &[16, 64] } else { &[16, 64, 256] };
+    let mut bench = Bench::new(BenchConfig::heavy());
+    for &k in ks {
+        let mut lda = SerialLda::init(&bow, k, 0.5, 0.1, seed);
+        lda.sweep(); // warm caches
+        bench.run_with_items(&format!("serial sweep K={k}"), Some(n), || {
+            lda.sweep();
+        });
+    }
+
+    // Partitioned engine overhead (sequential mode isolates scheduling
+    // cost from thread spawn): should stay within a few % of serial.
+    let k = 64;
+    let plan = partition(&bow, 8, Algorithm::A3 { restarts: 10 }, seed);
+    let mut par = ParallelLda::init(&bow, &plan, k, 0.5, 0.1, seed);
+    par.sweep(ExecMode::Sequential);
+    bench.run_with_items(&format!("partitioned P=8 K={k} (seq)"), Some(n), || {
+        par.sweep(ExecMode::Sequential);
+    });
+    let mut par2 = ParallelLda::init(&bow, &plan, k, 0.5, 0.1, seed);
+    par2.sweep(ExecMode::Threaded);
+    bench.run_with_items(&format!("partitioned P=8 K={k} (threads)"), Some(n), || {
+        par2.sweep(ExecMode::Threaded);
+    });
+
+    println!("{}", bench.table().to_aligned());
+    for m in bench.results() {
+        let ns_per_token = m.per_iter.mean * 1e9 / n;
+        println!("{:35} {:8.1} ns/token", m.name, ns_per_token);
+    }
+
+    // The partitioned engine (sequential) must be within 2× of serial at
+    // the same K — the scheduler must not dominate the kernel.
+    let serial_k64 = bench
+        .results()
+        .iter()
+        .find(|m| m.name.contains("serial sweep K=64"))
+        .unwrap()
+        .per_iter
+        .median;
+    let part_k64 = bench
+        .results()
+        .iter()
+        .find(|m| m.name.contains("(seq)"))
+        .unwrap()
+        .per_iter
+        .median;
+    println!(
+        "partitioned/serial overhead: {:.2}x",
+        part_k64 / serial_k64
+    );
+    assert!(
+        part_k64 < serial_k64 * 2.0,
+        "partitioned engine overhead too high: {part_k64} vs {serial_k64}"
+    );
+}

@@ -1,0 +1,104 @@
+//! §VI-C runtime claims:
+//!
+//! 1. Deterministic A1/A2 are ~two orders of magnitude faster than the
+//!    randomized algorithms at their paper-default restart budgets
+//!    (A1/A2 run once; A3/baseline run 100×).
+//! 2. Partitioning time is small relative to training — "Algorithm A3's
+//!    running time is two orders of magnitude faster than the model
+//!    training time."
+//!
+//! Measures wall time of each partitioner on NIPS (and NYTimes-like at
+//! reduced scale) plus the wall time of Gibbs sweeps for comparison.
+
+use pplda::bench::{Bench, BenchConfig};
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::gibbs::serial::SerialLda;
+use pplda::partition::{partition, Algorithm};
+use pplda::util::tsv::f;
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let restarts = if fast { 10 } else { 100 };
+    let seed = 42;
+    let p = 30;
+
+    for (label, profile) in [
+        ("NIPS", Profile::nips_like()),
+        ("NYTimes/10", Profile::nytimes_like().scaled(if fast { 40 } else { 10 })),
+    ] {
+        let bow = generate(&profile, seed);
+        println!(
+            "=== {label}: D={} W={} N={} P={p} ===",
+            bow.num_docs(),
+            bow.num_words(),
+            bow.num_tokens()
+        );
+
+        let mut bench = Bench::new(BenchConfig::heavy());
+        bench.run("A1 (deterministic)", || {
+            pplda::bench::black_box(partition(&bow, p, Algorithm::A1, seed));
+        });
+        bench.run("A2 (deterministic)", || {
+            pplda::bench::black_box(partition(&bow, p, Algorithm::A2, seed));
+        });
+        bench.run(&format!("A3 ({restarts} restarts)"), || {
+            pplda::bench::black_box(partition(
+                &bow,
+                p,
+                Algorithm::A3 { restarts },
+                seed,
+            ));
+        });
+        bench.run(&format!("baseline ({restarts} restarts)"), || {
+            pplda::bench::black_box(partition(
+                &bow,
+                p,
+                Algorithm::Baseline { restarts },
+                seed,
+            ));
+        });
+
+        // One Gibbs sweep for the "partitioning ≪ training" comparison
+        // (training = burn-in × sweeps; paper uses ≤200 sweeps).
+        let sweep_secs = if label == "NIPS" {
+            let mut lda = SerialLda::init(&bow, if fast { 8 } else { 64 }, 0.5, 0.1, seed);
+            let t = std::time::Instant::now();
+            lda.sweep();
+            Some(t.elapsed().as_secs_f64())
+        } else {
+            None
+        };
+
+        println!("{}", bench.table().to_aligned());
+        let results = bench.results();
+        let a1 = results[0].per_iter.median;
+        let a2 = results[1].per_iter.median;
+        let a3 = results[2].per_iter.median;
+        let base = results[3].per_iter.median;
+        println!(
+            "speed ratios: A3/A1 = {}x, baseline/A1 = {}x, A3/A2 = {}x",
+            f(a3 / a1, 1),
+            f(base / a1, 1),
+            f(a3 / a2, 1)
+        );
+        // Paper claim 1: deterministic ≫ randomized at default budgets.
+        assert!(
+            a3 / a1.max(1e-9) > if fast { 5.0 } else { 30.0 },
+            "A3 should cost ≫ A1 at {restarts} restarts"
+        );
+        if let Some(sweep) = sweep_secs {
+            let training = sweep * 200.0;
+            println!(
+                "one K=64 Gibbs sweep: {:.2}s -> 200-sweep training ≈ {:.0}s; A3 partitioning {:.2}s ({}x faster than training)",
+                sweep,
+                training,
+                a3,
+                f(training / a3, 0)
+            );
+            // Paper claim 2: partitioning ≪ training.
+            assert!(a3 < training / 10.0, "A3 must be ≪ training time");
+        }
+        println!();
+    }
+    println!("runtime shape checks passed");
+}

@@ -1,0 +1,80 @@
+//! §VI-C speedup model: `speedup ≈ η·P`, near-linear as η → 1.
+//!
+//! For each P, partitions the corpus with baseline and A3, *measures* the
+//! actual epoch token costs executed by the engine (validating Eq. 1
+//! against the running system), and projects parallel sweep wallclock
+//! from the measured single-core sampling rate. This regenerates the
+//! paper's speedup narrative on hardware with fewer cores than P.
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::{partition, Algorithm};
+use pplda::scheduler::cost_model::SpeedupReport;
+use pplda::scheduler::exec::{ExecMode, ParallelLda};
+use pplda::util::tsv::{f, Table};
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let restarts = if fast { 10 } else { 100 };
+    let scale = if fast { 20 } else { 4 };
+    let topics = if fast { 8 } else { 32 };
+    let seed = 42;
+
+    let bow = generate(&Profile::nips_like().scaled(scale), seed);
+    println!(
+        "bench_speedup: D={} W={} N={} K={topics}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    // Measure the single-core sampling rate with a serial sweep.
+    let mut serial = pplda::gibbs::serial::SerialLda::init(&bow, topics, 0.5, 0.1, seed);
+    serial.sweep(); // warm
+    let t = std::time::Instant::now();
+    serial.sweep();
+    let serial_secs = t.elapsed().as_secs_f64();
+    let rate = bow.num_tokens() as f64 / serial_secs;
+    println!(
+        "serial sweep: {:.3}s ({} tokens/s)\n",
+        serial_secs,
+        pplda::util::human_rate(rate)
+    );
+
+    let mut table = Table::new([
+        "P",
+        "algo",
+        "eta",
+        "speedup=eta*P",
+        "ideal",
+        "proj_sweep_s",
+        "measured_cost_ok",
+    ]);
+    for &p in &[2usize, 4, 8, 16, 30] {
+        for (name, algo) in [
+            ("baseline", Algorithm::Baseline { restarts }),
+            ("A3", Algorithm::A3 { restarts }),
+        ] {
+            let plan = partition(&bow, p, algo, seed);
+            let model = SpeedupReport::of_plan(&plan);
+
+            // Validate the model against one executed sweep.
+            let mut lda = ParallelLda::init(&bow, &plan, topics, 0.5, 0.1, seed);
+            let stats = lda.sweep(ExecMode::Sequential);
+            let measured = SpeedupReport::of_stats(&stats, p);
+            let agree = (measured.eta - model.eta).abs() < 1e-9;
+
+            table.row([
+                p.to_string(),
+                name.to_string(),
+                f(model.eta, 4),
+                f(model.speedup, 2),
+                p.to_string(),
+                format!("{:.3}", model.projected_sweep_secs(rate)),
+                agree.to_string(),
+            ]);
+            assert!(agree, "cost model must match executed epoch costs");
+        }
+    }
+    println!("{}", table.to_aligned());
+    println!("speedup model validated against executed epoch token costs");
+}

@@ -1,0 +1,82 @@
+//! Table II — load-balancing ratio η on NIPS, P ∈ {1, 10, 30, 60}.
+//!
+//! Paper reference rows:
+//! ```text
+//! P                   1    10      30      60
+//! Baseline          1.0  0.9500  0.7800  0.5700
+//! A1                1.0  0.9613  0.8657  0.7126
+//! A2                1.0  0.9633  0.8568  0.7097
+//! A3                1.0  0.9800  0.8929  0.7553
+//! ```
+//! Expected shape on the synthetic NIPS-like corpus: A3 ≥ A1 ≈ A2 >
+//! baseline at every P > 1, gaps widening with P. Set PPLDA_BENCH_FAST=1
+//! for a reduced-restart run.
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::{partition, Algorithm};
+use pplda::util::tsv::{f, Table};
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let restarts = if fast { 10 } else { 100 };
+    let seed = 42;
+
+    let bow = generate(&Profile::nips_like(), seed);
+    println!(
+        "bench_table2_nips: D={} W={} N={} (restarts={restarts})",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    let procs = [1usize, 10, 30, 60];
+    let paper: [(&str, [f64; 4]); 4] = [
+        ("baseline", [1.0, 0.9500, 0.7800, 0.5700]),
+        ("A1", [1.0, 0.9613, 0.8657, 0.7126]),
+        ("A2", [1.0, 0.9633, 0.8568, 0.7097]),
+        ("A3", [1.0, 0.9800, 0.8929, 0.7553]),
+    ];
+
+    let mut table = Table::new(["algorithm", "P=1", "P=10", "P=30", "P=60", "source"]);
+    let mut measured = std::collections::BTreeMap::new();
+    for (name, algo) in [
+        ("baseline", Algorithm::Baseline { restarts }),
+        ("A1", Algorithm::A1),
+        ("A2", Algorithm::A2),
+        ("A3", Algorithm::A3 { restarts }),
+    ] {
+        let etas: Vec<f64> = procs
+            .iter()
+            .map(|&p| partition(&bow, p, algo, seed).eta)
+            .collect();
+        let mut row = vec![name.to_string()];
+        row.extend(etas.iter().map(|&e| f(e, 4)));
+        row.push("measured".into());
+        table.row(row);
+        measured.insert(name, etas);
+    }
+    for (name, vals) in paper {
+        let mut row = vec![name.to_string()];
+        row.extend(vals.iter().map(|&e| f(e, 4)));
+        row.push("paper".into());
+        table.row(row);
+    }
+    println!("{}", table.to_aligned());
+
+    // Shape assertions (who wins, monotonicity).
+    for pi in 1..procs.len() {
+        let b = measured["baseline"][pi];
+        let a1 = measured["A1"][pi];
+        let a2 = measured["A2"][pi];
+        let a3 = measured["A3"][pi];
+        assert!(
+            a3 > b && a1 > b && a2 > b,
+            "P={}: proposed algorithms must beat baseline (b={b:.4} a1={a1:.4} a2={a2:.4} a3={a3:.4})",
+            procs[pi]
+        );
+        assert!(a3 + 0.02 >= a1 && a3 + 0.02 >= a2, "A3 should lead at P={}", procs[pi]);
+    }
+    // Baseline degrades fastest toward P=60 (paper: 0.57).
+    assert!(measured["baseline"][3] < 0.75);
+    println!("shape checks passed: A3 > A1~A2 > baseline; baseline degrades fastest");
+}

@@ -1,0 +1,100 @@
+//! Table IV — BoT perplexity on the MAS corpus: nonparallel vs parallel
+//! P=10 and P=30.
+//!
+//! Paper reference:
+//! ```text
+//! Nonparallel  Parallel P=10  Parallel P=30
+//!   595.2567       595.0593       593.9016
+//! ```
+//! Expected shape: all three within a fraction of a percent of each other
+//! (parallelization does not hurt topic quality; often marginally better
+//! due to added stochasticity). Absolute values differ — synthetic corpus,
+//! scaled size, K configurable.
+//!
+//! Defaults: MAS ÷50, K=64, 60 sweeps. PPLDA_BENCH_FAST=1 → MAS ÷400,
+//! K=16, 10 sweeps. PPLDA_MAS_SCALE / PPLDA_BOT_ITERS override.
+
+use pplda::coordinator::{train_bot, TrainConfig};
+use pplda::corpus::synthetic::{generate_timestamped, Profile};
+use pplda::partition::Algorithm;
+use pplda::util::tsv::{f, Table};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let scale = env_usize("PPLDA_MAS_SCALE", if fast { 400 } else { 50 });
+    let iters = env_usize("PPLDA_BOT_ITERS", if fast { 10 } else { 60 });
+    let topics = env_usize("PPLDA_BOT_TOPICS", if fast { 16 } else { 64 });
+    let seed = 42;
+
+    let profile = Profile::mas_like().scaled(scale);
+    let tc = generate_timestamped(&profile, seed);
+    println!(
+        "bench_table4_bot: {} D={} W={} N_words={} N_stamps={} K={topics} iters={iters}",
+        profile.name,
+        tc.bow.num_docs(),
+        tc.bow.num_words(),
+        tc.bow.num_tokens(),
+        tc.dts.num_tokens()
+    );
+
+    // A3 with the paper's restart budget scaled down: 100 for R, 200 for
+    // R' is the paper's setting; restarts only affect partitioning time.
+    let restarts = if fast { 10 } else { 100 };
+    let cfg = TrainConfig {
+        topics,
+        iters,
+        seed,
+        ..Default::default()
+    };
+
+    let serial = train_bot(&tc, 1, Algorithm::A1, &cfg);
+    let p10 = train_bot(&tc, 10, Algorithm::A3 { restarts }, &cfg);
+    let p30 = train_bot(&tc, 30, Algorithm::A3 { restarts }, &cfg);
+
+    let mut t = Table::new([
+        "config",
+        "perplexity",
+        "eta_dw",
+        "eta_dts",
+        "speedup_model",
+        "train_secs",
+    ]);
+    for (name, r) in [
+        ("nonparallel", &serial),
+        ("parallel P=10", &p10),
+        ("parallel P=30", &p30),
+    ] {
+        t.row([
+            name.to_string(),
+            f(r.final_perplexity, 4),
+            f(r.eta_dw, 4),
+            f(r.eta_dts, 4),
+            f(r.speedup_model, 2),
+            f(r.train_secs, 1),
+        ]);
+    }
+    println!("{}", t.to_aligned());
+    println!("paper: nonparallel 595.2567 | P=10 595.0593 | P=30 593.9016");
+
+    // Shape: parallel perplexity within 2% of serial (paper: within
+    // 0.25%); speedup model grows with P.
+    for (name, r) in [("P=10", &p10), ("P=30", &p30)] {
+        let rel = (r.final_perplexity - serial.final_perplexity).abs()
+            / serial.final_perplexity;
+        assert!(
+            rel < 0.02,
+            "{name}: parallel perplexity {} vs serial {} (rel {rel:.4})",
+            r.final_perplexity,
+            serial.final_perplexity
+        );
+    }
+    assert!(p30.speedup_model > p10.speedup_model);
+    println!("shape checks passed: parallel ≈ nonparallel perplexity");
+}

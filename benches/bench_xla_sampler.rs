@@ -1,0 +1,95 @@
+//! XLA backend vs native kernel: sampling and perplexity throughput of
+//! the AOT-compiled JAX/Pallas path (gather → PJRT execute → scatter)
+//! against the pure-rust hot path, plus a numerical cross-check.
+//!
+//! Requires `make artifacts`. The XLA path is expected to lose on CPU —
+//! it pays dense [B,K] gathers and PJRT dispatch to reach a kernel that
+//! interpret-mode lowering keeps un-fused — but it proves the three-layer
+//! bridge and gives the TPU-bound batching structure a measured baseline.
+
+use pplda::bench::{Bench, BenchConfig};
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::gibbs::counts::LdaCounts;
+use pplda::gibbs::perplexity as native_perplexity;
+use pplda::gibbs::sampler::Hyper;
+use pplda::gibbs::serial::SerialLda;
+use pplda::gibbs::tokens::TokenBlock;
+use pplda::runtime::executor::Artifacts;
+use pplda::runtime::sampler_xla::{XlaPerplexity, XlaSampler};
+use pplda::util::rng::Rng;
+
+fn main() {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        println!("bench_xla_sampler: SKIPPED (no artifacts; run `make artifacts`)");
+        return;
+    }
+    let arts = Artifacts::discover(dir).unwrap();
+    let (batch, k) = arts
+        .variants("sampler")
+        .into_iter()
+        .min_by_key(|&(_, k)| k)
+        .expect("at least one sampler artifact");
+
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let scale = if fast { 80 } else { 20 };
+    let seed = 42;
+    let bow = generate(&Profile::nips_like().scaled(scale), seed);
+    let n = bow.num_tokens() as f64;
+    println!(
+        "bench_xla_sampler: D={} W={} N={} | artifact batch={batch} K={k}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    // Shared model state.
+    let mut rng = Rng::new(seed);
+    let mut block = TokenBlock::from_corpus(&bow, k, &mut rng);
+    let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+    counts.absorb(&block);
+    let h = Hyper::new(k, 0.5, 0.1, bow.num_words());
+
+    let mut bench = Bench::new(BenchConfig::heavy());
+
+    // Native serial sweep.
+    let mut native = SerialLda::init(&bow, k, 0.5, 0.1, seed);
+    native.sweep();
+    bench.run_with_items(&format!("native sweep K={k}"), Some(n), || {
+        native.sweep();
+    });
+
+    // XLA batched sweep.
+    let mut xla = XlaSampler::new(arts.sampler(batch, k).unwrap());
+    xla.sweep(&mut block, &mut counts, &h, &mut rng).unwrap();
+    bench.run_with_items(&format!("xla sweep K={k} B={batch}"), Some(n), || {
+        xla.sweep(&mut block, &mut counts, &h, &mut rng).unwrap();
+    });
+
+    // Perplexity: native vs XLA.
+    bench.run_with_items("native perplexity", Some(n), || {
+        pplda::bench::black_box(native_perplexity::perplexity(&bow, &counts, &h));
+    });
+    let mut xp = XlaPerplexity::new(arts.loglik(batch, k).unwrap());
+    bench.run_with_items("xla perplexity", Some(n), || {
+        pplda::bench::black_box(xp.perplexity(&bow, &counts, &h).unwrap());
+    });
+
+    println!("{}", bench.table().to_aligned());
+
+    // Numerical cross-check.
+    let p_native = native_perplexity::perplexity(&bow, &counts, &h);
+    let p_xla = xp.perplexity(&bow, &counts, &h).unwrap();
+    let rel = (p_native - p_xla).abs() / p_native;
+    println!("perplexity: native {p_native:.4} vs xla {p_xla:.4} (rel {rel:.2e})");
+    assert!(rel < 1e-3);
+
+    let native_tp = bench.results()[0].throughput().unwrap();
+    let xla_tp = bench.results()[1].throughput().unwrap();
+    println!(
+        "sampling: native {} vs xla {} tokens/s ({}x)",
+        pplda::util::human_rate(native_tp),
+        pplda::util::human_rate(xla_tp),
+        format!("{:.1}", native_tp / xla_tp)
+    );
+}

@@ -1,0 +1,39 @@
+//! Table I reproduction: statistics of the three (synthetic) corpora the
+//! experiments run on, side by side, plus the skew measures that make the
+//! load-balancing problem hard.
+//!
+//! ```text
+//! cargo run --release --example dataset_stats [-- --full]
+//! ```
+//!
+//! By default NYTimes and MAS are generated at reduced scale (÷10 / ÷20);
+//! `--full` generates them at the paper's full size (slow, ~200M tokens).
+
+use pplda::corpus::stats::{table_i, CorpusStats};
+use pplda::corpus::synthetic::{generate, generate_timestamped, Profile};
+use pplda::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let seed = args.get::<u64>("seed", 42);
+    let full = args.has("full");
+    let (nyt_scale, mas_scale) = if full { (1, 1) } else { (10, 20) };
+
+    let nips = generate(&Profile::nips_like(), seed);
+    let nyt = generate(&Profile::nytimes_like().scaled(nyt_scale), seed);
+    let mas_profile = Profile::mas_like().scaled(mas_scale);
+    let mas = generate_timestamped(&mas_profile, seed);
+
+    let stats = vec![
+        CorpusStats::of("NIPS", &nips),
+        CorpusStats::of(&format!("NYTimes/{nyt_scale}"), &nyt),
+        CorpusStats::of_timestamped(&format!("MAS/{mas_scale}"), &mas),
+    ];
+    println!("{}", table_i(&stats).to_aligned());
+
+    println!("paper Table I reference:");
+    println!("  Documents D:      1500 / 300,000 / 1,182,744");
+    println!("  Unique words W:   12,419 / 102,660 / 402,252 (stemmed)");
+    println!("  Word instances N: 1,932,365 / 99,542,125 / 92,531,014");
+    println!("  Timestamps WTS:   N/A / N/A / 60 (1951-2010)");
+}

@@ -1,0 +1,143 @@
+//! End-to-end driver — exercises every layer of the system on a real
+//! workload, proving they compose:
+//!
+//! 1. **Corpus substrate**: generate the full-size NIPS-shaped corpus
+//!    (D=1500, W=12419, N≈1.9M; Table I).
+//! 2. **L3 contribution**: partition with all four algorithms, pick A3
+//!    (paper's best), report η and the η·P speedup model.
+//! 3. **Parallel engine**: train LDA with the diagonal-epoch engine
+//!    (P workers, conflict-free partitions, epoch barriers).
+//! 4. **L1/L2 via PJRT**: evaluate training perplexity through the
+//!    AOT-compiled JAX/Pallas log-likelihood kernel, and cross-check it
+//!    against the native computation at the end.
+//!
+//! Headline metrics (recorded in EXPERIMENTS.md): final perplexity,
+//! η per algorithm, model speedup, sampling throughput.
+//!
+//! ```text
+//! cargo run --release --example end_to_end
+//!     [-- --iters 200 --procs 8 --topics 64 --eval-every 20
+//!         --out e2e_results.tsv]
+//! ```
+
+use std::time::Instant;
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::gibbs::perplexity as native_perplexity;
+use pplda::partition::{partition, Algorithm};
+use pplda::runtime::executor::Artifacts;
+use pplda::runtime::sampler_xla::XlaPerplexity;
+use pplda::scheduler::cost_model::SpeedupReport;
+use pplda::scheduler::exec::{ExecMode, ParallelLda};
+use pplda::util::cli::Args;
+use pplda::util::tsv::{f, Table};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.get::<usize>("iters", 200);
+    let p = args.get::<usize>("procs", 8);
+    let topics = args.get::<usize>("topics", 64);
+    let eval_every = args.get::<usize>("eval-every", 20);
+    let seed = args.get::<u64>("seed", 42);
+    let out = args.get_str("out").unwrap_or("e2e_results.tsv").to_string();
+
+    // ---- 1. corpus ----
+    let profile = Profile::nips_like();
+    let t0 = Instant::now();
+    let bow = generate(&profile, seed);
+    println!(
+        "[1/4] corpus {}: D={} W={} N={} ({:.1}s)",
+        profile.name,
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. partitioning (the paper's contribution) ----
+    let algos = [
+        Algorithm::Baseline { restarts: 100 },
+        Algorithm::A1,
+        Algorithm::A2,
+        Algorithm::A3 { restarts: 100 },
+    ];
+    let mut eta_table = Table::new(["algorithm", "eta", "speedup_model", "secs"]);
+    let mut chosen = None;
+    for algo in algos {
+        let t = Instant::now();
+        let plan = partition(&bow, p, algo, seed);
+        let r = SpeedupReport::of_plan(&plan);
+        eta_table.row([
+            plan.algorithm.to_string(),
+            f(r.eta, 4),
+            f(r.speedup, 2),
+            format!("{:.3}", t.elapsed().as_secs_f64()),
+        ]);
+        if plan.algorithm == "A3" {
+            chosen = Some(plan);
+        }
+    }
+    println!("[2/4] partitioning at P={p}:\n{}", eta_table.to_aligned());
+    let plan = chosen.expect("A3 plan");
+
+    // ---- 3. parallel training with XLA perplexity evals ----
+    let arts = Artifacts::discover(Artifacts::default_dir())
+        .expect("run `make artifacts` first — the e2e driver exercises the XLA path");
+    let batch = arts
+        .variants("loglik")
+        .into_iter()
+        .find(|&(_, k)| k == topics)
+        .unwrap_or_else(|| panic!("no loglik artifact for K={topics}"))
+        .0;
+    let mut xla_perp = XlaPerplexity::new(arts.loglik(batch, topics).unwrap());
+
+    let mut lda = ParallelLda::init(&bow, &plan, topics, 0.5, 0.1, seed);
+    let mut curve = Table::new(["iter", "perplexity_xla", "sweep_secs", "tokens_per_sec"]);
+    let train_started = Instant::now();
+    let mut sampled: u64 = 0;
+    for it in 1..=iters {
+        let sweep_t = Instant::now();
+        let stats = lda.sweep(ExecMode::Sequential);
+        sampled += stats.total_tokens;
+        let dt = sweep_t.elapsed().as_secs_f64();
+        if it % eval_every == 0 || it == iters || it == 1 {
+            let perp = xla_perp
+                .perplexity(&bow, &lda.counts, &lda.h)
+                .expect("XLA perplexity");
+            curve.row([
+                it.to_string(),
+                f(perp, 4),
+                format!("{dt:.3}"),
+                pplda::util::human_rate(stats.total_tokens as f64 / dt),
+            ]);
+            println!(
+                "  iter {it:4}  perplexity {perp:10.4}  ({:.3}s/sweep)",
+                dt
+            );
+        }
+    }
+    let train_secs = train_started.elapsed().as_secs_f64();
+    println!(
+        "[3/4] trained {iters} sweeps in {train_secs:.1}s — {} tokens/s sustained",
+        pplda::util::human_rate(sampled as f64 / train_secs)
+    );
+
+    // ---- 4. XLA vs native cross-check ----
+    let xla = xla_perp
+        .perplexity(&bow, &lda.counts, &lda.h)
+        .expect("XLA perplexity");
+    let native = native_perplexity::perplexity(&bow, &lda.counts, &lda.h);
+    let rel = (xla - native).abs() / native;
+    println!(
+        "[4/4] perplexity cross-check: xla {xla:.4} vs native {native:.4} (rel err {rel:.2e})"
+    );
+    assert!(rel < 1e-3, "XLA and native perplexity diverged");
+
+    curve.write_tsv(&out).expect("write results");
+    println!(
+        "headline: eta={:.4} speedup_model={:.2} final_perplexity={:.4} -> {out}",
+        plan.eta,
+        plan.eta * p as f64,
+        xla
+    );
+}

@@ -1,0 +1,79 @@
+//! Full partitioning study — regenerates the paper's Tables II and III
+//! (load-balancing ratio η per algorithm per P) on synthetic NIPS-like
+//! and NYTimes-like corpora, or on the real UCI files via `--uci`.
+//!
+//! ```text
+//! cargo run --release --example partitioning_study
+//!     [-- --procs 1,10,30,60 --restarts 100 --nytimes-scale 10
+//!         --uci-nips docword.nips.txt --uci-nytimes docword.nytimes.txt]
+//! ```
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::corpus::{uci, BagOfWords};
+use pplda::partition::{partition, Algorithm};
+use pplda::util::cli::Args;
+use pplda::util::timer::time_once;
+use pplda::util::tsv::{f, Table};
+
+fn study(name: &str, bow: &BagOfWords, procs: &[usize], restarts: usize, seed: u64) {
+    println!(
+        "=== {name}: D={} W={} N={} ===",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+    let mut table = Table::new(["P", "baseline", "A1", "A2", "A3"]);
+    let mut runtime = Table::new(["P", "baseline_s", "A1_s", "A2_s", "A3_s"]);
+    for &p in procs {
+        let algos = [
+            Algorithm::Baseline { restarts },
+            Algorithm::A1,
+            Algorithm::A2,
+            Algorithm::A3 { restarts },
+        ];
+        let mut etas = vec![p.to_string()];
+        let mut secs = vec![p.to_string()];
+        for algo in algos {
+            let (plan, dt) = time_once(|| partition(bow, p, algo, seed));
+            etas.push(f(plan.eta, 4));
+            secs.push(format!("{:.3}", dt.as_secs_f64()));
+        }
+        table.row(etas);
+        runtime.row(secs);
+    }
+    println!("load-balancing ratio eta:\n{}", table.to_aligned());
+    println!("partitioner wall time (restarts={restarts} for randomized):\n{}", runtime.to_aligned());
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let procs = args.get_list::<usize>("procs", &[1, 10, 30, 60]);
+    let restarts = args.get::<usize>("restarts", 100);
+    let seed = args.get::<u64>("seed", 42);
+
+    // Table II — NIPS.
+    let nips = match args.get_str("uci-nips") {
+        Some(path) => uci::load_bow(path).expect("load NIPS"),
+        None => generate(&Profile::nips_like(), seed),
+    };
+    study("Table II (NIPS)", &nips, &procs, restarts, seed);
+
+    // Table III — NYTimes (scaled synthetic by default; full via --nytimes-scale 1).
+    let nyt_scale = args.get::<usize>("nytimes-scale", 10);
+    let nyt = match args.get_str("uci-nytimes") {
+        Some(path) => uci::load_bow(path).expect("load NYTimes"),
+        None => generate(&Profile::nytimes_like().scaled(nyt_scale), seed),
+    };
+    study("Table III (NYTimes)", &nyt, &procs, restarts, seed);
+
+    println!("paper reference (Table II, NIPS):");
+    println!("  baseline 1.0 / 0.9500 / 0.7800 / 0.5700");
+    println!("  A1       1.0 / 0.9613 / 0.8657 / 0.7126");
+    println!("  A2       1.0 / 0.9633 / 0.8568 / 0.7097");
+    println!("  A3       1.0 / 0.9800 / 0.8929 / 0.7553");
+    println!("paper reference (Table III, NYTimes):");
+    println!("  baseline 1.0 / 0.9700 / 0.9300 / 0.8500");
+    println!("  A1       1.0 / 0.9559 / 0.9270 / 0.9011");
+    println!("  A2       1.0 / 0.9626 / 0.9439 / 0.9175");
+    println!("  A3       1.0 / 0.9981 / 0.9901 / 0.9757");
+}

@@ -1,0 +1,79 @@
+//! Quickstart: generate a small corpus, compare all four partitioning
+//! algorithms, then train parallel LDA under the best plan.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- --scale 20 --procs 8]
+//! ```
+
+use pplda::coordinator::{train_lda, TrainConfig};
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::{partition, Algorithm};
+use pplda::util::cli::Args;
+use pplda::util::tsv::{f, Table};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.get::<usize>("scale", 20);
+    let p = args.get::<usize>("procs", 8);
+    let seed = args.get::<u64>("seed", 42);
+
+    // 1. A NIPS-shaped corpus, scaled down for a quick run.
+    let profile = Profile::nips_like().scaled(scale);
+    let bow = generate(&profile, seed);
+    println!(
+        "corpus {}: {} docs, {} words, {} tokens\n",
+        profile.name,
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    // 2. Partition with all four algorithms; compare load balance.
+    let algos = [
+        Algorithm::Baseline { restarts: 20 },
+        Algorithm::A1,
+        Algorithm::A2,
+        Algorithm::A3 { restarts: 20 },
+    ];
+    let mut table = Table::new(["algorithm", "eta", "speedup=eta*P"]);
+    let mut best = None;
+    for algo in algos {
+        let plan = partition(&bow, p, algo, seed);
+        table.row([
+            plan.algorithm.to_string(),
+            f(plan.eta, 4),
+            f(plan.eta * p as f64, 2),
+        ]);
+        if best
+            .as_ref()
+            .map(|b: &pplda::partition::Plan| plan.eta > b.eta)
+            .unwrap_or(true)
+        {
+            best = Some(plan);
+        }
+    }
+    println!("partitioning at P={p}:\n{}", table.to_aligned());
+    let plan = best.unwrap();
+
+    // 3. Train parallel LDA under the best plan.
+    let cfg = TrainConfig {
+        topics: 32,
+        iters: 50,
+        eval_every: 10,
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "training LDA: K={} iters={} under {} (eta={:.4})\n",
+        cfg.topics, cfg.iters, plan.algorithm, plan.eta
+    );
+    let report = train_lda(&bow, &plan, &cfg);
+    println!("{}", report.curve_table().to_aligned());
+    println!(
+        "final perplexity {:.2}, {:.2}s, {} tokens/s, model speedup ≈ {:.2}×",
+        report.final_perplexity,
+        report.train_secs,
+        pplda::util::human_rate(report.tokens_per_sec),
+        report.speedup_model
+    );
+}

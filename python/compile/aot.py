@@ -1,0 +1,98 @@
+"""AOT lowering: jax (L2 + L1) → HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO text
+parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Emitted per (batch B, topics K) variant:
+
+    artifacts/sampler_{B}x{K}.hlo.txt
+    artifacts/loglik_{B}x{K}.hlo.txt
+
+plus ``artifacts/manifest.tsv`` — one line per artifact with its entry
+name, shapes and dtypes, which the rust runtime parses to pick the right
+executable for a model configuration.
+
+Run via ``make artifacts`` (no-op if artifacts are newer than sources).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (B, K) variants built by default. K=64 is the test/bench size, K=256 is
+# the paper's configuration (Number of topics = 256, §V-C).
+DEFAULT_VARIANTS = ((2048, 64), (2048, 256))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(batch, num_topics):
+    """Lower both entry points for one (B, K) variant → {name: hlo_text}."""
+    sampler = jax.jit(model.sampler_fn).lower(
+        *model.sampler_example_args(batch, num_topics)
+    )
+    loglik = jax.jit(model.loglik_fn).lower(
+        *model.loglik_example_args(batch, num_topics)
+    )
+    return {
+        f"sampler_{batch}x{num_topics}": to_hlo_text(sampler),
+        f"loglik_{batch}x{num_topics}": to_hlo_text(loglik),
+    }
+
+
+def manifest_rows(variants):
+    """Rows for manifest.tsv: kind, batch, topics, file."""
+    rows = []
+    for batch, k in variants:
+        rows.append(("sampler", batch, k, f"sampler_{batch}x{k}.hlo.txt"))
+        rows.append(("loglik", batch, k, f"loglik_{batch}x{k}.hlo.txt"))
+    return rows
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="directory to write *.hlo.txt into")
+    parser.add_argument("--variants", default=None,
+                        help="comma-separated BxK list, e.g. 2048x64,2048x256")
+    args = parser.parse_args()
+
+    if args.variants:
+        variants = tuple(
+            tuple(int(x) for x in v.split("x")) for v in args.variants.split(",")
+        )
+    else:
+        variants = DEFAULT_VARIANTS
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for batch, k in variants:
+        for name, text in lower_variant(batch, k).items():
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("kind\tbatch\ttopics\tfile\n")
+        for kind, batch, k, fname in manifest_rows(variants):
+            f.write(f"{kind}\t{batch}\t{k}\t{fname}\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

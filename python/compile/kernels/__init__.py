@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the collapsed-Gibbs hot spot, plus jnp oracles."""
+
+from . import perplexity, ref, topic_sample  # noqa: F401

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: blocked per-token log-likelihood (training perplexity).
+
+Implements the inner term of the paper's Eq. 3-4:
+
+    log p(x) = Σ_{ji} log Σ_k θ_{k|j} φ_{x_ji|k}
+    θ_{k|j} = (n_jk + α) / (n_j + Kα)
+    φ_{w|k} = (n_kw + β) / (n_k + Wβ)
+
+The coordinator gathers the [B, K] count rows/cols for a batch of tokens;
+the kernel forms θ·φ and reduces over K, one [Bt, K] VMEM tile per grid
+step. The final Σ over tokens and the exp(−·/N) wrapper stay in rust,
+which accumulates across batches in f64.
+
+interpret=True: see topic_sample.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 128
+
+
+def _loglik_kernel(njk_ref, nj_ref, nkw_ref, nk_ref, params_ref, out_ref):
+    """One [Bt, K] tile: per-token log Σ_k θ φ."""
+    alpha = params_ref[0, ref.P_ALPHA]
+    beta = params_ref[0, ref.P_BETA]
+    kalpha = params_ref[0, ref.P_KALPHA]
+    wbeta = params_ref[0, ref.P_WBETA]
+
+    theta = (njk_ref[...] + alpha) / (nj_ref[...] + kalpha)   # [Bt,K]/[Bt,1]
+    phi = (nkw_ref[...] + beta) / (nk_ref[...] + wbeta)       # [Bt,K]/[1,K]
+    out_ref[...] = jnp.log(jnp.sum(theta * phi, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def loglik(njk, nj, nkw, nk, params, *, block_b=DEFAULT_BLOCK_B):
+    """Per-token log-likelihood for a batch of tokens.
+
+    njk: [B, K] f32; nj: [B, 1] f32 doc lengths; nkw: [B, K] f32;
+    nk: [1, K] f32; params: [1, 4] f32 (alpha, beta, K*alpha, W*beta).
+    returns [B] f32 log Σ_k θ_{k|j} φ_{w|k}.
+    """
+    b, k = njk.shape
+    bt = min(block_b, b)
+    if b % bt != 0:
+        raise ValueError(f"batch {b} not divisible by block {bt}")
+    grid = (b // bt,)
+
+    tile = pl.BlockSpec((bt, k), lambda i: (i, 0))
+    col = pl.BlockSpec((bt, 1), lambda i: (i, 0))
+    whole_row = pl.BlockSpec((1, k), lambda i: (0, 0))
+    params_spec = pl.BlockSpec((1, 4), lambda i: (0, 0))
+
+    return pl.pallas_call(
+        _loglik_kernel,
+        grid=grid,
+        in_specs=[tile, col, tile, whole_row, params_spec],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(njk, nj, nkw, nk, params)

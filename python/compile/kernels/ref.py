@@ -1,0 +1,83 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations of the two per-token block
+computations that the rust coordinator offloads:
+
+* ``topic_sample_ref`` — collapsed-Gibbs conditional + Gumbel-max draw for
+  a batch of B tokens: ``p(k) ∝ (n_jk + α)(n_kw + β) / (n_k + Wβ)``.
+* ``loglik_ref`` — per-token log-likelihood used by the paper's training
+  perplexity (Eq. 3-4): ``log Σ_k θ_{k|j} φ_{w|k}`` with
+  ``θ_{k|j} = (n_jk + α)/(n_j + Kα)`` and ``φ_{w|k} = (n_kw + β)/(n_k + Wβ)``.
+
+The Pallas kernels in ``topic_sample.py`` / ``perplexity.py`` must match
+these up to float tolerance; ``python/tests`` sweeps shapes with
+hypothesis and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+# Index layout of the packed scalar-parameter row (shape [1, 4]).
+P_ALPHA = 0   # Dirichlet prior on document-topic
+P_BETA = 1    # Dirichlet prior on topic-word
+P_KALPHA = 2  # K * alpha  (theta normalizer)
+P_WBETA = 3   # W * beta   (phi   normalizer)
+
+
+def gumbel_from_uniform(u):
+    """Map uniforms in (0,1) to standard Gumbel noise, clamped for safety."""
+    eps = jnp.float32(1e-20)
+    return -jnp.log(-jnp.log(jnp.maximum(u, eps)) + eps)
+
+
+def topic_logits_ref(njk, nkw, nk, params):
+    """Unnormalized log conditional of collapsed Gibbs for each (token, k).
+
+    njk: [B, K] doc-topic counts for each token's document (token excluded)
+    nkw: [B, K] topic-word counts for each token's word   (token excluded)
+    nk:  [1, K] topic totals                              (token excluded)
+    params: [1, 4] packed scalars (alpha, beta, kalpha, wbeta)
+    returns: [B, K] float32 logits
+    """
+    alpha = params[0, P_ALPHA]
+    beta = params[0, P_BETA]
+    wbeta = params[0, P_WBETA]
+    return (
+        jnp.log(njk + alpha)
+        + jnp.log(nkw + beta)
+        - jnp.log(nk + wbeta)
+    )
+
+
+def topic_sample_ref(njk, nkw, nk, unif, params):
+    """Gumbel-max categorical draw from the collapsed Gibbs conditional.
+
+    unif: [B, K] i.i.d. uniforms in (0, 1) supplied by the coordinator's
+    deterministic PRNG, so draws are reproducible across backends.
+    returns: [B] int32 sampled topics.
+    """
+    logits = topic_logits_ref(njk, nkw, nk, params)
+    g = gumbel_from_uniform(unif)
+    return jnp.argmax(logits + g, axis=1).astype(jnp.int32)
+
+
+def loglik_ref(njk, nj, nkw, nk, params):
+    """Per-token log-likelihood  log Σ_k θ_{k|j} φ_{w|k}  (paper Eq. 4).
+
+    njk: [B, K]; nj: [B, 1] doc lengths; nkw: [B, K]; nk: [1, K];
+    params: [1, 4]. returns: [B] float32.
+    """
+    alpha = params[0, P_ALPHA]
+    beta = params[0, P_BETA]
+    kalpha = params[0, P_KALPHA]
+    wbeta = params[0, P_WBETA]
+    theta = (njk + alpha) / (nj + kalpha)
+    phi = (nkw + beta) / (nk + wbeta)
+    return jnp.log(jnp.sum(theta * phi, axis=1))
+
+
+def pack_params(alpha, beta, num_topics, num_words):
+    """Pack model hyperparameters into the [1, 4] scalar row."""
+    return jnp.array(
+        [[alpha, beta, num_topics * alpha, num_words * beta]],
+        dtype=jnp.float32,
+    )

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: blocked collapsed-Gibbs topic sampling.
+
+The hot spot of collapsed Gibbs sampling is, per token (j, w),
+
+    p(k) ∝ (n_jk + α)(n_kw + β) / (n_k + Wβ),     k = 1..K
+
+followed by a categorical draw. For a batch of B tokens inside one
+conflict-free partition this is dense [B, K] arithmetic: elementwise logs
+on the VPU and a lane reduction (argmax) per token. The kernel is tiled
+over the batch dimension with ``BlockSpec`` so one ``[Bt, K]`` tile of each
+operand is VMEM-resident per grid step — the TPU analogue of the
+threadblock tiling used by the paper's GPU substrate (Yan et al. 2009).
+
+The categorical draw is Gumbel-max over supplied uniforms, which keeps the
+kernel deterministic given the coordinator's PRNG stream and avoids an
+in-kernel RNG.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain
+HLO. Real-TPU tiling/VMEM estimates live in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default batch tile. K is never tiled: one token's full topic row must be
+# resident for the argmax reduction, and K ≤ 1024 keeps a [Bt, K] f32 tile
+# (128*1024*4 = 512 KiB) comfortably inside a TPU core's ~16 MiB VMEM even
+# with 4 operands double-buffered.
+DEFAULT_BLOCK_B = 128
+
+
+def _topic_sample_kernel(njk_ref, nkw_ref, nk_ref, unif_ref, params_ref,
+                         out_ref):
+    """One [Bt, K] tile: logits + Gumbel noise, argmax over K."""
+    alpha = params_ref[0, ref.P_ALPHA]
+    beta = params_ref[0, ref.P_BETA]
+    wbeta = params_ref[0, ref.P_WBETA]
+    eps = jnp.float32(1e-20)
+
+    njk = njk_ref[...]
+    nkw = nkw_ref[...]
+    nk = nk_ref[...]          # [1, K], broadcasts over the tile
+    u = unif_ref[...]
+
+    logits = (
+        jnp.log(njk + alpha)
+        + jnp.log(nkw + beta)
+        - jnp.log(nk + wbeta)
+    )
+    gumbel = -jnp.log(-jnp.log(jnp.maximum(u, eps)) + eps)
+    out_ref[...] = jnp.argmax(logits + gumbel, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def topic_sample(njk, nkw, nk, unif, params, *, block_b=DEFAULT_BLOCK_B):
+    """Sample topics for a batch of tokens.
+
+    njk:  [B, K] f32 — doc-topic counts for each token's document
+    nkw:  [B, K] f32 — topic-word counts for each token's word
+    nk:   [1, K] f32 — topic totals
+    unif: [B, K] f32 — uniforms in (0, 1) from the coordinator PRNG
+    params: [1, 4] f32 — (alpha, beta, K*alpha, W*beta), see ref.py
+    returns [B] i32 sampled topics.
+    """
+    b, k = njk.shape
+    bt = min(block_b, b)
+    if b % bt != 0:
+        raise ValueError(f"batch {b} not divisible by block {bt}")
+    grid = (b // bt,)
+
+    tile = pl.BlockSpec((bt, k), lambda i: (i, 0))
+    whole_row = pl.BlockSpec((1, k), lambda i: (0, 0))
+    params_spec = pl.BlockSpec((1, 4), lambda i: (0, 0))
+
+    return pl.pallas_call(
+        _topic_sample_kernel,
+        grid=grid,
+        in_specs=[tile, tile, whole_row, tile, params_spec],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(njk, nkw, nk, unif, params)

@@ -1,0 +1,73 @@
+"""L2: the jax compute graphs that get AOT-lowered for the rust runtime.
+
+The paper's contribution is the L3 coordinator (partitioning + diagonal
+scheduling); L2 is therefore deliberately thin — it wires the L1 Pallas
+kernels into the two graphs the coordinator invokes per conflict-free
+partition batch:
+
+* ``sampler_fn``  — Gumbel-max collapsed-Gibbs draw for B tokens.
+* ``loglik_fn``   — per-token log-likelihood plus its in-graph batch sum,
+  so the rust side ships one scalar back per batch instead of [B] floats
+  when it only needs the perplexity accumulator.
+
+The coordinator performs the sparse gathers (doc rows of Cθ, word columns
+of Cφ) natively — they are memcpy-shaped and partition sizes vary, so
+doing them in rust keeps one artifact per (B, K) instead of one per
+(B, Dblk, Wblk, K). All shapes here are static; the rust side pads the
+final short batch.
+
+Functions return tuples because the AOT path lowers with
+``return_tuple=True`` (see aot.py and /opt/xla-example/gen_hlo.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import perplexity, topic_sample
+
+
+def sampler_fn(njk, nkw, nk, unif, params):
+    """AOT entry: sample topics for one padded token batch.
+
+    njk, nkw, unif: [B, K] f32; nk: [1, K] f32; params: [1, 4] f32.
+    Returns ([B] i32,).
+    """
+    return (topic_sample.topic_sample(njk, nkw, nk, unif, params),)
+
+
+def loglik_fn(njk, nj, nkw, nk, params):
+    """AOT entry: per-token log-likelihood and its batch sum.
+
+    njk, nkw: [B, K] f32; nj: [B, 1] f32; nk: [1, K] f32; params: [1, 4].
+    Returns (scalar f32 sum, [B] f32 per-token).
+
+    Padding rows are handled on the rust side by subtracting the padded
+    tokens' contributions (it knows which rows are padding); the graph
+    stays branch-free.
+    """
+    ll = perplexity.loglik(njk, nj, nkw, nk, params)
+    return (jnp.sum(ll, dtype=jnp.float32), ll)
+
+
+def sampler_example_args(batch, num_topics):
+    """ShapeDtypeStructs matching sampler_fn's signature."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((batch, num_topics), f32),   # njk
+        jax.ShapeDtypeStruct((batch, num_topics), f32),   # nkw
+        jax.ShapeDtypeStruct((1, num_topics), f32),       # nk
+        jax.ShapeDtypeStruct((batch, num_topics), f32),   # unif
+        jax.ShapeDtypeStruct((1, 4), f32),                # params
+    )
+
+
+def loglik_example_args(batch, num_topics):
+    """ShapeDtypeStructs matching loglik_fn's signature."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((batch, num_topics), f32),   # njk
+        jax.ShapeDtypeStruct((batch, 1), f32),            # nj
+        jax.ShapeDtypeStruct((batch, num_topics), f32),   # nkw
+        jax.ShapeDtypeStruct((1, num_topics), f32),       # nk
+        jax.ShapeDtypeStruct((1, 4), f32),                # params
+    )

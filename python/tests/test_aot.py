@@ -1,0 +1,57 @@
+"""AOT path checks: lowering emits parseable HLO text with stable entry
+signatures, and the manifest describes exactly what was emitted."""
+
+import re
+
+from compile import aot, model
+
+
+def test_lower_variant_emits_both_entries():
+    arts = aot.lower_variant(256, 16)
+    assert set(arts) == {"sampler_256x16", "loglik_256x16"}
+    for text in arts.values():
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+
+
+def test_sampler_hlo_signature_shapes():
+    text = aot.lower_variant(256, 16)["sampler_256x16"]
+    # Signature lives in entry_computation_layout on the HloModule line.
+    header = text.splitlines()[0]
+    assert header.count("f32[256,16]") == 3            # njk, nkw, unif
+    assert "f32[1,16]" in header                        # nk
+    assert "f32[1,4]" in header                         # params
+    # return_tuple=True ⇒ tuple-of-one s32[256] result.
+    assert re.search(r"->\s*\(s32\[256\]", header), header
+
+
+def test_loglik_hlo_signature_shapes():
+    text = aot.lower_variant(128, 8)["loglik_128x8"]
+    header = text.splitlines()[0]
+    assert header.count("f32[128,8]") == 2              # njk, nkw
+    assert "f32[128,1]" in header                       # nj
+    assert "f32[1,8]" in header                         # nk
+    # tuple (scalar sum, per-token ll)
+    assert re.search(r"->\s*\(f32\[\],\s*f32\[128\]", header), header
+
+
+def test_hlo_has_no_custom_calls():
+    """interpret=True must lower to plain HLO the CPU PJRT client can run —
+    a Mosaic custom-call here would break the rust runtime."""
+    for text in aot.lower_variant(128, 8).values():
+        assert "custom-call" not in text, "unexpected custom-call in HLO"
+
+
+def test_manifest_rows_cover_variants():
+    rows = aot.manifest_rows(((2048, 64), (2048, 256)))
+    kinds = [(r[0], r[1], r[2]) for r in rows]
+    assert ("sampler", 2048, 64) in kinds
+    assert ("loglik", 2048, 256) in kinds
+    assert len(rows) == 4
+    for _, _, _, fname in rows:
+        assert fname.endswith(".hlo.txt")
+
+
+def test_example_args_match_fn_arity():
+    assert len(model.sampler_example_args(8, 4)) == 5
+    assert len(model.loglik_example_args(8, 4)) == 5

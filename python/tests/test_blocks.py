@@ -1,0 +1,64 @@
+"""L1 structure checks: BlockSpec tiling must not change results, and the
+VMEM-footprint accounting used in DESIGN.md §Perf must hold.
+
+interpret=True gives CPU-numpy timings only, so kernel *structure*
+(tiling invariance, footprint) is what we test — real-TPU perf is
+estimated analytically in DESIGN.md.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import perplexity, ref, topic_sample
+
+BLOCKS = [8, 32, 128, 512]
+
+
+def make_case(b, k, seed=0):
+    rng = np.random.default_rng(seed)
+    njk = jnp.asarray(rng.integers(0, 40, (b, k)), jnp.float32)
+    nkw = jnp.asarray(rng.integers(0, 40, (b, k)), jnp.float32)
+    nk = jnp.asarray(rng.integers(1, 400, (1, k)), jnp.float32)
+    nj = jnp.sum(njk, axis=1, keepdims=True)
+    unif = jnp.asarray(rng.uniform(1e-6, 1 - 1e-6, (b, k)), jnp.float32)
+    params = ref.pack_params(0.5, 0.1, k, 1000)
+    return njk, nj, nkw, nk, unif, params
+
+
+@pytest.mark.parametrize("block_b", BLOCKS)
+def test_sampler_invariant_to_block_size(block_b):
+    b, k = 512, 16
+    njk, _, nkw, nk, unif, params = make_case(b, k)
+    want = ref.topic_sample_ref(njk, nkw, nk, unif, params)
+    got = topic_sample.topic_sample(njk, nkw, nk, unif, params, block_b=block_b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_b", BLOCKS)
+def test_loglik_invariant_to_block_size(block_b):
+    b, k = 512, 16
+    njk, nj, nkw, nk, _, params = make_case(b, k, seed=1)
+    want = ref.loglik_ref(njk, nj, nkw, nk, params)
+    got = perplexity.loglik(njk, nj, nkw, nk, params, block_b=block_b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def vmem_bytes_sampler(bt, k):
+    """f32 VMEM bytes for one grid step of the sampler kernel:
+    njk/nkw/unif tiles [Bt,K], nk row [1,K], params [1,4], out [Bt]."""
+    return 4 * (3 * bt * k + k + 4 + bt)
+
+
+def test_default_block_fits_tpu_vmem():
+    # One grid step at the paper's K=256 with the default tile must stay
+    # far below a TPU core's ~16 MiB VMEM, even double-buffered.
+    bt = topic_sample.DEFAULT_BLOCK_B
+    footprint = vmem_bytes_sampler(bt, 256)
+    assert 2 * footprint < 16 * 1024 * 1024 / 4, (
+        f"double-buffered footprint {2 * footprint}B should be <1/4 of VMEM"
+    )
+
+
+def test_footprint_scales_linearly_in_block():
+    assert vmem_bytes_sampler(256, 64) > 1.9 * vmem_bytes_sampler(128, 64)

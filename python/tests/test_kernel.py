@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps batch sizes, topic counts, hyperparameters and count
+magnitudes; every case asserts the Pallas kernel (interpret=True) matches
+ref.py exactly (argmax is discrete) or to float tolerance (loglik).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import perplexity, ref, topic_sample
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, b, k, max_count=50.0):
+    """Random but realistic count tensors for a [B, K] token batch."""
+    njk = jnp.asarray(rng.integers(0, max_count, (b, k)), jnp.float32)
+    nkw = jnp.asarray(rng.integers(0, max_count, (b, k)), jnp.float32)
+    nk = jnp.asarray(rng.integers(1, max_count * 10, (1, k)), jnp.float32)
+    nj = jnp.sum(njk, axis=1, keepdims=True)
+    unif = jnp.asarray(rng.uniform(1e-6, 1.0 - 1e-6, (b, k)), jnp.float32)
+    return njk, nj, nkw, nk, unif
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 8, 128, 256, 384]),     # B (block=128 ⇒ exercises
+    st.sampled_from([1, 2, 16, 64, 256]),          #   sub-block & multi-block)
+    st.integers(0, 2**31 - 1),                     # numpy seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy,
+       st.sampled_from([0.05, 0.5, 2.0]),
+       st.sampled_from([0.01, 0.1, 1.0]))
+def test_topic_sample_matches_ref(shape, alpha, beta):
+    b, k, seed = shape
+    rng = np.random.default_rng(seed)
+    njk, _, nkw, nk, unif = make_inputs(rng, b, k)
+    params = ref.pack_params(alpha, beta, k, num_words=1000)
+
+    got = topic_sample.topic_sample(njk, nkw, nk, unif, params)
+    want = ref.topic_sample_ref(njk, nkw, nk, unif, params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+    assert np.all(np.asarray(got) >= 0) and np.all(np.asarray(got) < k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy,
+       st.sampled_from([0.05, 0.5, 2.0]),
+       st.sampled_from([0.01, 0.1, 1.0]))
+def test_loglik_matches_ref(shape, alpha, beta):
+    b, k, seed = shape
+    rng = np.random.default_rng(seed)
+    njk, nj, nkw, nk, _ = make_inputs(rng, b, k)
+    params = ref.pack_params(alpha, beta, k, num_words=1000)
+
+    got = perplexity.loglik(njk, nj, nkw, nk, params)
+    want = ref.loglik_ref(njk, nj, nkw, nk, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert np.all(np.asarray(got) <= 0.0 + 1e-6)  # log of a probability
+
+
+def test_topic_sample_prefers_dominant_topic():
+    """With one topic overwhelmingly weighted, argmax must pick it."""
+    b, k = 128, 16
+    njk = jnp.zeros((b, k), jnp.float32).at[:, 3].set(1e6)
+    nkw = jnp.zeros((b, k), jnp.float32).at[:, 3].set(1e6)
+    nk = jnp.ones((1, k), jnp.float32)
+    unif = jnp.full((b, k), 0.5, jnp.float32)
+    params = ref.pack_params(0.5, 0.1, k, 100)
+    got = topic_sample.topic_sample(njk, nkw, nk, unif, params)
+    assert np.all(np.asarray(got) == 3)
+
+
+def test_topic_sample_empirical_distribution():
+    """Gumbel-max over uniform logits ⇒ empirically uniform topic draws."""
+    b, k = 2048, 8
+    rng = np.random.default_rng(0)
+    njk = jnp.ones((b, k), jnp.float32)
+    nkw = jnp.ones((b, k), jnp.float32)
+    nk = jnp.full((1, k), 8.0, jnp.float32)
+    unif = jnp.asarray(rng.uniform(1e-6, 1 - 1e-6, (b, k)), jnp.float32)
+    params = ref.pack_params(0.5, 0.1, k, 100)
+    got = np.asarray(topic_sample.topic_sample(njk, nkw, nk, unif, params))
+    counts = np.bincount(got, minlength=k)
+    # Each topic should get ~B/k = 256; allow generous ±40% band.
+    assert counts.min() > 0.6 * b / k and counts.max() < 1.4 * b / k
+
+
+def test_loglik_sum_matches_tokens():
+    from compile import model
+
+    b, k = 256, 32
+    rng = np.random.default_rng(7)
+    njk, nj, nkw, nk, _ = make_inputs(rng, b, k)
+    params = ref.pack_params(0.5, 0.1, k, 500)
+    total, per_token = model.loglik_fn(njk, nj, nkw, nk, params)
+    np.testing.assert_allclose(float(total), float(np.sum(np.asarray(per_token))),
+                               rtol=1e-5)
+
+
+def test_block_not_dividing_batch_raises():
+    with pytest.raises(ValueError):
+        topic_sample.topic_sample(
+            jnp.ones((130, 4)), jnp.ones((130, 4)), jnp.ones((1, 4)),
+            jnp.full((130, 4), 0.5), ref.pack_params(0.5, 0.1, 4, 10),
+            block_b=128,
+        )

@@ -1,0 +1,208 @@
+//! In-tree micro/macro-benchmark harness (offline replacement for
+//! `criterion`). Benches are plain binaries with `harness = false`; each
+//! builds a [`Bench`] runner, registers closures, and prints/records an
+//! aligned results table.
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum measurement time are reached; reports
+//! mean/median/p95 per iteration plus derived throughput when the caller
+//! provides an items-per-iteration hint.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::tsv::Table;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 100,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Heavier workloads (full partitioner runs, training sweeps) need
+    /// fewer iterations.
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            min_time: Duration::from_millis(200),
+        }
+    }
+
+    /// Honour PPLDA_BENCH_FAST=1 so the full `cargo bench` suite stays
+    /// tractable on small CI boxes.
+    pub fn from_env(base: Self) -> Self {
+        if std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1") {
+            Self {
+                warmup_iters: 0,
+                min_iters: 1,
+                max_iters: 2,
+                min_time: Duration::ZERO,
+            }
+        } else {
+            base
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter: Summary,
+    /// Items (e.g. tokens) processed per iteration, if provided.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.per_iter.mean)
+    }
+}
+
+pub struct Bench {
+    config: BenchConfig,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(config: BenchConfig) -> Self {
+        Self {
+            config: BenchConfig::from_env(config),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one full iteration per call.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        self.run_with_items(name, None, move || {
+            f();
+        })
+    }
+
+    /// Time `f` with a per-iteration item count for throughput reporting.
+    pub fn run_with_items(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.config.min_iters
+            || (started.elapsed() < self.config.min_time
+                && samples.len() < self.config.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            per_iter: Summary::of(&samples),
+            items_per_iter,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Aligned results table; includes throughput column when any
+    /// measurement carries an item count.
+    pub fn table(&self) -> Table {
+        let with_tp = self.results.iter().any(|m| m.items_per_iter.is_some());
+        let mut header = vec!["name", "iters", "mean_s", "median_s", "p95_s"];
+        if with_tp {
+            header.push("items/s");
+        }
+        let mut t = Table::new(header);
+        for m in &self.results {
+            let mut row = vec![
+                m.name.clone(),
+                m.iters.to_string(),
+                format!("{:.6}", m.per_iter.mean),
+                format!("{:.6}", m.per_iter.median),
+                format!("{:.6}", m.per_iter.p95),
+            ];
+            if with_tp {
+                row.push(
+                    m.throughput()
+                        .map(crate::util::human_rate)
+                        .unwrap_or_else(|| "-".to_string()),
+                );
+            }
+            t.row(row);
+        }
+        t
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (stable-rust
+/// friendly black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            min_time: Duration::ZERO,
+        });
+        let m = b.run_with_items("spin", Some(1000.0), || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(m.iters >= 3);
+        assert!(m.per_iter.mean > 0.0);
+        assert!(m.throughput().unwrap() > 0.0);
+        let table = b.table();
+        assert_eq!(table.num_rows(), 1);
+        assert!(table.to_aligned().contains("spin"));
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut b = Bench::new(BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 3,
+            min_time: Duration::from_secs(10),
+        });
+        let m = b.run("fast", || {});
+        assert!(m.iters <= 3);
+    }
+}

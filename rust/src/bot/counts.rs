@@ -1,0 +1,165 @@
+//! BoT count matrices: shared document–topic counts plus separate word
+//! and timestamp emission counts (paper Fig. 2's `C_Theta`, `C_Phi`,
+//! `C_Pi`).
+
+use crate::gibbs::tokens::TokenBlock;
+
+#[derive(Clone, Debug)]
+pub struct BotCounts {
+    pub k: usize,
+    pub num_docs: usize,
+    pub num_words: usize,
+    pub num_stamps: usize,
+    /// `n_jk` over words *and* timestamps (shared θ), `[D][K]`.
+    pub doc_topic: Vec<f32>,
+    /// `n_kw`, word-major `[W][K]` (C_Phi).
+    pub word_topic: Vec<f32>,
+    /// `n_ks`, stamp-major `[S][K]` (C_Pi).
+    pub stamp_topic: Vec<f32>,
+    /// `n_k^W` — word tokens per topic.
+    pub topic_words: Vec<u32>,
+    /// `n_k^TS` — timestamp tokens per topic.
+    pub topic_stamps: Vec<u32>,
+}
+
+impl BotCounts {
+    pub fn zeros(num_docs: usize, num_words: usize, num_stamps: usize, k: usize) -> Self {
+        Self {
+            k,
+            num_docs,
+            num_words,
+            num_stamps,
+            doc_topic: vec![0.0; num_docs * k],
+            word_topic: vec![0.0; num_words * k],
+            stamp_topic: vec![0.0; num_stamps * k],
+            topic_words: vec![0; k],
+            topic_stamps: vec![0; k],
+        }
+    }
+
+    /// Accumulate word-token assignments.
+    pub fn absorb_words(&mut self, block: &TokenBlock) {
+        for i in 0..block.len() {
+            let (d, w, z) = (
+                block.docs[i] as usize,
+                block.words[i] as usize,
+                block.z[i] as usize,
+            );
+            self.doc_topic[d * self.k + z] += 1.0;
+            self.word_topic[w * self.k + z] += 1.0;
+            self.topic_words[z] += 1;
+        }
+    }
+
+    /// Accumulate timestamp-token assignments (`block.words` holds stamp
+    /// ids).
+    pub fn absorb_stamps(&mut self, block: &TokenBlock) {
+        for i in 0..block.len() {
+            let (d, s, z) = (
+                block.docs[i] as usize,
+                block.words[i] as usize,
+                block.z[i] as usize,
+            );
+            self.doc_topic[d * self.k + z] += 1.0;
+            self.stamp_topic[s * self.k + z] += 1.0;
+            self.topic_stamps[z] += 1;
+        }
+    }
+
+    #[inline]
+    pub fn doc_row(&self, j: usize) -> &[f32] {
+        &self.doc_topic[j * self.k..(j + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn word_row(&self, w: usize) -> &[f32] {
+        &self.word_topic[w * self.k..(w + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn stamp_row(&self, s: usize) -> &[f32] {
+        &self.stamp_topic[s * self.k..(s + 1) * self.k]
+    }
+
+    /// Total assigned tokens (words + stamps) — conservation invariant.
+    pub fn total(&self) -> u64 {
+        self.topic_words.iter().map(|&c| c as u64).sum::<u64>()
+            + self.topic_stamps.iter().map(|&c| c as u64).sum::<u64>()
+    }
+
+    /// Full consistency check against the blocks (test helper).
+    pub fn check_consistency(
+        &self,
+        word_blocks: &[&TokenBlock],
+        stamp_blocks: &[&TokenBlock],
+    ) -> Result<(), String> {
+        let mut expect =
+            BotCounts::zeros(self.num_docs, self.num_words, self.num_stamps, self.k);
+        for b in word_blocks {
+            expect.absorb_words(b);
+        }
+        for b in stamp_blocks {
+            expect.absorb_stamps(b);
+        }
+        if expect.doc_topic != self.doc_topic {
+            return Err("doc_topic mismatch".into());
+        }
+        if expect.word_topic != self.word_topic {
+            return Err("word_topic mismatch".into());
+        }
+        if expect.stamp_topic != self.stamp_topic {
+            return Err("stamp_topic mismatch".into());
+        }
+        if expect.topic_words != self.topic_words {
+            return Err("topic_words mismatch".into());
+        }
+        if expect.topic_stamps != self.topic_stamps {
+            return Err("topic_stamps mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_both_sides_updates_shared_theta() {
+        let mut c = BotCounts::zeros(2, 3, 4, 2);
+        let words = TokenBlock {
+            docs: vec![0, 0],
+            words: vec![1, 2],
+            z: vec![0, 1],
+        };
+        let stamps = TokenBlock {
+            docs: vec![0, 1],
+            words: vec![3, 0],
+            z: vec![0, 0],
+        };
+        c.absorb_words(&words);
+        c.absorb_stamps(&stamps);
+        // Doc 0: 2 word tokens + 1 stamp token.
+        assert_eq!(c.doc_row(0), &[2.0, 1.0]);
+        assert_eq!(c.doc_row(1), &[1.0, 0.0]);
+        assert_eq!(c.topic_words, vec![1, 1]);
+        assert_eq!(c.topic_stamps, vec![2, 0]);
+        assert_eq!(c.stamp_row(3), &[1.0, 0.0]);
+        assert_eq!(c.total(), 4);
+        assert!(c.check_consistency(&[&words], &[&stamps]).is_ok());
+    }
+
+    #[test]
+    fn consistency_detects_cross_side_corruption() {
+        let mut c = BotCounts::zeros(1, 1, 1, 1);
+        let words = TokenBlock {
+            docs: vec![0],
+            words: vec![0],
+            z: vec![0],
+        };
+        c.absorb_words(&words);
+        // Corrupt the stamp side only.
+        c.topic_stamps[0] += 1;
+        assert!(c.check_consistency(&[&words], &[]).is_err());
+    }
+}

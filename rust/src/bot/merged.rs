@@ -1,0 +1,270 @@
+//! The paper's *alternative* BoT parallelization (§IV-C): "Another
+//! approach is to merge the timestamp array into the document content,
+//! then partition and sample both words and timestamps in one matrix."
+//!
+//! Timestamps are appended to the vocabulary as `W + s` pseudo-words, the
+//! merged document–word matrix is partitioned once, and a single diagonal
+//! sweep per epoch samples words and timestamps together. The emission
+//! distributions stay separate (β/Wβ for real words, γ/Sγ for timestamp
+//! pseudo-words), so the model is identical to the two-matrix variant —
+//! only the partitioning/scheduling changes:
+//!
+//! * one partition plan instead of two (simpler, one η),
+//! * timestamp mass can balance word mass inside a partition (helps when
+//!   the DTS matrix alone is hard to balance, e.g. few timestamp columns
+//!   at large P — see EXPERIMENTS.md Table IV's η_DTS discussion),
+//! * the per-token kernel needs a branch on word id (paper chose the
+//!   two-matrix form "for its simplicity").
+
+use crate::bot::counts::BotCounts;
+use crate::bot::serial::BotHyper;
+use crate::corpus::bow::{BagOfWords, Entry};
+use crate::corpus::timestamps::TimestampedCorpus;
+use crate::gibbs::sampler::draw;
+use crate::gibbs::tokens::TokenBlock;
+use crate::partition::scheme::PartitionMap;
+use crate::partition::{self, Algorithm, Plan};
+use crate::util::rng::Rng;
+
+/// Merge DW and DTS into one matrix with timestamps as pseudo-words
+/// `W..W+S`.
+pub fn merge_matrices(tc: &TimestampedCorpus) -> BagOfWords {
+    let w = tc.bow.num_words();
+    let rows: Vec<Vec<Entry>> = (0..tc.bow.num_docs())
+        .map(|j| {
+            let mut row: Vec<Entry> = tc.bow.doc(j).to_vec();
+            row.extend(tc.dts.doc(j).iter().map(|e| Entry {
+                word: w as u32 + e.word,
+                count: e.count,
+            }));
+            row
+        })
+        .collect();
+    BagOfWords::from_rows(w + tc.num_stamps, rows)
+}
+
+/// Parallel BoT over the merged matrix: one plan, one diagonal sweep per
+/// epoch, mixed word/timestamp tokens per partition.
+pub struct MergedBot {
+    pub h: BotHyper,
+    pub counts: BotCounts,
+    pub p: usize,
+    pub plan_eta: f64,
+    /// Mixed blocks, diagonal-major over the merged plan.
+    blocks: Vec<Vec<TokenBlock>>,
+    num_words: usize,
+    seed: u64,
+    sweeps_done: usize,
+    probs: Vec<f32>,
+}
+
+impl MergedBot {
+    pub fn init(
+        tc: &TimestampedCorpus,
+        p: usize,
+        algo: Algorithm,
+        h: BotHyper,
+        seed: u64,
+    ) -> Self {
+        let merged = merge_matrices(tc);
+        let plan: Plan = partition::partition(&merged, p, algo, seed);
+        let map = PartitionMap::build(&merged, &plan);
+        let mut rng = Rng::stream(seed, 0x3E26ED);
+
+        let mut blocks = Vec::with_capacity(p);
+        for l in 0..p {
+            blocks.push(
+                map.diagonal(l)
+                    .map(|(m, n)| TokenBlock::from_cells(map.cells(m, n), h.k, &mut rng))
+                    .collect::<Vec<_>>(),
+            );
+        }
+
+        let w = tc.bow.num_words();
+        let mut counts = BotCounts::zeros(merged.num_docs(), w, tc.num_stamps, h.k);
+        for diag in &blocks {
+            for b in diag {
+                for i in 0..b.len() {
+                    let (d, x, z) = (
+                        b.docs[i] as usize,
+                        b.words[i] as usize,
+                        b.z[i] as usize,
+                    );
+                    counts.doc_topic[d * h.k + z] += 1.0;
+                    if x < w {
+                        counts.word_topic[x * h.k + z] += 1.0;
+                        counts.topic_words[z] += 1;
+                    } else {
+                        counts.stamp_topic[(x - w) * h.k + z] += 1.0;
+                        counts.topic_stamps[z] += 1;
+                    }
+                }
+            }
+        }
+        Self {
+            h,
+            counts,
+            p,
+            plan_eta: plan.eta,
+            blocks,
+            num_words: w,
+            seed,
+            sweeps_done: 0,
+        probs: Vec::new(),
+        }
+    }
+
+    /// One sweep: `P` diagonal epochs over the merged matrix. Executed
+    /// sequentially per worker (the merged kernel is branchy; this
+    /// variant exists for η/quality comparison — see `merged_vs_two_matrix`
+    /// tests — not as the perf path).
+    pub fn sweep(&mut self) {
+        let p = self.p;
+        for l in 0..p {
+            for m in 0..p {
+                // Split borrows: blocks vs counts.
+                let block = {
+                    let diag = &mut self.blocks[l];
+                    std::mem::take(&mut diag[m])
+                };
+                let mut block = block;
+                let mut rng = Rng::stream(
+                    self.seed ^ 0x3E26,
+                    ((self.sweeps_done as u64) << 24) | ((l as u64) << 12) | m as u64,
+                );
+                self.sweep_block(&mut block, &mut rng);
+                self.blocks[l][m] = block;
+            }
+        }
+        self.sweeps_done += 1;
+    }
+
+    fn sweep_block(&mut self, block: &mut TokenBlock, rng: &mut Rng) {
+        let k = self.h.k;
+        let w = self.num_words;
+        self.probs.resize(k, 0.0);
+        for i in 0..block.len() {
+            let d = block.docs[i] as usize;
+            let x = block.words[i] as usize;
+            let old = block.z[i] as usize;
+            let is_word = x < w;
+
+            self.counts.doc_topic[d * k + old] -= 1.0;
+            if is_word {
+                self.counts.word_topic[x * k + old] -= 1.0;
+                self.counts.topic_words[old] -= 1;
+            } else {
+                self.counts.stamp_topic[(x - w) * k + old] -= 1.0;
+                self.counts.topic_stamps[old] -= 1;
+            }
+
+            let mut total = 0.0f32;
+            for t in 0..k {
+                let theta = self.counts.doc_topic[d * k + t] + self.h.alpha;
+                let emit = if is_word {
+                    (self.counts.word_topic[x * k + t] + self.h.beta)
+                        / (self.counts.topic_words[t] as f32 + self.h.wbeta)
+                } else {
+                    (self.counts.stamp_topic[(x - w) * k + t] + self.h.gamma)
+                        / (self.counts.topic_stamps[t] as f32 + self.h.sgamma)
+                };
+                let pr = theta * emit;
+                self.probs[t] = pr;
+                total += pr;
+            }
+            let new = draw(&self.probs, total, rng);
+
+            self.counts.doc_topic[d * k + new] += 1.0;
+            if is_word {
+                self.counts.word_topic[x * k + new] += 1.0;
+                self.counts.topic_words[new] += 1;
+            } else {
+                self.counts.stamp_topic[(x - w) * k + new] += 1.0;
+                self.counts.topic_stamps[new] += 1;
+            }
+            block.z[i] = new as u32;
+        }
+    }
+
+    pub fn train(&mut self, iters: usize) {
+        for _ in 0..iters {
+            self.sweep();
+        }
+    }
+
+    /// Table IV metric: word perplexity (identical definition to the
+    /// two-matrix variant).
+    pub fn perplexity(&self, tc: &TimestampedCorpus) -> f64 {
+        super::perplexity_words(&tc.bow, &self.counts, &self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bot::serial::SerialBot;
+    use crate::corpus::synthetic::{generate_timestamped, Profile, TimeProfile};
+
+    fn tiny_tc(seed: u64) -> TimestampedCorpus {
+        let mut p = Profile::tiny();
+        p.time = Some(TimeProfile {
+            first_year: 2000,
+            last_year: 2009,
+            growth: 0.1,
+            stamps_per_doc: 4,
+        });
+        generate_timestamped(&p, seed)
+    }
+
+    #[test]
+    fn merged_matrix_preserves_totals() {
+        let tc = tiny_tc(71);
+        let merged = merge_matrices(&tc);
+        assert_eq!(merged.num_docs(), tc.bow.num_docs());
+        assert_eq!(merged.num_words(), tc.bow.num_words() + tc.num_stamps);
+        assert_eq!(merged.num_tokens(), tc.total_tokens());
+        // Per-doc: word entries preserved, stamp mass appended.
+        for j in 0..merged.num_docs() {
+            assert_eq!(
+                merged.row_sum(j),
+                tc.bow.row_sum(j) + tc.dts.row_sum(j)
+            );
+        }
+    }
+
+    #[test]
+    fn merged_bot_conserves_counts_and_learns() {
+        let tc = tiny_tc(72);
+        let h = BotHyper::new(8, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+        let mut bot = MergedBot::init(&tc, 4, Algorithm::A3 { restarts: 3 }, h, 72);
+        assert_eq!(bot.counts.total(), tc.total_tokens());
+        let p0 = bot.perplexity(&tc);
+        bot.train(25);
+        assert_eq!(bot.counts.total(), tc.total_tokens());
+        let p1 = bot.perplexity(&tc);
+        assert!(p1 < p0 * 0.9, "{p0} → {p1}");
+    }
+
+    #[test]
+    fn merged_vs_two_matrix_perplexity_close() {
+        // Same model, different scheduling: converged quality must agree
+        // (the paper's argument for choosing either variant freely).
+        let tc = tiny_tc(73);
+        let h = BotHyper::new(8, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+        let mut merged = MergedBot::init(&tc, 4, Algorithm::A3 { restarts: 3 }, h, 73);
+        merged.train(30);
+        let mut serial = SerialBot::init(&tc, h, 73);
+        serial.train(&tc, 30, 0);
+        let (pm, ps) = (merged.perplexity(&tc), serial.perplexity(&tc));
+        let rel = (pm - ps).abs() / ps;
+        assert!(rel < 0.06, "merged {pm} vs serial {ps} (rel {rel})");
+    }
+
+    #[test]
+    fn merged_single_eta_reported() {
+        let tc = tiny_tc(74);
+        let h = BotHyper::new(4, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+        let bot = MergedBot::init(&tc, 5, Algorithm::A1, h, 74);
+        assert!(bot.plan_eta > 0.0 && bot.plan_eta <= 1.0 + 1e-12);
+    }
+}

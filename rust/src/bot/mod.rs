@@ -1,0 +1,68 @@
+//! Bag of Timestamps (Masada et al. 2009) and its parallelization
+//! (paper §IV-C).
+//!
+//! BoT extends LDA with a timestamp array `TS_j` of length `L` per
+//! document, treated as extra "words" drawn from the shared per-document
+//! topic mixture `θ` but emitted from a separate timestamp-per-topic
+//! distribution `π` with prior `γ`. Collapsed Gibbs therefore samples:
+//!
+//! ```text
+//! words:      p(k | j,w) ∝ (n_jk + α)(n_kw + β)/(n_k^W  + Wβ)
+//! timestamps: p(k | j,s) ∝ (n_jk + α)(n_ks + γ)/(n_k^TS + Sγ)
+//! ```
+//!
+//! with `n_jk` counting *both* word and timestamp assignments (shared θ),
+//! and separate totals for the word side (`n_k^W`) and timestamp side
+//! (`n_k^TS`).
+//!
+//! Parallelization (the paper's design): partition `DW` into `P×P` with
+//! one plan and `DTS` into `P×P` with an independent plan over the
+//! workload matrix `R'`; each of the `P` epochs of a sweep samples one
+//! `DW` diagonal, then the corresponding `DTS` diagonal. Both phases are
+//! conflict-free within themselves; the shared `n_jk` rows are disjoint
+//! per phase because each phase's diagonal uses disjoint document groups.
+
+pub mod counts;
+pub mod merged;
+pub mod parallel;
+pub mod serial;
+pub mod timeline;
+
+pub use counts::BotCounts;
+pub use parallel::ParallelBot;
+pub use serial::{BotHyper, SerialBot};
+
+use crate::corpus::bow::BagOfWords;
+
+/// Word perplexity under BoT (the paper's Table IV metric): Eq. 3–4 with
+/// `θ_{k|j} = (n_jk + α)/(n_j + Kα)` where `n_jk` and `n_j` include the
+/// timestamp assignments (shared θ), and `φ` from the word side.
+pub fn perplexity_words(bow: &BagOfWords, counts: &BotCounts, h: &BotHyper) -> f64 {
+    let k = h.k;
+    let kalpha = h.alpha as f64 * k as f64;
+    let inv_nk: Vec<f64> = counts
+        .topic_words
+        .iter()
+        .map(|&nk| 1.0 / (nk as f64 + h.wbeta as f64))
+        .collect();
+
+    let mut ll = 0.0f64;
+    let mut theta = vec![0.0f64; k];
+    for j in 0..bow.num_docs() {
+        let row = counts.doc_row(j);
+        let nj: u64 = row.iter().map(|&c| c as u64).sum();
+        let inv_nj = 1.0 / (nj as f64 + kalpha);
+        for t in 0..k {
+            theta[t] = (row[t] as f64 + h.alpha as f64) * inv_nj;
+        }
+        for e in bow.doc(j) {
+            let wrow = counts.word_row(e.word as usize);
+            let mut p = 0.0f64;
+            for t in 0..k {
+                p += theta[t] * (wrow[t] as f64 + h.beta as f64) * inv_nk[t];
+            }
+            ll += e.count as f64 * p.ln();
+        }
+    }
+    (-ll / bow.num_tokens().max(1) as f64).exp()
+}

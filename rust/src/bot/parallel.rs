@@ -1,0 +1,336 @@
+//! Parallel BoT (paper §IV-C): each sweep epoch samples one diagonal of
+//! `DW` (word phase) and then the corresponding diagonal of `DTS`
+//! (timestamp phase), both conflict-free under their own partition plans.
+
+use std::time::Instant;
+
+use crate::bot::counts::BotCounts;
+use crate::bot::serial::BotHyper;
+use crate::corpus::timestamps::TimestampedCorpus;
+use crate::gibbs::sampler;
+use crate::gibbs::tokens::TokenBlock;
+use crate::partition::scheme::PartitionMap;
+use crate::partition::Plan;
+use crate::scheduler::exec::{ExecMode, SweepStats};
+use crate::scheduler::shared::SharedRows;
+use crate::util::rng::Rng;
+
+pub struct ParallelBot {
+    pub h: BotHyper,
+    pub counts: BotCounts,
+    pub p: usize,
+    /// Word blocks, diagonal-major over the DW plan.
+    word_blocks: Vec<Vec<TokenBlock>>,
+    /// Timestamp blocks, diagonal-major over the DTS plan.
+    stamp_blocks: Vec<Vec<TokenBlock>>,
+    seed: u64,
+    sweeps_done: usize,
+}
+
+impl ParallelBot {
+    /// `plan_dw` partitions the document–word matrix, `plan_dts` the
+    /// document–timestamp matrix (independent plans over R and R', as the
+    /// paper prescribes). Both must use the same `P`.
+    pub fn init(
+        tc: &TimestampedCorpus,
+        plan_dw: &Plan,
+        plan_dts: &Plan,
+        h: BotHyper,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(plan_dw.p, plan_dts.p, "DW and DTS plans must share P");
+        let p = plan_dw.p;
+        let mut rng = Rng::stream(seed, 0xB07_11);
+
+        let build = |bow, plan: &Plan, rng: &mut Rng| {
+            let map = PartitionMap::build(bow, plan);
+            (0..p)
+                .map(|l| {
+                    map.diagonal(l)
+                        .map(|(m, n)| TokenBlock::from_cells(map.cells(m, n), h.k, rng))
+                        .collect::<Vec<_>>()
+                })
+                .collect::<Vec<_>>()
+        };
+        let word_blocks = build(&tc.bow, plan_dw, &mut rng);
+        let stamp_blocks = build(&tc.dts, plan_dts, &mut rng);
+
+        let mut counts = BotCounts::zeros(
+            tc.bow.num_docs(),
+            tc.bow.num_words(),
+            tc.num_stamps,
+            h.k,
+        );
+        for diag in &word_blocks {
+            for b in diag {
+                counts.absorb_words(b);
+            }
+        }
+        for diag in &stamp_blocks {
+            for b in diag {
+                counts.absorb_stamps(b);
+            }
+        }
+        Self {
+            h,
+            counts,
+            p,
+            word_blocks,
+            stamp_blocks,
+            seed,
+            sweeps_done: 0,
+        }
+    }
+
+    /// One sweep: `P` epochs of (word diagonal, then timestamp diagonal).
+    /// Returns (word stats, stamp stats).
+    pub fn sweep(&mut self, mode: ExecMode) -> (SweepStats, SweepStats) {
+        let p = self.p;
+        let k = self.h.k;
+        let sweep_no = self.sweeps_done;
+        let mut wstats = SweepStats::default();
+        let mut sstats = SweepStats::default();
+
+        for l in 0..p {
+            // ---- word phase on DW diagonal l ----
+            {
+                let snapshot = self.counts.topic_words.clone();
+                let started = Instant::now();
+                let diag = &mut self.word_blocks[l];
+                wstats
+                    .epoch_max_tokens
+                    .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
+                wstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+                let doc_rows = SharedRows::new(&mut self.counts.doc_topic, k);
+                let emit_rows = SharedRows::new(&mut self.counts.word_topic, k);
+                let h = self.h.word_hyper();
+                let deltas = run_diagonal(
+                    diag,
+                    doc_rows,
+                    emit_rows,
+                    &snapshot,
+                    &h,
+                    self.seed ^ 0xD0C5,
+                    sweep_no,
+                    l,
+                    mode,
+                );
+                merge(&mut self.counts.topic_words, deltas);
+                wstats.epoch_secs.push(started.elapsed().as_secs_f64());
+            }
+
+            // ---- timestamp phase on DTS diagonal l ----
+            {
+                let snapshot = self.counts.topic_stamps.clone();
+                let started = Instant::now();
+                let diag = &mut self.stamp_blocks[l];
+                sstats
+                    .epoch_max_tokens
+                    .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
+                sstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+                let doc_rows = SharedRows::new(&mut self.counts.doc_topic, k);
+                let emit_rows = SharedRows::new(&mut self.counts.stamp_topic, k);
+                let h = self.h.stamp_hyper();
+                let deltas = run_diagonal(
+                    diag,
+                    doc_rows,
+                    emit_rows,
+                    &snapshot,
+                    &h,
+                    self.seed ^ 0x7135,
+                    sweep_no,
+                    l,
+                    mode,
+                );
+                merge(&mut self.counts.topic_stamps, deltas);
+                sstats.epoch_secs.push(started.elapsed().as_secs_f64());
+            }
+        }
+        self.sweeps_done += 1;
+        (wstats, sstats)
+    }
+
+    pub fn train(
+        &mut self,
+        tc: &TimestampedCorpus,
+        iters: usize,
+        eval_every: usize,
+        mode: ExecMode,
+    ) -> Vec<(usize, f64)> {
+        let mut curve = Vec::new();
+        for it in 1..=iters {
+            self.sweep(mode);
+            if eval_every > 0 && (it % eval_every == 0 || it == iters) {
+                curve.push((it, self.perplexity(tc)));
+            }
+        }
+        curve
+    }
+
+    /// Table IV metric: word perplexity.
+    pub fn perplexity(&self, tc: &TimestampedCorpus) -> f64 {
+        super::perplexity_words(&tc.bow, &self.counts, &self.h)
+    }
+
+    pub fn word_blocks_flat(&self) -> Vec<&TokenBlock> {
+        self.word_blocks.iter().flatten().collect()
+    }
+
+    pub fn stamp_blocks_flat(&self) -> Vec<&TokenBlock> {
+        self.stamp_blocks.iter().flatten().collect()
+    }
+}
+
+/// Run one diagonal's workers (threaded or sequential) and collect their
+/// topic-total deltas.
+#[allow(clippy::too_many_arguments)]
+fn run_diagonal(
+    diag: &mut [TokenBlock],
+    doc_rows: SharedRows<'_>,
+    emit_rows: SharedRows<'_>,
+    snapshot: &[u32],
+    h: &sampler::Hyper,
+    seed: u64,
+    sweep_no: usize,
+    l: usize,
+    mode: ExecMode,
+) -> Vec<Vec<i64>> {
+    let k = h.k;
+    let worker = |m: usize, block: &mut TokenBlock| {
+        let mut delta = vec![0i64; k];
+        let mut probs = Vec::new();
+        let mut rng = Rng::stream(
+            seed,
+            ((sweep_no as u64) << 24) | ((l as u64) << 12) | m as u64,
+        );
+        sampler::sweep_partition(
+            block,
+            // SAFETY: diagonal non-conflict — block tokens lie in
+            // partition (m, (m+l) mod P) of this phase's plan; its doc
+            // group and emission group rows are exclusive to this worker
+            // for the epoch.
+            |d| unsafe { doc_rows.row_ptr(d) },
+            |w| unsafe { emit_rows.row_ptr(w) },
+            snapshot,
+            &mut delta,
+            h,
+            &mut rng,
+            &mut probs,
+        );
+        delta
+    };
+    match mode {
+        ExecMode::Sequential => diag
+            .iter_mut()
+            .enumerate()
+            .map(|(m, b)| worker(m, b))
+            .collect(),
+        ExecMode::Threaded => std::thread::scope(|s| {
+            let handles: Vec<_> = diag
+                .iter_mut()
+                .enumerate()
+                .map(|(m, b)| {
+                    let worker = &worker;
+                    s.spawn(move || worker(m, b))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        }),
+    }
+}
+
+fn merge(totals: &mut [u32], deltas: Vec<Vec<i64>>) {
+    for delta in deltas {
+        for (t, d) in delta.into_iter().enumerate() {
+            let v = totals[t] as i64 + d;
+            debug_assert!(v >= 0, "topic total went negative");
+            totals[t] = v as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate_timestamped, Profile, TimeProfile};
+    use crate::partition::{partition, Algorithm};
+
+    fn tiny_tc(seed: u64) -> TimestampedCorpus {
+        let mut p = Profile::tiny();
+        p.time = Some(TimeProfile {
+            first_year: 2000,
+            last_year: 2009,
+            growth: 0.1,
+            stamps_per_doc: 4,
+        });
+        generate_timestamped(&p, seed)
+    }
+
+    fn setup(p: usize, seed: u64) -> (TimestampedCorpus, ParallelBot) {
+        let tc = tiny_tc(seed);
+        let plan_dw = partition(&tc.bow, p, Algorithm::A3 { restarts: 3 }, seed);
+        let plan_dts = partition(&tc.dts, p, Algorithm::A3 { restarts: 3 }, seed + 1);
+        let h = super::super::serial::BotHyper::new(
+            8,
+            0.5,
+            0.1,
+            0.1,
+            tc.bow.num_words(),
+            tc.num_stamps,
+        );
+        let bot = ParallelBot::init(&tc, &plan_dw, &plan_dts, h, seed);
+        (tc, bot)
+    }
+
+    #[test]
+    fn init_covers_both_matrices() {
+        let (tc, bot) = setup(3, 61);
+        assert_eq!(bot.counts.total(), tc.total_tokens());
+        assert!(bot
+            .counts
+            .check_consistency(&bot.word_blocks_flat(), &bot.stamp_blocks_flat())
+            .is_ok());
+    }
+
+    #[test]
+    fn sweep_preserves_invariants() {
+        let (tc, mut bot) = setup(3, 62);
+        for _ in 0..3 {
+            let (ws, ss) = bot.sweep(ExecMode::Sequential);
+            assert_eq!(ws.total_tokens, tc.bow.num_tokens());
+            assert_eq!(ss.total_tokens, tc.dts.num_tokens());
+        }
+        assert_eq!(bot.counts.total(), tc.total_tokens());
+        assert!(bot
+            .counts
+            .check_consistency(&bot.word_blocks_flat(), &bot.stamp_blocks_flat())
+            .is_ok());
+    }
+
+    #[test]
+    fn threaded_equals_sequential() {
+        let (_tc, mut a) = setup(4, 63);
+        let (_tc2, mut b) = setup(4, 63);
+        for _ in 0..2 {
+            a.sweep(ExecMode::Threaded);
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.stamp_topic, b.counts.stamp_topic);
+    }
+
+    #[test]
+    fn parallel_bot_close_to_serial_bot() {
+        // Table IV in miniature: perplexities approximately equal.
+        let (tc, mut par) = setup(4, 64);
+        let h = par.h;
+        let mut ser = super::super::serial::SerialBot::init(&tc, h, 64);
+        par.train(&tc, 30, 0, ExecMode::Sequential);
+        ser.train(&tc, 30, 0);
+        let pp = par.perplexity(&tc);
+        let ps = ser.perplexity(&tc);
+        let rel = (pp - ps).abs() / ps;
+        assert!(rel < 0.05, "parallel {pp} vs serial {ps} (rel {rel})");
+    }
+}

@@ -1,0 +1,223 @@
+//! Serial (nonparallel) BoT trainer — the "Nonparallel" column of the
+//! paper's Table IV.
+
+use crate::corpus::timestamps::TimestampedCorpus;
+use crate::bot::counts::BotCounts;
+use crate::gibbs::sampler::{draw, Hyper};
+use crate::gibbs::tokens::TokenBlock;
+use crate::util::rng::Rng;
+
+/// BoT hyperparameters (paper §V-C: α=0.5, β=0.1, γ=0.1, K=256, L=16).
+#[derive(Clone, Copy, Debug)]
+pub struct BotHyper {
+    pub k: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    pub gamma: f32,
+    /// `W·β`.
+    pub wbeta: f32,
+    /// `S·γ` (S = number of distinct timestamps).
+    pub sgamma: f32,
+}
+
+impl BotHyper {
+    pub fn new(
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        gamma: f32,
+        num_words: usize,
+        num_stamps: usize,
+    ) -> Self {
+        Self {
+            k,
+            alpha,
+            beta,
+            gamma,
+            wbeta: beta * num_words as f32,
+            sgamma: gamma * num_stamps as f32,
+        }
+    }
+
+    /// The word-phase parameters as a plain LDA [`Hyper`].
+    pub fn word_hyper(&self) -> Hyper {
+        Hyper {
+            k: self.k,
+            alpha: self.alpha,
+            beta: self.beta,
+            wbeta: self.wbeta,
+        }
+    }
+
+    /// The timestamp-phase parameters as a plain LDA [`Hyper`] (γ in
+    /// place of β, S in place of W).
+    pub fn stamp_hyper(&self) -> Hyper {
+        Hyper {
+            k: self.k,
+            alpha: self.alpha,
+            beta: self.gamma,
+            wbeta: self.sgamma,
+        }
+    }
+}
+
+pub struct SerialBot {
+    pub h: BotHyper,
+    pub counts: BotCounts,
+    pub words: TokenBlock,
+    pub stamps: TokenBlock,
+    rng: Rng,
+    probs: Vec<f32>,
+}
+
+impl SerialBot {
+    pub fn init(tc: &TimestampedCorpus, h: BotHyper, seed: u64) -> Self {
+        let mut rng = Rng::stream(seed, 0xB07);
+        let words = TokenBlock::from_corpus(&tc.bow, h.k, &mut rng);
+        let stamps = TokenBlock::from_corpus(&tc.dts, h.k, &mut rng);
+        let mut counts = BotCounts::zeros(
+            tc.bow.num_docs(),
+            tc.bow.num_words(),
+            tc.num_stamps,
+            h.k,
+        );
+        counts.absorb_words(&words);
+        counts.absorb_stamps(&stamps);
+        Self {
+            h,
+            counts,
+            words,
+            stamps,
+            rng,
+            probs: Vec::new(),
+        }
+    }
+
+    /// One full sweep: all word tokens, then all timestamp tokens.
+    pub fn sweep(&mut self) {
+        let k = self.h.k;
+        self.probs.resize(k, 0.0);
+
+        // Word phase.
+        for i in 0..self.words.len() {
+            let d = self.words.docs[i] as usize;
+            let w = self.words.words[i] as usize;
+            let old = self.words.z[i] as usize;
+            self.counts.doc_topic[d * k + old] -= 1.0;
+            self.counts.word_topic[w * k + old] -= 1.0;
+            self.counts.topic_words[old] -= 1;
+            let mut total = 0.0f32;
+            for t in 0..k {
+                let p = (self.counts.doc_topic[d * k + t] + self.h.alpha)
+                    * (self.counts.word_topic[w * k + t] + self.h.beta)
+                    / (self.counts.topic_words[t] as f32 + self.h.wbeta);
+                self.probs[t] = p;
+                total += p;
+            }
+            let new = draw(&self.probs, total, &mut self.rng);
+            self.counts.doc_topic[d * k + new] += 1.0;
+            self.counts.word_topic[w * k + new] += 1.0;
+            self.counts.topic_words[new] += 1;
+            self.words.z[i] = new as u32;
+        }
+
+        // Timestamp phase.
+        for i in 0..self.stamps.len() {
+            let d = self.stamps.docs[i] as usize;
+            let s = self.stamps.words[i] as usize;
+            let old = self.stamps.z[i] as usize;
+            self.counts.doc_topic[d * k + old] -= 1.0;
+            self.counts.stamp_topic[s * k + old] -= 1.0;
+            self.counts.topic_stamps[old] -= 1;
+            let mut total = 0.0f32;
+            for t in 0..k {
+                let p = (self.counts.doc_topic[d * k + t] + self.h.alpha)
+                    * (self.counts.stamp_topic[s * k + t] + self.h.gamma)
+                    / (self.counts.topic_stamps[t] as f32 + self.h.sgamma);
+                self.probs[t] = p;
+                total += p;
+            }
+            let new = draw(&self.probs, total, &mut self.rng);
+            self.counts.doc_topic[d * k + new] += 1.0;
+            self.counts.stamp_topic[s * k + new] += 1.0;
+            self.counts.topic_stamps[new] += 1;
+            self.stamps.z[i] = new as u32;
+        }
+    }
+
+    pub fn train(
+        &mut self,
+        tc: &TimestampedCorpus,
+        iters: usize,
+        eval_every: usize,
+    ) -> Vec<(usize, f64)> {
+        let mut curve = Vec::new();
+        for it in 1..=iters {
+            self.sweep();
+            if eval_every > 0 && (it % eval_every == 0 || it == iters) {
+                curve.push((it, self.perplexity(tc)));
+            }
+        }
+        curve
+    }
+
+    /// Word perplexity under BoT's θ (which includes timestamp mass in
+    /// `n_j`) and φ — the Table IV metric.
+    pub fn perplexity(&self, tc: &TimestampedCorpus) -> f64 {
+        super::perplexity_words(&tc.bow, &self.counts, &self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate_timestamped, Profile, TimeProfile};
+
+    fn tiny_tc(seed: u64) -> TimestampedCorpus {
+        let mut p = Profile::tiny();
+        p.time = Some(TimeProfile {
+            first_year: 2000,
+            last_year: 2009,
+            growth: 0.1,
+            stamps_per_doc: 4,
+        });
+        generate_timestamped(&p, seed)
+    }
+
+    #[test]
+    fn sweep_conserves_counts() {
+        let tc = tiny_tc(51);
+        let h = BotHyper::new(4, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+        let mut bot = SerialBot::init(&tc, h, 1);
+        let n = bot.counts.total();
+        for _ in 0..3 {
+            bot.sweep();
+        }
+        assert_eq!(bot.counts.total(), n);
+        assert!(bot
+            .counts
+            .check_consistency(&[&bot.words], &[&bot.stamps])
+            .is_ok());
+    }
+
+    #[test]
+    fn training_reduces_perplexity() {
+        let tc = tiny_tc(52);
+        let h = BotHyper::new(8, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+        let mut bot = SerialBot::init(&tc, h, 2);
+        let p0 = bot.perplexity(&tc);
+        bot.train(&tc, 30, 0);
+        let p1 = bot.perplexity(&tc);
+        assert!(p1 < p0 * 0.9, "{p0} → {p1}");
+    }
+
+    #[test]
+    fn hyper_views() {
+        let h = BotHyper::new(4, 0.5, 0.1, 0.2, 100, 10);
+        let wh = h.word_hyper();
+        assert_eq!(wh.wbeta, 10.0);
+        let sh = h.stamp_hyper();
+        assert_eq!(sh.beta, 0.2);
+        assert!((sh.wbeta - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,155 @@
+//! Topic-over-time analysis (the paper's §I contribution 3: "We
+//! demonstrate analysis of this dataset using the designed BoT
+//! parallelization").
+//!
+//! From a trained BoT model, `π_{s|k} = (n_ks + γ)/(n_k^TS + Sγ)` gives
+//! each topic's distribution over timestamps — "the presence of a topic
+//! in the time line" (paper §IV-C). This module extracts per-topic
+//! timelines, peak years, and a rising/falling trend classification.
+
+use crate::bot::counts::BotCounts;
+use crate::bot::serial::BotHyper;
+use crate::util::tsv::Table;
+
+/// One topic's presence over the timeline.
+#[derive(Clone, Debug)]
+pub struct TopicTimeline {
+    pub topic: usize,
+    /// `π_{s|k}` over timestamps, normalized.
+    pub pi: Vec<f64>,
+    /// Timestamp index with maximum presence.
+    pub peak: usize,
+    /// Linear-regression slope of presence over time (per timestamp
+    /// step); > 0 ⇒ rising topic.
+    pub slope: f64,
+    /// Total timestamp tokens assigned to the topic.
+    pub mass: u64,
+}
+
+/// Extract `π` timelines for all topics.
+pub fn timelines(counts: &BotCounts, h: &BotHyper) -> Vec<TopicTimeline> {
+    let k = h.k;
+    let s = counts.num_stamps;
+    (0..k)
+        .map(|t| {
+            let nk = counts.topic_stamps[t] as f64;
+            let denom = nk + h.sgamma as f64;
+            let pi: Vec<f64> = (0..s)
+                .map(|st| (counts.stamp_topic[st * k + t] as f64 + h.gamma as f64) / denom)
+                .collect();
+            let peak = pi
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            TopicTimeline {
+                topic: t,
+                slope: linear_slope(&pi),
+                peak,
+                mass: counts.topic_stamps[t] as u64,
+                pi,
+            }
+        })
+        .collect()
+}
+
+/// Least-squares slope of `y` against `0..n`.
+fn linear_slope(y: &[f64]) -> f64 {
+    let n = y.len() as f64;
+    if y.len() < 2 {
+        return 0.0;
+    }
+    let mean_x = (n - 1.0) / 2.0;
+    let mean_y: f64 = y.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &v) in y.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        num += dx * (v - mean_y);
+        den += dx * dx;
+    }
+    num / den
+}
+
+/// Render the strongest rising and falling topics as a report table.
+pub fn trend_table(tls: &[TopicTimeline], first_year: u32, top: usize) -> Table {
+    let mut sorted: Vec<&TopicTimeline> = tls.iter().collect();
+    sorted.sort_by(|a, b| b.slope.partial_cmp(&a.slope).unwrap());
+    let mut t = Table::new(["trend", "topic", "peak_year", "slope", "stamp_tokens"]);
+    for tl in sorted.iter().take(top) {
+        t.row([
+            "rising".to_string(),
+            tl.topic.to_string(),
+            (first_year + tl.peak as u32).to_string(),
+            format!("{:+.2e}", tl.slope),
+            tl.mass.to_string(),
+        ]);
+    }
+    for tl in sorted.iter().rev().take(top).rev() {
+        t.row([
+            "falling".to_string(),
+            tl.topic.to_string(),
+            (first_year + tl.peak as u32).to_string(),
+            format!("{:+.2e}", tl.slope),
+            tl.mass.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts_with_planted_trends() -> (BotCounts, BotHyper) {
+        // 2 topics, 10 stamps: topic 0 concentrated early, topic 1 late.
+        let k = 2;
+        let s = 10;
+        let mut c = BotCounts::zeros(1, 1, s, k);
+        for st in 0..s {
+            let early = ((s - st) * 10) as u32;
+            let late = (st * 10) as u32;
+            c.stamp_topic[st * k] = early as f32;
+            c.stamp_topic[st * k + 1] = late as f32;
+            c.topic_stamps[0] += early;
+            c.topic_stamps[1] += late;
+        }
+        (c, BotHyper::new(k, 0.5, 0.1, 0.1, 1, s))
+    }
+
+    #[test]
+    fn pi_normalizes() {
+        let (c, h) = counts_with_planted_trends();
+        for tl in timelines(&c, &h) {
+            let sum: f64 = tl.pi.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "pi sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn detects_rising_and_falling() {
+        let (c, h) = counts_with_planted_trends();
+        let tls = timelines(&c, &h);
+        assert!(tls[0].slope < 0.0, "topic 0 should fall");
+        assert!(tls[1].slope > 0.0, "topic 1 should rise");
+        assert_eq!(tls[0].peak, 0);
+        assert_eq!(tls[1].peak, 9);
+    }
+
+    #[test]
+    fn trend_table_lists_both_directions() {
+        let (c, h) = counts_with_planted_trends();
+        let tls = timelines(&c, &h);
+        let t = trend_table(&tls, 1951, 1);
+        assert_eq!(t.num_rows(), 2);
+        let s = t.to_aligned();
+        assert!(s.contains("rising") && s.contains("falling"));
+    }
+
+    #[test]
+    fn slope_of_constant_is_zero() {
+        assert_eq!(linear_slope(&[0.5, 0.5, 0.5]), 0.0);
+        assert_eq!(linear_slope(&[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! BoT training driver (paper §IV-C + Table IV): serial or parallel with
+//! independent DW/DTS partition plans.
+
+use std::time::Instant;
+
+use crate::bot::parallel::ParallelBot;
+use crate::bot::serial::{BotHyper, SerialBot};
+use crate::bot::timeline::{self, TopicTimeline};
+use crate::coordinator::config::TrainConfig;
+use crate::corpus::timestamps::TimestampedCorpus;
+use crate::partition::{self, Algorithm, Plan};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct BotTrainReport {
+    pub p: usize,
+    pub topics: usize,
+    pub iters: usize,
+    pub final_perplexity: f64,
+    /// η of the DW plan (1.0 for serial).
+    pub eta_dw: f64,
+    /// η of the DTS plan (1.0 for serial).
+    pub eta_dts: f64,
+    /// Combined speedup model over both phases: total tokens / combined
+    /// epoch cost.
+    pub speedup_model: f64,
+    pub train_secs: f64,
+    pub timelines: Vec<TopicTimeline>,
+}
+
+impl BotTrainReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("p", self.p)
+            .set("topics", self.topics)
+            .set("iters", self.iters)
+            .set("final_perplexity", self.final_perplexity)
+            .set("eta_dw", self.eta_dw)
+            .set("eta_dts", self.eta_dts)
+            .set("speedup_model", self.speedup_model)
+            .set("train_secs", self.train_secs);
+        j
+    }
+}
+
+/// Partition both matrices with `algo` and train parallel BoT (`p == 1`
+/// runs the serial reference).
+pub fn train_bot(
+    tc: &TimestampedCorpus,
+    p: usize,
+    algo: Algorithm,
+    cfg: &TrainConfig,
+) -> BotTrainReport {
+    let h = BotHyper::new(
+        cfg.topics,
+        cfg.alpha,
+        cfg.beta,
+        cfg.gamma,
+        tc.bow.num_words(),
+        tc.num_stamps,
+    );
+    let started = Instant::now();
+
+    if p == 1 {
+        let mut bot = SerialBot::init(tc, h, cfg.seed);
+        bot.train(tc, cfg.iters, 0);
+        let final_perplexity = bot.perplexity(tc);
+        return BotTrainReport {
+            p: 1,
+            topics: cfg.topics,
+            iters: cfg.iters,
+            final_perplexity,
+            eta_dw: 1.0,
+            eta_dts: 1.0,
+            speedup_model: 1.0,
+            train_secs: started.elapsed().as_secs_f64(),
+            timelines: timeline::timelines(&bot.counts, &h),
+        };
+    }
+
+    let plan_dw = partition::partition(&tc.bow, p, algo, cfg.seed);
+    let plan_dts = partition::partition(&tc.dts, p, algo, cfg.seed ^ 0xD75);
+    let speedup = combined_speedup(&plan_dw, &plan_dts);
+
+    let mut bot = ParallelBot::init(tc, &plan_dw, &plan_dts, h, cfg.seed);
+    bot.train(tc, cfg.iters, 0, cfg.mode);
+    let final_perplexity = bot.perplexity(tc);
+    BotTrainReport {
+        p,
+        topics: cfg.topics,
+        iters: cfg.iters,
+        final_perplexity,
+        eta_dw: plan_dw.eta,
+        eta_dts: plan_dts.eta,
+        speedup_model: speedup,
+        train_secs: started.elapsed().as_secs_f64(),
+        timelines: timeline::timelines(&bot.counts, &h),
+    }
+}
+
+/// Speedup of a BoT sweep: both phases contribute epoch costs; the serial
+/// cost is the total token count of both matrices.
+pub fn combined_speedup(plan_dw: &Plan, plan_dts: &Plan) -> f64 {
+    let serial = (plan_dw.costs.total() + plan_dts.costs.total()) as f64;
+    let parallel = (plan_dw.costs.sweep_cost() + plan_dts.costs.sweep_cost()) as f64;
+    serial / parallel.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate_timestamped, Profile, TimeProfile};
+
+    fn tiny_tc(seed: u64) -> TimestampedCorpus {
+        let mut p = Profile::tiny();
+        p.time = Some(TimeProfile {
+            first_year: 2000,
+            last_year: 2009,
+            growth: 0.1,
+            stamps_per_doc: 4,
+        });
+        generate_timestamped(&p, seed)
+    }
+
+    #[test]
+    fn serial_vs_parallel_table_iv_shape() {
+        let tc = tiny_tc(91);
+        let cfg = TrainConfig::quick(8, 20);
+        let serial = train_bot(&tc, 1, Algorithm::A1, &cfg);
+        let parallel = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+        let rel = (parallel.final_perplexity - serial.final_perplexity).abs()
+            / serial.final_perplexity;
+        assert!(
+            rel < 0.06,
+            "Table IV: serial {} vs parallel {}",
+            serial.final_perplexity,
+            parallel.final_perplexity
+        );
+        assert!(parallel.speedup_model > 1.0);
+        assert!(parallel.eta_dw > 0.0 && parallel.eta_dts > 0.0);
+        assert_eq!(parallel.timelines.len(), 8);
+    }
+
+    #[test]
+    fn report_serializes() {
+        let tc = tiny_tc(92);
+        let cfg = TrainConfig::quick(4, 3);
+        let r = train_bot(&tc, 2, Algorithm::A2, &cfg);
+        let s = r.to_json().to_string();
+        assert!(s.contains("eta_dw"));
+    }
+}

@@ -1,0 +1,79 @@
+//! Training configuration (paper §V-C defaults: K=256, α=0.5, β=0.1,
+//! γ=0.1, ≤200 burn-in iterations).
+
+use crate::scheduler::exec::ExecMode;
+
+/// Which sampler/perplexity implementation runs the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust collapsed Gibbs (exact, fastest on CPU).
+    Native,
+    /// AOT-compiled JAX/Pallas kernels via PJRT (batched; demonstrates
+    /// the three-layer bridge). Requires `make artifacts`.
+    Xla,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub topics: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    /// BoT timestamp prior.
+    pub gamma: f32,
+    pub iters: usize,
+    /// Evaluate perplexity every this many sweeps (0 = final only).
+    pub eval_every: usize,
+    pub seed: u64,
+    pub mode: ExecMode,
+    pub backend: Backend,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            topics: 256,
+            alpha: 0.5,
+            beta: 0.1,
+            gamma: 0.1,
+            iters: 200,
+            eval_every: 0,
+            seed: 42,
+            mode: ExecMode::Sequential,
+            backend: Backend::Native,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Small-scale config for tests and quick examples.
+    pub fn quick(topics: usize, iters: usize) -> Self {
+        Self {
+            topics,
+            iters,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.topics, 256);
+        assert_eq!(c.alpha, 0.5);
+        assert_eq!(c.beta, 0.1);
+        assert_eq!(c.gamma, 0.1);
+        assert_eq!(c.iters, 200);
+    }
+
+    #[test]
+    fn quick_overrides() {
+        let c = TrainConfig::quick(8, 10);
+        assert_eq!(c.topics, 8);
+        assert_eq!(c.iters, 10);
+        assert_eq!(c.alpha, 0.5);
+    }
+}

@@ -1,0 +1,16 @@
+//! Training drivers: corpus + plan + config → trained model + report.
+//!
+//! This is the layer the CLI, the examples and the benches call. It wires
+//! partitioning ([`crate::partition`]), the engines ([`crate::gibbs`],
+//! [`crate::scheduler`], [`crate::bot`]) and the optional XLA backend
+//! ([`crate::runtime`]) together and emits structured reports.
+
+pub mod bot_trainer;
+pub mod config;
+pub mod report;
+pub mod trainer;
+
+pub use bot_trainer::{train_bot, BotTrainReport};
+pub use config::{Backend, TrainConfig};
+pub use report::TrainReport;
+pub use trainer::train_lda;

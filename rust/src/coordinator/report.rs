@@ -1,0 +1,100 @@
+//! Structured training reports (JSON/TSV emitters for EXPERIMENTS.md).
+
+use crate::util::json::Json;
+use crate::util::tsv::Table;
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub algorithm: String,
+    pub backend: String,
+    pub p: usize,
+    pub topics: usize,
+    pub iters: usize,
+    /// (iteration, perplexity) curve.
+    pub curve: Vec<(usize, f64)>,
+    pub final_perplexity: f64,
+    /// Load-balancing ratio of the plan (1.0 for serial).
+    pub eta: f64,
+    /// η·P model speedup.
+    pub speedup_model: f64,
+    /// Total train wall seconds.
+    pub train_secs: f64,
+    /// Native serial-equivalent sampling throughput (tokens/sec over all
+    /// sampled tokens and wall time).
+    pub tokens_per_sec: f64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("algorithm", self.algorithm.as_str())
+            .set("backend", self.backend.as_str())
+            .set("p", self.p)
+            .set("topics", self.topics)
+            .set("iters", self.iters)
+            .set("final_perplexity", self.final_perplexity)
+            .set("eta", self.eta)
+            .set("speedup_model", self.speedup_model)
+            .set("train_secs", self.train_secs)
+            .set("tokens_per_sec", self.tokens_per_sec)
+            .set(
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|&(it, p)| {
+                            let mut o = Json::obj();
+                            o.set("iter", it).set("perplexity", p);
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    /// Perplexity curve as a two-column table.
+    pub fn curve_table(&self) -> Table {
+        let mut t = Table::new(["iter", "perplexity"]);
+        for &(it, p) in &self.curve {
+            t.row([it.to_string(), format!("{p:.4}")]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainReport {
+        TrainReport {
+            algorithm: "A3".into(),
+            backend: "native".into(),
+            p: 10,
+            topics: 64,
+            iters: 50,
+            curve: vec![(25, 700.0), (50, 600.5)],
+            final_perplexity: 600.5,
+            eta: 0.98,
+            speedup_model: 9.8,
+            train_secs: 1.25,
+            tokens_per_sec: 1e7,
+        }
+    }
+
+    #[test]
+    fn json_contains_key_fields() {
+        let s = sample().to_json().to_string();
+        assert!(s.contains("\"algorithm\":\"A3\""));
+        assert!(s.contains("\"eta\":0.98"));
+        assert!(s.contains("\"curve\":[{"));
+    }
+
+    #[test]
+    fn curve_table_rows() {
+        let t = sample().curve_table();
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.cell(1, 1), "600.5000");
+    }
+}

@@ -1,0 +1,146 @@
+//! LDA training driver: serial (`P == 1`) or partitioned-parallel, with
+//! native or XLA backends.
+
+use std::time::Instant;
+
+use crate::coordinator::config::{Backend, TrainConfig};
+use crate::coordinator::report::TrainReport;
+use crate::corpus::bow::BagOfWords;
+use crate::gibbs::serial::SerialLda;
+use crate::partition::Plan;
+use crate::runtime::executor::Artifacts;
+use crate::runtime::sampler_xla::{XlaPerplexity, XlaSampler};
+use crate::scheduler::exec::ParallelLda;
+use crate::util::rng::Rng;
+
+/// Train LDA on `bow` under `plan`. `plan.p == 1` runs the serial
+/// reference; `p > 1` the diagonal-epoch parallel engine. The XLA backend
+/// requires artifacts compiled for `(batch, cfg.topics)` and runs the
+/// batched serial-semantics sweep (it demonstrates the L3↔L1 bridge;
+/// partition-parallel execution uses the native kernel).
+pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainReport {
+    let started = Instant::now();
+    let (curve, final_perplexity) = match (cfg.backend, plan.p) {
+        (Backend::Native, 1) => {
+            let mut lda = SerialLda::init(bow, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
+            let mut curve = lda.train(bow, cfg.iters, cfg.eval_every);
+            let fin = lda.perplexity(bow);
+            if curve.is_empty() {
+                curve.push((cfg.iters, fin));
+            }
+            (curve, fin)
+        }
+        (Backend::Native, _) => {
+            let mut lda =
+                ParallelLda::init(bow, plan, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
+            let mut curve = lda.train(bow, cfg.iters, cfg.eval_every, cfg.mode);
+            let fin = lda.perplexity(bow);
+            if curve.is_empty() {
+                curve.push((cfg.iters, fin));
+            }
+            (curve, fin)
+        }
+        (Backend::Xla, _) => train_xla(bow, cfg),
+    };
+    let train_secs = started.elapsed().as_secs_f64();
+    let sampled_tokens = bow.num_tokens() as f64 * cfg.iters as f64;
+
+    TrainReport {
+        algorithm: plan.algorithm.to_string(),
+        backend: match cfg.backend {
+            Backend::Native => "native".into(),
+            Backend::Xla => "xla".into(),
+        },
+        p: plan.p,
+        topics: cfg.topics,
+        iters: cfg.iters,
+        curve,
+        final_perplexity,
+        eta: plan.eta,
+        speedup_model: plan.eta * plan.p as f64,
+        train_secs,
+        tokens_per_sec: sampled_tokens / train_secs.max(1e-12),
+    }
+}
+
+fn train_xla(bow: &BagOfWords, cfg: &TrainConfig) -> (Vec<(usize, f64)>, f64) {
+    let arts = Artifacts::discover(Artifacts::default_dir())
+        .expect("XLA backend requires `make artifacts`");
+    // Pick the first compiled batch size for this K.
+    let batch = arts
+        .variants("sampler")
+        .into_iter()
+        .find(|&(_, k)| k == cfg.topics)
+        .unwrap_or_else(|| {
+            panic!(
+                "no sampler artifact for K={}; available {:?}",
+                cfg.topics,
+                arts.variants("sampler")
+            )
+        })
+        .0;
+    let mut sampler = XlaSampler::new(arts.sampler(batch, cfg.topics).unwrap());
+    let mut perp = XlaPerplexity::new(arts.loglik(batch, cfg.topics).unwrap());
+
+    let mut rng = Rng::stream(cfg.seed, 0x1A);
+    let mut block =
+        crate::gibbs::tokens::TokenBlock::from_corpus(bow, cfg.topics, &mut rng);
+    let mut counts =
+        crate::gibbs::counts::LdaCounts::zeros(bow.num_docs(), bow.num_words(), cfg.topics);
+    counts.absorb(&block);
+    let h = crate::gibbs::sampler::Hyper::new(cfg.topics, cfg.alpha, cfg.beta, bow.num_words());
+
+    let mut curve = Vec::new();
+    for it in 1..=cfg.iters {
+        sampler
+            .sweep(&mut block, &mut counts, &h, &mut rng)
+            .expect("XLA sweep");
+        if cfg.eval_every > 0 && (it % cfg.eval_every == 0 || it == cfg.iters) {
+            curve.push((it, perp.perplexity(bow, &counts, &h).expect("XLA perplexity")));
+        }
+    }
+    let fin = perp.perplexity(bow, &counts, &h).expect("XLA perplexity");
+    if curve.is_empty() {
+        curve.push((cfg.iters, fin));
+    }
+    (curve, fin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::partition::{partition, Algorithm};
+
+    #[test]
+    fn serial_and_parallel_reports() {
+        let bow = generate(&Profile::tiny(), 81);
+        let cfg = TrainConfig::quick(8, 15);
+
+        let serial_plan = partition(&bow, 1, Algorithm::A1, 81);
+        let rs = train_lda(&bow, &serial_plan, &cfg);
+        assert_eq!(rs.p, 1);
+        assert!((rs.eta - 1.0).abs() < 1e-12);
+
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 81);
+        let rp = train_lda(&bow, &plan, &cfg);
+        assert_eq!(rp.p, 4);
+        assert!(rp.speedup_model <= 4.0);
+        // Perplexities comparable (Table IV behaviour).
+        let rel = (rp.final_perplexity - rs.final_perplexity).abs() / rs.final_perplexity;
+        assert!(rel < 0.1, "serial {} vs parallel {}", rs.final_perplexity, rp.final_perplexity);
+        assert!(rp.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn curve_is_recorded() {
+        let bow = generate(&Profile::tiny(), 82);
+        let plan = partition(&bow, 2, Algorithm::A2, 82);
+        let mut cfg = TrainConfig::quick(4, 10);
+        cfg.eval_every = 5;
+        let r = train_lda(&bow, &plan, &cfg);
+        assert_eq!(r.curve.len(), 2);
+        assert_eq!(r.curve[0].0, 5);
+        assert_eq!(r.curve[1].0, 10);
+    }
+}

@@ -1,0 +1,213 @@
+//! Sparse bag-of-words matrix in CSR-over-documents form.
+//!
+//! This is the document–word count matrix `R = (r_jw)` of the paper's
+//! §III-B: `entry(j, w) = r_jw`, row workloads `RR_j = Σ_w r_jw` (document
+//! lengths in tokens) and column workloads `CR_w = Σ_j r_jw` (corpus-wide
+//! word frequencies). The same structure doubles as the document–timestamp
+//! matrix `R'` for BoT, with timestamps in place of words.
+
+/// One (word, count) cell of a document row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub word: u32,
+    pub count: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct BagOfWords {
+    num_words: usize,
+    /// CSR row pointers, length `num_docs + 1`.
+    doc_offsets: Vec<usize>,
+    /// Entries of all rows, each row sorted by word id, counts > 0.
+    entries: Vec<Entry>,
+    /// Column workloads `CR_w` (token count of word w across the corpus).
+    col_sums: Vec<u64>,
+    /// Row workloads `RR_j` (token length of document j).
+    row_sums: Vec<u64>,
+    /// Total token count `N`.
+    num_tokens: u64,
+}
+
+impl BagOfWords {
+    /// Build from (doc, word, count) triplets. Triplets may repeat
+    /// (counts are summed) and arrive in any order. Zero counts are
+    /// dropped.
+    pub fn from_triplets(
+        num_docs: usize,
+        num_words: usize,
+        triplets: impl IntoIterator<Item = (u32, u32, u32)>,
+    ) -> Self {
+        let mut rows: Vec<Vec<Entry>> = vec![Vec::new(); num_docs];
+        for (d, w, c) in triplets {
+            assert!((d as usize) < num_docs, "doc id {d} out of range");
+            assert!((w as usize) < num_words, "word id {w} out of range");
+            if c > 0 {
+                rows[d as usize].push(Entry { word: w, count: c });
+            }
+        }
+        Self::from_rows(num_words, rows)
+    }
+
+    /// Build from per-document entry lists (any order within a row;
+    /// duplicates summed).
+    pub fn from_rows(num_words: usize, mut rows: Vec<Vec<Entry>>) -> Self {
+        let mut doc_offsets = Vec::with_capacity(rows.len() + 1);
+        let mut entries = Vec::new();
+        let mut col_sums = vec![0u64; num_words];
+        let mut row_sums = Vec::with_capacity(rows.len());
+        let mut num_tokens = 0u64;
+
+        doc_offsets.push(0);
+        for row in &mut rows {
+            row.sort_unstable_by_key(|e| e.word);
+            let mut row_sum = 0u64;
+            let mut i = 0;
+            while i < row.len() {
+                let word = row[i].word;
+                let mut count = 0u64;
+                while i < row.len() && row[i].word == word {
+                    count += row[i].count as u64;
+                    i += 1;
+                }
+                if count > 0 {
+                    entries.push(Entry {
+                        word,
+                        count: u32::try_from(count).expect("cell count overflows u32"),
+                    });
+                    col_sums[word as usize] += count;
+                    row_sum += count;
+                }
+            }
+            row_sums.push(row_sum);
+            num_tokens += row_sum;
+            doc_offsets.push(entries.len());
+        }
+
+        Self {
+            num_words,
+            doc_offsets,
+            entries,
+            col_sums,
+            row_sums,
+            num_tokens,
+        }
+    }
+
+    #[inline]
+    pub fn num_docs(&self) -> usize {
+        self.doc_offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.num_words
+    }
+
+    #[inline]
+    pub fn num_tokens(&self) -> u64 {
+        self.num_tokens
+    }
+
+    /// Number of nonzero cells.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Entries of document `j`, sorted by word id.
+    #[inline]
+    pub fn doc(&self, j: usize) -> &[Entry] {
+        &self.entries[self.doc_offsets[j]..self.doc_offsets[j + 1]]
+    }
+
+    /// Row workload `RR_j` — token length of document j.
+    #[inline]
+    pub fn row_sum(&self, j: usize) -> u64 {
+        self.row_sums[j]
+    }
+
+    /// Column workload `CR_w` — corpus frequency of word w.
+    #[inline]
+    pub fn col_sum(&self, w: usize) -> u64 {
+        self.col_sums[w]
+    }
+
+    pub fn row_sums(&self) -> &[u64] {
+        &self.row_sums
+    }
+
+    pub fn col_sums(&self) -> &[u64] {
+        &self.col_sums
+    }
+
+    /// Number of words with nonzero corpus frequency.
+    pub fn vocab_used(&self) -> usize {
+        self.col_sums.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Expand document `j` into a token list (word repeated `count`
+    /// times) — the unit the Gibbs sampler walks.
+    pub fn doc_tokens(&self, j: usize) -> impl Iterator<Item = u32> + '_ {
+        self.doc(j)
+            .iter()
+            .flat_map(|e| std::iter::repeat(e.word).take(e.count as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BagOfWords {
+        // doc0: w0×2, w2×1; doc1: empty; doc2: w1×3
+        BagOfWords::from_triplets(3, 4, [(0, 0, 2), (0, 2, 1), (2, 1, 3)])
+    }
+
+    #[test]
+    fn shape_and_sums() {
+        let b = sample();
+        assert_eq!(b.num_docs(), 3);
+        assert_eq!(b.num_words(), 4);
+        assert_eq!(b.num_tokens(), 6);
+        assert_eq!(b.nnz(), 3);
+        assert_eq!(b.row_sums(), &[3, 0, 3]);
+        assert_eq!(b.col_sums(), &[2, 3, 1, 0]);
+        assert_eq!(b.vocab_used(), 3);
+    }
+
+    #[test]
+    fn rows_sorted_and_deduped() {
+        let b = BagOfWords::from_triplets(1, 5, [(0, 3, 1), (0, 1, 2), (0, 3, 4)]);
+        let row = b.doc(0);
+        assert_eq!(row.len(), 2);
+        assert_eq!(row[0], Entry { word: 1, count: 2 });
+        assert_eq!(row[1], Entry { word: 3, count: 5 });
+    }
+
+    #[test]
+    fn zero_counts_dropped() {
+        let b = BagOfWords::from_triplets(1, 2, [(0, 0, 0), (0, 1, 1)]);
+        assert_eq!(b.nnz(), 1);
+        assert_eq!(b.num_tokens(), 1);
+    }
+
+    #[test]
+    fn empty_doc_ok() {
+        let b = sample();
+        assert!(b.doc(1).is_empty());
+        assert_eq!(b.row_sum(1), 0);
+    }
+
+    #[test]
+    fn doc_tokens_expand_counts() {
+        let b = sample();
+        let toks: Vec<u32> = b.doc_tokens(0).collect();
+        assert_eq!(toks, vec![0, 0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_word_panics() {
+        BagOfWords::from_triplets(1, 2, [(0, 5, 1)]);
+    }
+}

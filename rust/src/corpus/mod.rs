@@ -1,0 +1,20 @@
+//! Corpus substrate: sparse bag-of-words storage, loaders, synthetic
+//! generators, and the timestamped-corpus extension used by Bag of
+//! Timestamps.
+//!
+//! The paper evaluates on NIPS, NYTimes (UCI bag-of-words) and a
+//! 1.18M-document Microsoft Academic Search crawl. None of those ship with
+//! this repo, so [`synthetic`] provides generators whose *marginals* match
+//! Table I (document counts, vocabulary sizes, token counts, Zipf word
+//! frequencies, document-length skew, publication-year growth curve) — the
+//! properties that determine partitioning difficulty. [`uci`] loads the
+//! real UCI `docword.*.txt` files unchanged when available.
+
+pub mod bow;
+pub mod stats;
+pub mod synthetic;
+pub mod timestamps;
+pub mod uci;
+
+pub use bow::{BagOfWords, Entry};
+pub use timestamps::TimestampedCorpus;

@@ -1,0 +1,112 @@
+//! Corpus statistics — reproduces the rows of the paper's Table I and adds
+//! the skew measures that drive partitioning difficulty.
+
+use crate::corpus::bow::BagOfWords;
+use crate::corpus::timestamps::TimestampedCorpus;
+use crate::util::stats::gini;
+use crate::util::tsv::Table;
+
+#[derive(Clone, Debug)]
+pub struct CorpusStats {
+    pub name: String,
+    pub docs: usize,
+    /// Vocabulary size (matrix width W).
+    pub words: usize,
+    /// Words with nonzero corpus frequency.
+    pub words_used: usize,
+    /// Token count N.
+    pub tokens: u64,
+    pub nnz: usize,
+    pub mean_doc_len: f64,
+    pub row_gini: f64,
+    pub col_gini: f64,
+    /// Timestamp columns (BoT corpora only).
+    pub stamps: Option<usize>,
+    pub stamp_tokens: Option<u64>,
+}
+
+impl CorpusStats {
+    pub fn of(name: &str, bow: &BagOfWords) -> Self {
+        let rows: Vec<f64> = bow.row_sums().iter().map(|&x| x as f64).collect();
+        let cols: Vec<f64> = bow.col_sums().iter().map(|&x| x as f64).collect();
+        Self {
+            name: name.to_string(),
+            docs: bow.num_docs(),
+            words: bow.num_words(),
+            words_used: bow.vocab_used(),
+            tokens: bow.num_tokens(),
+            nnz: bow.nnz(),
+            mean_doc_len: bow.num_tokens() as f64 / bow.num_docs().max(1) as f64,
+            row_gini: gini(&rows),
+            col_gini: gini(&cols),
+            stamps: None,
+            stamp_tokens: None,
+        }
+    }
+
+    pub fn of_timestamped(name: &str, tc: &TimestampedCorpus) -> Self {
+        let mut s = Self::of(name, &tc.bow);
+        s.stamps = Some(tc.num_stamps);
+        s.stamp_tokens = Some(tc.dts.num_tokens());
+        s
+    }
+}
+
+/// Render a Table-I-style table for a set of corpora.
+pub fn table_i(stats: &[CorpusStats]) -> Table {
+    let mut header = vec!["Dataset".to_string()];
+    header.extend(stats.iter().map(|s| s.name.clone()));
+    let mut t = Table::new(header);
+
+    let row = |label: &str, f: &dyn Fn(&CorpusStats) -> String| {
+        let mut cells = vec![label.to_string()];
+        cells.extend(stats.iter().map(|s| f(s)));
+        cells
+    };
+    t.row(row("Documents, D", &|s| s.docs.to_string()));
+    t.row(row("Unique words, W", &|s| s.words.to_string()));
+    t.row(row("Words used", &|s| s.words_used.to_string()));
+    t.row(row("Word instances, N", &|s| s.tokens.to_string()));
+    t.row(row("Nonzero cells", &|s| s.nnz.to_string()));
+    t.row(row("Mean doc length", &|s| format!("{:.1}", s.mean_doc_len)));
+    t.row(row("Row gini", &|s| format!("{:.3}", s.row_gini)));
+    t.row(row("Col gini", &|s| format!("{:.3}", s.col_gini)));
+    t.row(row("Unique timestamps", &|s| {
+        s.stamps.map(|v| v.to_string()).unwrap_or_else(|| "N/A".into())
+    }));
+    t.row(row("Timestamp tokens", &|s| {
+        s.stamp_tokens
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| "N/A".into())
+    }));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::bow::BagOfWords;
+
+    #[test]
+    fn stats_basic() {
+        let b = BagOfWords::from_triplets(2, 3, [(0, 0, 4), (1, 1, 2)]);
+        let s = CorpusStats::of("t", &b);
+        assert_eq!(s.docs, 2);
+        assert_eq!(s.words, 3);
+        assert_eq!(s.words_used, 2);
+        assert_eq!(s.tokens, 6);
+        assert_eq!(s.nnz, 2);
+        assert!((s.mean_doc_len - 3.0).abs() < 1e-12);
+        assert!(s.stamps.is_none());
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let b = BagOfWords::from_triplets(2, 3, [(0, 0, 4), (1, 1, 2)]);
+        let t = table_i(&[CorpusStats::of("x", &b)]);
+        assert_eq!(t.num_rows(), 10);
+        let s = t.to_aligned();
+        assert!(s.contains("Documents, D"));
+        assert!(s.contains("N/A"));
+    }
+}

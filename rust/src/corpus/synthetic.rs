@@ -1,0 +1,352 @@
+//! Synthetic corpus generation with marginals matched to the paper's
+//! datasets (Table I).
+//!
+//! Generation follows the LDA generative process itself — per-topic word
+//! distributions with a Zipf base measure, per-document topic mixtures,
+//! lognormal document lengths — because the *difficulty* of the paper's
+//! load-balancing problem is exactly the skew of the row workloads
+//! (document lengths) and column workloads (word frequencies) of `R`.
+//! Matching those marginals reproduces the experimental conditions of
+//! Tables II/III without the original UCI files; dropping the real files
+//! in via [`crate::corpus::uci`] requires no other change.
+
+use crate::corpus::bow::{BagOfWords, Entry};
+use crate::corpus::timestamps::{self, TimestampedCorpus};
+use crate::util::alias::AliasTable;
+use crate::util::rng::Rng;
+
+/// Generator configuration. `Profile` constructors encode the paper's
+/// datasets; all knobs are public for custom corpora.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: String,
+    pub num_docs: usize,
+    pub vocab: usize,
+    /// Target total token count N (matched in expectation).
+    pub num_tokens: u64,
+    /// Latent topic count of the *generator* (not the trained model).
+    pub gen_topics: usize,
+    /// Dirichlet concentration of per-document topic mixtures.
+    pub doc_alpha: f64,
+    /// Zipf exponent of the vocabulary base measure (~1 for natural text).
+    pub zipf_s: f64,
+    /// Zipf rank shift: models stop-word removal (the paper's datasets
+    /// have stop words removed), flattening the head so the top word
+    /// carries ≈0.5–1% of tokens instead of ≈10%.
+    pub zipf_shift: f64,
+    /// Topic-word Dirichlet concentration multiplier (smaller = spikier
+    /// topics).
+    pub topic_conc: f64,
+    /// Lognormal sigma of document lengths (0 = all equal).
+    pub len_sigma: f64,
+    /// Timestamp configuration; `None` for plain LDA corpora.
+    pub time: Option<TimeProfile>,
+}
+
+/// Publication-year model for BoT corpora (paper's MAS dataset).
+#[derive(Clone, Debug)]
+pub struct TimeProfile {
+    pub first_year: u32,
+    pub last_year: u32,
+    /// Exponential growth rate of documents per year (CS publication
+    /// volume roughly doubles every ~9 years → g ≈ 0.08).
+    pub growth: f64,
+    /// Timestamp array length L per document (paper §V-C: L = 16).
+    pub stamps_per_doc: usize,
+}
+
+impl Profile {
+    /// NIPS (Table I): D=1500, W=12419, N=1,932,365.
+    pub fn nips_like() -> Self {
+        Self {
+            name: "nips-like".into(),
+            num_docs: 1500,
+            vocab: 12_419,
+            num_tokens: 1_932_365,
+            gen_topics: 32,
+            doc_alpha: 0.2,
+            zipf_s: 1.05,
+            zipf_shift: 25.0,
+            topic_conc: 0.05,
+            len_sigma: 0.55,
+            time: None,
+        }
+    }
+
+    /// NYTimes (Table I): D=300,000, W=102,660, N=99,542,125.
+    pub fn nytimes_like() -> Self {
+        Self {
+            name: "nytimes-like".into(),
+            num_docs: 300_000,
+            vocab: 102_660,
+            num_tokens: 99_542_125,
+            gen_topics: 64,
+            doc_alpha: 0.15,
+            zipf_s: 1.05,
+            zipf_shift: 30.0,
+            topic_conc: 0.02,
+            len_sigma: 0.45,
+            time: None,
+        }
+    }
+
+    /// MAS (Table I): D=1,182,744, W=402,252 (stemmed), N=92,531,014,
+    /// years 1951–2010 (WTS=60), L=16.
+    pub fn mas_like() -> Self {
+        Self {
+            name: "mas-like".into(),
+            num_docs: 1_182_744,
+            vocab: 402_252,
+            num_tokens: 92_531_014,
+            gen_topics: 64,
+            doc_alpha: 0.15,
+            zipf_s: 1.08,
+            zipf_shift: 30.0,
+            topic_conc: 0.02,
+            len_sigma: 0.35, // title+abstract lengths vary less than articles
+            time: Some(TimeProfile {
+                first_year: 1951,
+                last_year: 2010,
+                growth: 0.08,
+                stamps_per_doc: 16,
+            }),
+        }
+    }
+
+    /// Tiny corpus for unit tests and doc examples.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            num_docs: 60,
+            vocab: 200,
+            num_tokens: 6_000,
+            gen_topics: 4,
+            doc_alpha: 0.3,
+            zipf_s: 1.0,
+            zipf_shift: 5.0,
+            topic_conc: 0.1,
+            len_sigma: 0.5,
+            time: None,
+        }
+    }
+
+    /// Divide document and token counts by `factor` (vocabulary is kept —
+    /// subsampled corpora retain most of their vocabulary, and zero-mass
+    /// columns stress the partitioners the way rare words do). Vocab is
+    /// capped at N/4 to keep the matrix meaningfully dense.
+    pub fn scaled(mut self, factor: usize) -> Self {
+        assert!(factor >= 1);
+        if factor == 1 {
+            return self;
+        }
+        self.name = format!("{}/{}", self.name, factor);
+        self.num_docs = (self.num_docs / factor).max(1);
+        self.num_tokens = (self.num_tokens / factor as u64).max(1);
+        self.vocab = self.vocab.min((self.num_tokens / 4).max(16) as usize);
+        self
+    }
+
+    fn mean_doc_len(&self) -> f64 {
+        self.num_tokens as f64 / self.num_docs as f64
+    }
+}
+
+/// Generate a plain bag-of-words corpus from a profile.
+pub fn generate(profile: &Profile, seed: u64) -> BagOfWords {
+    let mut rng = Rng::stream(seed, 0xC0FFEE);
+    let topics = build_topic_tables(profile, &mut rng);
+
+    let k = profile.gen_topics;
+    let mut theta = vec![0.0f64; k];
+    let mut rows: Vec<Vec<Entry>> = Vec::with_capacity(profile.num_docs);
+    let mut scratch: Vec<u32> = Vec::new();
+
+    // Lognormal length with mean matched to N/D:
+    // E[lognormal(mu, sigma)] = exp(mu + sigma^2/2)  ⇒  mu = ln(mean) - s²/2.
+    let sigma = profile.len_sigma;
+    let mu = profile.mean_doc_len().max(1.0).ln() - sigma * sigma / 2.0;
+
+    for _ in 0..profile.num_docs {
+        rng.dirichlet_sym(profile.doc_alpha, &mut theta);
+        let len = (mu + sigma * rng.normal()).exp().round().max(1.0) as usize;
+
+        scratch.clear();
+        for _ in 0..len {
+            // Cat(theta) by linear CDF walk: K is small (≤64) and theta
+            // changes per document, so alias construction wouldn't pay.
+            let topic = rng.categorical(&theta);
+            let word = topics[topic].sample(&mut rng) as u32;
+            scratch.push(word);
+        }
+        scratch.sort_unstable();
+        let mut row: Vec<Entry> = Vec::new();
+        let mut i = 0;
+        while i < scratch.len() {
+            let w = scratch[i];
+            let mut c = 0u32;
+            while i < scratch.len() && scratch[i] == w {
+                c += 1;
+                i += 1;
+            }
+            row.push(Entry { word: w, count: c });
+        }
+        rows.push(row);
+    }
+
+    BagOfWords::from_rows(profile.vocab, rows)
+}
+
+/// Generate a timestamped corpus (BoT experiments). Panics if the profile
+/// carries no [`TimeProfile`].
+pub fn generate_timestamped(profile: &Profile, seed: u64) -> TimestampedCorpus {
+    let time = profile
+        .time
+        .clone()
+        .unwrap_or_else(|| panic!("profile {:?} has no time model", profile.name));
+    let bow = generate(profile, seed);
+    let mut rng = Rng::stream(seed, 0x7E4A);
+
+    let num_years = (time.last_year - time.first_year + 1) as usize;
+    // Documents-per-year follows the exponential growth curve.
+    let year_weights: Vec<f64> = (0..num_years)
+        .map(|y| (time.growth * y as f64).exp())
+        .collect();
+    let year_table = AliasTable::new(&year_weights);
+
+    let years: Vec<u32> = (0..bow.num_docs())
+        .map(|_| year_table.sample(&mut rng) as u32)
+        .collect();
+
+    timestamps::attach(bow, years, num_years, time.stamps_per_doc, &mut rng)
+}
+
+fn build_topic_tables(profile: &Profile, rng: &mut Rng) -> Vec<AliasTable> {
+    // Base measure: shifted Zipf over a randomly permuted vocabulary (so
+    // topic supports overlap on frequent words, as in natural text). The
+    // shift flattens the head the way stop-word removal does in the
+    // paper's preprocessed datasets.
+    let w = profile.vocab;
+    let mut rank: Vec<u32> = (0..w as u32).collect();
+    rng.shuffle(&mut rank);
+    let base: Vec<f64> = {
+        let mut b = vec![0.0; w];
+        for (r, &word) in rank.iter().enumerate() {
+            b[word as usize] =
+                1.0 / ((r + 1) as f64 + profile.zipf_shift).powf(profile.zipf_s);
+        }
+        b
+    };
+
+    (0..profile.gen_topics)
+        .map(|_| {
+            // phi_k ~ Dirichlet(conc·W·base): standard gamma-normalize
+            // construction (normalization is implicit in AliasTable). The
+            // expectation of phi_k is the Zipf base measure; small
+            // concentrations make individual topics spiky around it.
+            let weights: Vec<f64> = base
+                .iter()
+                .map(|&b| {
+                    let shape = (profile.topic_conc * b * w as f64).max(1e-4);
+                    rng.gamma(shape).max(1e-300)
+                })
+                .collect();
+            AliasTable::new(&weights)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::gini;
+
+    #[test]
+    fn tiny_matches_targets_in_expectation() {
+        let p = Profile::tiny();
+        let bow = generate(&p, 1);
+        assert_eq!(bow.num_docs(), p.num_docs);
+        assert_eq!(bow.num_words(), p.vocab);
+        let n = bow.num_tokens() as f64;
+        let target = p.num_tokens as f64;
+        assert!(
+            (n - target).abs() / target < 0.30,
+            "tokens {n} vs target {target}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = Profile::tiny();
+        let a = generate(&p, 9);
+        let b = generate(&p, 9);
+        assert_eq!(a.num_tokens(), b.num_tokens());
+        assert_eq!(a.doc(0), b.doc(0));
+        let c = generate(&p, 10);
+        assert_ne!(a.num_tokens(), c.num_tokens());
+    }
+
+    #[test]
+    fn word_marginal_is_heavy_tailed() {
+        let p = Profile::nips_like().scaled(20);
+        let bow = generate(&p, 5);
+        let cols: Vec<f64> = bow.col_sums().iter().map(|&c| c as f64).collect();
+        let g = gini(&cols);
+        // Natural-text word frequencies have Gini well above 0.6.
+        assert!(g > 0.6, "column gini {g}");
+    }
+
+    #[test]
+    fn doc_lengths_are_skewed() {
+        let p = Profile::nips_like().scaled(20);
+        let bow = generate(&p, 5);
+        let rows: Vec<f64> = bow.row_sums().iter().map(|&c| c as f64).collect();
+        let g = gini(&rows);
+        assert!(g > 0.15, "row gini {g}"); // lognormal sigma .55 ⇒ gini ≈ .3
+    }
+
+    #[test]
+    fn scaled_profile_shrinks() {
+        let p = Profile::nytimes_like().scaled(100);
+        assert_eq!(p.num_docs, 3000);
+        assert!(p.vocab <= 102_660);
+        assert_eq!(p.num_tokens, 995_421);
+    }
+
+    #[test]
+    fn timestamped_corpus_shapes() {
+        let mut p = Profile::tiny();
+        p.time = Some(TimeProfile {
+            first_year: 2000,
+            last_year: 2009,
+            growth: 0.1,
+            stamps_per_doc: 4,
+        });
+        let tc = generate_timestamped(&p, 2);
+        assert_eq!(tc.bow.num_docs(), p.num_docs);
+        assert_eq!(tc.num_stamps, 10);
+        assert_eq!(tc.dts.num_docs(), p.num_docs);
+        assert_eq!(tc.dts.num_words(), 10);
+        // Every doc carries exactly L timestamp tokens.
+        assert!(tc.dts.row_sums().iter().all(|&r| r == 4));
+    }
+
+    #[test]
+    fn growth_curve_skews_years() {
+        let mut p = Profile::tiny();
+        p.num_docs = 2000;
+        p.time = Some(TimeProfile {
+            first_year: 1951,
+            last_year: 2010,
+            growth: 0.08,
+            stamps_per_doc: 2,
+        });
+        let tc = generate_timestamped(&p, 3);
+        // Last decade must hold far more documents than the first.
+        let first_decade: u64 = (0..10).map(|y| tc.dts.col_sum(y)).sum();
+        let last_decade: u64 = (50..60).map(|y| tc.dts.col_sum(y)).sum();
+        assert!(
+            last_decade > 10 * first_decade.max(1),
+            "first={first_decade} last={last_decade}"
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Timestamped corpora for Bag of Timestamps (paper §IV-C).
+//!
+//! BoT attaches to each document `j` a timestamp array `TS_j` of length
+//! `L` whose entries are treated like words drawn from the document's
+//! topic mixture. The document–timestamp matrix `DTS` therefore gets its
+//! own workload matrix `R'` (rows = documents, columns = timestamps) and
+//! is partitioned with exactly the same algorithms as `DW`.
+
+use crate::corpus::bow::{BagOfWords, Entry};
+use crate::util::rng::Rng;
+
+/// A corpus plus its timestamp side: `bow` is the DW source matrix,
+/// `dts` the document–timestamp matrix R' (one row per document,
+/// `num_stamps` columns).
+#[derive(Clone, Debug)]
+pub struct TimestampedCorpus {
+    pub bow: BagOfWords,
+    /// Document–timestamp counts R' (each row sums to L).
+    pub dts: BagOfWords,
+    /// Year index (0-based from first year) per document.
+    pub doc_year: Vec<u32>,
+    pub num_stamps: usize,
+}
+
+/// Attach a timestamp side to a corpus: each document gets `l` timestamp
+/// tokens centred on its year with ±1 jitter (clipped), modelling the
+/// citation-era smearing Masada et al. use.
+pub fn attach(
+    bow: BagOfWords,
+    doc_year: Vec<u32>,
+    num_stamps: usize,
+    l: usize,
+    rng: &mut Rng,
+) -> TimestampedCorpus {
+    assert_eq!(doc_year.len(), bow.num_docs());
+    assert!(num_stamps > 0 && l > 0);
+
+    let rows: Vec<Vec<Entry>> = doc_year
+        .iter()
+        .map(|&year| {
+            let mut counts = [0u32; 3]; // year-1, year, year+1
+            for _ in 0..l {
+                let r = rng.f64();
+                // 70% exact year, 15% either neighbour.
+                let off = if r < 0.70 {
+                    1
+                } else if r < 0.85 {
+                    0
+                } else {
+                    2
+                };
+                let stamp = (year as i64 + off as i64 - 1)
+                    .clamp(0, num_stamps as i64 - 1) as usize;
+                counts[(stamp as i64 - year as i64 + 1).clamp(0, 2) as usize] += 1;
+                let _ = stamp;
+            }
+            let mut row = Vec::new();
+            for (i, &c) in counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let stamp =
+                    (year as i64 + i as i64 - 1).clamp(0, num_stamps as i64 - 1) as u32;
+                row.push(Entry {
+                    word: stamp,
+                    count: c,
+                });
+            }
+            row
+        })
+        .collect();
+
+    let dts = BagOfWords::from_rows(num_stamps, rows);
+    TimestampedCorpus {
+        bow,
+        dts,
+        doc_year,
+        num_stamps,
+    }
+}
+
+impl TimestampedCorpus {
+    /// Total sampled tokens per sweep: words + timestamps.
+    pub fn total_tokens(&self) -> u64 {
+        self.bow.num_tokens() + self.dts.num_tokens()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::bow::BagOfWords;
+
+    fn tiny_bow(docs: usize) -> BagOfWords {
+        BagOfWords::from_triplets(
+            docs,
+            8,
+            (0..docs as u32).map(|d| (d, d % 8, 2)),
+        )
+    }
+
+    #[test]
+    fn every_doc_gets_l_stamps() {
+        let bow = tiny_bow(50);
+        let years: Vec<u32> = (0..50).map(|d| (d % 10) as u32).collect();
+        let mut rng = Rng::new(1);
+        let tc = attach(bow, years, 10, 16, &mut rng);
+        assert!(tc.dts.row_sums().iter().all(|&r| r == 16));
+        assert_eq!(tc.dts.num_tokens(), 50 * 16);
+    }
+
+    #[test]
+    fn stamps_stay_in_range_at_boundaries() {
+        let bow = tiny_bow(20);
+        // All docs in year 0 and year max: jitter must clip.
+        let years: Vec<u32> = (0..20).map(|d| if d < 10 { 0 } else { 4 }).collect();
+        let mut rng = Rng::new(2);
+        let tc = attach(bow, years, 5, 8, &mut rng);
+        for j in 0..20 {
+            for e in tc.dts.doc(j) {
+                assert!(e.word < 5);
+            }
+        }
+    }
+
+    #[test]
+    fn mass_concentrates_on_doc_year() {
+        let bow = tiny_bow(200);
+        let years = vec![5u32; 200];
+        let mut rng = Rng::new(3);
+        let tc = attach(bow, years, 11, 16, &mut rng);
+        let on_year = tc.dts.col_sum(5) as f64;
+        let total = tc.dts.num_tokens() as f64;
+        assert!(on_year / total > 0.6, "on-year share {}", on_year / total);
+    }
+
+    #[test]
+    fn total_tokens_adds_both_sides() {
+        let bow = tiny_bow(10);
+        let n_words = bow.num_tokens();
+        let mut rng = Rng::new(4);
+        let tc = attach(bow, vec![0; 10], 3, 4, &mut rng);
+        assert_eq!(tc.total_tokens(), n_words + 40);
+    }
+}

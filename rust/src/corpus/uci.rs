@@ -1,0 +1,134 @@
+//! Loader for the UCI "Bag of Words" format used by the paper's NIPS and
+//! NYTimes datasets (https://archive.ics.uci.edu/ml/datasets/Bag+of+Words):
+//!
+//! ```text
+//! D
+//! W
+//! NNZ
+//! docID wordID count        # 1-based ids, one triplet per line
+//! ...
+//! ```
+//!
+//! Drop `docword.nips.txt` / `docword.nytimes.txt` next to the binary and
+//! pass `--uci <path>` to run the experiments on the real data instead of
+//! the synthetic profiles.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::corpus::bow::BagOfWords;
+
+/// Parse a UCI bag-of-words stream.
+pub fn read_bow(reader: impl Read) -> Result<BagOfWords> {
+    let mut lines = BufReader::new(reader).lines();
+    let mut next_header = |what: &str| -> Result<usize> {
+        loop {
+            let line = lines
+                .next()
+                .with_context(|| format!("missing {what} header"))??;
+            let t = line.trim();
+            if !t.is_empty() {
+                return t.parse().with_context(|| format!("bad {what}: {t:?}"));
+            }
+        }
+    };
+    let num_docs: usize = next_header("D")?;
+    let num_words: usize = next_header("W")?;
+    let nnz: usize = next_header("NNZ")?;
+
+    let mut triplets = Vec::with_capacity(nnz);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let (d, w, c) = match (it.next(), it.next(), it.next()) {
+            (Some(d), Some(w), Some(c)) => (d, w, c),
+            _ => bail!("malformed triplet line: {t:?}"),
+        };
+        let d: usize = d.parse().with_context(|| format!("bad doc id {d:?}"))?;
+        let w: usize = w.parse().with_context(|| format!("bad word id {w:?}"))?;
+        let c: u32 = c.parse().with_context(|| format!("bad count {c:?}"))?;
+        if d == 0 || d > num_docs {
+            bail!("doc id {d} outside 1..={num_docs}");
+        }
+        if w == 0 || w > num_words {
+            bail!("word id {w} outside 1..={num_words}");
+        }
+        triplets.push(((d - 1) as u32, (w - 1) as u32, c));
+    }
+    if triplets.len() != nnz {
+        bail!("NNZ header says {nnz}, file has {}", triplets.len());
+    }
+    Ok(BagOfWords::from_triplets(num_docs, num_words, triplets))
+}
+
+/// Load a UCI bag-of-words file from disk.
+pub fn load_bow(path: impl AsRef<Path>) -> Result<BagOfWords> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_bow(file).with_context(|| format!("parse {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "3\n4\n4\n1 1 2\n1 3 1\n3 2 3\n3 4 1\n";
+
+    #[test]
+    fn parses_sample() {
+        let b = read_bow(SAMPLE.as_bytes()).unwrap();
+        assert_eq!(b.num_docs(), 3);
+        assert_eq!(b.num_words(), 4);
+        assert_eq!(b.nnz(), 4);
+        assert_eq!(b.num_tokens(), 7);
+        // ids are converted to 0-based.
+        assert_eq!(b.doc(0)[0].word, 0);
+        assert_eq!(b.col_sum(1), 3);
+    }
+
+    #[test]
+    fn tolerates_blank_lines() {
+        let s = "2\n\n2\n1\n1 1 1\n\n";
+        let b = read_bow(s.as_bytes()).unwrap();
+        assert_eq!(b.num_tokens(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_nnz() {
+        let s = "1\n1\n2\n1 1 1\n";
+        assert!(read_bow(s.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_ids() {
+        let s = "1\n1\n1\n2 1 1\n";
+        assert!(read_bow(s.as_bytes()).is_err());
+        let s = "1\n1\n1\n1 9 1\n";
+        assert!(read_bow(s.as_bytes()).is_err());
+        let s = "1\n1\n1\n0 1 1\n"; // ids are 1-based
+        assert!(read_bow(s.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_triplet() {
+        let s = "1\n1\n1\n1 1\n";
+        assert!(read_bow(s.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pplda_uci_test.txt");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let b = load_bow(&path).unwrap();
+        assert_eq!(b.num_tokens(), 7);
+        std::fs::remove_file(&path).ok();
+    }
+}

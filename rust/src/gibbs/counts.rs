@@ -1,0 +1,129 @@
+//! LDA count matrices: document–topic `Cθ` (`n_jk`), word–topic `Cφ`
+//! (`n_kw`, stored word-major for contiguous per-word rows), and topic
+//! totals `n_k`.
+//!
+//! Rows are flat `[K]` slices so the sampling kernel walks contiguous
+//! memory; the parallel engine hands disjoint row sets to workers (see
+//! [`crate::scheduler::shared`]).
+
+use crate::gibbs::tokens::TokenBlock;
+
+/// Cell count type of the dense matrices: f32. Counts are integers far
+/// below 2^24, so f32 is exact, and the sampling kernel's hot loop avoids
+/// a u32→f32 convert per element (EXPERIMENTS.md §Perf iteration 4).
+pub type Count = f32;
+
+#[derive(Clone, Debug)]
+pub struct LdaCounts {
+    pub k: usize,
+    pub num_docs: usize,
+    pub num_words: usize,
+    /// `n_jk`, row-major `[num_docs][k]`.
+    pub doc_topic: Vec<Count>,
+    /// `n_kw` stored word-major: `[num_words][k]`.
+    pub word_topic: Vec<Count>,
+    /// `n_k` topic totals over word tokens.
+    pub topic: Vec<u32>,
+}
+
+impl LdaCounts {
+    pub fn zeros(num_docs: usize, num_words: usize, k: usize) -> Self {
+        Self {
+            k,
+            num_docs,
+            num_words,
+            doc_topic: vec![0.0; num_docs * k],
+            word_topic: vec![0.0; num_words * k],
+            topic: vec![0; k],
+        }
+    }
+
+    /// Accumulate the assignments of one token block.
+    pub fn absorb(&mut self, block: &TokenBlock) {
+        for i in 0..block.len() {
+            let (d, w, z) = (
+                block.docs[i] as usize,
+                block.words[i] as usize,
+                block.z[i] as usize,
+            );
+            self.doc_topic[d * self.k + z] += 1.0;
+            self.word_topic[w * self.k + z] += 1.0;
+            self.topic[z] += 1;
+        }
+    }
+
+    #[inline]
+    pub fn doc_row(&self, j: usize) -> &[Count] {
+        &self.doc_topic[j * self.k..(j + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn word_row(&self, w: usize) -> &[Count] {
+        &self.word_topic[w * self.k..(w + 1) * self.k]
+    }
+
+    /// Document length implied by the counts (token count of doc j).
+    pub fn doc_len(&self, j: usize) -> u64 {
+        self.doc_row(j).iter().map(|&c| c as u64).sum()
+    }
+
+    /// Total tokens across topics — sanity invariant.
+    pub fn total(&self) -> u64 {
+        self.topic.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Exhaustive consistency check against token blocks (test helper —
+    /// O(N + (D+W)K)).
+    pub fn check_consistency(&self, blocks: &[&TokenBlock]) -> Result<(), String> {
+        let mut expect = LdaCounts::zeros(self.num_docs, self.num_words, self.k);
+        for b in blocks {
+            expect.absorb(b);
+        }
+        if expect.doc_topic != self.doc_topic {
+            return Err("doc_topic mismatch".into());
+        }
+        if expect.word_topic != self.word_topic {
+            return Err("word_topic mismatch".into());
+        }
+        if expect.topic != self.topic {
+            return Err("topic totals mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> TokenBlock {
+        TokenBlock {
+            docs: vec![0, 0, 1],
+            words: vec![2, 2, 0],
+            z: vec![1, 1, 0],
+        }
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut c = LdaCounts::zeros(2, 3, 2);
+        c.absorb(&block());
+        assert_eq!(c.doc_row(0), &[0.0, 2.0]);
+        assert_eq!(c.doc_row(1), &[1.0, 0.0]);
+        assert_eq!(c.word_row(2), &[0.0, 2.0]);
+        assert_eq!(c.word_row(0), &[1.0, 0.0]);
+        assert_eq!(c.topic, vec![1, 2]);
+        assert_eq!(c.total(), 3);
+        assert_eq!(c.doc_len(0), 2);
+    }
+
+    #[test]
+    fn consistency_detects_corruption() {
+        let mut c = LdaCounts::zeros(2, 3, 2);
+        let b = block();
+        c.absorb(&b);
+        assert!(c.check_consistency(&[&b]).is_ok());
+        c.topic[0] += 1;
+        assert!(c.check_consistency(&[&b]).is_err());
+    }
+}

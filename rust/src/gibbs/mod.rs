@@ -1,0 +1,18 @@
+//! Collapsed Gibbs sampling for LDA: count matrices, token storage, the
+//! per-token sampling kernel, the serial reference trainer, and training
+//! perplexity (paper Eq. 3–4).
+//!
+//! The parallel engine in [`crate::scheduler`] reuses these pieces — the
+//! same kernel runs inside each conflict-free partition, with the topic
+//! totals `n_k` read from an epoch snapshot and reconciled at the epoch
+//! barrier (Yan et al. 2009's approximation, inherited by the paper).
+
+pub mod counts;
+pub mod perplexity;
+pub mod sampler;
+pub mod serial;
+pub mod tokens;
+
+pub use counts::LdaCounts;
+pub use sampler::Hyper;
+pub use tokens::TokenBlock;

@@ -1,0 +1,116 @@
+//! Training-set perplexity (paper Eq. 3–4):
+//!
+//! ```text
+//! Perp(x)  = exp(−log p(x) / N)
+//! log p(x) = Σ_{ji} log Σ_k θ_{k|j} φ_{x_ji|k}
+//! θ_{k|j}  = (n_jk + α) / (n_j + Kα)
+//! φ_{w|k}  = (n_kw + β) / (n_k + Wβ)
+//! ```
+//!
+//! Computed per distinct cell (weighting by count) so the cost is
+//! `O(nnz · K)` rather than `O(N · K)`. The same computation is available
+//! through the AOT-compiled JAX/Pallas kernel via
+//! [`crate::runtime::executor`]; this is the native reference.
+
+use crate::corpus::bow::BagOfWords;
+use crate::gibbs::counts::LdaCounts;
+use crate::gibbs::sampler::Hyper;
+
+/// log p(x) over the corpus under the current counts.
+pub fn log_likelihood(bow: &BagOfWords, counts: &LdaCounts, h: &Hyper) -> f64 {
+    let k = h.k;
+    let kalpha = h.alpha as f64 * k as f64;
+
+    // Precompute φ normalizers 1/(n_k + Wβ).
+    let inv_nk: Vec<f64> = counts
+        .topic
+        .iter()
+        .map(|&nk| 1.0 / (nk as f64 + h.wbeta as f64))
+        .collect();
+
+    let mut ll = 0.0f64;
+    let mut theta = vec![0.0f64; k];
+    for j in 0..bow.num_docs() {
+        let row = counts.doc_row(j);
+        let nj: u64 = row.iter().map(|&c| c as u64).sum();
+        let inv_nj = 1.0 / (nj as f64 + kalpha);
+        for t in 0..k {
+            theta[t] = (row[t] as f64 + h.alpha as f64) * inv_nj;
+        }
+        for e in bow.doc(j) {
+            let wrow = counts.word_row(e.word as usize);
+            let mut p = 0.0f64;
+            for t in 0..k {
+                p += theta[t] * (wrow[t] as f64 + h.beta as f64) * inv_nk[t];
+            }
+            ll += e.count as f64 * p.ln();
+        }
+    }
+    ll
+}
+
+/// Eq. 3: `exp(−log p / N)`.
+pub fn perplexity(bow: &BagOfWords, counts: &LdaCounts, h: &Hyper) -> f64 {
+    let n = bow.num_tokens();
+    assert!(n > 0, "perplexity of empty corpus");
+    (-log_likelihood(bow, counts, h) / n as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gibbs::tokens::TokenBlock;
+    use crate::util::rng::Rng;
+
+    fn setup(k: usize) -> (BagOfWords, LdaCounts, Hyper) {
+        let bow = BagOfWords::from_triplets(
+            3,
+            6,
+            [(0, 0, 3), (0, 1, 2), (1, 2, 4), (2, 3, 1), (2, 5, 2)],
+        );
+        let mut rng = Rng::new(5);
+        let block = TokenBlock::from_corpus(&bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(3, 6, k);
+        counts.absorb(&block);
+        (bow, counts, Hyper::new(k, 0.5, 0.1, 6))
+    }
+
+    #[test]
+    fn perplexity_bounded_by_vocab() {
+        let (bow, counts, h) = setup(4);
+        let p = perplexity(&bow, &counts, &h);
+        // Perplexity of any model is at most ~uniform over W (plus
+        // smoothing slack) and at least 1.
+        assert!(p >= 1.0, "{p}");
+        assert!(p < 6.0 * 2.0, "{p}");
+    }
+
+    #[test]
+    fn log_likelihood_is_negative() {
+        let (bow, counts, h) = setup(4);
+        assert!(log_likelihood(&bow, &counts, &h) < 0.0);
+    }
+
+    #[test]
+    fn concentrated_counts_give_lower_perplexity() {
+        // A model whose counts align doc 0 entirely with topic 0 over its
+        // actual words must beat random counts.
+        let (bow, random_counts, h) = setup(2);
+        let mut aligned = LdaCounts::zeros(3, 6, 2);
+        // Assign every token of doc j to topic j%2 deterministically.
+        for j in 0..3 {
+            for e in bow.doc(j) {
+                let t = j % 2;
+                aligned.doc_topic[j * 2 + t] += e.count as f32;
+                aligned.word_topic[e.word as usize * 2 + t] += e.count as f32;
+                aligned.topic[t] += e.count;
+            }
+        }
+        let p_aligned = perplexity(&bow, &aligned, &h);
+        let p_random = perplexity(&bow, &random_counts, &h);
+        assert!(
+            p_aligned < p_random,
+            "aligned {p_aligned} should beat random {p_random}"
+        );
+    }
+}

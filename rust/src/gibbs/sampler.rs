@@ -1,0 +1,319 @@
+//! The collapsed-Gibbs per-token sampling kernel — the hot path of the
+//! whole system.
+//!
+//! For token `(j, w)` with current assignment `z`, the collapsed
+//! conditional after removing the token is
+//!
+//! ```text
+//! p(k) ∝ (n_jk + α) · (n_kw + β) / (n_k + Wβ)
+//! ```
+//!
+//! Two variants exist:
+//!
+//! * [`sweep_serial`] — textbook collapsed Gibbs: `n_k` is updated
+//!   immediately after every token. This is the nonparallel reference the
+//!   paper compares against (Table IV "Nonparallel").
+//! * [`sweep_partition`] — the parallel per-partition kernel: `n_jk` and
+//!   `n_kw` rows are owned exclusively by the worker (diagonal
+//!   non-conflict), while `n_k` is read from an epoch-start snapshot and
+//!   the worker's increments/decrements accumulate in a local delta that
+//!   the barrier merges (Yan et al.'s approximation).
+
+use crate::gibbs::tokens::TokenBlock;
+use crate::util::rng::Rng;
+
+/// LDA hyperparameters (paper §V-C: α=0.5, β=0.1, K=256).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub k: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    /// `W·β` — the φ normalizer constant.
+    pub wbeta: f32,
+}
+
+impl Hyper {
+    pub fn new(k: usize, alpha: f32, beta: f32, num_words: usize) -> Self {
+        Self {
+            k,
+            alpha,
+            beta,
+            wbeta: beta * num_words as f32,
+        }
+    }
+}
+
+/// One serial sweep over a token block with immediate `n_k` updates.
+/// `doc_topic`/`word_topic` are the full flat matrices.
+pub fn sweep_serial(
+    block: &mut TokenBlock,
+    doc_topic: &mut [f32],
+    word_topic: &mut [f32],
+    topic: &mut [u32],
+    h: &Hyper,
+    rng: &mut Rng,
+    probs: &mut Vec<f32>,
+) {
+    let k = h.k;
+    probs.resize(k, 0.0);
+    // Incrementally-maintained reciprocal of the φ normalizer:
+    // inv[t] = 1/(n_k[t] + Wβ). Only two entries change per token, so
+    // this turns K divisions per token into 2 — and the now
+    // division-free inner loop auto-vectorizes (see EXPERIMENTS.md §Perf).
+    let mut inv: Vec<f32> = topic
+        .iter()
+        .map(|&nk| 1.0 / (nk as f32 + h.wbeta))
+        .collect();
+    for i in 0..block.len() {
+        let d = block.docs[i] as usize;
+        let w = block.words[i] as usize;
+        let old = block.z[i] as usize;
+
+        let drow = &mut doc_topic[d * k..(d + 1) * k];
+        let wrow = &mut word_topic[w * k..(w + 1) * k];
+        drow[old] -= 1.0;
+        wrow[old] -= 1.0;
+        topic[old] -= 1;
+        inv[old] = 1.0 / (topic[old] as f32 + h.wbeta);
+
+        let total = fill_probs(probs, drow, wrow, &inv, h);
+        let new = draw(probs, total, rng);
+
+        drow[new] += 1.0;
+        wrow[new] += 1.0;
+        topic[new] += 1;
+        inv[new] = 1.0 / (topic[new] as f32 + h.wbeta);
+        block.z[i] = new as u32;
+    }
+}
+
+/// One parallel-partition sweep: exclusive count rows, stale `n_k`
+/// snapshot plus a local signed delta.
+///
+/// `doc_rows`/`word_rows` provide exclusive access to the rows this
+/// partition owns (see [`crate::scheduler::shared::RowAccess`]).
+pub fn sweep_partition<DR, WR>(
+    block: &mut TokenBlock,
+    mut doc_row: DR,
+    mut word_row: WR,
+    topic_snapshot: &[u32],
+    topic_delta: &mut [i64],
+    h: &Hyper,
+    rng: &mut Rng,
+    probs: &mut Vec<f32>,
+) where
+    DR: FnMut(usize) -> *mut f32,
+    WR: FnMut(usize) -> *mut f32,
+{
+    let k = h.k;
+    probs.resize(k, 0.0);
+    // Reciprocal cache over the *effective* n_k (snapshot + local delta);
+    // same incremental trick as sweep_serial — other workers' concurrent
+    // deltas are reconciled at the epoch barrier, not here.
+    let mut inv: Vec<f32> = topic_snapshot
+        .iter()
+        .zip(topic_delta.iter())
+        .map(|(&nk, &d)| 1.0 / ((nk as i64 + d) as f32 + h.wbeta))
+        .collect();
+    for i in 0..block.len() {
+        let d = block.docs[i] as usize;
+        let w = block.words[i] as usize;
+        let old = block.z[i] as usize;
+
+        // SAFETY: the diagonal non-conflict property guarantees this
+        // worker exclusively owns rows `d` of doc_topic and `w` of
+        // word_topic for the duration of the epoch (enforced by
+        // scheduler::shared::SharedRows construction).
+        let (drow, wrow) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(doc_row(d), k),
+                std::slice::from_raw_parts_mut(word_row(w), k),
+            )
+        };
+        drow[old] -= 1.0;
+        wrow[old] -= 1.0;
+        topic_delta[old] -= 1;
+        inv[old] =
+            1.0 / ((topic_snapshot[old] as i64 + topic_delta[old]) as f32 + h.wbeta);
+
+        let total = fill_probs(probs, drow, wrow, &inv, h);
+        let new = draw(probs, total, rng);
+
+        drow[new] += 1.0;
+        wrow[new] += 1.0;
+        topic_delta[new] += 1;
+        inv[new] =
+            1.0 / ((topic_snapshot[new] as i64 + topic_delta[new]) as f32 + h.wbeta);
+        block.z[i] = new as u32;
+    }
+}
+
+/// Fill the unnormalized conditional `p(t) = (n_jk+α)(n_kw+β)·inv(t)` and
+/// return its sum. Written as lockstep iterators (no bounds checks, no
+/// divisions) so LLVM vectorizes the fill; the reduction uses four
+/// accumulators to break the serial float-add dependency chain.
+#[inline]
+fn fill_probs(probs: &mut [f32], drow: &[f32], wrow: &[f32], inv: &[f32], h: &Hyper) -> f32 {
+    // Two passes: a fully vectorizable fill, then a 4-accumulator sum
+    // (a fused single pass was tried and regressed — the separate fill
+    // lets LLVM use wider vectors; see EXPERIMENTS.md §Perf).
+    for ((p, (&dc, &wc)), &iv) in probs
+        .iter_mut()
+        .zip(drow.iter().zip(wrow.iter()))
+        .zip(inv.iter())
+    {
+        *p = (dc + h.alpha) * (wc + h.beta) * iv;
+    }
+    let mut acc = [0.0f32; 4];
+    let mut chunks = probs.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += c[0];
+        acc[1] += c[1];
+        acc[2] += c[2];
+        acc[3] += c[3];
+    }
+    let tail: f32 = chunks.remainder().iter().sum();
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Inverse-CDF draw from unnormalized weights with a precomputed total.
+#[inline]
+pub fn draw(probs: &[f32], total: f32, rng: &mut Rng) -> usize {
+    let mut r = rng.f32_open() * total;
+    for (t, &p) in probs.iter().enumerate() {
+        r -= p;
+        if r <= 0.0 {
+            return t;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::bow::BagOfWords;
+    use crate::gibbs::counts::LdaCounts;
+
+    fn setup(k: usize, seed: u64) -> (TokenBlock, LdaCounts, Hyper, Rng) {
+        let bow = BagOfWords::from_triplets(
+            3,
+            5,
+            [(0, 0, 4), (0, 1, 2), (1, 2, 3), (2, 3, 2), (2, 4, 1)],
+        );
+        let mut rng = Rng::new(seed);
+        let block = TokenBlock::from_corpus(&bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(3, 5, k);
+        counts.absorb(&block);
+        (block, counts, Hyper::new(k, 0.5, 0.1, 5), rng)
+    }
+
+    #[test]
+    fn serial_sweep_preserves_count_invariants() {
+        let (mut block, mut counts, h, mut rng) = setup(4, 1);
+        let n = counts.total();
+        let mut probs = Vec::new();
+        for _ in 0..10 {
+            sweep_serial(
+                &mut block,
+                &mut counts.doc_topic,
+                &mut counts.word_topic,
+                &mut counts.topic,
+                &h,
+                &mut rng,
+                &mut probs,
+            );
+        }
+        assert_eq!(counts.total(), n);
+        assert!(counts.check_consistency(&[&block]).is_ok());
+    }
+
+    #[test]
+    fn partition_sweep_matches_counts_after_merge() {
+        let (mut block, mut counts, h, mut rng) = setup(4, 2);
+        let snapshot = counts.topic.clone();
+        let mut delta = vec![0i64; 4];
+        let mut probs = Vec::new();
+        let k = h.k;
+        let dt = counts.doc_topic.as_mut_ptr();
+        let wt = counts.word_topic.as_mut_ptr();
+        sweep_partition(
+            &mut block,
+            |d| unsafe { dt.add(d * k) },
+            |w| unsafe { wt.add(w * k) },
+            &snapshot,
+            &mut delta,
+            &h,
+            &mut rng,
+            &mut probs,
+        );
+        // Merge delta and verify full consistency.
+        for t in 0..4 {
+            let v = counts.topic[t] as i64 + delta[t];
+            assert!(v >= 0);
+            counts.topic[t] = v as u32;
+        }
+        assert!(counts.check_consistency(&[&block]).is_ok());
+        // Deltas must cancel out: token count is conserved.
+        assert_eq!(delta.iter().sum::<i64>(), 0);
+    }
+
+    #[test]
+    fn draw_is_unbiased() {
+        let mut rng = Rng::new(3);
+        let probs = vec![1.0f32, 3.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..40_000 {
+            counts[draw(&probs, 4.0, &mut rng)] += 1;
+        }
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sampler_concentrates_on_planted_structure() {
+        // Two disjoint word groups used by two disjoint doc groups: after
+        // a few sweeps, each document's tokens should concentrate in one
+        // topic.
+        let mut triplets = Vec::new();
+        for d in 0..4u32 {
+            for w in 0..5u32 {
+                let word = if d < 2 { w } else { w + 5 };
+                triplets.push((d, word, 10));
+            }
+        }
+        let bow = BagOfWords::from_triplets(4, 10, triplets);
+        let k = 2;
+        let mut rng = Rng::new(7);
+        let mut block = TokenBlock::from_corpus(&bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(4, 10, k);
+        counts.absorb(&block);
+        let h = Hyper::new(k, 0.1, 0.05, 10);
+        let mut probs = Vec::new();
+        for _ in 0..60 {
+            sweep_serial(
+                &mut block,
+                &mut counts.doc_topic,
+                &mut counts.word_topic,
+                &mut counts.topic,
+                &h,
+                &mut rng,
+                &mut probs,
+            );
+        }
+        // Doc 0 and doc 3 should be (nearly) pure and use different topics.
+        let purity = |j: usize| {
+            let row = counts.doc_row(j);
+            let total: f32 = row.iter().sum();
+            let max: f32 = row.iter().fold(0.0f32, |a, &b| a.max(b));
+            (
+                max as f64 / total as f64,
+                row.iter().position(|&c| c == max),
+            )
+        };
+        let (p0, t0) = purity(0);
+        let (p3, t3) = purity(3);
+        assert!(p0 > 0.9 && p3 > 0.9, "purity {p0} {p3}");
+        assert_ne!(t0, t3, "disjoint word groups should map to distinct topics");
+    }
+}

@@ -1,0 +1,110 @@
+//! Serial (nonparallel) collapsed-Gibbs LDA trainer — the reference the
+//! paper compares its parallel algorithm against, equivalent to the Java
+//! GibbsLDA of Phan et al. that the authors built on.
+
+use crate::corpus::bow::BagOfWords;
+use crate::gibbs::counts::LdaCounts;
+use crate::gibbs::perplexity;
+use crate::gibbs::sampler::{self, Hyper};
+use crate::gibbs::tokens::TokenBlock;
+use crate::util::rng::Rng;
+
+/// A serial LDA model mid-training.
+pub struct SerialLda {
+    pub h: Hyper,
+    pub counts: LdaCounts,
+    pub block: TokenBlock,
+    rng: Rng,
+    probs: Vec<f32>,
+}
+
+impl SerialLda {
+    /// Random-initialize assignments and counts.
+    pub fn init(bow: &BagOfWords, k: usize, alpha: f32, beta: f32, seed: u64) -> Self {
+        let mut rng = Rng::stream(seed, 0x5E81A1);
+        let block = TokenBlock::from_corpus(bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+        counts.absorb(&block);
+        Self {
+            h: Hyper::new(k, alpha, beta, bow.num_words()),
+            counts,
+            block,
+            rng,
+            probs: Vec::new(),
+        }
+    }
+
+    /// One full Gibbs sweep over every token.
+    pub fn sweep(&mut self) {
+        sampler::sweep_serial(
+            &mut self.block,
+            &mut self.counts.doc_topic,
+            &mut self.counts.word_topic,
+            &mut self.counts.topic,
+            &self.h,
+            &mut self.rng,
+            &mut self.probs,
+        );
+    }
+
+    /// Run `iters` sweeps, optionally recording perplexity every
+    /// `eval_every` sweeps (0 = never). Returns (iteration, perplexity)
+    /// pairs.
+    pub fn train(
+        &mut self,
+        bow: &BagOfWords,
+        iters: usize,
+        eval_every: usize,
+    ) -> Vec<(usize, f64)> {
+        let mut curve = Vec::new();
+        for it in 1..=iters {
+            self.sweep();
+            if eval_every > 0 && (it % eval_every == 0 || it == iters) {
+                curve.push((it, perplexity::perplexity(bow, &self.counts, &self.h)));
+            }
+        }
+        curve
+    }
+
+    pub fn perplexity(&self, bow: &BagOfWords) -> f64 {
+        perplexity::perplexity(bow, &self.counts, &self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+
+    #[test]
+    fn training_reduces_perplexity() {
+        let bow = generate(&Profile::tiny(), 21);
+        let mut lda = SerialLda::init(&bow, 8, 0.5, 0.1, 1);
+        let p0 = lda.perplexity(&bow);
+        let curve = lda.train(&bow, 30, 30);
+        let p_end = curve.last().unwrap().1;
+        assert!(
+            p_end < p0 * 0.9,
+            "perplexity should drop ≥10%: {p0} → {p_end}"
+        );
+    }
+
+    #[test]
+    fn counts_stay_consistent_after_training() {
+        let bow = generate(&Profile::tiny(), 22);
+        let mut lda = SerialLda::init(&bow, 4, 0.5, 0.1, 2);
+        lda.train(&bow, 5, 0);
+        assert!(lda.counts.check_consistency(&[&lda.block]).is_ok());
+        assert_eq!(lda.counts.total(), bow.num_tokens());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let bow = generate(&Profile::tiny(), 23);
+        let mut a = SerialLda::init(&bow, 4, 0.5, 0.1, 9);
+        let mut b = SerialLda::init(&bow, 4, 0.5, 0.1, 9);
+        a.train(&bow, 3, 0);
+        b.train(&bow, 3, 0);
+        assert_eq!(a.block.z, b.block.z);
+    }
+}

@@ -1,0 +1,107 @@
+//! Token storage: struct-of-arrays blocks of (doc, word, topic) triples.
+//!
+//! Count matrices store cells; the Gibbs sampler walks token *instances*.
+//! A [`TokenBlock`] is the sweep unit — the whole corpus for the serial
+//! trainer, one `DW_mn` partition for the parallel engine.
+
+use crate::corpus::bow::BagOfWords;
+use crate::partition::scheme::Cell;
+use crate::util::rng::Rng;
+
+/// SoA block of tokens with their current topic assignments.
+#[derive(Clone, Debug, Default)]
+pub struct TokenBlock {
+    pub docs: Vec<u32>,
+    pub words: Vec<u32>,
+    pub z: Vec<u32>,
+}
+
+impl TokenBlock {
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            docs: Vec::with_capacity(n),
+            words: Vec::with_capacity(n),
+            z: Vec::with_capacity(n),
+        }
+    }
+
+    /// Expand partition cells into individual tokens with random initial
+    /// topics in `0..k`.
+    pub fn from_cells(cells: &[Cell], k: usize, rng: &mut Rng) -> Self {
+        let n: usize = cells.iter().map(|c| c.count as usize).sum();
+        let mut block = Self::with_capacity(n);
+        for c in cells {
+            for _ in 0..c.count {
+                block.docs.push(c.doc);
+                block.words.push(c.word);
+                block.z.push(rng.gen_range(k) as u32);
+            }
+        }
+        block
+    }
+
+    /// Expand a whole corpus (doc-major order) — the serial sweep unit.
+    pub fn from_corpus(bow: &BagOfWords, k: usize, rng: &mut Rng) -> Self {
+        let mut block = Self::with_capacity(bow.num_tokens() as usize);
+        for j in 0..bow.num_docs() {
+            for e in bow.doc(j) {
+                for _ in 0..e.count {
+                    block.docs.push(j as u32);
+                    block.words.push(e.word);
+                    block.z.push(rng.gen_range(k) as u32);
+                }
+            }
+        }
+        block
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_cells_expands_counts() {
+        let cells = [
+            Cell { doc: 1, word: 7, count: 3 },
+            Cell { doc: 2, word: 0, count: 1 },
+        ];
+        let mut rng = Rng::new(1);
+        let b = TokenBlock::from_cells(&cells, 4, &mut rng);
+        assert_eq!(b.len(), 4);
+        assert_eq!(&b.docs[..3], &[1, 1, 1]);
+        assert_eq!(b.words[3], 0);
+        assert!(b.z.iter().all(|&z| z < 4));
+    }
+
+    #[test]
+    fn from_corpus_covers_all_tokens() {
+        let bow = BagOfWords::from_triplets(2, 3, [(0, 0, 2), (1, 2, 5)]);
+        let mut rng = Rng::new(2);
+        let b = TokenBlock::from_corpus(&bow, 8, &mut rng);
+        assert_eq!(b.len() as u64, bow.num_tokens());
+        assert_eq!(b.docs.iter().filter(|&&d| d == 1).count(), 5);
+    }
+
+    #[test]
+    fn initial_topics_cover_range() {
+        let bow = BagOfWords::from_triplets(1, 1, [(0, 0, 1000)]);
+        let mut rng = Rng::new(3);
+        let b = TokenBlock::from_corpus(&bow, 4, &mut rng);
+        let mut seen = [false; 4];
+        for &z in &b.z {
+            seen[z as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,62 @@
+//! # pplda — Partitioned Parallel LDA
+//!
+//! Reproduction of **Tran & Takasu, "Partitioning Algorithms for Improving
+//! Efficiency of Topic Modeling Parallelization" (PACRIM 2015)** as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The paper improves the data-partitioning parallelization of collapsed
+//! Gibbs sampling for LDA (Yan et al., NIPS 2009): the document–word
+//! matrix is split `P×P`; partitions along each wrapped diagonal are
+//! read–write non-conflicting and sampled by `P` workers in parallel, with
+//! a barrier between the `P` diagonal *epochs* of every Gibbs sweep. The
+//! slowest partition of each epoch gates the sweep, so the quality of the
+//! partitioning — measured by the load-balancing ratio `η = C_opt / C` —
+//! directly sets the speedup (`≈ η·P`).
+//!
+//! This crate implements:
+//!
+//! * [`partition`] — the paper's contribution: deterministic algorithms
+//!   **A1**/**A2**, the stratified randomized algorithm **A3**, and the
+//!   Yan-et-al random-shuffle **baseline**, plus the `η` metric.
+//! * [`gibbs`] — collapsed Gibbs sampling for LDA (serial reference and
+//!   the per-partition kernel used by the parallel engine).
+//! * [`scheduler`] — the diagonal-epoch plan, a worker pool, and the
+//!   epoch-cost model.
+//! * [`bot`] — Bag of Timestamps (Masada et al. 2009): the LDA extension
+//!   with a second document–timestamp matrix, parallelized with the same
+//!   partitioning machinery (paper §IV-C).
+//! * [`corpus`] — bag-of-words substrate: CSR storage, UCI loader, and
+//!   synthetic generators whose marginals match NIPS / NYTimes / MAS
+//!   (Table I) so the experiments run without the original datasets.
+//! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas
+//!   kernels (HLO text) for the offloaded sampler / perplexity hot path.
+//! * [`coordinator`] — the training drivers tying everything together.
+//! * [`util`], [`testing`], [`bench`] — in-tree substrates (PRNG, CLI,
+//!   stats, JSON/TSV, property-testing, bench harness) required by the
+//!   offline build environment.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pplda::corpus::synthetic::{self, Profile};
+//! use pplda::partition::{self, Algorithm};
+//! use pplda::coordinator::{TrainConfig, train_lda};
+//!
+//! let corpus = synthetic::generate(&Profile::nips_like().scaled(10), 42);
+//! let plan = partition::partition(&corpus, 8, Algorithm::A3 { restarts: 20 }, 7);
+//! println!("eta = {:.4}", plan.eta);
+//! let cfg = TrainConfig { topics: 64, iters: 50, ..Default::default() };
+//! let report = train_lda(&corpus, &plan, &cfg);
+//! println!("perplexity = {:.2}", report.final_perplexity);
+//! ```
+
+pub mod bench;
+pub mod bot;
+pub mod coordinator;
+pub mod corpus;
+pub mod gibbs;
+pub mod partition;
+pub mod runtime;
+pub mod scheduler;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,276 @@
+//! `pplda` — command-line launcher for the partitioned-parallel topic
+//! modeling system.
+//!
+//! ```text
+//! pplda stats      [--profile nips|nytimes|mas|tiny] [--scale N] [--uci FILE]
+//! pplda partition  [--profile ..] [--scale N] [--procs 1,10,30,60]
+//!                  [--algos baseline,A1,A2,A3] [--restarts N] [--seed S]
+//! pplda train      [--profile ..] [--scale N] [--procs P] [--algo A3]
+//!                  [--topics K] [--iters N] [--eval-every N] [--xla]
+//!                  [--threads] [--json FILE]
+//! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
+//!                  [--iters N] [--timeline]
+//! pplda artifacts-check
+//! ```
+
+use std::process::ExitCode;
+
+use pplda::coordinator::{train_bot, train_lda, Backend, TrainConfig};
+use pplda::corpus::stats::{table_i, CorpusStats};
+use pplda::corpus::synthetic::{self, Profile};
+use pplda::corpus::{uci, BagOfWords};
+use pplda::partition::{self, Algorithm};
+use pplda::runtime::executor::Artifacts;
+use pplda::scheduler::exec::ExecMode;
+use pplda::util::cli::Args;
+use pplda::util::tsv::{f, Table};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match args.positional(0) {
+        Some("stats") => cmd_stats(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("train") => cmd_train(&args),
+        Some("train-bot") => cmd_train_bot(&args),
+        Some("artifacts-check") => cmd_artifacts_check(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            eprint!("{}", USAGE);
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+usage: pplda <stats|partition|train|train-bot|artifacts-check> [flags]
+
+  stats            print Table-I statistics for a corpus
+  partition        run partitioning algorithms, print eta per P (Tables II/III)
+  train            train (parallel) LDA, print perplexity curve
+  train-bot        train (parallel) Bag of Timestamps, print Table-IV row
+  artifacts-check  verify the AOT artifacts load and execute
+
+common flags: --profile nips|nytimes|mas|tiny   --scale N   --seed S
+              --uci FILE (real UCI docword file instead of synthetic)
+";
+
+fn profile(args: &Args) -> Profile {
+    let base = match args.get_str("profile").unwrap_or("nips") {
+        "nips" => Profile::nips_like(),
+        "nytimes" => Profile::nytimes_like(),
+        "mas" => Profile::mas_like(),
+        "tiny" => Profile::tiny(),
+        other => panic!("unknown profile {other:?}"),
+    };
+    base.scaled(args.get::<usize>("scale", 1))
+}
+
+fn load_corpus(args: &Args) -> (String, BagOfWords) {
+    if let Some(path) = args.get_str("uci") {
+        let bow = uci::load_bow(path).expect("load UCI corpus");
+        (path.to_string(), bow)
+    } else {
+        let p = profile(args);
+        let seed = args.get::<u64>("seed", 42);
+        (p.name.clone(), synthetic::generate(&p, seed))
+    }
+}
+
+fn algo_of(name: &str, restarts: usize) -> Algorithm {
+    match name {
+        "baseline" => Algorithm::Baseline { restarts },
+        "A1" | "a1" => Algorithm::A1,
+        "A2" | "a2" => Algorithm::A2,
+        "A3" | "a3" => Algorithm::A3 { restarts },
+        other => panic!("unknown algorithm {other:?}"),
+    }
+}
+
+fn cmd_stats(args: &Args) -> ExitCode {
+    let (name, bow) = load_corpus(args);
+    let stats = CorpusStats::of(&name, &bow);
+    print!("{}", table_i(&[stats]).to_aligned());
+    ExitCode::SUCCESS
+}
+
+fn cmd_partition(args: &Args) -> ExitCode {
+    let (name, bow) = load_corpus(args);
+    let procs = args.get_list::<usize>("procs", &[1, 10, 30, 60]);
+    let restarts = args.get::<usize>("restarts", 100);
+    let seed = args.get::<u64>("seed", 42);
+    let algos: Vec<String> = args.get_list::<String>("algos", &[]);
+    let algos = if algos.is_empty() {
+        ["baseline", "A1", "A2", "A3"]
+            .map(String::from)
+            .to_vec()
+    } else {
+        algos
+    };
+
+    println!(
+        "corpus {name}: D={} W={} N={}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+    let mut header = vec!["P".to_string()];
+    header.extend(algos.iter().cloned());
+    let mut table = Table::new(header);
+    for &p in &procs {
+        let mut row = vec![p.to_string()];
+        for a in &algos {
+            let plan = partition::partition(&bow, p, algo_of(a, restarts), seed);
+            row.push(f(plan.eta, 4));
+        }
+        table.row(row);
+    }
+    print!("{}", table.to_aligned());
+    ExitCode::SUCCESS
+}
+
+fn cmd_train(args: &Args) -> ExitCode {
+    let (name, bow) = load_corpus(args);
+    let p = args.get::<usize>("procs", 8);
+    let restarts = args.get::<usize>("restarts", 20);
+    let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
+    let cfg = TrainConfig {
+        topics: args.get::<usize>("topics", 64),
+        iters: args.get::<usize>("iters", 100),
+        eval_every: args.get::<usize>("eval-every", 10),
+        seed: args.get::<u64>("seed", 42),
+        backend: if args.has("xla") {
+            Backend::Xla
+        } else {
+            Backend::Native
+        },
+        mode: if args.has("threads") {
+            ExecMode::Threaded
+        } else {
+            ExecMode::Sequential
+        },
+        ..Default::default()
+    };
+
+    let plan = partition::partition(&bow, p, algo, cfg.seed);
+    println!(
+        "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} speedup≈{:.2}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens(),
+        plan.algorithm,
+        plan.p,
+        plan.eta,
+        plan.eta * plan.p as f64,
+    );
+    let report = train_lda(&bow, &plan, &cfg);
+    print!("{}", report.curve_table().to_aligned());
+    println!(
+        "final perplexity {:.4} | {:.1}s | {} tokens/s",
+        report.final_perplexity,
+        report.train_secs,
+        pplda::util::human_rate(report.tokens_per_sec)
+    );
+    if let Some(path) = args.get_str("json") {
+        std::fs::write(path, report.to_json().to_string_pretty()).expect("write json");
+        println!("wrote {path}");
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_train_bot(args: &Args) -> ExitCode {
+    let p_profile = {
+        let mut pr = Profile::mas_like().scaled(args.get::<usize>("scale", 50));
+        if args.get_str("profile") == Some("tiny") {
+            pr = Profile::tiny();
+            pr.time = Some(synthetic::TimeProfile {
+                first_year: 2000,
+                last_year: 2009,
+                growth: 0.1,
+                stamps_per_doc: 4,
+            });
+        }
+        pr
+    };
+    let seed = args.get::<u64>("seed", 42);
+    let tc = synthetic::generate_timestamped(&p_profile, seed);
+    let p = args.get::<usize>("procs", 10);
+    let restarts = args.get::<usize>("restarts", 20);
+    let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
+    let cfg = TrainConfig {
+        topics: args.get::<usize>("topics", 64),
+        iters: args.get::<usize>("iters", 50),
+        seed,
+        mode: if args.has("threads") {
+            ExecMode::Threaded
+        } else {
+            ExecMode::Sequential
+        },
+        ..Default::default()
+    };
+
+    println!(
+        "corpus {}: D={} W={} N={} stamps={} ({} ts tokens)",
+        p_profile.name,
+        tc.bow.num_docs(),
+        tc.bow.num_words(),
+        tc.bow.num_tokens(),
+        tc.num_stamps,
+        tc.dts.num_tokens()
+    );
+    let report = train_bot(&tc, p, algo, &cfg);
+    println!(
+        "P={} perplexity={:.4} eta_dw={:.4} eta_dts={:.4} speedup≈{:.2} ({:.1}s)",
+        report.p,
+        report.final_perplexity,
+        report.eta_dw,
+        report.eta_dts,
+        report.speedup_model,
+        report.train_secs
+    );
+    if args.has("timeline") {
+        let first = p_profile.time.as_ref().map(|t| t.first_year).unwrap_or(0);
+        print!(
+            "{}",
+            pplda::bot::timeline::trend_table(&report.timelines, first, 5).to_aligned()
+        );
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_artifacts_check() -> ExitCode {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("no artifacts at {dir:?}; run `make artifacts`");
+        return ExitCode::FAILURE;
+    }
+    let arts = Artifacts::discover(&dir).expect("parse manifest");
+    for (b, k) in arts.variants("sampler") {
+        let exe = arts.sampler(b, k).expect("compile sampler");
+        let njk = vec![1.0f32; b * k];
+        let nkw = vec![1.0f32; b * k];
+        let nk = vec![k as f32; k];
+        let unif = vec![0.5f32; b * k];
+        let z = exe
+            .run(&njk, &nkw, &nk, &unif, [0.5, 0.1, 0.5 * k as f32, 0.1 * 100.0])
+            .expect("run sampler");
+        assert_eq!(z.len(), b);
+        println!("sampler_{b}x{k}: ok");
+    }
+    for (b, k) in arts.variants("loglik") {
+        let exe = arts.loglik(b, k).expect("compile loglik");
+        let njk = vec![1.0f32; b * k];
+        let nj = vec![k as f32; b];
+        let nkw = vec![1.0f32; b * k];
+        let nk = vec![k as f32; k];
+        let (sum, ll) = exe
+            .run(&njk, &nj, &nkw, &nk, [0.5, 0.1, 0.5 * k as f32, 0.1 * 100.0])
+            .expect("run loglik");
+        assert_eq!(ll.len(), b);
+        assert!(sum.is_finite());
+        println!("loglik_{b}x{k}: ok (sum={sum:.2})");
+    }
+    println!("all artifacts ok");
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,161 @@
+//! The four partitioning algorithms (paper §IV-B), assembled from
+//! [`super::permutation`] orderings + [`super::split`] equal-mass cuts +
+//! [`super::eta`] scoring.
+
+use crate::corpus::bow::BagOfWords;
+use crate::partition::{eta, permutation, split, Plan};
+use crate::util::rng::Rng;
+
+fn make_plan(
+    bow: &BagOfWords,
+    p: usize,
+    doc_order: &[u32],
+    word_order: &[u32],
+    algorithm: &'static str,
+) -> Plan {
+    let doc_group = split::split_equal_mass(doc_order, bow.row_sums(), p);
+    let word_group = split::split_equal_mass(word_order, bow.col_sums(), p);
+    let costs = eta::CostMatrix::compute_p(bow, &doc_group, &word_group, p);
+    let report = eta::eta_of_costs(&costs, bow.num_tokens());
+    Plan {
+        p,
+        doc_group,
+        word_group,
+        eta: report.eta,
+        cost: report.cost,
+        costs,
+        algorithm,
+    }
+}
+
+/// Algorithm A1 (deterministic): Heuristic-1 interposition from the front.
+pub fn run_a1(bow: &BagOfWords, p: usize) -> Plan {
+    let doc_order = permutation::interpose_front(bow.row_sums());
+    let word_order = permutation::interpose_front(bow.col_sums());
+    make_plan(bow, p, &doc_order, &word_order, "A1")
+}
+
+/// Algorithm A2 (deterministic): Heuristic-2 interposition from both ends.
+pub fn run_a2(bow: &BagOfWords, p: usize) -> Plan {
+    let doc_order = permutation::interpose_both_ends(bow.row_sums());
+    let word_order = permutation::interpose_both_ends(bow.col_sums());
+    make_plan(bow, p, &doc_order, &word_order, "A2")
+}
+
+/// One randomized draw of Algorithm A3 (stratified shuffle). The caller
+/// repeats and keeps the best η (paper: 100–200 repetitions).
+pub fn run_a3_once(bow: &BagOfWords, p: usize, rng: &mut Rng) -> Plan {
+    let doc_order = permutation::stratified_shuffle(bow.row_sums(), p, rng);
+    let word_order = permutation::stratified_shuffle(bow.col_sums(), p, rng);
+    make_plan(bow, p, &doc_order, &word_order, "A3")
+}
+
+/// One randomized draw of the Yan et al. baseline: uniform shuffle, then
+/// split into `P` groups of equal *cardinality* (equal numbers of
+/// documents/words, the GPU-index-range split of the original algorithm —
+/// this, not the shuffle, is what the proposed algorithms improve on).
+/// The caller repeats and keeps the best η.
+pub fn run_baseline_once(bow: &BagOfWords, p: usize, rng: &mut Rng) -> Plan {
+    let doc_order = permutation::uniform_shuffle(bow.num_docs(), rng);
+    let word_order = permutation::uniform_shuffle(bow.num_words(), rng);
+    let doc_group = split::split_equal_count(&doc_order, p);
+    let word_group = split::split_equal_count(&word_order, p);
+    let costs = eta::CostMatrix::compute_p(bow, &doc_group, &word_group, p);
+    let report = eta::eta_of_costs(&costs, bow.num_tokens());
+    Plan {
+        p,
+        doc_group,
+        word_group,
+        eta: report.eta,
+        cost: report.cost,
+        costs,
+        algorithm: "baseline",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::testing::prop;
+
+    #[test]
+    fn group_masses_are_balanced_for_a1() {
+        let bow = generate(&Profile::tiny(), 3);
+        let p = 5;
+        let plan = run_a1(&bow, p);
+        let masses =
+            split::group_masses(&plan.doc_group, bow.row_sums(), p);
+        let total: u64 = masses.iter().sum();
+        let ideal = total as f64 / p as f64;
+        for &m in &masses {
+            assert!(
+                (m as f64 - ideal).abs() < ideal * 0.5,
+                "doc group mass {m} far from ideal {ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn plans_expose_cost_matrix_consistent_with_eta() {
+        let bow = generate(&Profile::tiny(), 4);
+        let plan = run_a2(&bow, 4);
+        let recomputed = eta::eta(&bow, &plan.doc_group, &plan.word_group, 4);
+        assert!((plan.eta - recomputed.eta).abs() < 1e-12);
+        assert_eq!(plan.costs.total(), bow.num_tokens());
+    }
+
+    #[test]
+    fn a3_beats_first_draw_of_baseline_usually() {
+        // Not a theorem for single draws, but over a heavy corpus and
+        // several seeds A3's stratified draw should dominate the uniform
+        // draw on average.
+        let bow = generate(&Profile::nips_like().scaled(40), 6);
+        let p = 12;
+        let mut a3_wins = 0;
+        let trials = 10;
+        for s in 0..trials {
+            let mut r1 = Rng::stream(100 + s, 0);
+            let mut r2 = Rng::stream(200 + s, 0);
+            let a3 = run_a3_once(&bow, p, &mut r1);
+            let base = run_baseline_once(&bow, p, &mut r2);
+            if a3.eta > base.eta {
+                a3_wins += 1;
+            }
+        }
+        assert!(a3_wins >= 7, "A3 won only {a3_wins}/{trials} single draws");
+    }
+
+    #[test]
+    fn all_algorithms_valid_on_degenerate_inputs() {
+        prop::check("algorithms-degenerate", 0xDE6, 24, |rng| {
+            let d = prop::gen_size(rng, 1, 30);
+            let w = prop::gen_size(rng, 1, 30);
+            let p = 1 + rng.gen_range(10);
+            let triplets: Vec<(u32, u32, u32)> = (0..prop::gen_size(rng, 0, 60))
+                .map(|_| {
+                    (
+                        rng.gen_range(d) as u32,
+                        rng.gen_range(w) as u32,
+                        1 + rng.gen_range(5) as u32,
+                    )
+                })
+                .collect();
+            let bow = BagOfWords::from_triplets(d, w, triplets);
+            for plan in [
+                run_a1(&bow, p),
+                run_a2(&bow, p),
+                run_a3_once(&bow, p, rng),
+                run_baseline_once(&bow, p, rng),
+            ] {
+                assert_eq!(plan.doc_group.len(), d);
+                assert_eq!(plan.word_group.len(), w);
+                assert!(plan.doc_group.iter().all(|&g| (g as usize) < p));
+                assert!(plan.word_group.iter().all(|&g| (g as usize) < p));
+                if bow.num_tokens() > 0 {
+                    assert!(plan.eta > 0.0 && plan.eta <= 1.0 + 1e-12);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! Cost function and load-balancing ratio (paper Eq. 1–2).
+//!
+//! Given group assignments, the `P×P` cost matrix is accumulated in a
+//! single pass over the nonzero cells of the workload matrix:
+//! `C_mn = Σ_{j∈J_m, w∈V_n} r_jw`. Diagonal `l` holds partitions
+//! `(m, (m+l) mod P)`; its epoch cost is the max over `m`, and
+//! `C = Σ_l max_m C_{m,(m+l) mod P}`, `η = C_opt / C`, `C_opt = N/P`.
+
+use crate::corpus::bow::BagOfWords;
+
+/// Dense `P×P` token-cost matrix, row-major.
+#[derive(Clone, Debug)]
+pub struct CostMatrix {
+    p: usize,
+    costs: Vec<u64>,
+}
+
+impl CostMatrix {
+    /// Accumulate partition costs from the corpus in one nnz pass.
+    pub fn compute(bow: &BagOfWords, doc_group: &[u32], word_group: &[u32]) -> Self {
+        let p = doc_group
+            .iter()
+            .chain(word_group.iter())
+            .max()
+            .map(|&g| g as usize + 1)
+            .unwrap_or(1);
+        Self::compute_p(bow, doc_group, word_group, p)
+    }
+
+    /// Same, with an explicit `P` (groups may be empty).
+    pub fn compute_p(
+        bow: &BagOfWords,
+        doc_group: &[u32],
+        word_group: &[u32],
+        p: usize,
+    ) -> Self {
+        assert_eq!(doc_group.len(), bow.num_docs());
+        assert_eq!(word_group.len(), bow.num_words());
+        let mut costs = vec![0u64; p * p];
+        for j in 0..bow.num_docs() {
+            let m = doc_group[j] as usize;
+            let row = &mut costs[m * p..(m + 1) * p];
+            for e in bow.doc(j) {
+                row[word_group[e.word as usize] as usize] += e.count as u64;
+            }
+        }
+        Self { p, costs }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn get(&self, m: usize, n: usize) -> u64 {
+        self.costs[m * self.p + n]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.costs.iter().sum()
+    }
+
+    /// Epoch cost of diagonal `l`: `max_m C_{m,(m+l) mod P}`.
+    pub fn diagonal_max(&self, l: usize) -> u64 {
+        (0..self.p)
+            .map(|m| self.get(m, (m + l) % self.p))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Tokens on diagonal `l`.
+    pub fn diagonal_sum(&self, l: usize) -> u64 {
+        (0..self.p).map(|m| self.get(m, (m + l) % self.p)).sum()
+    }
+
+    /// Eq. 1: `C = Σ_l max_m C_{m,(m+l) mod P}`.
+    pub fn sweep_cost(&self) -> u64 {
+        (0..self.p).map(|l| self.diagonal_max(l)).sum()
+    }
+}
+
+/// η and its ingredients, for reporting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EtaReport {
+    pub eta: f64,
+    /// Eq. 1 sweep cost in tokens.
+    pub cost: f64,
+    /// `C_opt = N / P`.
+    pub opt: f64,
+}
+
+/// Eq. 2: `η = C_opt / C` for a group assignment.
+pub fn eta(bow: &BagOfWords, doc_group: &[u32], word_group: &[u32], p: usize) -> EtaReport {
+    let costs = CostMatrix::compute_p(bow, doc_group, word_group, p);
+    eta_of_costs(&costs, bow.num_tokens())
+}
+
+/// η from a precomputed cost matrix.
+pub fn eta_of_costs(costs: &CostMatrix, num_tokens: u64) -> EtaReport {
+    let c = costs.sweep_cost() as f64;
+    let opt = num_tokens as f64 / costs.p() as f64;
+    let eta = if c > 0.0 { opt / c } else { 1.0 };
+    EtaReport { eta, cost: c, opt }
+}
+
+/// The theoretical speedup of the partitioned parallel algorithm
+/// (paper §VI-C): `speedup ≈ η · P`.
+pub fn speedup(eta: f64, p: usize) -> f64 {
+    eta * p as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::bow::BagOfWords;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    /// 2-doc, 2-word corpus with a perfectly balanced 2×2 split.
+    #[test]
+    fn perfect_balance_eta_one() {
+        // r = [[2, 1], [1, 2]]; groups: doc i → i, word i → i.
+        let bow = BagOfWords::from_triplets(
+            2,
+            2,
+            [(0, 0, 2), (0, 1, 1), (1, 0, 1), (1, 1, 2)],
+        );
+        let r = eta(&bow, &[0, 1], &[0, 1], 2);
+        // Diagonals: l=0 → {C00=2, C11=2} max 2; l=1 → {C01=1, C10=1} max 1.
+        // C = 3, opt = 6/2 = 3 → η = 1.
+        assert!((r.eta - 1.0).abs() < 1e-12);
+        assert_eq!(r.cost, 3.0);
+    }
+
+    #[test]
+    fn imbalance_lowers_eta() {
+        // All mass in one partition.
+        let bow = BagOfWords::from_triplets(2, 2, [(0, 0, 8), (1, 1, 1)]);
+        let r = eta(&bow, &[0, 1], &[0, 1], 2);
+        // C00=8, C11=1 → diag0 max 8; diag1 max 0. C=8, opt=4.5, η=0.5625.
+        assert!((r.eta - 4.5 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_matrix_entries() {
+        let bow = BagOfWords::from_triplets(
+            3,
+            3,
+            [(0, 0, 1), (0, 2, 2), (1, 1, 3), (2, 0, 4), (2, 2, 5)],
+        );
+        let cm = CostMatrix::compute_p(&bow, &[0, 1, 2], &[0, 1, 2], 3);
+        assert_eq!(cm.get(0, 0), 1);
+        assert_eq!(cm.get(0, 2), 2);
+        assert_eq!(cm.get(1, 1), 3);
+        assert_eq!(cm.get(2, 0), 4);
+        assert_eq!(cm.get(2, 2), 5);
+        assert_eq!(cm.total(), 15);
+        assert_eq!(cm.total(), bow.num_tokens());
+    }
+
+    #[test]
+    fn diagonal_partition_cover_is_exact() {
+        // Every partition belongs to exactly one diagonal ⇒ Σ_l diag_sum(l)
+        // = total tokens.
+        prop::check("diagonal-cover", 0xD1A6, 32, |rng| {
+            let d = prop::gen_size(rng, 1, 40);
+            let w = prop::gen_size(rng, 1, 40);
+            let p = 1 + rng.gen_range(8);
+            let bow = random_bow(rng, d, w);
+            let (dg, wg) = random_groups(rng, d, w, p);
+            let cm = CostMatrix::compute_p(&bow, &dg, &wg, p);
+            let diag_total: u64 = (0..p).map(|l| cm.diagonal_sum(l)).sum();
+            assert_eq!(diag_total, bow.num_tokens());
+            assert_eq!(cm.total(), bow.num_tokens());
+        });
+    }
+
+    #[test]
+    fn eta_bounds_property() {
+        prop::check("eta-bounds", 0xE7A, 32, |rng| {
+            let d = prop::gen_size(rng, 1, 60);
+            let w = prop::gen_size(rng, 1, 60);
+            let p = 1 + rng.gen_range(8);
+            let bow = random_bow(rng, d, w);
+            if bow.num_tokens() == 0 {
+                return;
+            }
+            let (dg, wg) = random_groups(rng, d, w, p);
+            let r = eta(&bow, &dg, &wg, p);
+            assert!(r.eta > 0.0 && r.eta <= 1.0 + 1e-12, "eta {}", r.eta);
+            assert!(r.cost >= r.opt - 1e-9, "C {} < C_opt {}", r.cost, r.opt);
+        });
+    }
+
+    fn random_bow(rng: &mut Rng, d: usize, w: usize) -> BagOfWords {
+        let nnz = prop::gen_size(rng, 1, d * w.min(20));
+        let triplets: Vec<(u32, u32, u32)> = (0..nnz)
+            .map(|_| {
+                (
+                    rng.gen_range(d) as u32,
+                    rng.gen_range(w) as u32,
+                    1 + rng.gen_range(9) as u32,
+                )
+            })
+            .collect();
+        BagOfWords::from_triplets(d, w, triplets)
+    }
+
+    fn random_groups(
+        rng: &mut Rng,
+        d: usize,
+        w: usize,
+        p: usize,
+    ) -> (Vec<u32>, Vec<u32>) {
+        (
+            (0..d).map(|_| rng.gen_range(p) as u32).collect(),
+            (0..w).map(|_| rng.gen_range(p) as u32).collect(),
+        )
+    }
+
+    #[test]
+    fn speedup_model() {
+        assert_eq!(speedup(0.5, 10), 5.0);
+        assert_eq!(speedup(1.0, 30), 30.0);
+    }
+}

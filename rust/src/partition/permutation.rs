@@ -1,0 +1,193 @@
+//! Row/column orderings implementing the paper's three heuristics.
+//!
+//! Each function takes item weights (row workloads `RR_j` or column
+//! workloads `CR_w`) and returns an *ordering* — a permutation of item
+//! ids — which [`crate::partition::split`] then cuts into `P` consecutive
+//! groups of approximately equal token mass.
+
+use crate::util::rng::Rng;
+
+/// Item ids sorted by weight, descending (ties by id for determinism).
+pub fn sorted_desc(weights: &[u64]) -> Vec<u32> {
+    let mut ids: Vec<u32> = (0..weights.len() as u32).collect();
+    ids.sort_by(|&a, &b| {
+        weights[b as usize]
+            .cmp(&weights[a as usize])
+            .then(a.cmp(&b))
+    });
+    ids
+}
+
+/// Heuristic 1 (Algorithm A1): interpose long and short items from the
+/// *front*: `[L1, S1, L2, S2, …, median]`.
+pub fn interpose_front(weights: &[u64]) -> Vec<u32> {
+    let sorted = sorted_desc(weights);
+    let n = sorted.len();
+    let mut out = Vec::with_capacity(n);
+    let (mut lo, mut hi) = (0usize, n);
+    // Alternate: longest remaining, then shortest remaining.
+    while lo < hi {
+        out.push(sorted[lo]);
+        lo += 1;
+        if lo < hi {
+            hi -= 1;
+            out.push(sorted[hi]);
+        }
+    }
+    out
+}
+
+/// Heuristic 2 (Algorithm A2): sort descending, then swap even 1-based
+/// positions `i < n/2` with their mirror `n+1-i`, interposing long and
+/// short from *both ends* of the list.
+pub fn interpose_both_ends(weights: &[u64]) -> Vec<u32> {
+    let mut out = sorted_desc(weights);
+    let n = out.len();
+    // Paper Algorithm 2, 1-based: for i in 1..n/2, if i mod 2 == 0,
+    // swap RR_i with RR_{n+1-i}.
+    let mut i = 2usize;
+    while i < n / 2 {
+        out.swap(i - 1, n - i);
+        i += 2;
+    }
+    out
+}
+
+/// Heuristic 3 core (one randomized draw of Algorithm A3): sort
+/// descending, slice into strata of `p` consecutive items, deal one item
+/// of each stratum to each of `p` buckets (uniformly within the stratum),
+/// shuffle each bucket, concatenate. Every window of the result then
+/// contains items of all length classes.
+pub fn stratified_shuffle(weights: &[u64], p: usize, rng: &mut Rng) -> Vec<u32> {
+    assert!(p >= 1);
+    let sorted = sorted_desc(weights);
+    let n = sorted.len();
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::with_capacity(n / p + 1); p];
+
+    let mut stratum = Vec::with_capacity(p);
+    for chunk in sorted.chunks(p) {
+        stratum.clear();
+        stratum.extend_from_slice(chunk);
+        rng.shuffle(&mut stratum);
+        for (i, &item) in stratum.iter().enumerate() {
+            buckets[i].push(item);
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    for bucket in &mut buckets {
+        rng.shuffle(bucket);
+        out.extend_from_slice(bucket);
+    }
+    out
+}
+
+/// Baseline (Yan et al.): uniform random permutation.
+pub fn uniform_shuffle(n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut out: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut out);
+    out
+}
+
+fn is_permutation(order: &[u32], n: usize) -> bool {
+    if order.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &i in order {
+        if (i as usize) >= n || seen[i as usize] {
+            return false;
+        }
+        seen[i as usize] = true;
+    }
+    true
+}
+
+/// Debug-check helper exposed for property tests.
+pub fn assert_permutation(order: &[u32], n: usize) {
+    assert!(is_permutation(order, n), "not a permutation of 0..{n}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn sorted_desc_orders() {
+        let w = [3u64, 9, 1, 9];
+        assert_eq!(sorted_desc(&w), vec![1, 3, 0, 2]); // ties by id
+    }
+
+    #[test]
+    fn interpose_front_pattern() {
+        // weights: ids 0..6 with weight = id → sorted desc [5,4,3,2,1,0]
+        let w: Vec<u64> = (0..6).collect();
+        // L1,S1,L2,S2,L3,S3 = 5,0,4,1,3,2
+        assert_eq!(interpose_front(&w), vec![5, 0, 4, 1, 3, 2]);
+    }
+
+    #[test]
+    fn interpose_front_odd_length() {
+        let w: Vec<u64> = (0..5).collect(); // sorted desc [4,3,2,1,0]
+        assert_eq!(interpose_front(&w), vec![4, 0, 3, 1, 2]);
+    }
+
+    #[test]
+    fn interpose_both_ends_pattern() {
+        // n=8, sorted desc ids = [7,6,5,4,3,2,1,0].
+        // 1-based even i < 4: i=2 → swap positions 2 and 7 (1-based).
+        let w: Vec<u64> = (0..8).collect();
+        assert_eq!(interpose_both_ends(&w), vec![7, 1, 5, 4, 3, 2, 6, 0]);
+    }
+
+    #[test]
+    fn all_orderings_are_permutations() {
+        prop::check("orderings-are-permutations", 0xA11, 48, |rng| {
+            let n = prop::gen_size(rng, 1, 500);
+            let w = prop::gen_heavy_tailed(rng, n, 10_000)
+                .into_iter()
+                .map(u64::from)
+                .collect::<Vec<_>>();
+            let p = 1 + rng.gen_range(16);
+            assert_permutation(&interpose_front(&w), n);
+            assert_permutation(&interpose_both_ends(&w), n);
+            assert_permutation(&stratified_shuffle(&w, p, rng), n);
+            assert_permutation(&uniform_shuffle(n, rng), n);
+        });
+    }
+
+    #[test]
+    fn stratified_distributes_length_classes() {
+        // After stratified shuffle with p buckets, each contiguous n/p
+        // window must contain one item from (almost) every stratum, so
+        // window mass is near-uniform — unlike the sorted order.
+        let mut rng = crate::util::rng::Rng::new(77);
+        let n = 400;
+        let p = 8;
+        let w: Vec<u64> = (0..n as u64).map(|i| (i + 1) * (i + 1)).collect();
+        let order = stratified_shuffle(&w, p, &mut rng);
+        let window = n / p;
+        let masses: Vec<u64> = (0..p)
+            .map(|b| {
+                order[b * window..(b + 1) * window]
+                    .iter()
+                    .map(|&i| w[i as usize])
+                    .sum()
+            })
+            .collect();
+        let max = *masses.iter().max().unwrap() as f64;
+        let min = *masses.iter().min().unwrap() as f64;
+        assert!(
+            max / min < 1.25,
+            "stratified windows should be near-uniform: {masses:?}"
+        );
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(interpose_front(&[]).is_empty());
+        assert!(interpose_both_ends(&[]).is_empty());
+        let mut rng = crate::util::rng::Rng::new(1);
+        assert!(stratified_shuffle(&[], 4, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,167 @@
+//! The `P×P` partition map (paper Fig. 1): materialized per-partition cell
+//! lists plus the diagonal structure the scheduler executes.
+//!
+//! Diagonal `l` consists of the partitions `(m, (m+l) mod P)` for
+//! `m = 0..P`. Within a diagonal the row groups `{J_m}` are pairwise
+//! disjoint and the column groups `{V_{(m+l) mod P}}` are pairwise
+//! disjoint, so the `P` partitions touch disjoint rows of the
+//! document–topic counts and disjoint columns of the topic–word counts —
+//! the read–write non-conflict property that lets them be sampled in
+//! parallel on shared state (only the topic totals `n_k` race, which the
+//! engine handles with per-worker deltas merged at the epoch barrier).
+
+use crate::corpus::bow::BagOfWords;
+use crate::partition::Plan;
+
+/// One nonzero cell of a partition: document, word, count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub doc: u32,
+    pub word: u32,
+    pub count: u32,
+}
+
+/// Materialized partitions of one corpus under one plan.
+#[derive(Clone, Debug)]
+pub struct PartitionMap {
+    p: usize,
+    /// Cells per partition, row-major `[m * p + n]`. Within a partition,
+    /// cells are grouped by document (ascending) then word (ascending).
+    cells: Vec<Vec<Cell>>,
+    /// Token count per partition (must equal `Plan.costs`).
+    tokens: Vec<u64>,
+}
+
+impl PartitionMap {
+    /// Distribute every nonzero cell of `bow` into its partition.
+    pub fn build(bow: &BagOfWords, plan: &Plan) -> Self {
+        let p = plan.p;
+        assert_eq!(plan.doc_group.len(), bow.num_docs());
+        assert_eq!(plan.word_group.len(), bow.num_words());
+        let mut cells: Vec<Vec<Cell>> = vec![Vec::new(); p * p];
+        let mut tokens = vec![0u64; p * p];
+        for j in 0..bow.num_docs() {
+            let m = plan.doc_group[j] as usize;
+            for e in bow.doc(j) {
+                let n = plan.word_group[e.word as usize] as usize;
+                cells[m * p + n].push(Cell {
+                    doc: j as u32,
+                    word: e.word,
+                    count: e.count,
+                });
+                tokens[m * p + n] += e.count as u64;
+            }
+        }
+        Self { p, cells, tokens }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn cells(&self, m: usize, n: usize) -> &[Cell] {
+        &self.cells[m * self.p + n]
+    }
+
+    #[inline]
+    pub fn tokens(&self, m: usize, n: usize) -> u64 {
+        self.tokens[m * self.p + n]
+    }
+
+    /// The partitions of diagonal `l`, as `(m, n)` pairs — the unit of
+    /// parallel execution.
+    pub fn diagonal(&self, l: usize) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let p = self.p;
+        (0..p).map(move |m| (m, (m + l) % p))
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.tokens.iter().sum()
+    }
+
+    /// Memory footprint of the materialized cells, in bytes.
+    pub fn cell_bytes(&self) -> usize {
+        self.cells.iter().map(|c| c.len() * std::mem::size_of::<Cell>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::partition::{partition, Algorithm};
+    use crate::testing::prop;
+
+    fn build_tiny(p: usize, seed: u64) -> (BagOfWords, Plan, PartitionMap) {
+        let bow = generate(&Profile::tiny(), seed);
+        let plan = partition(&bow, p, Algorithm::A3 { restarts: 2 }, seed);
+        let map = PartitionMap::build(&bow, &plan);
+        (bow, plan, map)
+    }
+
+    #[test]
+    fn cells_cover_all_tokens() {
+        let (bow, plan, map) = build_tiny(4, 1);
+        assert_eq!(map.total_tokens(), bow.num_tokens());
+        // Per-partition counts agree with the plan's cost matrix.
+        for m in 0..4 {
+            for n in 0..4 {
+                assert_eq!(map.tokens(m, n), plan.costs.get(m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn cells_respect_their_groups() {
+        let (_bow, plan, map) = build_tiny(3, 2);
+        for m in 0..3 {
+            for n in 0..3 {
+                for c in map.cells(m, n) {
+                    assert_eq!(plan.doc_group[c.doc as usize] as usize, m);
+                    assert_eq!(plan.word_group[c.word as usize] as usize, n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonals_enumerate_all_partitions_once() {
+        let (_bow, _plan, map) = build_tiny(5, 3);
+        let mut seen = vec![false; 25];
+        for l in 0..5 {
+            for (m, n) in map.diagonal(l) {
+                assert!(!seen[m * 5 + n], "partition visited twice");
+                seen[m * 5 + n] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn diagonal_nonconflict_property() {
+        // Fig. 1's invariant: within any diagonal, no two partitions share
+        // a row group or a column group.
+        prop::check("diagonal-nonconflict", 0xF161, 32, |rng| {
+            let p = 1 + rng.gen_range(12);
+            for l in 0..p {
+                let mut rows_seen = vec![false; p];
+                let mut cols_seen = vec![false; p];
+                for m in 0..p {
+                    let n = (m + l) % p;
+                    assert!(!rows_seen[m] && !cols_seen[n], "conflict in diagonal");
+                    rows_seen[m] = true;
+                    cols_seen[n] = true;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cell_bytes_reports_footprint() {
+        let (_bow, _plan, map) = build_tiny(2, 4);
+        assert!(map.cell_bytes() > 0);
+        assert_eq!(map.cell_bytes() % std::mem::size_of::<Cell>(), 0);
+    }
+}

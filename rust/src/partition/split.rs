@@ -1,0 +1,158 @@
+//! Cut an ordered item list into `P` consecutive groups of approximately
+//! equal weight (paper: "Divide RR into P consecutive groups J_1..J_P,
+//! each one having an equal number of word tokens").
+//!
+//! Each item is assigned by the *midpoint rule*: an item whose prefix-mass
+//! midpoint `cum + w/2` falls inside `[g·total/P, (g+1)·total/P)` joins
+//! group `g`. Midpoints are strictly increasing along the order, so groups
+//! are consecutive by construction; a group's mass exceeds the ideal
+//! `total/P` by at most one item's weight — exact in the regime where item
+//! weights are small relative to `total/P` (document/word workloads), and
+//! graceful in the degenerate regimes (P > n, giant single items, empty
+//! groups when unavoidable).
+
+/// Assign group ids (`0..p`) to items *in the given order*; returns a
+/// vector parallel to `order` mapping item id → group.
+pub fn split_equal_mass(order: &[u32], weights: &[u64], p: usize) -> Vec<u32> {
+    assert!(p >= 1);
+    let n = order.len();
+    let mut group_of = vec![0u32; weights.len()];
+    if n == 0 {
+        return group_of;
+    }
+    let total: u64 = order.iter().map(|&i| weights[i as usize]).sum();
+    if p == 1 {
+        return group_of;
+    }
+    if total == 0 {
+        // Zero-mass list: spread items round-robin-in-order so groups stay
+        // roughly equal-sized (still consecutive since items have no mass).
+        for (pos, &i) in order.iter().enumerate() {
+            group_of[i as usize] = ((pos * p) / n) as u32;
+        }
+        return group_of;
+    }
+
+    let mut cum = 0u64; // mass emitted before the current item
+    for &item in order {
+        let w = weights[item as usize];
+        // Midpoint rule: 2*mid*p / (2*total), computed in u128 to avoid
+        // overflow on corpus-scale token counts.
+        let mid2 = 2 * cum as u128 + w as u128; // 2 × midpoint
+        let g = (mid2 * p as u128 / (2 * total as u128)).min(p as u128 - 1);
+        group_of[item as usize] = g as u32;
+        cum += w;
+    }
+    group_of
+}
+
+/// Split into `P` consecutive groups of equal *cardinality* (ignoring
+/// weights) — the split used by the Yan et al. baseline, which balances
+/// index ranges rather than token mass.
+pub fn split_equal_count(order: &[u32], p: usize) -> Vec<u32> {
+    assert!(p >= 1);
+    let n = order.len();
+    let mut group_of = vec![0u32; n];
+    for (pos, &item) in order.iter().enumerate() {
+        group_of[item as usize] = ((pos * p) / n.max(1)) as u32;
+    }
+    group_of
+}
+
+/// Total weight per group (diagnostic).
+pub fn group_masses(group_of: &[u32], weights: &[u64], p: usize) -> Vec<u64> {
+    let mut masses = vec![0u64; p];
+    for (i, &g) in group_of.iter().enumerate() {
+        masses[g as usize] += weights[i];
+    }
+    masses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn uniform_items_split_evenly() {
+        let order: Vec<u32> = (0..12).collect();
+        let w = vec![1u64; 12];
+        let g = split_equal_mass(&order, &w, 4);
+        let masses = group_masses(&g, &w, 4);
+        assert_eq!(masses, vec![3, 3, 3, 3]);
+        // Groups are consecutive in order.
+        assert_eq!(g, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn skewed_items_balance_mass_not_count() {
+        let order: Vec<u32> = (0..4).collect();
+        let w = vec![9u64, 1, 1, 1];
+        let g = split_equal_mass(&order, &w, 2);
+        let masses = group_masses(&g, &w, 2);
+        // Best cut: [9] vs [1,1,1].
+        assert_eq!(masses, vec![9, 3]);
+    }
+
+    #[test]
+    fn p1_everything_one_group() {
+        let order: Vec<u32> = (0..5).collect();
+        let g = split_equal_mass(&order, &[5, 4, 3, 2, 1], 1);
+        assert!(g.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn zero_mass_round_robins() {
+        let order: Vec<u32> = (0..6).collect();
+        let g = split_equal_mass(&order, &[0; 6], 3);
+        let mut counts = [0; 3];
+        for &x in &g {
+            counts[x as usize] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2]);
+    }
+
+    #[test]
+    fn fewer_items_than_groups() {
+        let order: Vec<u32> = (0..2).collect();
+        let g = split_equal_mass(&order, &[5, 5], 4);
+        // Each item its own group; trailing groups empty is fine.
+        assert!(g[0] != g[1]);
+    }
+
+    #[test]
+    fn groups_monotone_along_order_property() {
+        prop::check("split-monotone", 0x5911, 64, |rng| {
+            let n = prop::gen_size(rng, 1, 300);
+            let w: Vec<u64> = prop::gen_heavy_tailed(rng, n, 5_000)
+                .into_iter()
+                .map(u64::from)
+                .collect();
+            let p = 1 + rng.gen_range(12);
+            let order: Vec<u32> = {
+                let mut o: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut o);
+                o
+            };
+            let g = split_equal_mass(&order, &w, p);
+            // Monotone non-decreasing group ids along the order, all < p.
+            let mut prev = 0u32;
+            for &item in &order {
+                let gi = g[item as usize];
+                assert!(gi >= prev && (gi as usize) < p, "non-monotone groups");
+                prev = gi;
+            }
+            // Balance: every group's mass ≤ ideal + max item weight.
+            let total: u64 = w.iter().sum();
+            let masses = group_masses(&g, &w, p);
+            let wmax = *w.iter().max().unwrap() as f64;
+            let ideal = total as f64 / p as f64;
+            for &m in &masses {
+                assert!(
+                    (m as f64) <= ideal + wmax + 1e-9,
+                    "group mass {m} > ideal {ideal} + wmax {wmax}"
+                );
+            }
+        });
+    }
+}

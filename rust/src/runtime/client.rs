@@ -1,0 +1,41 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`/`!Sync`), so the
+//! client is cached per thread rather than process-wide. All XLA-path
+//! execution happens on the coordinator thread anyway — the parallel
+//! Gibbs workers use the native kernel; the XLA backend is a
+//! single-threaded batched executor (see `sampler_xla`).
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+use xla::PjRtClient;
+
+thread_local! {
+    static CLIENT: RefCell<Option<PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// This thread's CPU client (created on first use, then cached; the
+/// returned handle is a cheap `Rc` clone).
+pub fn cpu() -> Result<PjRtClient> {
+    CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(PjRtClient::cpu()?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_initializes() {
+        let c = super::cpu().expect("PJRT CPU client");
+        assert!(c.device_count() >= 1);
+        let name = c.platform_name().to_lowercase();
+        assert!(name.contains("cpu") || name.contains("host"), "{name}");
+        // Second call reuses the cached client (cheap clone, no crash).
+        let _ = super::cpu().unwrap();
+    }
+}

@@ -1,0 +1,263 @@
+//! Artifact discovery + compiled-executable wrappers.
+//!
+//! `artifacts/manifest.tsv` (written by python/compile/aot.py) maps
+//! `(kind, batch, topics)` to an HLO text file. [`Artifacts`] parses it;
+//! [`SamplerExe`] / [`LoglikExe`] compile one entry on the PJRT CPU
+//! client and expose typed `run` methods matching the L2 signatures:
+//!
+//! ```text
+//! sampler(njk[B,K], nkw[B,K], nk[1,K], unif[B,K], params[1,4]) -> (z[B],)
+//! loglik (njk[B,K], nj[B,1], nkw[B,K], nk[1,K], params[1,4])
+//!                                             -> (sum[], ll[B])
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::client;
+
+/// Parsed manifest of available artifacts.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    dir: PathBuf,
+    /// (kind, batch, topics) → file name.
+    entries: BTreeMap<(String, usize, usize), String>,
+}
+
+impl Artifacts {
+    /// Parse `<dir>/manifest.tsv`. Errors if the manifest is missing —
+    /// callers that want optional behaviour should check
+    /// [`Artifacts::available`] first.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {}", manifest.display()))?;
+        let mut entries = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {} malformed: {line:?}", i + 1);
+            }
+            let kind = cols[0].to_string();
+            let batch: usize = cols[1].parse().context("batch")?;
+            let k: usize = cols[2].parse().context("topics")?;
+            entries.insert((kind, batch, k), cols[3].to_string());
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// True if an artifact directory with a manifest exists.
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.tsv").is_file()
+    }
+
+    /// Default artifact location: `$PPLDA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PPLDA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn variants(&self, kind: &str) -> Vec<(usize, usize)> {
+        self.entries
+            .keys()
+            .filter(|(k, _, _)| k == kind)
+            .map(|&(_, b, t)| (b, t))
+            .collect()
+    }
+
+    fn path_for(&self, kind: &str, batch: usize, k: usize) -> Result<PathBuf> {
+        match self
+            .entries
+            .get(&(kind.to_string(), batch, k))
+        {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!(
+                "no {kind} artifact for batch={batch} topics={k}; available: {:?}",
+                self.variants(kind)
+            ),
+        }
+    }
+
+    /// Compile the sampler for `(batch, k)`.
+    pub fn sampler(&self, batch: usize, k: usize) -> Result<SamplerExe> {
+        let exe = compile(&self.path_for("sampler", batch, k)?)?;
+        Ok(SamplerExe { exe, batch, k })
+    }
+
+    /// Compile the log-likelihood kernel for `(batch, k)`.
+    pub fn loglik(&self, batch: usize, k: usize) -> Result<LoglikExe> {
+        let exe = compile(&self.path_for("loglik", batch, k)?)?;
+        Ok(LoglikExe { exe, batch, k })
+    }
+}
+
+fn compile(path: &Path) -> Result<PjRtLoadedExecutable> {
+    let client = client::cpu()?;
+    let proto = HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compile {}", path.display()))
+}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Compiled topic-sampling kernel (Gumbel-max collapsed-Gibbs draw).
+pub struct SamplerExe {
+    exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub k: usize,
+}
+
+impl SamplerExe {
+    /// All slices must match the compiled shapes: `njk`, `nkw`, `unif`
+    /// are `[batch*k]`, `nk` is `[k]`, `params` is `(α, β, Kα, Wβ)`.
+    pub fn run(
+        &self,
+        njk: &[f32],
+        nkw: &[f32],
+        nk: &[f32],
+        unif: &[f32],
+        params: [f32; 4],
+    ) -> Result<Vec<i32>> {
+        let b = self.batch;
+        let k = self.k;
+        let args = [
+            literal_2d(njk, b, k)?,
+            literal_2d(nkw, b, k)?,
+            literal_2d(nk, 1, k)?,
+            literal_2d(unif, b, k)?,
+            literal_2d(&params, 1, 4)?,
+        ];
+        let result = self.exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let z = result.to_tuple1()?;
+        Ok(z.to_vec::<i32>()?)
+    }
+}
+
+/// Compiled per-token log-likelihood kernel.
+pub struct LoglikExe {
+    exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub k: usize,
+}
+
+impl LoglikExe {
+    /// Returns (batch sum, per-token log-likelihoods).
+    pub fn run(
+        &self,
+        njk: &[f32],
+        nj: &[f32],
+        nkw: &[f32],
+        nk: &[f32],
+        params: [f32; 4],
+    ) -> Result<(f32, Vec<f32>)> {
+        let b = self.batch;
+        let k = self.k;
+        let args = [
+            literal_2d(njk, b, k)?,
+            literal_2d(nj, b, 1)?,
+            literal_2d(nkw, b, k)?,
+            literal_2d(nk, 1, k)?,
+            literal_2d(&params, 1, 4)?,
+        ];
+        let result = self.exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let (sum, ll) = result.to_tuple2()?;
+        Ok((sum.to_vec::<f32>()?[0], ll.to_vec::<f32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Artifacts> {
+        let dir = Artifacts::default_dir();
+        if !Artifacts::available(&dir) {
+            eprintln!("skipping runtime test: no artifacts at {dir:?} (run `make artifacts`)");
+            return None;
+        }
+        Some(Artifacts::discover(dir).unwrap())
+    }
+
+    #[test]
+    fn manifest_discovery_lists_variants() {
+        let Some(a) = artifacts() else { return };
+        let variants = a.variants("sampler");
+        assert!(!variants.is_empty());
+        assert!(a.variants("loglik").len() == variants.len());
+        assert!(a.sampler(999_999, 3).is_err(), "unknown variant must error");
+    }
+
+    #[test]
+    fn sampler_runs_and_respects_dominant_topic() {
+        let Some(a) = artifacts() else { return };
+        let (b, k) = a.variants("sampler")[0];
+        let exe = a.sampler(b, k).unwrap();
+        // Topic 3 has overwhelming counts for every token → argmax must
+        // pick it regardless of Gumbel noise.
+        let mut njk = vec![0.0f32; b * k];
+        let mut nkw = vec![0.0f32; b * k];
+        for i in 0..b {
+            njk[i * k + 3] = 1e6;
+            nkw[i * k + 3] = 1e6;
+        }
+        let nk = vec![1.0f32; k];
+        let unif = vec![0.5f32; b * k];
+        let z = exe
+            .run(&njk, &nkw, &nk, &unif, [0.5, 0.1, 0.5 * k as f32, 0.1 * 100.0])
+            .unwrap();
+        assert_eq!(z.len(), b);
+        assert!(z.iter().all(|&t| t == 3), "expected all 3s");
+    }
+
+    #[test]
+    fn loglik_matches_native_computation() {
+        let Some(a) = artifacts() else { return };
+        let (b, k) = a.variants("loglik")[0];
+        let exe = a.loglik(b, k).unwrap();
+        let (alpha, beta, w) = (0.5f32, 0.1f32, 1000usize);
+        // Small deterministic counts.
+        let njk: Vec<f32> = (0..b * k).map(|i| ((i * 7) % 5) as f32).collect();
+        let nkw: Vec<f32> = (0..b * k).map(|i| ((i * 11) % 4) as f32).collect();
+        let nk: Vec<f32> = (0..k).map(|t| 50.0 + t as f32).collect();
+        let nj: Vec<f32> = (0..b)
+            .map(|i| njk[i * k..(i + 1) * k].iter().sum())
+            .collect();
+        let params = [alpha, beta, alpha * k as f32, beta * w as f32];
+        let (sum, ll) = exe.run(&njk, &nj, &nkw, &nk, params).unwrap();
+        assert_eq!(ll.len(), b);
+
+        // Native reference.
+        for i in 0..b {
+            let mut p = 0.0f64;
+            for t in 0..k {
+                let theta = (njk[i * k + t] as f64 + alpha as f64)
+                    / (nj[i] as f64 + (alpha * k as f32) as f64);
+                let phi = (nkw[i * k + t] as f64 + beta as f64)
+                    / (nk[t] as f64 + (beta * w as f32) as f64);
+                p += theta * phi;
+            }
+            let want = p.ln();
+            assert!(
+                (ll[i] as f64 - want).abs() < 1e-4,
+                "token {i}: xla {} vs native {want}",
+                ll[i]
+            );
+        }
+        let native_sum: f64 = ll.iter().map(|&v| v as f64).sum();
+        assert!((sum as f64 - native_sum).abs() < native_sum.abs() * 1e-4 + 1e-3);
+    }
+}

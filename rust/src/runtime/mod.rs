@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and run them from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the binary self-contained afterwards. The interchange format is HLO
+//! *text* — the bundled xla_extension 0.5.1 rejects serialized protos
+//! from jax ≥ 0.5 (64-bit instruction ids), while the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod client;
+pub mod executor;
+pub mod sampler_xla;
+
+pub use executor::{Artifacts, LoglikExe, SamplerExe};

@@ -1,0 +1,264 @@
+//! XLA-offloaded sampling and perplexity backends.
+//!
+//! These drive the AOT-compiled JAX/Pallas kernels from the coordinator:
+//! the sweep is batched — for each batch of `B` tokens the coordinator
+//! gathers the count rows (with per-token self-exclusion on `n_jk`,
+//! `n_kw`), ships them to the compiled kernel, and applies the returned
+//! assignments as count deltas.
+//!
+//! Within a batch the gathered counts are frozen (the ESCA-style
+//! approximation): two tokens of the same document see the same stale
+//! row. The topic totals `n_k` are also batch-frozen without
+//! self-exclusion — an `O(1/n_k)` perturbation. Batch size therefore
+//! trades kernel efficiency against sampling fidelity; the native
+//! backend remains the exact reference and the equivalence tests in
+//! `rust/tests/` bound the perplexity gap.
+
+use anyhow::Result;
+
+use crate::corpus::bow::BagOfWords;
+use crate::gibbs::counts::LdaCounts;
+use crate::gibbs::sampler::Hyper;
+use crate::gibbs::tokens::TokenBlock;
+use crate::runtime::executor::{LoglikExe, SamplerExe};
+use crate::util::rng::Rng;
+
+fn params_of(h: &Hyper) -> [f32; 4] {
+    [h.alpha, h.beta, h.alpha * h.k as f32, h.wbeta]
+}
+
+/// Batched XLA sweep over a token block (serial semantics).
+pub struct XlaSampler {
+    exe: SamplerExe,
+    njk: Vec<f32>,
+    nkw: Vec<f32>,
+    nk: Vec<f32>,
+    unif: Vec<f32>,
+}
+
+impl XlaSampler {
+    pub fn new(exe: SamplerExe) -> Self {
+        let (b, k) = (exe.batch, exe.k);
+        Self {
+            exe,
+            njk: vec![0.0; b * k],
+            nkw: vec![0.0; b * k],
+            nk: vec![0.0; k],
+            unif: vec![0.0; b * k],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.exe.batch
+    }
+
+    /// One full sweep of `block` against `counts`, in batches of the
+    /// compiled size. Counts and assignments are updated in place.
+    pub fn sweep(
+        &mut self,
+        block: &mut TokenBlock,
+        counts: &mut LdaCounts,
+        h: &Hyper,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        assert_eq!(h.k, self.exe.k, "model K != compiled K");
+        let b = self.exe.batch;
+        let k = self.exe.k;
+        let params = params_of(h);
+
+        let mut start = 0;
+        while start < block.len() {
+            let len = (block.len() - start).min(b);
+
+            // Gather rows with per-token self-exclusion; pad the tail
+            // with benign zeros (outputs beyond `len` are ignored).
+            for i in 0..b {
+                let dst_njk = &mut self.njk[i * k..(i + 1) * k];
+                let dst_nkw = &mut self.nkw[i * k..(i + 1) * k];
+                if i < len {
+                    let t = start + i;
+                    let d = block.docs[t] as usize;
+                    let w = block.words[t] as usize;
+                    let old = block.z[t] as usize;
+                    dst_njk.copy_from_slice(counts.doc_row(d));
+                    dst_njk[old] -= 1.0;
+                    dst_nkw.copy_from_slice(counts.word_row(w));
+                    dst_nkw[old] -= 1.0;
+                } else {
+                    dst_njk.fill(0.0);
+                    dst_nkw.fill(0.0);
+                }
+            }
+            for (dst, &src) in self.nk.iter_mut().zip(&counts.topic) {
+                *dst = src as f32;
+            }
+            for u in &mut self.unif {
+                *u = rng.f32_open();
+            }
+
+            let z_new = self
+                .exe
+                .run(&self.njk, &self.nkw, &self.nk, &self.unif, params)?;
+
+            // Apply deltas.
+            for i in 0..len {
+                let t = start + i;
+                let d = block.docs[t] as usize;
+                let w = block.words[t] as usize;
+                let old = block.z[t] as usize;
+                let new = z_new[i] as usize;
+                debug_assert!(new < k);
+                if new != old {
+                    counts.doc_topic[d * k + old] -= 1.0;
+                    counts.doc_topic[d * k + new] += 1.0;
+                    counts.word_topic[w * k + old] -= 1.0;
+                    counts.word_topic[w * k + new] += 1.0;
+                    counts.topic[old] -= 1;
+                    counts.topic[new] += 1;
+                    block.z[t] = new as u32;
+                }
+            }
+            start += len;
+        }
+        Ok(())
+    }
+}
+
+/// Batched XLA perplexity over corpus cells (weighting per-token
+/// log-likelihoods by cell counts).
+pub struct XlaPerplexity {
+    exe: LoglikExe,
+    njk: Vec<f32>,
+    nj: Vec<f32>,
+    nkw: Vec<f32>,
+    nk: Vec<f32>,
+    weights: Vec<f64>,
+}
+
+impl XlaPerplexity {
+    pub fn new(exe: LoglikExe) -> Self {
+        let (b, k) = (exe.batch, exe.k);
+        Self {
+            exe,
+            njk: vec![0.0; b * k],
+            nj: vec![0.0; b],
+            nkw: vec![0.0; b * k],
+            nk: vec![0.0; k],
+            weights: vec![0.0; b],
+        }
+    }
+
+    pub fn perplexity(
+        &mut self,
+        bow: &BagOfWords,
+        counts: &LdaCounts,
+        h: &Hyper,
+    ) -> Result<f64> {
+        assert_eq!(h.k, self.exe.k, "model K != compiled K");
+        let b = self.exe.batch;
+        let k = self.exe.k;
+        let params = params_of(h);
+        for (dst, &src) in self.nk.iter_mut().zip(&counts.topic) {
+            *dst = src as f32;
+        }
+
+        let mut ll = 0.0f64;
+        let mut fill = 0usize;
+        // Iterate distinct cells; flush a batch whenever full.
+        for j in 0..bow.num_docs() {
+            let nj = counts.doc_len(j) as f32;
+            for e in bow.doc(j) {
+                let i = fill;
+                self.njk[i * k..(i + 1) * k].copy_from_slice(counts.doc_row(j));
+                self.nkw[i * k..(i + 1) * k]
+                    .copy_from_slice(counts.word_row(e.word as usize));
+                self.nj[i] = nj;
+                self.weights[i] = e.count as f64;
+                fill += 1;
+                if fill == b {
+                    ll += self.flush(fill, params)?;
+                    fill = 0;
+                }
+            }
+        }
+        if fill > 0 {
+            // Pad with harmless rows (weight 0).
+            for i in fill..b {
+                self.njk[i * k..(i + 1) * k].fill(0.0);
+                self.nkw[i * k..(i + 1) * k].fill(0.0);
+                self.nj[i] = 0.0;
+                self.weights[i] = 0.0;
+            }
+            ll += self.flush(b, params)?;
+        }
+        Ok((-ll / bow.num_tokens().max(1) as f64).exp())
+    }
+
+    fn flush(&mut self, rows: usize, params: [f32; 4]) -> Result<f64> {
+        let (_sum, per_token) =
+            self.exe
+                .run(&self.njk, &self.nj, &self.nkw, &self.nk, params)?;
+        Ok(per_token[..rows]
+            .iter()
+            .zip(&self.weights[..rows])
+            .map(|(&l, &w)| l as f64 * w)
+            .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::gibbs::perplexity as native_perplexity;
+    use crate::runtime::executor::Artifacts;
+
+    fn artifacts() -> Option<Artifacts> {
+        let dir = Artifacts::default_dir();
+        if !Artifacts::available(&dir) {
+            eprintln!("skipping xla sampler test: run `make artifacts` first");
+            return None;
+        }
+        Some(Artifacts::discover(dir).unwrap())
+    }
+
+    #[test]
+    fn xla_perplexity_matches_native() {
+        let Some(a) = artifacts() else { return };
+        let (b, k) = a.variants("loglik")[0];
+        let bow = generate(&Profile::tiny(), 71);
+        let mut rng = Rng::new(1);
+        let block = TokenBlock::from_corpus(&bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+        counts.absorb(&block);
+        let h = Hyper::new(k, 0.5, 0.1, bow.num_words());
+
+        let mut xp = XlaPerplexity::new(a.loglik(b, k).unwrap());
+        let xla = xp.perplexity(&bow, &counts, &h).unwrap();
+        let native = native_perplexity::perplexity(&bow, &counts, &h);
+        let rel = (xla - native).abs() / native;
+        assert!(rel < 1e-3, "xla {xla} vs native {native} (rel {rel})");
+    }
+
+    #[test]
+    fn xla_sweep_preserves_invariants_and_learns() {
+        let Some(a) = artifacts() else { return };
+        let (b, k) = a.variants("sampler")[0];
+        let bow = generate(&Profile::tiny(), 72);
+        let mut rng = Rng::new(2);
+        let mut block = TokenBlock::from_corpus(&bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+        counts.absorb(&block);
+        let h = Hyper::new(k, 0.5, 0.1, bow.num_words());
+        let p0 = native_perplexity::perplexity(&bow, &counts, &h);
+
+        let mut sampler = XlaSampler::new(a.sampler(b, k).unwrap());
+        for _ in 0..10 {
+            sampler.sweep(&mut block, &mut counts, &h, &mut rng).unwrap();
+        }
+        assert_eq!(counts.total(), bow.num_tokens());
+        assert!(counts.check_consistency(&[&block]).is_ok());
+        let p1 = native_perplexity::perplexity(&bow, &counts, &h);
+        assert!(p1 < p0 * 0.95, "XLA sweeps should learn: {p0} → {p1}");
+    }
+}

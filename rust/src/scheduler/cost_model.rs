@@ -1,0 +1,107 @@
+//! Epoch-cost speedup model (paper §VI-C): with per-token sampling cost
+//! roughly uniform, the parallel sweep time is `Σ_l max_m tokens(m,l) /
+//! rate` while the serial sweep is `N / rate`, so
+//!
+//! ```text
+//! speedup = N / Σ_l max_m tokens(m,l) = η · P
+//! ```
+//!
+//! The paper reports η rather than wallclock ("we did not record the
+//! exact running time"); this module turns a plan (or measured sweep
+//! stats) into the same speedup estimate, and can project wallclock for a
+//! measured single-core sampling rate — which is how the speedup bench
+//! reports results on a box with fewer physical cores than `P`.
+
+use crate::partition::Plan;
+use crate::scheduler::exec::SweepStats;
+
+/// Speedup projection for one plan.
+#[derive(Clone, Copy, Debug)]
+pub struct SpeedupReport {
+    pub p: usize,
+    pub eta: f64,
+    /// Predicted speedup `η·P`.
+    pub speedup: f64,
+    /// Serial sweep cost in tokens (N).
+    pub serial_tokens: u64,
+    /// Parallel sweep cost in tokens (Eq. 1).
+    pub parallel_tokens: u64,
+}
+
+impl SpeedupReport {
+    pub fn of_plan(plan: &Plan) -> Self {
+        let n = plan.costs.total();
+        let c = plan.costs.sweep_cost();
+        Self {
+            p: plan.p,
+            eta: plan.eta,
+            speedup: plan.eta * plan.p as f64,
+            serial_tokens: n,
+            parallel_tokens: c,
+        }
+    }
+
+    /// From measured sweep telemetry (validates the model against the
+    /// actual max-token epochs the engine executed).
+    pub fn of_stats(stats: &SweepStats, p: usize) -> Self {
+        let n = stats.total_tokens;
+        let c = stats.measured_cost().max(1);
+        let eta = n as f64 / p as f64 / c as f64;
+        Self {
+            p,
+            eta,
+            speedup: eta * p as f64,
+            serial_tokens: n,
+            parallel_tokens: c,
+        }
+    }
+
+    /// Projected parallel sweep seconds given a measured serial sampling
+    /// rate (tokens/sec on one core).
+    pub fn projected_sweep_secs(&self, tokens_per_sec: f64) -> f64 {
+        self.parallel_tokens as f64 / tokens_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::partition::{partition, Algorithm};
+    use crate::scheduler::exec::{ExecMode, ParallelLda};
+
+    #[test]
+    fn plan_and_stats_agree() {
+        let bow = generate(&Profile::tiny(), 41);
+        let plan = partition(&bow, 4, Algorithm::A2, 41);
+        let from_plan = SpeedupReport::of_plan(&plan);
+
+        let mut lda = ParallelLda::init(&bow, &plan, 4, 0.5, 0.1, 41);
+        let stats = lda.sweep(ExecMode::Sequential);
+        let from_stats = SpeedupReport::of_stats(&stats, 4);
+
+        assert_eq!(from_plan.parallel_tokens, from_stats.parallel_tokens);
+        assert_eq!(from_plan.serial_tokens, from_stats.serial_tokens);
+        assert!((from_plan.eta - from_stats.eta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_is_eta_p() {
+        let bow = generate(&Profile::tiny(), 42);
+        let plan = partition(&bow, 5, Algorithm::A3 { restarts: 3 }, 42);
+        let r = SpeedupReport::of_plan(&plan);
+        assert!((r.speedup - r.eta * 5.0).abs() < 1e-12);
+        assert!(r.speedup <= 5.0 + 1e-9);
+        assert!(r.speedup >= 1.0 - 1e-9); // eta ≥ 1/P always
+    }
+
+    #[test]
+    fn projection_scales_with_rate() {
+        let bow = generate(&Profile::tiny(), 43);
+        let plan = partition(&bow, 2, Algorithm::A1, 43);
+        let r = SpeedupReport::of_plan(&plan);
+        let slow = r.projected_sweep_secs(1e6);
+        let fast = r.projected_sweep_secs(2e6);
+        assert!((slow / fast - 2.0).abs() < 1e-9);
+    }
+}

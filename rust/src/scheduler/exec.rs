@@ -1,0 +1,284 @@
+//! The parallel LDA trainer: diagonal epochs over a partition plan.
+
+use std::time::Instant;
+
+use crate::corpus::bow::BagOfWords;
+use crate::gibbs::counts::LdaCounts;
+use crate::gibbs::perplexity;
+use crate::gibbs::sampler::{self, Hyper};
+use crate::gibbs::tokens::TokenBlock;
+use crate::partition::scheme::PartitionMap;
+use crate::partition::Plan;
+use crate::scheduler::shared::SharedRows;
+use crate::util::rng::Rng;
+
+/// Threaded = one OS thread per partition of the running diagonal;
+/// Sequential = same schedule executed in-order on the calling thread
+/// (identical results — worker RNG streams are keyed by position, not by
+/// interleaving).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Threaded,
+    Sequential,
+}
+
+/// Per-sweep timing/cost telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct SweepStats {
+    /// Wall time of each epoch (seconds).
+    pub epoch_secs: Vec<f64>,
+    /// Max worker token count per epoch (the paper's epoch cost).
+    pub epoch_max_tokens: Vec<u64>,
+    /// Sum of all workers' token counts (serial-equivalent work).
+    pub total_tokens: u64,
+}
+
+impl SweepStats {
+    /// Eq. 1-style measured cost: Σ_l max_m tokens(m, l).
+    pub fn measured_cost(&self) -> u64 {
+        self.epoch_max_tokens.iter().sum()
+    }
+}
+
+/// Parallel partitioned collapsed-Gibbs LDA (Yan et al.'s algorithm over
+/// the paper's partition plans).
+pub struct ParallelLda {
+    pub h: Hyper,
+    pub counts: LdaCounts,
+    pub p: usize,
+    /// Token blocks, diagonal-major: `blocks[l][m]` is partition
+    /// `(m, (m+l) mod P)`.
+    blocks: Vec<Vec<TokenBlock>>,
+    seed: u64,
+    sweeps_done: usize,
+}
+
+impl ParallelLda {
+    /// Random-initialize assignments under a partition plan.
+    pub fn init(
+        bow: &BagOfWords,
+        plan: &Plan,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        seed: u64,
+    ) -> Self {
+        let p = plan.p;
+        let map = PartitionMap::build(bow, plan);
+        let mut rng = Rng::stream(seed, 0x1417);
+        let mut blocks: Vec<Vec<TokenBlock>> = Vec::with_capacity(p);
+        for l in 0..p {
+            let mut diag = Vec::with_capacity(p);
+            for (m, n) in map.diagonal(l) {
+                diag.push(TokenBlock::from_cells(map.cells(m, n), k, &mut rng));
+            }
+            blocks.push(diag);
+        }
+        let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+        for diag in &blocks {
+            for b in diag {
+                counts.absorb(b);
+            }
+        }
+        Self {
+            h: Hyper::new(k, alpha, beta, bow.num_words()),
+            counts,
+            p,
+            blocks,
+            seed,
+            sweeps_done: 0,
+        }
+    }
+
+    /// One full Gibbs sweep = `P` diagonal epochs with barriers.
+    pub fn sweep(&mut self, mode: ExecMode) -> SweepStats {
+        let p = self.p;
+        let k = self.h.k;
+        let sweep_no = self.sweeps_done;
+        let mut stats = SweepStats::default();
+
+        for l in 0..p {
+            let snapshot = self.counts.topic.clone();
+            let epoch_started = Instant::now();
+            let diag = &mut self.blocks[l];
+            stats
+                .epoch_max_tokens
+                .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
+            stats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+
+            let doc_rows = SharedRows::new(&mut self.counts.doc_topic, k);
+            let word_rows = SharedRows::new(&mut self.counts.word_topic, k);
+            let h = self.h;
+            let seed = self.seed;
+
+            let run_worker = |m: usize, block: &mut TokenBlock, snapshot: &[u32]| {
+                let mut delta = vec![0i64; k];
+                let mut probs = Vec::new();
+                // Deterministic stream per (sweep, epoch, worker).
+                let mut rng = Rng::stream(
+                    seed ^ 0x50AB_71C5,
+                    ((sweep_no as u64) << 24) | ((l as u64) << 12) | m as u64,
+                );
+                sampler::sweep_partition(
+                    block,
+                    // SAFETY: the block's tokens all lie in partition
+                    // (m, (m+l) mod P); doc rows ∈ J_m and word rows ∈
+                    // V_{(m+l) mod P}, disjoint across the diagonal's
+                    // workers (PartitionMap construction).
+                    |d| unsafe { doc_rows.row_ptr(d) },
+                    |w| unsafe { word_rows.row_ptr(w) },
+                    snapshot,
+                    &mut delta,
+                    &h,
+                    &mut rng,
+                    &mut probs,
+                );
+                delta
+            };
+
+            let deltas: Vec<Vec<i64>> = match mode {
+                ExecMode::Sequential => diag
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(m, block)| run_worker(m, block, &snapshot))
+                    .collect(),
+                ExecMode::Threaded => std::thread::scope(|s| {
+                    let handles: Vec<_> = diag
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(m, block)| {
+                            let snapshot = &snapshot;
+                            let run_worker = &run_worker;
+                            s.spawn(move || run_worker(m, block, snapshot))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                }),
+            };
+
+            // Barrier: reconcile topic totals.
+            for delta in deltas {
+                for (t, d) in delta.into_iter().enumerate() {
+                    let v = self.counts.topic[t] as i64 + d;
+                    debug_assert!(v >= 0, "topic total went negative");
+                    self.counts.topic[t] = v as u32;
+                }
+            }
+            stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
+        }
+
+        self.sweeps_done += 1;
+        stats
+    }
+
+    /// Run `iters` sweeps; record perplexity every `eval_every` (0 = only
+    /// at the end if `eval_every != 0`... never).
+    pub fn train(
+        &mut self,
+        bow: &BagOfWords,
+        iters: usize,
+        eval_every: usize,
+        mode: ExecMode,
+    ) -> Vec<(usize, f64)> {
+        let mut curve = Vec::new();
+        for it in 1..=iters {
+            self.sweep(mode);
+            if eval_every > 0 && (it % eval_every == 0 || it == iters) {
+                curve.push((it, self.perplexity(bow)));
+            }
+        }
+        curve
+    }
+
+    pub fn perplexity(&self, bow: &BagOfWords) -> f64 {
+        perplexity::perplexity(bow, &self.counts, &self.h)
+    }
+
+    /// Borrow all token blocks (test/diagnostic use).
+    pub fn all_blocks(&self) -> Vec<&TokenBlock> {
+        self.blocks.iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::partition::{partition, Algorithm};
+
+    fn setup(p: usize, seed: u64) -> (BagOfWords, ParallelLda) {
+        let bow = generate(&Profile::tiny(), seed);
+        let plan = partition(&bow, p, Algorithm::A3 { restarts: 3 }, seed);
+        let lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, seed);
+        (bow, lda)
+    }
+
+    #[test]
+    fn init_absorbs_every_token() {
+        let (bow, lda) = setup(4, 31);
+        assert_eq!(lda.counts.total(), bow.num_tokens());
+        assert!(lda
+            .counts
+            .check_consistency(&lda.all_blocks())
+            .is_ok());
+    }
+
+    #[test]
+    fn sweep_preserves_invariants() {
+        let (bow, mut lda) = setup(3, 32);
+        for _ in 0..5 {
+            let stats = lda.sweep(ExecMode::Sequential);
+            assert_eq!(stats.total_tokens, bow.num_tokens());
+            assert_eq!(stats.epoch_secs.len(), 3);
+        }
+        assert_eq!(lda.counts.total(), bow.num_tokens());
+        assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
+    }
+
+    #[test]
+    fn threaded_equals_sequential() {
+        let (_bow, mut a) = setup(4, 33);
+        let (_bow2, mut b) = setup(4, 33);
+        for _ in 0..3 {
+            a.sweep(ExecMode::Threaded);
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn parallel_training_reduces_perplexity() {
+        let (bow, mut lda) = setup(4, 34);
+        let p0 = lda.perplexity(&bow);
+        let curve = lda.train(&bow, 30, 30, ExecMode::Sequential);
+        let p_end = curve.last().unwrap().1;
+        assert!(p_end < p0 * 0.9, "{p0} → {p_end}");
+    }
+
+    #[test]
+    fn parallel_close_to_serial_perplexity() {
+        // Table IV's claim in miniature: parallel and serial converge to
+        // approximately the same training perplexity.
+        let bow = generate(&Profile::tiny(), 35);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 3 }, 35);
+        let mut par = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 35);
+        let mut ser = crate::gibbs::serial::SerialLda::init(&bow, 8, 0.5, 0.1, 35);
+        par.train(&bow, 40, 0, ExecMode::Sequential);
+        ser.train(&bow, 40, 0);
+        let pp = par.perplexity(&bow);
+        let ps = ser.perplexity(&bow);
+        let rel = (pp - ps).abs() / ps;
+        assert!(rel < 0.05, "parallel {pp} vs serial {ps} (rel {rel})");
+    }
+
+    #[test]
+    fn measured_cost_matches_plan_cost() {
+        let bow = generate(&Profile::tiny(), 36);
+        let plan = partition(&bow, 5, Algorithm::A1, 36);
+        let mut lda = ParallelLda::init(&bow, &plan, 4, 0.5, 0.1, 36);
+        let stats = lda.sweep(ExecMode::Sequential);
+        assert_eq!(stats.measured_cost() as f64, plan.cost);
+    }
+}

@@ -1,0 +1,20 @@
+//! The diagonal-epoch parallel execution engine (Yan et al.'s algorithm,
+//! the substrate the paper's partitioners feed).
+//!
+//! A Gibbs sweep runs as `P` *epochs*; epoch `l` samples the `P`
+//! partitions of diagonal `l` in parallel, one worker per partition.
+//! Within an epoch workers own disjoint document rows of `Cθ` and
+//! disjoint word rows of `Cφ` ([`shared::SharedRows`] hands out raw row
+//! pointers under that invariant); the topic totals `n_k` are read from
+//! an epoch-start snapshot with per-worker deltas merged at the barrier.
+//!
+//! Because worker RNG streams are keyed by (sweep, epoch, partition) and
+//! not by thread interleaving, threaded and sequential execution produce
+//! *identical* assignments — sequential mode is both the determinism
+//! oracle for tests and the low-overhead mode for single-core boxes.
+
+pub mod cost_model;
+pub mod exec;
+pub mod shared;
+
+pub use exec::{ExecMode, ParallelLda};

@@ -1,0 +1,111 @@
+//! Shared row-major count matrices with partition-scoped exclusive rows.
+//!
+//! Within one diagonal epoch, worker `m` samples partition
+//! `(m, (m+l) mod P)` and therefore touches only document rows in group
+//! `J_m` and word rows in group `V_{(m+l) mod P}`. Row groups are
+//! pairwise disjoint within an epoch (see
+//! [`crate::partition::scheme::PartitionMap::diagonal`] tests), so
+//! handing every worker a raw pointer into the same matrix is race-free
+//! *provided each worker only dereferences rows of its own groups* — the
+//! invariant the sampling kernel upholds by construction (its tokens all
+//! lie inside the partition).
+
+use std::marker::PhantomData;
+
+/// A `rows × k` f32 count matrix shared across epoch workers.
+#[derive(Clone, Copy)]
+pub struct SharedRows<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    k: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: access is partitioned by row groups that are disjoint within an
+// epoch; the barrier between epochs sequences cross-epoch accesses.
+unsafe impl Send for SharedRows<'_> {}
+unsafe impl Sync for SharedRows<'_> {}
+
+impl<'a> SharedRows<'a> {
+    pub fn new(data: &'a mut [f32], k: usize) -> Self {
+        assert!(k > 0);
+        assert_eq!(data.len() % k, 0, "matrix not a multiple of k");
+        Self {
+            ptr: data.as_mut_ptr(),
+            rows: data.len() / k,
+            k,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Raw pointer to the start of `row`.
+    ///
+    /// # Safety
+    /// The caller must hold exclusive logical ownership of `row` for the
+    /// current epoch (diagonal non-conflict invariant).
+    #[inline]
+    pub unsafe fn row_ptr(&self, row: usize) -> *mut f32 {
+        debug_assert!(row < self.rows, "row {row} out of {}", self.rows);
+        self.ptr.add(row * self.k)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_ptr_addresses_rows() {
+        let mut data = vec![0f32; 12];
+        let m = SharedRows::new(&mut data, 3);
+        assert_eq!(m.rows(), 4);
+        unsafe {
+            *m.row_ptr(2) = 7.0;
+            *m.row_ptr(2).add(2) = 9.0;
+        }
+        assert_eq!(data[6], 7.0);
+        assert_eq!(data[8], 9.0);
+    }
+
+    #[test]
+    fn disjoint_rows_from_threads() {
+        let mut data = vec![0f32; 8 * 4];
+        let m = SharedRows::new(&mut data, 4);
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let m = m;
+                s.spawn(move || {
+                    // Worker w exclusively owns rows {w, w+4}.
+                    for &row in &[w, w + 4] {
+                        unsafe {
+                            let p = m.row_ptr(row);
+                            for i in 0..4 {
+                                *p.add(i) = (row * 10 + i) as f32;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        for row in 0..8 {
+            for i in 0..4 {
+                assert_eq!(data[row * 4 + i], (row * 10 + i) as f32);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of k")]
+    fn bad_shape_panics() {
+        let mut data = vec![0f32; 7];
+        SharedRows::new(&mut data, 3);
+    }
+}

@@ -1,0 +1,4 @@
+//! In-tree property-based testing harness (offline replacement for
+//! `proptest`). See [`prop`].
+
+pub mod prop;

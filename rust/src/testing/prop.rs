@@ -1,0 +1,130 @@
+//! Minimal property-based testing.
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it
+//! for `cases` independent seeds derived from a base seed and, on panic,
+//! re-raises with the failing case seed in the message so the case can be
+//! replayed exactly with [`check_one`]. Generators are free functions over
+//! `Rng` (sizes, vectors, sparse matrices live next to their modules).
+//!
+//! This is deliberately simple — no shrinking — but the failing seed plus
+//! deterministic generators gives full reproducibility, which is what the
+//! invariants in `partition`/`gibbs`/`scheduler` need.
+
+use crate::util::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`.
+///
+/// Panics with the failing derived seed on the first failure.
+pub fn check(name: &str, base_seed: u64, cases: usize, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = derive_seed(base_seed, case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case} (replay: check_one({name:?}, {seed})): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (used when diagnosing a failure).
+pub fn check_one(_name: &str, seed: u64, prop: impl Fn(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+fn derive_seed(base: u64, case: u64) -> u64 {
+    base.wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(case.wrapping_mul(0xBF58476D1CE4E5B9))
+        | 1
+}
+
+// ---------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------
+
+/// Size in `[lo, hi]`, log-uniform-ish so small edge sizes are common.
+pub fn gen_size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    if lo == hi {
+        return lo;
+    }
+    // Mix a uniform draw with a bias toward the low end.
+    if rng.f64() < 0.3 {
+        lo + rng.gen_range((hi - lo).min(4) + 1)
+    } else {
+        lo + rng.gen_range(hi - lo + 1)
+    }
+}
+
+/// Vector of positive weights with a heavy tail (Zipf-like), the shape of
+/// real word-frequency workloads.
+pub fn gen_heavy_tailed(rng: &mut Rng, len: usize, max: u32) -> Vec<u32> {
+    (0..len)
+        .map(|_| {
+            let u = rng.f64().max(1e-9);
+            // Pareto-ish: small values common, occasional huge ones.
+            let v = (1.0 / u.powf(0.7)) as u32;
+            1 + v.min(max.saturating_sub(1))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 1, 16, |rng| {
+            let v = rng.gen_range(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    fn check_reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-fails", 2, 4, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("replay: check_one"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_size_respects_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let v = gen_size(&mut rng, 2, 37);
+            assert!((2..=37).contains(&v));
+        }
+        assert_eq!(gen_size(&mut rng, 5, 5), 5);
+    }
+
+    #[test]
+    fn heavy_tailed_positive_and_bounded() {
+        let mut rng = Rng::new(4);
+        let v = gen_heavy_tailed(&mut rng, 5000, 1000);
+        assert!(v.iter().all(|&x| x >= 1 && x <= 1000));
+        // Heavy tail: max should dwarf the median.
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert!(s[s.len() - 1] as f64 > 10.0 * s[s.len() / 2] as f64);
+    }
+}

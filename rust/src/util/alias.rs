@@ -1,0 +1,128 @@
+//! Walker alias method: O(n) construction, O(1) sampling from a fixed
+//! discrete distribution. Used by the synthetic corpus generator (per-topic
+//! word distributions over vocabularies of 10^5+) where linear-scan
+//! categorical sampling would make corpus generation quadratic.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights (at least one > 0).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "AliasTable over empty support");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "AliasTable needs positive finite total weight"
+        );
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0u32; n];
+
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s as usize] = l;
+            // l donates mass to fill s's bucket to 1.
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are 1.0 up to float error.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        Self { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.gen_range(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(weights: &[f64], draws: usize, seed: u64) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn matches_target_distribution() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let emp = empirical(&w, 200_000, 42);
+        let total: f64 = w.iter().sum();
+        for (e, t) in emp.iter().zip(w.iter().map(|x| x / total)) {
+            assert!((e - t).abs() < 0.01, "emp={e} target={t}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_drawn() {
+        let w = [0.0, 1.0, 0.0, 1.0];
+        let emp = empirical(&w, 50_000, 7);
+        assert_eq!(emp[0], 0.0);
+        assert_eq!(emp[2], 0.0);
+    }
+
+    #[test]
+    fn singleton_always_zero() {
+        let table = AliasTable::new(&[3.5]);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn heavy_tail_head_dominates() {
+        // Zipf-ish: first element should absorb most draws.
+        let w: Vec<f64> = (1..=1000).map(|i| 1.0 / (i as f64).powf(1.5)).collect();
+        let emp = empirical(&w, 100_000, 3);
+        assert!(emp[0] > 0.3, "head mass {}", emp[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn all_zero_panics() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

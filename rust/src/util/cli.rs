@@ -1,0 +1,138 @@
+//! Minimal command-line parsing: `--key value` flags, `--switch` booleans,
+//! and positional arguments, with typed accessors and defaults.
+//!
+//! In-tree replacement for `clap` (unavailable offline). Used by the
+//! `pplda` binary, the examples and the bench harness.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an explicit iterator — used by tests and the bench harness.
+    pub fn parse<I, S>(args: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = args.into_iter().map(Into::into).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(String::as_str)
+    }
+
+    /// Typed flag lookup; returns `default` when absent. Panics with a
+    /// clear message on unparseable values (CLI misuse, not a bug).
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: bad value ({e:?})")),
+            None => default,
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list flag, e.g. `--procs 1,10,30,60`.
+    pub fn get_list<T: FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Debug,
+    {
+        match self.flags.get(key) {
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{key}: bad item {x:?} ({e:?})"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flags_switches_positional() {
+        let a = Args::parse(["train", "--procs", "10", "--xla", "--seed=42"]);
+        assert_eq!(a.positional(0), Some("train"));
+        assert_eq!(a.get::<usize>("procs", 1), 10);
+        assert_eq!(a.get::<u64>("seed", 0), 42);
+        assert!(a.has("xla"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.get::<usize>("procs", 8), 8);
+        assert_eq!(a.positional(0), None);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse(["--procs", "1,10,30,60"]);
+        assert_eq!(a.get_list::<usize>("procs", &[]), vec![1, 10, 30, 60]);
+        assert_eq!(a.get_list::<usize>("missing", &[5]), vec![5]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = Args::parse(["--offset", "-3"]);
+        assert_eq!(a.get::<i64>("offset", 0), -3);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad value")]
+    fn bad_value_panics() {
+        let a = Args::parse(["--procs", "ten"]);
+        let _ = a.get::<usize>("procs", 1);
+    }
+}

@@ -1,0 +1,78 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is offline with a fixed crate cache, so the
+//! pieces a project would normally pull from crates.io (PRNG, CLI parser,
+//! descriptive statistics, JSON/TSV emitters, wall-clock timing helpers)
+//! are implemented here from scratch.
+
+pub mod alias;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod tsv;
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Format a token/second style rate with SI-ish suffixes.
+pub fn human_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}k", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1}")
+    }
+}
+
+/// Format a byte count.
+pub fn human_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_rounds_up() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 128), 1);
+        assert_eq!(div_ceil(0, 4), 0);
+    }
+
+    #[test]
+    fn human_rate_suffixes() {
+        assert_eq!(human_rate(1.5e9), "1.50G");
+        assert_eq!(human_rate(2.5e6), "2.50M");
+        assert_eq!(human_rate(3.0e3), "3.00k");
+        assert_eq!(human_rate(12.0), "12.0");
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.00KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+}

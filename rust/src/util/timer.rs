@@ -1,0 +1,93 @@
+//! Wall-clock timing helpers used by the bench harness and trainers.
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A stopwatch accumulating named phases — used to break a training sweep
+/// into sample/barrier/update/perplexity buckets for the perf log.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_once(f);
+        self.add(name, dt);
+        out
+    }
+
+    pub fn add(&mut self, name: &str, dt: Duration) {
+        if let Some((_, total)) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            *total += dt;
+        } else {
+            self.phases.push((name.to_string(), dt));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        self.phases
+            .iter()
+            .map(|(n, d)| {
+                format!(
+                    "{n}: {:.3}s ({:.1}%)",
+                    d.as_secs_f64(),
+                    100.0 * d.as_secs_f64() / total
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("sample", Duration::from_millis(10));
+        t.add("sample", Duration::from_millis(5));
+        t.add("barrier", Duration::from_millis(1));
+        assert_eq!(t.get("sample"), Duration::from_millis(15));
+        assert_eq!(t.total(), Duration::from_millis(16));
+        assert!(t.report().contains("sample"));
+    }
+
+    #[test]
+    fn missing_phase_is_zero() {
+        let t = PhaseTimer::new();
+        assert_eq!(t.get("nope"), Duration::ZERO);
+    }
+}

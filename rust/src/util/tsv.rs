@@ -1,0 +1,134 @@
+//! TSV table builder + aligned console rendering — the output format of
+//! every bench (one table per paper table/figure) and of EXPERIMENTS.md
+//! data dumps.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: impl IntoIterator<Item = S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: impl IntoIterator<Item = S>) -> &mut Self {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn cell(&self, row: usize, col: usize) -> &str {
+        &self.rows[row][col]
+    }
+
+    /// Raw tab-separated form (header + rows).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join("\t"));
+        }
+        out
+    }
+
+    /// Column-aligned form for terminal output / markdown-ish logs.
+    pub fn to_aligned(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(
+            out,
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn write_tsv(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        std::fs::write(path, self.to_tsv())
+    }
+}
+
+/// Format an f64 with fixed decimals — the tables in the paper use 4.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_tsv() {
+        let mut t = Table::new(["P", "eta"]);
+        t.row(["10", "0.98"]).row(["30", "0.89"]);
+        assert_eq!(t.to_tsv(), "P\teta\n10\t0.98\n30\t0.89\n");
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.cell(1, 1), "0.89");
+    }
+
+    #[test]
+    fn aligned_output_pads() {
+        let mut t = Table::new(["algo", "eta"]);
+        t.row(["baseline", "0.9500"]);
+        let s = t.to_aligned();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("algo"));
+        assert!(lines[1].starts_with('-'));
+        assert!(lines[2].contains("baseline"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn mismatched_row_panics() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn f_formats() {
+        assert_eq!(f(0.95, 4), "0.9500");
+        assert_eq!(f(1.0, 1), "1.0");
+    }
+}

@@ -1,0 +1,115 @@
+//! Smoke tests of the `pplda` binary (launcher + CLI parsing + output
+//! shapes), driven through `CARGO_BIN_EXE_pplda`.
+
+use std::process::Command;
+
+fn pplda(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pplda"))
+        .args(args)
+        .env("PPLDA_ARTIFACTS", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .output()
+        .expect("spawn pplda");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage_and_fails() {
+    let (_, err, ok) = pplda(&[]);
+    assert!(!ok);
+    assert!(err.contains("usage: pplda"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (_, err, ok) = pplda(&["frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("unknown subcommand"));
+}
+
+#[test]
+fn stats_tiny() {
+    let (out, _, ok) = pplda(&["stats", "--profile", "tiny"]);
+    assert!(ok);
+    assert!(out.contains("Documents, D"));
+    assert!(out.contains("60"));
+}
+
+#[test]
+fn partition_tiny_all_algorithms() {
+    let (out, _, ok) = pplda(&[
+        "partition",
+        "--profile",
+        "tiny",
+        "--procs",
+        "1,4",
+        "--restarts",
+        "3",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("baseline"));
+    assert!(out.contains("A3"));
+    // P=1 row must be all 1.0000.
+    let p1_line = out.lines().find(|l| l.trim_start().starts_with('1') && l.contains("1.0000")).unwrap();
+    assert_eq!(p1_line.matches("1.0000").count(), 4, "{p1_line}");
+}
+
+#[test]
+fn train_tiny() {
+    let (out, _, ok) = pplda(&[
+        "train",
+        "--profile",
+        "tiny",
+        "--procs",
+        "3",
+        "--topics",
+        "8",
+        "--iters",
+        "5",
+        "--eval-every",
+        "5",
+        "--restarts",
+        "2",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("final perplexity"));
+    assert!(out.contains("eta="));
+}
+
+#[test]
+fn train_bot_tiny_with_timeline() {
+    let (out, _, ok) = pplda(&[
+        "train-bot",
+        "--profile",
+        "tiny",
+        "--procs",
+        "2",
+        "--topics",
+        "4",
+        "--iters",
+        "3",
+        "--restarts",
+        "2",
+        "--timeline",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("perplexity="));
+    assert!(out.contains("rising"));
+}
+
+#[test]
+fn train_json_report() {
+    let dir = std::env::temp_dir().join("pplda_cli_test.json");
+    let path = dir.to_str().unwrap();
+    let (out, _, ok) = pplda(&[
+        "train", "--profile", "tiny", "--procs", "2", "--topics", "4",
+        "--iters", "2", "--restarts", "2", "--json", path,
+    ]);
+    assert!(ok, "{out}");
+    let json = std::fs::read_to_string(path).unwrap();
+    assert!(json.contains("\"final_perplexity\""));
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,83 @@
+//! Cross-module integration: corpus generation → partitioning →
+//! partition map → cost invariants, over randomized profiles and all
+//! four algorithms.
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::scheme::PartitionMap;
+use pplda::partition::{eta, partition, Algorithm};
+use pplda::testing::prop;
+
+fn algorithms(restarts: usize) -> [Algorithm; 4] {
+    [
+        Algorithm::Baseline { restarts },
+        Algorithm::A1,
+        Algorithm::A2,
+        Algorithm::A3 { restarts },
+    ]
+}
+
+#[test]
+fn plan_invariants_over_random_corpora() {
+    prop::check("plan-invariants", 0x1A7E6, 12, |rng| {
+        let mut profile = Profile::tiny();
+        profile.num_docs = prop::gen_size(rng, 5, 150);
+        profile.num_tokens = (profile.num_docs as u64) * (10 + rng.gen_range(200) as u64);
+        profile.vocab = prop::gen_size(rng, 10, 400);
+        let bow = generate(&profile, rng.next_u64());
+        let p = 1 + rng.gen_range(12);
+
+        for algo in algorithms(2) {
+            let plan = partition(&bow, p, algo, rng.next_u64());
+            // Exhaustive assignment.
+            assert_eq!(plan.doc_group.len(), bow.num_docs());
+            assert_eq!(plan.word_group.len(), bow.num_words());
+            // Eta consistent with a recomputation from scratch.
+            let again = eta::eta(&bow, &plan.doc_group, &plan.word_group, p);
+            assert!((plan.eta - again.eta).abs() < 1e-12);
+            // Cost matrix conserves tokens.
+            assert_eq!(plan.costs.total(), bow.num_tokens());
+            // Map materialization agrees cell-for-cell.
+            let map = PartitionMap::build(&bow, &plan);
+            for m in 0..p {
+                for n in 0..p {
+                    assert_eq!(map.tokens(m, n), plan.costs.get(m, n));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn serial_cost_equals_tokens_only_at_p1() {
+    let bow = generate(&Profile::tiny(), 7);
+    let plan = partition(&bow, 1, Algorithm::A1, 7);
+    assert_eq!(plan.cost as u64, bow.num_tokens());
+    assert!((plan.eta - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn paper_ordering_holds_on_nips_scale_corpus() {
+    // The paper's Table II ordering at P=30/60 on the full-size NIPS-like
+    // corpus. Restarts reduced vs paper (10 vs 100) to keep test time
+    // sane; the ordering is robust to that.
+    let bow = generate(&Profile::nips_like(), 42);
+    for p in [30usize, 60] {
+        let base = partition(&bow, p, Algorithm::Baseline { restarts: 10 }, 1).eta;
+        let a1 = partition(&bow, p, Algorithm::A1, 1).eta;
+        let a2 = partition(&bow, p, Algorithm::A2, 1).eta;
+        let a3 = partition(&bow, p, Algorithm::A3 { restarts: 10 }, 1).eta;
+        assert!(a1 > base && a2 > base && a3 > base, "P={p}: proposed > baseline");
+        assert!(a3 + 0.02 > a1.max(a2), "P={p}: A3 leads");
+    }
+}
+
+#[test]
+fn eta_degrades_monotonically_in_p_for_baseline() {
+    let bow = generate(&Profile::nips_like().scaled(4), 9);
+    let mut last = f64::INFINITY;
+    for p in [1usize, 10, 30, 60] {
+        let e = partition(&bow, p, Algorithm::Baseline { restarts: 5 }, 3).eta;
+        assert!(e <= last + 0.02, "baseline eta should fall with P");
+        last = e;
+    }
+}

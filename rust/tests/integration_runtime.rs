@@ -1,0 +1,120 @@
+//! Cross-layer integration: the AOT artifacts (L1 Pallas kernels lowered
+//! through L2 jax into HLO text) loaded and driven from the L3
+//! coordinator. Skipped (with a notice) when `make artifacts` has not
+//! run.
+
+use pplda::coordinator::{train_lda, Backend, TrainConfig};
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::{partition, Algorithm};
+use pplda::runtime::executor::Artifacts;
+
+fn artifacts_or_skip() -> Option<Artifacts> {
+    let dir = Artifacts::default_dir();
+    if !Artifacts::available(&dir) {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(Artifacts::discover(dir).unwrap())
+}
+
+#[test]
+fn xla_backend_trains_through_the_driver() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let (_, k) = arts
+        .variants("sampler")
+        .into_iter()
+        .min_by_key(|&(_, k)| k)
+        .unwrap();
+
+    let bow = generate(&Profile::tiny(), 201);
+    let plan = partition(&bow, 1, Algorithm::A1, 201);
+    let cfg = TrainConfig {
+        topics: k,
+        iters: 8,
+        eval_every: 4,
+        backend: Backend::Xla,
+        ..Default::default()
+    };
+    let report = train_lda(&bow, &plan, &cfg);
+    assert_eq!(report.backend, "xla");
+    assert_eq!(report.curve.len(), 2);
+    // Learning happened.
+    assert!(report.curve[1].1 < report.curve[0].1 * 1.02);
+    assert!(report.final_perplexity.is_finite());
+}
+
+#[test]
+fn xla_and_native_backends_agree_on_converged_perplexity() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    let (_, k) = arts
+        .variants("sampler")
+        .into_iter()
+        .min_by_key(|&(_, k)| k)
+        .unwrap();
+
+    let bow = generate(&Profile::tiny(), 202);
+    let plan = partition(&bow, 1, Algorithm::A1, 202);
+    let iters = 20;
+    let native = train_lda(
+        &bow,
+        &plan,
+        &TrainConfig {
+            topics: k,
+            iters,
+            ..Default::default()
+        },
+    );
+    let xla = train_lda(
+        &bow,
+        &plan,
+        &TrainConfig {
+            topics: k,
+            iters,
+            backend: Backend::Xla,
+            ..Default::default()
+        },
+    );
+    // Different samplers (exact CGS vs batched ESCA-style), same model:
+    // converged perplexities should be close.
+    let rel = (native.final_perplexity - xla.final_perplexity).abs()
+        / native.final_perplexity;
+    assert!(
+        rel < 0.08,
+        "native {} vs xla {} (rel {rel:.4})",
+        native.final_perplexity,
+        xla.final_perplexity
+    );
+}
+
+#[test]
+fn every_manifest_artifact_compiles_and_runs() {
+    let Some(arts) = artifacts_or_skip() else { return };
+    for (b, k) in arts.variants("sampler") {
+        let exe = arts.sampler(b, k).expect("compile");
+        let z = exe
+            .run(
+                &vec![1.0; b * k],
+                &vec![1.0; b * k],
+                &vec![k as f32; k],
+                &vec![0.5; b * k],
+                [0.5, 0.1, 0.5 * k as f32, 0.1 * 50.0],
+            )
+            .expect("run");
+        assert_eq!(z.len(), b);
+        assert!(z.iter().all(|&t| (t as usize) < k));
+    }
+    for (b, k) in arts.variants("loglik") {
+        let exe = arts.loglik(b, k).expect("compile");
+        let (sum, ll) = exe
+            .run(
+                &vec![1.0; b * k],
+                &vec![k as f32; b],
+                &vec![1.0; b * k],
+                &vec![k as f32; k],
+                [0.5, 0.1, 0.5 * k as f32, 0.1 * 50.0],
+            )
+            .expect("run");
+        assert_eq!(ll.len(), b);
+        assert!(sum.is_finite() && sum < 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Cross-module integration: training pipelines (serial, parallel LDA,
+//! BoT) — determinism, convergence, and the Table-IV equivalence claim.
+
+use pplda::coordinator::{train_bot, train_lda, TrainConfig};
+use pplda::corpus::synthetic::{generate, generate_timestamped, Profile, TimeProfile};
+use pplda::gibbs::serial::SerialLda;
+use pplda::partition::{partition, Algorithm};
+use pplda::scheduler::exec::{ExecMode, ParallelLda};
+
+fn small_profile() -> Profile {
+    let mut p = Profile::nips_like().scaled(40);
+    p.len_sigma = 0.4; // tame giant-doc outliers at this tiny scale
+    p
+}
+
+#[test]
+fn parallel_and_serial_converge_together_across_p() {
+    let bow = generate(&small_profile(), 101);
+    let k = 16;
+    let iters = 25;
+
+    let mut serial = SerialLda::init(&bow, k, 0.5, 0.1, 5);
+    serial.train(&bow, iters, 0);
+    let ps = serial.perplexity(&bow);
+
+    for p in [2usize, 5, 10] {
+        let plan = partition(&bow, p, Algorithm::A3 { restarts: 5 }, 5);
+        let mut par = ParallelLda::init(&bow, &plan, k, 0.5, 0.1, 5);
+        par.train(&bow, iters, 0, ExecMode::Sequential);
+        let pp = par.perplexity(&bow);
+        let rel = (pp - ps).abs() / ps;
+        assert!(
+            rel < 0.05,
+            "P={p}: parallel {pp:.2} vs serial {ps:.2} (rel {rel:.4})"
+        );
+    }
+}
+
+#[test]
+fn training_is_deterministic_per_seed_and_plan() {
+    let bow = generate(&small_profile(), 102);
+    let plan = partition(&bow, 4, Algorithm::A2, 1);
+    let cfg = TrainConfig::quick(8, 5);
+    let a = train_lda(&bow, &plan, &cfg);
+    let b = train_lda(&bow, &plan, &cfg);
+    assert_eq!(a.final_perplexity, b.final_perplexity);
+    assert_eq!(a.curve, b.curve);
+}
+
+#[test]
+fn better_eta_means_lower_sweep_cost() {
+    let bow = generate(&Profile::nips_like().scaled(10), 103);
+    let p = 16;
+    let base = partition(&bow, p, Algorithm::Baseline { restarts: 5 }, 2);
+    let a3 = partition(&bow, p, Algorithm::A3 { restarts: 5 }, 2);
+    assert!(a3.eta > base.eta);
+    // Eq. 1 cost is inversely proportional to eta at fixed N, P.
+    assert!(a3.cost < base.cost);
+}
+
+#[test]
+fn bot_pipeline_end_to_end() {
+    let mut profile = Profile::tiny();
+    profile.num_docs = 120;
+    profile.num_tokens = 12_000;
+    profile.time = Some(TimeProfile {
+        first_year: 1990,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 8,
+    });
+    let tc = generate_timestamped(&profile, 104);
+    let cfg = TrainConfig::quick(8, 15);
+
+    let serial = train_bot(&tc, 1, Algorithm::A1, &cfg);
+    let parallel = train_bot(&tc, 5, Algorithm::A3 { restarts: 5 }, &cfg);
+
+    let rel = (parallel.final_perplexity - serial.final_perplexity).abs()
+        / serial.final_perplexity;
+    assert!(rel < 0.05, "BoT Table IV: rel {rel}");
+    assert!(parallel.speedup_model > 2.0);
+    // Timeline extraction present for every topic, each normalized.
+    assert_eq!(parallel.timelines.len(), 8);
+    for tl in &parallel.timelines {
+        let sum: f64 = tl.pi.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn threaded_mode_matches_sequential_through_driver() {
+    let bow = generate(&small_profile(), 105);
+    let plan = partition(&bow, 3, Algorithm::A3 { restarts: 3 }, 3);
+    let mut cfg = TrainConfig::quick(8, 5);
+    let seq = train_lda(&bow, &plan, &cfg);
+    cfg.mode = ExecMode::Threaded;
+    let thr = train_lda(&bow, &plan, &cfg);
+    assert_eq!(seq.final_perplexity, thr.final_perplexity);
+}
