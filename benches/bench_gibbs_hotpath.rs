@@ -45,6 +45,13 @@ fn main() {
     bench.run_with_items(&format!("partitioned P=8 K={k} (threads)"), Some(n), || {
         par2.sweep(ExecMode::Threaded);
     });
+    // Persistent pool: same parallelism as (threads) with the per-epoch
+    // spawn/alloc overhead amortized away by long-lived workers.
+    let mut par3 = ParallelLda::init(&bow, &plan, k, 0.5, 0.1, seed);
+    par3.sweep(ExecMode::Pooled);
+    bench.run_with_items(&format!("partitioned P=8 K={k} (pooled)"), Some(n), || {
+        par3.sweep(ExecMode::Pooled);
+    });
 
     println!("{}", bench.table().to_aligned());
     for m in bench.results() {

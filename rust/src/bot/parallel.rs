@@ -7,11 +7,11 @@ use std::time::Instant;
 use crate::bot::counts::BotCounts;
 use crate::bot::serial::BotHyper;
 use crate::corpus::timestamps::TimestampedCorpus;
-use crate::gibbs::sampler;
 use crate::gibbs::tokens::TokenBlock;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::exec::{ExecMode, SweepStats};
+use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, WorkerPool};
 use crate::scheduler::shared::SharedRows;
 use crate::util::rng::Rng;
 
@@ -25,6 +25,15 @@ pub struct ParallelBot {
     stamp_blocks: Vec<Vec<TokenBlock>>,
     seed: u64,
     sweeps_done: usize,
+    /// Executor state — the persistent pool (if `Pooled` mode is used)
+    /// serves *both* phases' epochs, since they share `P` and `K`.
+    engines: EngineCache,
+    /// Double-buffered epoch-start views of `counts.topic_words` /
+    /// `counts.topic_stamps` (no per-epoch clone).
+    word_snapshot: Vec<u32>,
+    stamp_snapshot: Vec<u32>,
+    /// Per-worker signed topic deltas, shared by both phases.
+    deltas: Vec<Vec<i64>>,
 }
 
 impl ParallelBot {
@@ -79,11 +88,19 @@ impl ParallelBot {
             stamp_blocks,
             seed,
             sweeps_done: 0,
+            engines: EngineCache::new(p),
+            word_snapshot: vec![0; h.k],
+            stamp_snapshot: vec![0; h.k],
+            deltas: vec![vec![0i64; h.k]; p],
         }
     }
 
     /// One sweep: `P` epochs of (word diagonal, then timestamp diagonal).
     /// Returns (word stats, stamp stats).
+    ///
+    /// Both phases dispatch through the executor selected by `mode`
+    /// (sharing one persistent pool in `Pooled` mode), with their
+    /// phase-total snapshots double-buffered instead of cloned per epoch.
     pub fn sweep(&mut self, mode: ExecMode) -> (SweepStats, SweepStats) {
         let p = self.p;
         let k = self.h.k;
@@ -91,63 +108,77 @@ impl ParallelBot {
         let mut wstats = SweepStats::default();
         let mut sstats = SweepStats::default();
 
+        self.word_snapshot.copy_from_slice(&self.counts.topic_words);
+        self.stamp_snapshot
+            .copy_from_slice(&self.counts.topic_stamps);
+
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
             {
-                let snapshot = self.counts.topic_words.clone();
                 let started = Instant::now();
                 let diag = &mut self.word_blocks[l];
                 wstats
                     .epoch_max_tokens
                     .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
                 wstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
-                let doc_rows = SharedRows::new(&mut self.counts.doc_topic, k);
-                let emit_rows = SharedRows::new(&mut self.counts.word_topic, k);
-                let h = self.h.word_hyper();
-                let deltas = run_diagonal(
-                    diag,
-                    doc_rows,
-                    emit_rows,
-                    &snapshot,
-                    &h,
-                    self.seed ^ 0xD0C5,
-                    sweep_no,
-                    l,
-                    mode,
+                let n = diag.len();
+                let spec = EpochSpec {
+                    doc: SharedRows::new(&mut self.counts.doc_topic, k),
+                    emit: SharedRows::new(&mut self.counts.word_topic, k),
+                    snapshot: &self.word_snapshot,
+                    h: self.h.word_hyper(),
+                    seed: self.seed ^ 0xD0C5,
+                    sweep: sweep_no,
+                    epoch: l,
+                };
+                self.engines
+                    .get(mode)
+                    .run_epoch(&spec, diag, &mut self.deltas[..n]);
+                merge_deltas(
+                    &mut self.counts.topic_words,
+                    &mut self.word_snapshot,
+                    &self.deltas[..n],
                 );
-                merge(&mut self.counts.topic_words, deltas);
                 wstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
 
             // ---- timestamp phase on DTS diagonal l ----
             {
-                let snapshot = self.counts.topic_stamps.clone();
                 let started = Instant::now();
                 let diag = &mut self.stamp_blocks[l];
                 sstats
                     .epoch_max_tokens
                     .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
                 sstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
-                let doc_rows = SharedRows::new(&mut self.counts.doc_topic, k);
-                let emit_rows = SharedRows::new(&mut self.counts.stamp_topic, k);
-                let h = self.h.stamp_hyper();
-                let deltas = run_diagonal(
-                    diag,
-                    doc_rows,
-                    emit_rows,
-                    &snapshot,
-                    &h,
-                    self.seed ^ 0x7135,
-                    sweep_no,
-                    l,
-                    mode,
+                let n = diag.len();
+                let spec = EpochSpec {
+                    doc: SharedRows::new(&mut self.counts.doc_topic, k),
+                    emit: SharedRows::new(&mut self.counts.stamp_topic, k),
+                    snapshot: &self.stamp_snapshot,
+                    h: self.h.stamp_hyper(),
+                    seed: self.seed ^ 0x7135,
+                    sweep: sweep_no,
+                    epoch: l,
+                };
+                self.engines
+                    .get(mode)
+                    .run_epoch(&spec, diag, &mut self.deltas[..n]);
+                merge_deltas(
+                    &mut self.counts.topic_stamps,
+                    &mut self.stamp_snapshot,
+                    &self.deltas[..n],
                 );
-                merge(&mut self.counts.topic_stamps, deltas);
                 sstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
         }
         self.sweeps_done += 1;
         (wstats, sstats)
+    }
+
+    /// The persistent worker pool, if any `Pooled`-mode sweep has run on
+    /// this trainer.
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.engines.pool()
     }
 
     pub fn train(
@@ -178,74 +209,6 @@ impl ParallelBot {
 
     pub fn stamp_blocks_flat(&self) -> Vec<&TokenBlock> {
         self.stamp_blocks.iter().flatten().collect()
-    }
-}
-
-/// Run one diagonal's workers (threaded or sequential) and collect their
-/// topic-total deltas.
-#[allow(clippy::too_many_arguments)]
-fn run_diagonal(
-    diag: &mut [TokenBlock],
-    doc_rows: SharedRows<'_>,
-    emit_rows: SharedRows<'_>,
-    snapshot: &[u32],
-    h: &sampler::Hyper,
-    seed: u64,
-    sweep_no: usize,
-    l: usize,
-    mode: ExecMode,
-) -> Vec<Vec<i64>> {
-    let k = h.k;
-    let worker = |m: usize, block: &mut TokenBlock| {
-        let mut delta = vec![0i64; k];
-        let mut probs = Vec::new();
-        let mut rng = Rng::stream(
-            seed,
-            ((sweep_no as u64) << 24) | ((l as u64) << 12) | m as u64,
-        );
-        sampler::sweep_partition(
-            block,
-            // SAFETY: diagonal non-conflict — block tokens lie in
-            // partition (m, (m+l) mod P) of this phase's plan; its doc
-            // group and emission group rows are exclusive to this worker
-            // for the epoch.
-            |d| unsafe { doc_rows.row_ptr(d) },
-            |w| unsafe { emit_rows.row_ptr(w) },
-            snapshot,
-            &mut delta,
-            h,
-            &mut rng,
-            &mut probs,
-        );
-        delta
-    };
-    match mode {
-        ExecMode::Sequential => diag
-            .iter_mut()
-            .enumerate()
-            .map(|(m, b)| worker(m, b))
-            .collect(),
-        ExecMode::Threaded => std::thread::scope(|s| {
-            let handles: Vec<_> = diag
-                .iter_mut()
-                .enumerate()
-                .map(|(m, b)| {
-                    let worker = &worker;
-                    s.spawn(move || worker(m, b))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        }),
-    }
-}
-
-fn merge(totals: &mut [u32], deltas: Vec<Vec<i64>>) {
-    for delta in deltas {
-        for (t, d) in delta.into_iter().enumerate() {
-            let v = totals[t] as i64 + d;
-            debug_assert!(v >= 0, "topic total went negative");
-            totals[t] = v as u32;
-        }
     }
 }
 
@@ -318,6 +281,34 @@ mod tests {
         assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
         assert_eq!(a.counts.word_topic, b.counts.word_topic);
         assert_eq!(a.counts.stamp_topic, b.counts.stamp_topic);
+    }
+
+    #[test]
+    fn pooled_equals_sequential() {
+        let (_tc, mut a) = setup(4, 65);
+        let (_tc2, mut b) = setup(4, 65);
+        for _ in 0..3 {
+            a.sweep(ExecMode::Pooled);
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.stamp_topic, b.counts.stamp_topic);
+        assert_eq!(a.counts.topic_words, b.counts.topic_words);
+        assert_eq!(a.counts.topic_stamps, b.counts.topic_stamps);
+    }
+
+    #[test]
+    fn one_pool_serves_both_phases_across_sweeps() {
+        let (_tc, mut bot) = setup(3, 66);
+        assert!(bot.pool().is_none());
+        for _ in 0..3 {
+            bot.sweep(ExecMode::Pooled);
+        }
+        let pool = bot.pool().expect("pool created on first pooled sweep");
+        assert_eq!(pool.workers(), 3, "no respawn: worker count stable at P");
+        // 3 sweeps × P epochs × 2 phases, all on the same pool.
+        assert_eq!(pool.epochs_run(), 3 * 3 * 2);
     }
 
     #[test]

@@ -9,7 +9,8 @@ pub enum Backend {
     /// Pure-rust collapsed Gibbs (exact, fastest on CPU).
     Native,
     /// AOT-compiled JAX/Pallas kernels via PJRT (batched; demonstrates
-    /// the three-layer bridge). Requires `make artifacts`.
+    /// the three-layer bridge). Requires `make artifacts` and a binary
+    /// built with the `xla` cargo feature.
     Xla,
 }
 
@@ -24,6 +25,10 @@ pub struct TrainConfig {
     /// Evaluate perplexity every this many sweeps (0 = final only).
     pub eval_every: usize,
     pub seed: u64,
+    /// Diagonal-epoch executor: `Sequential` (determinism oracle),
+    /// `Threaded` (legacy per-epoch spawns), or `Pooled` (persistent
+    /// worker pool — preferred for multi-core runs). All three produce
+    /// identical counts; see `docs/executor.md`.
     pub mode: ExecMode,
     pub backend: Backend,
 }

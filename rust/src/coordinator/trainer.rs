@@ -8,9 +8,12 @@ use crate::coordinator::report::TrainReport;
 use crate::corpus::bow::BagOfWords;
 use crate::gibbs::serial::SerialLda;
 use crate::partition::Plan;
+#[cfg(feature = "xla")]
 use crate::runtime::executor::Artifacts;
+#[cfg(feature = "xla")]
 use crate::runtime::sampler_xla::{XlaPerplexity, XlaSampler};
 use crate::scheduler::exec::ParallelLda;
+#[cfg(feature = "xla")]
 use crate::util::rng::Rng;
 
 /// Train LDA on `bow` under `plan`. `plan.p == 1` runs the serial
@@ -63,6 +66,15 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn train_xla(_bow: &BagOfWords, _cfg: &TrainConfig) -> (Vec<(usize, f64)>, f64) {
+    panic!(
+        "Backend::Xla requires building with `--features xla` \
+         (and the external `xla` bindings crate; see Cargo.toml)"
+    );
+}
+
+#[cfg(feature = "xla")]
 fn train_xla(bow: &BagOfWords, cfg: &TrainConfig) -> (Vec<(usize, f64)>, f64) {
     let arts = Artifacts::discover(Artifacts::default_dir())
         .expect("XLA backend requires `make artifacts`");

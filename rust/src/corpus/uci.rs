@@ -16,7 +16,7 @@
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::corpus::bow::BagOfWords;
 

@@ -91,7 +91,14 @@ pub fn sweep_serial(
 /// snapshot plus a local signed delta.
 ///
 /// `doc_rows`/`word_rows` provide exclusive access to the rows this
-/// partition owns (see [`crate::scheduler::shared::RowAccess`]).
+/// partition owns (see [`crate::scheduler::shared::SharedRows`]).
+///
+/// `probs` and `inv` are caller-owned scratch: both are (re)sized and
+/// fully rewritten here, so a long-lived worker (see
+/// [`crate::scheduler::pool`]) can hand the same buffers to every epoch
+/// and the hot path performs no per-epoch heap allocation after the
+/// first call.
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_partition<DR, WR>(
     block: &mut TokenBlock,
     mut doc_row: DR,
@@ -101,6 +108,7 @@ pub fn sweep_partition<DR, WR>(
     h: &Hyper,
     rng: &mut Rng,
     probs: &mut Vec<f32>,
+    inv: &mut Vec<f32>,
 ) where
     DR: FnMut(usize) -> *mut f32,
     WR: FnMut(usize) -> *mut f32,
@@ -109,12 +117,16 @@ pub fn sweep_partition<DR, WR>(
     probs.resize(k, 0.0);
     // Reciprocal cache over the *effective* n_k (snapshot + local delta);
     // same incremental trick as sweep_serial — other workers' concurrent
-    // deltas are reconciled at the epoch barrier, not here.
-    let mut inv: Vec<f32> = topic_snapshot
-        .iter()
-        .zip(topic_delta.iter())
-        .map(|(&nk, &d)| 1.0 / ((nk as i64 + d) as f32 + h.wbeta))
-        .collect();
+    // deltas are reconciled at the epoch barrier, not here. Rebuilt in
+    // place each call (the snapshot changed); `clear` + `extend` reuses
+    // the allocation.
+    inv.clear();
+    inv.extend(
+        topic_snapshot
+            .iter()
+            .zip(topic_delta.iter())
+            .map(|(&nk, &d)| 1.0 / ((nk as i64 + d) as f32 + h.wbeta)),
+    );
     for i in 0..block.len() {
         let d = block.docs[i] as usize;
         let w = block.words[i] as usize;
@@ -136,7 +148,7 @@ pub fn sweep_partition<DR, WR>(
         inv[old] =
             1.0 / ((topic_snapshot[old] as i64 + topic_delta[old]) as f32 + h.wbeta);
 
-        let total = fill_probs(probs, drow, wrow, &inv, h);
+        let total = fill_probs(probs, drow, wrow, inv, h);
         let new = draw(probs, total, rng);
 
         drow[new] += 1.0;
@@ -177,8 +189,17 @@ fn fill_probs(probs: &mut [f32], drow: &[f32], wrow: &[f32], inv: &[f32], h: &Hy
 }
 
 /// Inverse-CDF draw from unnormalized weights with a precomputed total.
+///
+/// A degenerate total (all-zero weights, underflow to `0.0`, or a
+/// non-finite sum) cannot drive the inverse CDF — instead of silently
+/// returning the last topic, fall back to a uniform draw. A NaN total is
+/// a kernel bug upstream, so it additionally trips a debug assertion.
 #[inline]
 pub fn draw(probs: &[f32], total: f32, rng: &mut Rng) -> usize {
+    debug_assert!(!total.is_nan(), "draw: NaN weight total");
+    if total.is_nan() || total <= 0.0 || total.is_infinite() {
+        return rng.gen_range(probs.len());
+    }
     let mut r = rng.f32_open() * total;
     for (t, &p) in probs.iter().enumerate() {
         r -= p;
@@ -234,6 +255,7 @@ mod tests {
         let snapshot = counts.topic.clone();
         let mut delta = vec![0i64; 4];
         let mut probs = Vec::new();
+        let mut inv = Vec::new();
         let k = h.k;
         let dt = counts.doc_topic.as_mut_ptr();
         let wt = counts.word_topic.as_mut_ptr();
@@ -246,6 +268,7 @@ mod tests {
             &h,
             &mut rng,
             &mut probs,
+            &mut inv,
         );
         // Merge delta and verify full consistency.
         for t in 0..4 {
@@ -268,6 +291,38 @@ mod tests {
         }
         let ratio = counts[1] as f64 / counts[0] as f64;
         assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn draw_zero_total_falls_back_to_uniform() {
+        // All-zero weights used to silently return the last topic; the
+        // hardened draw falls back to a uniform pick over all topics.
+        let mut rng = Rng::new(41);
+        let probs = vec![0.0f32; 4];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[draw(&probs, 0.0, &mut rng)] += 1;
+        }
+        for (t, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / 40_000.0;
+            assert!((frac - 0.25).abs() < 0.02, "topic {t}: frac {frac}");
+        }
+    }
+
+    #[test]
+    fn draw_infinite_total_falls_back_to_uniform() {
+        let mut rng = Rng::new(43);
+        let probs = vec![1.0f32, 1.0];
+        let t = draw(&probs, f32::INFINITY, &mut rng);
+        assert!(t < 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN weight total")]
+    #[cfg(debug_assertions)]
+    fn draw_nan_total_debug_asserts() {
+        let mut rng = Rng::new(47);
+        draw(&[1.0f32, 1.0], f32::NAN, &mut rng);
     }
 
     #[test]

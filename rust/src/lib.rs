@@ -30,6 +30,8 @@
 //!   (Table I) so the experiments run without the original datasets.
 //! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas
 //!   kernels (HLO text) for the offloaded sampler / perplexity hot path.
+//!   Compiled only with the `xla` cargo feature (needs the external `xla`
+//!   bindings crate); the default build is dependency-free.
 //! * [`coordinator`] — the training drivers tying everything together.
 //! * [`util`], [`testing`], [`bench`] — in-tree substrates (PRNG, CLI,
 //!   stats, JSON/TSV, property-testing, bench harness) required by the
@@ -56,6 +58,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod gibbs;
 pub mod partition;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scheduler;
 pub mod testing;

@@ -7,9 +7,10 @@
 //!                  [--algos baseline,A1,A2,A3] [--restarts N] [--seed S]
 //! pplda train      [--profile ..] [--scale N] [--procs P] [--algo A3]
 //!                  [--topics K] [--iters N] [--eval-every N] [--xla]
-//!                  [--threads] [--json FILE]
+//!                  [--mode sequential|threaded|pooled] [--json FILE]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
-//!                  [--iters N] [--timeline]
+//!                  [--iters N] [--mode sequential|threaded|pooled]
+//!                  [--timeline]
 //! pplda artifacts-check
 //! ```
 
@@ -20,6 +21,7 @@ use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
 use pplda::corpus::{uci, BagOfWords};
 use pplda::partition::{self, Algorithm};
+#[cfg(feature = "xla")]
 use pplda::runtime::executor::Artifacts;
 use pplda::scheduler::exec::ExecMode;
 use pplda::util::cli::Args;
@@ -75,6 +77,19 @@ fn load_corpus(args: &Args) -> (String, BagOfWords) {
         let p = profile(args);
         let seed = args.get::<u64>("seed", 42);
         (p.name.clone(), synthetic::generate(&p, seed))
+    }
+}
+
+/// Executor selection: `--mode sequential|threaded|pooled` (preferred),
+/// with `--threads` kept as an alias for `--mode threaded`.
+fn exec_mode(args: &Args) -> ExecMode {
+    if let Some(m) = args.get_str("mode") {
+        ExecMode::parse(m)
+            .unwrap_or_else(|| panic!("unknown exec mode {m:?} (sequential|threaded|pooled)"))
+    } else if args.has("threads") {
+        ExecMode::Threaded
+    } else {
+        ExecMode::Sequential
     }
 }
 
@@ -145,11 +160,7 @@ fn cmd_train(args: &Args) -> ExitCode {
         } else {
             Backend::Native
         },
-        mode: if args.has("threads") {
-            ExecMode::Threaded
-        } else {
-            ExecMode::Sequential
-        },
+        mode: exec_mode(args),
         ..Default::default()
     };
 
@@ -202,11 +213,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         topics: args.get::<usize>("topics", 64),
         iters: args.get::<usize>("iters", 50),
         seed,
-        mode: if args.has("threads") {
-            ExecMode::Threaded
-        } else {
-            ExecMode::Sequential
-        },
+        mode: exec_mode(args),
         ..Default::default()
     };
 
@@ -239,6 +246,16 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts_check() -> ExitCode {
+    eprintln!(
+        "pplda was built without the `xla` feature; \
+         rebuild with `--features xla` to use the PJRT artifacts"
+    );
+    ExitCode::FAILURE
+}
+
+#[cfg(feature = "xla")]
 fn cmd_artifacts_check() -> ExitCode {
     let dir = Artifacts::default_dir();
     if !Artifacts::available(&dir) {

@@ -8,7 +8,7 @@
 
 use std::cell::RefCell;
 
-use anyhow::Result;
+use crate::util::error::Result;
 use xla::PjRtClient;
 
 thread_local! {

@@ -14,7 +14,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtLoadedExecutable, XlaComputation};
 
 use crate::runtime::client;

@@ -14,7 +14,7 @@
 //! backend remains the exact reference and the equivalence tests in
 //! `rust/tests/` bound the perplexity gap.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::corpus::bow::BagOfWords;
 use crate::gibbs::counts::LdaCounts;

@@ -5,21 +5,50 @@ use std::time::Instant;
 use crate::corpus::bow::BagOfWords;
 use crate::gibbs::counts::LdaCounts;
 use crate::gibbs::perplexity;
-use crate::gibbs::sampler::{self, Hyper};
+use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
+use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, WorkerPool};
 use crate::scheduler::shared::SharedRows;
 use crate::util::rng::Rng;
 
-/// Threaded = one OS thread per partition of the running diagonal;
-/// Sequential = same schedule executed in-order on the calling thread
-/// (identical results — worker RNG streams are keyed by position, not by
-/// interleaving).
+/// How diagonal epochs execute (see [`crate::scheduler::pool`]):
+///
+/// * `Sequential` — in-order on the calling thread; the determinism
+///   oracle and the zero-overhead mode for single-core boxes.
+/// * `Threaded` — legacy scoped execution: one OS thread *spawned* per
+///   partition per epoch (`P²` spawns per sweep).
+/// * `Pooled` — persistent worker pool created once per trainer; epochs
+///   are scatter/gathered over channels with per-worker scratch reuse.
+///
+/// All three produce identical results — worker RNG streams are keyed by
+/// schedule position `(sweep, epoch, worker)`, not by interleaving.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
     Threaded,
     Sequential,
+    Pooled,
+}
+
+impl ExecMode {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sequential" | "seq" => Some(Self::Sequential),
+            "threaded" | "threads" => Some(Self::Threaded),
+            "pooled" | "pool" => Some(Self::Pooled),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Threaded => "threaded",
+            Self::Sequential => "sequential",
+            Self::Pooled => "pooled",
+        }
+    }
 }
 
 /// Per-sweep timing/cost telemetry.
@@ -51,6 +80,14 @@ pub struct ParallelLda {
     blocks: Vec<Vec<TokenBlock>>,
     seed: u64,
     sweeps_done: usize,
+    /// Executor state; the persistent worker pool (if `Pooled` mode is
+    /// used) lives here for the trainer's lifetime.
+    engines: EngineCache,
+    /// Double-buffered epoch-start view of `counts.topic`: merged deltas
+    /// are applied to both, so no epoch ever clones the topic totals.
+    snapshot: Vec<u32>,
+    /// Per-worker signed topic deltas, zeroed and rewritten each epoch.
+    deltas: Vec<Vec<i64>>,
 }
 
 impl ParallelLda {
@@ -87,83 +124,54 @@ impl ParallelLda {
             blocks,
             seed,
             sweeps_done: 0,
+            engines: EngineCache::new(p),
+            snapshot: vec![0; k],
+            deltas: vec![vec![0i64; k]; p],
         }
     }
 
     /// One full Gibbs sweep = `P` diagonal epochs with barriers.
+    ///
+    /// Epochs dispatch through the [`crate::scheduler::pool::Executor`]
+    /// selected by `mode`; the topic snapshot is double-buffered and the
+    /// per-worker delta slots are reused, so the steady-state hot path
+    /// performs no per-epoch heap allocation in `Sequential` and
+    /// `Pooled` modes.
     pub fn sweep(&mut self, mode: ExecMode) -> SweepStats {
         let p = self.p;
         let k = self.h.k;
         let sweep_no = self.sweeps_done;
         let mut stats = SweepStats::default();
 
+        // Bring the persistent snapshot buffer up to date once per sweep
+        // (k u32s — cheap); per-epoch it is maintained by the merge below.
+        self.snapshot.copy_from_slice(&self.counts.topic);
+
         for l in 0..p {
-            let snapshot = self.counts.topic.clone();
             let epoch_started = Instant::now();
             let diag = &mut self.blocks[l];
             stats
                 .epoch_max_tokens
                 .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
             stats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+            let n = diag.len();
 
-            let doc_rows = SharedRows::new(&mut self.counts.doc_topic, k);
-            let word_rows = SharedRows::new(&mut self.counts.word_topic, k);
-            let h = self.h;
-            let seed = self.seed;
-
-            let run_worker = |m: usize, block: &mut TokenBlock, snapshot: &[u32]| {
-                let mut delta = vec![0i64; k];
-                let mut probs = Vec::new();
-                // Deterministic stream per (sweep, epoch, worker).
-                let mut rng = Rng::stream(
-                    seed ^ 0x50AB_71C5,
-                    ((sweep_no as u64) << 24) | ((l as u64) << 12) | m as u64,
-                );
-                sampler::sweep_partition(
-                    block,
-                    // SAFETY: the block's tokens all lie in partition
-                    // (m, (m+l) mod P); doc rows ∈ J_m and word rows ∈
-                    // V_{(m+l) mod P}, disjoint across the diagonal's
-                    // workers (PartitionMap construction).
-                    |d| unsafe { doc_rows.row_ptr(d) },
-                    |w| unsafe { word_rows.row_ptr(w) },
-                    snapshot,
-                    &mut delta,
-                    &h,
-                    &mut rng,
-                    &mut probs,
-                );
-                delta
+            let spec = EpochSpec {
+                doc: SharedRows::new(&mut self.counts.doc_topic, k),
+                emit: SharedRows::new(&mut self.counts.word_topic, k),
+                snapshot: &self.snapshot,
+                h: self.h,
+                seed: self.seed ^ 0x50AB_71C5,
+                sweep: sweep_no,
+                epoch: l,
             };
+            self.engines
+                .get(mode)
+                .run_epoch(&spec, diag, &mut self.deltas[..n]);
 
-            let deltas: Vec<Vec<i64>> = match mode {
-                ExecMode::Sequential => diag
-                    .iter_mut()
-                    .enumerate()
-                    .map(|(m, block)| run_worker(m, block, &snapshot))
-                    .collect(),
-                ExecMode::Threaded => std::thread::scope(|s| {
-                    let handles: Vec<_> = diag
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(m, block)| {
-                            let snapshot = &snapshot;
-                            let run_worker = &run_worker;
-                            s.spawn(move || run_worker(m, block, snapshot))
-                        })
-                        .collect();
-                    handles.into_iter().map(|h| h.join().unwrap()).collect()
-                }),
-            };
-
-            // Barrier: reconcile topic totals.
-            for delta in deltas {
-                for (t, d) in delta.into_iter().enumerate() {
-                    let v = self.counts.topic[t] as i64 + d;
-                    debug_assert!(v >= 0, "topic total went negative");
-                    self.counts.topic[t] = v as u32;
-                }
-            }
+            // Barrier: reconcile topic totals into both the authoritative
+            // counts and the snapshot buffer for the next epoch.
+            merge_deltas(&mut self.counts.topic, &mut self.snapshot, &self.deltas[..n]);
             stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
         }
 
@@ -171,8 +179,20 @@ impl ParallelLda {
         stats
     }
 
-    /// Run `iters` sweeps; record perplexity every `eval_every` (0 = only
-    /// at the end if `eval_every != 0`... never).
+    /// The persistent worker pool, if any `Pooled`-mode sweep has run on
+    /// this trainer (created on first use, then reused for every epoch).
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.engines.pool()
+    }
+
+    /// Run `iters` sweeps, returning the perplexity curve as
+    /// `(iteration, perplexity)` pairs.
+    ///
+    /// `eval_every` is the evaluation cadence: perplexity is recorded
+    /// every `eval_every` sweeps and always after the final sweep.
+    /// `eval_every == 0` disables perplexity evaluation entirely (the
+    /// returned curve is empty) — useful when only the trained counts
+    /// matter, since each evaluation costs a full corpus pass.
     pub fn train(
         &mut self,
         bow: &BagOfWords,
@@ -249,6 +269,68 @@ mod tests {
     }
 
     #[test]
+    fn pooled_equals_sequential() {
+        let (_bow, mut a) = setup(4, 37);
+        let (_bow2, mut b) = setup(4, 37);
+        for _ in 0..3 {
+            a.sweep(ExecMode::Pooled);
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn pool_is_reused_across_sweeps() {
+        let (_bow, mut lda) = setup(4, 38);
+        assert!(lda.pool().is_none(), "no pool before the first pooled sweep");
+        lda.sweep(ExecMode::Pooled);
+        let (workers, epochs) = {
+            let pool = lda.pool().expect("pool created on first pooled sweep");
+            (pool.workers(), pool.epochs_run())
+        };
+        assert_eq!(workers, 4);
+        assert_eq!(epochs, 4, "P epochs per sweep");
+        for _ in 0..3 {
+            lda.sweep(ExecMode::Pooled);
+        }
+        let pool = lda.pool().unwrap();
+        // Same pool object served every sweep: worker count stable, epoch
+        // counter monotone — no teardown/respawn between sweeps.
+        assert_eq!(pool.workers(), 4);
+        assert_eq!(pool.epochs_run(), 16);
+    }
+
+    #[test]
+    fn modes_can_be_mixed_across_sweeps() {
+        // RNG streams are keyed by schedule position, so a trainer may
+        // switch executors between sweeps without changing results.
+        let (_bow, mut a) = setup(3, 39);
+        let (_bow2, mut b) = setup(3, 39);
+        a.sweep(ExecMode::Pooled);
+        a.sweep(ExecMode::Sequential);
+        a.sweep(ExecMode::Threaded);
+        for _ in 0..3 {
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn pooled_sweep_preserves_invariants() {
+        let (bow, mut lda) = setup(3, 40);
+        for _ in 0..4 {
+            let stats = lda.sweep(ExecMode::Pooled);
+            assert_eq!(stats.total_tokens, bow.num_tokens());
+        }
+        assert_eq!(lda.counts.total(), bow.num_tokens());
+        assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
+    }
+
+    #[test]
     fn parallel_training_reduces_perplexity() {
         let (bow, mut lda) = setup(4, 34);
         let p0 = lda.perplexity(&bow);
@@ -271,6 +353,16 @@ mod tests {
         let ps = ser.perplexity(&bow);
         let rel = (pp - ps).abs() / ps;
         assert!(rel < 0.05, "parallel {pp} vs serial {ps} (rel {rel})");
+    }
+
+    #[test]
+    fn exec_mode_parses_cli_spellings() {
+        assert_eq!(ExecMode::parse("sequential"), Some(ExecMode::Sequential));
+        assert_eq!(ExecMode::parse("threads"), Some(ExecMode::Threaded));
+        assert_eq!(ExecMode::parse("pooled"), Some(ExecMode::Pooled));
+        assert_eq!(ExecMode::parse("pool"), Some(ExecMode::Pooled));
+        assert_eq!(ExecMode::parse("gpu"), None);
+        assert_eq!(ExecMode::Pooled.name(), "pooled");
     }
 
     #[test]

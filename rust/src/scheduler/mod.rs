@@ -9,12 +9,19 @@
 //! an epoch-start snapshot with per-worker deltas merged at the barrier.
 //!
 //! Because worker RNG streams are keyed by (sweep, epoch, partition) and
-//! not by thread interleaving, threaded and sequential execution produce
-//! *identical* assignments — sequential mode is both the determinism
-//! oracle for tests and the low-overhead mode for single-core boxes.
+//! not by thread interleaving, all execution modes produce *identical*
+//! assignments — sequential mode is both the determinism oracle for
+//! tests and the low-overhead mode for single-core boxes.
+//!
+//! Epochs run through the [`pool::Executor`] abstraction: in-order
+//! ([`pool::SequentialExec`]), legacy per-epoch scoped threads
+//! ([`pool::ThreadedExec`]), or the persistent [`pool::WorkerPool`] with
+//! long-lived per-worker scratch (see `docs/executor.md`).
 
 pub mod cost_model;
 pub mod exec;
+pub mod pool;
 pub mod shared;
 
 pub use exec::{ExecMode, ParallelLda};
+pub use pool::{Executor, WorkerPool};

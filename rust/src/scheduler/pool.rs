@@ -1,0 +1,528 @@
+//! Persistent worker-pool execution of diagonal epochs.
+//!
+//! The legacy engine re-spawned `P` OS threads per epoch with
+//! `std::thread::scope` — `P²` spawns per sweep — and allocated a fresh
+//! topic-delta vector, probability buffer, and reciprocal cache for each
+//! worker each epoch. That fixed overhead is exactly what the paper's
+//! speedup measurements must *not* contain (it measures partition
+//! quality, not thread-spawn latency), and what CLDA-style long-lived
+//! workers avoid.
+//!
+//! This module provides the shared execution abstraction:
+//!
+//! * [`EpochSpec`] — everything one diagonal epoch needs: shared count
+//!   matrices, the epoch-start topic snapshot, hyperparameters, and the
+//!   RNG keying coordinates `(seed, sweep, epoch)`.
+//! * [`Executor`] — the trait both trainers (`ParallelLda`, the BoT
+//!   trainer) drive; one call runs one diagonal epoch.
+//! * [`SequentialExec`] — in-order on the calling thread (the
+//!   determinism oracle), with its own reusable scratch.
+//! * [`ThreadedExec`] — the legacy scoped-spawn execution, kept as a
+//!   baseline for the executor-overhead benchmark.
+//! * [`WorkerPool`] — the persistent pool: `P` dedicated workers created
+//!   once per trainer, each owning long-lived scratch (`probs`, `inv`,
+//!   and its delta slot is coordinator-owned but reused), driven by a
+//!   scatter/gather barrier over channels.
+//!
+//! # Barrier protocol
+//!
+//! Each worker has a private job channel (SPSC in practice); the
+//! coordinator shares one completion channel. An epoch is:
+//!
+//! 1. **Scatter** — the coordinator sends worker `m` a lifetime-erased
+//!    [`Job`] describing partition `m` of the running diagonal.
+//! 2. **Sample** — each worker zeroes its delta slot, rebuilds its
+//!    reciprocal cache from the snapshot, and runs the partition kernel
+//!    with its persistent scratch buffers.
+//! 3. **Gather** — the coordinator blocks until it has received exactly
+//!    one completion per submitted job. Only then does it merge deltas
+//!    and advance, so every raw pointer inside a `Job` outlives its use.
+//!
+//! # Determinism
+//!
+//! Worker RNG streams are keyed by `(seed, sweep, epoch, worker)` via
+//! [`worker_rng`] — a pure function of the schedule position, never of
+//! thread interleaving — and delta merging is integer addition
+//! (commutative), so all three executors produce bit-identical counts.
+//! The `pooled_equals_sequential` tests in `exec.rs` / `bot/parallel.rs`
+//! pin this.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::gibbs::sampler::{self, Hyper};
+use crate::gibbs::tokens::TokenBlock;
+use crate::scheduler::exec::ExecMode;
+use crate::scheduler::shared::SharedRows;
+use crate::util::rng::Rng;
+
+/// The deterministic per-worker RNG stream for a schedule position.
+/// Identical across executors — this is the determinism anchor.
+#[inline]
+pub fn worker_rng(seed: u64, sweep: usize, epoch: usize, worker: usize) -> Rng {
+    Rng::stream(
+        seed,
+        ((sweep as u64) << 24) | ((epoch as u64) << 12) | worker as u64,
+    )
+}
+
+/// One diagonal epoch's inputs, shared by every worker of the epoch.
+///
+/// `doc` rows are grouped by document partition, `emit` rows by the
+/// emission-side partition (words for LDA and the BoT word phase,
+/// timestamps for the BoT timestamp phase). `snapshot` is the
+/// epoch-start view of the `k` topic totals backing `emit`.
+pub struct EpochSpec<'a> {
+    pub doc: SharedRows<'a>,
+    pub emit: SharedRows<'a>,
+    pub snapshot: &'a [u32],
+    pub h: Hyper,
+    /// Trainer/phase-salted RNG seed (see [`worker_rng`]).
+    pub seed: u64,
+    pub sweep: usize,
+    pub epoch: usize,
+}
+
+/// Executes diagonal epochs. One call = one epoch: worker `m` sweeps
+/// `diag[m]` and leaves its signed topic-total delta in `deltas[m]`
+/// (length `h.k`, zeroed by the executor). The caller merges deltas at
+/// the barrier.
+pub trait Executor {
+    fn run_epoch(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        diag: &mut [TokenBlock],
+        deltas: &mut [Vec<i64>],
+    );
+}
+
+/// The barrier merge shared by the trainers: fold every worker's signed
+/// delta into the authoritative topic totals *and* the double-buffered
+/// snapshot (which becomes the next epoch's read view — no re-clone).
+/// Integer addition commutes, so merge order never affects results.
+pub fn merge_deltas(totals: &mut [u32], snapshot: &mut [u32], deltas: &[Vec<i64>]) {
+    for delta in deltas {
+        for (t, &d) in delta.iter().enumerate() {
+            let v = totals[t] as i64 + d;
+            debug_assert!(v >= 0, "topic total went negative");
+            totals[t] = v as u32;
+            snapshot[t] = v as u32;
+        }
+    }
+}
+
+/// The worker body shared by all executors: zero the delta slot, derive
+/// the positional RNG stream, run the partition kernel with the given
+/// scratch.
+fn run_worker(
+    spec: &EpochSpec<'_>,
+    m: usize,
+    block: &mut TokenBlock,
+    delta: &mut [i64],
+    probs: &mut Vec<f32>,
+    inv: &mut Vec<f32>,
+) {
+    debug_assert_eq!(delta.len(), spec.h.k);
+    delta.fill(0);
+    let mut rng = worker_rng(spec.seed, spec.sweep, spec.epoch, m);
+    sampler::sweep_partition(
+        block,
+        // SAFETY: the diagonal non-conflict invariant — block `m`'s
+        // tokens all lie in partition `(m, (m+l) mod P)`, so its doc
+        // rows and emission rows are disjoint from every other worker's
+        // for the duration of the epoch (PartitionMap construction).
+        |d| unsafe { spec.doc.row_ptr(d) },
+        |w| unsafe { spec.emit.row_ptr(w) },
+        spec.snapshot,
+        delta,
+        &spec.h,
+        &mut rng,
+        probs,
+        inv,
+    );
+}
+
+/// In-order execution on the calling thread. The determinism oracle for
+/// the parallel modes, and the zero-overhead mode for single-core boxes;
+/// owns its scratch so repeated sweeps allocate nothing.
+#[derive(Default)]
+pub struct SequentialExec {
+    probs: Vec<f32>,
+    inv: Vec<f32>,
+}
+
+impl Executor for SequentialExec {
+    fn run_epoch(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        diag: &mut [TokenBlock],
+        deltas: &mut [Vec<i64>],
+    ) {
+        for (m, (block, delta)) in diag.iter_mut().zip(deltas.iter_mut()).enumerate() {
+            run_worker(spec, m, block, delta, &mut self.probs, &mut self.inv);
+        }
+    }
+}
+
+/// Legacy execution: one scoped OS thread spawned per partition per
+/// epoch, with per-spawn scratch allocation. Kept as the baseline the
+/// executor-overhead benchmark compares [`WorkerPool`] against.
+#[derive(Default)]
+pub struct ThreadedExec;
+
+impl Executor for ThreadedExec {
+    fn run_epoch(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        diag: &mut [TokenBlock],
+        deltas: &mut [Vec<i64>],
+    ) {
+        std::thread::scope(|s| {
+            for (m, (block, delta)) in diag.iter_mut().zip(deltas.iter_mut()).enumerate() {
+                s.spawn(move || {
+                    let mut probs = Vec::new();
+                    let mut inv = Vec::new();
+                    run_worker(spec, m, block, delta, &mut probs, &mut inv);
+                });
+            }
+        });
+    }
+}
+
+/// A lifetime-erased epoch assignment for one pool worker. All pointers
+/// are guaranteed valid (and the rows they reach exclusively owned) until
+/// the coordinator has received this job's completion signal.
+struct Job {
+    block: *mut TokenBlock,
+    doc: *mut f32,
+    /// Row count of `doc` (debug bounds parity with `SharedRows::row_ptr`).
+    doc_rows: usize,
+    emit: *mut f32,
+    /// Row count of `emit`.
+    emit_rows: usize,
+    snapshot: *const u32,
+    delta: *mut i64,
+    h: Hyper,
+    seed: u64,
+    sweep: usize,
+    epoch: usize,
+    worker: usize,
+}
+
+// SAFETY: Job transfers *exclusive logical ownership* of `block`, the
+// delta slot, and the job's row groups to exactly one worker for the
+// duration of one epoch; the coordinator's gather barrier sequences all
+// other access. The snapshot is read-only for the epoch.
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
+    // Long-lived scratch: sized on first epoch, reused forever after.
+    let mut probs: Vec<f32> = Vec::new();
+    let mut inv: Vec<f32> = Vec::new();
+    while let Ok(job) = rx.recv() {
+        let k = job.h.k;
+        // Catch panics so a failed debug assertion surfaces as a
+        // coordinator panic instead of a deadlocked gather barrier.
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: see `Job` — exclusive ownership until the done
+            // signal below is observed. Rebuilding an `EpochSpec` routes
+            // the pooled path through the same `run_worker` body (and
+            // `SharedRows` bounds checks) as the other executors.
+            let block = unsafe { &mut *job.block };
+            let snapshot = unsafe { std::slice::from_raw_parts(job.snapshot, k) };
+            let delta = unsafe { std::slice::from_raw_parts_mut(job.delta, k) };
+            let spec = EpochSpec {
+                doc: unsafe { SharedRows::from_raw(job.doc, job.doc_rows, k) },
+                emit: unsafe { SharedRows::from_raw(job.emit, job.emit_rows, k) },
+                snapshot,
+                h: job.h,
+                seed: job.seed,
+                sweep: job.sweep,
+                epoch: job.epoch,
+            };
+            run_worker(&spec, job.worker, block, delta, &mut probs, &mut inv);
+        }))
+        .is_ok();
+        if done.send((job.worker, ok)).is_err() {
+            break; // coordinator gone
+        }
+    }
+}
+
+/// A persistent pool of dedicated epoch workers.
+///
+/// Created once per trainer and reused for every epoch of every sweep:
+/// no thread spawns, no scratch allocation, and no topic-snapshot clone
+/// on the steady-state path. Workers block on their job channel between
+/// epochs, so an idle pool costs nothing but memory.
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    done_rx: Receiver<(usize, bool)>,
+    handles: Vec<JoinHandle<()>>,
+    epochs_run: u64,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` dedicated threads. This is the only place the
+    /// pool creates threads — every subsequent epoch reuses them.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "pool needs at least one worker");
+        let (done_tx, done_rx) = channel();
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || worker_loop(rx, done)));
+            senders.push(tx);
+        }
+        Self {
+            senders,
+            done_rx,
+            handles,
+            epochs_run: 0,
+        }
+    }
+
+    /// Number of live pool workers (constant for the pool's lifetime —
+    /// the pool never respawns).
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Total diagonal epochs this pool has executed. Monotone over the
+    /// pool's lifetime; tests use it to prove the same pool served every
+    /// sweep.
+    pub fn epochs_run(&self) -> u64 {
+        self.epochs_run
+    }
+}
+
+impl Executor for WorkerPool {
+    fn run_epoch(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        diag: &mut [TokenBlock],
+        deltas: &mut [Vec<i64>],
+    ) {
+        let n = diag.len();
+        assert!(
+            n <= self.senders.len(),
+            "diagonal has {n} partitions but the pool has {} workers",
+            self.senders.len()
+        );
+        assert_eq!(n, deltas.len(), "one delta slot per partition");
+        // Scatter.
+        for (m, (block, delta)) in diag.iter_mut().zip(deltas.iter_mut()).enumerate() {
+            debug_assert_eq!(delta.len(), spec.h.k);
+            let job = Job {
+                block: block as *mut TokenBlock,
+                doc: spec.doc.base_ptr(),
+                doc_rows: spec.doc.rows(),
+                emit: spec.emit.base_ptr(),
+                emit_rows: spec.emit.rows(),
+                snapshot: spec.snapshot.as_ptr(),
+                delta: delta.as_mut_ptr(),
+                h: spec.h,
+                seed: spec.seed,
+                sweep: spec.sweep,
+                epoch: spec.epoch,
+                worker: m,
+            };
+            self.senders[m].send(job).expect("pool worker died");
+        }
+        // Gather barrier: exactly one completion per submitted job. After
+        // this loop no worker holds any pointer from this epoch.
+        let mut panicked = false;
+        for _ in 0..n {
+            let (_, ok) = self.done_rx.recv().expect("pool worker died");
+            panicked |= !ok;
+        }
+        assert!(!panicked, "a pool worker panicked during the epoch");
+        self.epochs_run += 1;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect the job channels; workers fall out of their recv
+        // loop and exit.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-trainer executor cache: the stateless modes live inline, the pool
+/// is created lazily on the first `Pooled` epoch and then reused for the
+/// trainer's lifetime (including across BoT's two phases, which share
+/// `P` and `K`).
+pub struct EngineCache {
+    workers: usize,
+    seq: SequentialExec,
+    thr: ThreadedExec,
+    pool: Option<WorkerPool>,
+}
+
+impl EngineCache {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers,
+            seq: SequentialExec::default(),
+            thr: ThreadedExec,
+            pool: None,
+        }
+    }
+
+    /// The executor for `mode`, constructing the persistent pool on
+    /// first use.
+    pub fn get(&mut self, mode: ExecMode) -> &mut dyn Executor {
+        let workers = self.workers;
+        match mode {
+            ExecMode::Sequential => &mut self.seq,
+            ExecMode::Threaded => &mut self.thr,
+            ExecMode::Pooled => self.pool.get_or_insert_with(|| WorkerPool::new(workers)),
+        }
+    }
+
+    /// The persistent pool, if a `Pooled` epoch has run.
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gibbs::counts::LdaCounts;
+    use crate::partition::scheme::Cell;
+
+    /// Two disjoint partitions (disjoint doc AND word groups), like one
+    /// diagonal of a 2×2 plan.
+    fn diagonal_fixture(k: usize, seed: u64) -> (Vec<TokenBlock>, LdaCounts, Hyper) {
+        let mut rng = Rng::new(seed);
+        let cells0 = [
+            Cell { doc: 0, word: 0, count: 30 },
+            Cell { doc: 1, word: 1, count: 20 },
+        ];
+        let cells1 = [
+            Cell { doc: 2, word: 2, count: 25 },
+            Cell { doc: 3, word: 3, count: 15 },
+        ];
+        let blocks = vec![
+            TokenBlock::from_cells(&cells0, k, &mut rng),
+            TokenBlock::from_cells(&cells1, k, &mut rng),
+        ];
+        let mut counts = LdaCounts::zeros(4, 4, k);
+        for b in &blocks {
+            counts.absorb(b);
+        }
+        (blocks, counts, Hyper::new(k, 0.5, 0.1, 4))
+    }
+
+    fn run_mode(mode: ExecMode, epochs: usize) -> (Vec<TokenBlock>, LdaCounts) {
+        let k = 4;
+        let (mut blocks, mut counts, h) = diagonal_fixture(k, 7);
+        let mut engines = EngineCache::new(2);
+        let mut deltas = vec![vec![0i64; k]; 2];
+        let mut snapshot = counts.topic.clone();
+        for e in 0..epochs {
+            let spec = EpochSpec {
+                doc: SharedRows::new(&mut counts.doc_topic, k),
+                emit: SharedRows::new(&mut counts.word_topic, k),
+                snapshot: &snapshot,
+                h,
+                seed: 99,
+                sweep: 0,
+                epoch: e,
+            };
+            engines.get(mode).run_epoch(&spec, &mut blocks, &mut deltas);
+            merge_deltas(&mut counts.topic, &mut snapshot, &deltas);
+        }
+        (blocks, counts)
+    }
+
+    #[test]
+    fn all_executors_agree_bit_for_bit() {
+        let (bs, cs) = run_mode(ExecMode::Sequential, 4);
+        let (bt, ct) = run_mode(ExecMode::Threaded, 4);
+        let (bp, cp) = run_mode(ExecMode::Pooled, 4);
+        for (a, b) in bs.iter().zip(bt.iter()) {
+            assert_eq!(a.z, b.z);
+        }
+        for (a, b) in bs.iter().zip(bp.iter()) {
+            assert_eq!(a.z, b.z);
+        }
+        assert_eq!(cs.doc_topic, ct.doc_topic);
+        assert_eq!(cs.doc_topic, cp.doc_topic);
+        assert_eq!(cs.word_topic, cp.word_topic);
+        assert_eq!(cs.topic, cp.topic);
+        assert_eq!(cs.topic, ct.topic);
+    }
+
+    #[test]
+    fn counts_stay_consistent_after_pooled_epochs() {
+        let (blocks, counts) = run_mode(ExecMode::Pooled, 3);
+        let refs: Vec<&TokenBlock> = blocks.iter().collect();
+        assert!(counts.check_consistency(&refs).is_ok());
+    }
+
+    #[test]
+    fn pool_counts_epochs_and_never_respawns() {
+        let k = 4;
+        let (mut blocks, mut counts, h) = diagonal_fixture(k, 11);
+        let mut engines = EngineCache::new(2);
+        let mut deltas = vec![vec![0i64; k]; 2];
+        let snapshot = counts.topic.clone();
+        for e in 0..5 {
+            let spec = EpochSpec {
+                doc: SharedRows::new(&mut counts.doc_topic, k),
+                emit: SharedRows::new(&mut counts.word_topic, k),
+                snapshot: &snapshot,
+                h,
+                seed: 1,
+                sweep: e,
+                epoch: 0,
+            };
+            engines
+                .get(ExecMode::Pooled)
+                .run_epoch(&spec, &mut blocks, &mut deltas);
+        }
+        let pool = engines.pool().expect("pool materialized");
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.epochs_run(), 5);
+    }
+
+    #[test]
+    fn sequential_mode_creates_no_pool() {
+        let _ = run_mode(ExecMode::Sequential, 1);
+        let engines = EngineCache::new(2);
+        assert!(engines.pool().is_none());
+    }
+
+    #[test]
+    fn pool_runs_narrow_diagonals() {
+        // A pool sized for P workers must accept a diagonal with fewer
+        // partitions (e.g. ragged plans) without deadlocking.
+        let k = 4;
+        let (mut blocks, mut counts, h) = diagonal_fixture(k, 13);
+        blocks.truncate(1);
+        let mut pool = WorkerPool::new(3);
+        let mut deltas = vec![vec![0i64; k]];
+        let snapshot = counts.topic.clone();
+        let spec = EpochSpec {
+            doc: SharedRows::new(&mut counts.doc_topic, k),
+            emit: SharedRows::new(&mut counts.word_topic, k),
+            snapshot: &snapshot,
+            h,
+            seed: 5,
+            sweep: 0,
+            epoch: 0,
+        };
+        pool.run_epoch(&spec, &mut blocks, &mut deltas);
+        assert_eq!(pool.epochs_run(), 1);
+        assert_eq!(deltas[0].iter().sum::<i64>(), 0, "deltas conserve tokens");
+    }
+}

@@ -38,6 +38,24 @@ impl<'a> SharedRows<'a> {
         }
     }
 
+    /// Rebuild a view from raw parts — the receiving side of a
+    /// lifetime-erased transfer (see [`crate::scheduler::pool`]'s `Job`).
+    ///
+    /// # Safety
+    /// `ptr` must point to a live `rows × k` f32 matrix for as long as
+    /// the view is used, under the same row-ownership discipline as
+    /// [`Self::row_ptr`] (the caller chooses `'a`; it must not outlive
+    /// the backing allocation's borrow).
+    pub unsafe fn from_raw(ptr: *mut f32, rows: usize, k: usize) -> Self {
+        debug_assert!(k > 0);
+        Self {
+            ptr,
+            rows,
+            k,
+            _marker: PhantomData,
+        }
+    }
+
     /// Raw pointer to the start of `row`.
     ///
     /// # Safety
@@ -47,6 +65,15 @@ impl<'a> SharedRows<'a> {
     pub unsafe fn row_ptr(&self, row: usize) -> *mut f32 {
         debug_assert!(row < self.rows, "row {row} out of {}", self.rows);
         self.ptr.add(row * self.k)
+    }
+
+    /// Base pointer of the matrix (row 0). Used by the worker pool to
+    /// ship a lifetime-erased view to long-lived workers; the same row
+    /// ownership rules as [`Self::row_ptr`] apply to any access through
+    /// it.
+    #[inline]
+    pub fn base_ptr(&self) -> *mut f32 {
+        self.ptr
     }
 
     pub fn rows(&self) -> usize {

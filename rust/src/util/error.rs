@@ -1,0 +1,128 @@
+//! Minimal error substrate with an `anyhow`-compatible surface.
+//!
+//! The offline build environment has no crates.io cache, so the fallible
+//! edges of the system (corpus loaders, the optional PJRT runtime) use
+//! this in-tree shim instead of `anyhow`: a string-backed [`Error`], a
+//! [`Result`] alias with a defaulted error type, a [`Context`] extension
+//! trait (`.context(..)` / `.with_context(|| ..)` on `Result` and
+//! `Option`), and a [`bail!`] macro. Swapping back to `anyhow` would be a
+//! one-line import change at each use site.
+
+use std::fmt;
+
+/// A boxed-string error: message-only, context accreted by prefixing.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `expect`/`unwrap` print Debug; show the human-readable chain.
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error` — that keeps the blanket `?`-conversion below
+// coherent (no overlap with `impl From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, `anyhow`-style.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built message.
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+pub(crate) use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().with_context(|| format!("bad number {s:?}"))?;
+        if n > 100 {
+            bail!("{n} out of range");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("bad number \"x\":"), "{e}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse("999").unwrap_err();
+        assert_eq!(e.to_string(), "999 out of range");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let io: std::io::Result<u8> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = io.context("open file").unwrap_err();
+        assert!(e.to_string().starts_with("open file:"), "{e}");
+    }
+
+    #[test]
+    fn io_error_converts_via_question_mark() {
+        fn open() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/real/path/pplda")?)
+        }
+        assert!(open().is_err());
+    }
+}

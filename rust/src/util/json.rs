@@ -30,6 +30,9 @@ impl Json {
         self
     }
 
+    // An inherent `to_string` (rather than a `Display` impl) is
+    // deliberate: compact JSON is an encoding, not a display format.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);

@@ -7,6 +7,7 @@
 
 pub mod alias;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;
@@ -17,7 +18,7 @@ pub mod tsv;
 #[inline]
 pub fn div_ceil(a: usize, b: usize) -> usize {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Format a token/second style rate with SI-ish suffixes.

@@ -101,6 +101,16 @@ fn train_bot_tiny_with_timeline() {
 }
 
 #[test]
+fn train_pooled_mode_via_cli() {
+    let (out, _, ok) = pplda(&[
+        "train", "--profile", "tiny", "--procs", "2", "--topics", "4",
+        "--iters", "2", "--restarts", "2", "--mode", "pooled",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("final perplexity"));
+}
+
+#[test]
 fn train_json_report() {
     let dir = std::env::temp_dir().join("pplda_cli_test.json");
     let path = dir.to_str().unwrap();

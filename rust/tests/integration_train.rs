@@ -97,3 +97,47 @@ fn threaded_mode_matches_sequential_through_driver() {
     let thr = train_lda(&bow, &plan, &cfg);
     assert_eq!(seq.final_perplexity, thr.final_perplexity);
 }
+
+#[test]
+fn pooled_mode_matches_sequential_through_driver() {
+    let bow = generate(&small_profile(), 106);
+    let plan = partition(&bow, 3, Algorithm::A3 { restarts: 3 }, 3);
+    let mut cfg = TrainConfig::quick(8, 5);
+    let seq = train_lda(&bow, &plan, &cfg);
+    cfg.mode = ExecMode::Pooled;
+    let pooled = train_lda(&bow, &plan, &cfg);
+    assert_eq!(seq.final_perplexity, pooled.final_perplexity);
+    assert_eq!(seq.curve, pooled.curve);
+}
+
+#[test]
+fn pooled_bot_matches_sequential_through_driver() {
+    let mut profile = Profile::tiny();
+    profile.time = Some(TimeProfile {
+        first_year: 2000,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 4,
+    });
+    let tc = generate_timestamped(&profile, 107);
+    let mut cfg = TrainConfig::quick(8, 5);
+    let seq = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+    cfg.mode = ExecMode::Pooled;
+    let pooled = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+    assert_eq!(seq.final_perplexity, pooled.final_perplexity);
+}
+
+#[test]
+fn pooled_training_is_deterministic_and_reuses_one_pool() {
+    let bow = generate(&small_profile(), 108);
+    let plan = partition(&bow, 4, Algorithm::A2, 9);
+    let mut a = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 9);
+    let mut b = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 9);
+    a.train(&bow, 4, 0, ExecMode::Pooled);
+    b.train(&bow, 4, 0, ExecMode::Pooled);
+    assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+    assert_eq!(a.counts.topic, b.counts.topic);
+    let pool = a.pool().expect("pooled training materializes the pool");
+    assert_eq!(pool.workers(), 4);
+    assert_eq!(pool.epochs_run(), 16, "4 sweeps x 4 epochs on one pool");
+}
