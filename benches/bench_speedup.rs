@@ -7,9 +7,11 @@
 //! paper's speedup narrative on hardware with fewer cores than P.
 
 use pplda::corpus::synthetic::{generate, Profile};
+use pplda::partition::eta::EtaComparison;
 use pplda::partition::{partition, Algorithm};
 use pplda::scheduler::cost_model::SpeedupReport;
 use pplda::scheduler::exec::{ExecMode, ParallelLda};
+use pplda::scheduler::schedule::{Schedule, ScheduleKind};
 use pplda::util::json::Json;
 use pplda::util::tsv::{f, Table};
 
@@ -61,7 +63,7 @@ fn main() {
             // Validate the model against one executed sweep.
             let mut lda = ParallelLda::init(&bow, &plan, topics, 0.5, 0.1, seed);
             let stats = lda.sweep(ExecMode::Sequential);
-            let measured = SpeedupReport::of_stats(&stats, p);
+            let measured = SpeedupReport::of_stats(&stats);
             let agree = (measured.eta - model.eta).abs() < 1e-9;
 
             table.row([
@@ -79,7 +81,82 @@ fn main() {
     println!("{}", table.to_aligned());
     println!("speedup model validated against executed epoch token costs");
 
+    schedule_eta_sweep(seed, fast);
     executor_overhead(seed, fast);
+}
+
+/// Diagonal-vs-packed sweep (the schedule abstraction's payoff): at a
+/// fixed worker count `W`, over-decompose the grid by `g ∈ {1,2,4,8}`
+/// and LPT-pack each diagonal onto the workers. Reports the schedule-η
+/// each `(algo, g)` achieves against the plain diagonal η at `P = W`,
+/// and asserts the acceptance bar: packed `g = 4` is at least as
+/// balanced as the diagonal baseline for all four algorithms on the
+/// skewed nips-like corpus. η here is analytic (token counts, not
+/// wallclock), so the assertion is noise-free. Emits a `BENCH_JSON
+/// schedule_eta` line for the trajectory.
+fn schedule_eta_sweep(seed: u64, fast: bool) {
+    let w = 8usize;
+    let restarts = if fast { 10 } else { 100 };
+    let bow = generate(&Profile::nips_like(), seed);
+    println!(
+        "\nschedule eta sweep: D={} W={} N={} workers={w}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    let mut table = Table::new(["algo", "g", "grid", "plan_eta", "sched_eta", "diag_eta_W8"]);
+    let mut results = Vec::new();
+    for name in ["baseline", "A1", "A2", "A3"] {
+        let algo = |restarts| match name {
+            "baseline" => Algorithm::Baseline { restarts },
+            "A1" => Algorithm::A1,
+            "A2" => Algorithm::A2,
+            _ => Algorithm::A3 { restarts },
+        };
+        let diag = partition(&bow, w, algo(restarts), seed);
+        for g in [1usize, 2, 4, 8] {
+            let grid = g * w;
+            let plan = partition(&bow, grid, algo(restarts), seed);
+            let schedule =
+                Schedule::build(ScheduleKind::Packed { grid_factor: g }, &plan.costs, w);
+            let cmp = EtaComparison::of(&plan, &schedule);
+            table.row([
+                name.to_string(),
+                g.to_string(),
+                grid.to_string(),
+                f(cmp.plan.eta, 4),
+                f(cmp.schedule.eta, 4),
+                f(diag.eta, 4),
+            ]);
+            let mut j = Json::obj();
+            j.set("algo", name)
+                .set("grid_factor", g)
+                .set("grid", grid)
+                .set("plan_eta", cmp.plan.eta)
+                .set("schedule_eta", cmp.schedule.eta)
+                .set("diagonal_eta", diag.eta);
+            results.push(j);
+            if g == 4 {
+                assert!(
+                    cmp.schedule.eta >= diag.eta - 1e-9,
+                    "{name}: packed g=4 schedule-eta {} fell below diagonal eta {} at W={w}",
+                    cmp.schedule.eta,
+                    diag.eta
+                );
+            }
+        }
+    }
+    println!("{}", table.to_aligned());
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "schedule_eta")
+        .set("corpus", "nips-like")
+        .set("workers", w)
+        .set("restarts", restarts)
+        .set("results", results);
+    println!("BENCH_JSON {}", summary.to_string());
+    println!("packed g=4 >= diagonal eta at W={w} for all four algorithms");
 }
 
 /// Executor-overhead micro-benchmark: per-sweep wall time of the three

@@ -42,7 +42,10 @@ fn study(name: &str, bow: &BagOfWords, procs: &[usize], restarts: usize, seed: u
         runtime.row(secs);
     }
     println!("load-balancing ratio eta:\n{}", table.to_aligned());
-    println!("partitioner wall time (restarts={restarts} for randomized):\n{}", runtime.to_aligned());
+    println!(
+        "partitioner wall time (restarts={restarts} for randomized):\n{}",
+        runtime.to_aligned()
+    );
 }
 
 fn main() {

@@ -1,6 +1,8 @@
 //! Parallel BoT (paper §IV-C): each sweep epoch samples one diagonal of
 //! `DW` (word phase) and then the corresponding diagonal of `DTS`
-//! (timestamp phase), both conflict-free under their own partition plans.
+//! (timestamp phase), both conflict-free under their own partition plans
+//! and both scheduled onto the same `W` workers (each plan gets its own
+//! LPT packing, since their cost matrices differ).
 
 use std::time::Instant;
 
@@ -8,38 +10,82 @@ use crate::bot::counts::BotCounts;
 use crate::bot::serial::BotHyper;
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::gibbs::tokens::TokenBlock;
+use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::exec::{ExecMode, SweepStats};
-use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, WorkerPool};
+use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
+use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
 use crate::util::rng::Rng;
+
+/// Diagonal-major token blocks plus their partition ids for one matrix.
+struct Phase {
+    blocks: Vec<Vec<TokenBlock>>,
+    ids: Vec<Vec<u64>>,
+    costs: CostMatrix,
+    schedule: Schedule,
+}
+
+impl Phase {
+    fn build(
+        bow: &crate::corpus::bow::BagOfWords,
+        plan: &Plan,
+        k: usize,
+        rng: &mut Rng,
+        kind: ScheduleKind,
+        workers: usize,
+    ) -> Self {
+        let p = plan.p;
+        let map = PartitionMap::build(bow, plan);
+        let mut blocks = Vec::with_capacity(p);
+        let mut ids = Vec::with_capacity(p);
+        for l in 0..p {
+            let mut diag = Vec::with_capacity(p);
+            let mut diag_ids = Vec::with_capacity(p);
+            for (m, n) in map.diagonal(l) {
+                diag.push(TokenBlock::from_cells(map.cells(m, n), k, rng));
+                diag_ids.push(partition_id(m, n, p));
+            }
+            blocks.push(diag);
+            ids.push(diag_ids);
+        }
+        Self {
+            blocks,
+            ids,
+            costs: plan.costs.clone(),
+            schedule: Schedule::build(kind, &plan.costs, workers),
+        }
+    }
+}
 
 pub struct ParallelBot {
     pub h: BotHyper,
     pub counts: BotCounts,
+    /// Grid size `P` shared by both plans.
     pub p: usize,
-    /// Word blocks, diagonal-major over the DW plan.
-    word_blocks: Vec<Vec<TokenBlock>>,
-    /// Timestamp blocks, diagonal-major over the DTS plan.
-    stamp_blocks: Vec<Vec<TokenBlock>>,
+    /// Word blocks + schedule over the DW plan.
+    word: Phase,
+    /// Timestamp blocks + schedule over the DTS plan.
+    stamp: Phase,
     seed: u64,
     sweeps_done: usize,
     /// Executor state — the persistent pool (if `Pooled` mode is used)
-    /// serves *both* phases' epochs, since they share `P` and `K`.
+    /// serves *both* phases' epochs, since they share `W` and `K`.
     engines: EngineCache,
     /// Double-buffered epoch-start views of `counts.topic_words` /
     /// `counts.topic_stamps` (no per-epoch clone).
     word_snapshot: Vec<u32>,
     stamp_snapshot: Vec<u32>,
-    /// Per-worker signed topic deltas, shared by both phases.
+    /// Per-task signed topic deltas, shared by both phases.
     deltas: Vec<Vec<i64>>,
 }
 
 impl ParallelBot {
     /// `plan_dw` partitions the document–word matrix, `plan_dts` the
     /// document–timestamp matrix (independent plans over R and R', as the
-    /// paper prescribes). Both must use the same `P`.
+    /// paper prescribes). Both must use the same `P`; execution uses the
+    /// legacy diagonal schedule (`W == P`).
     pub fn init(
         tc: &TimestampedCorpus,
         plan_dw: &Plan,
@@ -47,22 +93,28 @@ impl ParallelBot {
         h: BotHyper,
         seed: u64,
     ) -> Self {
+        Self::init_scheduled(tc, plan_dw, plan_dts, h, seed, ScheduleKind::Diagonal, plan_dw.p)
+    }
+
+    /// As [`Self::init`], but mapping both grids onto `workers` worker
+    /// slots under `kind`. Each phase is packed against its own cost
+    /// matrix. Token initialization is schedule-independent, so any
+    /// `(kind, workers)` over the same plans trains bit-identically.
+    pub fn init_scheduled(
+        tc: &TimestampedCorpus,
+        plan_dw: &Plan,
+        plan_dts: &Plan,
+        h: BotHyper,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+    ) -> Self {
         assert_eq!(plan_dw.p, plan_dts.p, "DW and DTS plans must share P");
         let p = plan_dw.p;
         let mut rng = Rng::stream(seed, 0xB07_11);
 
-        let build = |bow, plan: &Plan, rng: &mut Rng| {
-            let map = PartitionMap::build(bow, plan);
-            (0..p)
-                .map(|l| {
-                    map.diagonal(l)
-                        .map(|(m, n)| TokenBlock::from_cells(map.cells(m, n), h.k, rng))
-                        .collect::<Vec<_>>()
-                })
-                .collect::<Vec<_>>()
-        };
-        let word_blocks = build(&tc.bow, plan_dw, &mut rng);
-        let stamp_blocks = build(&tc.dts, plan_dts, &mut rng);
+        let word = Phase::build(&tc.bow, plan_dw, h.k, &mut rng, kind, workers);
+        let stamp = Phase::build(&tc.dts, plan_dts, h.k, &mut rng, kind, workers);
 
         let mut counts = BotCounts::zeros(
             tc.bow.num_docs(),
@@ -70,12 +122,12 @@ impl ParallelBot {
             tc.num_stamps,
             h.k,
         );
-        for diag in &word_blocks {
+        for diag in &word.blocks {
             for b in diag {
                 counts.absorb_words(b);
             }
         }
-        for diag in &stamp_blocks {
+        for diag in &stamp.blocks {
             for b in diag {
                 counts.absorb_stamps(b);
             }
@@ -84,15 +136,34 @@ impl ParallelBot {
             h,
             counts,
             p,
-            word_blocks,
-            stamp_blocks,
+            word,
+            stamp,
             seed,
             sweeps_done: 0,
-            engines: EngineCache::new(p),
+            engines: EngineCache::new(workers),
             word_snapshot: vec![0; h.k],
             stamp_snapshot: vec![0; h.k],
             deltas: vec![vec![0i64; h.k]; p],
         }
+    }
+
+    /// Re-map both plans onto a different worker count / schedule kind
+    /// mid-training; results are unaffected (partition-keyed RNG) but the
+    /// executor state is rebuilt for the new worker count.
+    pub fn set_schedule(&mut self, kind: ScheduleKind, workers: usize) {
+        self.word.schedule = Schedule::build(kind, &self.word.costs, workers);
+        self.stamp.schedule = Schedule::build(kind, &self.stamp.costs, workers);
+        self.engines = EngineCache::new(workers);
+    }
+
+    /// Worker slots the current schedules run on.
+    pub fn workers(&self) -> usize {
+        self.word.schedule.workers
+    }
+
+    /// The (DW, DTS) schedules executing this trainer's sweeps.
+    pub fn schedules(&self) -> (&Schedule, &Schedule) {
+        (&self.word.schedule, &self.stamp.schedule)
     }
 
     /// One sweep: `P` epochs of (word diagonal, then timestamp diagonal).
@@ -105,8 +176,14 @@ impl ParallelBot {
         let p = self.p;
         let k = self.h.k;
         let sweep_no = self.sweeps_done;
-        let mut wstats = SweepStats::default();
-        let mut sstats = SweepStats::default();
+        let mut wstats = SweepStats {
+            workers: self.word.schedule.workers,
+            ..SweepStats::default()
+        };
+        let mut sstats = SweepStats {
+            workers: self.stamp.schedule.workers,
+            ..SweepStats::default()
+        };
 
         self.word_snapshot.copy_from_slice(&self.counts.topic_words);
         self.stamp_snapshot
@@ -116,10 +193,11 @@ impl ParallelBot {
             // ---- word phase on DW diagonal l ----
             {
                 let started = Instant::now();
-                let diag = &mut self.word_blocks[l];
+                let diag = &mut self.word.blocks[l];
+                let ep = &self.word.schedule.epochs[l];
                 wstats
                     .epoch_max_tokens
-                    .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
+                    .push(ep.max_assigned(|i| diag[i].len() as u64));
                 wstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
                 let n = diag.len();
                 let spec = EpochSpec {
@@ -129,11 +207,15 @@ impl ParallelBot {
                     h: self.h.word_hyper(),
                     seed: self.seed ^ 0xD0C5,
                     sweep: sweep_no,
-                    epoch: l,
+                };
+                let tasks = EpochTasks {
+                    blocks: diag,
+                    ids: &self.word.ids[l],
+                    assign: &ep.assign,
                 };
                 self.engines
                     .get(mode)
-                    .run_epoch(&spec, diag, &mut self.deltas[..n]);
+                    .run_epoch(&spec, tasks, &mut self.deltas[..n]);
                 merge_deltas(
                     &mut self.counts.topic_words,
                     &mut self.word_snapshot,
@@ -145,10 +227,11 @@ impl ParallelBot {
             // ---- timestamp phase on DTS diagonal l ----
             {
                 let started = Instant::now();
-                let diag = &mut self.stamp_blocks[l];
+                let diag = &mut self.stamp.blocks[l];
+                let ep = &self.stamp.schedule.epochs[l];
                 sstats
                     .epoch_max_tokens
-                    .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
+                    .push(ep.max_assigned(|i| diag[i].len() as u64));
                 sstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
                 let n = diag.len();
                 let spec = EpochSpec {
@@ -158,11 +241,15 @@ impl ParallelBot {
                     h: self.h.stamp_hyper(),
                     seed: self.seed ^ 0x7135,
                     sweep: sweep_no,
-                    epoch: l,
+                };
+                let tasks = EpochTasks {
+                    blocks: diag,
+                    ids: &self.stamp.ids[l],
+                    assign: &ep.assign,
                 };
                 self.engines
                     .get(mode)
-                    .run_epoch(&spec, diag, &mut self.deltas[..n]);
+                    .run_epoch(&spec, tasks, &mut self.deltas[..n]);
                 merge_deltas(
                     &mut self.counts.topic_stamps,
                     &mut self.stamp_snapshot,
@@ -204,11 +291,11 @@ impl ParallelBot {
     }
 
     pub fn word_blocks_flat(&self) -> Vec<&TokenBlock> {
-        self.word_blocks.iter().flatten().collect()
+        self.word.blocks.iter().flatten().collect()
     }
 
     pub fn stamp_blocks_flat(&self) -> Vec<&TokenBlock> {
-        self.stamp_blocks.iter().flatten().collect()
+        self.stamp.blocks.iter().flatten().collect()
     }
 }
 
@@ -242,6 +329,27 @@ mod tests {
             tc.num_stamps,
         );
         let bot = ParallelBot::init(&tc, &plan_dw, &plan_dts, h, seed);
+        (tc, bot)
+    }
+
+    fn setup_scheduled(
+        grid: usize,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+    ) -> (TimestampedCorpus, ParallelBot) {
+        let tc = tiny_tc(seed);
+        let plan_dw = partition(&tc.bow, grid, Algorithm::A3 { restarts: 3 }, seed);
+        let plan_dts = partition(&tc.dts, grid, Algorithm::A3 { restarts: 3 }, seed + 1);
+        let h = super::super::serial::BotHyper::new(
+            8,
+            0.5,
+            0.1,
+            0.1,
+            tc.bow.num_words(),
+            tc.num_stamps,
+        );
+        let bot = ParallelBot::init_scheduled(&tc, &plan_dw, &plan_dts, h, seed, kind, workers);
         (tc, bot)
     }
 
@@ -299,6 +407,47 @@ mod tests {
     }
 
     #[test]
+    fn packed_pooled_bot_matches_sequential_across_worker_counts() {
+        // Cross-schedule determinism for both phases: grid-4 plans packed
+        // onto W ∈ {1, 2, 4} and run Pooled equal the diagonal
+        // Sequential oracle bit for bit.
+        let (_tc, mut oracle) = setup(4, 67);
+        for _ in 0..2 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        for workers in [1usize, 2, 4] {
+            let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+            let (_t, mut bot) = setup_scheduled(4, 67, kind, workers);
+            assert_eq!(bot.workers(), workers);
+            for _ in 0..2 {
+                bot.sweep(ExecMode::Pooled);
+            }
+            assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "W={workers}");
+            assert_eq!(bot.counts.word_topic, oracle.counts.word_topic, "W={workers}");
+            assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "W={workers}");
+            assert_eq!(bot.counts.topic_words, oracle.counts.topic_words, "W={workers}");
+            assert_eq!(bot.counts.topic_stamps, oracle.counts.topic_stamps, "W={workers}");
+        }
+    }
+
+    #[test]
+    fn bot_schedules_and_modes_switch_mid_training() {
+        let (_tc, mut a) = setup_scheduled(4, 68, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (_tc2, mut b) = setup(4, 68);
+        a.sweep(ExecMode::Pooled);
+        a.set_schedule(ScheduleKind::Diagonal, 4);
+        a.sweep(ExecMode::Sequential);
+        a.set_schedule(ScheduleKind::Packed { grid_factor: 4 }, 1);
+        a.sweep(ExecMode::Threaded);
+        for _ in 0..3 {
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.stamp_topic, b.counts.stamp_topic);
+    }
+
+    #[test]
     fn one_pool_serves_both_phases_across_sweeps() {
         let (_tc, mut bot) = setup(3, 66);
         assert!(bot.pool().is_none());
@@ -306,7 +455,7 @@ mod tests {
             bot.sweep(ExecMode::Pooled);
         }
         let pool = bot.pool().expect("pool created on first pooled sweep");
-        assert_eq!(pool.workers(), 3, "no respawn: worker count stable at P");
+        assert_eq!(pool.workers(), 3, "no respawn: worker count stable at W");
         // 3 sweeps × P epochs × 2 phases, all on the same pool.
         assert_eq!(pool.epochs_run(), 3 * 3 * 2);
     }

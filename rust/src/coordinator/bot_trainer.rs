@@ -14,6 +14,10 @@ use crate::util::json::Json;
 #[derive(Clone, Debug)]
 pub struct BotTrainReport {
     pub p: usize,
+    /// Worker count `W` both phases executed on (1 for serial).
+    pub workers: usize,
+    /// Schedule label: "serial", "diagonal", or "packed(xg)".
+    pub schedule: String,
     pub topics: usize,
     pub iters: usize,
     pub final_perplexity: f64,
@@ -32,6 +36,8 @@ impl BotTrainReport {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("p", self.p)
+            .set("workers", self.workers)
+            .set("schedule", self.schedule.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
@@ -67,6 +73,8 @@ pub fn train_bot(
         let final_perplexity = bot.perplexity(tc);
         return BotTrainReport {
             p: 1,
+            workers: 1,
+            schedule: "serial".to_string(),
             topics: cfg.topics,
             iters: cfg.iters,
             final_perplexity,
@@ -80,13 +88,27 @@ pub fn train_bot(
 
     let plan_dw = partition::partition(&tc.bow, p, algo, cfg.seed);
     let plan_dts = partition::partition(&tc.dts, p, algo, cfg.seed ^ 0xD75);
-    let speedup = combined_speedup(&plan_dw, &plan_dts);
+    let workers = cfg.resolved_workers(p);
 
-    let mut bot = ParallelBot::init(tc, &plan_dw, &plan_dts, h, cfg.seed);
+    let mut bot = ParallelBot::init_scheduled(
+        tc,
+        &plan_dw,
+        &plan_dts,
+        h,
+        cfg.seed,
+        cfg.schedule,
+        workers,
+    );
+    let speedup = {
+        let (sdw, sdts) = bot.schedules();
+        combined_speedup_scheduled(&plan_dw, &plan_dts, sdw, sdts)
+    };
     bot.train(tc, cfg.iters, 0, cfg.mode);
     let final_perplexity = bot.perplexity(tc);
     BotTrainReport {
         p,
+        workers,
+        schedule: cfg.schedule.label(),
         topics: cfg.topics,
         iters: cfg.iters,
         final_perplexity,
@@ -98,11 +120,19 @@ pub fn train_bot(
     }
 }
 
-/// Speedup of a BoT sweep: both phases contribute epoch costs; the serial
-/// cost is the total token count of both matrices.
-pub fn combined_speedup(plan_dw: &Plan, plan_dts: &Plan) -> f64 {
+/// Speedup of a BoT sweep: both phases contribute epoch costs (each
+/// phase's parallel cost is its schedule's critical path, `Σ_l max_w`,
+/// which is the plan's Eq. 1 cost under the diagonal schedule); the
+/// serial cost is the total token count of both matrices.
+pub fn combined_speedup_scheduled(
+    plan_dw: &Plan,
+    plan_dts: &Plan,
+    sched_dw: &crate::scheduler::schedule::Schedule,
+    sched_dts: &crate::scheduler::schedule::Schedule,
+) -> f64 {
     let serial = (plan_dw.costs.total() + plan_dts.costs.total()) as f64;
-    let parallel = (plan_dw.costs.sweep_cost() + plan_dts.costs.sweep_cost()) as f64;
+    let parallel =
+        (sched_dw.cost(&plan_dw.costs) + sched_dts.cost(&plan_dts.costs)) as f64;
     serial / parallel.max(1.0)
 }
 
@@ -139,6 +169,29 @@ mod tests {
         assert!(parallel.speedup_model > 1.0);
         assert!(parallel.eta_dw > 0.0 && parallel.eta_dts > 0.0);
         assert_eq!(parallel.timelines.len(), 8);
+    }
+
+    #[test]
+    fn packed_bot_through_driver_matches_diagonal() {
+        use crate::scheduler::exec::ExecMode;
+        use crate::scheduler::schedule::ScheduleKind;
+
+        let tc = tiny_tc(93);
+        let mut cfg = TrainConfig::quick(4, 4);
+        let diag = train_bot(&tc, 4, Algorithm::A3 { restarts: 2 }, &cfg);
+
+        cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+        cfg.workers = 2;
+        cfg.mode = ExecMode::Pooled;
+        let packed = train_bot(&tc, 4, Algorithm::A3 { restarts: 2 }, &cfg);
+
+        assert_eq!(diag.final_perplexity, packed.final_perplexity);
+        assert_eq!(packed.workers, 2);
+        assert_eq!(packed.schedule, "packed(x2)");
+        // Combined speedup is against W under packing, so it can at most
+        // reach the worker count.
+        assert!(packed.speedup_model <= 2.0 + 1e-9);
+        assert_eq!(diag.workers, 4);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! γ=0.1, ≤200 burn-in iterations).
 
 use crate::scheduler::exec::ExecMode;
+use crate::scheduler::schedule::ScheduleKind;
 
 /// Which sampler/perplexity implementation runs the hot path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,10 +27,17 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub seed: u64,
     /// Diagonal-epoch executor: `Sequential` (determinism oracle),
-    /// `Threaded` (legacy per-epoch spawns), or `Pooled` (persistent
-    /// worker pool — preferred for multi-core runs). All three produce
+    /// `Threaded` (per-epoch spawns), or `Pooled` (persistent worker
+    /// pool — preferred for multi-core runs). All three produce
     /// identical counts; see `docs/executor.md`.
     pub mode: ExecMode,
+    /// Executor worker count `W` (0 = auto: derived from the plan's grid
+    /// and the schedule's grid factor — see [`Self::resolved_workers`]).
+    pub workers: usize,
+    /// How the partition grid maps onto the workers: the legacy
+    /// `Diagonal` coupling (`P == W`) or `Packed` over-decomposition
+    /// (`P = g·W`, LPT per diagonal); see `docs/scheduling.md`.
+    pub schedule: ScheduleKind,
     pub backend: Backend,
 }
 
@@ -44,6 +52,8 @@ impl Default for TrainConfig {
             eval_every: 0,
             seed: 42,
             mode: ExecMode::Sequential,
+            workers: 0,
+            schedule: ScheduleKind::Diagonal,
             backend: Backend::Native,
         }
     }
@@ -56,6 +66,30 @@ impl TrainConfig {
             topics,
             iters,
             ..Default::default()
+        }
+    }
+
+    /// The executor worker count for a grid of size `p`: the explicit
+    /// `workers` when set, otherwise derived so the schedule is
+    /// compatible with the grid (`W = P` diagonal, `W = P / g` packed).
+    /// Panics with a config-level message when the grid cannot be
+    /// scheduled (`g` does not divide `P`) rather than handing an
+    /// impossible pair to the executor.
+    pub fn resolved_workers(&self, p: usize) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        match self.schedule {
+            ScheduleKind::Diagonal => p,
+            ScheduleKind::Packed { grid_factor } => {
+                let g = grid_factor.max(1);
+                assert!(
+                    p % g == 0,
+                    "packed schedule needs the grid factor to divide the grid \
+                     (P={p}, g={g}); partition with P = g*W or set workers explicitly"
+                );
+                (p / g).max(1)
+            }
         }
     }
 }
@@ -72,6 +106,8 @@ mod tests {
         assert_eq!(c.beta, 0.1);
         assert_eq!(c.gamma, 0.1);
         assert_eq!(c.iters, 200);
+        assert_eq!(c.workers, 0);
+        assert_eq!(c.schedule, ScheduleKind::Diagonal);
     }
 
     #[test]
@@ -80,5 +116,23 @@ mod tests {
         assert_eq!(c.topics, 8);
         assert_eq!(c.iters, 10);
         assert_eq!(c.alpha, 0.5);
+    }
+
+    #[test]
+    fn workers_resolve_from_schedule() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.resolved_workers(8), 8);
+        c.schedule = ScheduleKind::Packed { grid_factor: 4 };
+        assert_eq!(c.resolved_workers(32), 8);
+        c.workers = 2;
+        assert_eq!(c.resolved_workers(32), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide the grid")]
+    fn indivisible_grid_factor_fails_at_config_level() {
+        let mut c = TrainConfig::default();
+        c.schedule = ScheduleKind::Packed { grid_factor: 3 };
+        c.resolved_workers(8);
     }
 }

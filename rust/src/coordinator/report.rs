@@ -7,15 +7,23 @@ use crate::util::tsv::Table;
 pub struct TrainReport {
     pub algorithm: String,
     pub backend: String,
+    /// Grid size `P` of the partition plan.
     pub p: usize,
+    /// Worker count `W` the sweeps executed on (1 for serial; == `p` for
+    /// pure diagonal execution).
+    pub workers: usize,
+    /// Schedule label: "serial", "diagonal", or "packed(xg)".
+    pub schedule: String,
     pub topics: usize,
     pub iters: usize,
     /// (iteration, perplexity) curve.
     pub curve: Vec<(usize, f64)>,
     pub final_perplexity: f64,
-    /// Load-balancing ratio of the plan (1.0 for serial).
+    /// Load-balancing ratio of the plan at `P` workers (1.0 for serial).
     pub eta: f64,
-    /// η·P model speedup.
+    /// Schedule-aware η against `workers` (== `eta` for diagonal runs).
+    pub schedule_eta: f64,
+    /// η·W model speedup against the workers actually used.
     pub speedup_model: f64,
     /// Total train wall seconds.
     pub train_secs: f64,
@@ -30,10 +38,13 @@ impl TrainReport {
         j.set("algorithm", self.algorithm.as_str())
             .set("backend", self.backend.as_str())
             .set("p", self.p)
+            .set("workers", self.workers)
+            .set("schedule", self.schedule.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
             .set("eta", self.eta)
+            .set("schedule_eta", self.schedule_eta)
             .set("speedup_model", self.speedup_model)
             .set("train_secs", self.train_secs)
             .set("tokens_per_sec", self.tokens_per_sec)
@@ -72,11 +83,14 @@ mod tests {
             algorithm: "A3".into(),
             backend: "native".into(),
             p: 10,
+            workers: 10,
+            schedule: "diagonal".into(),
             topics: 64,
             iters: 50,
             curve: vec![(25, 700.0), (50, 600.5)],
             final_perplexity: 600.5,
             eta: 0.98,
+            schedule_eta: 0.98,
             speedup_model: 9.8,
             train_secs: 1.25,
             tokens_per_sec: 1e7,
@@ -88,6 +102,9 @@ mod tests {
         let s = sample().to_json().to_string();
         assert!(s.contains("\"algorithm\":\"A3\""));
         assert!(s.contains("\"eta\":0.98"));
+        assert!(s.contains("\"workers\":10"));
+        assert!(s.contains("\"schedule\":\"diagonal\""));
+        assert!(s.contains("\"schedule_eta\":0.98"));
         assert!(s.contains("\"curve\":[{"));
     }
 

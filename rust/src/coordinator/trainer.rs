@@ -7,6 +7,7 @@ use crate::coordinator::config::{Backend, TrainConfig};
 use crate::coordinator::report::TrainReport;
 use crate::corpus::bow::BagOfWords;
 use crate::gibbs::serial::SerialLda;
+use crate::partition::eta::EtaComparison;
 use crate::partition::Plan;
 #[cfg(feature = "xla")]
 use crate::runtime::executor::Artifacts;
@@ -17,12 +18,17 @@ use crate::scheduler::exec::ParallelLda;
 use crate::util::rng::Rng;
 
 /// Train LDA on `bow` under `plan`. `plan.p == 1` runs the serial
-/// reference; `p > 1` the diagonal-epoch parallel engine. The XLA backend
-/// requires artifacts compiled for `(batch, cfg.topics)` and runs the
-/// batched serial-semantics sweep (it demonstrates the L3↔L1 bridge;
-/// partition-parallel execution uses the native kernel).
+/// reference; `p > 1` the diagonal-epoch parallel engine, scheduled onto
+/// `cfg.resolved_workers(plan.p)` workers under `cfg.schedule`. The XLA
+/// backend requires artifacts compiled for `(batch, cfg.topics)` and
+/// runs the batched serial-semantics sweep (it demonstrates the L3↔L1
+/// bridge; partition-parallel execution uses the native kernel).
 pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainReport {
     let started = Instant::now();
+    // Serial-equivalent defaults, overwritten by the parallel arm.
+    let mut workers = 1;
+    let mut schedule = "serial".to_string();
+    let mut schedule_eta = 1.0;
     let (curve, final_perplexity) = match (cfg.backend, plan.p) {
         (Backend::Native, 1) => {
             let mut lda = SerialLda::init(bow, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
@@ -34,8 +40,20 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
             (curve, fin)
         }
         (Backend::Native, _) => {
-            let mut lda =
-                ParallelLda::init(bow, plan, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
+            let w = cfg.resolved_workers(plan.p);
+            let mut lda = ParallelLda::init_scheduled(
+                bow,
+                plan,
+                cfg.topics,
+                cfg.alpha,
+                cfg.beta,
+                cfg.seed,
+                cfg.schedule,
+                w,
+            );
+            workers = w;
+            schedule = cfg.schedule.label();
+            schedule_eta = EtaComparison::of(plan, lda.schedule()).schedule.eta;
             let mut curve = lda.train(bow, cfg.iters, cfg.eval_every, cfg.mode);
             let fin = lda.perplexity(bow);
             if curve.is_empty() {
@@ -55,12 +73,15 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
             Backend::Xla => "xla".into(),
         },
         p: plan.p,
+        workers,
+        schedule,
         topics: cfg.topics,
         iters: cfg.iters,
         curve,
         final_perplexity,
         eta: plan.eta,
-        speedup_model: plan.eta * plan.p as f64,
+        schedule_eta,
+        speedup_model: schedule_eta * workers as f64,
         train_secs,
         tokens_per_sec: sampled_tokens / train_secs.max(1e-12),
     }
@@ -142,6 +163,34 @@ mod tests {
         let rel = (rp.final_perplexity - rs.final_perplexity).abs() / rs.final_perplexity;
         assert!(rel < 0.1, "serial {} vs parallel {}", rs.final_perplexity, rp.final_perplexity);
         assert!(rp.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn packed_schedule_through_driver_matches_diagonal() {
+        use crate::scheduler::exec::ExecMode;
+        use crate::scheduler::schedule::ScheduleKind;
+
+        let bow = generate(&Profile::tiny(), 83);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 83);
+        let mut cfg = TrainConfig::quick(8, 6);
+        cfg.eval_every = 3;
+        let diag = train_lda(&bow, &plan, &cfg);
+
+        cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+        cfg.workers = 2;
+        cfg.mode = ExecMode::Pooled;
+        let packed = train_lda(&bow, &plan, &cfg);
+
+        // Bit-identical training across schedules, modes, and W.
+        assert_eq!(diag.final_perplexity, packed.final_perplexity);
+        assert_eq!(diag.curve, packed.curve);
+        assert_eq!(packed.workers, 2);
+        assert_eq!(packed.schedule, "packed(x2)");
+        assert!(packed.schedule_eta > 0.0 && packed.schedule_eta <= 1.0 + 1e-12);
+        assert!(packed.speedup_model <= 2.0 + 1e-9, "bounded by W, not P");
+        assert_eq!(diag.workers, 4);
+        assert_eq!(diag.schedule, "diagonal");
+        assert!((diag.schedule_eta - diag.eta).abs() < 1e-12);
     }
 
     #[test]

@@ -8,9 +8,12 @@
 //! pplda train      [--profile ..] [--scale N] [--procs P] [--algo A3]
 //!                  [--topics K] [--iters N] [--eval-every N] [--xla]
 //!                  [--mode sequential|threaded|pooled] [--json FILE]
+//!                  [--schedule diagonal|packed] [--workers W]
+//!                  [--grid-factor G]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
-//!                  [--timeline]
+//!                  [--schedule diagonal|packed] [--workers W]
+//!                  [--grid-factor G] [--timeline]
 //! pplda artifacts-check
 //! ```
 
@@ -24,6 +27,7 @@ use pplda::partition::{self, Algorithm};
 #[cfg(feature = "xla")]
 use pplda::runtime::executor::Artifacts;
 use pplda::scheduler::exec::ExecMode;
+use pplda::scheduler::schedule::ScheduleKind;
 use pplda::util::cli::Args;
 use pplda::util::tsv::{f, Table};
 
@@ -56,6 +60,12 @@ usage: pplda <stats|partition|train|train-bot|artifacts-check> [flags]
 
 common flags: --profile nips|nytimes|mas|tiny   --scale N   --seed S
               --uci FILE (real UCI docword file instead of synthetic)
+
+scheduling (train/train-bot): --workers W (default --procs) runs the
+sweeps on W executor workers; --schedule packed --grid-factor G
+over-decomposes the partition grid to P = G*W and LPT-packs each
+diagonal onto the workers (see docs/scheduling.md). The default
+--schedule diagonal keeps the legacy P == W coupling.
 ";
 
 fn profile(args: &Args) -> Profile {
@@ -91,6 +101,26 @@ fn exec_mode(args: &Args) -> ExecMode {
     } else {
         ExecMode::Sequential
     }
+}
+
+/// Schedule selection: `--schedule diagonal|packed`, `--grid-factor G`
+/// (implies packed when > 1), `--workers W` (default: `--procs`). Returns
+/// the kind and the worker count; the partition grid is
+/// `kind.grid(workers)`.
+fn schedule_of(args: &Args, default_workers: usize) -> (ScheduleKind, usize) {
+    let g = args.get::<usize>("grid-factor", 1);
+    assert!(g >= 1, "--grid-factor must be >= 1");
+    let name = args
+        .get_str("schedule")
+        .unwrap_or(if g > 1 { "packed" } else { "diagonal" });
+    let kind = ScheduleKind::parse(name, g)
+        .unwrap_or_else(|| panic!("unknown schedule {name:?} (diagonal|packed)"));
+    if kind == ScheduleKind::Diagonal && g > 1 {
+        panic!("--grid-factor {g} requires --schedule packed");
+    }
+    let workers = args.get::<usize>("workers", default_workers);
+    assert!(workers >= 1, "--workers must be >= 1");
+    (kind, workers)
 }
 
 fn algo_of(name: &str, restarts: usize) -> Algorithm {
@@ -147,7 +177,9 @@ fn cmd_partition(args: &Args) -> ExitCode {
 
 fn cmd_train(args: &Args) -> ExitCode {
     let (name, bow) = load_corpus(args);
-    let p = args.get::<usize>("procs", 8);
+    let procs = args.get::<usize>("procs", 8);
+    let (kind, workers) = schedule_of(args, procs);
+    let grid = kind.grid(workers);
     let restarts = args.get::<usize>("restarts", 20);
     let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
     let cfg = TrainConfig {
@@ -161,21 +193,28 @@ fn cmd_train(args: &Args) -> ExitCode {
             Backend::Native
         },
         mode: exec_mode(args),
+        workers,
+        schedule: kind,
         ..Default::default()
     };
 
-    let plan = partition::partition(&bow, p, algo, cfg.seed);
+    let plan = partition::partition(&bow, grid, algo, cfg.seed);
     println!(
-        "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} speedup≈{:.2}",
+        "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | schedule {} workers={}",
         bow.num_docs(),
         bow.num_words(),
         bow.num_tokens(),
         plan.algorithm,
         plan.p,
         plan.eta,
-        plan.eta * plan.p as f64,
+        kind.label(),
+        workers,
     );
     let report = train_lda(&bow, &plan, &cfg);
+    println!(
+        "schedule_eta={:.4} speedup≈{:.2} (vs {} workers)",
+        report.schedule_eta, report.speedup_model, report.workers
+    );
     print!("{}", report.curve_table().to_aligned());
     println!(
         "final perplexity {:.4} | {:.1}s | {} tokens/s",
@@ -206,7 +245,9 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     };
     let seed = args.get::<u64>("seed", 42);
     let tc = synthetic::generate_timestamped(&p_profile, seed);
-    let p = args.get::<usize>("procs", 10);
+    let procs = args.get::<usize>("procs", 10);
+    let (kind, workers) = schedule_of(args, procs);
+    let p = kind.grid(workers);
     let restarts = args.get::<usize>("restarts", 20);
     let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
     let cfg = TrainConfig {
@@ -214,6 +255,8 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         iters: args.get::<usize>("iters", 50),
         seed,
         mode: exec_mode(args),
+        workers,
+        schedule: kind,
         ..Default::default()
     };
 
@@ -228,8 +271,11 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     );
     let report = train_bot(&tc, p, algo, &cfg);
     println!(
-        "P={} perplexity={:.4} eta_dw={:.4} eta_dts={:.4} speedup≈{:.2} ({:.1}s)",
+        "P={} workers={} schedule={} perplexity={:.4} eta_dw={:.4} eta_dts={:.4} \
+         speedup≈{:.2} ({:.1}s)",
         report.p,
+        report.workers,
+        report.schedule,
         report.final_perplexity,
         report.eta_dw,
         report.eta_dts,

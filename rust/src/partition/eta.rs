@@ -7,6 +7,8 @@
 //! `C = Σ_l max_m C_{m,(m+l) mod P}`, `η = C_opt / C`, `C_opt = N/P`.
 
 use crate::corpus::bow::BagOfWords;
+use crate::partition::Plan;
+use crate::scheduler::schedule::Schedule;
 
 /// Dense `P×P` token-cost matrix, row-major.
 #[derive(Clone, Debug)]
@@ -108,6 +110,48 @@ pub fn eta_of_costs(costs: &CostMatrix, num_tokens: u64) -> EtaReport {
 /// (paper §VI-C): `speedup ≈ η · P`.
 pub fn speedup(eta: f64, p: usize) -> f64 {
     eta * p as f64
+}
+
+/// Schedule-aware cost and ratio: `C_sched = Σ_l max_w assigned(w, l)`
+/// (the per-epoch critical path over the schedule's `W` workers) with
+/// `C_opt = N / W`. Under the diagonal schedule this reduces exactly to
+/// Eq. 1–2; under packing it measures what the executor actually waits
+/// on, which the plan-level η cannot see.
+pub fn eta_of_schedule(costs: &CostMatrix, schedule: &Schedule, num_tokens: u64) -> EtaReport {
+    assert_eq!(costs.p(), schedule.grid, "schedule built for another grid");
+    let c = schedule.cost(costs) as f64;
+    let opt = num_tokens as f64 / schedule.workers as f64;
+    let eta = if c > 0.0 { opt / c } else { 1.0 };
+    EtaReport { eta, cost: c, opt }
+}
+
+/// Plan-η (grid `P`, diagonal epochs on `P` workers) against schedule-η
+/// (the same grid executed on the schedule's `W` workers). The paper
+/// only ever reports the former; the latter is what a `W`-core box
+/// actually achieves once the grid is over-decomposed.
+#[derive(Clone, Copy, Debug)]
+pub struct EtaComparison {
+    /// Grid size `P` of the plan.
+    pub grid: usize,
+    /// Worker count `W` of the schedule.
+    pub workers: usize,
+    /// Eq. 1–2 η of the plan at `P` workers.
+    pub plan: EtaReport,
+    /// Schedule-aware η at `W` workers.
+    pub schedule: EtaReport,
+}
+
+impl EtaComparison {
+    pub fn of(plan: &Plan, schedule: &Schedule) -> Self {
+        assert_eq!(plan.p, schedule.grid, "schedule built for another plan");
+        let n = plan.costs.total();
+        Self {
+            grid: plan.p,
+            workers: schedule.workers,
+            plan: eta_of_costs(&plan.costs, n),
+            schedule: eta_of_schedule(&plan.costs, schedule, n),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -223,5 +267,41 @@ mod tests {
     fn speedup_model() {
         assert_eq!(speedup(0.5, 10), 5.0);
         assert_eq!(speedup(1.0, 30), 30.0);
+    }
+
+    #[test]
+    fn schedule_eta_reduces_to_plan_eta_under_diagonal() {
+        use crate::corpus::synthetic::{generate, Profile};
+        use crate::partition::{partition, Algorithm};
+        use crate::scheduler::schedule::{Schedule, ScheduleKind};
+
+        let bow = generate(&Profile::tiny(), 9);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 9);
+        let s = Schedule::build(ScheduleKind::Diagonal, &plan.costs, 4);
+        let cmp = EtaComparison::of(&plan, &s);
+        assert_eq!(cmp.grid, 4);
+        assert_eq!(cmp.workers, 4);
+        assert!((cmp.plan.eta - plan.eta).abs() < 1e-12);
+        assert!((cmp.schedule.eta - cmp.plan.eta).abs() < 1e-12);
+        assert_eq!(cmp.schedule.cost, cmp.plan.cost);
+    }
+
+    #[test]
+    fn packed_schedule_eta_bounds() {
+        use crate::corpus::synthetic::{generate, Profile};
+        use crate::partition::{partition, Algorithm};
+        use crate::scheduler::schedule::{Schedule, ScheduleKind};
+
+        let bow = generate(&Profile::tiny(), 10);
+        let w = 2;
+        for g in [1usize, 2, 4] {
+            let plan = partition(&bow, g * w, Algorithm::A3 { restarts: 2 }, 10);
+            let s = Schedule::build(ScheduleKind::Packed { grid_factor: g }, &plan.costs, w);
+            let r = eta_of_schedule(&plan.costs, &s, bow.num_tokens());
+            // The critical path can never beat N/W, so η ≤ 1; it is also
+            // positive on a non-empty corpus.
+            assert!(r.eta > 0.0 && r.eta <= 1.0 + 1e-12, "g={g}: eta {}", r.eta);
+            assert!(r.cost >= r.opt - 1e-9, "g={g}: C {} < C_opt {}", r.cost, r.opt);
+        }
     }
 }

@@ -31,7 +31,7 @@ pub mod variants;
 use crate::corpus::bow::BagOfWords;
 use crate::util::rng::Rng;
 
-pub use eta::{CostMatrix, EtaReport};
+pub use eta::{CostMatrix, EtaComparison, EtaReport};
 pub use scheme::PartitionMap;
 
 /// Which partitioning algorithm to run.
@@ -218,6 +218,47 @@ mod tests {
         let few = partition(&bow, 6, Algorithm::A3 { restarts: 1 }, 5);
         let many = partition(&bow, 6, Algorithm::A3 { restarts: 16 }, 5);
         assert!(many.eta >= few.eta - 1e-12);
+    }
+
+    #[test]
+    fn degenerate_p_exceeds_items_yields_valid_plans() {
+        // Regression for the `p > items` regime: more groups than
+        // documents AND than words must produce valid, non-panicking
+        // plans with η in (0, 1] for every algorithm — empty groups are
+        // legal and must flow through the cost matrix, η, the partition
+        // map, and a real training sweep.
+        use crate::corpus::bow::BagOfWords;
+        use crate::scheduler::exec::{ExecMode, ParallelLda};
+
+        let bow =
+            BagOfWords::from_triplets(3, 2, [(0, 0, 5), (1, 1, 2), (2, 0, 1), (1, 0, 4)]);
+        for algo in [
+            Algorithm::Baseline { restarts: 2 },
+            Algorithm::A1,
+            Algorithm::A2,
+            Algorithm::A3 { restarts: 2 },
+        ] {
+            let plan = partition(&bow, 8, algo, 13);
+            assert_eq!(plan.p, 8);
+            assert_eq!(plan.doc_group.len(), 3);
+            assert_eq!(plan.word_group.len(), 2);
+            assert!(plan.doc_group.iter().all(|&g| (g as usize) < 8));
+            assert!(plan.word_group.iter().all(|&g| (g as usize) < 8));
+            assert!(
+                plan.eta > 0.0 && plan.eta <= 1.0 + 1e-12,
+                "{}: eta={}",
+                algo.name(),
+                plan.eta
+            );
+            assert_eq!(plan.costs.total(), bow.num_tokens());
+            // The plan must also execute: one sweep over the mostly-empty
+            // grid keeps every invariant.
+            let mut lda = ParallelLda::init(&bow, &plan, 4, 0.5, 0.1, 13);
+            let stats = lda.sweep(ExecMode::Sequential);
+            assert_eq!(stats.total_tokens, bow.num_tokens());
+            assert_eq!(lda.counts.total(), bow.num_tokens());
+            assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
+        }
     }
 
     #[test]

@@ -24,9 +24,16 @@ pub fn split_equal_mass(order: &[u32], weights: &[u64], p: usize) -> Vec<u32> {
     if p == 1 {
         return group_of;
     }
-    if total == 0 {
-        // Zero-mass list: spread items round-robin-in-order so groups stay
-        // roughly equal-sized (still consecutive since items have no mass).
+    if total == 0 || n <= p {
+        // Degenerate regimes: a zero-mass list, or at least as many
+        // groups as items. Spread items in order — for `n ≤ p` every
+        // item lands in its own group (`pos·p/n` advances by ≥ 1 per
+        // position), which dominates the midpoint rule there: midpoints
+        // of several light items can collapse into one group while most
+        // groups sit empty, needlessly capping η at the diagonal max of
+        // a stacked group. Trailing empty groups are valid plans — the
+        // cost matrix, η, and the executor all tolerate empty
+        // partitions.
         for (pos, &i) in order.iter().enumerate() {
             group_of[i as usize] = ((pos * p) / n) as u32;
         }
@@ -118,6 +125,34 @@ mod tests {
         let g = split_equal_mass(&order, &[5, 5], 4);
         // Each item its own group; trailing groups empty is fine.
         assert!(g[0] != g[1]);
+    }
+
+    #[test]
+    fn degenerate_p_ge_items_gives_every_item_its_own_group() {
+        // The midpoint rule would stack the light items of [10, 1, 1]
+        // into one group at P=8; the degenerate path must not.
+        let order: Vec<u32> = (0..3).collect();
+        let g = split_equal_mass(&order, &[10, 1, 1], 8);
+        assert_eq!(g.len(), 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for &x in &g {
+            assert!((x as usize) < 8);
+            assert!(seen.insert(x), "items stacked into group {x}");
+        }
+        // Same guarantee at the exact boundary n == p.
+        let order: Vec<u32> = (0..4).collect();
+        let g = split_equal_mass(&order, &[7, 5, 3, 1], 4);
+        let mut sorted = g.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn degenerate_empty_order_is_valid() {
+        let g = split_equal_mass(&[], &[], 5);
+        assert!(g.is_empty());
+        let g = split_equal_count(&[], 5);
+        assert!(g.is_empty());
     }
 
     #[test]

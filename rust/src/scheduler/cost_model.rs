@@ -1,39 +1,49 @@
 //! Epoch-cost speedup model (paper §VI-C): with per-token sampling cost
-//! roughly uniform, the parallel sweep time is `Σ_l max_m tokens(m,l) /
-//! rate` while the serial sweep is `N / rate`, so
+//! roughly uniform, the parallel sweep time is the schedule's critical
+//! path `Σ_l max_w assigned_tokens(w, l) / rate` while the serial sweep
+//! is `N / rate`, so
 //!
 //! ```text
-//! speedup = N / Σ_l max_m tokens(m,l) = η · P
+//! speedup = N / Σ_l max_w assigned_tokens(w, l) = η · W
 //! ```
 //!
-//! The paper reports η rather than wallclock ("we did not record the
-//! exact running time"); this module turns a plan (or measured sweep
-//! stats) into the same speedup estimate, and can project wallclock for a
+//! where `W` is the *worker* count the schedule executes on — which the
+//! legacy diagonal schedule pins to the grid size `P`, but a packed
+//! schedule does not (see [`crate::scheduler::schedule`]). The paper
+//! reports η rather than wallclock ("we did not record the exact running
+//! time"); this module turns a plan, a schedule, or measured sweep stats
+//! into the same speedup estimate, and can project wallclock for a
 //! measured single-core sampling rate — which is how the speedup bench
 //! reports results on a box with fewer physical cores than `P`.
 
+use crate::partition::eta::eta_of_schedule;
 use crate::partition::Plan;
 use crate::scheduler::exec::SweepStats;
+use crate::scheduler::schedule::Schedule;
 
-/// Speedup projection for one plan.
+/// Speedup projection for one plan/schedule.
 #[derive(Clone, Copy, Debug)]
 pub struct SpeedupReport {
-    pub p: usize,
+    /// Worker count the speedup is measured against (`== P` for pure
+    /// diagonal execution).
+    pub workers: usize,
     pub eta: f64,
-    /// Predicted speedup `η·P`.
+    /// Predicted speedup `η·W`.
     pub speedup: f64,
     /// Serial sweep cost in tokens (N).
     pub serial_tokens: u64,
-    /// Parallel sweep cost in tokens (Eq. 1).
+    /// Parallel sweep cost in tokens (schedule critical path; Eq. 1 for
+    /// the diagonal schedule).
     pub parallel_tokens: u64,
 }
 
 impl SpeedupReport {
+    /// Plan executed diagonally on `P` workers (the paper's model).
     pub fn of_plan(plan: &Plan) -> Self {
         let n = plan.costs.total();
         let c = plan.costs.sweep_cost();
         Self {
-            p: plan.p,
+            workers: plan.p,
             eta: plan.eta,
             speedup: plan.eta * plan.p as f64,
             serial_tokens: n,
@@ -41,16 +51,32 @@ impl SpeedupReport {
         }
     }
 
+    /// Plan executed under an explicit schedule: effective speedup
+    /// against the schedule's `W` workers, not the grid size.
+    pub fn of_schedule(plan: &Plan, schedule: &Schedule) -> Self {
+        let n = plan.costs.total();
+        let r = eta_of_schedule(&plan.costs, schedule, n);
+        Self {
+            workers: schedule.workers,
+            eta: r.eta,
+            speedup: r.eta * schedule.workers as f64,
+            serial_tokens: n,
+            parallel_tokens: r.cost as u64,
+        }
+    }
+
     /// From measured sweep telemetry (validates the model against the
-    /// actual max-token epochs the engine executed).
-    pub fn of_stats(stats: &SweepStats, p: usize) -> Self {
+    /// actual per-worker epoch loads the engine executed; the worker
+    /// count comes from the stats themselves).
+    pub fn of_stats(stats: &SweepStats) -> Self {
+        let workers = stats.workers.max(1);
         let n = stats.total_tokens;
         let c = stats.measured_cost().max(1);
-        let eta = n as f64 / p as f64 / c as f64;
+        let eta = n as f64 / workers as f64 / c as f64;
         Self {
-            p,
+            workers,
             eta,
-            speedup: eta * p as f64,
+            speedup: eta * workers as f64,
             serial_tokens: n,
             parallel_tokens: c,
         }
@@ -69,6 +95,7 @@ mod tests {
     use crate::corpus::synthetic::{generate, Profile};
     use crate::partition::{partition, Algorithm};
     use crate::scheduler::exec::{ExecMode, ParallelLda};
+    use crate::scheduler::schedule::ScheduleKind;
 
     #[test]
     fn plan_and_stats_agree() {
@@ -78,21 +105,41 @@ mod tests {
 
         let mut lda = ParallelLda::init(&bow, &plan, 4, 0.5, 0.1, 41);
         let stats = lda.sweep(ExecMode::Sequential);
-        let from_stats = SpeedupReport::of_stats(&stats, 4);
+        let from_stats = SpeedupReport::of_stats(&stats);
 
+        assert_eq!(from_plan.workers, from_stats.workers);
         assert_eq!(from_plan.parallel_tokens, from_stats.parallel_tokens);
         assert_eq!(from_plan.serial_tokens, from_stats.serial_tokens);
         assert!((from_plan.eta - from_stats.eta).abs() < 1e-12);
     }
 
     #[test]
-    fn speedup_is_eta_p() {
+    fn schedule_and_stats_agree_under_packing() {
+        let bow = generate(&Profile::tiny(), 44);
+        let plan = partition(&bow, 6, Algorithm::A3 { restarts: 2 }, 44);
+        let kind = ScheduleKind::Packed { grid_factor: 3 };
+        let mut lda = ParallelLda::init_scheduled(&bow, &plan, 4, 0.5, 0.1, 44, kind, 2);
+        let from_schedule = SpeedupReport::of_schedule(&plan, lda.schedule());
+        let stats = lda.sweep(ExecMode::Sequential);
+        let from_stats = SpeedupReport::of_stats(&stats);
+
+        assert_eq!(from_schedule.workers, 2);
+        assert_eq!(from_schedule.parallel_tokens, from_stats.parallel_tokens);
+        assert_eq!(from_schedule.serial_tokens, from_stats.serial_tokens);
+        assert!((from_schedule.eta - from_stats.eta).abs() < 1e-12);
+        // Speedup is bounded by the workers actually used, not the grid.
+        assert!(from_schedule.speedup <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn speedup_is_eta_w() {
         let bow = generate(&Profile::tiny(), 42);
         let plan = partition(&bow, 5, Algorithm::A3 { restarts: 3 }, 42);
         let r = SpeedupReport::of_plan(&plan);
+        assert_eq!(r.workers, 5);
         assert!((r.speedup - r.eta * 5.0).abs() < 1e-12);
         assert!(r.speedup <= 5.0 + 1e-9);
-        assert!(r.speedup >= 1.0 - 1e-9); // eta ≥ 1/P always
+        assert!(r.speedup >= 1.0 - 1e-9); // eta ≥ 1/W always
     }
 
     #[test]

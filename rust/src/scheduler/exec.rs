@@ -1,4 +1,5 @@
-//! The parallel LDA trainer: diagonal epochs over a partition plan.
+//! The parallel LDA trainer: diagonal epochs over a partition plan,
+//! executed under a [`Schedule`] mapping the grid onto `W` workers.
 
 use std::time::Instant;
 
@@ -7,9 +8,11 @@ use crate::gibbs::counts::LdaCounts;
 use crate::gibbs::perplexity;
 use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
+use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
-use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, WorkerPool};
+use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
+use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
 use crate::util::rng::Rng;
 
@@ -17,13 +20,13 @@ use crate::util::rng::Rng;
 ///
 /// * `Sequential` — in-order on the calling thread; the determinism
 ///   oracle and the zero-overhead mode for single-core boxes.
-/// * `Threaded` — legacy scoped execution: one OS thread *spawned* per
-///   partition per epoch (`P²` spawns per sweep).
+/// * `Threaded` — scoped execution: one OS thread *spawned* per busy
+///   worker slot per epoch.
 /// * `Pooled` — persistent worker pool created once per trainer; epochs
 ///   are scatter/gathered over channels with per-worker scratch reuse.
 ///
-/// All three produce identical results — worker RNG streams are keyed by
-/// schedule position `(sweep, epoch, worker)`, not by interleaving.
+/// All three produce identical results — task RNG streams are keyed by
+/// `(sweep, partition)`, not by worker or interleaving.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
     Threaded,
@@ -56,28 +59,42 @@ impl ExecMode {
 pub struct SweepStats {
     /// Wall time of each epoch (seconds).
     pub epoch_secs: Vec<f64>,
-    /// Max worker token count per epoch (the paper's epoch cost).
+    /// Max *per-worker assigned* token count per epoch under the executed
+    /// schedule — the epoch's critical path. For the diagonal schedule
+    /// this is the max block length (the paper's epoch cost); under
+    /// packing it is the max over workers of the *sum* of their task
+    /// lists, which can be well below the largest single block.
     pub epoch_max_tokens: Vec<u64>,
-    /// Sum of all workers' token counts (serial-equivalent work).
+    /// Sum of all tasks' token counts (serial-equivalent work).
     pub total_tokens: u64,
+    /// Worker count the sweep was scheduled onto.
+    pub workers: usize,
 }
 
 impl SweepStats {
-    /// Eq. 1-style measured cost: Σ_l max_m tokens(m, l).
+    /// Schedule-aware measured cost: `Σ_l max_w assigned_tokens(w, l)`
+    /// (reduces to Eq. 1 under the diagonal schedule).
     pub fn measured_cost(&self) -> u64 {
         self.epoch_max_tokens.iter().sum()
     }
 }
 
 /// Parallel partitioned collapsed-Gibbs LDA (Yan et al.'s algorithm over
-/// the paper's partition plans).
+/// the paper's partition plans), scheduled onto `W` workers.
 pub struct ParallelLda {
     pub h: Hyper,
     pub counts: LdaCounts,
+    /// Grid size `P` of the partition plan.
     pub p: usize,
     /// Token blocks, diagonal-major: `blocks[l][m]` is partition
     /// `(m, (m+l) mod P)`.
     blocks: Vec<Vec<TokenBlock>>,
+    /// Global partition ids, parallel to `blocks` (RNG keying).
+    ids: Vec<Vec<u64>>,
+    /// The plan's token-cost matrix; schedules are (re)built against it.
+    costs: CostMatrix,
+    /// Grid → worker mapping executed by [`Self::sweep`].
+    schedule: Schedule,
     seed: u64,
     sweeps_done: usize,
     /// Executor state; the persistent worker pool (if `Pooled` mode is
@@ -86,12 +103,13 @@ pub struct ParallelLda {
     /// Double-buffered epoch-start view of `counts.topic`: merged deltas
     /// are applied to both, so no epoch ever clones the topic totals.
     snapshot: Vec<u32>,
-    /// Per-worker signed topic deltas, zeroed and rewritten each epoch.
+    /// Per-task signed topic deltas, zeroed and rewritten each epoch.
     deltas: Vec<Vec<i64>>,
 }
 
 impl ParallelLda {
-    /// Random-initialize assignments under a partition plan.
+    /// Random-initialize assignments under a partition plan, executed
+    /// with the legacy diagonal schedule (`W == plan.p`).
     pub fn init(
         bow: &BagOfWords,
         plan: &Plan,
@@ -100,16 +118,41 @@ impl ParallelLda {
         beta: f32,
         seed: u64,
     ) -> Self {
+        Self::init_scheduled(bow, plan, k, alpha, beta, seed, ScheduleKind::Diagonal, plan.p)
+    }
+
+    /// Random-initialize assignments under a partition plan with an
+    /// explicit schedule: `kind` maps the `plan.p` grid onto `workers`
+    /// worker slots (see [`Schedule::build`] for the compatibility
+    /// rules). Token initialization depends only on the plan and seed,
+    /// never on the schedule, so any `(kind, workers)` over the same
+    /// plan trains to bit-identical counts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn init_scheduled(
+        bow: &BagOfWords,
+        plan: &Plan,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+    ) -> Self {
         let p = plan.p;
+        let schedule = Schedule::build(kind, &plan.costs, workers);
         let map = PartitionMap::build(bow, plan);
         let mut rng = Rng::stream(seed, 0x1417);
         let mut blocks: Vec<Vec<TokenBlock>> = Vec::with_capacity(p);
+        let mut ids: Vec<Vec<u64>> = Vec::with_capacity(p);
         for l in 0..p {
             let mut diag = Vec::with_capacity(p);
+            let mut diag_ids = Vec::with_capacity(p);
             for (m, n) in map.diagonal(l) {
                 diag.push(TokenBlock::from_cells(map.cells(m, n), k, &mut rng));
+                diag_ids.push(partition_id(m, n, p));
             }
             blocks.push(diag);
+            ids.push(diag_ids);
         }
         let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
         for diag in &blocks {
@@ -122,26 +165,52 @@ impl ParallelLda {
             counts,
             p,
             blocks,
+            ids,
+            costs: plan.costs.clone(),
+            engines: EngineCache::new(schedule.workers),
+            schedule,
             seed,
             sweeps_done: 0,
-            engines: EngineCache::new(p),
             snapshot: vec![0; k],
             deltas: vec![vec![0i64; k]; p],
         }
     }
 
+    /// Re-map the same plan onto a different worker count / schedule
+    /// kind mid-training. Results are unaffected — RNG streams are keyed
+    /// by partition, not by worker — but the executor state (including
+    /// any persistent pool) is rebuilt for the new worker count.
+    pub fn set_schedule(&mut self, kind: ScheduleKind, workers: usize) {
+        self.schedule = Schedule::build(kind, &self.costs, workers);
+        self.engines = EngineCache::new(workers);
+    }
+
+    /// The schedule executing this trainer's sweeps.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Worker slots the current schedule runs on.
+    pub fn workers(&self) -> usize {
+        self.schedule.workers
+    }
+
     /// One full Gibbs sweep = `P` diagonal epochs with barriers.
     ///
     /// Epochs dispatch through the [`crate::scheduler::pool::Executor`]
-    /// selected by `mode`; the topic snapshot is double-buffered and the
-    /// per-worker delta slots are reused, so the steady-state hot path
+    /// selected by `mode`, each executing its schedule epoch's per-worker
+    /// task lists; the topic snapshot is double-buffered and the
+    /// per-task delta slots are reused, so the steady-state hot path
     /// performs no per-epoch heap allocation in `Sequential` and
     /// `Pooled` modes.
     pub fn sweep(&mut self, mode: ExecMode) -> SweepStats {
         let p = self.p;
         let k = self.h.k;
         let sweep_no = self.sweeps_done;
-        let mut stats = SweepStats::default();
+        let mut stats = SweepStats {
+            workers: self.schedule.workers,
+            ..SweepStats::default()
+        };
 
         // Bring the persistent snapshot buffer up to date once per sweep
         // (k u32s — cheap); per-epoch it is maintained by the merge below.
@@ -150,9 +219,10 @@ impl ParallelLda {
         for l in 0..p {
             let epoch_started = Instant::now();
             let diag = &mut self.blocks[l];
+            let ep = &self.schedule.epochs[l];
             stats
                 .epoch_max_tokens
-                .push(diag.iter().map(|b| b.len() as u64).max().unwrap_or(0));
+                .push(ep.max_assigned(|i| diag[i].len() as u64));
             stats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
             let n = diag.len();
 
@@ -163,11 +233,15 @@ impl ParallelLda {
                 h: self.h,
                 seed: self.seed ^ 0x50AB_71C5,
                 sweep: sweep_no,
-                epoch: l,
+            };
+            let tasks = EpochTasks {
+                blocks: diag,
+                ids: &self.ids[l],
+                assign: &ep.assign,
             };
             self.engines
                 .get(mode)
-                .run_epoch(&spec, diag, &mut self.deltas[..n]);
+                .run_epoch(&spec, tasks, &mut self.deltas[..n]);
 
             // Barrier: reconcile topic totals into both the authoritative
             // counts and the snapshot buffer for the next epoch.
@@ -233,6 +307,18 @@ mod tests {
         (bow, lda)
     }
 
+    fn setup_scheduled(
+        grid: usize,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+    ) -> (BagOfWords, ParallelLda) {
+        let bow = generate(&Profile::tiny(), seed);
+        let plan = partition(&bow, grid, Algorithm::A3 { restarts: 3 }, seed);
+        let lda = ParallelLda::init_scheduled(&bow, &plan, 8, 0.5, 0.1, seed, kind, workers);
+        (bow, lda)
+    }
+
     #[test]
     fn init_absorbs_every_token() {
         let (bow, lda) = setup(4, 31);
@@ -250,6 +336,7 @@ mod tests {
             let stats = lda.sweep(ExecMode::Sequential);
             assert_eq!(stats.total_tokens, bow.num_tokens());
             assert_eq!(stats.epoch_secs.len(), 3);
+            assert_eq!(stats.workers, 3);
         }
         assert_eq!(lda.counts.total(), bow.num_tokens());
         assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
@@ -279,6 +366,76 @@ mod tests {
         assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
         assert_eq!(a.counts.word_topic, b.counts.word_topic);
         assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn packed_pooled_matches_sequential_across_worker_counts() {
+        // The cross-schedule determinism guarantee: the same grid-4 plan
+        // packed onto W ∈ {1, 2, 4} workers and run Pooled is
+        // bit-identical to the diagonal Sequential oracle.
+        let (_bow, mut oracle) = setup(4, 51);
+        for _ in 0..3 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        for workers in [1usize, 2, 4] {
+            let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+            let (_b, mut lda) = setup_scheduled(4, 51, kind, workers);
+            assert_eq!(lda.workers(), workers);
+            for _ in 0..3 {
+                lda.sweep(ExecMode::Pooled);
+            }
+            assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "W={workers}");
+            assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "W={workers}");
+            assert_eq!(lda.counts.topic, oracle.counts.topic, "W={workers}");
+            if workers > 1 {
+                let pool = lda.pool().expect("pooled sweeps materialize the pool");
+                assert_eq!(pool.workers(), workers);
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_and_modes_can_be_switched_between_sweeps() {
+        // RNG streams are keyed by (sweep, partition), so a trainer may
+        // re-schedule AND switch executors mid-training without changing
+        // results.
+        let (_bow, mut a) = setup_scheduled(4, 52, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (_bow2, mut b) = setup(4, 52);
+        a.sweep(ExecMode::Pooled);
+        a.set_schedule(ScheduleKind::Diagonal, 4);
+        a.sweep(ExecMode::Threaded);
+        a.set_schedule(ScheduleKind::Packed { grid_factor: 4 }, 1);
+        a.sweep(ExecMode::Pooled);
+        a.set_schedule(ScheduleKind::Packed { grid_factor: 2 }, 2);
+        a.sweep(ExecMode::Sequential);
+        for _ in 0..4 {
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn packed_epoch_cost_is_assigned_load_not_block_max() {
+        // Under packing, epoch_max_tokens reports per-worker assigned
+        // sums; their total (measured_cost) can only be <= the diagonal
+        // cost of the same plan run unpacked, and with W < P it must be
+        // >= total/W per epoch.
+        let (_bow, mut packed) = setup_scheduled(4, 53, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (_bow2, mut diag) = setup(4, 53);
+        let sp = packed.sweep(ExecMode::Sequential);
+        let sd = diag.sweep(ExecMode::Sequential);
+        assert_eq!(sp.total_tokens, sd.total_tokens);
+        assert_eq!(sp.workers, 2);
+        assert!(
+            sp.measured_cost() <= sd.measured_cost() * 2,
+            "2-worker packed cost can at most double the 4-worker diagonal cost"
+        );
+        for (l, &c) in sp.epoch_max_tokens.iter().enumerate() {
+            let epoch_total: u64 = packed.schedule().epoch_loads(&packed.costs, l).iter().sum();
+            assert!(c >= epoch_total.div_ceil(2), "critical path >= mean load");
+        }
     }
 
     #[test]
@@ -331,6 +488,20 @@ mod tests {
     }
 
     #[test]
+    fn packed_sweep_preserves_invariants_all_modes() {
+        for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+            let (bow, mut lda) =
+                setup_scheduled(6, 41, ScheduleKind::Packed { grid_factor: 3 }, 2);
+            for _ in 0..3 {
+                let stats = lda.sweep(mode);
+                assert_eq!(stats.total_tokens, bow.num_tokens());
+            }
+            assert_eq!(lda.counts.total(), bow.num_tokens());
+            assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
+        }
+    }
+
+    #[test]
     fn parallel_training_reduces_perplexity() {
         let (bow, mut lda) = setup(4, 34);
         let p0 = lda.perplexity(&bow);
@@ -372,5 +543,23 @@ mod tests {
         let mut lda = ParallelLda::init(&bow, &plan, 4, 0.5, 0.1, 36);
         let stats = lda.sweep(ExecMode::Sequential);
         assert_eq!(stats.measured_cost() as f64, plan.cost);
+    }
+
+    #[test]
+    fn measured_cost_matches_schedule_cost_under_packing() {
+        let bow = generate(&Profile::tiny(), 42);
+        let plan = partition(&bow, 8, Algorithm::A3 { restarts: 2 }, 42);
+        let mut lda = ParallelLda::init_scheduled(
+            &bow,
+            &plan,
+            4,
+            0.5,
+            0.1,
+            42,
+            ScheduleKind::Packed { grid_factor: 4 },
+            2,
+        );
+        let stats = lda.sweep(ExecMode::Sequential);
+        assert_eq!(stats.measured_cost(), lda.schedule().cost(&plan.costs));
     }
 }

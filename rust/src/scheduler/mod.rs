@@ -2,26 +2,36 @@
 //! the substrate the paper's partitioners feed).
 //!
 //! A Gibbs sweep runs as `P` *epochs*; epoch `l` samples the `P`
-//! partitions of diagonal `l` in parallel, one worker per partition.
-//! Within an epoch workers own disjoint document rows of `Cθ` and
-//! disjoint word rows of `Cφ` ([`shared::SharedRows`] hands out raw row
-//! pointers under that invariant); the topic totals `n_k` are read from
-//! an epoch-start snapshot with per-worker deltas merged at the barrier.
+//! partitions of diagonal `l` in parallel. Which *worker* samples which
+//! partition is decided by a [`schedule::Schedule`]: the legacy
+//! [`schedule::ScheduleKind::Diagonal`] mapping pins one worker per
+//! partition (`W == P`), while [`schedule::ScheduleKind::Packed`]
+//! over-decomposes the grid (`P = g·W`) and LPT-packs each diagonal's
+//! partitions onto `W` workers — decoupling the partition grid from the
+//! core count (see `docs/scheduling.md`).
 //!
-//! Because worker RNG streams are keyed by (sweep, epoch, partition) and
-//! not by thread interleaving, all execution modes produce *identical*
-//! assignments — sequential mode is both the determinism oracle for
-//! tests and the low-overhead mode for single-core boxes.
+//! Within an epoch tasks own disjoint document rows of `Cθ` and disjoint
+//! emission rows of `Cφ` ([`shared::SharedRows`] hands out raw row
+//! pointers under that invariant); the topic totals `n_k` are read from
+//! an epoch-start snapshot with per-task deltas merged at the barrier.
+//!
+//! Because task RNG streams are keyed by `(sweep, partition)` and not by
+//! worker or thread interleaving, all execution modes, schedules, and
+//! worker counts produce *identical* assignments for the same plan —
+//! sequential mode is both the determinism oracle for tests and the
+//! low-overhead mode for single-core boxes.
 //!
 //! Epochs run through the [`pool::Executor`] abstraction: in-order
-//! ([`pool::SequentialExec`]), legacy per-epoch scoped threads
+//! ([`pool::SequentialExec`]), per-epoch scoped threads
 //! ([`pool::ThreadedExec`]), or the persistent [`pool::WorkerPool`] with
 //! long-lived per-worker scratch (see `docs/executor.md`).
 
 pub mod cost_model;
 pub mod exec;
 pub mod pool;
+pub mod schedule;
 pub mod shared;
 
 pub use exec::{ExecMode, ParallelLda};
 pub use pool::{Executor, WorkerPool};
+pub use schedule::{Schedule, ScheduleKind};

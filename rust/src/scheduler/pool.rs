@@ -12,40 +12,47 @@
 //!
 //! * [`EpochSpec`] — everything one diagonal epoch needs: shared count
 //!   matrices, the epoch-start topic snapshot, hyperparameters, and the
-//!   RNG keying coordinates `(seed, sweep, epoch)`.
+//!   RNG keying coordinates `(seed, sweep)`.
+//! * [`EpochTasks`] — the epoch's token blocks, their global partition
+//!   ids, and the schedule's per-worker *task lists* over them. Under the
+//!   diagonal schedule every worker holds exactly one task; under the
+//!   packed schedule (see [`crate::scheduler::schedule`]) a worker may
+//!   run several partitions per epoch.
 //! * [`Executor`] — the trait both trainers (`ParallelLda`, the BoT
 //!   trainer) drive; one call runs one diagonal epoch.
 //! * [`SequentialExec`] — in-order on the calling thread (the
 //!   determinism oracle), with its own reusable scratch.
-//! * [`ThreadedExec`] — the legacy scoped-spawn execution, kept as a
-//!   baseline for the executor-overhead benchmark.
-//! * [`WorkerPool`] — the persistent pool: `P` dedicated workers created
-//!   once per trainer, each owning long-lived scratch (`probs`, `inv`,
-//!   and its delta slot is coordinator-owned but reused), driven by a
-//!   scatter/gather barrier over channels.
+//! * [`ThreadedExec`] — scoped-spawn execution (one thread per busy
+//!   worker slot), kept as a baseline for the executor-overhead
+//!   benchmark.
+//! * [`WorkerPool`] — the persistent pool: `W` dedicated workers created
+//!   once per trainer, each owning long-lived scratch (`probs`, `inv`),
+//!   driven by a scatter/gather barrier over channels.
 //!
 //! # Barrier protocol
 //!
 //! Each worker has a private job channel (SPSC in practice); the
 //! coordinator shares one completion channel. An epoch is:
 //!
-//! 1. **Scatter** — the coordinator sends worker `m` a lifetime-erased
-//!    [`Job`] describing partition `m` of the running diagonal.
-//! 2. **Sample** — each worker zeroes its delta slot, rebuilds its
-//!    reciprocal cache from the snapshot, and runs the partition kernel
-//!    with its persistent scratch buffers.
+//! 1. **Scatter** — the coordinator sends each worker with a non-empty
+//!    task list one lifetime-erased [`Job`] describing the epoch's block
+//!    array plus that worker's index list into it.
+//! 2. **Sample** — the worker walks its list; for each task it zeroes the
+//!    task's delta slot, derives the task's RNG stream, and runs the
+//!    partition kernel with its persistent scratch buffers.
 //! 3. **Gather** — the coordinator blocks until it has received exactly
 //!    one completion per submitted job. Only then does it merge deltas
 //!    and advance, so every raw pointer inside a `Job` outlives its use.
 //!
 //! # Determinism
 //!
-//! Worker RNG streams are keyed by `(seed, sweep, epoch, worker)` via
-//! [`worker_rng`] — a pure function of the schedule position, never of
-//! thread interleaving — and delta merging is integer addition
-//! (commutative), so all three executors produce bit-identical counts.
-//! The `pooled_equals_sequential` tests in `exec.rs` / `bot/parallel.rs`
-//! pin this.
+//! Task RNG streams are keyed by `(seed, sweep, partition)` via
+//! [`task_rng`] — a pure function of the *partition identity*, never of
+//! the worker that runs it, the epoch position, or thread interleaving —
+//! and delta merging is integer addition (commutative), so all executors
+//! produce bit-identical counts on any worker count under any schedule
+//! of the same plan. The `pooled_equals_sequential` and packed-schedule
+//! determinism tests in `exec.rs` / `bot/parallel.rs` pin this.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -57,14 +64,13 @@ use crate::scheduler::exec::ExecMode;
 use crate::scheduler::shared::SharedRows;
 use crate::util::rng::Rng;
 
-/// The deterministic per-worker RNG stream for a schedule position.
-/// Identical across executors — this is the determinism anchor.
+/// The deterministic RNG stream for one partition's sweep. Identical
+/// across executors, schedules, and worker counts — this is the
+/// determinism anchor. `partition` is the grid-global partition id
+/// ([`crate::scheduler::schedule::partition_id`]).
 #[inline]
-pub fn worker_rng(seed: u64, sweep: usize, epoch: usize, worker: usize) -> Rng {
-    Rng::stream(
-        seed,
-        ((sweep as u64) << 24) | ((epoch as u64) << 12) | worker as u64,
-    )
+pub fn task_rng(seed: u64, sweep: usize, partition: u64) -> Rng {
+    Rng::stream(seed, ((sweep as u64) << 32) | partition)
 }
 
 /// One diagonal epoch's inputs, shared by every worker of the epoch.
@@ -78,26 +84,42 @@ pub struct EpochSpec<'a> {
     pub emit: SharedRows<'a>,
     pub snapshot: &'a [u32],
     pub h: Hyper,
-    /// Trainer/phase-salted RNG seed (see [`worker_rng`]).
+    /// Trainer/phase-salted RNG seed (see [`task_rng`]).
     pub seed: u64,
     pub sweep: usize,
-    pub epoch: usize,
 }
 
-/// Executes diagonal epochs. One call = one epoch: worker `m` sweeps
-/// `diag[m]` and leaves its signed topic-total delta in `deltas[m]`
-/// (length `h.k`, zeroed by the executor). The caller merges deltas at
-/// the barrier.
+/// One epoch's work: the diagonal's token blocks plus the schedule's
+/// per-worker assignment over them. `blocks`, `ids`, and the caller's
+/// delta slots are parallel arrays; `assign[w]` lists the indices worker
+/// `w` runs. Every index must appear exactly once across all workers
+/// (enforced by every executor — see `check_tasks`) — the partitions of
+/// one diagonal are pairwise row/column-disjoint, so any such
+/// assignment is conflict-free.
+pub struct EpochTasks<'a> {
+    /// The epoch's token blocks (one per partition of the diagonal).
+    pub blocks: &'a mut [TokenBlock],
+    /// Global partition id of each block — the RNG key (see [`task_rng`]).
+    pub ids: &'a [u64],
+    /// Per-worker task lists: indices into `blocks`/`ids`/`deltas`.
+    pub assign: &'a [Vec<u32>],
+}
+
+/// Executes diagonal epochs. One call = one epoch: each task `i` sweeps
+/// `tasks.blocks[i]` and leaves its signed topic-total delta in
+/// `deltas[i]` (length `h.k`, zeroed by the executor). The caller merges
+/// deltas at the barrier; one slot per *task*, not per worker, so merge
+/// order and worker assignment never affect results.
 pub trait Executor {
     fn run_epoch(
         &mut self,
         spec: &EpochSpec<'_>,
-        diag: &mut [TokenBlock],
+        tasks: EpochTasks<'_>,
         deltas: &mut [Vec<i64>],
     );
 }
 
-/// The barrier merge shared by the trainers: fold every worker's signed
+/// The barrier merge shared by the trainers: fold every task's signed
 /// delta into the authoritative topic totals *and* the double-buffered
 /// snapshot (which becomes the next epoch's read view — no re-clone).
 /// Integer addition commutes, so merge order never affects results.
@@ -112,12 +134,55 @@ pub fn merge_deltas(totals: &mut [u32], snapshot: &mut [u32], deltas: &[Vec<i64>
     }
 }
 
-/// The worker body shared by all executors: zero the delta slot, derive
-/// the positional RNG stream, run the partition kernel with the given
-/// scratch.
-fn run_worker(
+/// Validation of the schedule invariant: the assignment is a partition
+/// of the task indices (each exactly once, all in bounds), and the
+/// parallel arrays agree in length. Unconditional — the threaded and
+/// pooled executors index raw pointers off this assignment, so a bad
+/// `EpochTasks` from safe code must fail here, not corrupt memory; the
+/// check is O(P) per epoch, negligible next to sampling.
+fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
+    let n = tasks.blocks.len();
+    assert_eq!(n, tasks.ids.len(), "one id per block");
+    assert_eq!(n, deltas.len(), "one delta slot per block");
+    if n <= 128 {
+        // Bitmask fast path: preserves the zero-per-epoch-allocation
+        // property for every realistic grid.
+        let mut seen: u128 = 0;
+        let mut count = 0usize;
+        for list in tasks.assign {
+            for &i in list {
+                assert!((i as usize) < n, "task index {i} out of bounds");
+                let bit = 1u128 << i;
+                assert!(seen & bit == 0, "task {i} assigned to more than one worker");
+                seen |= bit;
+                count += 1;
+            }
+        }
+        assert_eq!(count, n, "schedule must cover every task of the epoch");
+    } else {
+        let mut seen = vec![false; n];
+        for list in tasks.assign {
+            for &i in list {
+                let slot = seen
+                    .get_mut(i as usize)
+                    .unwrap_or_else(|| panic!("task index {i} out of bounds"));
+                assert!(!*slot, "task {i} assigned to more than one worker");
+                *slot = true;
+            }
+        }
+        assert!(
+            seen.iter().all(|&s| s),
+            "schedule must cover every task of the epoch"
+        );
+    }
+}
+
+/// The task body shared by all executors: zero the task's delta slot,
+/// derive the partition's RNG stream, run the partition kernel with the
+/// given scratch.
+fn run_task(
     spec: &EpochSpec<'_>,
-    m: usize,
+    partition: u64,
     block: &mut TokenBlock,
     delta: &mut [i64],
     probs: &mut Vec<f32>,
@@ -125,13 +190,15 @@ fn run_worker(
 ) {
     debug_assert_eq!(delta.len(), spec.h.k);
     delta.fill(0);
-    let mut rng = worker_rng(spec.seed, spec.sweep, spec.epoch, m);
+    let mut rng = task_rng(spec.seed, spec.sweep, partition);
     sampler::sweep_partition(
         block,
-        // SAFETY: the diagonal non-conflict invariant — block `m`'s
-        // tokens all lie in partition `(m, (m+l) mod P)`, so its doc
-        // rows and emission rows are disjoint from every other worker's
-        // for the duration of the epoch (PartitionMap construction).
+        // SAFETY: the diagonal non-conflict invariant — this partition's
+        // tokens all lie in one `(J_m, V_n)` cell of the running
+        // diagonal, so its doc rows and emission rows are disjoint from
+        // every other task's for the duration of the epoch (PartitionMap
+        // construction; any worker grouping of disjoint tasks stays
+        // disjoint).
         |d| unsafe { spec.doc.row_ptr(d) },
         |w| unsafe { spec.emit.row_ptr(w) },
         spec.snapshot,
@@ -145,7 +212,9 @@ fn run_worker(
 
 /// In-order execution on the calling thread. The determinism oracle for
 /// the parallel modes, and the zero-overhead mode for single-core boxes;
-/// owns its scratch so repeated sweeps allocate nothing.
+/// owns its scratch so repeated sweeps allocate nothing. Runs tasks in
+/// block order — equivalent to any worker assignment, since task RNG
+/// streams and delta slots are per-partition.
 #[derive(Default)]
 pub struct SequentialExec {
     probs: Vec<f32>,
@@ -156,16 +225,27 @@ impl Executor for SequentialExec {
     fn run_epoch(
         &mut self,
         spec: &EpochSpec<'_>,
-        diag: &mut [TokenBlock],
+        tasks: EpochTasks<'_>,
         deltas: &mut [Vec<i64>],
     ) {
-        for (m, (block, delta)) in diag.iter_mut().zip(deltas.iter_mut()).enumerate() {
-            run_worker(spec, m, block, delta, &mut self.probs, &mut self.inv);
+        check_tasks(&tasks, deltas);
+        let pairs = tasks.blocks.iter_mut().zip(deltas.iter_mut());
+        for (i, (block, delta)) in pairs.enumerate() {
+            run_task(spec, tasks.ids[i], block, delta, &mut self.probs, &mut self.inv);
         }
     }
 }
 
-/// Legacy execution: one scoped OS thread spawned per partition per
+/// A `Send` raw-pointer wrapper for handing the epoch's task arrays to
+/// scoped worker threads; the schedule invariant (each index owned by
+/// exactly one worker) makes the aliasing sound.
+struct TaskArrays {
+    blocks: *mut TokenBlock,
+    deltas: *mut Vec<i64>,
+}
+unsafe impl Send for TaskArrays {}
+
+/// Scoped execution: one OS thread *spawned* per busy worker slot per
 /// epoch, with per-spawn scratch allocation. Kept as the baseline the
 /// executor-overhead benchmark compares [`WorkerPool`] against.
 #[derive(Default)]
@@ -175,26 +255,48 @@ impl Executor for ThreadedExec {
     fn run_epoch(
         &mut self,
         spec: &EpochSpec<'_>,
-        diag: &mut [TokenBlock],
+        tasks: EpochTasks<'_>,
         deltas: &mut [Vec<i64>],
     ) {
+        check_tasks(&tasks, deltas);
+        let ids = tasks.ids;
+        let blocks_ptr = tasks.blocks.as_mut_ptr();
+        let deltas_ptr = deltas.as_mut_ptr();
         std::thread::scope(|s| {
-            for (m, (block, delta)) in diag.iter_mut().zip(deltas.iter_mut()).enumerate() {
+            for list in tasks.assign.iter().filter(|l| !l.is_empty()) {
+                let arrays = TaskArrays {
+                    blocks: blocks_ptr,
+                    deltas: deltas_ptr,
+                };
                 s.spawn(move || {
                     let mut probs = Vec::new();
                     let mut inv = Vec::new();
-                    run_worker(spec, m, block, delta, &mut probs, &mut inv);
+                    for &i in list {
+                        let i = i as usize;
+                        // SAFETY: `check_tasks` invariant — index
+                        // `i` belongs to this worker alone, so the block
+                        // and delta slot are exclusively ours until the
+                        // scope joins.
+                        let block = unsafe { &mut *arrays.blocks.add(i) };
+                        let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
+                        run_task(spec, ids[i], block, delta, &mut probs, &mut inv);
+                    }
                 });
             }
         });
     }
 }
 
-/// A lifetime-erased epoch assignment for one pool worker. All pointers
-/// are guaranteed valid (and the rows they reach exclusively owned) until
-/// the coordinator has received this job's completion signal.
+/// A lifetime-erased epoch assignment for one pool worker: the epoch's
+/// task arrays plus this worker's index list. All pointers are guaranteed
+/// valid (and the tasks they reach exclusively owned) until the
+/// coordinator has received this job's completion signal.
 struct Job {
-    block: *mut TokenBlock,
+    blocks: *mut TokenBlock,
+    ids: *const u64,
+    deltas: *mut Vec<i64>,
+    assign: *const u32,
+    assign_len: usize,
     doc: *mut f32,
     /// Row count of `doc` (debug bounds parity with `SharedRows::row_ptr`).
     doc_rows: usize,
@@ -202,18 +304,17 @@ struct Job {
     /// Row count of `emit`.
     emit_rows: usize,
     snapshot: *const u32,
-    delta: *mut i64,
     h: Hyper,
     seed: u64,
     sweep: usize,
-    epoch: usize,
     worker: usize,
 }
 
-// SAFETY: Job transfers *exclusive logical ownership* of `block`, the
-// delta slot, and the job's row groups to exactly one worker for the
-// duration of one epoch; the coordinator's gather barrier sequences all
-// other access. The snapshot is read-only for the epoch.
+// SAFETY: Job transfers *exclusive logical ownership* of the worker's
+// assigned blocks, delta slots, and row groups to exactly one worker for
+// the duration of one epoch; the coordinator's gather barrier sequences
+// all other access. The snapshot and index list are read-only for the
+// epoch.
 unsafe impl Send for Job {}
 
 fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
@@ -227,11 +328,10 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
         let ok = catch_unwind(AssertUnwindSafe(|| {
             // SAFETY: see `Job` — exclusive ownership until the done
             // signal below is observed. Rebuilding an `EpochSpec` routes
-            // the pooled path through the same `run_worker` body (and
+            // the pooled path through the same `run_task` body (and
             // `SharedRows` bounds checks) as the other executors.
-            let block = unsafe { &mut *job.block };
+            let assign = unsafe { std::slice::from_raw_parts(job.assign, job.assign_len) };
             let snapshot = unsafe { std::slice::from_raw_parts(job.snapshot, k) };
-            let delta = unsafe { std::slice::from_raw_parts_mut(job.delta, k) };
             let spec = EpochSpec {
                 doc: unsafe { SharedRows::from_raw(job.doc, job.doc_rows, k) },
                 emit: unsafe { SharedRows::from_raw(job.emit, job.emit_rows, k) },
@@ -239,9 +339,14 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
                 h: job.h,
                 seed: job.seed,
                 sweep: job.sweep,
-                epoch: job.epoch,
             };
-            run_worker(&spec, job.worker, block, delta, &mut probs, &mut inv);
+            for &i in assign {
+                let i = i as usize;
+                let block = unsafe { &mut *job.blocks.add(i) };
+                let delta = unsafe { (*job.deltas.add(i)).as_mut_slice() };
+                let id = unsafe { *job.ids.add(i) };
+                run_task(&spec, id, block, delta, &mut probs, &mut inv);
+            }
         }))
         .is_ok();
         if done.send((job.worker, ok)).is_err() {
@@ -303,39 +408,47 @@ impl Executor for WorkerPool {
     fn run_epoch(
         &mut self,
         spec: &EpochSpec<'_>,
-        diag: &mut [TokenBlock],
+        tasks: EpochTasks<'_>,
         deltas: &mut [Vec<i64>],
     ) {
-        let n = diag.len();
+        check_tasks(&tasks, deltas);
         assert!(
-            n <= self.senders.len(),
-            "diagonal has {n} partitions but the pool has {} workers",
+            tasks.assign.len() <= self.senders.len(),
+            "schedule uses {} worker slots but the pool has {} workers",
+            tasks.assign.len(),
             self.senders.len()
         );
-        assert_eq!(n, deltas.len(), "one delta slot per partition");
-        // Scatter.
-        for (m, (block, delta)) in diag.iter_mut().zip(deltas.iter_mut()).enumerate() {
-            debug_assert_eq!(delta.len(), spec.h.k);
+        // Scatter: one job per worker with a non-empty task list.
+        let blocks_ptr = tasks.blocks.as_mut_ptr();
+        let deltas_ptr = deltas.as_mut_ptr();
+        let mut submitted = 0usize;
+        for (w, list) in tasks.assign.iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
             let job = Job {
-                block: block as *mut TokenBlock,
+                blocks: blocks_ptr,
+                ids: tasks.ids.as_ptr(),
+                deltas: deltas_ptr,
+                assign: list.as_ptr(),
+                assign_len: list.len(),
                 doc: spec.doc.base_ptr(),
                 doc_rows: spec.doc.rows(),
                 emit: spec.emit.base_ptr(),
                 emit_rows: spec.emit.rows(),
                 snapshot: spec.snapshot.as_ptr(),
-                delta: delta.as_mut_ptr(),
                 h: spec.h,
                 seed: spec.seed,
                 sweep: spec.sweep,
-                epoch: spec.epoch,
-                worker: m,
+                worker: w,
             };
-            self.senders[m].send(job).expect("pool worker died");
+            self.senders[w].send(job).expect("pool worker died");
+            submitted += 1;
         }
         // Gather barrier: exactly one completion per submitted job. After
         // this loop no worker holds any pointer from this epoch.
         let mut panicked = false;
-        for _ in 0..n {
+        for _ in 0..submitted {
             let (_, ok) = self.done_rx.recv().expect("pool worker died");
             panicked |= !ok;
         }
@@ -358,7 +471,7 @@ impl Drop for WorkerPool {
 /// Per-trainer executor cache: the stateless modes live inline, the pool
 /// is created lazily on the first `Pooled` epoch and then reused for the
 /// trainer's lifetime (including across BoT's two phases, which share
-/// `P` and `K`).
+/// the schedule's worker count and `K`).
 pub struct EngineCache {
     workers: usize,
     seq: SequentialExec,
@@ -398,6 +511,7 @@ mod tests {
     use super::*;
     use crate::gibbs::counts::LdaCounts;
     use crate::partition::scheme::Cell;
+    use crate::scheduler::schedule::identity_assign;
 
     /// Two disjoint partitions (disjoint doc AND word groups), like one
     /// diagonal of a 2×2 plan.
@@ -422,26 +536,41 @@ mod tests {
         (blocks, counts, Hyper::new(k, 0.5, 0.1, 4))
     }
 
-    fn run_mode(mode: ExecMode, epochs: usize) -> (Vec<TokenBlock>, LdaCounts) {
+    fn run_assignment(
+        mode: ExecMode,
+        epochs: usize,
+        assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
+        workers: usize,
+    ) -> (Vec<TokenBlock>, LdaCounts) {
         let k = 4;
         let (mut blocks, mut counts, h) = diagonal_fixture(k, 7);
-        let mut engines = EngineCache::new(2);
+        let ids = [0u64, 1];
+        let mut engines = EngineCache::new(workers);
         let mut deltas = vec![vec![0i64; k]; 2];
         let mut snapshot = counts.topic.clone();
         for e in 0..epochs {
+            let assign = assign_of(e);
             let spec = EpochSpec {
                 doc: SharedRows::new(&mut counts.doc_topic, k),
                 emit: SharedRows::new(&mut counts.word_topic, k),
                 snapshot: &snapshot,
                 h,
                 seed: 99,
-                sweep: 0,
-                epoch: e,
+                sweep: e,
             };
-            engines.get(mode).run_epoch(&spec, &mut blocks, &mut deltas);
+            let tasks = EpochTasks {
+                blocks: &mut blocks,
+                ids: &ids,
+                assign: &assign,
+            };
+            engines.get(mode).run_epoch(&spec, tasks, &mut deltas);
             merge_deltas(&mut counts.topic, &mut snapshot, &deltas);
         }
         (blocks, counts)
+    }
+
+    fn run_mode(mode: ExecMode, epochs: usize) -> (Vec<TokenBlock>, LdaCounts) {
+        run_assignment(mode, epochs, |_| identity_assign(2), 2)
     }
 
     #[test]
@@ -463,6 +592,53 @@ mod tests {
     }
 
     #[test]
+    fn packed_task_lists_agree_with_one_task_per_worker() {
+        // Both tasks on one worker (a packed task list) must equal the
+        // one-task-per-worker layout bit for bit, in every mode.
+        let (b0, c0) = run_mode(ExecMode::Sequential, 3);
+        for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+            let (b1, c1) = run_assignment(mode, 3, |_| vec![vec![0, 1]], 1);
+            for (a, b) in b0.iter().zip(b1.iter()) {
+                assert_eq!(a.z, b.z);
+            }
+            assert_eq!(c0.doc_topic, c1.doc_topic);
+            assert_eq!(c0.word_topic, c1.word_topic);
+            assert_eq!(c0.topic, c1.topic);
+        }
+        // Even alternating layouts between epochs changes nothing.
+        let alternating = |e: usize| {
+            if e % 2 == 0 {
+                vec![vec![1, 0], vec![]]
+            } else {
+                identity_assign(2)
+            }
+        };
+        let (b2, c2) = run_assignment(ExecMode::Pooled, 3, alternating, 2);
+        for (a, b) in b0.iter().zip(b2.iter()) {
+            assert_eq!(a.z, b.z);
+        }
+        assert_eq!(c0.topic, c2.topic);
+    }
+
+    #[test]
+    #[should_panic(expected = "more than one worker")]
+    fn duplicate_assignment_is_rejected() {
+        let _ = run_assignment(ExecMode::Sequential, 1, |_| vec![vec![0, 0], vec![1]], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "must cover every task")]
+    fn incomplete_assignment_is_rejected() {
+        let _ = run_assignment(ExecMode::Sequential, 1, |_| vec![vec![0], vec![]], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_assignment_is_rejected() {
+        let _ = run_assignment(ExecMode::Sequential, 1, |_| vec![vec![0], vec![1, 7]], 2);
+    }
+
+    #[test]
     fn counts_stay_consistent_after_pooled_epochs() {
         let (blocks, counts) = run_mode(ExecMode::Pooled, 3);
         let refs: Vec<&TokenBlock> = blocks.iter().collect();
@@ -473,6 +649,8 @@ mod tests {
     fn pool_counts_epochs_and_never_respawns() {
         let k = 4;
         let (mut blocks, mut counts, h) = diagonal_fixture(k, 11);
+        let ids = [0u64, 1];
+        let assign = identity_assign(2);
         let mut engines = EngineCache::new(2);
         let mut deltas = vec![vec![0i64; k]; 2];
         let snapshot = counts.topic.clone();
@@ -484,11 +662,13 @@ mod tests {
                 h,
                 seed: 1,
                 sweep: e,
-                epoch: 0,
             };
-            engines
-                .get(ExecMode::Pooled)
-                .run_epoch(&spec, &mut blocks, &mut deltas);
+            let tasks = EpochTasks {
+                blocks: &mut blocks,
+                ids: &ids,
+                assign: &assign,
+            };
+            engines.get(ExecMode::Pooled).run_epoch(&spec, tasks, &mut deltas);
         }
         let pool = engines.pool().expect("pool materialized");
         assert_eq!(pool.workers(), 2);
@@ -503,12 +683,14 @@ mod tests {
     }
 
     #[test]
-    fn pool_runs_narrow_diagonals() {
-        // A pool sized for P workers must accept a diagonal with fewer
-        // partitions (e.g. ragged plans) without deadlocking.
+    fn pool_runs_narrow_epochs() {
+        // A pool sized for W workers must accept an epoch that uses fewer
+        // slots (empty task lists) without deadlocking.
         let k = 4;
         let (mut blocks, mut counts, h) = diagonal_fixture(k, 13);
         blocks.truncate(1);
+        let ids = [0u64];
+        let assign = [vec![0u32], Vec::new(), Vec::new()];
         let mut pool = WorkerPool::new(3);
         let mut deltas = vec![vec![0i64; k]];
         let snapshot = counts.topic.clone();
@@ -519,9 +701,13 @@ mod tests {
             h,
             seed: 5,
             sweep: 0,
-            epoch: 0,
         };
-        pool.run_epoch(&spec, &mut blocks, &mut deltas);
+        let tasks = EpochTasks {
+            blocks: &mut blocks,
+            ids: &ids,
+            assign: &assign,
+        };
+        pool.run_epoch(&spec, tasks, &mut deltas);
         assert_eq!(pool.epochs_run(), 1);
         assert_eq!(deltas[0].iter().sum::<i64>(), 0, "deltas conserve tokens");
     }

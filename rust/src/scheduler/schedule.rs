@@ -1,0 +1,373 @@
+//! The schedule abstraction: mapping a `P×P` partition grid onto `W`
+//! executor workers.
+//!
+//! The paper evaluates plans as `P` diagonal epochs on exactly `P`
+//! workers, which welds the grid size, the pool size, and the schedule
+//! together: a `W`-core box can only run a `W×W` grid, and η is capped by
+//! how well `W` coarse groups can be balanced. A [`Schedule`] breaks that
+//! coupling:
+//!
+//! * [`ScheduleKind::Diagonal`] — the legacy mapping. `P == W`; epoch `l`
+//!   hands worker `m` exactly partition `(m, (m+l) mod P)`.
+//! * [`ScheduleKind::Packed`] — over-decomposition. The grid is
+//!   `P = g·W` for a grid factor `g ≥ 1`; each diagonal's `P` partitions
+//!   are packed onto the `W` workers longest-processing-time first, so a
+//!   worker runs a *list* of partitions per epoch. The row/column
+//!   non-conflict invariant is preserved for free: a diagonal's
+//!   partitions are pairwise disjoint by construction, so any grouping of
+//!   them onto fewer workers is still conflict-free.
+//!
+//! Over-decomposing strictly enlarges the space of executable schedules:
+//! at `g = 1` packing degenerates to the diagonal mapping, while `g > 1`
+//! lets LPT smooth per-epoch imbalance that the coarse grid cannot
+//! express. The schedule-aware cost is `Σ_l max_w assigned_tokens(w, l)`
+//! (the per-epoch critical path over workers), and the matching
+//! load-balancing ratio uses `C_opt = N / W` — see
+//! [`crate::partition::eta::eta_of_schedule`].
+//!
+//! Determinism: schedules only decide *which worker* samples a partition,
+//! never *how* — RNG streams are keyed by `(sweep, partition)` (see
+//! [`crate::scheduler::pool::task_rng`]), so any schedule over the same
+//! plan produces bit-identical counts on any worker count.
+
+use crate::partition::eta::CostMatrix;
+
+/// Which schedule family maps the grid onto the workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// One worker per grid row: `P == W`, worker `m` runs partition
+    /// `(m, (m+l) mod P)` of epoch `l` (the paper's execution model).
+    Diagonal,
+    /// Over-decomposed grid `P = grid_factor·W`; each diagonal is
+    /// LPT-packed onto the `W` workers.
+    Packed { grid_factor: usize },
+}
+
+impl ScheduleKind {
+    /// Parse a CLI/config spelling; `grid_factor` applies to `packed`.
+    pub fn parse(name: &str, grid_factor: usize) -> Option<Self> {
+        match name {
+            "diagonal" | "diag" => Some(Self::Diagonal),
+            "packed" | "pack" => Some(Self::Packed { grid_factor }),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Diagonal => "diagonal",
+            Self::Packed { .. } => "packed",
+        }
+    }
+
+    /// Human label including the grid factor, e.g. `packed(x4)`.
+    pub fn label(self) -> String {
+        match self {
+            Self::Diagonal => "diagonal".to_string(),
+            Self::Packed { grid_factor } => format!("packed(x{grid_factor})"),
+        }
+    }
+
+    /// Grid size `P` for a worker count `W`.
+    pub fn grid(self, workers: usize) -> usize {
+        match self {
+            Self::Diagonal => workers,
+            Self::Packed { grid_factor } => grid_factor * workers,
+        }
+    }
+
+    pub fn grid_factor(self) -> usize {
+        match self {
+            Self::Diagonal => 1,
+            Self::Packed { grid_factor } => grid_factor,
+        }
+    }
+}
+
+/// Global id of partition `(m, n)` in a `P×P` grid — the RNG keying
+/// coordinate (see [`crate::scheduler::pool::task_rng`]). Stable across
+/// schedules and worker counts for a fixed plan, which is exactly what
+/// the cross-schedule determinism guarantee rests on.
+#[inline]
+pub fn partition_id(m: usize, n: usize, p: usize) -> u64 {
+    (m * p + n) as u64
+}
+
+/// Identity assignment: worker `i` runs task `i` (the diagonal layout).
+pub fn identity_assign(n: usize) -> Vec<Vec<u32>> {
+    (0..n as u32).map(|i| vec![i]).collect()
+}
+
+/// One epoch's worker assignment over the diagonal's partitions.
+#[derive(Clone, Debug)]
+pub struct EpochPlan {
+    /// `assign[w]` = diagonal positions `m` run by worker `w`; position
+    /// `m` of epoch `l` is partition `(m, (m+l) mod P)`.
+    pub assign: Vec<Vec<u32>>,
+}
+
+impl EpochPlan {
+    /// Critical-path cost of the epoch: the max over workers of their
+    /// assigned token counts, with `len(i)` giving task `i`'s tokens.
+    pub fn max_assigned<F: Fn(usize) -> u64>(&self, len: F) -> u64 {
+        self.assign
+            .iter()
+            .map(|list| list.iter().map(|&i| len(i as usize)).sum::<u64>())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// A full sweep schedule: `P` epochs (one per diagonal), each assigning
+/// the diagonal's `P` partitions to `W` workers.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    /// Grid size `P` of the plan being scheduled.
+    pub grid: usize,
+    /// Executor worker count `W`.
+    pub workers: usize,
+    /// One entry per diagonal epoch, `epochs[l]`.
+    pub epochs: Vec<EpochPlan>,
+}
+
+impl Schedule {
+    /// Build a schedule for `costs` (a plan's `P×P` token-cost matrix)
+    /// on `workers` workers. Panics if the grid is incompatible with the
+    /// kind (`P != W` for diagonal, `P != g·W` for packed).
+    pub fn build(kind: ScheduleKind, costs: &CostMatrix, workers: usize) -> Self {
+        let p = costs.p();
+        assert!(workers >= 1, "schedule needs at least one worker");
+        let epochs = match kind {
+            ScheduleKind::Diagonal => {
+                assert_eq!(
+                    p, workers,
+                    "diagonal schedule needs P == W (got P={p}, W={workers})"
+                );
+                (0..p)
+                    .map(|_| EpochPlan {
+                        assign: identity_assign(p),
+                    })
+                    .collect()
+            }
+            ScheduleKind::Packed { grid_factor } => {
+                assert!(grid_factor >= 1, "grid factor must be >= 1");
+                assert_eq!(
+                    p,
+                    grid_factor * workers,
+                    "packed schedule needs P == g·W (got P={p}, g={grid_factor}, W={workers})"
+                );
+                (0..p)
+                    .map(|l| EpochPlan {
+                        assign: pack_lpt(costs, l, workers),
+                    })
+                    .collect()
+            }
+        };
+        Self {
+            kind,
+            grid: p,
+            workers,
+            epochs,
+        }
+    }
+
+    /// Per-worker assigned token loads of epoch `l` under `costs`.
+    pub fn epoch_loads(&self, costs: &CostMatrix, l: usize) -> Vec<u64> {
+        let p = self.grid;
+        self.epochs[l]
+            .assign
+            .iter()
+            .map(|list| {
+                list.iter()
+                    .map(|&m| costs.get(m as usize, (m as usize + l) % p))
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Schedule-aware sweep cost (the Eq. 1 analogue for `W` workers):
+    /// `Σ_l max_w assigned_tokens(w, l)`.
+    pub fn cost(&self, costs: &CostMatrix) -> u64 {
+        (0..self.grid)
+            .map(|l| self.epoch_loads(costs, l).into_iter().max().unwrap_or(0))
+            .sum()
+    }
+}
+
+/// Longest-processing-time-first packing of diagonal `l`'s `P` partitions
+/// onto `workers` bins: walk the partitions in descending token order and
+/// give each to the currently lightest worker. Ties break toward the
+/// lower diagonal position / lower worker index, so the packing is a pure
+/// function of the cost matrix.
+fn pack_lpt(costs: &CostMatrix, l: usize, workers: usize) -> Vec<Vec<u32>> {
+    let p = costs.p();
+    let mut order: Vec<u32> = (0..p as u32).collect();
+    order.sort_by(|&a, &b| {
+        let ca = costs.get(a as usize, (a as usize + l) % p);
+        let cb = costs.get(b as usize, (b as usize + l) % p);
+        cb.cmp(&ca).then(a.cmp(&b))
+    });
+    let mut assign: Vec<Vec<u32>> = vec![Vec::new(); workers];
+    let mut loads = vec![0u64; workers];
+    for m in order {
+        let w = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &load)| (load, i))
+            .map(|(i, _)| i)
+            .unwrap();
+        assign[w].push(m);
+        loads[w] += costs.get(m as usize, (m as usize + l) % p);
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::bow::BagOfWords;
+    use crate::partition::{partition, Algorithm};
+    use crate::testing::prop;
+
+    fn costs_of(bow: &BagOfWords, p: usize, seed: u64) -> CostMatrix {
+        let plan = partition(bow, p, Algorithm::A3 { restarts: 2 }, seed);
+        plan.costs
+    }
+
+    fn small_bow(seed: u64) -> BagOfWords {
+        crate::corpus::synthetic::generate(
+            &crate::corpus::synthetic::Profile::tiny(),
+            seed,
+        )
+    }
+
+    #[test]
+    fn diagonal_is_identity() {
+        let bow = small_bow(1);
+        let costs = costs_of(&bow, 4, 1);
+        let s = Schedule::build(ScheduleKind::Diagonal, &costs, 4);
+        assert_eq!(s.grid, 4);
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.epochs.len(), 4);
+        for ep in &s.epochs {
+            for (w, list) in ep.assign.iter().enumerate() {
+                assert_eq!(list.as_slice(), &[w as u32]);
+            }
+        }
+        // Diagonal schedule cost is exactly the plan's Eq. 1 cost.
+        assert_eq!(s.cost(&costs), costs.sweep_cost());
+    }
+
+    #[test]
+    fn packed_g1_has_diagonal_cost() {
+        // With one task per worker, LPT can only permute the worker
+        // assignment — the critical path is the diagonal max either way.
+        let bow = small_bow(2);
+        let costs = costs_of(&bow, 6, 2);
+        let s = Schedule::build(ScheduleKind::Packed { grid_factor: 1 }, &costs, 6);
+        assert_eq!(s.cost(&costs), costs.sweep_cost());
+    }
+
+    #[test]
+    fn packed_epoch_loads_are_consistent() {
+        // Internal consistency of the packing: per-epoch worker loads
+        // conserve the diagonal's tokens, and the critical path can
+        // never undercut the mean load.
+        let bow = small_bow(3);
+        let w = 3;
+        for g in [1usize, 2, 4] {
+            let costs = costs_of(&bow, g * w, 3);
+            let s = Schedule::build(ScheduleKind::Packed { grid_factor: g }, &costs, w);
+            for l in 0..s.grid {
+                let loads = s.epoch_loads(&costs, l);
+                assert_eq!(loads.len(), w);
+                let total: u64 = loads.iter().sum();
+                let max = *loads.iter().max().unwrap();
+                assert_eq!(total, costs.diagonal_sum(l));
+                assert!(max as f64 >= total as f64 / w as f64 - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn lpt_beats_naive_folding_on_skewed_diagonals() {
+        // One heavy partition per diagonal: LPT must isolate it rather
+        // than stack it with others. Build a 4×4 grid over 2 workers.
+        let bow = BagOfWords::from_triplets(
+            4,
+            4,
+            [
+                (0, 0, 100),
+                (1, 1, 1),
+                (2, 2, 1),
+                (3, 3, 1),
+                (0, 1, 50),
+                (1, 2, 2),
+                (2, 3, 2),
+                (3, 0, 2),
+            ],
+        );
+        let costs = CostMatrix::compute_p(&bow, &[0, 1, 2, 3], &[0, 1, 2, 3], 4);
+        let s = Schedule::build(ScheduleKind::Packed { grid_factor: 2 }, &costs, 2);
+        // Epoch 0 has costs {100, 1, 1, 1}: LPT puts 100 alone, so the
+        // critical path is 100, not 101+.
+        let loads = s.epoch_loads(&costs, 0);
+        assert_eq!(*loads.iter().max().unwrap(), 100);
+    }
+
+    #[test]
+    fn schedule_kind_parses_and_sizes() {
+        assert_eq!(ScheduleKind::parse("diagonal", 1), Some(ScheduleKind::Diagonal));
+        assert_eq!(ScheduleKind::parse("diag", 1), Some(ScheduleKind::Diagonal));
+        assert_eq!(
+            ScheduleKind::parse("packed", 4),
+            Some(ScheduleKind::Packed { grid_factor: 4 })
+        );
+        assert_eq!(ScheduleKind::parse("lpt", 1), None);
+        assert_eq!(ScheduleKind::Diagonal.grid(8), 8);
+        assert_eq!(ScheduleKind::Packed { grid_factor: 4 }.grid(8), 32);
+        assert_eq!(ScheduleKind::Packed { grid_factor: 2 }.label(), "packed(x2)");
+        assert_eq!(ScheduleKind::Diagonal.grid_factor(), 1);
+    }
+
+    /// The satellite property: for random corpora, `W`, and `g`, the
+    /// packed schedule covers every partition exactly once per sweep and
+    /// never co-schedules two partitions sharing a row or column group.
+    #[test]
+    fn packed_schedule_covers_all_partitions_conflict_free() {
+        prop::check("packed-cover-nonconflict", 0x5C4ED, 48, |rng| {
+            let w = 1 + rng.gen_range(4);
+            let g = 1 + rng.gen_range(4);
+            let p = g * w;
+            let bow = prop::gen_bow(rng, 40, 40);
+            let plan = partition(&bow, p, Algorithm::A3 { restarts: 1 }, rng.next_u64());
+            let s = Schedule::build(
+                ScheduleKind::Packed { grid_factor: g },
+                &plan.costs,
+                w,
+            );
+            let mut seen = vec![false; p * p];
+            for (l, ep) in s.epochs.iter().enumerate() {
+                let mut rows = vec![false; p];
+                let mut cols = vec![false; p];
+                assert_eq!(ep.assign.len(), w);
+                for list in &ep.assign {
+                    for &m in list {
+                        let m = m as usize;
+                        let n = (m + l) % p;
+                        assert!(!seen[m * p + n], "partition scheduled twice");
+                        seen[m * p + n] = true;
+                        assert!(
+                            !rows[m] && !cols[n],
+                            "co-scheduled partitions share a row/column group"
+                        );
+                        rows[m] = true;
+                        cols[n] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "some partition never scheduled");
+        });
+    }
+}

@@ -68,6 +68,25 @@ pub fn gen_size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     }
 }
 
+/// Random sparse corpus up to `max_d × max_w` with heavy-tailed cell
+/// counts — the common input for partition/schedule invariant properties
+/// (may be empty: zero-token corpora are legal and must not panic).
+pub fn gen_bow(rng: &mut Rng, max_d: usize, max_w: usize) -> crate::corpus::bow::BagOfWords {
+    let d = gen_size(rng, 1, max_d);
+    let w = gen_size(rng, 1, max_w);
+    let nnz = gen_size(rng, 0, (d * w).min(4 * (d + w)));
+    let triplets: Vec<(u32, u32, u32)> = (0..nnz)
+        .map(|_| {
+            (
+                rng.gen_range(d) as u32,
+                rng.gen_range(w) as u32,
+                gen_heavy_tailed(rng, 1, 500)[0],
+            )
+        })
+        .collect();
+    crate::corpus::bow::BagOfWords::from_triplets(d, w, triplets)
+}
+
 /// Vector of positive weights with a heavy tail (Zipf-like), the shape of
 /// real word-frequency workloads.
 pub fn gen_heavy_tailed(rng: &mut Rng, len: usize, max: u32) -> Vec<u32> {

@@ -53,7 +53,10 @@ fn partition_tiny_all_algorithms() {
     assert!(out.contains("baseline"));
     assert!(out.contains("A3"));
     // P=1 row must be all 1.0000.
-    let p1_line = out.lines().find(|l| l.trim_start().starts_with('1') && l.contains("1.0000")).unwrap();
+    let p1_line = out
+        .lines()
+        .find(|l| l.trim_start().starts_with('1') && l.contains("1.0000"))
+        .unwrap();
     assert_eq!(p1_line.matches("1.0000").count(), 4, "{p1_line}");
 }
 
@@ -108,6 +111,40 @@ fn train_pooled_mode_via_cli() {
     ]);
     assert!(ok, "{out}");
     assert!(out.contains("final perplexity"));
+}
+
+#[test]
+fn train_packed_schedule_via_cli() {
+    let (out, _, ok) = pplda(&[
+        "train", "--profile", "tiny", "--workers", "2", "--grid-factor", "2",
+        "--schedule", "packed", "--topics", "4", "--iters", "2", "--restarts", "2",
+        "--mode", "pooled",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("P=4"), "{out}");
+    assert!(out.contains("schedule packed(x2) workers=2"), "{out}");
+    assert!(out.contains("schedule_eta="), "{out}");
+    assert!(out.contains("final perplexity"), "{out}");
+}
+
+#[test]
+fn train_bot_packed_schedule_via_cli() {
+    let (out, _, ok) = pplda(&[
+        "train-bot", "--profile", "tiny", "--workers", "2", "--grid-factor", "2",
+        "--topics", "4", "--iters", "2", "--restarts", "2",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("workers=2 schedule=packed(x2)"), "{out}");
+}
+
+#[test]
+fn grid_factor_without_packed_schedule_fails() {
+    let (_, err, ok) = pplda(&[
+        "train", "--profile", "tiny", "--schedule", "diagonal", "--grid-factor", "4",
+        "--topics", "4", "--iters", "1",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("requires --schedule packed"), "{err}");
 }
 
 #[test]

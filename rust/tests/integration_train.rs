@@ -6,6 +6,7 @@ use pplda::corpus::synthetic::{generate, generate_timestamped, Profile, TimeProf
 use pplda::gibbs::serial::SerialLda;
 use pplda::partition::{partition, Algorithm};
 use pplda::scheduler::exec::{ExecMode, ParallelLda};
+use pplda::scheduler::schedule::ScheduleKind;
 
 fn small_profile() -> Profile {
     let mut p = Profile::nips_like().scaled(40);
@@ -125,6 +126,49 @@ fn pooled_bot_matches_sequential_through_driver() {
     cfg.mode = ExecMode::Pooled;
     let pooled = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
     assert_eq!(seq.final_perplexity, pooled.final_perplexity);
+}
+
+#[test]
+fn packed_schedule_matches_diagonal_through_driver() {
+    // The tentpole's end-to-end determinism claim: the same grid-8 plan
+    // trained diagonally (W=8, sequential) and packed onto fewer workers
+    // (W ∈ {2, 4}, pooled) produces identical perplexity curves.
+    let bow = generate(&small_profile(), 109);
+    let plan = partition(&bow, 8, Algorithm::A3 { restarts: 3 }, 7);
+    let mut cfg = TrainConfig::quick(8, 5);
+    cfg.eval_every = 5;
+    let diag = train_lda(&bow, &plan, &cfg);
+    for workers in [2usize, 4] {
+        let mut packed_cfg = cfg;
+        packed_cfg.schedule = ScheduleKind::Packed { grid_factor: 8 / workers };
+        packed_cfg.workers = workers;
+        packed_cfg.mode = ExecMode::Pooled;
+        let packed = train_lda(&bow, &plan, &packed_cfg);
+        assert_eq!(diag.final_perplexity, packed.final_perplexity, "W={workers}");
+        assert_eq!(diag.curve, packed.curve, "W={workers}");
+        assert_eq!(packed.workers, workers);
+        assert!(packed.schedule_eta > 0.0 && packed.schedule_eta <= 1.0 + 1e-12);
+    }
+}
+
+#[test]
+fn packed_bot_matches_diagonal_through_driver() {
+    let mut profile = Profile::tiny();
+    profile.time = Some(TimeProfile {
+        first_year: 2000,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 4,
+    });
+    let tc = generate_timestamped(&profile, 110);
+    let mut cfg = TrainConfig::quick(8, 4);
+    let diag = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+    cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+    cfg.workers = 2;
+    cfg.mode = ExecMode::Pooled;
+    let packed = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+    assert_eq!(diag.final_perplexity, packed.final_perplexity);
+    assert_eq!(packed.workers, 2);
 }
 
 #[test]
