@@ -24,7 +24,7 @@ fn main() {
     let mas_profile = Profile::mas_like().scaled(mas_scale);
     let mas = generate_timestamped(&mas_profile, seed);
 
-    let stats = vec![
+    let stats = [
         CorpusStats::of("NIPS", &nips),
         CorpusStats::of(&format!("NYTimes/{nyt_scale}"), &nyt),
         CorpusStats::of_timestamped(&format!("MAS/{mas_scale}"), &mas),

@@ -10,6 +10,7 @@ use crate::bot::counts::BotCounts;
 use crate::bot::serial::BotHyper;
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::gibbs::tokens::TokenBlock;
+use crate::kernel::KernelKind;
 use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
@@ -68,6 +69,11 @@ pub struct ParallelBot {
     word: Phase,
     /// Timestamp blocks + schedule over the DTS plan.
     stamp: Phase,
+    /// Sampling kernel both phases run (see [`crate::kernel`]): the
+    /// timestamp phase reuses the doc-side sparse structures unchanged —
+    /// the timestamp factor enters the bucket weights through the phase
+    /// [`crate::gibbs::sampler::Hyper`] (γ for β, S·γ for W·β).
+    kernel: KernelKind,
     seed: u64,
     sweeps_done: usize,
     /// Executor state — the persistent pool (if `Pooled` mode is used)
@@ -138,6 +144,7 @@ impl ParallelBot {
             p,
             word,
             stamp,
+            kernel: KernelKind::Dense,
             seed,
             sweeps_done: 0,
             engines: EngineCache::new(workers),
@@ -159,6 +166,16 @@ impl ParallelBot {
     /// Worker slots the current schedules run on.
     pub fn workers(&self) -> usize {
         self.word.schedule.workers
+    }
+
+    /// Select the sampling kernel for both phases of subsequent sweeps.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
+    }
+
+    /// The kernel running this trainer's sweeps.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// The (DW, DTS) schedules executing this trainer's sweeps.
@@ -207,6 +224,7 @@ impl ParallelBot {
                     h: self.h.word_hyper(),
                     seed: self.seed ^ 0xD0C5,
                     sweep: sweep_no,
+                    kernel: self.kernel,
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
@@ -241,6 +259,7 @@ impl ParallelBot {
                     h: self.h.stamp_hyper(),
                     seed: self.seed ^ 0x7135,
                     sweep: sweep_no,
+                    kernel: self.kernel,
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
@@ -259,6 +278,20 @@ impl ParallelBot {
             }
         }
         self.sweeps_done += 1;
+        // Debug builds audit the full two-matrix invariant per sweep so
+        // kernel count-delta bugs fail at the offending sweep (see the
+        // matching check in `scheduler::exec::ParallelLda::sweep`).
+        #[cfg(debug_assertions)]
+        {
+            let words: Vec<&TokenBlock> = self.word.blocks.iter().flatten().collect();
+            let stamps: Vec<&TokenBlock> = self.stamp.blocks.iter().flatten().collect();
+            if let Err(e) = self.counts.check_consistency(&words, &stamps) {
+                panic!(
+                    "kernel {} corrupted BoT counts on sweep {sweep_no}: {e}",
+                    self.kernel.name()
+                );
+            }
+        }
         (wstats, sstats)
     }
 
@@ -427,6 +460,72 @@ mod tests {
             assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "W={workers}");
             assert_eq!(bot.counts.topic_words, oracle.counts.topic_words, "W={workers}");
             assert_eq!(bot.counts.topic_stamps, oracle.counts.topic_stamps, "W={workers}");
+        }
+    }
+
+    #[test]
+    fn every_kernel_is_bit_identical_across_modes_and_workers_bot() {
+        // Kernel determinism over both phases: Sequential diagonal is
+        // the oracle; packed Pooled at W ∈ {1, 2, 4} must match bit for
+        // bit for each kernel (the timestamp phase exercises the folded
+        // γ/S·γ hyperparameters).
+        for kernel in KernelKind::all() {
+            let (_tc, mut oracle) = setup(4, 81);
+            oracle.set_kernel(kernel);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                let (_t, mut bot) = setup_scheduled(4, 81, kind, workers);
+                bot.set_kernel(kernel);
+                assert_eq!(bot.kernel(), kernel);
+                for _ in 0..2 {
+                    bot.sweep(ExecMode::Pooled);
+                }
+                assert_eq!(
+                    bot.counts.doc_topic,
+                    oracle.counts.doc_topic,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.word_topic,
+                    oracle.counts.word_topic,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.stamp_topic,
+                    oracle.counts.stamp_topic,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.topic_words,
+                    oracle.counts.topic_words,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.topic_stamps,
+                    oracle.counts.topic_stamps,
+                    "{kernel:?} W={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_and_alias_bot_close_to_dense() {
+        // Statistical validation of the non-dense kernels on BoT: all
+        // three converge to approximately the same word perplexity.
+        let (tc, mut dense) = setup(4, 82);
+        dense.train(&tc, 30, 0, ExecMode::Sequential);
+        let pd = dense.perplexity(&tc);
+        for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+            let (_t, mut bot) = setup(4, 82);
+            bot.set_kernel(kernel);
+            bot.train(&tc, 30, 0, ExecMode::Sequential);
+            let pk = bot.perplexity(&tc);
+            let rel = (pk - pd).abs() / pd;
+            assert!(rel < 0.05, "{kernel:?}: dense {pd} vs {pk} (rel {rel})");
         }
     }
 

@@ -18,6 +18,8 @@ pub struct BotTrainReport {
     pub workers: usize,
     /// Schedule label: "serial", "diagonal", or "packed(xg)".
     pub schedule: String,
+    /// Sampling kernel label ("dense" for the serial reference).
+    pub kernel: String,
     pub topics: usize,
     pub iters: usize,
     pub final_perplexity: f64,
@@ -38,6 +40,7 @@ impl BotTrainReport {
         j.set("p", self.p)
             .set("workers", self.workers)
             .set("schedule", self.schedule.as_str())
+            .set("kernel", self.kernel.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
@@ -75,6 +78,7 @@ pub fn train_bot(
             p: 1,
             workers: 1,
             schedule: "serial".to_string(),
+            kernel: "dense".to_string(),
             topics: cfg.topics,
             iters: cfg.iters,
             final_perplexity,
@@ -99,6 +103,7 @@ pub fn train_bot(
         cfg.schedule,
         workers,
     );
+    bot.set_kernel(cfg.kernel);
     let speedup = {
         let (sdw, sdts) = bot.schedules();
         combined_speedup_scheduled(&plan_dw, &plan_dts, sdw, sdts)
@@ -109,6 +114,7 @@ pub fn train_bot(
         p,
         workers,
         schedule: cfg.schedule.label(),
+        kernel: cfg.kernel.name().to_string(),
         topics: cfg.topics,
         iters: cfg.iters,
         final_perplexity,

@@ -1,6 +1,7 @@
 //! Training configuration (paper §V-C defaults: K=256, α=0.5, β=0.1,
 //! γ=0.1, ≤200 burn-in iterations).
 
+use crate::kernel::KernelKind;
 use crate::scheduler::exec::ExecMode;
 use crate::scheduler::schedule::ScheduleKind;
 
@@ -38,6 +39,11 @@ pub struct TrainConfig {
     /// `Diagonal` coupling (`P == W`) or `Packed` over-decomposition
     /// (`P = g·W`, LPT per diagonal); see `docs/scheduling.md`.
     pub schedule: ScheduleKind,
+    /// Per-token sampling kernel for the parallel native path: `Dense`
+    /// O(K) scan (reference; default), `Sparse` s/r/q buckets, or
+    /// `Alias` tables with MH correction; see `docs/kernels.md`. The
+    /// serial (`P == 1`) reference and the XLA backend always run dense.
+    pub kernel: KernelKind,
     pub backend: Backend,
 }
 
@@ -54,6 +60,7 @@ impl Default for TrainConfig {
             mode: ExecMode::Sequential,
             workers: 0,
             schedule: ScheduleKind::Diagonal,
+            kernel: KernelKind::Dense,
             backend: Backend::Native,
         }
     }
@@ -108,6 +115,7 @@ mod tests {
         assert_eq!(c.iters, 200);
         assert_eq!(c.workers, 0);
         assert_eq!(c.schedule, ScheduleKind::Diagonal);
+        assert_eq!(c.kernel, KernelKind::Dense);
     }
 
     #[test]

@@ -14,6 +14,9 @@ pub struct TrainReport {
     pub workers: usize,
     /// Schedule label: "serial", "diagonal", or "packed(xg)".
     pub schedule: String,
+    /// Sampling kernel label: "dense", "sparse", or "alias" ("dense"
+    /// for the serial reference and the XLA backend).
+    pub kernel: String,
     pub topics: usize,
     pub iters: usize,
     /// (iteration, perplexity) curve.
@@ -40,6 +43,7 @@ impl TrainReport {
             .set("p", self.p)
             .set("workers", self.workers)
             .set("schedule", self.schedule.as_str())
+            .set("kernel", self.kernel.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
@@ -85,6 +89,7 @@ mod tests {
             p: 10,
             workers: 10,
             schedule: "diagonal".into(),
+            kernel: "sparse".into(),
             topics: 64,
             iters: 50,
             curve: vec![(25, 700.0), (50, 600.5)],
@@ -104,6 +109,7 @@ mod tests {
         assert!(s.contains("\"eta\":0.98"));
         assert!(s.contains("\"workers\":10"));
         assert!(s.contains("\"schedule\":\"diagonal\""));
+        assert!(s.contains("\"kernel\":\"sparse\""));
         assert!(s.contains("\"schedule_eta\":0.98"));
         assert!(s.contains("\"curve\":[{"));
     }

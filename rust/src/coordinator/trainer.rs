@@ -29,6 +29,9 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
     let mut workers = 1;
     let mut schedule = "serial".to_string();
     let mut schedule_eta = 1.0;
+    // The serial reference and the XLA backend are dense-only; the
+    // parallel native arm runs the configured kernel.
+    let mut kernel = "dense".to_string();
     let (curve, final_perplexity) = match (cfg.backend, plan.p) {
         (Backend::Native, 1) => {
             let mut lda = SerialLda::init(bow, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
@@ -51,9 +54,11 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
                 cfg.schedule,
                 w,
             );
+            lda.set_kernel(cfg.kernel);
             workers = w;
             schedule = cfg.schedule.label();
             schedule_eta = EtaComparison::of(plan, lda.schedule()).schedule.eta;
+            kernel = cfg.kernel.name().to_string();
             let mut curve = lda.train(bow, cfg.iters, cfg.eval_every, cfg.mode);
             let fin = lda.perplexity(bow);
             if curve.is_empty() {
@@ -75,6 +80,7 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         p: plan.p,
         workers,
         schedule,
+        kernel,
         topics: cfg.topics,
         iters: cfg.iters,
         curve,
@@ -191,6 +197,31 @@ mod tests {
         assert_eq!(diag.workers, 4);
         assert_eq!(diag.schedule, "diagonal");
         assert!((diag.schedule_eta - diag.eta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernels_through_driver_converge_together() {
+        use crate::kernel::KernelKind;
+
+        let bow = generate(&Profile::tiny(), 85);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 85);
+        let mut cfg = TrainConfig::quick(8, 20);
+        let dense = train_lda(&bow, &plan, &cfg);
+        assert_eq!(dense.kernel, "dense");
+        for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+            cfg.kernel = kernel;
+            let r = train_lda(&bow, &plan, &cfg);
+            assert_eq!(r.kernel, kernel.name());
+            let rel = (r.final_perplexity - dense.final_perplexity).abs()
+                / dense.final_perplexity;
+            assert!(
+                rel < 0.1,
+                "{}: dense {} vs {} (rel {rel})",
+                kernel.name(),
+                dense.final_perplexity,
+                r.final_perplexity
+            );
+        }
     }
 
     #[test]

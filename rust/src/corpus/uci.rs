@@ -21,16 +21,25 @@ use crate::util::error::{bail, Context, Result};
 use crate::corpus::bow::BagOfWords;
 
 /// Parse a UCI bag-of-words stream.
+///
+/// Tolerates blank and whitespace-only lines anywhere (some mirrors
+/// terminate files with them), reports parse failures with their
+/// 1-based line number, and *sums* duplicate `(doc, word)` triplets at
+/// load — real exports occasionally split a cell across lines, and the
+/// loader's contract should not depend on downstream construction
+/// details to coalesce them. The `NNZ` header is checked against the
+/// raw triplet-line count, before merging.
 pub fn read_bow(reader: impl Read) -> Result<BagOfWords> {
-    let mut lines = BufReader::new(reader).lines();
+    let mut lines = BufReader::new(reader).lines().enumerate();
     let mut next_header = |what: &str| -> Result<usize> {
         loop {
-            let line = lines
+            let (idx, line) = lines
                 .next()
-                .with_context(|| format!("missing {what} header"))??;
+                .with_context(|| format!("missing {what} header"))?;
+            let line = line?;
             let t = line.trim();
             if !t.is_empty() {
-                return t.parse().with_context(|| format!("bad {what}: {t:?}"));
+                return t.parse().with_context(|| format!("line {}: bad {what}: {t:?}", idx + 1));
             }
         }
     };
@@ -38,9 +47,12 @@ pub fn read_bow(reader: impl Read) -> Result<BagOfWords> {
     let num_words: usize = next_header("W")?;
     let nnz: usize = next_header("NNZ")?;
 
-    let mut triplets = Vec::with_capacity(nnz);
-    for line in lines {
+    let mut raw_lines = 0usize;
+    let mut merged: std::collections::HashMap<(u32, u32), u32> =
+        std::collections::HashMap::with_capacity(nnz);
+    for (idx, line) in lines {
         let line = line?;
+        let ln = idx + 1;
         let t = line.trim();
         if t.is_empty() {
             continue;
@@ -48,22 +60,31 @@ pub fn read_bow(reader: impl Read) -> Result<BagOfWords> {
         let mut it = t.split_ascii_whitespace();
         let (d, w, c) = match (it.next(), it.next(), it.next()) {
             (Some(d), Some(w), Some(c)) => (d, w, c),
-            _ => bail!("malformed triplet line: {t:?}"),
+            _ => bail!("line {ln}: malformed triplet line: {t:?}"),
         };
-        let d: usize = d.parse().with_context(|| format!("bad doc id {d:?}"))?;
-        let w: usize = w.parse().with_context(|| format!("bad word id {w:?}"))?;
-        let c: u32 = c.parse().with_context(|| format!("bad count {c:?}"))?;
+        let d: usize = d.parse().with_context(|| format!("line {ln}: bad doc id {d:?}"))?;
+        let w: usize = w.parse().with_context(|| format!("line {ln}: bad word id {w:?}"))?;
+        let c: u32 = c.parse().with_context(|| format!("line {ln}: bad count {c:?}"))?;
         if d == 0 || d > num_docs {
-            bail!("doc id {d} outside 1..={num_docs}");
+            bail!("line {ln}: doc id {d} outside 1..={num_docs}");
         }
         if w == 0 || w > num_words {
-            bail!("word id {w} outside 1..={num_words}");
+            bail!("line {ln}: word id {w} outside 1..={num_words}");
         }
-        triplets.push(((d - 1) as u32, (w - 1) as u32, c));
+        raw_lines += 1;
+        let cell = merged.entry(((d - 1) as u32, (w - 1) as u32)).or_insert(0);
+        *cell = match cell.checked_add(c) {
+            Some(v) => v,
+            None => bail!("line {ln}: summed count for doc {d} word {w} overflows u32"),
+        };
     }
-    if triplets.len() != nnz {
-        bail!("NNZ header says {nnz}, file has {}", triplets.len());
+    if raw_lines != nnz {
+        bail!("NNZ header says {nnz}, file has {raw_lines} triplet lines");
     }
+    // Deterministic construction order regardless of hash-map iteration.
+    let mut triplets: Vec<(u32, u32, u32)> =
+        merged.into_iter().map(|((d, w), c)| (d, w, c)).collect();
+    triplets.sort_unstable();
     Ok(BagOfWords::from_triplets(num_docs, num_words, triplets))
 }
 
@@ -98,6 +119,67 @@ mod tests {
         let s = "2\n\n2\n1\n1 1 1\n\n";
         let b = read_bow(s.as_bytes()).unwrap();
         assert_eq!(b.num_tokens(), 1);
+    }
+
+    #[test]
+    fn tolerates_trailing_whitespace_and_crlf_lines() {
+        let s = "2\r\n3\r\n2\r\n1 1 2   \r\n   \r\n2 3 1\t\r\n   \n";
+        let b = read_bow(s.as_bytes()).unwrap();
+        assert_eq!(b.num_docs(), 2);
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(b.num_tokens(), 3);
+    }
+
+    #[test]
+    fn duplicate_triplets_are_summed() {
+        // The same (doc, word) cell split across lines must merge into
+        // one entry with the summed count; NNZ counts the raw lines.
+        let s = "2\n2\n4\n1 1 2\n2 2 5\n1 1 3\n1 2 1\n";
+        let b = read_bow(s.as_bytes()).unwrap();
+        assert_eq!(b.nnz(), 3, "merged entries, not raw lines");
+        assert_eq!(b.num_tokens(), 11);
+        assert_eq!(b.doc(0).len(), 2);
+        assert_eq!(b.doc(0)[0].word, 0);
+        assert_eq!(b.doc(0)[0].count, 5, "2 + 3 summed");
+        assert_eq!(b.col_sum(0), 5);
+    }
+
+    #[test]
+    fn duplicate_sum_overflow_is_rejected() {
+        // Summing duplicates must not silently clamp: a pair of counts
+        // overflowing u32 is a loader error, with the offending line.
+        let s = "1\n1\n2\n1 1 4000000000\n1 1 4000000000\n";
+        let e = read_bow(s.as_bytes()).unwrap_err().to_string();
+        assert!(e.contains("overflows u32"), "{e}");
+        assert!(e.contains("line 5"), "{e}");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        // Bad triplet on (1-based) line 5.
+        let s = "2\n2\n2\n1 1 1\n1 x 1\n";
+        let e = read_bow(s.as_bytes()).unwrap_err().to_string();
+        assert!(e.contains("line 5"), "{e}");
+        assert!(e.contains("bad word id"), "{e}");
+
+        // Out-of-range doc id on line 4 (after a blank line 3... headers
+        // occupy lines 1-3 here).
+        let s = "1\n1\n1\n9 1 1\n";
+        let e = read_bow(s.as_bytes()).unwrap_err().to_string();
+        assert!(e.contains("line 4"), "{e}");
+        assert!(e.contains("doc id 9"), "{e}");
+
+        // Malformed triplet line number survives leading blank lines.
+        let s = "1\n1\n1\n\n\n1 1\n";
+        let e = read_bow(s.as_bytes()).unwrap_err().to_string();
+        assert!(e.contains("line 6"), "{e}");
+        assert!(e.contains("malformed"), "{e}");
+
+        // Bad header also carries its line.
+        let s = "1\nxyz\n1\n1 1 1\n";
+        let e = read_bow(s.as_bytes()).unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("bad W"), "{e}");
     }
 
     #[test]

@@ -126,4 +126,39 @@ mod tests {
         c.topic[0] += 1;
         assert!(c.check_consistency(&[&b]).is_err());
     }
+
+    #[test]
+    fn consistency_names_each_corrupted_matrix() {
+        // The post-sweep debug assertion in the parallel trainers
+        // surfaces these messages; each matrix must be distinguishable
+        // so a kernel count-delta bug points at the right structure.
+        let b = block();
+
+        let mut c = LdaCounts::zeros(2, 3, 2);
+        c.absorb(&b);
+        c.doc_topic[0] += 1.0;
+        assert_eq!(c.check_consistency(&[&b]).unwrap_err(), "doc_topic mismatch");
+
+        let mut c = LdaCounts::zeros(2, 3, 2);
+        c.absorb(&b);
+        c.word_topic[1] -= 1.0;
+        assert_eq!(c.check_consistency(&[&b]).unwrap_err(), "word_topic mismatch");
+
+        let mut c = LdaCounts::zeros(2, 3, 2);
+        c.absorb(&b);
+        c.topic[1] -= 1;
+        assert_eq!(c.check_consistency(&[&b]).unwrap_err(), "topic totals mismatch");
+    }
+
+    #[test]
+    fn consistency_detects_swapped_assignments() {
+        // Counts that are right in aggregate but attached to the wrong
+        // block assignments must still fail: the check recomputes from
+        // the blocks' z, so a block/counts divergence is caught.
+        let mut c = LdaCounts::zeros(2, 3, 2);
+        let mut b = block();
+        c.absorb(&b);
+        b.z[0] = 0; // was 1; counts still reflect the old assignment
+        assert!(c.check_consistency(&[&b]).is_err());
+    }
 }

@@ -18,6 +18,11 @@
 //!   non-conflict), while `n_k` is read from an epoch-start snapshot and
 //!   the worker's increments/decrements accumulate in a local delta that
 //!   the barrier merges (Yan et al.'s approximation).
+//!
+//! `sweep_partition` is the *dense* member of the pluggable kernel
+//! subsystem: [`crate::kernel::DenseKernel`] wraps it behind the
+//! [`crate::kernel::Kernel`] trait, next to the sparse-bucket and
+//! alias-table kernels (see `docs/kernels.md`).
 
 use crate::gibbs::tokens::TokenBlock;
 use crate::util::rng::Rng;

@@ -1,0 +1,373 @@
+//! Pluggable per-partition sampling kernels.
+//!
+//! The executor layer ([`crate::scheduler::pool`]) fixes *where* a
+//! partition's tokens are sampled (which worker, which epoch); this
+//! module fixes *how*: a [`Kernel`] is the per-token algorithm that
+//! sweeps one partition's [`TokenBlock`] given exclusive access to the
+//! partition's document and emission count rows, an epoch-start topic
+//! snapshot, and a local signed topic delta. Three implementations
+//! trade per-token cost against bookkeeping:
+//!
+//! * [`DenseKernel`] — the O(K) incremental-reciprocal scan (the
+//!   original hot path, extracted from `gibbs/sampler.rs`). The
+//!   cross-kernel reference: the other kernels are validated against it
+//!   statistically, and it remains the default.
+//! * [`SparseLdaKernel`] — Yao-style s/r/q bucket decomposition with
+//!   sparse doc-topic and word-topic row iteration; O(k_doc + k_word)
+//!   per token once topics concentrate.
+//! * [`AliasKernel`] — per-word alias tables drawn in O(1) plus an
+//!   exact O(k_doc) doc-side bucket, with Metropolis–Hastings
+//!   correction for table staleness so the stationary distribution is
+//!   exact despite reuse.
+//!
+//! # Determinism contract
+//!
+//! A kernel must be a *pure function of the task*: given the same row
+//! contents, snapshot, delta, token order, and RNG stream, it must
+//! produce identical assignments regardless of which executor, worker,
+//! or schedule ran it. Concretely that means all scratch keyed on row
+//! contents (sparse lists, alias tables) is invalidated at the start of
+//! every [`Kernel::sweep_task`] call and rebuilt from the rows as first
+//! touched — never carried over from another task, whose identity
+//! depends on the schedule. Under this contract every kernel is
+//! bit-identical across `Sequential`/`Threaded`/`Pooled` and any worker
+//! count, exactly like the dense path (pinned by the kernel-matrix
+//! tests in `scheduler/exec.rs`, `bot/parallel.rs`, and
+//! `tests/integration_train.rs`). Different kernels draw different
+//! numbers of uniforms per token, so *across* kernels the chains
+//! differ — they agree in distribution, not bit for bit.
+//!
+//! See `docs/kernels.md` for the bucket math, the MH correction, and
+//! the scratch-ownership rules.
+
+pub mod alias;
+pub mod dense;
+pub mod sparse;
+
+pub use alias::AliasKernel;
+pub use dense::DenseKernel;
+pub use sparse::SparseLdaKernel;
+
+use crate::gibbs::sampler::Hyper;
+use crate::gibbs::tokens::TokenBlock;
+use crate::scheduler::shared::SharedRows;
+use crate::util::rng::Rng;
+
+/// Which sampling kernel runs the per-token hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Dense O(K) scan (reference; default).
+    Dense,
+    /// SparseLDA s/r/q bucket decomposition.
+    Sparse,
+    /// Alias-table sampler with MH staleness correction.
+    Alias,
+}
+
+impl KernelKind {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dense" => Some(Self::Dense),
+            "sparse" | "sparselda" | "sparse-lda" => Some(Self::Sparse),
+            "alias" => Some(Self::Alias),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Sparse => "sparse",
+            Self::Alias => "alias",
+        }
+    }
+
+    /// All kinds, for test/bench matrices.
+    pub fn all() -> [Self; 3] {
+        [Self::Dense, Self::Sparse, Self::Alias]
+    }
+
+    /// Construct a fresh kernel of this kind with empty scratch. The
+    /// instance is long-lived: executors build one per worker and reuse
+    /// it for every task of every epoch, so steady-state sweeps do not
+    /// allocate (alias-table rebuilds amortize over each word's tokens).
+    pub fn build(self) -> Box<dyn Kernel> {
+        match self {
+            Self::Dense => Box::<DenseKernel>::default(),
+            Self::Sparse => Box::<SparseLdaKernel>::default(),
+            Self::Alias => Box::<AliasKernel>::default(),
+        }
+    }
+}
+
+/// Everything one task (= one partition of one diagonal epoch) exposes
+/// to its kernel: shared count matrices with exclusive row ownership,
+/// the epoch-start topic snapshot, and the hyperparameters.
+///
+/// `doc` rows are grouped by document partition; `emit` rows by the
+/// emission-side partition (words for LDA and the BoT word phase,
+/// timestamps for the BoT timestamp phase — the timestamp factor enters
+/// through [`Hyper`], with γ in place of β, so every kernel serves both
+/// phases unchanged).
+pub struct TaskCtx<'a> {
+    pub doc: SharedRows<'a>,
+    pub emit: SharedRows<'a>,
+    /// Epoch-start view of the `k` topic totals backing `emit`; the
+    /// effective total is `snapshot[t] + delta[t]`.
+    pub snapshot: &'a [u32],
+    pub h: Hyper,
+}
+
+impl<'a> TaskCtx<'a> {
+    /// The partition-owned document row `d`.
+    ///
+    /// # Safety
+    /// The caller must be sweeping a task whose partition owns document
+    /// row `d` for the current epoch (diagonal non-conflict invariant —
+    /// every token of the task's block satisfies this by construction).
+    #[inline]
+    pub unsafe fn doc_row(&self, d: usize) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.doc.row_ptr(d), self.h.k)
+    }
+
+    /// The partition-owned emission row `w` (word or timestamp).
+    ///
+    /// # Safety
+    /// As [`Self::doc_row`], for emission row `w`.
+    #[inline]
+    pub unsafe fn emit_row(&self, w: usize) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.emit.row_ptr(w), self.h.k)
+    }
+}
+
+/// A per-partition sampling algorithm with owned, reusable scratch.
+///
+/// One call to [`Self::sweep_task`] resamples every token of `block`,
+/// mirroring all count changes into the partition-owned rows of
+/// `ctx.doc`/`ctx.emit` and the signed topic `delta` (which the caller
+/// has zeroed; the barrier merges it into the authoritative totals).
+/// Implementations own whatever scratch they need and must uphold the
+/// module-level determinism contract.
+pub trait Kernel: Send {
+    fn kind(&self) -> KernelKind;
+
+    fn sweep_task(
+        &mut self,
+        ctx: &TaskCtx<'_>,
+        block: &mut TokenBlock,
+        delta: &mut [i64],
+        rng: &mut Rng,
+    );
+}
+
+/// Per-row topic nonzero lists with per-task (versioned) invalidation —
+/// the doc-side sparse structure shared by [`SparseLdaKernel`] and
+/// [`AliasKernel`] (and the word-side structure of the former).
+///
+/// A row's list is rebuilt from the dense row on first access within a
+/// task and maintained incrementally afterwards; entries from previous
+/// tasks are invalidated by a version stamp rather than cleared, so
+/// `begin_task` is O(1) and steady-state sweeps reuse all allocations.
+#[derive(Default)]
+pub(crate) struct NzCache {
+    version: Vec<u64>,
+    lists: Vec<Vec<u32>>,
+    current: u64,
+}
+
+impl NzCache {
+    /// Start a new task over a matrix of `rows` rows: invalidate every
+    /// cached list (lazily) and make sure the cache covers the matrix.
+    pub fn begin_task(&mut self, rows: usize) {
+        if self.version.len() < rows {
+            self.version.resize(rows, 0);
+            self.lists.resize_with(rows, Vec::new);
+        }
+        self.current += 1;
+    }
+
+    /// Ensure `row_id`'s list is built for the current task from the
+    /// dense `row` (topics with count > 0, ascending).
+    pub fn ensure(&mut self, row_id: usize, row: &[f32]) {
+        if self.version[row_id] != self.current {
+            self.version[row_id] = self.current;
+            let list = &mut self.lists[row_id];
+            list.clear();
+            for (t, &c) in row.iter().enumerate() {
+                if c > 0.0 {
+                    list.push(t as u32);
+                }
+            }
+        }
+    }
+
+    /// The current-task list for `row_id` (must be `ensure`d first).
+    #[inline]
+    pub fn list(&self, row_id: usize) -> &[u32] {
+        debug_assert_eq!(self.version[row_id], self.current, "list not built");
+        &self.lists[row_id]
+    }
+
+    /// Record that topic `t` left the row (count hit zero).
+    #[inline]
+    pub fn remove(&mut self, row_id: usize, t: u32) {
+        let list = &mut self.lists[row_id];
+        if let Some(pos) = list.iter().position(|&x| x == t) {
+            list.swap_remove(pos);
+        }
+    }
+
+    /// Record that topic `t` entered the row (count left zero).
+    #[inline]
+    pub fn insert(&mut self, row_id: usize, t: u32) {
+        self.lists[row_id].push(t);
+    }
+}
+
+/// Shared fixtures for the per-kernel unit tests: a single-partition
+/// task over a small corpus (the kernel owns every row), swept in place
+/// with barrier-style delta merges between sweeps.
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::{Kernel, TaskCtx};
+    use crate::corpus::bow::BagOfWords;
+    use crate::gibbs::counts::LdaCounts;
+    use crate::gibbs::sampler::Hyper;
+    use crate::gibbs::tokens::TokenBlock;
+    use crate::scheduler::shared::SharedRows;
+    use crate::util::rng::Rng;
+
+    pub struct TaskFixture {
+        pub block: TokenBlock,
+        pub counts: LdaCounts,
+        pub snapshot: Vec<u32>,
+        pub delta: Vec<i64>,
+        pub h: Hyper,
+    }
+
+    /// Whole-corpus-as-one-partition fixture (two doc groups, two word
+    /// groups' worth of structure, K topics).
+    pub fn task_fixture(k: usize, seed: u64) -> TaskFixture {
+        let mut triplets = Vec::new();
+        for d in 0..6u32 {
+            for w in 0..5u32 {
+                let word = if d < 3 { w } else { w + 5 };
+                triplets.push((d, word, 3 + (d + w) % 4));
+            }
+        }
+        let bow = BagOfWords::from_triplets(6, 10, triplets);
+        let mut rng = Rng::new(seed);
+        let block = TokenBlock::from_corpus(&bow, k, &mut rng);
+        let mut counts = LdaCounts::zeros(6, 10, k);
+        counts.absorb(&block);
+        let snapshot = counts.topic.clone();
+        TaskFixture {
+            block,
+            counts,
+            snapshot,
+            delta: vec![0i64; k],
+            h: Hyper::new(k, 0.5, 0.1, 10),
+        }
+    }
+
+    /// Run one task sweep with a fresh RNG stream (the fixture's delta
+    /// must be zeroed, as the executor guarantees).
+    pub fn run_kernel(fx: &mut TaskFixture, kernel: &mut dyn Kernel, rng_seed: u64) {
+        let k = fx.h.k;
+        let ctx = TaskCtx {
+            doc: SharedRows::new(&mut fx.counts.doc_topic, k),
+            emit: SharedRows::new(&mut fx.counts.word_topic, k),
+            snapshot: &fx.snapshot,
+            h: fx.h,
+        };
+        let mut rng = Rng::new(rng_seed);
+        kernel.sweep_task(&ctx, &mut fx.block, &mut fx.delta, &mut rng);
+    }
+
+    /// Barrier: fold the task delta into the topic totals and snapshot,
+    /// then zero it for the next sweep.
+    pub fn merge_delta(fx: &mut TaskFixture) {
+        for t in 0..fx.h.k {
+            let v = fx.counts.topic[t] as i64 + fx.delta[t];
+            assert!(v >= 0, "topic total went negative");
+            fx.counts.topic[t] = v as u32;
+            fx.snapshot[t] = v as u32;
+            fx.delta[t] = 0;
+        }
+    }
+
+    /// Empirical conditional of the fixture's first token under a
+    /// kernel: rebuild the same fixture state and resample that single
+    /// token `runs` times with fresh RNG streams from `seed0`. All
+    /// kernels are exact for a first-touch token (fresh sparse lists /
+    /// fresh alias table), so the histograms must agree up to
+    /// Monte-Carlo error.
+    pub fn one_token_distribution(
+        kernel: &mut dyn Kernel,
+        k: usize,
+        runs: u64,
+        seed0: u64,
+    ) -> Vec<f64> {
+        let mut hist = vec![0usize; k];
+        for run in 0..runs {
+            let mut fx = task_fixture(k, 3);
+            fx.block.docs.truncate(1);
+            fx.block.words.truncate(1);
+            fx.block.z.truncate(1);
+            run_kernel(&mut fx, kernel, seed0 + run);
+            hist[fx.block.z[0] as usize] += 1;
+        }
+        hist.iter().map(|&c| c as f64 / runs as f64).collect()
+    }
+
+    /// `(purity, argmax topic)` of document `j`'s topic counts — the
+    /// planted-structure concentration metric.
+    pub fn doc_purity(fx: &TaskFixture, j: usize) -> (f64, Option<usize>) {
+        let row = fx.counts.doc_row(j);
+        let total: f32 = row.iter().sum();
+        let max = row.iter().fold(0.0f32, |a, &b| a.max(b));
+        (max as f64 / total as f64, row.iter().position(|&c| c == max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_cli_spellings() {
+        assert_eq!(KernelKind::parse("dense"), Some(KernelKind::Dense));
+        assert_eq!(KernelKind::parse("sparse"), Some(KernelKind::Sparse));
+        assert_eq!(KernelKind::parse("sparse-lda"), Some(KernelKind::Sparse));
+        assert_eq!(KernelKind::parse("alias"), Some(KernelKind::Alias));
+        assert_eq!(KernelKind::parse("gpu"), None);
+        assert_eq!(KernelKind::Sparse.name(), "sparse");
+        for kind in KernelKind::all() {
+            assert_eq!(kind.build().kind(), kind);
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn nz_cache_builds_and_maintains_lists() {
+        let mut cache = NzCache::default();
+        cache.begin_task(2);
+        let row = [0.0f32, 2.0, 0.0, 1.0];
+        cache.ensure(1, &row);
+        assert_eq!(cache.list(1), &[1, 3]);
+        // Incremental maintenance.
+        cache.remove(1, 3);
+        assert_eq!(cache.list(1), &[1]);
+        cache.insert(1, 2);
+        assert_eq!(cache.list(1), &[1, 2]);
+        // A repeated ensure within the same task is a no-op (the list is
+        // authoritative, not the passed row).
+        cache.ensure(1, &row);
+        assert_eq!(cache.list(1), &[1, 2]);
+        // A new task invalidates and rebuilds from the row.
+        cache.begin_task(2);
+        cache.ensure(1, &row);
+        assert_eq!(cache.list(1), &[1, 3]);
+    }
+}

@@ -20,6 +20,10 @@
 //!   Yan-et-al random-shuffle **baseline**, plus the `η` metric.
 //! * [`gibbs`] — collapsed Gibbs sampling for LDA (serial reference and
 //!   the per-partition kernel used by the parallel engine).
+//! * [`kernel`] — pluggable per-partition sampling kernels behind the
+//!   `Kernel` trait: the dense O(K) scan, the SparseLDA s/r/q bucket
+//!   decomposition, and the alias-table sampler with MH staleness
+//!   correction (see `docs/kernels.md`).
 //! * [`scheduler`] — the diagonal-epoch plan, a worker pool, and the
 //!   epoch-cost model.
 //! * [`bot`] — Bag of Timestamps (Masada et al. 2009): the LDA extension
@@ -57,6 +61,7 @@ pub mod bot;
 pub mod coordinator;
 pub mod corpus;
 pub mod gibbs;
+pub mod kernel;
 pub mod partition;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -9,11 +9,12 @@
 //!                  [--topics K] [--iters N] [--eval-every N] [--xla]
 //!                  [--mode sequential|threaded|pooled] [--json FILE]
 //!                  [--schedule diagonal|packed] [--workers W]
-//!                  [--grid-factor G]
+//!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
 //!                  [--schedule diagonal|packed] [--workers W]
-//!                  [--grid-factor G] [--timeline]
+//!                  [--grid-factor G] [--kernel dense|sparse|alias]
+//!                  [--timeline]
 //! pplda artifacts-check
 //! ```
 
@@ -23,6 +24,7 @@ use pplda::coordinator::{train_bot, train_lda, Backend, TrainConfig};
 use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
 use pplda::corpus::{uci, BagOfWords};
+use pplda::kernel::KernelKind;
 use pplda::partition::{self, Algorithm};
 #[cfg(feature = "xla")]
 use pplda::runtime::executor::Artifacts;
@@ -66,6 +68,11 @@ sweeps on W executor workers; --schedule packed --grid-factor G
 over-decomposes the partition grid to P = G*W and LPT-packs each
 diagonal onto the workers (see docs/scheduling.md). The default
 --schedule diagonal keeps the legacy P == W coupling.
+
+kernels (train/train-bot): --kernel dense|sparse|alias selects the
+per-token sampling kernel (see docs/kernels.md). dense is the O(K)
+reference; sparse (SparseLDA s/r/q buckets) and alias (alias tables +
+MH correction) amortize to O(k_doc + k_word) per token.
 ";
 
 fn profile(args: &Args) -> Profile {
@@ -121,6 +128,15 @@ fn schedule_of(args: &Args, default_workers: usize) -> (ScheduleKind, usize) {
     let workers = args.get::<usize>("workers", default_workers);
     assert!(workers >= 1, "--workers must be >= 1");
     (kind, workers)
+}
+
+/// Kernel selection: `--kernel dense|sparse|alias` (default dense).
+fn kernel_of(args: &Args) -> KernelKind {
+    match args.get_str("kernel") {
+        Some(s) => KernelKind::parse(s)
+            .unwrap_or_else(|| panic!("unknown kernel {s:?} (dense|sparse|alias)")),
+        None => KernelKind::Dense,
+    }
 }
 
 fn algo_of(name: &str, restarts: usize) -> Algorithm {
@@ -195,12 +211,14 @@ fn cmd_train(args: &Args) -> ExitCode {
         mode: exec_mode(args),
         workers,
         schedule: kind,
+        kernel: kernel_of(args),
         ..Default::default()
     };
 
     let plan = partition::partition(&bow, grid, algo, cfg.seed);
     println!(
-        "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | schedule {} workers={}",
+        "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | schedule {} workers={} \
+         kernel={}",
         bow.num_docs(),
         bow.num_words(),
         bow.num_tokens(),
@@ -209,6 +227,7 @@ fn cmd_train(args: &Args) -> ExitCode {
         plan.eta,
         kind.label(),
         workers,
+        cfg.kernel.name(),
     );
     let report = train_lda(&bow, &plan, &cfg);
     println!(
@@ -257,6 +276,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         mode: exec_mode(args),
         workers,
         schedule: kind,
+        kernel: kernel_of(args),
         ..Default::default()
     };
 
@@ -271,11 +291,12 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     );
     let report = train_bot(&tc, p, algo, &cfg);
     println!(
-        "P={} workers={} schedule={} perplexity={:.4} eta_dw={:.4} eta_dts={:.4} \
+        "P={} workers={} schedule={} kernel={} perplexity={:.4} eta_dw={:.4} eta_dts={:.4} \
          speedup≈{:.2} ({:.1}s)",
         report.p,
         report.workers,
         report.schedule,
+        report.kernel,
         report.final_perplexity,
         report.eta_dw,
         report.eta_dts,

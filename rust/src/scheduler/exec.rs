@@ -8,6 +8,7 @@ use crate::gibbs::counts::LdaCounts;
 use crate::gibbs::perplexity;
 use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
+use crate::kernel::KernelKind;
 use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
@@ -95,6 +96,8 @@ pub struct ParallelLda {
     costs: CostMatrix,
     /// Grid → worker mapping executed by [`Self::sweep`].
     schedule: Schedule,
+    /// Sampling kernel the executors run (see [`crate::kernel`]).
+    kernel: KernelKind,
     seed: u64,
     sweeps_done: usize,
     /// Executor state; the persistent worker pool (if `Pooled` mode is
@@ -169,6 +172,7 @@ impl ParallelLda {
             costs: plan.costs.clone(),
             engines: EngineCache::new(schedule.workers),
             schedule,
+            kernel: KernelKind::Dense,
             seed,
             sweeps_done: 0,
             snapshot: vec![0; k],
@@ -188,6 +192,20 @@ impl ParallelLda {
     /// The schedule executing this trainer's sweeps.
     pub fn schedule(&self) -> &Schedule {
         &self.schedule
+    }
+
+    /// Select the sampling kernel for subsequent sweeps. Each kernel's
+    /// chain is individually deterministic across executors, schedules,
+    /// and worker counts, but different kernels consume RNG differently,
+    /// so switching kernels changes the chain (not its stationary
+    /// distribution).
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
+    }
+
+    /// The kernel running this trainer's sweeps.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// Worker slots the current schedule runs on.
@@ -233,6 +251,7 @@ impl ParallelLda {
                 h: self.h,
                 seed: self.seed ^ 0x50AB_71C5,
                 sweep: sweep_no,
+                kernel: self.kernel,
             };
             let tasks = EpochTasks {
                 blocks: diag,
@@ -250,6 +269,20 @@ impl ParallelLda {
         }
 
         self.sweeps_done += 1;
+        // Debug builds (unit + integration test runs) audit the full
+        // count/assignment invariant after every sweep, so a kernel
+        // count-delta bug fails loudly at the sweep that introduced it
+        // instead of surfacing as a perplexity drift much later.
+        #[cfg(debug_assertions)]
+        {
+            let blocks: Vec<&TokenBlock> = self.blocks.iter().flatten().collect();
+            if let Err(e) = self.counts.check_consistency(&blocks) {
+                panic!(
+                    "kernel {} corrupted LDA counts on sweep {sweep_no}: {e}",
+                    self.kernel.name()
+                );
+            }
+        }
         stats
     }
 
@@ -499,6 +532,75 @@ mod tests {
             assert_eq!(lda.counts.total(), bow.num_tokens());
             assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
         }
+    }
+
+    #[test]
+    fn every_kernel_is_bit_identical_across_modes_and_workers() {
+        // The kernel determinism contract at trainer level: for each
+        // kernel, Sequential diagonal is the oracle; Threaded and Pooled
+        // under packed schedules at W ∈ {1, 2, 4} must match bit for
+        // bit.
+        for kernel in KernelKind::all() {
+            let (_bow, mut oracle) = setup(4, 71);
+            oracle.set_kernel(kernel);
+            for _ in 0..3 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                    let (_b, mut lda) = setup_scheduled(4, 71, kind, workers);
+                    lda.set_kernel(kernel);
+                    assert_eq!(lda.kernel(), kernel);
+                    for _ in 0..3 {
+                        lda.sweep(mode);
+                    }
+                    assert_eq!(
+                        lda.counts.doc_topic,
+                        oracle.counts.doc_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        lda.counts.word_topic,
+                        oracle.counts.word_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        lda.counts.topic,
+                        oracle.counts.topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_and_alias_training_reduces_perplexity() {
+        for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+            let (bow, mut lda) = setup(4, 72);
+            lda.set_kernel(kernel);
+            let p0 = lda.perplexity(&bow);
+            let curve = lda.train(&bow, 30, 30, ExecMode::Sequential);
+            let p_end = curve.last().unwrap().1;
+            assert!(p_end < p0 * 0.9, "{kernel:?}: {p0} → {p_end}");
+        }
+    }
+
+    #[test]
+    fn kernel_switch_mid_training_keeps_invariants() {
+        let (bow, mut lda) = setup(3, 73);
+        for kernel in [
+            KernelKind::Dense,
+            KernelKind::Sparse,
+            KernelKind::Alias,
+            KernelKind::Dense,
+        ] {
+            lda.set_kernel(kernel);
+            lda.sweep(ExecMode::Pooled);
+        }
+        assert_eq!(lda.counts.total(), bow.num_tokens());
+        assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok());
     }
 
     #[test]

@@ -26,8 +26,9 @@
 //!   worker slot), kept as a baseline for the executor-overhead
 //!   benchmark.
 //! * [`WorkerPool`] — the persistent pool: `W` dedicated workers created
-//!   once per trainer, each owning long-lived scratch (`probs`, `inv`),
-//!   driven by a scatter/gather barrier over channels.
+//!   once per trainer, each owning a long-lived sampling kernel (and
+//!   thereby its scratch), driven by a scatter/gather barrier over
+//!   channels.
 //!
 //! # Barrier protocol
 //!
@@ -39,7 +40,8 @@
 //!    array plus that worker's index list into it.
 //! 2. **Sample** — the worker walks its list; for each task it zeroes the
 //!    task's delta slot, derives the task's RNG stream, and runs the
-//!    partition kernel with its persistent scratch buffers.
+//!    selected sampling kernel ([`crate::kernel`]) — a long-lived,
+//!    worker-owned instance whose scratch persists across epochs.
 //! 3. **Gather** — the coordinator blocks until it has received exactly
 //!    one completion per submitted job. Only then does it merge deltas
 //!    and advance, so every raw pointer inside a `Job` outlives its use.
@@ -58,8 +60,9 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use crate::gibbs::sampler::{self, Hyper};
+use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
+use crate::kernel::{Kernel, KernelKind, TaskCtx};
 use crate::scheduler::exec::ExecMode;
 use crate::scheduler::shared::SharedRows;
 use crate::util::rng::Rng;
@@ -87,6 +90,11 @@ pub struct EpochSpec<'a> {
     /// Trainer/phase-salted RNG seed (see [`task_rng`]).
     pub seed: u64,
     pub sweep: usize,
+    /// Which sampling kernel runs the per-token hot path (see
+    /// [`crate::kernel`]). Every executor worker owns a long-lived
+    /// kernel instance of this kind, rebuilt only when the kind
+    /// changes, so kernel scratch persists across epochs and sweeps.
+    pub kernel: KernelKind,
 }
 
 /// One epoch's work: the diagonal's token blocks plus the schedule's
@@ -178,47 +186,53 @@ fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
 }
 
 /// The task body shared by all executors: zero the task's delta slot,
-/// derive the partition's RNG stream, run the partition kernel with the
-/// given scratch.
+/// derive the partition's RNG stream, hand the task to the sampling
+/// kernel. The kernel owns its scratch (see [`crate::kernel`]); the
+/// diagonal non-conflict invariant makes the shared row access
+/// race-free.
 fn run_task(
     spec: &EpochSpec<'_>,
     partition: u64,
     block: &mut TokenBlock,
     delta: &mut [i64],
-    probs: &mut Vec<f32>,
-    inv: &mut Vec<f32>,
+    kernel: &mut dyn Kernel,
 ) {
     debug_assert_eq!(delta.len(), spec.h.k);
     delta.fill(0);
     let mut rng = task_rng(spec.seed, spec.sweep, partition);
-    sampler::sweep_partition(
-        block,
-        // SAFETY: the diagonal non-conflict invariant — this partition's
-        // tokens all lie in one `(J_m, V_n)` cell of the running
-        // diagonal, so its doc rows and emission rows are disjoint from
-        // every other task's for the duration of the epoch (PartitionMap
-        // construction; any worker grouping of disjoint tasks stays
-        // disjoint).
-        |d| unsafe { spec.doc.row_ptr(d) },
-        |w| unsafe { spec.emit.row_ptr(w) },
-        spec.snapshot,
-        delta,
-        &spec.h,
-        &mut rng,
-        probs,
-        inv,
-    );
+    let ctx = TaskCtx {
+        doc: spec.doc,
+        emit: spec.emit,
+        snapshot: spec.snapshot,
+        h: spec.h,
+    };
+    kernel.sweep_task(&ctx, block, delta, &mut rng);
+}
+
+/// A worker's long-lived kernel instance: rebuilt only when the
+/// requested kind changes (e.g. the trainer switched kernels between
+/// sweeps), so kernel scratch persists across epochs and sweeps and the
+/// steady-state hot path performs no per-epoch allocation.
+#[derive(Default)]
+struct KernelSlot(Option<Box<dyn Kernel>>);
+
+impl KernelSlot {
+    fn get(&mut self, kind: KernelKind) -> &mut dyn Kernel {
+        if self.0.as_ref().map(|k| k.kind()) != Some(kind) {
+            self.0 = Some(kind.build());
+        }
+        self.0.as_mut().unwrap().as_mut()
+    }
 }
 
 /// In-order execution on the calling thread. The determinism oracle for
 /// the parallel modes, and the zero-overhead mode for single-core boxes;
-/// owns its scratch so repeated sweeps allocate nothing. Runs tasks in
-/// block order — equivalent to any worker assignment, since task RNG
-/// streams and delta slots are per-partition.
+/// owns its kernel (and thereby its scratch) so repeated sweeps allocate
+/// nothing. Runs tasks in block order — equivalent to any worker
+/// assignment, since task RNG streams and delta slots are per-partition.
 #[derive(Default)]
 pub struct SequentialExec {
-    probs: Vec<f32>,
-    inv: Vec<f32>,
+    kernel: KernelSlot,
 }
 
 impl Executor for SequentialExec {
@@ -229,9 +243,10 @@ impl Executor for SequentialExec {
         deltas: &mut [Vec<i64>],
     ) {
         check_tasks(&tasks, deltas);
+        let kernel = self.kernel.get(spec.kernel);
         let pairs = tasks.blocks.iter_mut().zip(deltas.iter_mut());
         for (i, (block, delta)) in pairs.enumerate() {
-            run_task(spec, tasks.ids[i], block, delta, &mut self.probs, &mut self.inv);
+            run_task(spec, tasks.ids[i], block, delta, &mut *kernel);
         }
     }
 }
@@ -246,8 +261,9 @@ struct TaskArrays {
 unsafe impl Send for TaskArrays {}
 
 /// Scoped execution: one OS thread *spawned* per busy worker slot per
-/// epoch, with per-spawn scratch allocation. Kept as the baseline the
-/// executor-overhead benchmark compares [`WorkerPool`] against.
+/// epoch, with per-spawn kernel (scratch) construction. Kept as the
+/// baseline the executor-overhead benchmark compares [`WorkerPool`]
+/// against.
 #[derive(Default)]
 pub struct ThreadedExec;
 
@@ -269,8 +285,7 @@ impl Executor for ThreadedExec {
                     deltas: deltas_ptr,
                 };
                 s.spawn(move || {
-                    let mut probs = Vec::new();
-                    let mut inv = Vec::new();
+                    let mut kernel = spec.kernel.build();
                     for &i in list {
                         let i = i as usize;
                         // SAFETY: `check_tasks` invariant — index
@@ -279,7 +294,7 @@ impl Executor for ThreadedExec {
                         // scope joins.
                         let block = unsafe { &mut *arrays.blocks.add(i) };
                         let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
-                        run_task(spec, ids[i], block, delta, &mut probs, &mut inv);
+                        run_task(spec, ids[i], block, delta, kernel.as_mut());
                     }
                 });
             }
@@ -307,6 +322,7 @@ struct Job {
     h: Hyper,
     seed: u64,
     sweep: usize,
+    kernel: KernelKind,
     worker: usize,
 }
 
@@ -318,9 +334,10 @@ struct Job {
 unsafe impl Send for Job {}
 
 fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
-    // Long-lived scratch: sized on first epoch, reused forever after.
-    let mut probs: Vec<f32> = Vec::new();
-    let mut inv: Vec<f32> = Vec::new();
+    // Long-lived kernel (and thereby scratch): built on the first epoch,
+    // reused forever after — rebuilt only if the trainer switches kernel
+    // kinds between sweeps.
+    let mut kernel = KernelSlot::default();
     while let Ok(job) = rx.recv() {
         let k = job.h.k;
         // Catch panics so a failed debug assertion surfaces as a
@@ -339,13 +356,15 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
                 h: job.h,
                 seed: job.seed,
                 sweep: job.sweep,
+                kernel: job.kernel,
             };
+            let kernel = kernel.get(job.kernel);
             for &i in assign {
                 let i = i as usize;
                 let block = unsafe { &mut *job.blocks.add(i) };
                 let delta = unsafe { (*job.deltas.add(i)).as_mut_slice() };
                 let id = unsafe { *job.ids.add(i) };
-                run_task(&spec, id, block, delta, &mut probs, &mut inv);
+                run_task(&spec, id, block, delta, &mut *kernel);
             }
         }))
         .is_ok();
@@ -440,6 +459,7 @@ impl Executor for WorkerPool {
                 h: spec.h,
                 seed: spec.seed,
                 sweep: spec.sweep,
+                kernel: spec.kernel,
                 worker: w,
             };
             self.senders[w].send(job).expect("pool worker died");
@@ -536,8 +556,9 @@ mod tests {
         (blocks, counts, Hyper::new(k, 0.5, 0.1, 4))
     }
 
-    fn run_assignment(
+    fn run_kernel_assignment(
         mode: ExecMode,
+        kernel: KernelKind,
         epochs: usize,
         assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
         workers: usize,
@@ -557,6 +578,7 @@ mod tests {
                 h,
                 seed: 99,
                 sweep: e,
+                kernel,
             };
             let tasks = EpochTasks {
                 blocks: &mut blocks,
@@ -567,6 +589,15 @@ mod tests {
             merge_deltas(&mut counts.topic, &mut snapshot, &deltas);
         }
         (blocks, counts)
+    }
+
+    fn run_assignment(
+        mode: ExecMode,
+        epochs: usize,
+        assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
+        workers: usize,
+    ) -> (Vec<TokenBlock>, LdaCounts) {
+        run_kernel_assignment(mode, KernelKind::Dense, epochs, assign_of, workers)
     }
 
     fn run_mode(mode: ExecMode, epochs: usize) -> (Vec<TokenBlock>, LdaCounts) {
@@ -589,6 +620,69 @@ mod tests {
         assert_eq!(cs.word_topic, cp.word_topic);
         assert_eq!(cs.topic, cp.topic);
         assert_eq!(cs.topic, ct.topic);
+    }
+
+    #[test]
+    fn all_executors_agree_for_every_kernel() {
+        // The executor bit-identity guarantee is kernel-independent:
+        // for each kernel kind, Sequential/Threaded/Pooled and packed
+        // task lists produce identical assignments and counts.
+        for kernel in KernelKind::all() {
+            let (bs, cs) =
+                run_kernel_assignment(ExecMode::Sequential, kernel, 3, |_| identity_assign(2), 2);
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let (b, c) = run_kernel_assignment(mode, kernel, 3, |_| identity_assign(2), 2);
+                for (x, y) in bs.iter().zip(b.iter()) {
+                    assert_eq!(x.z, y.z, "{:?} {mode:?}", kernel);
+                }
+                assert_eq!(cs.doc_topic, c.doc_topic, "{:?} {mode:?}", kernel);
+                assert_eq!(cs.word_topic, c.word_topic, "{:?} {mode:?}", kernel);
+                assert_eq!(cs.topic, c.topic, "{:?} {mode:?}", kernel);
+            }
+            // Packing both tasks onto one worker changes nothing.
+            let (bp, cp) =
+                run_kernel_assignment(ExecMode::Pooled, kernel, 3, |_| vec![vec![0, 1]], 1);
+            for (x, y) in bs.iter().zip(bp.iter()) {
+                assert_eq!(x.z, y.z, "{:?} packed", kernel);
+            }
+            assert_eq!(cs.topic, cp.topic, "{:?} packed", kernel);
+            let refs: Vec<&TokenBlock> = bp.iter().collect();
+            assert!(cp.check_consistency(&refs).is_ok(), "{:?}", kernel);
+        }
+    }
+
+    #[test]
+    fn kernels_can_be_switched_between_epochs() {
+        // A KernelSlot rebuilds only on kind changes; switching kinds
+        // between epochs must keep counts consistent.
+        let seq = [KernelKind::Dense, KernelKind::Sparse, KernelKind::Alias, KernelKind::Sparse];
+        let k = 4;
+        let (mut blocks, mut counts, h) = diagonal_fixture(k, 19);
+        let ids = [0u64, 1];
+        let assign = identity_assign(2);
+        let mut engines = EngineCache::new(2);
+        let mut deltas = vec![vec![0i64; k]; 2];
+        let mut snapshot = counts.topic.clone();
+        for (e, &kernel) in seq.iter().enumerate() {
+            let spec = EpochSpec {
+                doc: SharedRows::new(&mut counts.doc_topic, k),
+                emit: SharedRows::new(&mut counts.word_topic, k),
+                snapshot: &snapshot,
+                h,
+                seed: 23,
+                sweep: e,
+                kernel,
+            };
+            let tasks = EpochTasks {
+                blocks: &mut blocks,
+                ids: &ids,
+                assign: &assign,
+            };
+            engines.get(ExecMode::Pooled).run_epoch(&spec, tasks, &mut deltas);
+            merge_deltas(&mut counts.topic, &mut snapshot, &deltas);
+        }
+        let refs: Vec<&TokenBlock> = blocks.iter().collect();
+        assert!(counts.check_consistency(&refs).is_ok());
     }
 
     #[test]
@@ -662,6 +756,7 @@ mod tests {
                 h,
                 seed: 1,
                 sweep: e,
+                kernel: KernelKind::Dense,
             };
             let tasks = EpochTasks {
                 blocks: &mut blocks,
@@ -701,6 +796,7 @@ mod tests {
             h,
             seed: 5,
             sweep: 0,
+            kernel: KernelKind::Dense,
         };
         let tasks = EpochTasks {
             blocks: &mut blocks,

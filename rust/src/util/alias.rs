@@ -1,19 +1,35 @@
 //! Walker alias method: O(n) construction, O(1) sampling from a fixed
 //! discrete distribution. Used by the synthetic corpus generator (per-topic
 //! word distributions over vocabularies of 10^5+) where linear-scan
-//! categorical sampling would make corpus generation quadratic.
+//! categorical sampling would make corpus generation quadratic, and by
+//! the alias sampling kernel ([`crate::kernel::AliasKernel`]) for O(1)
+//! stale word-proposal draws.
 
 use crate::util::rng::Rng;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct AliasTable {
     prob: Vec<f64>,
     alias: Vec<u32>,
+    /// Construction worklists, kept so [`Self::rebuild`] is
+    /// allocation-free once warmed.
+    small: Vec<u32>,
+    large: Vec<u32>,
 }
 
 impl AliasTable {
     /// Build from unnormalized non-negative weights (at least one > 0).
     pub fn new(weights: &[f64]) -> Self {
+        let mut t = Self::default();
+        t.rebuild(weights);
+        t
+    }
+
+    /// Rebuild in place from new weights, reusing the `prob`/`alias`
+    /// buffers and the construction worklists — long-lived tables
+    /// (pooled per-task slots in the alias kernel) refresh without
+    /// allocating once warmed.
+    pub fn rebuild(&mut self, weights: &[f64]) {
         let n = weights.len();
         assert!(n > 0, "AliasTable over empty support");
         let total: f64 = weights.iter().sum();
@@ -22,11 +38,13 @@ impl AliasTable {
             "AliasTable needs positive finite total weight"
         );
         let scale = n as f64 / total;
-        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
-        let mut alias = vec![0u32; n];
-
-        let mut small: Vec<u32> = Vec::with_capacity(n);
-        let mut large: Vec<u32> = Vec::with_capacity(n);
+        self.prob.clear();
+        self.prob.extend(weights.iter().map(|w| w * scale));
+        self.alias.clear();
+        self.alias.resize(n, 0);
+        let Self { prob, alias, small, large } = self;
+        small.clear();
+        large.clear();
         for (i, &p) in prob.iter().enumerate() {
             if p < 1.0 {
                 small.push(i as u32);
@@ -49,13 +67,32 @@ impl AliasTable {
             prob[i as usize] = 1.0;
             alias[i as usize] = i;
         }
-        Self { prob, alias }
     }
 
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let i = rng.gen_range(self.prob.len());
         if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// Sample from a single externally-supplied uniform `u ∈ [0, 1)`:
+    /// the integer part of `u·n` picks the bucket, the fractional part
+    /// serves as the bucket coin. Lets callers that already hold a
+    /// uniform (e.g. the alias kernel, which splits one draw across its
+    /// proposal mixture) sample without consuming more RNG state.
+    /// Values at or above 1.0 (possible from upstream fp rounding)
+    /// clamp to the last bucket.
+    #[inline]
+    pub fn sample_with(&self, u: f64) -> usize {
+        let n = self.prob.len();
+        let scaled = u * n as f64;
+        let i = (scaled as usize).min(n - 1);
+        let frac = scaled - i as f64;
+        if frac < self.prob[i] {
             i
         } else {
             self.alias[i] as usize
@@ -85,6 +122,16 @@ mod tests {
         counts.iter().map(|&c| c as f64 / draws as f64).collect()
     }
 
+    fn empirical_with(weights: &[f64], draws: usize, seed: u64) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[table.sample_with(rng.f64())] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
     #[test]
     fn matches_target_distribution() {
         let w = [1.0, 2.0, 3.0, 4.0];
@@ -96,9 +143,44 @@ mod tests {
     }
 
     #[test]
+    fn sample_with_matches_skewed_distribution() {
+        // The single-uniform path must reproduce a strongly skewed
+        // target: two decades of dynamic range across eight buckets.
+        let w = [100.0, 0.5, 30.0, 1.0, 8.0, 0.1, 55.0, 4.0];
+        let total: f64 = w.iter().sum();
+        let emp = empirical_with(&w, 400_000, 17);
+        for (i, (e, t)) in emp.iter().zip(w.iter().map(|x| x / total)).enumerate() {
+            assert!((e - t).abs() < 0.005, "bucket {i}: emp={e} target={t}");
+        }
+    }
+
+    #[test]
+    fn sample_with_clamps_unit_input() {
+        let table = AliasTable::new(&[1.0, 2.0]);
+        // u == 1.0 (upstream rounding) must not index out of bounds.
+        let t = table.sample_with(1.0);
+        assert!(t < 2);
+    }
+
+    #[test]
+    fn rebuild_reuses_table_and_tracks_new_weights() {
+        let mut table = AliasTable::new(&[1.0, 1.0, 1.0, 1.0]);
+        table.rebuild(&[0.0, 10.0, 0.0, 0.0]);
+        assert_eq!(table.len(), 4);
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            assert_eq!(table.sample(&mut rng), 1);
+            assert_eq!(table.sample_with(rng.f64()), 1);
+        }
+    }
+
+    #[test]
     fn zero_weight_never_drawn() {
         let w = [0.0, 1.0, 0.0, 1.0];
         let emp = empirical(&w, 50_000, 7);
+        assert_eq!(emp[0], 0.0);
+        assert_eq!(emp[2], 0.0);
+        let emp = empirical_with(&w, 50_000, 8);
         assert_eq!(emp[0], 0.0);
         assert_eq!(emp[2], 0.0);
     }
@@ -109,6 +191,7 @@ mod tests {
         let mut rng = Rng::new(1);
         for _ in 0..100 {
             assert_eq!(table.sample(&mut rng), 0);
+            assert_eq!(table.sample_with(rng.f64()), 0);
         }
     }
 

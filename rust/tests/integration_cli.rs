@@ -138,6 +138,40 @@ fn train_bot_packed_schedule_via_cli() {
 }
 
 #[test]
+fn train_sparse_and_alias_kernels_via_cli() {
+    for kernel in ["sparse", "alias"] {
+        let (out, _, ok) = pplda(&[
+            "train", "--profile", "tiny", "--procs", "2", "--topics", "4",
+            "--iters", "2", "--restarts", "2", "--mode", "pooled",
+            "--kernel", kernel,
+        ]);
+        assert!(ok, "{kernel}: {out}");
+        assert!(out.contains(&format!("kernel={kernel}")), "{out}");
+        assert!(out.contains("final perplexity"), "{out}");
+    }
+}
+
+#[test]
+fn train_bot_kernel_via_cli() {
+    let (out, _, ok) = pplda(&[
+        "train-bot", "--profile", "tiny", "--procs", "2", "--topics", "4",
+        "--iters", "2", "--restarts", "2", "--kernel", "sparse",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("kernel=sparse"), "{out}");
+}
+
+#[test]
+fn unknown_kernel_fails() {
+    let (_, err, ok) = pplda(&[
+        "train", "--profile", "tiny", "--topics", "4", "--iters", "1",
+        "--kernel", "gpu",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown kernel"), "{err}");
+}
+
+#[test]
 fn grid_factor_without_packed_schedule_fails() {
     let (_, err, ok) = pplda(&[
         "train", "--profile", "tiny", "--schedule", "diagonal", "--grid-factor", "4",

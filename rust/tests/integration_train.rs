@@ -4,6 +4,7 @@
 use pplda::coordinator::{train_bot, train_lda, TrainConfig};
 use pplda::corpus::synthetic::{generate, generate_timestamped, Profile, TimeProfile};
 use pplda::gibbs::serial::SerialLda;
+use pplda::kernel::KernelKind;
 use pplda::partition::{partition, Algorithm};
 use pplda::scheduler::exec::{ExecMode, ParallelLda};
 use pplda::scheduler::schedule::ScheduleKind;
@@ -169,6 +170,97 @@ fn packed_bot_matches_diagonal_through_driver() {
     let packed = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
     assert_eq!(diag.final_perplexity, packed.final_perplexity);
     assert_eq!(packed.workers, 2);
+}
+
+#[test]
+fn sparse_and_alias_kernels_bit_identical_across_modes_and_workers() {
+    // The kernel subsystem's end-to-end determinism claim (`--kernel
+    // sparse|alias` equivalent): for each non-dense kernel, the
+    // Sequential diagonal run is the oracle, and every (mode, W)
+    // combination over the same grid-4 plan — Threaded and Pooled,
+    // packed onto W ∈ {1, 2, 4} workers — reproduces its perplexity
+    // curve bit for bit.
+    let bow = generate(&small_profile(), 111);
+    let plan = partition(&bow, 4, Algorithm::A3 { restarts: 3 }, 11);
+    for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+        let mut cfg = TrainConfig::quick(8, 4);
+        cfg.eval_every = 2;
+        cfg.kernel = kernel;
+        let oracle = train_lda(&bow, &plan, &cfg);
+        assert_eq!(oracle.kernel, kernel.name());
+        for workers in [1usize, 2, 4] {
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let mut c = cfg;
+                c.schedule = ScheduleKind::Packed { grid_factor: 4 / workers };
+                c.workers = workers;
+                c.mode = mode;
+                let r = train_lda(&bow, &plan, &c);
+                assert_eq!(
+                    oracle.final_perplexity,
+                    r.final_perplexity,
+                    "{kernel:?} {mode:?} W={workers}"
+                );
+                assert_eq!(oracle.curve, r.curve, "{kernel:?} {mode:?} W={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_and_alias_bot_bit_identical_across_modes_and_workers() {
+    // Same determinism matrix for BoT (both phases, timestamp factor
+    // folded into the phase hyperparameters).
+    let mut profile = Profile::tiny();
+    profile.time = Some(TimeProfile {
+        first_year: 2000,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 4,
+    });
+    let tc = generate_timestamped(&profile, 113);
+    for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+        let mut cfg = TrainConfig::quick(8, 3);
+        cfg.kernel = kernel;
+        let oracle = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+        assert_eq!(oracle.kernel, kernel.name());
+        for workers in [1usize, 2, 4] {
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let mut c = cfg;
+                c.schedule = ScheduleKind::Packed { grid_factor: 4 / workers };
+                c.workers = workers;
+                c.mode = mode;
+                let r = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &c);
+                assert_eq!(
+                    oracle.final_perplexity,
+                    r.final_perplexity,
+                    "{kernel:?} {mode:?} W={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_and_alias_converge_with_dense_on_nips_like() {
+    // Statistical validation on the nips-like synthetic corpus: the
+    // sparse buckets and the MH-corrected alias sampler target the same
+    // posterior as the dense reference, so trained perplexities agree
+    // within tolerance (the chains differ bit-wise by construction).
+    let bow = generate(&small_profile(), 112);
+    let plan = partition(&bow, 5, Algorithm::A3 { restarts: 5 }, 12);
+    let mut cfg = TrainConfig::quick(16, 25);
+    let dense = train_lda(&bow, &plan, &cfg);
+    for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+        cfg.kernel = kernel;
+        let r = train_lda(&bow, &plan, &cfg);
+        let rel = (r.final_perplexity - dense.final_perplexity).abs() / dense.final_perplexity;
+        assert!(
+            rel < 0.05,
+            "{kernel:?}: dense {} vs {} (rel {rel:.4})",
+            dense.final_perplexity,
+            r.final_perplexity
+        );
+    }
 }
 
 #[test]
