@@ -13,7 +13,8 @@
 use pplda::bench::{Bench, BenchConfig};
 use pplda::corpus::synthetic::{generate, Profile};
 use pplda::gibbs::serial::SerialLda;
-use pplda::partition::{partition, Algorithm};
+use pplda::partition::{partition_threaded, Algorithm};
+use pplda::util::json::Json;
 use pplda::util::tsv::f;
 
 fn main() {
@@ -34,27 +35,32 @@ fn main() {
             bow.num_tokens()
         );
 
+        // The table measures the *serial* draw loop (threads = 1): the
+        // paper's runtime claims are about total draw work, which the
+        // thread fan-out below divides but does not change.
         let mut bench = Bench::new(BenchConfig::heavy());
         bench.run("A1 (deterministic)", || {
-            pplda::bench::black_box(partition(&bow, p, Algorithm::A1, seed));
+            pplda::bench::black_box(partition_threaded(&bow, p, Algorithm::A1, seed, 1));
         });
         bench.run("A2 (deterministic)", || {
-            pplda::bench::black_box(partition(&bow, p, Algorithm::A2, seed));
+            pplda::bench::black_box(partition_threaded(&bow, p, Algorithm::A2, seed, 1));
         });
         bench.run(&format!("A3 ({restarts} restarts)"), || {
-            pplda::bench::black_box(partition(
+            pplda::bench::black_box(partition_threaded(
                 &bow,
                 p,
                 Algorithm::A3 { restarts },
                 seed,
+                1,
             ));
         });
         bench.run(&format!("baseline ({restarts} restarts)"), || {
-            pplda::bench::black_box(partition(
+            pplda::bench::black_box(partition_threaded(
                 &bow,
                 p,
                 Algorithm::Baseline { restarts },
                 seed,
+                1,
             ));
         });
 
@@ -100,5 +106,68 @@ fn main() {
         }
         println!();
     }
+
+    parallel_draws(seed, restarts, fast);
     println!("runtime shape checks passed");
+}
+
+/// Satellite payoff: the A3/baseline restart loops are embarrassingly
+/// parallel (each draw's RNG stream is keyed by its index), so
+/// `partition` fans them out across threads — with bit-identical plans.
+/// Measures serial (threads = 1) vs fanned-out wallclock on NIPS and
+/// emits a `BENCH_JSON parallel_draws` line for the perf trajectory.
+fn parallel_draws(seed: u64, restarts: usize, fast: bool) {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    let bow = generate(&Profile::nips_like(), seed);
+    let p = 30;
+    println!("=== parallel plan draws: NIPS, P={p}, {restarts} restarts, {threads} threads ===");
+    let mut rows = Vec::new();
+    for (name, algo) in [
+        ("A3", Algorithm::A3 { restarts }),
+        ("baseline", Algorithm::Baseline { restarts }),
+    ] {
+        let t0 = std::time::Instant::now();
+        let serial_plan = partition_threaded(&bow, p, algo, seed, 1);
+        let serial_secs = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let par_plan = partition_threaded(&bow, p, algo, seed, threads);
+        let par_secs = t1.elapsed().as_secs_f64();
+        assert_eq!(
+            serial_plan.doc_group, par_plan.doc_group,
+            "{name}: fan-out changed the chosen plan"
+        );
+        assert_eq!(serial_plan.word_group, par_plan.word_group, "{name}");
+        println!(
+            "{name}: serial {serial_secs:.3}s, {threads} threads {par_secs:.3}s ({}x)",
+            f(serial_secs / par_secs.max(1e-12), 2)
+        );
+        // Wallclock acceptance only where it is meaningful: several
+        // cores, full restart budget (FAST mode's 10 draws are noise).
+        if !fast && threads >= 2 {
+            assert!(
+                par_secs < serial_secs,
+                "{name}: fan-out failed to beat the serial draw loop \
+                 ({par_secs:.3}s vs {serial_secs:.3}s)"
+            );
+        }
+        let mut j = Json::obj();
+        j.set("algo", name)
+            .set("restarts", restarts)
+            .set("threads", threads)
+            .set("serial_secs", serial_secs)
+            .set("parallel_secs", par_secs)
+            .set("eta", par_plan.eta);
+        rows.push(j);
+    }
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "parallel_draws")
+        .set("corpus", "nips-like")
+        .set("p", p)
+        .set("results", rows);
+    println!("BENCH_JSON {}", summary.to_string());
+    println!();
 }

@@ -7,9 +7,11 @@
 //! paper's speedup narrative on hardware with fewer cores than P.
 
 use pplda::corpus::synthetic::{generate, Profile};
+use pplda::kernel::KernelKind;
 use pplda::partition::eta::EtaComparison;
 use pplda::partition::{partition, Algorithm};
-use pplda::scheduler::cost_model::SpeedupReport;
+use pplda::scheduler::adaptive::{BalanceMode, Measured};
+use pplda::scheduler::cost_model::{MeasuredReport, SpeedupReport};
 use pplda::scheduler::exec::{ExecMode, ParallelLda};
 use pplda::scheduler::schedule::{Schedule, ScheduleKind};
 use pplda::util::json::Json;
@@ -83,6 +85,153 @@ fn main() {
 
     schedule_eta_sweep(seed, fast);
     executor_overhead(seed, fast);
+    balance_comparison(seed, fast);
+}
+
+/// Tentpole payoff: static token-LPT vs adaptive measured-cost
+/// re-packing vs work stealing, under the *sparse* kernel on the skewed
+/// nips-like corpus — exactly the regime where per-token cost is
+/// non-uniform (it tracks `k_doc + k_word`, not 1) and token-count
+/// packing mis-balances real wallclock.
+///
+/// Emits a `BENCH_JSON balance_modes` line with per-mode sweep wallclock
+/// and measured-η next to token-η, and asserts two things:
+///
+/// 1. (deterministic, runs in CI FAST mode) Re-packing against the
+///    measured per-partition cost field can only shrink the modeled
+///    critical path relative to the token packing evaluated on the same
+///    field — the static-vs-adaptive η smoke assert.
+/// 2. (slow mode only, wallclock) adaptive or stealing beats static on
+///    measured sweep η — the paper-level claim that runtime balancing
+///    recovers what the token proxy loses.
+fn balance_comparison(seed: u64, fast: bool) {
+    let w = 4usize;
+    let g = 4usize;
+    let grid = g * w;
+    let topics = if fast { 16 } else { 64 };
+    let sweeps = if fast { 3 } else { 10 };
+    let restarts = if fast { 10 } else { 50 };
+    let bow = generate(&Profile::nips_like(), seed);
+    let plan = partition(&bow, grid, Algorithm::A3 { restarts }, seed);
+    println!(
+        "\nbalance comparison: D={} W={} N={} K={topics} kernel=sparse grid={grid} workers={w} \
+         ({sweeps} sweeps/mode)",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    let mut table = Table::new(["balance", "sweep_ms", "measured_eta", "token_eta"]);
+    let mut rows = Vec::new();
+    let mut measured: Vec<(&'static str, f64)> = Vec::new();
+    let mut static_stats = Vec::new();
+    for balance in [BalanceMode::Static, BalanceMode::Adaptive, BalanceMode::Steal] {
+        let mut lda = ParallelLda::init_scheduled(
+            &bow,
+            &plan,
+            topics,
+            0.5,
+            0.1,
+            seed,
+            ScheduleKind::Packed { grid_factor: g },
+            w,
+        );
+        lda.set_kernel(KernelKind::Sparse);
+        lda.set_balance(balance);
+        // Warm: pool + kernel scratch; gives Adaptive its first
+        // measurements to repack from.
+        lda.sweep(ExecMode::Pooled);
+        let t = std::time::Instant::now();
+        let mut stats = Vec::with_capacity(sweeps);
+        for _ in 0..sweeps {
+            stats.push(lda.sweep(ExecMode::Pooled));
+        }
+        let sweep_secs = t.elapsed().as_secs_f64() / sweeps as f64;
+        let mr = MeasuredReport::of_sweeps(stats.iter());
+        let token_eta = SpeedupReport::of_stats(stats.last().unwrap()).eta;
+        table.row([
+            balance.name().to_string(),
+            format!("{:.3}", sweep_secs * 1e3),
+            f(mr.eta, 4),
+            f(token_eta, 4),
+        ]);
+        let mut j = Json::obj();
+        j.set("balance", balance.name())
+            .set("sweep_secs", sweep_secs)
+            .set("measured_eta", mr.eta)
+            .set("token_eta", token_eta);
+        rows.push(j);
+        measured.push((balance.name(), mr.eta));
+        if balance == BalanceMode::Static {
+            static_stats = stats;
+        }
+    }
+    println!("{}", table.to_aligned());
+
+    // (1) The deterministic smoke assert: feed a Measured estimator the
+    // static run's real telemetry, then compare the modeled critical
+    // path of the token packing vs the repacked schedule under that same
+    // cost field.
+    let mut est = Measured::new(grid);
+    for st in &static_stats {
+        est.observe_sweep(&plan.costs, &st.task_nanos);
+    }
+    let mut schedule = Schedule::build(ScheduleKind::Packed { grid_factor: g }, &plan.costs, w);
+    let model_cost = |s: &Schedule, est: &Measured| {
+        use pplda::scheduler::adaptive::CostEstimator;
+        use pplda::scheduler::schedule::partition_id;
+        s.cost_with(|m, n| est.estimate(partition_id(m, n, grid), plan.costs.get(m, n)))
+    };
+    let static_crit = model_cost(&schedule, &est);
+    est.repack(&mut schedule, &plan.costs);
+    let adaptive_crit = model_cost(&schedule, &est);
+    println!(
+        "modeled crit (measured cost field): static {static_crit} ns vs repacked \
+         {adaptive_crit} ns (ratio {:.4})",
+        adaptive_crit as f64 / static_crit.max(1) as f64
+    );
+    // LPT is a (4/3 − 1/(3W))-approximation (Graham), and the token
+    // packing can never beat OPT on the measured field, so the repacked
+    // crit is bounded by 4/3 × the token packing's — a theorem-backed
+    // ceiling that cannot flake, while still catching a repack that
+    // produces garbage. (In practice the ratio is ≤ 1: the repack
+    // optimizes the very objective being scored; but LPT's
+    // non-optimality means that is not a guarantee.)
+    assert!(
+        adaptive_crit as f64 <= static_crit as f64 * (4.0 / 3.0) + 1.0,
+        "repacking against measured costs exceeded the LPT bound vs token packing: \
+         {adaptive_crit} vs {static_crit}"
+    );
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "balance_modes")
+        .set("corpus", "nips-like")
+        .set("kernel", "sparse")
+        .set("workers", w)
+        .set("grid_factor", g)
+        .set("topics", topics)
+        .set("sweeps", sweeps)
+        .set("modeled_static_crit_nanos", static_crit)
+        .set("modeled_adaptive_crit_nanos", adaptive_crit)
+        .set("results", rows);
+    println!("BENCH_JSON {}", summary.to_string());
+
+    // (2) Measured-η ordering (wallclock-derived), slow mode only:
+    // micro-noise on loaded CI boxes makes this assert meaningless at 3
+    // sweeps.
+    if fast {
+        return;
+    }
+    let eta_of = |name: &str| measured.iter().find(|(n, _)| *n == name).unwrap().1;
+    let best_dynamic = eta_of("adaptive").max(eta_of("steal"));
+    assert!(
+        best_dynamic >= eta_of("static") - 0.05,
+        "neither adaptive ({:.4}) nor stealing ({:.4}) kept up with static ({:.4}) measured-eta",
+        eta_of("adaptive"),
+        eta_of("steal"),
+        eta_of("static")
+    );
 }
 
 /// Diagonal-vs-packed sweep (the schedule abstraction's payoff): at a

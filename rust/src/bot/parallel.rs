@@ -14,6 +14,7 @@ use crate::kernel::KernelKind;
 use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
+use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::exec::{ExecMode, SweepStats};
 use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
@@ -26,6 +27,10 @@ struct Phase {
     ids: Vec<Vec<u64>>,
     costs: CostMatrix,
     schedule: Schedule,
+    /// Measured per-partition cost estimator for this phase's plan (the
+    /// DW and DTS grids have independent cost structure, so each phase
+    /// learns — and repacks — on its own).
+    estimator: Measured,
 }
 
 impl Phase {
@@ -56,6 +61,7 @@ impl Phase {
             ids,
             costs: plan.costs.clone(),
             schedule: Schedule::build(kind, &plan.costs, workers),
+            estimator: Measured::new(p),
         }
     }
 }
@@ -74,6 +80,9 @@ pub struct ParallelBot {
     /// the timestamp factor enters the bucket weights through the phase
     /// [`crate::gibbs::sampler::Hyper`] (γ for β, S·γ for W·β).
     kernel: KernelKind,
+    /// Load-balancing strategy shared by both phases (see
+    /// [`crate::scheduler::adaptive`]); result-invariant.
+    balance: BalanceMode,
     seed: u64,
     sweeps_done: usize,
     /// Executor state — the persistent pool (if `Pooled` mode is used)
@@ -85,6 +94,10 @@ pub struct ParallelBot {
     stamp_snapshot: Vec<u32>,
     /// Per-task signed topic deltas, shared by both phases.
     deltas: Vec<Vec<i64>>,
+    /// Per-task measured nanos (telemetry scratch, shared by phases).
+    task_nanos: Vec<u64>,
+    /// Per-worker busy nanos (telemetry scratch, shared by phases).
+    worker_nanos: Vec<u64>,
 }
 
 impl ParallelBot {
@@ -145,12 +158,15 @@ impl ParallelBot {
             word,
             stamp,
             kernel: KernelKind::Dense,
+            balance: BalanceMode::Static,
             seed,
             sweeps_done: 0,
             engines: EngineCache::new(workers),
             word_snapshot: vec![0; h.k],
             stamp_snapshot: vec![0; h.k],
             deltas: vec![vec![0i64; h.k]; p],
+            task_nanos: vec![0; p],
+            worker_nanos: vec![0; workers],
         }
     }
 
@@ -161,6 +177,11 @@ impl ParallelBot {
         self.word.schedule = Schedule::build(kind, &self.word.costs, workers);
         self.stamp.schedule = Schedule::build(kind, &self.stamp.costs, workers);
         self.engines = EngineCache::new(workers);
+        self.worker_nanos = vec![0; workers];
+        if self.balance == BalanceMode::Adaptive {
+            self.word.estimator.repack(&mut self.word.schedule, &self.word.costs);
+            self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
+        }
     }
 
     /// Worker slots the current schedules run on.
@@ -178,6 +199,34 @@ impl ParallelBot {
         self.kernel
     }
 
+    /// Select the load-balancing strategy for both phases (see
+    /// [`crate::scheduler::adaptive`]). Result-invariant: only which
+    /// worker samples which partition — and therefore wallclock —
+    /// changes.
+    pub fn set_balance(&mut self, balance: BalanceMode) {
+        if self.balance == balance {
+            return;
+        }
+        self.balance = balance;
+        match balance {
+            BalanceMode::Adaptive => {
+                self.word.estimator.repack(&mut self.word.schedule, &self.word.costs);
+                self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
+            }
+            BalanceMode::Static | BalanceMode::Steal => {
+                let wc = &self.word.costs;
+                self.word.schedule.repack_with(|m, n| wc.get(m, n));
+                let sc = &self.stamp.costs;
+                self.stamp.schedule.repack_with(|m, n| sc.get(m, n));
+            }
+        }
+    }
+
+    /// The balance mode governing this trainer's sweeps.
+    pub fn balance(&self) -> BalanceMode {
+        self.balance
+    }
+
     /// The (DW, DTS) schedules executing this trainer's sweeps.
     pub fn schedules(&self) -> (&Schedule, &Schedule) {
         (&self.word.schedule, &self.stamp.schedule)
@@ -193,6 +242,7 @@ impl ParallelBot {
         let p = self.p;
         let k = self.h.k;
         let sweep_no = self.sweeps_done;
+        let steal = self.balance == BalanceMode::Steal;
         let mut wstats = SweepStats {
             workers: self.word.schedule.workers,
             ..SweepStats::default()
@@ -202,9 +252,11 @@ impl ParallelBot {
             ..SweepStats::default()
         };
 
+        let update_started = Instant::now();
         self.word_snapshot.copy_from_slice(&self.counts.topic_words);
         self.stamp_snapshot
             .copy_from_slice(&self.counts.topic_stamps);
+        wstats.update_secs += update_started.elapsed().as_secs_f64();
 
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
@@ -230,15 +282,23 @@ impl ParallelBot {
                     blocks: diag,
                     ids: &self.word.ids[l],
                     assign: &ep.assign,
+                    nanos: &mut self.task_nanos[..n],
+                    worker_nanos: &mut self.worker_nanos,
+                    steal,
                 };
                 self.engines
                     .get(mode)
                     .run_epoch(&spec, tasks, &mut self.deltas[..n]);
+                wstats.sample_secs += started.elapsed().as_secs_f64();
+                wstats.task_nanos.push(self.task_nanos[..n].to_vec());
+                wstats.worker_nanos.push(self.worker_nanos.clone());
+                let barrier_started = Instant::now();
                 merge_deltas(
                     &mut self.counts.topic_words,
                     &mut self.word_snapshot,
                     &self.deltas[..n],
                 );
+                wstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
                 wstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
 
@@ -265,19 +325,41 @@ impl ParallelBot {
                     blocks: diag,
                     ids: &self.stamp.ids[l],
                     assign: &ep.assign,
+                    nanos: &mut self.task_nanos[..n],
+                    worker_nanos: &mut self.worker_nanos,
+                    steal,
                 };
                 self.engines
                     .get(mode)
                     .run_epoch(&spec, tasks, &mut self.deltas[..n]);
+                sstats.sample_secs += started.elapsed().as_secs_f64();
+                sstats.task_nanos.push(self.task_nanos[..n].to_vec());
+                sstats.worker_nanos.push(self.worker_nanos.clone());
+                let barrier_started = Instant::now();
                 merge_deltas(
                     &mut self.counts.topic_stamps,
                     &mut self.stamp_snapshot,
                     &self.deltas[..n],
                 );
+                sstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
                 sstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
         }
         self.sweeps_done += 1;
+        // Each phase folds its own telemetry every sweep (so a later
+        // switch to `Adaptive` repacks from warm measurements) and,
+        // under `Adaptive`, repacks its own schedule — the DW and DTS
+        // grids balance independently.
+        let update_started = Instant::now();
+        self.word.estimator.observe_sweep(&self.word.costs, &wstats.task_nanos);
+        self.stamp.estimator.observe_sweep(&self.stamp.costs, &sstats.task_nanos);
+        if self.balance == BalanceMode::Adaptive {
+            self.word.estimator.repack(&mut self.word.schedule, &self.word.costs);
+            self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
+        }
+        let dt = update_started.elapsed().as_secs_f64() / 2.0;
+        wstats.update_secs += dt;
+        sstats.update_secs += dt;
         // Debug builds audit the full two-matrix invariant per sweep so
         // kernel count-delta bugs fail at the offending sweep (see the
         // matching check in `scheduler::exec::ParallelLda::sweep`).
@@ -510,6 +592,132 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn stealing_bot_is_bit_identical_across_kernels_and_workers() {
+        // The stealing acceptance for BoT: both phases, every kernel,
+        // W ∈ {1, 2, 4}, Pooled stealing vs the static Sequential
+        // oracle — bit-identical counts.
+        for kernel in KernelKind::all() {
+            let (_tc, mut oracle) = setup(4, 83);
+            oracle.set_kernel(kernel);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                let (_t, mut bot) = setup_scheduled(4, 83, kind, workers);
+                bot.set_kernel(kernel);
+                bot.set_balance(BalanceMode::Steal);
+                assert_eq!(bot.balance(), BalanceMode::Steal);
+                for _ in 0..2 {
+                    bot.sweep(ExecMode::Pooled);
+                }
+                assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{kernel:?} W={workers}");
+                assert_eq!(
+                    bot.counts.word_topic,
+                    oracle.counts.word_topic,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.stamp_topic,
+                    oracle.counts.stamp_topic,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.topic_words,
+                    oracle.counts.topic_words,
+                    "{kernel:?} W={workers}"
+                );
+                assert_eq!(
+                    bot.counts.topic_stamps,
+                    oracle.counts.topic_stamps,
+                    "{kernel:?} W={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_bot_matches_sequential_on_random_schedules() {
+        // Property form over random (g, W) and kernels, both exec
+        // parallel modes, both phases.
+        crate::testing::prop::check("bot-steal-bit-identical", 0xB07_57EA1, 4, |rng| {
+            let w = [1usize, 2, 4][rng.gen_range(3)];
+            let g = 1 + rng.gen_range(2);
+            let p = g * w;
+            let seed = rng.next_u64() | 1;
+            let tc = tiny_tc(seed);
+            let plan_dw = partition(&tc.bow, p, Algorithm::A3 { restarts: 1 }, seed);
+            let plan_dts = partition(&tc.dts, p, Algorithm::A3 { restarts: 1 }, seed + 1);
+            let h = super::super::serial::BotHyper::new(
+                4,
+                0.5,
+                0.1,
+                0.1,
+                tc.bow.num_words(),
+                tc.num_stamps,
+            );
+            let kernel = KernelKind::all()[rng.gen_range(3)];
+            let kind = ScheduleKind::Packed { grid_factor: g };
+            let mut oracle =
+                ParallelBot::init_scheduled(&tc, &plan_dw, &plan_dts, h, seed, kind, w);
+            oracle.set_kernel(kernel);
+            oracle.sweep(ExecMode::Sequential);
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let mut bot =
+                    ParallelBot::init_scheduled(&tc, &plan_dw, &plan_dts, h, seed, kind, w);
+                bot.set_kernel(kernel);
+                bot.set_balance(BalanceMode::Steal);
+                bot.sweep(mode);
+                assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{kernel:?} {mode:?}");
+                assert_eq!(
+                    bot.counts.word_topic,
+                    oracle.counts.word_topic,
+                    "{kernel:?} {mode:?}"
+                );
+                assert_eq!(
+                    bot.counts.stamp_topic,
+                    oracle.counts.stamp_topic,
+                    "{kernel:?} {mode:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn adaptive_bot_is_bit_identical_and_both_phases_learn() {
+        let (_tc, mut oracle) = setup(4, 84);
+        for _ in 0..3 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let (_t, mut bot) = setup_scheduled(4, 84, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        bot.set_balance(BalanceMode::Adaptive);
+        for _ in 0..3 {
+            bot.sweep(ExecMode::Pooled);
+        }
+        assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic);
+        assert_eq!(bot.counts.word_topic, oracle.counts.word_topic);
+        assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic);
+        assert!(bot.word.estimator.rate() > 0.0, "DW estimator learned");
+        assert!(bot.stamp.estimator.rate() > 0.0, "DTS estimator learned");
+    }
+
+    #[test]
+    fn bot_sweep_telemetry_covers_both_phases() {
+        let (tc, mut bot) = setup_scheduled(4, 85, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (ws, ss) = bot.sweep(ExecMode::Pooled);
+        for stats in [&ws, &ss] {
+            assert_eq!(stats.task_nanos.len(), 4);
+            assert_eq!(stats.worker_nanos.len(), 4);
+            let task_total: u64 = stats.task_nanos.iter().flatten().sum();
+            assert_eq!(task_total, stats.busy_total_nanos());
+            let eta = stats.measured_eta();
+            assert!(eta > 0.0 && eta <= 1.0 + 1e-12, "measured eta {eta}");
+        }
+        assert_eq!(ws.total_tokens, tc.bow.num_tokens());
+        assert_eq!(ss.total_tokens, tc.dts.num_tokens());
     }
 
     #[test]

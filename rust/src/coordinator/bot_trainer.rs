@@ -1,7 +1,7 @@
 //! BoT training driver (paper §IV-C + Table IV): serial or parallel with
 //! independent DW/DTS partition plans.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::bot::parallel::ParallelBot;
 use crate::bot::serial::{BotHyper, SerialBot};
@@ -9,7 +9,9 @@ use crate::bot::timeline::{self, TopicTimeline};
 use crate::coordinator::config::TrainConfig;
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::partition::{self, Algorithm, Plan};
+use crate::scheduler::cost_model::MeasuredReport;
 use crate::util::json::Json;
+use crate::util::timer::{time_once, PhaseTimer};
 
 #[derive(Clone, Debug)]
 pub struct BotTrainReport {
@@ -20,6 +22,8 @@ pub struct BotTrainReport {
     pub schedule: String,
     /// Sampling kernel label ("dense" for the serial reference).
     pub kernel: String,
+    /// Balance-mode label ("static" for the serial reference).
+    pub balance: String,
     pub topics: usize,
     pub iters: usize,
     pub final_perplexity: f64,
@@ -27,10 +31,20 @@ pub struct BotTrainReport {
     pub eta_dw: f64,
     /// η of the DTS plan (1.0 for serial).
     pub eta_dts: f64,
+    /// Measured (wallclock) η of the DW phase over all sweeps (1.0 for
+    /// serial) — next to the token `eta_dw` so the non-uniform-cost gap
+    /// is visible.
+    pub measured_eta_dw: f64,
+    /// Measured (wallclock) η of the DTS phase (1.0 for serial).
+    pub measured_eta_dts: f64,
     /// Combined speedup model over both phases: total tokens / combined
     /// epoch cost.
     pub speedup_model: f64,
     pub train_secs: f64,
+    /// Phase breakdown `(name, seconds)` —
+    /// sample/barrier/update/perplexity buckets over both phases (empty
+    /// for serial runs).
+    pub phases: Vec<(String, f64)>,
     pub timelines: Vec<TopicTimeline>,
 }
 
@@ -41,13 +55,23 @@ impl BotTrainReport {
             .set("workers", self.workers)
             .set("schedule", self.schedule.as_str())
             .set("kernel", self.kernel.as_str())
+            .set("balance", self.balance.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
             .set("eta_dw", self.eta_dw)
             .set("eta_dts", self.eta_dts)
+            .set("measured_eta_dw", self.measured_eta_dw)
+            .set("measured_eta_dts", self.measured_eta_dts)
             .set("speedup_model", self.speedup_model)
-            .set("train_secs", self.train_secs);
+            .set("train_secs", self.train_secs)
+            .set("phases", {
+                let mut ph = Json::obj();
+                for (name, secs) in &self.phases {
+                    ph.set(name, *secs);
+                }
+                ph
+            });
         j
     }
 }
@@ -79,13 +103,17 @@ pub fn train_bot(
             workers: 1,
             schedule: "serial".to_string(),
             kernel: "dense".to_string(),
+            balance: "static".to_string(),
             topics: cfg.topics,
             iters: cfg.iters,
             final_perplexity,
             eta_dw: 1.0,
             eta_dts: 1.0,
+            measured_eta_dw: 1.0,
+            measured_eta_dts: 1.0,
             speedup_model: 1.0,
             train_secs: started.elapsed().as_secs_f64(),
+            phases: Vec::new(),
             timelines: timeline::timelines(&bot.counts, &h),
         };
     }
@@ -104,24 +132,53 @@ pub fn train_bot(
         workers,
     );
     bot.set_kernel(cfg.kernel);
+    bot.set_balance(cfg.balance);
     let speedup = {
         let (sdw, sdts) = bot.schedules();
         combined_speedup_scheduled(&plan_dw, &plan_dts, sdw, sdts)
     };
-    bot.train(tc, cfg.iters, 0, cfg.mode);
-    let final_perplexity = bot.perplexity(tc);
+    // The sweep loop lives here so the driver can bucket wallclock into
+    // the PhaseTimer and accumulate per-phase measured-η telemetry.
+    let mut timer = PhaseTimer::new();
+    let (mut dw_serial, mut dw_crit) = (0u64, 0u64);
+    let (mut dts_serial, mut dts_crit) = (0u64, 0u64);
+    for _ in 0..cfg.iters {
+        let (ws, ss) = bot.sweep(cfg.mode);
+        timer.add(
+            "sample",
+            Duration::from_secs_f64(ws.sample_secs + ss.sample_secs),
+        );
+        timer.add(
+            "barrier",
+            Duration::from_secs_f64(ws.barrier_secs + ss.barrier_secs),
+        );
+        timer.add(
+            "update",
+            Duration::from_secs_f64(ws.update_secs + ss.update_secs),
+        );
+        dw_serial += ws.busy_total_nanos();
+        dw_crit += ws.crit_nanos();
+        dts_serial += ss.busy_total_nanos();
+        dts_crit += ss.crit_nanos();
+    }
+    let (final_perplexity, dt) = time_once(|| bot.perplexity(tc));
+    timer.add("perplexity", dt);
     BotTrainReport {
         p,
         workers,
         schedule: cfg.schedule.label(),
         kernel: cfg.kernel.name().to_string(),
+        balance: cfg.balance.name().to_string(),
         topics: cfg.topics,
         iters: cfg.iters,
         final_perplexity,
         eta_dw: plan_dw.eta,
         eta_dts: plan_dts.eta,
+        measured_eta_dw: MeasuredReport::of_nanos(workers, dw_serial, dw_crit).eta,
+        measured_eta_dts: MeasuredReport::of_nanos(workers, dts_serial, dts_crit).eta,
         speedup_model: speedup,
         train_secs: started.elapsed().as_secs_f64(),
+        phases: timer.phases_secs(),
         timelines: timeline::timelines(&bot.counts, &h),
     }
 }
@@ -207,5 +264,45 @@ mod tests {
         let r = train_bot(&tc, 2, Algorithm::A2, &cfg);
         let s = r.to_json().to_string();
         assert!(s.contains("eta_dw"));
+        assert!(s.contains("measured_eta_dts"));
+        assert!(s.contains("\"balance\":\"static\""));
+        assert!(s.contains("\"phases\":{"));
+    }
+
+    #[test]
+    fn bot_balance_modes_through_driver_are_bit_identical() {
+        use crate::scheduler::adaptive::BalanceMode;
+        use crate::scheduler::exec::ExecMode;
+        use crate::scheduler::schedule::ScheduleKind;
+
+        let tc = tiny_tc(95);
+        let mut cfg = TrainConfig::quick(4, 3);
+        cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+        cfg.workers = 2;
+        cfg.mode = ExecMode::Pooled;
+        let baseline = train_bot(&tc, 4, Algorithm::A3 { restarts: 2 }, &cfg);
+        assert_eq!(baseline.balance, "static");
+        for (balance, label) in [
+            (BalanceMode::Adaptive, "adaptive"),
+            (BalanceMode::Steal, "steal"),
+        ] {
+            cfg.balance = balance;
+            let r = train_bot(&tc, 4, Algorithm::A3 { restarts: 2 }, &cfg);
+            assert_eq!(r.balance, label);
+            assert_eq!(r.final_perplexity, baseline.final_perplexity, "{label}");
+            assert!(
+                r.measured_eta_dw > 0.0 && r.measured_eta_dw <= 1.0 + 1e-9,
+                "{label}: {}",
+                r.measured_eta_dw
+            );
+            assert!(
+                r.measured_eta_dts > 0.0 && r.measured_eta_dts <= 1.0 + 1e-9,
+                "{label}: {}",
+                r.measured_eta_dts
+            );
+            let names: Vec<&str> = r.phases.iter().map(|(n, _)| n.as_str()).collect();
+            assert!(names.contains(&"sample"), "{names:?}");
+            assert!(names.contains(&"perplexity"), "{names:?}");
+        }
     }
 }

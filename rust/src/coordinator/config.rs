@@ -2,6 +2,7 @@
 //! γ=0.1, ≤200 burn-in iterations).
 
 use crate::kernel::KernelKind;
+use crate::scheduler::adaptive::BalanceMode;
 use crate::scheduler::exec::ExecMode;
 use crate::scheduler::schedule::ScheduleKind;
 
@@ -44,6 +45,11 @@ pub struct TrainConfig {
     /// `Alias` tables with MH correction; see `docs/kernels.md`. The
     /// serial (`P == 1`) reference and the XLA backend always run dense.
     pub kernel: KernelKind,
+    /// Load balancing for the parallel native path: `Static` token-LPT
+    /// (default), `Adaptive` measured-cost re-packing between sweeps, or
+    /// `Steal` within-epoch work stealing. Result-invariant — all three
+    /// train bit-identical counts; see `docs/scheduling.md`.
+    pub balance: BalanceMode,
     pub backend: Backend,
 }
 
@@ -61,6 +67,7 @@ impl Default for TrainConfig {
             workers: 0,
             schedule: ScheduleKind::Diagonal,
             kernel: KernelKind::Dense,
+            balance: BalanceMode::Static,
             backend: Backend::Native,
         }
     }
@@ -116,6 +123,7 @@ mod tests {
         assert_eq!(c.workers, 0);
         assert_eq!(c.schedule, ScheduleKind::Diagonal);
         assert_eq!(c.kernel, KernelKind::Dense);
+        assert_eq!(c.balance, BalanceMode::Static);
     }
 
     #[test]

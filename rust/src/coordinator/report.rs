@@ -17,6 +17,9 @@ pub struct TrainReport {
     /// Sampling kernel label: "dense", "sparse", or "alias" ("dense"
     /// for the serial reference and the XLA backend).
     pub kernel: String,
+    /// Balance-mode label: "static", "adaptive", or "steal" ("static"
+    /// for the serial reference and the XLA backend).
+    pub balance: String,
     pub topics: usize,
     pub iters: usize,
     /// (iteration, perplexity) curve.
@@ -26,6 +29,11 @@ pub struct TrainReport {
     pub eta: f64,
     /// Schedule-aware η against `workers` (== `eta` for diagonal runs).
     pub schedule_eta: f64,
+    /// Measured (wallclock) η over all executed sweeps at `workers`
+    /// (1.0 for serial/XLA). Reported next to the token-count
+    /// `schedule_eta` so the non-uniform-cost gap is visible — see
+    /// `crate::scheduler::cost_model::MeasuredReport`.
+    pub measured_eta: f64,
     /// η·W model speedup against the workers actually used.
     pub speedup_model: f64,
     /// Total train wall seconds.
@@ -33,6 +41,10 @@ pub struct TrainReport {
     /// Native serial-equivalent sampling throughput (tokens/sec over all
     /// sampled tokens and wall time).
     pub tokens_per_sec: f64,
+    /// Phase breakdown `(name, seconds)` —
+    /// sample/barrier/update/perplexity buckets from the trainer's
+    /// `PhaseTimer` (empty for serial/XLA runs).
+    pub phases: Vec<(String, f64)>,
 }
 
 impl TrainReport {
@@ -44,14 +56,23 @@ impl TrainReport {
             .set("workers", self.workers)
             .set("schedule", self.schedule.as_str())
             .set("kernel", self.kernel.as_str())
+            .set("balance", self.balance.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
             .set("eta", self.eta)
             .set("schedule_eta", self.schedule_eta)
+            .set("measured_eta", self.measured_eta)
             .set("speedup_model", self.speedup_model)
             .set("train_secs", self.train_secs)
             .set("tokens_per_sec", self.tokens_per_sec)
+            .set("phases", {
+                let mut ph = Json::obj();
+                for (name, secs) in &self.phases {
+                    ph.set(name, *secs);
+                }
+                ph
+            })
             .set(
                 "curve",
                 Json::Arr(
@@ -76,6 +97,19 @@ impl TrainReport {
         }
         t
     }
+
+    /// Human-readable phase breakdown, e.g.
+    /// `sample: 1.200s (80.0%), barrier: 0.300s (20.0%)` (empty string
+    /// when no phases were recorded).
+    pub fn phase_summary(&self) -> String {
+        let total: f64 = self.phases.iter().map(|(_, s)| s).sum();
+        let total = total.max(1e-12);
+        self.phases
+            .iter()
+            .map(|(n, s)| format!("{n}: {s:.3}s ({:.1}%)", 100.0 * s / total))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
 }
 
 #[cfg(test)]
@@ -90,15 +124,18 @@ mod tests {
             workers: 10,
             schedule: "diagonal".into(),
             kernel: "sparse".into(),
+            balance: "adaptive".into(),
             topics: 64,
             iters: 50,
             curve: vec![(25, 700.0), (50, 600.5)],
             final_perplexity: 600.5,
             eta: 0.98,
             schedule_eta: 0.98,
+            measured_eta: 0.91,
             speedup_model: 9.8,
             train_secs: 1.25,
             tokens_per_sec: 1e7,
+            phases: vec![("sample".into(), 1.0), ("barrier".into(), 0.25)],
         }
     }
 
@@ -110,8 +147,24 @@ mod tests {
         assert!(s.contains("\"workers\":10"));
         assert!(s.contains("\"schedule\":\"diagonal\""));
         assert!(s.contains("\"kernel\":\"sparse\""));
+        assert!(s.contains("\"balance\":\"adaptive\""));
         assert!(s.contains("\"schedule_eta\":0.98"));
+        assert!(s.contains("\"measured_eta\":0.91"));
+        assert!(s.contains("\"phases\":{"));
+        assert!(s.contains("\"sample\":1"));
         assert!(s.contains("\"curve\":[{"));
+    }
+
+    #[test]
+    fn phase_summary_formats_percentages() {
+        let s = sample().phase_summary();
+        assert!(s.contains("sample: 1.000s (80.0%)"), "{s}");
+        assert!(s.contains("barrier: 0.250s (20.0%)"), "{s}");
+        let empty = TrainReport {
+            phases: Vec::new(),
+            ..sample()
+        };
+        assert_eq!(empty.phase_summary(), "");
     }
 
     #[test]

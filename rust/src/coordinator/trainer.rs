@@ -1,7 +1,7 @@
 //! LDA training driver: serial (`P == 1`) or partitioned-parallel, with
 //! native or XLA backends.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::config::{Backend, TrainConfig};
 use crate::coordinator::report::TrainReport;
@@ -13,9 +13,11 @@ use crate::partition::Plan;
 use crate::runtime::executor::Artifacts;
 #[cfg(feature = "xla")]
 use crate::runtime::sampler_xla::{XlaPerplexity, XlaSampler};
+use crate::scheduler::cost_model::MeasuredReport;
 use crate::scheduler::exec::ParallelLda;
 #[cfg(feature = "xla")]
 use crate::util::rng::Rng;
+use crate::util::timer::{time_once, PhaseTimer};
 
 /// Train LDA on `bow` under `plan`. `plan.p == 1` runs the serial
 /// reference; `p > 1` the diagonal-epoch parallel engine, scheduled onto
@@ -29,9 +31,13 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
     let mut workers = 1;
     let mut schedule = "serial".to_string();
     let mut schedule_eta = 1.0;
-    // The serial reference and the XLA backend are dense-only; the
-    // parallel native arm runs the configured kernel.
+    let mut measured_eta = 1.0;
+    // The serial reference and the XLA backend are dense-only and
+    // single-worker; the parallel native arm runs the configured kernel
+    // and balance mode.
     let mut kernel = "dense".to_string();
+    let mut balance = "static".to_string();
+    let mut timer = PhaseTimer::new();
     let (curve, final_perplexity) = match (cfg.backend, plan.p) {
         (Backend::Native, 1) => {
             let mut lda = SerialLda::init(bow, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
@@ -55,12 +61,42 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
                 w,
             );
             lda.set_kernel(cfg.kernel);
+            lda.set_balance(cfg.balance);
             workers = w;
             schedule = cfg.schedule.label();
             schedule_eta = EtaComparison::of(plan, lda.schedule()).schedule.eta;
             kernel = cfg.kernel.name().to_string();
-            let mut curve = lda.train(bow, cfg.iters, cfg.eval_every, cfg.mode);
-            let fin = lda.perplexity(bow);
+            balance = cfg.balance.name().to_string();
+            // The sweep loop lives here (not in `ParallelLda::train`) so
+            // the driver can bucket wallclock into the PhaseTimer and
+            // accumulate the measured-η telemetry per sweep.
+            let mut curve = Vec::new();
+            let (mut serial_nanos, mut crit_nanos) = (0u64, 0u64);
+            for it in 1..=cfg.iters {
+                let stats = lda.sweep(cfg.mode);
+                timer.add("sample", Duration::from_secs_f64(stats.sample_secs));
+                timer.add("barrier", Duration::from_secs_f64(stats.barrier_secs));
+                timer.add("update", Duration::from_secs_f64(stats.update_secs));
+                serial_nanos += stats.busy_total_nanos();
+                crit_nanos += stats.crit_nanos();
+                if cfg.eval_every > 0 && (it % cfg.eval_every == 0 || it == cfg.iters) {
+                    let (pp, dt) = time_once(|| lda.perplexity(bow));
+                    timer.add("perplexity", dt);
+                    curve.push((it, pp));
+                }
+            }
+            measured_eta = MeasuredReport::of_nanos(w, serial_nanos, crit_nanos).eta;
+            // The eval cadence always records the final sweep when it
+            // records anything; reuse that value rather than paying a
+            // second full-corpus evaluation for `fin`.
+            let fin = match curve.last() {
+                Some(&(it, pp)) if it == cfg.iters => pp,
+                _ => {
+                    let (pp, dt) = time_once(|| lda.perplexity(bow));
+                    timer.add("perplexity", dt);
+                    pp
+                }
+            };
             if curve.is_empty() {
                 curve.push((cfg.iters, fin));
             }
@@ -81,15 +117,18 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         workers,
         schedule,
         kernel,
+        balance,
         topics: cfg.topics,
         iters: cfg.iters,
         curve,
         final_perplexity,
         eta: plan.eta,
         schedule_eta,
+        measured_eta,
         speedup_model: schedule_eta * workers as f64,
         train_secs,
         tokens_per_sec: sampled_tokens / train_secs.max(1e-12),
+        phases: timer.phases_secs(),
     }
 }
 
@@ -222,6 +261,64 @@ mod tests {
                 r.final_perplexity
             );
         }
+    }
+
+    #[test]
+    fn balance_modes_through_driver_are_bit_identical() {
+        use crate::scheduler::adaptive::BalanceMode;
+        use crate::scheduler::exec::ExecMode;
+        use crate::scheduler::schedule::ScheduleKind;
+
+        let bow = generate(&Profile::tiny(), 87);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 87);
+        let mut cfg = TrainConfig::quick(8, 6);
+        cfg.eval_every = 3;
+        cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+        cfg.workers = 2;
+        cfg.mode = ExecMode::Pooled;
+        let baseline = train_lda(&bow, &plan, &cfg);
+        assert_eq!(baseline.balance, "static");
+
+        for (balance, label) in [
+            (BalanceMode::Adaptive, "adaptive"),
+            (BalanceMode::Steal, "steal"),
+        ] {
+            cfg.balance = balance;
+            let r = train_lda(&bow, &plan, &cfg);
+            assert_eq!(r.balance, label);
+            // Balance modes move work between workers, never results.
+            assert_eq!(r.final_perplexity, baseline.final_perplexity, "{label}");
+            assert_eq!(r.curve, baseline.curve, "{label}");
+            // Measured-η is a real Eq. 2 ratio on wallclock.
+            assert!(
+                r.measured_eta > 0.0 && r.measured_eta <= 1.0 + 1e-9,
+                "{label}: measured_eta {}",
+                r.measured_eta
+            );
+        }
+    }
+
+    #[test]
+    fn phase_breakdown_is_reported_for_parallel_runs() {
+        let bow = generate(&Profile::tiny(), 88);
+        let plan = partition(&bow, 3, Algorithm::A2, 88);
+        let mut cfg = TrainConfig::quick(4, 4);
+        cfg.eval_every = 2;
+        let r = train_lda(&bow, &plan, &cfg);
+        let names: Vec<&str> = r.phases.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"sample"), "{names:?}");
+        assert!(names.contains(&"barrier"), "{names:?}");
+        assert!(names.contains(&"update"), "{names:?}");
+        assert!(names.contains(&"perplexity"), "{names:?}");
+        let sample_secs = r.phases.iter().find(|(n, _)| n == "sample").unwrap().1;
+        assert!(sample_secs > 0.0);
+        assert!(!r.phase_summary().is_empty());
+        // Serial runs have no parallel phase machinery.
+        let serial_plan = partition(&bow, 1, Algorithm::A1, 88);
+        let rs = train_lda(&bow, &serial_plan, &cfg);
+        assert!(rs.phases.is_empty());
+        assert_eq!(rs.measured_eta, 1.0);
+        assert_eq!(rs.balance, "static");
     }
 
     #[test]

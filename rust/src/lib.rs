@@ -24,8 +24,10 @@
 //!   `Kernel` trait: the dense O(K) scan, the SparseLDA s/r/q bucket
 //!   decomposition, and the alias-table sampler with MH staleness
 //!   correction (see `docs/kernels.md`).
-//! * [`scheduler`] — the diagonal-epoch plan, a worker pool, and the
-//!   epoch-cost model.
+//! * [`scheduler`] — the diagonal-epoch plan, a worker pool, the
+//!   epoch-cost model, and the cost-aware adaptive layer (measured
+//!   per-partition cost estimators, sweep-to-sweep re-packing, and a
+//!   work-stealing execution mode — see `docs/scheduling.md`).
 //! * [`bot`] — Bag of Timestamps (Masada et al. 2009): the LDA extension
 //!   with a second document–timestamp matrix, parallelized with the same
 //!   partitioning machinery (paper §IV-C).

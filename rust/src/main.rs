@@ -10,11 +10,12 @@
 //!                  [--mode sequential|threaded|pooled] [--json FILE]
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
+//!                  [--balance static|adaptive|steal]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
-//!                  [--timeline]
+//!                  [--balance static|adaptive|steal] [--timeline]
 //! pplda artifacts-check
 //! ```
 
@@ -28,6 +29,7 @@ use pplda::kernel::KernelKind;
 use pplda::partition::{self, Algorithm};
 #[cfg(feature = "xla")]
 use pplda::runtime::executor::Artifacts;
+use pplda::scheduler::adaptive::BalanceMode;
 use pplda::scheduler::exec::ExecMode;
 use pplda::scheduler::schedule::ScheduleKind;
 use pplda::util::cli::Args;
@@ -73,6 +75,13 @@ kernels (train/train-bot): --kernel dense|sparse|alias selects the
 per-token sampling kernel (see docs/kernels.md). dense is the O(K)
 reference; sparse (SparseLDA s/r/q buckets) and alias (alias tables +
 MH correction) amortize to O(k_doc + k_word) per token.
+
+balancing (train/train-bot): --balance static|adaptive|steal picks how
+per-epoch load spreads across workers (see docs/scheduling.md).
+static packs by token counts; adaptive re-packs each diagonal between
+sweeps against measured per-partition wallclock; steal lets idle
+workers pull unclaimed tasks from a shared per-epoch queue. All three
+train bit-identical counts — only wallclock changes.
 ";
 
 fn profile(args: &Args) -> Profile {
@@ -136,6 +145,15 @@ fn kernel_of(args: &Args) -> KernelKind {
         Some(s) => KernelKind::parse(s)
             .unwrap_or_else(|| panic!("unknown kernel {s:?} (dense|sparse|alias)")),
         None => KernelKind::Dense,
+    }
+}
+
+/// Balance selection: `--balance static|adaptive|steal` (default static).
+fn balance_of(args: &Args) -> BalanceMode {
+    match args.get_str("balance") {
+        Some(s) => BalanceMode::parse(s)
+            .unwrap_or_else(|| panic!("unknown balance mode {s:?} (static|adaptive|steal)")),
+        None => BalanceMode::Static,
     }
 }
 
@@ -212,13 +230,14 @@ fn cmd_train(args: &Args) -> ExitCode {
         workers,
         schedule: kind,
         kernel: kernel_of(args),
+        balance: balance_of(args),
         ..Default::default()
     };
 
     let plan = partition::partition(&bow, grid, algo, cfg.seed);
     println!(
         "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | schedule {} workers={} \
-         kernel={}",
+         kernel={} balance={}",
         bow.num_docs(),
         bow.num_words(),
         bow.num_tokens(),
@@ -228,12 +247,16 @@ fn cmd_train(args: &Args) -> ExitCode {
         kind.label(),
         workers,
         cfg.kernel.name(),
+        cfg.balance.name(),
     );
     let report = train_lda(&bow, &plan, &cfg);
     println!(
-        "schedule_eta={:.4} speedup≈{:.2} (vs {} workers)",
-        report.schedule_eta, report.speedup_model, report.workers
+        "schedule_eta={:.4} measured_eta={:.4} speedup≈{:.2} (vs {} workers)",
+        report.schedule_eta, report.measured_eta, report.speedup_model, report.workers
     );
+    if !report.phases.is_empty() {
+        println!("phases: {}", report.phase_summary());
+    }
     print!("{}", report.curve_table().to_aligned());
     println!(
         "final perplexity {:.4} | {:.1}s | {} tokens/s",
@@ -277,6 +300,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         workers,
         schedule: kind,
         kernel: kernel_of(args),
+        balance: balance_of(args),
         ..Default::default()
     };
 
@@ -291,15 +315,18 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     );
     let report = train_bot(&tc, p, algo, &cfg);
     println!(
-        "P={} workers={} schedule={} kernel={} perplexity={:.4} eta_dw={:.4} eta_dts={:.4} \
-         speedup≈{:.2} ({:.1}s)",
+        "P={} workers={} schedule={} kernel={} balance={} perplexity={:.4} eta_dw={:.4} \
+         eta_dts={:.4} measured_eta_dw={:.4} measured_eta_dts={:.4} speedup≈{:.2} ({:.1}s)",
         report.p,
         report.workers,
         report.schedule,
         report.kernel,
+        report.balance,
         report.final_perplexity,
         report.eta_dw,
         report.eta_dts,
+        report.measured_eta_dw,
+        report.measured_eta_dts,
         report.speedup_model,
         report.train_secs
     );

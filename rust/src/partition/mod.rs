@@ -103,22 +103,41 @@ pub(crate) fn group_lists(assignment: &[u32], p: usize) -> Vec<Vec<u32>> {
 }
 
 /// Run `algo` on the workload matrix of `bow` and return the best plan
-/// found. Deterministic algorithms ignore `seed`.
+/// found. Deterministic algorithms ignore `seed`. The randomized
+/// algorithms' repeated draws fan out over [`default_draw_threads`]
+/// OS threads; results are identical at any thread count (each draw's
+/// RNG stream is keyed by its index, and the reduction is
+/// order-independent — see [`algorithms::best_plan_parallel`]).
 pub fn partition(bow: &BagOfWords, p: usize, algo: Algorithm, seed: u64) -> Plan {
+    let restarts = match algo {
+        Algorithm::A3 { restarts } | Algorithm::Baseline { restarts } => restarts,
+        _ => 1,
+    };
+    partition_threaded(bow, p, algo, seed, default_draw_threads(restarts))
+}
+
+/// As [`partition`], with an explicit draw-thread count for the
+/// randomized algorithms (`1` = the serial reference; the bench compares
+/// the two). Deterministic algorithms ignore it.
+pub fn partition_threaded(
+    bow: &BagOfWords,
+    p: usize,
+    algo: Algorithm,
+    seed: u64,
+    threads: usize,
+) -> Plan {
     assert!(p >= 1, "P must be >= 1");
     match algo {
         Algorithm::A1 => algorithms::run_a1(bow, p),
         Algorithm::A2 => algorithms::run_a2(bow, p),
         Algorithm::A3 { restarts } => {
-            assert!(restarts >= 1);
-            best_of(restarts, |t| {
+            algorithms::best_plan_parallel(restarts, threads, |t| {
                 let mut rng = Rng::stream(seed, t as u64);
                 algorithms::run_a3_once(bow, p, &mut rng)
             })
         }
         Algorithm::Baseline { restarts } => {
-            assert!(restarts >= 1);
-            best_of(restarts, |t| {
+            algorithms::best_plan_parallel(restarts, threads, |t| {
                 let mut rng = Rng::stream(seed ^ 0xBA5E, t as u64);
                 algorithms::run_baseline_once(bow, p, &mut rng)
             })
@@ -126,15 +145,15 @@ pub fn partition(bow: &BagOfWords, p: usize, algo: Algorithm, seed: u64) -> Plan
     }
 }
 
-fn best_of(restarts: usize, mut run: impl FnMut(usize) -> Plan) -> Plan {
-    let mut best: Option<Plan> = None;
-    for t in 0..restarts {
-        let plan = run(t);
-        if best.as_ref().map(|b| plan.eta > b.eta).unwrap_or(true) {
-            best = Some(plan);
-        }
-    }
-    best.unwrap()
+/// Draw-thread count for a restart budget: the machine's parallelism,
+/// but never more than a quarter of the draws (tiny budgets aren't worth
+/// the spawns — each thread should amortize its spawn over several
+/// draws), capped at 8.
+pub fn default_draw_threads(restarts: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    cores.min(restarts / 4).clamp(1, 8)
 }
 
 #[cfg(test)]
@@ -210,6 +229,32 @@ mod tests {
         let a = partition(&bow, 6, Algorithm::A2, 1);
         let b = partition(&bow, 6, Algorithm::A2, 999);
         assert_eq!(a.doc_group, b.doc_group);
+    }
+
+    #[test]
+    fn parallel_draws_equal_serial_for_any_thread_count() {
+        // The satellite guarantee: the randomized algorithms' fan-out
+        // cannot change the chosen plan — draws are keyed by index and
+        // the reduction is order-independent.
+        let bow = generate(&Profile::tiny(), 21);
+        for algo in [Algorithm::A3 { restarts: 9 }, Algorithm::Baseline { restarts: 9 }] {
+            let serial = partition_threaded(&bow, 5, algo, 77, 1);
+            for threads in [2usize, 3, 8, 64] {
+                let par = partition_threaded(&bow, 5, algo, 77, threads);
+                assert_eq!(serial.doc_group, par.doc_group, "{} x{threads}", algo.name());
+                assert_eq!(serial.word_group, par.word_group, "{} x{threads}", algo.name());
+                assert_eq!(serial.eta, par.eta, "{} x{threads}", algo.name());
+            }
+        }
+    }
+
+    #[test]
+    fn default_draw_threads_scales_with_budget() {
+        assert_eq!(default_draw_threads(1), 1);
+        assert_eq!(default_draw_threads(3), 1, "tiny budgets stay serial");
+        let t = default_draw_threads(100);
+        assert!(t >= 1 && t <= 8);
+        assert!(t <= 25, "never more threads than restarts/4");
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Cost-aware adaptive scheduling: estimators that learn what a
+//! partition *actually costs* and the balance-mode knob that decides how
+//! the executor reacts.
+//!
+//! The paper scores plans by token counts (Eq. 1–2), which assumes every
+//! token costs the same to sample. The dense kernel honours that
+//! assumption; the sparse and alias kernels do not — their per-token cost
+//! depends on the partition's doc/word topic-sparsity (`k_doc + k_word`)
+//! and on alias-table amortization, so two partitions with equal token
+//! counts can differ several-fold in wallclock. Token-count LPT packing
+//! ([`crate::scheduler::schedule`]) then systematically mis-balances real
+//! sweep time — the exact failure mode the paper attacks, resurfacing one
+//! layer down. Two runtime fixes close the gap, both enabled by the
+//! determinism contract (task RNG keyed by `(sweep, partition)`, so *any*
+//! task-to-worker assignment is bit-identical):
+//!
+//! * **Adaptive re-packing** ([`BalanceMode::Adaptive`]) — workers stamp
+//!   each task's measured sweep nanos into its telemetry slot; a
+//!   [`Measured`] estimator folds them into per-partition EWMAs; between
+//!   sweeps the trainer calls [`crate::scheduler::schedule::Schedule::repack_with`]
+//!   so each diagonal's LPT packing chases measured cost instead of token
+//!   counts. The grid never changes — only who runs what.
+//! * **Work stealing** ([`BalanceMode::Steal`]) — within a diagonal, idle
+//!   workers pull the next unclaimed task from a shared per-diagonal
+//!   queue (an atomic cursor over the diagonal's task array), absorbing
+//!   both estimator error and machine noise at the cost of one atomic op
+//!   per task. See [`crate::scheduler::pool`].
+//!
+//! Both modes are bit-identical to [`BalanceMode::Static`] (and to the
+//! `Sequential` oracle) in trained counts; they differ only in which
+//! worker samples which partition, i.e. in wallclock.
+
+use crate::partition::eta::CostMatrix;
+use crate::scheduler::schedule::{partition_id, Schedule};
+
+/// How the executor balances per-epoch load across workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BalanceMode {
+    /// Token-count LPT packing, fixed at schedule build time (the PR-2
+    /// behaviour; exact when per-token cost is uniform).
+    Static,
+    /// Re-run LPT per diagonal between sweeps against a [`Measured`]
+    /// estimator, so assignments chase observed per-partition wallclock.
+    Adaptive,
+    /// Within-diagonal work stealing: assignments become hints and idle
+    /// workers pull from a shared per-diagonal queue at runtime.
+    Steal,
+}
+
+impl BalanceMode {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "static" => Some(Self::Static),
+            "adaptive" | "adapt" => Some(Self::Adaptive),
+            "steal" | "stealing" => Some(Self::Steal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Adaptive => "adaptive",
+            Self::Steal => "steal",
+        }
+    }
+}
+
+/// Predicts what one partition's sweep will cost, in abstract cost units
+/// (comparable *within* one estimator; LPT only needs relative order and
+/// additivity). Implementations observe measured wallclock after every
+/// sweep and refine.
+pub trait CostEstimator {
+    /// Estimated cost of sweeping partition `id` given its `tokens`.
+    fn estimate(&self, id: u64, tokens: u64) -> u64;
+
+    /// Record one measured sweep of partition `id`: `tokens` sampled in
+    /// `nanos` wallclock.
+    fn observe(&mut self, id: u64, tokens: u64, nanos: u64);
+
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's proxy: cost = token count. Never learns; packing against
+/// it reproduces the static schedule exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TokenCount;
+
+impl CostEstimator for TokenCount {
+    fn estimate(&self, _id: u64, tokens: u64) -> u64 {
+        tokens
+    }
+
+    fn observe(&mut self, _id: u64, _tokens: u64, _nanos: u64) {}
+
+    fn name(&self) -> &'static str {
+        "tokens"
+    }
+}
+
+/// EWMA smoothing factor: weight of the newest observation. High enough
+/// to track alias-table amortization kicking in after the first sweeps,
+/// low enough to ride out scheduler noise on a loaded box.
+const EWMA_ALPHA: f64 = 0.4;
+
+/// Per-partition EWMA of observed sweep nanos, seeded from token counts.
+///
+/// Partitions that have never been measured are estimated as
+/// `tokens × rate`, where `rate` is a global EWMA of nanos-per-token over
+/// all observations — so before the first sweep the estimator orders
+/// partitions exactly like [`TokenCount`] (a constant rate rescales every
+/// cost equally, which LPT is invariant to), and each observation then
+/// sharpens exactly the partitions it measured.
+#[derive(Clone, Debug)]
+pub struct Measured {
+    /// EWMA nanos per partition id; `NAN` = never observed.
+    ewma: Vec<f64>,
+    /// Global EWMA of nanos per token (the seed rate for unobserved
+    /// partitions); 0 until the first observation.
+    rate: f64,
+}
+
+impl Measured {
+    /// Estimator for a `grid × grid` plan.
+    pub fn new(grid: usize) -> Self {
+        Self {
+            ewma: vec![f64::NAN; grid * grid],
+            rate: 0.0,
+        }
+    }
+
+    /// Observed nanos-per-token rate (0 until the first observation).
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Fold a whole sweep's telemetry into the estimator: `nanos[l][m]`
+    /// is the measured cost of diagonal `l`'s position-`m` partition
+    /// under `costs` (zeros are skipped — an unmeasured or empty task
+    /// teaches nothing).
+    pub fn observe_sweep(&mut self, costs: &CostMatrix, nanos: &[Vec<u64>]) {
+        let p = costs.p();
+        for (l, diag) in nanos.iter().enumerate() {
+            for (m, &ns) in diag.iter().enumerate() {
+                if ns == 0 {
+                    continue;
+                }
+                let n = (m + l) % p;
+                self.observe(partition_id(m, n, p), costs.get(m, n), ns);
+            }
+        }
+    }
+
+    /// Rebuild `schedule`'s per-diagonal packings against this
+    /// estimator's current cost field (no-op for diagonal schedules; see
+    /// [`Schedule::repack_with`]).
+    pub fn repack(&self, schedule: &mut Schedule, costs: &CostMatrix) {
+        let p = costs.p();
+        schedule.repack_with(|m, n| self.estimate(partition_id(m, n, p), costs.get(m, n)));
+    }
+}
+
+impl CostEstimator for Measured {
+    fn estimate(&self, id: u64, tokens: u64) -> u64 {
+        let e = self.ewma[id as usize];
+        if e.is_finite() {
+            return e as u64;
+        }
+        if self.rate > 0.0 {
+            return (tokens as f64 * self.rate) as u64;
+        }
+        tokens
+    }
+
+    fn observe(&mut self, id: u64, tokens: u64, nanos: u64) {
+        let slot = &mut self.ewma[id as usize];
+        *slot = if slot.is_finite() {
+            (1.0 - EWMA_ALPHA) * *slot + EWMA_ALPHA * nanos as f64
+        } else {
+            nanos as f64
+        };
+        if tokens > 0 {
+            let r = nanos as f64 / tokens as f64;
+            self.rate = if self.rate > 0.0 {
+                (1.0 - EWMA_ALPHA) * self.rate + EWMA_ALPHA * r
+            } else {
+                r
+            };
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "measured"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::bow::BagOfWords;
+    use crate::scheduler::schedule::ScheduleKind;
+
+    #[test]
+    fn balance_mode_parses_cli_spellings() {
+        assert_eq!(BalanceMode::parse("static"), Some(BalanceMode::Static));
+        assert_eq!(BalanceMode::parse("adaptive"), Some(BalanceMode::Adaptive));
+        assert_eq!(BalanceMode::parse("adapt"), Some(BalanceMode::Adaptive));
+        assert_eq!(BalanceMode::parse("steal"), Some(BalanceMode::Steal));
+        assert_eq!(BalanceMode::parse("stealing"), Some(BalanceMode::Steal));
+        assert_eq!(BalanceMode::parse("dynamic"), None);
+        assert_eq!(BalanceMode::Adaptive.name(), "adaptive");
+        assert_eq!(BalanceMode::Steal.name(), "steal");
+        assert_eq!(BalanceMode::Static.name(), "static");
+    }
+
+    #[test]
+    fn token_count_is_identity_and_inert() {
+        let mut t = TokenCount;
+        assert_eq!(t.estimate(0, 17), 17);
+        t.observe(0, 17, 99_999);
+        assert_eq!(t.estimate(0, 17), 17, "TokenCount never learns");
+        assert_eq!(t.name(), "tokens");
+    }
+
+    #[test]
+    fn unseeded_measured_orders_like_token_count() {
+        let m = Measured::new(4);
+        assert_eq!(m.estimate(0, 10), 10);
+        assert_eq!(m.estimate(7, 500), 500);
+        assert_eq!(m.rate(), 0.0);
+    }
+
+    #[test]
+    fn observation_overrides_token_seed() {
+        let mut m = Measured::new(2);
+        // Partition 0: 100 tokens but measured *slow* (10µs); partition
+        // 1: 100 tokens, never measured, seeded from the global rate.
+        m.observe(0, 100, 10_000);
+        assert_eq!(m.estimate(0, 100), 10_000);
+        // Seed rate is 100 ns/token, so the unmeasured twin estimates
+        // 100 × 100 = 10_000 too — equal until evidence says otherwise.
+        assert_eq!(m.estimate(1, 100), 10_000);
+        // New evidence: partition 1 is 5× faster per token.
+        m.observe(1, 100, 2_000);
+        assert_eq!(m.estimate(1, 100), 2_000);
+        assert!(m.estimate(0, 100) > m.estimate(1, 100));
+    }
+
+    #[test]
+    fn ewma_converges_toward_repeated_observations() {
+        let mut m = Measured::new(1);
+        m.observe(0, 10, 1_000);
+        for _ in 0..40 {
+            m.observe(0, 10, 5_000);
+        }
+        let e = m.estimate(0, 10);
+        assert!((4_500..=5_000).contains(&e), "EWMA {e} should approach 5000");
+    }
+
+    #[test]
+    fn repack_chases_measured_cost_not_tokens() {
+        // 4×4 grid on 2 workers. Diagonal 0 has partitions with token
+        // counts {40, 40, 10, 10}: token-LPT pairs {40,10} {40,10}.
+        // But measurement says one of the 10-token partitions is
+        // actually the most expensive (alias-rebuild-heavy): the repack
+        // must isolate it.
+        let mut cells = Vec::new();
+        for m in 0..4u32 {
+            for n in 0..4u32 {
+                let tokens = if m == n { [40u32, 40, 10, 10][m as usize] } else { 1 };
+                cells.push((m, n, tokens));
+            }
+        }
+        let bow = BagOfWords::from_triplets(4, 4, cells);
+        let costs = CostMatrix::compute_p(&bow, &[0, 1, 2, 3], &[0, 1, 2, 3], 4);
+        let mut schedule = Schedule::build(ScheduleKind::Packed { grid_factor: 2 }, &costs, 2);
+
+        let mut est = Measured::new(4);
+        // Uniform 100 ns/token everywhere except partition (2,2): its 10
+        // tokens take 9000 ns (900 ns/token).
+        for m in 0..4usize {
+            let id = partition_id(m, m, 4);
+            let tokens = costs.get(m, m);
+            let nanos = if m == 2 { 9_000 } else { tokens * 100 };
+            est.observe(id, tokens, nanos);
+        }
+        est.repack(&mut schedule, &costs);
+
+        // Under the true (measured) cost field the repacked diagonal-0
+        // critical path must isolate the 9µs partition: {9000} vs
+        // {4000, 4000, 1000} → crit 9000, not 9000+1000.
+        let crit: u64 = schedule.epochs[0]
+            .assign
+            .iter()
+            .map(|list| {
+                list.iter()
+                    .map(|&m| {
+                        let m = m as usize;
+                        est.estimate(partition_id(m, m, 4), costs.get(m, m))
+                    })
+                    .sum::<u64>()
+            })
+            .max()
+            .unwrap();
+        assert_eq!(crit, 9_000, "repack must isolate the measured-slow partition");
+    }
+
+    #[test]
+    fn observe_sweep_skips_zeros_and_feeds_every_diagonal() {
+        let bow = BagOfWords::from_triplets(2, 2, [(0, 0, 4), (1, 1, 6), (0, 1, 2), (1, 0, 8)]);
+        let costs = CostMatrix::compute_p(&bow, &[0, 1], &[0, 1], 2);
+        let mut est = Measured::new(2);
+        // Diagonal 0 = {(0,0), (1,1)}; diagonal 1 = {(0,1), (1,0)}.
+        est.observe_sweep(&costs, &[vec![400, 0], vec![200, 800]]);
+        assert_eq!(est.estimate(partition_id(0, 0, 2), 4), 400);
+        assert_eq!(est.estimate(partition_id(0, 1, 2), 2), 200);
+        assert_eq!(est.estimate(partition_id(1, 0, 2), 8), 800);
+        // (1,1) was zero → unobserved → seeded from the global rate.
+        let rate = est.rate();
+        assert!(rate > 0.0);
+        assert_eq!(est.estimate(partition_id(1, 1, 2), 6), (6.0 * rate) as u64);
+    }
+}

@@ -89,6 +89,71 @@ impl SpeedupReport {
     }
 }
 
+/// The wallclock analogue of [`SpeedupReport`], built from per-task sweep
+/// telemetry instead of token counts: `η_measured = serial_nanos /
+/// (W · crit_nanos)` where `crit_nanos = Σ_l max_w busy(l, w)`. When
+/// per-token cost is uniform (dense kernel, quiet box) it coincides with
+/// token-η; under the sparse/alias kernels the gap between the two is the
+/// imbalance that token-count packing cannot see — and that adaptive
+/// re-packing / work stealing recover. Both trainers' reports carry it
+/// next to token-η so the gap is visible.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredReport {
+    /// Worker count the sweeps executed on.
+    pub workers: usize,
+    /// Measured-η (1.0 when nothing was measured).
+    pub eta: f64,
+    /// Measured speedup `η·W`.
+    pub speedup: f64,
+    /// Serial-equivalent sampling nanos (Σ over all tasks).
+    pub serial_nanos: u64,
+    /// Measured critical-path nanos (Σ_l max_w busy).
+    pub parallel_nanos: u64,
+}
+
+impl MeasuredReport {
+    /// From one sweep's telemetry.
+    pub fn of_stats(stats: &SweepStats) -> Self {
+        Self::of_parts(stats.workers, stats.busy_total_nanos(), stats.crit_nanos())
+    }
+
+    /// Merged over several sweeps (and/or phases): serial and critical
+    /// nanos accumulate, η is the ratio of the totals.
+    pub fn of_sweeps<'a>(stats: impl IntoIterator<Item = &'a SweepStats>) -> Self {
+        let mut workers = 1;
+        let mut serial = 0u64;
+        let mut crit = 0u64;
+        for s in stats {
+            workers = workers.max(s.workers);
+            serial += s.busy_total_nanos();
+            crit += s.crit_nanos();
+        }
+        Self::of_parts(workers, serial, crit)
+    }
+
+    /// From pre-accumulated totals — for drivers that fold sweeps as
+    /// they go instead of retaining every `SweepStats`.
+    pub fn of_nanos(workers: usize, serial_nanos: u64, parallel_nanos: u64) -> Self {
+        Self::of_parts(workers, serial_nanos, parallel_nanos)
+    }
+
+    fn of_parts(workers: usize, serial_nanos: u64, parallel_nanos: u64) -> Self {
+        let workers = workers.max(1);
+        let eta = if parallel_nanos == 0 {
+            1.0
+        } else {
+            serial_nanos as f64 / (workers as f64 * parallel_nanos as f64)
+        };
+        Self {
+            workers,
+            eta,
+            speedup: eta * workers as f64,
+            serial_nanos,
+            parallel_nanos,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +205,55 @@ mod tests {
         assert!((r.speedup - r.eta * 5.0).abs() < 1e-12);
         assert!(r.speedup <= 5.0 + 1e-9);
         assert!(r.speedup >= 1.0 - 1e-9); // eta ≥ 1/W always
+    }
+
+    #[test]
+    fn measured_report_accumulates_sweeps() {
+        let mk = |workers, worker_nanos: Vec<Vec<u64>>| SweepStats {
+            workers,
+            worker_nanos,
+            ..SweepStats::default()
+        };
+        // Sweep 1: epochs {3, 1} and {2, 2} → crit 3 + 2 = 5, serial 8.
+        let a = mk(2, vec![vec![3, 1], vec![2, 2]]);
+        // Sweep 2: one epoch {4, 0} → crit 4, serial 4.
+        let b = mk(2, vec![vec![4, 0]]);
+        let ra = MeasuredReport::of_stats(&a);
+        assert_eq!(ra.serial_nanos, 8);
+        assert_eq!(ra.parallel_nanos, 5);
+        assert!((ra.eta - 8.0 / 10.0).abs() < 1e-12);
+        assert!((ra.speedup - ra.eta * 2.0).abs() < 1e-12);
+        let r = MeasuredReport::of_sweeps([&a, &b]);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.serial_nanos, 12);
+        assert_eq!(r.parallel_nanos, 9);
+        assert!((r.eta - 12.0 / 18.0).abs() < 1e-12);
+        // Unmeasured telemetry degrades to the neutral report.
+        let empty = MeasuredReport::of_stats(&mk(4, vec![]));
+        assert_eq!(empty.eta, 1.0);
+        assert_eq!(empty.speedup, 4.0);
+    }
+
+    #[test]
+    fn measured_report_agrees_with_executed_sweep() {
+        let bow = generate(&Profile::tiny(), 45);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 45);
+        let mut lda = ParallelLda::init_scheduled(
+            &bow,
+            &plan,
+            4,
+            0.5,
+            0.1,
+            45,
+            ScheduleKind::Packed { grid_factor: 2 },
+            2,
+        );
+        let stats = lda.sweep(ExecMode::Sequential);
+        let r = MeasuredReport::of_stats(&stats);
+        assert_eq!(r.workers, 2);
+        assert!(r.serial_nanos > 0, "sweeps take measurable time");
+        assert!(r.eta > 0.0 && r.eta <= 1.0 + 1e-12, "eta {}", r.eta);
+        assert!((r.eta - stats.measured_eta()).abs() < 1e-12);
     }
 
     #[test]

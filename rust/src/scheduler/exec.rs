@@ -12,6 +12,7 @@ use crate::kernel::KernelKind;
 use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
+use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
@@ -70,6 +71,23 @@ pub struct SweepStats {
     pub total_tokens: u64,
     /// Worker count the sweep was scheduled onto.
     pub workers: usize,
+    /// Measured per-task sweep nanos: `task_nanos[l][m]` is what
+    /// diagonal `l`'s position-`m` partition actually cost — the
+    /// telemetry the [`crate::scheduler::adaptive::Measured`] estimator
+    /// learns from.
+    pub task_nanos: Vec<Vec<u64>>,
+    /// Measured per-worker busy nanos per epoch: `worker_nanos[l][w]`
+    /// is the sampling wallclock worker slot `w` spent in epoch `l`
+    /// (actual time under stealing, not the scheduled hint).
+    pub worker_nanos: Vec<Vec<u64>>,
+    /// Executor (sampling) seconds summed over epochs — the "sample"
+    /// phase bucket.
+    pub sample_secs: f64,
+    /// Barrier seconds (delta merging) summed over epochs.
+    pub barrier_secs: f64,
+    /// Update seconds: snapshot upkeep plus any adaptive
+    /// observe/re-pack work between epochs and sweeps.
+    pub update_secs: f64,
 }
 
 impl SweepStats {
@@ -77,6 +95,60 @@ impl SweepStats {
     /// (reduces to Eq. 1 under the diagonal schedule).
     pub fn measured_cost(&self) -> u64 {
         self.epoch_max_tokens.iter().sum()
+    }
+
+    /// Measured critical path of the sweep in nanos:
+    /// `Σ_l max_w busy(l, w)` — the wallclock analogue of Eq. 1, over
+    /// what workers actually spent rather than token counts.
+    pub fn crit_nanos(&self) -> u64 {
+        self.worker_nanos
+            .iter()
+            .map(|ws| ws.iter().copied().max().unwrap_or(0))
+            .sum()
+    }
+
+    /// Total measured sampling nanos (the serial-equivalent work).
+    pub fn busy_total_nanos(&self) -> u64 {
+        self.worker_nanos.iter().flatten().sum()
+    }
+
+    /// Per-worker busy nanos summed over the sweep's epochs.
+    pub fn worker_busy(&self) -> Vec<u64> {
+        let mut busy = vec![0u64; self.workers];
+        for ws in &self.worker_nanos {
+            for (w, &ns) in ws.iter().enumerate() {
+                busy[w] += ns;
+            }
+        }
+        busy
+    }
+
+    /// Per-worker idle nanos: time spent waiting at epoch barriers,
+    /// `Σ_l (max_w' busy(l, w') − busy(l, w))` — what imbalance costs
+    /// each worker.
+    pub fn worker_idle(&self) -> Vec<u64> {
+        let mut idle = vec![0u64; self.workers];
+        for ws in &self.worker_nanos {
+            let crit = ws.iter().copied().max().unwrap_or(0);
+            for (w, &ns) in ws.iter().enumerate() {
+                idle[w] += crit - ns;
+            }
+        }
+        idle
+    }
+
+    /// Measured-η: serial-equivalent sampling nanos over `W ×` the
+    /// measured critical path — Eq. 2 evaluated on wallclock instead of
+    /// token counts. Equals token-η when per-token cost is uniform;
+    /// the gap between the two is exactly what cost-aware balancing
+    /// (adaptive re-packing, stealing) recovers. Returns 1.0 when
+    /// nothing was measured.
+    pub fn measured_eta(&self) -> f64 {
+        let crit = self.crit_nanos();
+        if crit == 0 {
+            return 1.0;
+        }
+        self.busy_total_nanos() as f64 / (self.workers.max(1) as f64 * crit as f64)
     }
 }
 
@@ -98,6 +170,16 @@ pub struct ParallelLda {
     schedule: Schedule,
     /// Sampling kernel the executors run (see [`crate::kernel`]).
     kernel: KernelKind,
+    /// Load-balancing strategy (see [`crate::scheduler::adaptive`]):
+    /// static token-LPT, measured-cost re-packing between sweeps, or
+    /// within-epoch work stealing. Result-invariant — only wallclock
+    /// changes.
+    balance: BalanceMode,
+    /// Measured per-partition cost estimator feeding `Adaptive`
+    /// re-packing. It observes every sweep's telemetry regardless of
+    /// balance mode, so switching to `Adaptive` mid-training starts
+    /// warm.
+    estimator: Measured,
     seed: u64,
     sweeps_done: usize,
     /// Executor state; the persistent worker pool (if `Pooled` mode is
@@ -108,6 +190,10 @@ pub struct ParallelLda {
     snapshot: Vec<u32>,
     /// Per-task signed topic deltas, zeroed and rewritten each epoch.
     deltas: Vec<Vec<i64>>,
+    /// Per-task measured nanos, rewritten each epoch (telemetry scratch).
+    task_nanos: Vec<u64>,
+    /// Per-worker busy nanos, rewritten each epoch (telemetry scratch).
+    worker_nanos: Vec<u64>,
 }
 
 impl ParallelLda {
@@ -163,6 +249,7 @@ impl ParallelLda {
                 counts.absorb(b);
             }
         }
+        let workers = schedule.workers;
         Self {
             h: Hyper::new(k, alpha, beta, bow.num_words()),
             counts,
@@ -170,13 +257,17 @@ impl ParallelLda {
             blocks,
             ids,
             costs: plan.costs.clone(),
-            engines: EngineCache::new(schedule.workers),
+            engines: EngineCache::new(workers),
             schedule,
             kernel: KernelKind::Dense,
+            balance: BalanceMode::Static,
+            estimator: Measured::new(p),
             seed,
             sweeps_done: 0,
             snapshot: vec![0; k],
             deltas: vec![vec![0i64; k]; p],
+            task_nanos: vec![0; p],
+            worker_nanos: vec![0; workers],
         }
     }
 
@@ -187,6 +278,12 @@ impl ParallelLda {
     pub fn set_schedule(&mut self, kind: ScheduleKind, workers: usize) {
         self.schedule = Schedule::build(kind, &self.costs, workers);
         self.engines = EngineCache::new(workers);
+        self.worker_nanos = vec![0; workers];
+        if self.balance == BalanceMode::Adaptive {
+            // Fresh packings should chase measured cost immediately, not
+            // wait for the next sweep's repack.
+            self.estimator.repack(&mut self.schedule, &self.costs);
+        }
     }
 
     /// The schedule executing this trainer's sweeps.
@@ -208,6 +305,40 @@ impl ParallelLda {
         self.kernel
     }
 
+    /// Select the load-balancing strategy for subsequent sweeps (see
+    /// [`crate::scheduler::adaptive`]). Results are unaffected — the
+    /// partition-keyed RNG makes any task-to-worker assignment
+    /// bit-identical — only which worker runs what, and therefore
+    /// wallclock, changes. Switching away from `Adaptive` restores the
+    /// token-count packing.
+    pub fn set_balance(&mut self, balance: BalanceMode) {
+        if self.balance == balance {
+            return;
+        }
+        self.balance = balance;
+        match balance {
+            // Start from the estimator's best current guess.
+            BalanceMode::Adaptive => self.estimator.repack(&mut self.schedule, &self.costs),
+            // Back to the pure token packing (assignments are hints
+            // under `Steal`, but keep them at the static baseline).
+            BalanceMode::Static | BalanceMode::Steal => {
+                let costs = &self.costs;
+                self.schedule.repack_with(|m, n| costs.get(m, n));
+            }
+        }
+    }
+
+    /// The balance mode governing this trainer's sweeps.
+    pub fn balance(&self) -> BalanceMode {
+        self.balance
+    }
+
+    /// The measured per-partition cost estimator (telemetry-fed; drives
+    /// `Adaptive` re-packing).
+    pub fn estimator(&self) -> &Measured {
+        &self.estimator
+    }
+
     /// Worker slots the current schedule runs on.
     pub fn workers(&self) -> usize {
         self.schedule.workers
@@ -225,6 +356,7 @@ impl ParallelLda {
         let p = self.p;
         let k = self.h.k;
         let sweep_no = self.sweeps_done;
+        let steal = self.balance == BalanceMode::Steal;
         let mut stats = SweepStats {
             workers: self.schedule.workers,
             ..SweepStats::default()
@@ -232,7 +364,9 @@ impl ParallelLda {
 
         // Bring the persistent snapshot buffer up to date once per sweep
         // (k u32s — cheap); per-epoch it is maintained by the merge below.
+        let update_started = Instant::now();
         self.snapshot.copy_from_slice(&self.counts.topic);
+        stats.update_secs += update_started.elapsed().as_secs_f64();
 
         for l in 0..p {
             let epoch_started = Instant::now();
@@ -257,18 +391,37 @@ impl ParallelLda {
                 blocks: diag,
                 ids: &self.ids[l],
                 assign: &ep.assign,
+                nanos: &mut self.task_nanos[..n],
+                worker_nanos: &mut self.worker_nanos,
+                steal,
             };
             self.engines
                 .get(mode)
                 .run_epoch(&spec, tasks, &mut self.deltas[..n]);
+            stats.sample_secs += epoch_started.elapsed().as_secs_f64();
+            stats.task_nanos.push(self.task_nanos[..n].to_vec());
+            stats.worker_nanos.push(self.worker_nanos.clone());
 
             // Barrier: reconcile topic totals into both the authoritative
             // counts and the snapshot buffer for the next epoch.
+            let barrier_started = Instant::now();
             merge_deltas(&mut self.counts.topic, &mut self.snapshot, &self.deltas[..n]);
+            stats.barrier_secs += barrier_started.elapsed().as_secs_f64();
             stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
         }
 
         self.sweeps_done += 1;
+        // Fold the sweep's telemetry into the estimator regardless of
+        // balance mode (O(P) per sweep), so switching to `Adaptive`
+        // mid-training repacks from warm measurements; under `Adaptive`
+        // also re-pack each diagonal so the next sweep's assignments
+        // chase measured cost. Pure assignment motion: results unchanged.
+        let update_started = Instant::now();
+        self.estimator.observe_sweep(&self.costs, &stats.task_nanos);
+        if self.balance == BalanceMode::Adaptive {
+            self.estimator.repack(&mut self.schedule, &self.costs);
+        }
+        stats.update_secs += update_started.elapsed().as_secs_f64();
         // Debug builds (unit + integration test runs) audit the full
         // count/assignment invariant after every sweep, so a kernel
         // count-delta bug fails loudly at the sweep that introduced it
@@ -572,6 +725,163 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn stealing_is_bit_identical_across_kernels_modes_and_workers() {
+        // The stealing acceptance at trainer level: for each kernel,
+        // Sequential static diagonal is the oracle; stealing under
+        // packed schedules at W ∈ {1, 2, 4} in every exec mode matches
+        // bit for bit (assignments become dynamic, results must not).
+        for kernel in KernelKind::all() {
+            let (_bow, mut oracle) = setup(4, 91);
+            oracle.set_kernel(kernel);
+            for _ in 0..3 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                    let (_b, mut lda) = setup_scheduled(4, 91, kind, workers);
+                    lda.set_kernel(kernel);
+                    lda.set_balance(BalanceMode::Steal);
+                    assert_eq!(lda.balance(), BalanceMode::Steal);
+                    for _ in 0..3 {
+                        lda.sweep(mode);
+                    }
+                    assert_eq!(
+                        lda.counts.doc_topic,
+                        oracle.counts.doc_topic,
+                        "{kernel:?} {mode:?} W={workers} steal"
+                    );
+                    assert_eq!(
+                        lda.counts.word_topic,
+                        oracle.counts.word_topic,
+                        "{kernel:?} {mode:?} W={workers} steal"
+                    );
+                    assert_eq!(
+                        lda.counts.topic,
+                        oracle.counts.topic,
+                        "{kernel:?} {mode:?} W={workers} steal"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_matches_sequential_on_random_schedules() {
+        // Property form of the stealing guarantee: random corpora,
+        // random (g, W), every kernel — stealing Pooled and Threaded
+        // equal the static Sequential oracle bit for bit.
+        crate::testing::prop::check("steal-bit-identical", 0x57EA1, 6, |rng| {
+            let w = [1usize, 2, 4][rng.gen_range(3)];
+            let g = 1 + rng.gen_range(3);
+            let p = g * w;
+            let bow = crate::testing::prop::gen_bow(rng, 30, 30);
+            if bow.num_tokens() == 0 {
+                return;
+            }
+            let plan = partition(&bow, p, Algorithm::A3 { restarts: 1 }, rng.next_u64());
+            let kernel = KernelKind::all()[rng.gen_range(3)];
+            let kind = ScheduleKind::Packed { grid_factor: g };
+
+            let mut oracle = ParallelLda::init_scheduled(&bow, &plan, 4, 0.5, 0.1, 7, kind, w);
+            oracle.set_kernel(kernel);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let mut lda = ParallelLda::init_scheduled(&bow, &plan, 4, 0.5, 0.1, 7, kind, w);
+                lda.set_kernel(kernel);
+                lda.set_balance(BalanceMode::Steal);
+                for _ in 0..2 {
+                    lda.sweep(mode);
+                }
+                assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{kernel:?} {mode:?}");
+                assert_eq!(
+                    lda.counts.word_topic,
+                    oracle.counts.word_topic,
+                    "{kernel:?} {mode:?}"
+                );
+                assert_eq!(lda.counts.topic, oracle.counts.topic, "{kernel:?} {mode:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn adaptive_repacking_is_bit_identical_and_learns() {
+        // Adaptive re-packing moves assignments between sweeps; counts
+        // must not move, and the estimator must have learned a rate.
+        let (_bow, mut oracle) = setup(4, 93);
+        for _ in 0..4 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        for mode in [ExecMode::Sequential, ExecMode::Pooled] {
+            let (_b, mut lda) =
+                setup_scheduled(4, 93, ScheduleKind::Packed { grid_factor: 2 }, 2);
+            lda.set_balance(BalanceMode::Adaptive);
+            lda.set_kernel(KernelKind::Dense);
+            for _ in 0..4 {
+                lda.sweep(mode);
+            }
+            assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{mode:?}");
+            assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "{mode:?}");
+            assert_eq!(lda.counts.topic, oracle.counts.topic, "{mode:?}");
+            assert!(
+                lda.estimator().rate() > 0.0,
+                "estimator observed at least one measured task"
+            );
+        }
+    }
+
+    #[test]
+    fn balance_modes_can_be_switched_between_sweeps() {
+        let (_bow, mut a) = setup_scheduled(4, 94, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (_bow2, mut b) = setup(4, 94);
+        a.sweep(ExecMode::Pooled);
+        a.set_balance(BalanceMode::Adaptive);
+        a.sweep(ExecMode::Pooled);
+        a.set_balance(BalanceMode::Steal);
+        a.sweep(ExecMode::Pooled);
+        a.set_balance(BalanceMode::Static);
+        a.sweep(ExecMode::Sequential);
+        for _ in 0..4 {
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn sweep_telemetry_is_conserved_and_bounded() {
+        let (bow, mut lda) = setup_scheduled(6, 95, ScheduleKind::Packed { grid_factor: 3 }, 2);
+        for mode in [ExecMode::Sequential, ExecMode::Pooled] {
+            let stats = lda.sweep(mode);
+            assert_eq!(stats.task_nanos.len(), 6);
+            assert_eq!(stats.worker_nanos.len(), 6);
+            for ws in &stats.worker_nanos {
+                assert_eq!(ws.len(), 2);
+            }
+            // Per-worker busy conserves per-task time.
+            let task_total: u64 = stats.task_nanos.iter().flatten().sum();
+            assert_eq!(task_total, stats.busy_total_nanos(), "{mode:?}");
+            assert!(task_total > 0, "a real sweep takes measurable time");
+            // Eq. 2 on wallclock: 1/W ≤ η ≤ 1.
+            let eta = stats.measured_eta();
+            assert!(eta > 0.0 && eta <= 1.0 + 1e-12, "{mode:?}: measured eta {eta}");
+            assert!(stats.crit_nanos() >= task_total / 2, "crit >= mean over W=2");
+            // Busy + idle per worker is constant (= Σ_l crit_l).
+            let busy = stats.worker_busy();
+            let idle = stats.worker_idle();
+            let crit = stats.crit_nanos();
+            for w in 0..2 {
+                assert_eq!(busy[w] + idle[w], crit, "{mode:?} worker {w}");
+            }
+            assert_eq!(stats.total_tokens, bow.num_tokens());
+            assert!(stats.sample_secs > 0.0);
         }
     }
 

@@ -25,13 +25,23 @@
 //! ([`pool::SequentialExec`]), per-epoch scoped threads
 //! ([`pool::ThreadedExec`]), or the persistent [`pool::WorkerPool`] with
 //! long-lived per-worker scratch (see `docs/executor.md`).
+//!
+//! On top of the static schedule sits the cost-aware adaptive layer
+//! ([`adaptive`]): per-task wallclock telemetry feeds a measured
+//! per-partition cost estimator, which can re-pack each diagonal between
+//! sweeps ([`adaptive::BalanceMode::Adaptive`]) or be bypassed entirely
+//! by within-epoch work stealing ([`adaptive::BalanceMode::Steal`]) —
+//! both bit-identical to static execution, by the same RNG-keying
+//! argument (see `docs/scheduling.md`).
 
+pub mod adaptive;
 pub mod cost_model;
 pub mod exec;
 pub mod pool;
 pub mod schedule;
 pub mod shared;
 
+pub use adaptive::{BalanceMode, CostEstimator, Measured, TokenCount};
 pub use exec::{ExecMode, ParallelLda};
 pub use pool::{Executor, WorkerPool};
 pub use schedule::{Schedule, ScheduleKind};

@@ -38,10 +38,13 @@
 //! 1. **Scatter** — the coordinator sends each worker with a non-empty
 //!    task list one lifetime-erased [`Job`] describing the epoch's block
 //!    array plus that worker's index list into it.
-//! 2. **Sample** — the worker walks its list; for each task it zeroes the
-//!    task's delta slot, derives the task's RNG stream, and runs the
+//! 2. **Sample** — the worker walks its list (or, in work-stealing mode,
+//!    claims tasks from the epoch's shared atomic cursor until it is
+//!    exhausted — see [`EpochTasks::steal`]); for each task it zeroes the
+//!    task's delta slot, derives the task's RNG stream, runs the
 //!    selected sampling kernel ([`crate::kernel`]) — a long-lived,
-//!    worker-owned instance whose scratch persists across epochs.
+//!    worker-owned instance whose scratch persists across epochs — and
+//!    stamps the task's measured sweep nanos into its telemetry slot.
 //! 3. **Gather** — the coordinator blocks until it has received exactly
 //!    one completion per submitted job. Only then does it merge deltas
 //!    and advance, so every raw pointer inside a `Job` outlives its use.
@@ -57,8 +60,10 @@
 //! determinism tests in `exec.rs` / `bot/parallel.rs` pin this.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
@@ -111,6 +116,24 @@ pub struct EpochTasks<'a> {
     pub ids: &'a [u64],
     /// Per-worker task lists: indices into `blocks`/`ids`/`deltas`.
     pub assign: &'a [Vec<u32>],
+    /// Per-task telemetry slots, parallel to `blocks`: whichever worker
+    /// runs task `i` stamps its measured sweep nanos into `nanos[i]`
+    /// (exclusive under the same ownership rule as the delta slot).
+    /// Zeroed by the executor; feeds the [`crate::scheduler::adaptive`]
+    /// cost estimators.
+    pub nanos: &'a mut [u64],
+    /// Per-worker-slot busy nanos for the epoch (length == `assign`
+    /// length), zeroed and filled by the executor: the wallclock each
+    /// worker slot actually spent sampling, under stealing as well as
+    /// static assignment.
+    pub worker_nanos: &'a mut [u64],
+    /// Work stealing: when set, `assign` still pins the schedule
+    /// invariant (every task exactly once) but execution ignores list
+    /// membership — workers claim tasks from a shared per-epoch cursor
+    /// over `blocks` (an atomic fetch-add), so an idle worker absorbs a
+    /// slow one's backlog. Bit-identical to static execution because
+    /// task RNG streams and delta slots are per-partition.
+    pub steal: bool,
 }
 
 /// Executes diagonal epochs. One call = one epoch: each task `i` sweeps
@@ -152,6 +175,12 @@ fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
     let n = tasks.blocks.len();
     assert_eq!(n, tasks.ids.len(), "one id per block");
     assert_eq!(n, deltas.len(), "one delta slot per block");
+    assert_eq!(n, tasks.nanos.len(), "one nanos slot per block");
+    assert_eq!(
+        tasks.assign.len(),
+        tasks.worker_nanos.len(),
+        "one busy slot per worker"
+    );
     if n <= 128 {
         // Bitmask fast path: preserves the zero-per-epoch-allocation
         // property for every realistic grid.
@@ -189,15 +218,18 @@ fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
 /// derive the partition's RNG stream, hand the task to the sampling
 /// kernel. The kernel owns its scratch (see [`crate::kernel`]); the
 /// diagonal non-conflict invariant makes the shared row access
-/// race-free.
+/// race-free. Returns the task's measured sweep nanos — the telemetry
+/// the worker stamps into the task's `nanos` slot and the
+/// [`crate::scheduler::adaptive::Measured`] estimator learns from.
 fn run_task(
     spec: &EpochSpec<'_>,
     partition: u64,
     block: &mut TokenBlock,
     delta: &mut [i64],
     kernel: &mut dyn Kernel,
-) {
+) -> u64 {
     debug_assert_eq!(delta.len(), spec.h.k);
+    let started = Instant::now();
     delta.fill(0);
     let mut rng = task_rng(spec.seed, spec.sweep, partition);
     let ctx = TaskCtx {
@@ -207,6 +239,7 @@ fn run_task(
         h: spec.h,
     };
     kernel.sweep_task(&ctx, block, delta, &mut rng);
+    started.elapsed().as_nanos() as u64
 }
 
 /// A worker's long-lived kernel instance: rebuilt only when the
@@ -228,8 +261,10 @@ impl KernelSlot {
 /// In-order execution on the calling thread. The determinism oracle for
 /// the parallel modes, and the zero-overhead mode for single-core boxes;
 /// owns its kernel (and thereby its scratch) so repeated sweeps allocate
-/// nothing. Runs tasks in block order — equivalent to any worker
-/// assignment, since task RNG streams and delta slots are per-partition.
+/// nothing. Runs tasks worker-list by worker-list (attributing busy time
+/// to the worker slot the schedule assigned) — equivalent to any other
+/// order, since task RNG streams and delta slots are per-partition; for
+/// the same reason the `steal` flag changes nothing here and is ignored.
 #[derive(Default)]
 pub struct SequentialExec {
     kernel: KernelSlot,
@@ -243,20 +278,38 @@ impl Executor for SequentialExec {
         deltas: &mut [Vec<i64>],
     ) {
         check_tasks(&tasks, deltas);
+        tasks.nanos.fill(0);
+        tasks.worker_nanos.fill(0);
         let kernel = self.kernel.get(spec.kernel);
-        let pairs = tasks.blocks.iter_mut().zip(deltas.iter_mut());
-        for (i, (block, delta)) in pairs.enumerate() {
-            run_task(spec, tasks.ids[i], block, delta, &mut *kernel);
+        for (w, list) in tasks.assign.iter().enumerate() {
+            let mut busy = 0u64;
+            for &i in list {
+                let i = i as usize;
+                let dt = run_task(
+                    spec,
+                    tasks.ids[i],
+                    &mut tasks.blocks[i],
+                    &mut deltas[i],
+                    &mut *kernel,
+                );
+                tasks.nanos[i] = dt;
+                busy += dt;
+            }
+            tasks.worker_nanos[w] = busy;
         }
     }
 }
 
 /// A `Send` raw-pointer wrapper for handing the epoch's task arrays to
 /// scoped worker threads; the schedule invariant (each index owned by
-/// exactly one worker) makes the aliasing sound.
+/// exactly one worker — under stealing, by exactly one *claimer* via the
+/// unique atomic-cursor index) makes the aliasing sound. `busy` has one
+/// slot per worker slot, written only by that slot's thread.
 struct TaskArrays {
     blocks: *mut TokenBlock,
     deltas: *mut Vec<i64>,
+    nanos: *mut u64,
+    busy: *mut u64,
 }
 unsafe impl Send for TaskArrays {}
 
@@ -275,30 +328,84 @@ impl Executor for ThreadedExec {
         deltas: &mut [Vec<i64>],
     ) {
         check_tasks(&tasks, deltas);
+        tasks.nanos.fill(0);
+        tasks.worker_nanos.fill(0);
         let ids = tasks.ids;
+        let n = tasks.blocks.len();
         let blocks_ptr = tasks.blocks.as_mut_ptr();
         let deltas_ptr = deltas.as_mut_ptr();
-        std::thread::scope(|s| {
-            for list in tasks.assign.iter().filter(|l| !l.is_empty()) {
-                let arrays = TaskArrays {
-                    blocks: blocks_ptr,
-                    deltas: deltas_ptr,
-                };
-                s.spawn(move || {
-                    let mut kernel = spec.kernel.build();
-                    for &i in list {
-                        let i = i as usize;
-                        // SAFETY: `check_tasks` invariant — index
-                        // `i` belongs to this worker alone, so the block
-                        // and delta slot are exclusively ours until the
-                        // scope joins.
-                        let block = unsafe { &mut *arrays.blocks.add(i) };
-                        let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
-                        run_task(spec, ids[i], block, delta, kernel.as_mut());
+        let nanos_ptr = tasks.nanos.as_mut_ptr();
+        let busy_ptr = tasks.worker_nanos.as_mut_ptr();
+        if tasks.steal {
+            // Shared per-epoch queue: the next unclaimed task index. A
+            // fetch-add hands each task to exactly one thread, so the
+            // exclusivity invariant holds dynamically instead of via the
+            // static lists.
+            let cursor = AtomicUsize::new(0);
+            let cursor = &cursor;
+            std::thread::scope(|s| {
+                for w in 0..tasks.assign.len().min(n) {
+                    let arrays = TaskArrays {
+                        blocks: blocks_ptr,
+                        deltas: deltas_ptr,
+                        nanos: nanos_ptr,
+                        busy: busy_ptr,
+                    };
+                    s.spawn(move || {
+                        let mut kernel = spec.kernel.build();
+                        let mut busy = 0u64;
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            // SAFETY: the fetch-add yields index `i` to
+                            // this thread alone; the scope join sequences
+                            // all other access.
+                            let block = unsafe { &mut *arrays.blocks.add(i) };
+                            let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
+                            let dt = run_task(spec, ids[i], block, delta, kernel.as_mut());
+                            unsafe { *arrays.nanos.add(i) = dt };
+                            busy += dt;
+                        }
+                        // SAFETY: slot `w` is this thread's alone.
+                        unsafe { *arrays.busy.add(w) = busy };
+                    });
+                }
+            });
+        } else {
+            std::thread::scope(|s| {
+                for (w, list) in tasks.assign.iter().enumerate() {
+                    if list.is_empty() {
+                        continue;
                     }
-                });
-            }
-        });
+                    let arrays = TaskArrays {
+                        blocks: blocks_ptr,
+                        deltas: deltas_ptr,
+                        nanos: nanos_ptr,
+                        busy: busy_ptr,
+                    };
+                    s.spawn(move || {
+                        let mut kernel = spec.kernel.build();
+                        let mut busy = 0u64;
+                        for &i in list {
+                            let i = i as usize;
+                            // SAFETY: `check_tasks` invariant — index
+                            // `i` belongs to this worker alone, so the
+                            // block, delta, and nanos slots are
+                            // exclusively ours until the scope joins.
+                            let block = unsafe { &mut *arrays.blocks.add(i) };
+                            let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
+                            let dt = run_task(spec, ids[i], block, delta, kernel.as_mut());
+                            unsafe { *arrays.nanos.add(i) = dt };
+                            busy += dt;
+                        }
+                        // SAFETY: slot `w` is this thread's alone.
+                        unsafe { *arrays.busy.add(w) = busy };
+                    });
+                }
+            });
+        }
     }
 }
 
@@ -310,8 +417,16 @@ struct Job {
     blocks: *mut TokenBlock,
     ids: *const u64,
     deltas: *mut Vec<i64>,
+    /// Per-task telemetry slots, parallel to `blocks` (see
+    /// [`EpochTasks::nanos`]).
+    nanos: *mut u64,
     assign: *const u32,
     assign_len: usize,
+    /// Work-stealing queue: the epoch's shared next-unclaimed-task
+    /// cursor, or null for static execution over `assign`.
+    queue: *const AtomicUsize,
+    /// Task count of the epoch (the stealing cursor's exclusive bound).
+    n_tasks: usize,
     doc: *mut f32,
     /// Row count of `doc` (debug bounds parity with `SharedRows::row_ptr`).
     doc_rows: usize,
@@ -327,13 +442,14 @@ struct Job {
 }
 
 // SAFETY: Job transfers *exclusive logical ownership* of the worker's
-// assigned blocks, delta slots, and row groups to exactly one worker for
-// the duration of one epoch; the coordinator's gather barrier sequences
-// all other access. The snapshot and index list are read-only for the
-// epoch.
+// assigned blocks, delta slots, and telemetry slots to exactly one worker
+// for the duration of one epoch — statically via `assign`, or dynamically
+// via the unique indices the shared atomic cursor hands out — and the
+// coordinator's gather barrier sequences all other access. The snapshot,
+// index list, and cursor (`AtomicUsize` is `Sync`) are safe to share.
 unsafe impl Send for Job {}
 
-fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
+fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool, u64)>) {
     // Long-lived kernel (and thereby scratch): built on the first epoch,
     // reused forever after — rebuilt only if the trainer switches kernel
     // kinds between sweeps.
@@ -342,12 +458,11 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
         let k = job.h.k;
         // Catch panics so a failed debug assertion surfaces as a
         // coordinator panic instead of a deadlocked gather barrier.
-        let ok = catch_unwind(AssertUnwindSafe(|| {
+        let result = catch_unwind(AssertUnwindSafe(|| {
             // SAFETY: see `Job` — exclusive ownership until the done
             // signal below is observed. Rebuilding an `EpochSpec` routes
             // the pooled path through the same `run_task` body (and
             // `SharedRows` bounds checks) as the other executors.
-            let assign = unsafe { std::slice::from_raw_parts(job.assign, job.assign_len) };
             let snapshot = unsafe { std::slice::from_raw_parts(job.snapshot, k) };
             let spec = EpochSpec {
                 doc: unsafe { SharedRows::from_raw(job.doc, job.doc_rows, k) },
@@ -359,16 +474,43 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
                 kernel: job.kernel,
             };
             let kernel = kernel.get(job.kernel);
-            for &i in assign {
-                let i = i as usize;
+            let mut busy = 0u64;
+            let mut body = |i: usize| {
+                // SAFETY: index `i` is exclusively this worker's — by
+                // the `check_tasks` invariant in static mode, by the
+                // unique fetch-add in stealing mode.
                 let block = unsafe { &mut *job.blocks.add(i) };
                 let delta = unsafe { (*job.deltas.add(i)).as_mut_slice() };
                 let id = unsafe { *job.ids.add(i) };
-                run_task(&spec, id, block, delta, &mut *kernel);
+                let dt = run_task(&spec, id, block, delta, &mut *kernel);
+                unsafe { *job.nanos.add(i) = dt };
+                busy += dt;
+            };
+            if job.queue.is_null() {
+                let assign =
+                    unsafe { std::slice::from_raw_parts(job.assign, job.assign_len) };
+                for &i in assign {
+                    body(i as usize);
+                }
+            } else {
+                // SAFETY: the cursor outlives the epoch (it lives in the
+                // pool, which blocks on the gather barrier).
+                let queue = unsafe { &*job.queue };
+                loop {
+                    let i = queue.fetch_add(1, Ordering::Relaxed);
+                    if i >= job.n_tasks {
+                        break;
+                    }
+                    body(i);
+                }
             }
-        }))
-        .is_ok();
-        if done.send((job.worker, ok)).is_err() {
+            busy
+        }));
+        let (ok, busy) = match result {
+            Ok(busy) => (true, busy),
+            Err(_) => (false, 0),
+        };
+        if done.send((job.worker, ok, busy)).is_err() {
             break; // coordinator gone
         }
     }
@@ -382,9 +524,15 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool)>) {
 /// epochs, so an idle pool costs nothing but memory.
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
-    done_rx: Receiver<(usize, bool)>,
+    done_rx: Receiver<(usize, bool, u64)>,
     handles: Vec<JoinHandle<()>>,
     epochs_run: u64,
+    /// The shared work-stealing cursor (see [`EpochTasks::steal`]),
+    /// reset before each stealing epoch. Lives in the pool so its
+    /// address is valid for exactly as long as the workers are — the
+    /// gather barrier inside [`Executor::run_epoch`] guarantees no
+    /// worker touches it after the epoch returns.
+    steal_cursor: AtomicUsize,
 }
 
 impl WorkerPool {
@@ -406,6 +554,7 @@ impl WorkerPool {
             done_rx,
             handles,
             epochs_run: 0,
+            steal_cursor: AtomicUsize::new(0),
         }
     }
 
@@ -437,20 +586,36 @@ impl Executor for WorkerPool {
             tasks.assign.len(),
             self.senders.len()
         );
-        // Scatter: one job per worker with a non-empty task list.
+        tasks.nanos.fill(0);
+        tasks.worker_nanos.fill(0);
+        let n = tasks.blocks.len();
+        // Scatter: one job per worker with a non-empty task list — or,
+        // when stealing, one job per worker slot that could claim a task
+        // (all of them compete over the shared cursor).
+        let queue: *const AtomicUsize = if tasks.steal {
+            self.steal_cursor.store(0, Ordering::Relaxed);
+            &self.steal_cursor
+        } else {
+            std::ptr::null()
+        };
         let blocks_ptr = tasks.blocks.as_mut_ptr();
         let deltas_ptr = deltas.as_mut_ptr();
+        let nanos_ptr = tasks.nanos.as_mut_ptr();
         let mut submitted = 0usize;
         for (w, list) in tasks.assign.iter().enumerate() {
-            if list.is_empty() {
+            let busy_slot = if tasks.steal { w < n } else { !list.is_empty() };
+            if !busy_slot {
                 continue;
             }
             let job = Job {
                 blocks: blocks_ptr,
                 ids: tasks.ids.as_ptr(),
                 deltas: deltas_ptr,
+                nanos: nanos_ptr,
                 assign: list.as_ptr(),
                 assign_len: list.len(),
+                queue,
+                n_tasks: n,
                 doc: spec.doc.base_ptr(),
                 doc_rows: spec.doc.rows(),
                 emit: spec.emit.base_ptr(),
@@ -469,7 +634,8 @@ impl Executor for WorkerPool {
         // this loop no worker holds any pointer from this epoch.
         let mut panicked = false;
         for _ in 0..submitted {
-            let (_, ok) = self.done_rx.recv().expect("pool worker died");
+            let (w, ok, busy) = self.done_rx.recv().expect("pool worker died");
+            tasks.worker_nanos[w] = busy;
             panicked |= !ok;
         }
         assert!(!panicked, "a pool worker panicked during the epoch");
@@ -556,21 +722,24 @@ mod tests {
         (blocks, counts, Hyper::new(k, 0.5, 0.1, 4))
     }
 
-    fn run_kernel_assignment(
+    fn run_kernel_assignment_stealing(
         mode: ExecMode,
         kernel: KernelKind,
         epochs: usize,
         assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
         workers: usize,
+        steal: bool,
     ) -> (Vec<TokenBlock>, LdaCounts) {
         let k = 4;
         let (mut blocks, mut counts, h) = diagonal_fixture(k, 7);
         let ids = [0u64, 1];
         let mut engines = EngineCache::new(workers);
         let mut deltas = vec![vec![0i64; k]; 2];
+        let mut nanos = vec![0u64; 2];
         let mut snapshot = counts.topic.clone();
         for e in 0..epochs {
             let assign = assign_of(e);
+            let mut worker_nanos = vec![0u64; assign.len()];
             let spec = EpochSpec {
                 doc: SharedRows::new(&mut counts.doc_topic, k),
                 emit: SharedRows::new(&mut counts.word_topic, k),
@@ -584,11 +753,30 @@ mod tests {
                 blocks: &mut blocks,
                 ids: &ids,
                 assign: &assign,
+                nanos: &mut nanos,
+                worker_nanos: &mut worker_nanos,
+                steal,
             };
             engines.get(mode).run_epoch(&spec, tasks, &mut deltas);
+            // Telemetry conservation: every task's nanos is stamped by
+            // exactly one claimer, so per-worker busy sums to the
+            // per-task total in every mode.
+            let task_total: u64 = nanos.iter().sum();
+            let busy_total: u64 = worker_nanos.iter().sum();
+            assert_eq!(task_total, busy_total, "{mode:?} steal={steal}");
             merge_deltas(&mut counts.topic, &mut snapshot, &deltas);
         }
         (blocks, counts)
+    }
+
+    fn run_kernel_assignment(
+        mode: ExecMode,
+        kernel: KernelKind,
+        epochs: usize,
+        assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
+        workers: usize,
+    ) -> (Vec<TokenBlock>, LdaCounts) {
+        run_kernel_assignment_stealing(mode, kernel, epochs, assign_of, workers, false)
     }
 
     fn run_assignment(
@@ -747,6 +935,8 @@ mod tests {
         let assign = identity_assign(2);
         let mut engines = EngineCache::new(2);
         let mut deltas = vec![vec![0i64; k]; 2];
+        let mut nanos = vec![0u64; 2];
+        let mut worker_nanos = vec![0u64; 2];
         let snapshot = counts.topic.clone();
         for e in 0..5 {
             let spec = EpochSpec {
@@ -762,6 +952,9 @@ mod tests {
                 blocks: &mut blocks,
                 ids: &ids,
                 assign: &assign,
+                nanos: &mut nanos,
+                worker_nanos: &mut worker_nanos,
+                steal: false,
             };
             engines.get(ExecMode::Pooled).run_epoch(&spec, tasks, &mut deltas);
         }
@@ -788,6 +981,8 @@ mod tests {
         let assign = [vec![0u32], Vec::new(), Vec::new()];
         let mut pool = WorkerPool::new(3);
         let mut deltas = vec![vec![0i64; k]];
+        let mut nanos = vec![0u64; 1];
+        let mut worker_nanos = vec![0u64; 3];
         let snapshot = counts.topic.clone();
         let spec = EpochSpec {
             doc: SharedRows::new(&mut counts.doc_topic, k),
@@ -802,9 +997,83 @@ mod tests {
             blocks: &mut blocks,
             ids: &ids,
             assign: &assign,
+            nanos: &mut nanos,
+            worker_nanos: &mut worker_nanos,
+            steal: false,
         };
         pool.run_epoch(&spec, tasks, &mut deltas);
         assert_eq!(pool.epochs_run(), 1);
         assert_eq!(deltas[0].iter().sum::<i64>(), 0, "deltas conserve tokens");
+        assert_eq!(worker_nanos[1], 0, "idle slot reports no busy time");
+        assert_eq!(worker_nanos[0], nanos[0], "busy slot owns the task's nanos");
+    }
+
+    #[test]
+    fn stealing_agrees_with_static_in_every_mode() {
+        // The stealing acceptance at executor level: for each kernel,
+        // every executor with steal=true matches the static Sequential
+        // oracle bit for bit, under both the identity layout and a
+        // deliberately lopsided one (all tasks hinted onto worker 0,
+        // which stealing redistributes at runtime).
+        for kernel in KernelKind::all() {
+            let (bs, cs) =
+                run_kernel_assignment(ExecMode::Sequential, kernel, 3, |_| identity_assign(2), 2);
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                for assign_of in [
+                    (|_: usize| identity_assign(2)) as fn(usize) -> Vec<Vec<u32>>,
+                    |_: usize| vec![vec![0u32, 1], Vec::new()],
+                ] {
+                    let (b, c) = run_kernel_assignment_stealing(
+                        mode, kernel, 3, assign_of, 2, true,
+                    );
+                    for (x, y) in bs.iter().zip(b.iter()) {
+                        assert_eq!(x.z, y.z, "{kernel:?} {mode:?} steal");
+                    }
+                    assert_eq!(cs.doc_topic, c.doc_topic, "{kernel:?} {mode:?} steal");
+                    assert_eq!(cs.word_topic, c.word_topic, "{kernel:?} {mode:?} steal");
+                    assert_eq!(cs.topic, c.topic, "{kernel:?} {mode:?} steal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_pool_runs_narrow_epochs() {
+        // Stealing with more worker slots than tasks: only the first
+        // `n` slots receive jobs; no deadlock, full coverage.
+        let k = 4;
+        let (mut blocks, mut counts, h) = diagonal_fixture(k, 17);
+        let ids = [0u64, 1];
+        let assign = [vec![0u32, 1], Vec::new(), Vec::new(), Vec::new()];
+        let mut pool = WorkerPool::new(4);
+        let mut deltas = vec![vec![0i64; k]; 2];
+        let mut nanos = vec![0u64; 2];
+        let mut worker_nanos = vec![0u64; 4];
+        let snapshot = counts.topic.clone();
+        let spec = EpochSpec {
+            doc: SharedRows::new(&mut counts.doc_topic, k),
+            emit: SharedRows::new(&mut counts.word_topic, k),
+            snapshot: &snapshot,
+            h,
+            seed: 9,
+            sweep: 0,
+            kernel: KernelKind::Dense,
+        };
+        let tasks = EpochTasks {
+            blocks: &mut blocks,
+            ids: &ids,
+            assign: &assign,
+            nanos: &mut nanos,
+            worker_nanos: &mut worker_nanos,
+            steal: true,
+        };
+        pool.run_epoch(&spec, tasks, &mut deltas);
+        assert_eq!(pool.epochs_run(), 1);
+        assert!(nanos.iter().all(|&ns| ns > 0), "every task measured");
+        assert_eq!(
+            worker_nanos.iter().sum::<u64>(),
+            nanos.iter().sum::<u64>(),
+            "busy time conserves task time"
+        );
     }
 }

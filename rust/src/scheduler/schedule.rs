@@ -187,25 +187,77 @@ impl Schedule {
     }
 
     /// Schedule-aware sweep cost (the Eq. 1 analogue for `W` workers):
-    /// `Σ_l max_w assigned_tokens(w, l)`.
+    /// `Σ_l max_w assigned_tokens(w, l)` — [`Self::cost_with`] under the
+    /// token-cost field.
     pub fn cost(&self, costs: &CostMatrix) -> u64 {
-        (0..self.grid)
-            .map(|l| self.epoch_loads(costs, l).into_iter().max().unwrap_or(0))
+        self.cost_with(|m, n| costs.get(m, n))
+    }
+
+    /// Re-run every diagonal's LPT packing against an arbitrary cost
+    /// field `cost(m, n)` — the sweep-to-sweep re-packing hook behind
+    /// [`crate::scheduler::adaptive::Measured::repack`]. The grid stays
+    /// fixed; only the task→worker assignment moves, which the
+    /// `(sweep, partition)` RNG keying makes result-invariant, so a
+    /// trainer may repack between any two sweeps without changing
+    /// trained counts. Diagonal schedules are left untouched: with one
+    /// task per worker per epoch there is no packing freedom (any
+    /// permutation has the same critical path).
+    pub fn repack_with(&mut self, cost: impl Fn(usize, usize) -> u64) {
+        if self.kind == ScheduleKind::Diagonal {
+            return;
+        }
+        let p = self.grid;
+        let w = self.workers;
+        for (l, ep) in self.epochs.iter_mut().enumerate() {
+            ep.assign = pack_lpt_by(p, w, l, &cost);
+        }
+    }
+
+    /// Critical path of the schedule under an arbitrary cost field:
+    /// `Σ_l max_w Σ_{tasks of w} cost(m, n)`. The objective
+    /// [`Self::repack_with`] packs against; [`Self::cost`] is the
+    /// token-count special case.
+    pub fn cost_with(&self, cost: impl Fn(usize, usize) -> u64) -> u64 {
+        let p = self.grid;
+        self.epochs
+            .iter()
+            .enumerate()
+            .map(|(l, ep)| {
+                ep.assign
+                    .iter()
+                    .map(|list| {
+                        list.iter()
+                            .map(|&m| cost(m as usize, (m as usize + l) % p))
+                            .sum::<u64>()
+                    })
+                    .max()
+                    .unwrap_or(0)
+            })
             .sum()
     }
 }
 
 /// Longest-processing-time-first packing of diagonal `l`'s `P` partitions
-/// onto `workers` bins: walk the partitions in descending token order and
-/// give each to the currently lightest worker. Ties break toward the
-/// lower diagonal position / lower worker index, so the packing is a pure
-/// function of the cost matrix.
+/// onto `workers` bins under the token-cost matrix.
 fn pack_lpt(costs: &CostMatrix, l: usize, workers: usize) -> Vec<Vec<u32>> {
-    let p = costs.p();
+    pack_lpt_by(costs.p(), workers, l, |m, n| costs.get(m, n))
+}
+
+/// LPT packing of diagonal `l`'s `p` partitions onto `workers` bins under
+/// an arbitrary cost field `cost(m, n)`: walk the partitions in
+/// descending cost order and give each to the currently lightest worker.
+/// Ties break toward the lower diagonal position / lower worker index, so
+/// the packing is a pure function of the cost field.
+pub fn pack_lpt_by(
+    p: usize,
+    workers: usize,
+    l: usize,
+    cost: impl Fn(usize, usize) -> u64,
+) -> Vec<Vec<u32>> {
     let mut order: Vec<u32> = (0..p as u32).collect();
     order.sort_by(|&a, &b| {
-        let ca = costs.get(a as usize, (a as usize + l) % p);
-        let cb = costs.get(b as usize, (b as usize + l) % p);
+        let ca = cost(a as usize, (a as usize + l) % p);
+        let cb = cost(b as usize, (b as usize + l) % p);
         cb.cmp(&ca).then(a.cmp(&b))
     });
     let mut assign: Vec<Vec<u32>> = vec![Vec::new(); workers];
@@ -218,7 +270,7 @@ fn pack_lpt(costs: &CostMatrix, l: usize, workers: usize) -> Vec<Vec<u32>> {
             .map(|(i, _)| i)
             .unwrap();
         assign[w].push(m);
-        loads[w] += costs.get(m as usize, (m as usize + l) % p);
+        loads[w] += cost(m as usize, (m as usize + l) % p);
     }
     assign
 }
@@ -329,6 +381,81 @@ mod tests {
         assert_eq!(ScheduleKind::Packed { grid_factor: 4 }.grid(8), 32);
         assert_eq!(ScheduleKind::Packed { grid_factor: 2 }.label(), "packed(x2)");
         assert_eq!(ScheduleKind::Diagonal.grid_factor(), 1);
+    }
+
+    #[test]
+    fn repack_with_token_costs_is_a_fixed_point() {
+        // Repacking against the same token-cost field LPT already packed
+        // against must reproduce the assignment exactly (LPT is a pure
+        // function of the cost field).
+        let bow = small_bow(7);
+        let costs = costs_of(&bow, 8, 7);
+        let s0 = Schedule::build(ScheduleKind::Packed { grid_factor: 4 }, &costs, 2);
+        let mut s1 = s0.clone();
+        s1.repack_with(|m, n| costs.get(m, n));
+        for (a, b) in s0.epochs.iter().zip(s1.epochs.iter()) {
+            assert_eq!(a.assign, b.assign);
+        }
+    }
+
+    #[test]
+    fn repack_with_skewed_costs_moves_the_assignment_and_cuts_the_crit() {
+        // Token counts say diagonal 0 is {100, 1, 1, 1}; pretend the
+        // measured field inverts it ({1, 900, 900, 900} ns). Repacking
+        // must rebalance against the measured field, and the repacked
+        // critical path under that field can never exceed the stale
+        // token packing's.
+        let bow = BagOfWords::from_triplets(
+            4,
+            4,
+            [
+                (0, 0, 100),
+                (1, 1, 1),
+                (2, 2, 1),
+                (3, 3, 1),
+                (0, 1, 50),
+                (1, 2, 2),
+                (2, 3, 2),
+                (3, 0, 2),
+            ],
+        );
+        let costs = CostMatrix::compute_p(&bow, &[0, 1, 2, 3], &[0, 1, 2, 3], 4);
+        let mut s = Schedule::build(ScheduleKind::Packed { grid_factor: 2 }, &costs, 2);
+        let measured = |m: usize, _n: usize| if m == 0 { 1 } else { 900 };
+        let before = s.cost_with(measured);
+        s.repack_with(measured);
+        let after = s.cost_with(measured);
+        assert!(after <= before, "repack regressed the measured crit: {after} > {before}");
+        // Diagonal 0 under the measured field is {1, 900, 900, 900} on 2
+        // workers: LPT packs {900, 1} vs {900, 900} → crit 1800.
+        let crit0: u64 = s.epochs[0]
+            .assign
+            .iter()
+            .map(|list| list.iter().map(|&m| measured(m as usize, m as usize)).sum::<u64>())
+            .max()
+            .unwrap();
+        assert_eq!(crit0, 1800);
+    }
+
+    #[test]
+    fn repack_is_a_noop_for_diagonal_schedules() {
+        let bow = small_bow(8);
+        let costs = costs_of(&bow, 4, 8);
+        let mut s = Schedule::build(ScheduleKind::Diagonal, &costs, 4);
+        s.repack_with(|_, _| 77);
+        for ep in &s.epochs {
+            for (w, list) in ep.assign.iter().enumerate() {
+                assert_eq!(list.as_slice(), &[w as u32]);
+            }
+        }
+    }
+
+    #[test]
+    fn cost_with_tokens_matches_cost() {
+        let bow = small_bow(9);
+        let costs = costs_of(&bow, 6, 9);
+        let s = Schedule::build(ScheduleKind::Packed { grid_factor: 3 }, &costs, 2);
+        assert_eq!(s.cost(&costs), s.cost_with(|m, n| costs.get(m, n)));
     }
 
     /// The satellite property: for random corpora, `W`, and `g`, the

@@ -47,6 +47,15 @@ impl PhaseTimer {
         self.phases.iter().map(|(_, d)| *d).sum()
     }
 
+    /// The recorded phases as `(name, seconds)` in insertion order —
+    /// the serializable form the train reports embed.
+    pub fn phases_secs(&self) -> Vec<(String, f64)> {
+        self.phases
+            .iter()
+            .map(|(n, d)| (n.clone(), d.as_secs_f64()))
+            .collect()
+    }
+
     pub fn report(&self) -> String {
         let total = self.total().as_secs_f64().max(1e-12);
         self.phases
@@ -89,5 +98,18 @@ mod tests {
     fn missing_phase_is_zero() {
         let t = PhaseTimer::new();
         assert_eq!(t.get("nope"), Duration::ZERO);
+    }
+
+    #[test]
+    fn phases_secs_preserves_insertion_order() {
+        let mut t = PhaseTimer::new();
+        t.add("sample", Duration::from_millis(20));
+        t.add("barrier", Duration::from_millis(5));
+        t.add("sample", Duration::from_millis(10));
+        let ph = t.phases_secs();
+        assert_eq!(ph.len(), 2);
+        assert_eq!(ph[0].0, "sample");
+        assert!((ph[0].1 - 0.030).abs() < 1e-9);
+        assert_eq!(ph[1].0, "barrier");
     }
 }

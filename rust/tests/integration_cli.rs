@@ -162,6 +162,44 @@ fn train_bot_kernel_via_cli() {
 }
 
 #[test]
+fn train_balance_modes_via_cli() {
+    for balance in ["adaptive", "steal"] {
+        let (out, _, ok) = pplda(&[
+            "train", "--profile", "tiny", "--workers", "2", "--grid-factor", "2",
+            "--schedule", "packed", "--topics", "4", "--iters", "2", "--restarts", "2",
+            "--mode", "pooled", "--kernel", "sparse", "--balance", balance,
+        ]);
+        assert!(ok, "{balance}: {out}");
+        assert!(out.contains(&format!("balance={balance}")), "{out}");
+        assert!(out.contains("measured_eta="), "{out}");
+        assert!(out.contains("phases: "), "{out}");
+        assert!(out.contains("final perplexity"), "{out}");
+    }
+}
+
+#[test]
+fn train_bot_balance_via_cli() {
+    let (out, _, ok) = pplda(&[
+        "train-bot", "--profile", "tiny", "--workers", "2", "--grid-factor", "2",
+        "--topics", "4", "--iters", "2", "--restarts", "2", "--balance", "steal",
+        "--mode", "pooled",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("balance=steal"), "{out}");
+    assert!(out.contains("measured_eta_dw="), "{out}");
+}
+
+#[test]
+fn unknown_balance_fails() {
+    let (_, err, ok) = pplda(&[
+        "train", "--profile", "tiny", "--topics", "4", "--iters", "1",
+        "--balance", "magic",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown balance mode"), "{err}");
+}
+
+#[test]
 fn unknown_kernel_fails() {
     let (_, err, ok) = pplda(&[
         "train", "--profile", "tiny", "--topics", "4", "--iters", "1",
