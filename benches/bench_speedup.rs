@@ -6,6 +6,7 @@
 //! from the measured single-core sampling rate. This regenerates the
 //! paper's speedup narrative on hardware with fewer cores than P.
 
+use pplda::corpus::shard::Residency;
 use pplda::corpus::synthetic::{generate, Profile};
 use pplda::kernel::KernelKind;
 use pplda::partition::eta::EtaComparison;
@@ -14,6 +15,7 @@ use pplda::scheduler::adaptive::{BalanceMode, Measured};
 use pplda::scheduler::cost_model::{MeasuredReport, SpeedupReport};
 use pplda::scheduler::exec::{ExecMode, ParallelLda};
 use pplda::scheduler::schedule::{Schedule, ScheduleKind};
+use pplda::util::human_bytes;
 use pplda::util::json::Json;
 use pplda::util::tsv::{f, Table};
 
@@ -86,6 +88,130 @@ fn main() {
     schedule_eta_sweep(seed, fast);
     executor_overhead(seed, fast);
     balance_comparison(seed, fast);
+    out_of_core_smoke(seed, fast);
+}
+
+/// Process peak RSS (`VmHWM`) in bytes, if the platform exposes it.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Out-of-core acceptance: a memory-budgeted spill run on a
+/// NYTimes-shaped synthetic corpus must (a) train bit-identically to
+/// in-core, (b) keep resident token bytes inside the budget, and (c) —
+/// thanks to the prefetch thread overlapping loads with sampling — stay
+/// within ~1.5× of in-core wallclock (asserted in slow mode only;
+/// micro-runs on loaded CI boxes make wallclock ratios meaningless).
+/// Emits `BENCH_JSON out_of_core` rows (wallclock, trainer-tracked peak
+/// resident bytes, and process peak RSS) for the perf trajectory.
+fn out_of_core_smoke(seed: u64, fast: bool) {
+    let scale = if fast { 600 } else { 60 };
+    let topics = if fast { 8 } else { 32 };
+    let sweeps = if fast { 3 } else { 6 };
+    let restarts = if fast { 5 } else { 20 };
+    let (grid, w) = (4usize, 4usize);
+    let bow = generate(&Profile::nytimes_like().scaled(scale), seed);
+    let plan = partition(&bow, grid, Algorithm::A3 { restarts }, seed);
+    let corpus_bytes = bow.num_tokens() * 12;
+    // Roughly two of the four diagonals plus slack — the budget the
+    // prefetch window must respect.
+    let budget = corpus_bytes * 5 / 8;
+    println!(
+        "\nout-of-core smoke: D={} W={} N={} K={topics} grid={grid} workers={w} \
+         ({sweeps} sweeps/residency, budget {})",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens(),
+        human_bytes(budget as usize)
+    );
+
+    let mut table = Table::new(["residency", "sweep_ms", "peak_resident", "peak_rss"]);
+    let mut rows = Vec::new();
+    let mut wall = Vec::new();
+    let mut topic_counts: Vec<Vec<u32>> = Vec::new();
+    for residency in [Residency::InCore, Residency::Spill { budget_bytes: budget }] {
+        let mut lda = ParallelLda::init_resident(
+            &bow,
+            &plan,
+            topics,
+            0.5,
+            0.1,
+            seed,
+            ScheduleKind::Diagonal,
+            w,
+            residency,
+        )
+        .expect("init");
+        lda.sweep(ExecMode::Pooled); // warm: pool, scratch, first loads
+        let t = std::time::Instant::now();
+        for _ in 0..sweeps {
+            lda.sweep(ExecMode::Pooled);
+        }
+        let per_sweep = t.elapsed().as_secs_f64() / sweeps as f64;
+        let peak = lda.peak_resident_bytes();
+        let rss = peak_rss_bytes().unwrap_or(0);
+        table.row([
+            residency.label(),
+            format!("{:.3}", per_sweep * 1e3),
+            human_bytes(peak as usize),
+            human_bytes(rss as usize),
+        ]);
+        let mut j = Json::obj();
+        j.set("residency", residency.name())
+            .set("sweep_secs", per_sweep)
+            .set("peak_resident_bytes", peak)
+            .set("peak_rss_bytes", rss);
+        rows.push(j);
+        wall.push(per_sweep);
+        topic_counts.push(lda.counts.topic.clone());
+        if let Residency::Spill { budget_bytes } = residency {
+            assert!(
+                peak <= budget_bytes,
+                "resident token bytes {peak} exceeded the {budget_bytes} budget"
+            );
+            assert!(
+                peak < corpus_bytes,
+                "spill mode held the whole corpus ({peak} vs {corpus_bytes})"
+            );
+        }
+    }
+    println!("{}", table.to_aligned());
+    assert_eq!(
+        topic_counts[0], topic_counts[1],
+        "spill training must be bit-identical to in-core"
+    );
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "out_of_core")
+        .set("corpus", "nytimes-like")
+        .set("scale", scale)
+        .set("topics", topics)
+        .set("sweeps", sweeps)
+        .set("workers", w)
+        .set("budget_bytes", budget)
+        .set("results", rows);
+    println!("BENCH_JSON {}", summary.to_string());
+    println!(
+        "spill/in-core wallclock = {:.3}x (bit-identical counts)",
+        wall[1] / wall[0].max(1e-12)
+    );
+
+    // Wallclock bound: slow mode only (see the executor-overhead bench
+    // for the rationale on micro-benchmark noise).
+    if fast {
+        return;
+    }
+    assert!(
+        wall[1] <= wall[0] * 1.5,
+        "prefetch overlap failed to keep spill within 1.5x of in-core: \
+         {:.4}s vs {:.4}s per sweep",
+        wall[1],
+        wall[0]
+    );
 }
 
 /// Tentpole payoff: static token-LPT vs adaptive measured-cost

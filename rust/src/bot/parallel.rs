@@ -8,6 +8,7 @@ use std::time::Instant;
 
 use crate::bot::counts::BotCounts;
 use crate::bot::serial::BotHyper;
+use crate::corpus::shard::{Residency, ShardedBlocks};
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::gibbs::tokens::TokenBlock;
 use crate::kernel::KernelKind;
@@ -15,16 +16,17 @@ use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
-use crate::scheduler::exec::{ExecMode, SweepStats};
+use crate::scheduler::exec::{build_blocks, ExecMode, SweepStats};
 use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
-/// Diagonal-major token blocks plus their partition ids for one matrix.
+/// Diagonal-major token blocks (under a residency policy) plus schedule
+/// and cost state for one matrix.
 struct Phase {
-    blocks: Vec<Vec<TokenBlock>>,
-    ids: Vec<Vec<u64>>,
+    shards: ShardedBlocks,
     costs: CostMatrix,
     schedule: Schedule,
     /// Measured per-partition cost estimator for this phase's plan (the
@@ -34,6 +36,12 @@ struct Phase {
 }
 
 impl Phase {
+    /// Build the phase's blocks diagonal by diagonal through the shared
+    /// [`build_blocks`] helper (each block is absorbed into the counts
+    /// before the residency policy decides whether it stays in RAM, so
+    /// spill-mode init peaks at one diagonal per phase). `store_tag`
+    /// names the phase's temp spill dir.
+    #[allow(clippy::too_many_arguments)]
     fn build(
         bow: &crate::corpus::bow::BagOfWords,
         plan: &Plan,
@@ -41,28 +49,19 @@ impl Phase {
         rng: &mut Rng,
         kind: ScheduleKind,
         workers: usize,
-    ) -> Self {
+        residency: Residency,
+        store_tag: &str,
+        absorb: impl FnMut(&TokenBlock),
+    ) -> Result<Self> {
         let p = plan.p;
         let map = PartitionMap::build(bow, plan);
-        let mut blocks = Vec::with_capacity(p);
-        let mut ids = Vec::with_capacity(p);
-        for l in 0..p {
-            let mut diag = Vec::with_capacity(p);
-            let mut diag_ids = Vec::with_capacity(p);
-            for (m, n) in map.diagonal(l) {
-                diag.push(TokenBlock::from_cells(map.cells(m, n), k, rng));
-                diag_ids.push(partition_id(m, n, p));
-            }
-            blocks.push(diag);
-            ids.push(diag_ids);
-        }
-        Self {
-            blocks,
-            ids,
+        let shards = build_blocks(&map, p, k, rng, residency, store_tag, absorb)?;
+        Ok(Self {
+            shards,
             costs: plan.costs.clone(),
             schedule: Schedule::build(kind, &plan.costs, workers),
             estimator: Measured::new(p),
-        }
+        })
     }
 }
 
@@ -83,6 +82,9 @@ pub struct ParallelBot {
     /// Load-balancing strategy shared by both phases (see
     /// [`crate::scheduler::adaptive`]); result-invariant.
     balance: BalanceMode,
+    /// The residency policy as configured (each phase holds half the
+    /// spill budget; this keeps the caller's original value).
+    residency: Residency,
     seed: u64,
     sweeps_done: usize,
     /// Executor state — the persistent pool (if `Pooled` mode is used)
@@ -128,12 +130,36 @@ impl ParallelBot {
         kind: ScheduleKind,
         workers: usize,
     ) -> Self {
+        Self::init_resident(tc, plan_dw, plan_dts, h, seed, kind, workers, Residency::InCore)
+            .expect("in-core init performs no IO")
+    }
+
+    /// As [`Self::init_scheduled`], with an explicit [`Residency`]. Under
+    /// `Spill` each phase spills to its own temp
+    /// [`crate::corpus::shard::ShardStore`] (the DW and DTS grids have
+    /// independent partition-id spaces) and the byte budget is split
+    /// evenly between the phases. Residency never changes results — see
+    /// [`crate::corpus::shard`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn init_resident(
+        tc: &TimestampedCorpus,
+        plan_dw: &Plan,
+        plan_dts: &Plan,
+        h: BotHyper,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        residency: Residency,
+    ) -> Result<Self> {
         assert_eq!(plan_dw.p, plan_dts.p, "DW and DTS plans must share P");
         let p = plan_dw.p;
         let mut rng = Rng::stream(seed, 0xB07_11);
-
-        let word = Phase::build(&tc.bow, plan_dw, h.k, &mut rng, kind, workers);
-        let stamp = Phase::build(&tc.dts, plan_dts, h.k, &mut rng, kind, workers);
+        let phase_residency = match residency {
+            Residency::InCore => Residency::InCore,
+            Residency::Spill { budget_bytes } => Residency::Spill {
+                budget_bytes: budget_bytes / 2,
+            },
+        };
 
         let mut counts = BotCounts::zeros(
             tc.bow.num_docs(),
@@ -141,17 +167,29 @@ impl ParallelBot {
             tc.num_stamps,
             h.k,
         );
-        for diag in &word.blocks {
-            for b in diag {
-                counts.absorb_words(b);
-            }
-        }
-        for diag in &stamp.blocks {
-            for b in diag {
-                counts.absorb_stamps(b);
-            }
-        }
-        Self {
+        let word = Phase::build(
+            &tc.bow,
+            plan_dw,
+            h.k,
+            &mut rng,
+            kind,
+            workers,
+            phase_residency,
+            "bot-word",
+            |b| counts.absorb_words(b),
+        )?;
+        let stamp = Phase::build(
+            &tc.dts,
+            plan_dts,
+            h.k,
+            &mut rng,
+            kind,
+            workers,
+            phase_residency,
+            "bot-stamp",
+            |b| counts.absorb_stamps(b),
+        )?;
+        Ok(Self {
             h,
             counts,
             p,
@@ -159,6 +197,7 @@ impl ParallelBot {
             stamp,
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
+            residency,
             seed,
             sweeps_done: 0,
             engines: EngineCache::new(workers),
@@ -167,7 +206,7 @@ impl ParallelBot {
             deltas: vec![vec![0i64; h.k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
-        }
+        })
     }
 
     /// Re-map both plans onto a different worker count / schedule kind
@@ -251,6 +290,10 @@ impl ParallelBot {
             workers: self.stamp.schedule.workers,
             ..SweepStats::default()
         };
+        // Spill write-backs during this sweep carry the sweep count they
+        // complete (see `ShardedBlocks::set_stamp`).
+        self.word.shards.set_stamp(sweep_no as u64 + 1);
+        self.stamp.shards.set_stamp(sweep_no as u64 + 1);
 
         let update_started = Instant::now();
         self.word_snapshot.copy_from_slice(&self.counts.topic_words);
@@ -261,8 +304,18 @@ impl ParallelBot {
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
             {
+                // Out-of-core: land this diagonal, then overlap the
+                // *timestamp* phase's diagonal-l load with the word
+                // sampling below (the phases alternate, so the prefetch
+                // chain is word l → stamp l → word l+1 → ...).
+                wstats.io_load_secs += self
+                    .word
+                    .shards
+                    .acquire(l)
+                    .expect("out-of-core: loading a DW diagonal failed");
+                self.stamp.shards.prefetch(l);
                 let started = Instant::now();
-                let diag = &mut self.word.blocks[l];
+                let (diag, ids) = self.word.shards.diag_parts(l);
                 let ep = &self.word.schedule.epochs[l];
                 wstats
                     .epoch_max_tokens
@@ -280,7 +333,7 @@ impl ParallelBot {
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
-                    ids: &self.word.ids[l],
+                    ids,
                     assign: &ep.assign,
                     nanos: &mut self.task_nanos[..n],
                     worker_nanos: &mut self.worker_nanos,
@@ -300,12 +353,26 @@ impl ParallelBot {
                 );
                 wstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
                 wstats.epoch_secs.push(started.elapsed().as_secs_f64());
+                wstats.io_write_secs += self
+                    .word
+                    .shards
+                    .release(l)
+                    .expect("out-of-core: writing a DW diagonal back failed");
             }
 
             // ---- timestamp phase on DTS diagonal l ----
             {
+                sstats.io_load_secs += self
+                    .stamp
+                    .shards
+                    .acquire(l)
+                    .expect("out-of-core: loading a DTS diagonal failed");
+                // Overlap the next word diagonal's load (the word phase
+                // just wrote diagonal l back, so even P = 1 reads fresh
+                // state for the next sweep).
+                self.word.shards.prefetch((l + 1) % p);
                 let started = Instant::now();
-                let diag = &mut self.stamp.blocks[l];
+                let (diag, ids) = self.stamp.shards.diag_parts(l);
                 let ep = &self.stamp.schedule.epochs[l];
                 sstats
                     .epoch_max_tokens
@@ -323,7 +390,7 @@ impl ParallelBot {
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
-                    ids: &self.stamp.ids[l],
+                    ids,
                     assign: &ep.assign,
                     nanos: &mut self.task_nanos[..n],
                     worker_nanos: &mut self.worker_nanos,
@@ -343,6 +410,11 @@ impl ParallelBot {
                 );
                 sstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
                 sstats.epoch_secs.push(started.elapsed().as_secs_f64());
+                sstats.io_write_secs += self
+                    .stamp
+                    .shards
+                    .release(l)
+                    .expect("out-of-core: writing a DTS diagonal back failed");
             }
         }
         self.sweeps_done += 1;
@@ -353,6 +425,18 @@ impl ParallelBot {
         let update_started = Instant::now();
         self.word.estimator.observe_sweep(&self.word.costs, &wstats.task_nanos);
         self.stamp.estimator.observe_sweep(&self.stamp.costs, &sstats.task_nanos);
+        if !steal {
+            // Per-worker speed telemetry (measured vs predicted busy
+            // time) for heterogeneity-aware re-packing (meaningless
+            // under stealing — assignments are hints there); each phase
+            // learns against its own schedule.
+            for (phase, stats) in [(&mut self.word, &wstats), (&mut self.stamp, &sstats)] {
+                let predicted = phase
+                    .estimator
+                    .predicted_worker_loads(&phase.schedule, &phase.costs);
+                phase.estimator.observe_workers(&predicted, &stats.worker_nanos);
+            }
+        }
         if self.balance == BalanceMode::Adaptive {
             self.word.estimator.repack(&mut self.word.schedule, &self.word.costs);
             self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
@@ -362,11 +446,13 @@ impl ParallelBot {
         sstats.update_secs += dt;
         // Debug builds audit the full two-matrix invariant per sweep so
         // kernel count-delta bugs fail at the offending sweep (see the
-        // matching check in `scheduler::exec::ParallelLda::sweep`).
+        // matching check in `scheduler::exec::ParallelLda::sweep`). The
+        // audit needs every block in RAM, so spill-mode sweeps skip it
+        // (the spill ≡ in-core matrix tests cover that path).
         #[cfg(debug_assertions)]
-        {
-            let words: Vec<&TokenBlock> = self.word.blocks.iter().flatten().collect();
-            let stamps: Vec<&TokenBlock> = self.stamp.blocks.iter().flatten().collect();
+        if self.word.shards.fully_resident() && self.stamp.shards.fully_resident() {
+            let words = self.word.shards.resident_blocks();
+            let stamps = self.stamp.shards.resident_blocks();
             if let Err(e) = self.counts.check_consistency(&words, &stamps) {
                 panic!(
                     "kernel {} corrupted BoT counts on sweep {sweep_no}: {e}",
@@ -405,12 +491,27 @@ impl ParallelBot {
         super::perplexity_words(&tc.bow, &self.counts, &self.h)
     }
 
+    /// All resident DW blocks (the whole matrix in-core).
     pub fn word_blocks_flat(&self) -> Vec<&TokenBlock> {
-        self.word.blocks.iter().flatten().collect()
+        self.word.shards.resident_blocks()
     }
 
+    /// All resident DTS blocks (the whole matrix in-core).
     pub fn stamp_blocks_flat(&self) -> Vec<&TokenBlock> {
-        self.stamp.blocks.iter().flatten().collect()
+        self.stamp.shards.resident_blocks()
+    }
+
+    /// The residency policy both phases run under, as configured (the
+    /// spill budget is split evenly between the phases internally).
+    pub fn residency(&self) -> Residency {
+        self.residency
+    }
+
+    /// Combined high-water mark of resident token bytes across both
+    /// phases (a safe upper bound on the true combined peak: per-phase
+    /// peaks may not coincide).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.word.shards.peak_resident_bytes() + self.stamp.shards.peak_resident_bytes()
     }
 }
 
@@ -684,6 +785,111 @@ mod tests {
                 );
             }
         });
+    }
+
+    fn setup_resident(
+        grid: usize,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        residency: Residency,
+    ) -> (TimestampedCorpus, ParallelBot) {
+        let tc = tiny_tc(seed);
+        let plan_dw = partition(&tc.bow, grid, Algorithm::A3 { restarts: 3 }, seed);
+        let plan_dts = partition(&tc.dts, grid, Algorithm::A3 { restarts: 3 }, seed + 1);
+        let h = super::super::serial::BotHyper::new(
+            8,
+            0.5,
+            0.1,
+            0.1,
+            tc.bow.num_words(),
+            tc.num_stamps,
+        );
+        let bot =
+            ParallelBot::init_resident(&tc, &plan_dw, &plan_dts, h, seed, kind, workers, residency)
+                .expect("spill init");
+        (tc, bot)
+    }
+
+    #[test]
+    fn spilled_bot_matches_in_core_across_kernels_modes_and_workers() {
+        // The out-of-core acceptance matrix for BoT: both phases spill
+        // and stream, and every kernel × mode × W combination equals the
+        // in-core Sequential diagonal oracle bit for bit.
+        let spill = Residency::Spill { budget_bytes: 0 };
+        for kernel in KernelKind::all() {
+            let (_tc, mut oracle) = setup(4, 86);
+            oracle.set_kernel(kernel);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                for mode in [ExecMode::Sequential, ExecMode::Pooled] {
+                    let (_t, mut bot) = setup_resident(4, 86, kind, workers, spill);
+                    assert_eq!(bot.residency(), spill);
+                    bot.set_kernel(kernel);
+                    for _ in 0..2 {
+                        bot.sweep(mode);
+                    }
+                    assert_eq!(
+                        bot.counts.doc_topic,
+                        oracle.counts.doc_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        bot.counts.word_topic,
+                        oracle.counts.word_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        bot.counts.stamp_topic,
+                        oracle.counts.stamp_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        bot.counts.topic_words,
+                        oracle.counts.topic_words,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        bot.counts.topic_stamps,
+                        oracle.counts.topic_stamps,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spilled_bot_respects_memory_budget() {
+        // Budget the phases to 3/4 of the combined matrices (the DTS
+        // matrix is much smaller than DW here, and the budget is split
+        // evenly, so the DW half must still fit one ~quarter-corpus
+        // diagonal): peak resident bytes must honor the bound while
+        // training stays bit-identical.
+        let (_tc, mut in_core) = setup(4, 88);
+        let corpus_bytes = in_core.peak_resident_bytes();
+        for _ in 0..2 {
+            in_core.sweep(ExecMode::Sequential);
+        }
+        let budget = corpus_bytes * 3 / 4;
+        let spill = Residency::Spill { budget_bytes: budget };
+        let (_t, mut bot) = setup_resident(4, 88, ScheduleKind::Diagonal, 4, spill);
+        let mut io_write = 0.0;
+        for _ in 0..2 {
+            let (ws, ss) = bot.sweep(ExecMode::Sequential);
+            io_write += ws.io_write_secs + ss.io_write_secs;
+        }
+        assert_eq!(bot.counts.doc_topic, in_core.counts.doc_topic);
+        assert_eq!(bot.counts.word_topic, in_core.counts.word_topic);
+        assert_eq!(bot.counts.stamp_topic, in_core.counts.stamp_topic);
+        let peak = bot.peak_resident_bytes();
+        assert!(peak > 0);
+        assert!(peak <= budget, "peak {peak} exceeded budget {budget}");
+        assert!(peak < corpus_bytes, "spill held less than both matrices");
+        assert!(io_write > 0.0, "write-back happened in both phases");
     }
 
     #[test]

@@ -24,6 +24,8 @@ pub struct BotTrainReport {
     pub kernel: String,
     /// Balance-mode label ("static" for the serial reference).
     pub balance: String,
+    /// Residency label ("in-core" for the serial reference).
+    pub residency: String,
     pub topics: usize,
     pub iters: usize,
     pub final_perplexity: f64,
@@ -56,6 +58,7 @@ impl BotTrainReport {
             .set("schedule", self.schedule.as_str())
             .set("kernel", self.kernel.as_str())
             .set("balance", self.balance.as_str())
+            .set("residency", self.residency.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
@@ -104,6 +107,7 @@ pub fn train_bot(
             schedule: "serial".to_string(),
             kernel: "dense".to_string(),
             balance: "static".to_string(),
+            residency: "in-core".to_string(),
             topics: cfg.topics,
             iters: cfg.iters,
             final_perplexity,
@@ -122,7 +126,7 @@ pub fn train_bot(
     let plan_dts = partition::partition(&tc.dts, p, algo, cfg.seed ^ 0xD75);
     let workers = cfg.resolved_workers(p);
 
-    let mut bot = ParallelBot::init_scheduled(
+    let mut bot = ParallelBot::init_resident(
         tc,
         &plan_dw,
         &plan_dts,
@@ -130,7 +134,9 @@ pub fn train_bot(
         cfg.seed,
         cfg.schedule,
         workers,
-    );
+        cfg.residency,
+    )
+    .unwrap_or_else(|e| panic!("out-of-core init failed: {e}"));
     bot.set_kernel(cfg.kernel);
     bot.set_balance(cfg.balance);
     let speedup = {
@@ -156,6 +162,14 @@ pub fn train_bot(
             "update",
             Duration::from_secs_f64(ws.update_secs + ss.update_secs),
         );
+        let io_load = ws.io_load_secs + ss.io_load_secs;
+        if io_load > 0.0 {
+            timer.add("spill_load", Duration::from_secs_f64(io_load));
+        }
+        let io_write = ws.io_write_secs + ss.io_write_secs;
+        if io_write > 0.0 {
+            timer.add("spill_write", Duration::from_secs_f64(io_write));
+        }
         dw_serial += ws.busy_total_nanos();
         dw_crit += ws.crit_nanos();
         dts_serial += ss.busy_total_nanos();
@@ -169,6 +183,7 @@ pub fn train_bot(
         schedule: cfg.schedule.label(),
         kernel: cfg.kernel.name().to_string(),
         balance: cfg.balance.name().to_string(),
+        residency: cfg.residency.label(),
         topics: cfg.topics,
         iters: cfg.iters,
         final_perplexity,
@@ -266,6 +281,7 @@ mod tests {
         assert!(s.contains("eta_dw"));
         assert!(s.contains("measured_eta_dts"));
         assert!(s.contains("\"balance\":\"static\""));
+        assert!(s.contains("\"residency\":\"in-core\""));
         assert!(s.contains("\"phases\":{"));
     }
 

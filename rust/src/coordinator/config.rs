@@ -1,6 +1,7 @@
 //! Training configuration (paper §V-C defaults: K=256, α=0.5, β=0.1,
 //! γ=0.1, ≤200 burn-in iterations).
 
+use crate::corpus::shard::Residency;
 use crate::kernel::KernelKind;
 use crate::scheduler::adaptive::BalanceMode;
 use crate::scheduler::exec::ExecMode;
@@ -50,6 +51,13 @@ pub struct TrainConfig {
     /// `Steal` within-epoch work stealing. Result-invariant — all three
     /// train bit-identical counts; see `docs/scheduling.md`.
     pub balance: BalanceMode,
+    /// Token-block residency for the parallel native path: `InCore`
+    /// (default) keeps every block in RAM; `Spill` streams diagonals
+    /// through a bounded working set backed by per-partition spill files
+    /// (out-of-core corpora — see `docs/out_of_core.md`).
+    /// Result-invariant; the serial reference and the XLA backend are
+    /// always in-core.
+    pub residency: Residency,
     pub backend: Backend,
 }
 
@@ -68,6 +76,7 @@ impl Default for TrainConfig {
             schedule: ScheduleKind::Diagonal,
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
+            residency: Residency::InCore,
             backend: Backend::Native,
         }
     }
@@ -124,6 +133,7 @@ mod tests {
         assert_eq!(c.schedule, ScheduleKind::Diagonal);
         assert_eq!(c.kernel, KernelKind::Dense);
         assert_eq!(c.balance, BalanceMode::Static);
+        assert_eq!(c.residency, Residency::InCore);
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct TrainReport {
     /// Balance-mode label: "static", "adaptive", or "steal" ("static"
     /// for the serial reference and the XLA backend).
     pub balance: String,
+    /// Residency label: "in-core" or "spill(<budget>)" ("in-core" for
+    /// the serial reference and the XLA backend).
+    pub residency: String,
     pub topics: usize,
     pub iters: usize,
     /// (iteration, perplexity) curve.
@@ -57,6 +60,7 @@ impl TrainReport {
             .set("schedule", self.schedule.as_str())
             .set("kernel", self.kernel.as_str())
             .set("balance", self.balance.as_str())
+            .set("residency", self.residency.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
             .set("final_perplexity", self.final_perplexity)
@@ -125,6 +129,7 @@ mod tests {
             schedule: "diagonal".into(),
             kernel: "sparse".into(),
             balance: "adaptive".into(),
+            residency: "in-core".into(),
             topics: 64,
             iters: 50,
             curve: vec![(25, 700.0), (50, 600.5)],
@@ -148,6 +153,7 @@ mod tests {
         assert!(s.contains("\"schedule\":\"diagonal\""));
         assert!(s.contains("\"kernel\":\"sparse\""));
         assert!(s.contains("\"balance\":\"adaptive\""));
+        assert!(s.contains("\"residency\":\"in-core\""));
         assert!(s.contains("\"schedule_eta\":0.98"));
         assert!(s.contains("\"measured_eta\":0.91"));
         assert!(s.contains("\"phases\":{"));

@@ -32,11 +32,12 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
     let mut schedule = "serial".to_string();
     let mut schedule_eta = 1.0;
     let mut measured_eta = 1.0;
-    // The serial reference and the XLA backend are dense-only and
-    // single-worker; the parallel native arm runs the configured kernel
-    // and balance mode.
+    // The serial reference and the XLA backend are dense-only,
+    // single-worker, and in-core; the parallel native arm runs the
+    // configured kernel, balance mode, and residency.
     let mut kernel = "dense".to_string();
     let mut balance = "static".to_string();
+    let mut residency = "in-core".to_string();
     let mut timer = PhaseTimer::new();
     let (curve, final_perplexity) = match (cfg.backend, plan.p) {
         (Backend::Native, 1) => {
@@ -50,7 +51,7 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         }
         (Backend::Native, _) => {
             let w = cfg.resolved_workers(plan.p);
-            let mut lda = ParallelLda::init_scheduled(
+            let mut lda = ParallelLda::init_resident(
                 bow,
                 plan,
                 cfg.topics,
@@ -59,7 +60,9 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
                 cfg.seed,
                 cfg.schedule,
                 w,
-            );
+                cfg.residency,
+            )
+            .unwrap_or_else(|e| panic!("out-of-core init failed: {e}"));
             lda.set_kernel(cfg.kernel);
             lda.set_balance(cfg.balance);
             workers = w;
@@ -67,6 +70,7 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
             schedule_eta = EtaComparison::of(plan, lda.schedule()).schedule.eta;
             kernel = cfg.kernel.name().to_string();
             balance = cfg.balance.name().to_string();
+            residency = cfg.residency.label();
             // The sweep loop lives here (not in `ParallelLda::train`) so
             // the driver can bucket wallclock into the PhaseTimer and
             // accumulate the measured-η telemetry per sweep.
@@ -77,6 +81,12 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
                 timer.add("sample", Duration::from_secs_f64(stats.sample_secs));
                 timer.add("barrier", Duration::from_secs_f64(stats.barrier_secs));
                 timer.add("update", Duration::from_secs_f64(stats.update_secs));
+                if stats.io_load_secs > 0.0 {
+                    timer.add("spill_load", Duration::from_secs_f64(stats.io_load_secs));
+                }
+                if stats.io_write_secs > 0.0 {
+                    timer.add("spill_write", Duration::from_secs_f64(stats.io_write_secs));
+                }
                 serial_nanos += stats.busy_total_nanos();
                 crit_nanos += stats.crit_nanos();
                 if cfg.eval_every > 0 && (it % cfg.eval_every == 0 || it == cfg.iters) {
@@ -118,6 +128,7 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         schedule,
         kernel,
         balance,
+        residency,
         topics: cfg.topics,
         iters: cfg.iters,
         curve,

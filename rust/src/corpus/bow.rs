@@ -48,6 +48,60 @@ impl BagOfWords {
         Self::from_rows(num_words, rows)
     }
 
+    /// Build directly from triplets already sorted by `(doc, word)` with
+    /// no duplicate cells — the low-peak-memory path the UCI loader
+    /// streams through. Unlike [`Self::from_triplets`] this never
+    /// materializes per-document rows (`Vec<Vec<Entry>>`): the CSR
+    /// arrays are laid down in one pass and the triplet buffer is the
+    /// only transient, so load peak is ~20 bytes per nonzero instead of
+    /// holding every entry twice (plus per-row allocation overhead).
+    /// Zero counts are dropped; unsorted or duplicate input panics.
+    pub fn from_sorted_triplets(
+        num_docs: usize,
+        num_words: usize,
+        triplets: Vec<(u32, u32, u32)>,
+    ) -> Self {
+        let mut doc_offsets = Vec::with_capacity(num_docs + 1);
+        let mut entries = Vec::with_capacity(triplets.len());
+        let mut col_sums = vec![0u64; num_words];
+        let mut row_sums = vec![0u64; num_docs];
+        let mut num_tokens = 0u64;
+        doc_offsets.push(0);
+        let mut cur_doc = 0usize;
+        let mut prev: Option<(u32, u32)> = None;
+        for &(d, w, c) in &triplets {
+            assert!((d as usize) < num_docs, "doc id {d} out of range");
+            assert!((w as usize) < num_words, "word id {w} out of range");
+            if let Some(p) = prev {
+                assert!(p < (d, w), "triplets must be strictly sorted by (doc, word)");
+            }
+            prev = Some((d, w));
+            while cur_doc < d as usize {
+                doc_offsets.push(entries.len());
+                cur_doc += 1;
+            }
+            if c > 0 {
+                entries.push(Entry { word: w, count: c });
+                col_sums[w as usize] += c as u64;
+                row_sums[d as usize] += c as u64;
+                num_tokens += c as u64;
+            }
+        }
+        drop(triplets);
+        while cur_doc < num_docs {
+            doc_offsets.push(entries.len());
+            cur_doc += 1;
+        }
+        Self {
+            num_words,
+            doc_offsets,
+            entries,
+            col_sums,
+            row_sums,
+            num_tokens,
+        }
+    }
+
     /// Build from per-document entry lists (any order within a row;
     /// duplicates summed).
     pub fn from_rows(num_words: usize, mut rows: Vec<Vec<Entry>>) -> Self {
@@ -209,5 +263,44 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn out_of_range_word_panics() {
         BagOfWords::from_triplets(1, 2, [(0, 5, 1)]);
+    }
+
+    #[test]
+    fn sorted_triplets_match_general_construction() {
+        // The streaming path must produce the exact structure the
+        // general path does, including empty leading/trailing docs.
+        let trips = vec![(1u32, 0u32, 2u32), (1, 3, 1), (3, 1, 4)];
+        let a = BagOfWords::from_sorted_triplets(5, 4, trips.clone());
+        let b = BagOfWords::from_triplets(5, 4, trips);
+        assert_eq!(a.num_docs(), 5);
+        assert_eq!(a.num_tokens(), b.num_tokens());
+        assert_eq!(a.nnz(), b.nnz());
+        assert_eq!(a.row_sums(), b.row_sums());
+        assert_eq!(a.col_sums(), b.col_sums());
+        for j in 0..5 {
+            assert_eq!(a.doc(j), b.doc(j), "doc {j}");
+        }
+        assert!(a.doc(0).is_empty());
+        assert!(a.doc(4).is_empty());
+    }
+
+    #[test]
+    fn sorted_triplets_drop_zero_counts() {
+        let b = BagOfWords::from_sorted_triplets(2, 2, vec![(0, 0, 0), (1, 1, 3)]);
+        assert_eq!(b.nnz(), 1);
+        assert_eq!(b.num_tokens(), 3);
+        assert_eq!(b.row_sum(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly sorted")]
+    fn unsorted_triplets_panic() {
+        BagOfWords::from_sorted_triplets(2, 2, vec![(1, 0, 1), (0, 0, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly sorted")]
+    fn duplicate_sorted_triplets_panic() {
+        BagOfWords::from_sorted_triplets(1, 2, vec![(0, 1, 1), (0, 1, 2)]);
     }
 }

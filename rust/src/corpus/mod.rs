@@ -11,10 +11,12 @@
 //! real UCI `docword.*.txt` files unchanged when available.
 
 pub mod bow;
+pub mod shard;
 pub mod stats;
 pub mod synthetic;
 pub mod timestamps;
 pub mod uci;
 
 pub use bow::{BagOfWords, Entry};
+pub use shard::{Residency, ShardStore};
 pub use timestamps::TimestampedCorpus;

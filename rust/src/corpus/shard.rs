@@ -1,0 +1,947 @@
+//! Out-of-core token-block storage: per-partition spill files with
+//! overlapped prefetch and bounded resident memory.
+//!
+//! The partition grid is the natural sharding unit (CLDA-style:
+//! partition-local state makes placement free), and the diagonal-epoch
+//! barrier is the natural synchronization point. This module turns those
+//! two facts into an out-of-core execution layer:
+//!
+//! * [`Residency`] — the policy knob. `InCore` keeps every [`TokenBlock`]
+//!   in RAM (the historical behavior, still the default); `Spill` bounds
+//!   resident token bytes to a budget, keeping roughly two diagonals
+//!   resident (the one being sampled plus the prefetched next one).
+//! * [`ShardStore`] — a run directory holding one file per partition
+//!   (`part-<id>.blk`): magic + token count + sweep-stamp header, then
+//!   the SoA `docs`/`words`/`z` arrays as little-endian `u32`s. Only `z`
+//!   mutates during training, so write-back rewrites the `z` section in
+//!   place (then commits the new sweep stamp).
+//! * [`Prefetcher`] — a long-lived IO thread that loads the next
+//!   diagonal's blocks while the executor samples the current one; the
+//!   epoch barrier already sequences everything else, so the overlap
+//!   costs one channel send per epoch.
+//! * [`ShardedBlocks`] — the diagonal-major block container both parallel
+//!   trainers own. In-core it is a plain `Vec<Vec<TokenBlock>>`; in spill
+//!   mode it loads/evicts diagonals on demand, tracks resident bytes
+//!   against the budget, and reports the peak for the memory-bound
+//!   acceptance tests.
+//!
+//! # Determinism contract
+//!
+//! Spilled execution is bit-identical to in-core: blocks round-trip
+//! through the store as exact `u32` arrays, task RNG streams are keyed by
+//! `(sweep, partition)` (never by residency, worker, or IO timing), and
+//! write-back happens after the barrier that already sequences count
+//! merging. Residency is therefore a pure capacity/performance knob —
+//! pinned by the spill ≡ in-core matrix tests in `scheduler/exec.rs`,
+//! `bot/parallel.rs`, and `tests/integration_train.rs`. Because every
+//! partition's full state (`docs`/`words`/`z`) persists in the store, a
+//! re-opened store also supports crash-safe resume: counts are
+//! reconstructed by re-absorbing the stored blocks (see
+//! `ParallelLda::resume_spilled`), and each block carries the sweep
+//! count it was written after, so resuming from a store a crash left
+//! mid-sweep (mixed stamps) is rejected instead of silently training
+//! from a state no uninterrupted run produces. The guarantee is scoped
+//! to *process* kills: a kill inside one block's `z` rewrite (before
+//! its stamp commits) is undetectable, and across a power loss the
+//! page cache may write the stamp back before the data — closing those
+//! windows would need per-block checksums or fsync'd
+//! write-to-temp + rename, costs deliberately not paid on the
+//! per-epoch hot path.
+//!
+//! See `docs/out_of_core.md` for the residency modes, the
+//! prefetch/barrier overlap, and the write-back protocol.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::gibbs::tokens::TokenBlock;
+use crate::util::error::{bail, Context, Error, Result};
+
+/// Where token blocks live during training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Every block stays in RAM (the historical behavior; default).
+    InCore,
+    /// Blocks spill to a [`ShardStore`]; at most ~two diagonals are
+    /// resident. `budget_bytes` bounds resident token bytes: prefetching
+    /// the next diagonal is skipped whenever it would exceed the budget
+    /// (0 = no bound — always keep current + next). The floor is one
+    /// diagonal: the one being sampled must be resident.
+    Spill { budget_bytes: u64 },
+}
+
+impl Residency {
+    /// Parse a CLI/config spelling; `budget_bytes` applies to `spill`.
+    pub fn parse(name: &str, budget_bytes: u64) -> Option<Self> {
+        match name {
+            "in-core" | "incore" | "ram" => Some(Self::InCore),
+            "spill" | "out-of-core" | "ooc" => Some(Self::Spill { budget_bytes }),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::InCore => "in-core",
+            Self::Spill { .. } => "spill",
+        }
+    }
+
+    /// Human label including the budget, e.g. `spill(256.00MiB)`.
+    pub fn label(self) -> String {
+        match self {
+            Self::InCore => "in-core".to_string(),
+            Self::Spill { budget_bytes: 0 } => "spill".to_string(),
+            Self::Spill { budget_bytes } => {
+                format!("spill({})", crate::util::human_bytes(budget_bytes as usize))
+            }
+        }
+    }
+}
+
+/// Parse a byte count with an optional `k`/`m`/`g` suffix (powers of
+/// 1024, case-insensitive): `"512"`, `"64m"`, `"2G"`.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim();
+    let (digits, mult) = match t.char_indices().last()? {
+        (i, 'k') | (i, 'K') => (&t[..i], 1u64 << 10),
+        (i, 'm') | (i, 'M') => (&t[..i], 1u64 << 20),
+        (i, 'g') | (i, 'G') => (&t[..i], 1u64 << 30),
+        _ => (t, 1),
+    };
+    let n: u64 = digits.trim().parse().ok()?;
+    n.checked_mul(mult)
+}
+
+/// Bytes one token occupies in a [`TokenBlock`]'s SoA arrays (doc + word
+/// + z, each `u32`) — the unit of the resident-memory accounting and of
+/// the on-disk format.
+pub const BYTES_PER_TOKEN: u64 = 12;
+
+const MAGIC: &[u8; 8] = b"PPSHARD2";
+/// Header layout: magic (8) | token count `n` (u64 LE) | sweep stamp
+/// (u64 LE) — the number of completed sweeps the block's `z` state
+/// corresponds to.
+const HEADER: u64 = 24;
+const STAMP_OFFSET: u64 = 16;
+
+/// A run directory of per-partition spill files.
+///
+/// Files are keyed by the grid-global partition id
+/// ([`crate::scheduler::schedule::partition_id`]) and are independent of
+/// each other, so concurrent access to *different* partitions (the
+/// prefetch thread reading diagonal `l+1` while the coordinator writes
+/// back diagonal `l`) needs no locking. Temp-created stores delete their
+/// directory on drop; [`ShardStore::open`]ed (or [`ShardStore::keep`]t)
+/// stores persist, which is what crash-safe resume builds on.
+pub struct ShardStore {
+    dir: PathBuf,
+    keep: bool,
+}
+
+impl ShardStore {
+    /// Create (or reuse) `dir` as a shard directory. The store deletes
+    /// the directory on drop unless [`Self::keep`] is called.
+    pub fn create(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create shard dir {}", dir.display()))?;
+        Ok(Self { dir, keep: false })
+    }
+
+    /// Create a uniquely-named store under `$PPLDA_SPILL_DIR` (or the
+    /// system temp dir), tagged for debuggability.
+    pub fn create_temp(tag: &str) -> Result<Self> {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let root = std::env::var_os("PPLDA_SPILL_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(std::env::temp_dir);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        Self::create(root.join(format!("pplda-shards-{}-{tag}-{n}", std::process::id())))
+    }
+
+    /// Open an existing shard directory (e.g. to resume after a crash).
+    /// Opened stores never delete their files.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            bail!("shard dir {} does not exist", dir.display());
+        }
+        Ok(Self { dir, keep: true })
+    }
+
+    /// Keep the directory on drop (for resume / inspection).
+    pub fn keep(&mut self) {
+        self.keep = true;
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("part-{id:08}.blk"))
+    }
+
+    /// Whether partition `id` has a spill file.
+    pub fn has_block(&self, id: u64) -> bool {
+        self.file(id).is_file()
+    }
+
+    /// Write a partition's full block (header + docs + words + z),
+    /// stamped with the sweep count its `z` state corresponds to.
+    pub fn write_block(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<()> {
+        let n = block.len();
+        let mut buf = Vec::with_capacity((HEADER + BYTES_PER_TOKEN * n as u64) as usize);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(n as u64).to_le_bytes());
+        buf.extend_from_slice(&stamp.to_le_bytes());
+        for arr in [&block.docs, &block.words, &block.z] {
+            for &x in arr.iter() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let path = self.file(id);
+        std::fs::write(&path, &buf)
+            .with_context(|| format!("write shard {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Rewrite only the `z` section of partition `id`'s file in place —
+    /// the write-back path (docs/words never change after init) — then
+    /// commit the new sweep stamp. Stamp-after-data ordering keeps the
+    /// mid-*process-kill* window to a partially-written `z` section
+    /// whose stale stamp a resume will reject; across a *system* crash
+    /// the page cache may reorder the two writes, so power-loss
+    /// durability would additionally need a `sync_data` between them
+    /// (deliberately not paid on the per-epoch hot path — see
+    /// `docs/out_of_core.md`).
+    pub fn write_z(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<()> {
+        use std::io::{Seek, SeekFrom, Write};
+        let n = block.len() as u64;
+        let path = self.file(id);
+        let mut f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("open shard {} for write-back", path.display()))?;
+        f.seek(SeekFrom::Start(HEADER + 8 * n))
+            .with_context(|| format!("seek shard {}", path.display()))?;
+        let mut buf = Vec::with_capacity(4 * block.len());
+        for &x in &block.z {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)
+            .with_context(|| format!("write back shard {}", path.display()))?;
+        f.seek(SeekFrom::Start(STAMP_OFFSET))
+            .with_context(|| format!("seek shard {}", path.display()))?;
+        f.write_all(&stamp.to_le_bytes())
+            .with_context(|| format!("stamp shard {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load partition `id`'s block, validating the header.
+    pub fn read_block(&self, id: u64) -> Result<TokenBlock> {
+        Ok(self.read_block_stamped(id)?.0)
+    }
+
+    /// Load partition `id`'s block and verify its sweep stamp — the one
+    /// copy of the resume-validation rule (a mixed-stamp store was left
+    /// mid-sweep by a kill and cannot be resumed bit-identically).
+    pub fn read_block_verified(&self, id: u64, expected_stamp: u64) -> Result<TokenBlock> {
+        let (b, stamp) = self.read_block_stamped(id)?;
+        if stamp != expected_stamp {
+            bail!(
+                "partition {id}: sweep stamp {stamp} != expected {expected_stamp} \
+                 (store was left mid-sweep or belongs to a different run)"
+            );
+        }
+        Ok(b)
+    }
+
+    /// Load partition `id`'s block plus its sweep stamp — the resume
+    /// path, which must verify every block is from the same sweep.
+    pub fn read_block_stamped(&self, id: u64) -> Result<(TokenBlock, u64)> {
+        let path = self.file(id);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read shard {}", path.display()))?;
+        if bytes.len() < HEADER as usize || &bytes[..8] != MAGIC {
+            bail!("shard {}: bad header", path.display());
+        }
+        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let stamp = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        if bytes.len() as u64 != HEADER + BYTES_PER_TOKEN * n as u64 {
+            bail!(
+                "shard {}: {} bytes for {n} tokens (truncated or corrupt)",
+                path.display(),
+                bytes.len()
+            );
+        }
+        let h = HEADER as usize;
+        let mut block = TokenBlock::with_capacity(n);
+        read_u32s(&bytes[h..h + 4 * n], &mut block.docs);
+        read_u32s(&bytes[h + 4 * n..h + 8 * n], &mut block.words);
+        read_u32s(&bytes[h + 8 * n..h + 12 * n], &mut block.z);
+        Ok((block, stamp))
+    }
+}
+
+fn read_u32s(bytes: &[u8], out: &mut Vec<u32>) {
+    for c in bytes.chunks_exact(4) {
+        out.push(u32::from_le_bytes(c.try_into().unwrap()));
+    }
+}
+
+impl Drop for ShardStore {
+    fn drop(&mut self) {
+        if !self.keep {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+/// The overlapped-load IO thread: one long-lived worker that reads a
+/// requested id list from the store and hands the blocks back over a
+/// channel. At most one request is in flight; the trainer issues it just
+/// before dispatching an epoch and collects it at (or after) the epoch
+/// barrier, so the load overlaps sampling.
+pub struct Prefetcher {
+    tx: Option<Sender<Vec<u64>>>,
+    rx: Receiver<Result<Vec<TokenBlock>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn new(store: Arc<ShardStore>) -> Self {
+        let (tx, req_rx) = channel::<Vec<u64>>();
+        let (res_tx, rx) = channel();
+        let handle = std::thread::spawn(move || {
+            while let Ok(ids) = req_rx.recv() {
+                let mut out = Vec::with_capacity(ids.len());
+                let mut failed = None;
+                for id in ids {
+                    match store.read_block(id) {
+                        Ok(b) => out.push(b),
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                }
+                let msg = match failed {
+                    None => Ok(out),
+                    Some(e) => Err(e),
+                };
+                if res_tx.send(msg).is_err() {
+                    break; // trainer gone
+                }
+            }
+        });
+        Self {
+            tx: Some(tx),
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Start loading `ids`. The caller must collect the previous request
+    /// with [`Self::take`] first (enforced by [`ShardedBlocks`]).
+    pub fn request(&mut self, ids: Vec<u64>) {
+        self.tx
+            .as_ref()
+            .expect("prefetcher shut down")
+            .send(ids)
+            .expect("prefetcher thread died");
+    }
+
+    /// Block until the in-flight request completes and return its blocks.
+    pub fn take(&mut self) -> Result<Vec<TokenBlock>> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::msg("prefetcher thread died"))?
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.tx.take(); // close the request channel; the worker exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Diagonal-major token blocks under a residency policy — the block
+/// container both parallel trainers own.
+///
+/// The per-sweep protocol (spill mode; everything is a no-op in-core):
+///
+/// ```text
+/// for l in 0..P {
+///     acquire(l)            // sync load, or collect the prefetch
+///     prefetch((l+1) % P)   // overlapped with the epoch below
+///     run_epoch(l); merge barrier
+///     release(l)            // write back z, evict
+/// }
+/// ```
+///
+/// Resident-byte accounting counts a prefetched diagonal from the moment
+/// its request is issued (the IO thread holds the blocks while the
+/// current diagonal is still resident), so `peak_resident_bytes` is an
+/// honest peak and `prefetch` can gate on the budget before starting.
+pub struct ShardedBlocks {
+    // Field order matters for Drop: join the prefetcher (which holds an
+    // `Arc<ShardStore>` clone) before the store can delete its directory.
+    prefetcher: Option<Prefetcher>,
+    store: Option<Arc<ShardStore>>,
+    /// `blocks[l]` — diagonal `l`'s blocks; empty when non-resident.
+    blocks: Vec<Vec<TokenBlock>>,
+    /// Global partition ids, parallel to `blocks` (survive eviction).
+    ids: Vec<Vec<u64>>,
+    /// Token bytes per diagonal (12 bytes/token; survive eviction).
+    diag_bytes: Vec<u64>,
+    resident: Vec<bool>,
+    residency: Residency,
+    /// Diagonal index of the in-flight prefetch, if any.
+    pending: Option<usize>,
+    /// Sweep stamp written with every block (see [`Self::set_stamp`]).
+    stamp: u64,
+    resident_bytes: u64,
+    peak_resident_bytes: u64,
+}
+
+impl ShardedBlocks {
+    /// All blocks stay in RAM (the historical behavior).
+    pub fn in_core() -> Self {
+        Self {
+            prefetcher: None,
+            store: None,
+            blocks: Vec::new(),
+            ids: Vec::new(),
+            diag_bytes: Vec::new(),
+            resident: Vec::new(),
+            residency: Residency::InCore,
+            pending: None,
+            stamp: 0,
+            resident_bytes: 0,
+            peak_resident_bytes: 0,
+        }
+    }
+
+    /// Blocks spill to `store`; see [`Residency::Spill`] for the budget
+    /// semantics.
+    pub fn spill(store: ShardStore, budget_bytes: u64) -> Self {
+        let store = Arc::new(store);
+        Self {
+            prefetcher: Some(Prefetcher::new(Arc::clone(&store))),
+            store: Some(store),
+            blocks: Vec::new(),
+            ids: Vec::new(),
+            diag_bytes: Vec::new(),
+            resident: Vec::new(),
+            residency: Residency::Spill { budget_bytes },
+            pending: None,
+            stamp: 0,
+            resident_bytes: 0,
+            peak_resident_bytes: 0,
+        }
+    }
+
+    pub fn residency(&self) -> Residency {
+        self.residency
+    }
+
+    /// Set the sweep stamp subsequent writes carry: the number of
+    /// completed sweeps the written `z` state corresponds to (0 at
+    /// init). Trainers set `sweep_no + 1` before each sweep, so an
+    /// at-rest store has every block uniformly stamped and a resume can
+    /// verify it is not mid-sweep.
+    pub fn set_stamp(&mut self, stamp: u64) {
+        self.stamp = stamp;
+    }
+
+    /// Number of diagonals pushed so far (== the grid size `P` once
+    /// initialization finishes).
+    pub fn p(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn bump_resident(&mut self, bytes: u64) {
+        self.resident_bytes += bytes;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(self.resident_bytes);
+    }
+
+    /// Append one diagonal during initialization. In-core the blocks are
+    /// kept; in spill mode they are written to the store and dropped, so
+    /// init peak memory stays at roughly one diagonal. The caller has
+    /// already absorbed the blocks into its count matrices.
+    pub fn push_diagonal(&mut self, diag: Vec<TokenBlock>, ids: Vec<u64>) -> Result<()> {
+        assert_eq!(diag.len(), ids.len(), "one id per block");
+        let bytes: u64 = diag.iter().map(TokenBlock::heap_bytes).sum();
+        self.diag_bytes.push(bytes);
+        match self.residency {
+            Residency::InCore => {
+                self.resident.push(true);
+                self.bump_resident(bytes);
+                self.blocks.push(diag);
+            }
+            Residency::Spill { .. } => {
+                let store = self.store.as_ref().expect("spill store");
+                for (b, &id) in diag.iter().zip(&ids) {
+                    store.write_block(id, b, self.stamp)?;
+                }
+                self.resident.push(false);
+                self.blocks.push(Vec::new());
+            }
+        }
+        self.ids.push(ids);
+        Ok(())
+    }
+
+    /// Append one diagonal whose blocks already live in the store (the
+    /// resume path): each block is read, verified against
+    /// `expected_stamp` (a mixed-stamp store was left mid-sweep by a
+    /// crash and cannot be resumed bit-identically), shown to `visit`
+    /// (count re-absorption), then kept or dropped per the residency.
+    pub fn adopt_diagonal(
+        &mut self,
+        ids: Vec<u64>,
+        expected_stamp: u64,
+        mut visit: impl FnMut(&TokenBlock),
+    ) -> Result<()> {
+        let store = self.store.as_ref().expect("adopt_diagonal needs a store");
+        let mut diag = Vec::with_capacity(ids.len());
+        for &id in &ids {
+            let b = store.read_block_verified(id, expected_stamp)?;
+            visit(&b);
+            diag.push(b);
+        }
+        let bytes: u64 = diag.iter().map(TokenBlock::heap_bytes).sum();
+        self.diag_bytes.push(bytes);
+        match self.residency {
+            Residency::InCore => {
+                self.resident.push(true);
+                self.bump_resident(bytes);
+                self.blocks.push(diag);
+            }
+            Residency::Spill { .. } => {
+                self.resident.push(false);
+                self.blocks.push(Vec::new());
+            }
+        }
+        self.ids.push(ids);
+        Ok(())
+    }
+
+    /// Make diagonal `l` resident: collect the in-flight prefetch if it
+    /// targets `l`, otherwise load synchronously. Returns the seconds the
+    /// caller stalled on IO (0 in-core, ≈0 when the prefetch finished
+    /// under the sampling it overlapped).
+    pub fn acquire(&mut self, l: usize) -> Result<f64> {
+        if self.resident[l] {
+            return Ok(0.0);
+        }
+        let started = Instant::now();
+        if let Some(t) = self.pending.take() {
+            let taken = self
+                .prefetcher
+                .as_mut()
+                .expect("pending prefetch without a prefetcher")
+                .take();
+            let blocks = match taken {
+                Ok(blocks) => blocks,
+                Err(e) => {
+                    // The response is consumed and the reservation void
+                    // either way — never leave `pending` set on failure,
+                    // or a retry would block on a reply that already
+                    // arrived.
+                    self.resident_bytes -= self.diag_bytes[t];
+                    return Err(e);
+                }
+            };
+            if t == l {
+                self.blocks[l] = blocks;
+                self.resident[l] = true; // bytes were counted at request
+                return Ok(started.elapsed().as_secs_f64());
+            }
+            // A stale prefetch (schedule changed under us): the blocks
+            // are clean copies of the store — discard and fall through.
+            self.resident_bytes -= self.diag_bytes[t];
+        }
+        let store = self.store.as_ref().expect("non-resident diagonal without a store");
+        let mut diag = Vec::with_capacity(self.ids[l].len());
+        for &id in &self.ids[l] {
+            diag.push(store.read_block(id)?);
+        }
+        self.blocks[l] = diag;
+        self.resident[l] = true;
+        self.bump_resident(self.diag_bytes[l]);
+        Ok(started.elapsed().as_secs_f64())
+    }
+
+    /// Begin loading diagonal `t` on the IO thread, if the residency,
+    /// budget, and in-flight state allow. The reserved bytes count as
+    /// resident from this moment (the IO thread holds them).
+    pub fn prefetch(&mut self, t: usize) {
+        let Some(pf) = self.prefetcher.as_mut() else {
+            return; // in-core, or the prefetcher was retired by keep_store
+        };
+        if self.resident[t] || self.pending.is_some() {
+            return;
+        }
+        let budget = match self.residency {
+            Residency::InCore => unreachable!("in-core has no prefetcher"),
+            Residency::Spill { budget_bytes } => budget_bytes,
+        };
+        if budget > 0 && self.resident_bytes + self.diag_bytes[t] > budget {
+            return; // over budget: acquire() will load synchronously
+        }
+        pf.request(self.ids[t].clone());
+        self.pending = Some(t);
+        self.bump_resident(self.diag_bytes[t]);
+    }
+
+    /// Write back diagonal `l`'s (dirty) `z` arrays and evict it. Called
+    /// after the epoch barrier, so all sampling of `l` has completed.
+    /// Returns the seconds spent on write-back IO (0 in-core).
+    pub fn release(&mut self, l: usize) -> Result<f64> {
+        if self.residency == Residency::InCore || !self.resident[l] {
+            return Ok(0.0);
+        }
+        let started = Instant::now();
+        let store = self.store.as_ref().expect("spill store");
+        for (b, &id) in self.blocks[l].iter().zip(&self.ids[l]) {
+            store.write_z(id, b, self.stamp)?;
+        }
+        self.blocks[l] = Vec::new();
+        self.resident[l] = false;
+        self.resident_bytes -= self.diag_bytes[l];
+        Ok(started.elapsed().as_secs_f64())
+    }
+
+    /// Diagonal `l`'s blocks and ids (must be resident; see
+    /// [`Self::acquire`]).
+    pub fn diag_parts(&mut self, l: usize) -> (&mut [TokenBlock], &[u64]) {
+        assert!(self.resident[l], "diagonal {l} is not resident");
+        (&mut self.blocks[l], &self.ids[l])
+    }
+
+    /// Every diagonal is resident (always true in-core) — the
+    /// precondition for whole-corpus consistency audits.
+    pub fn fully_resident(&self) -> bool {
+        self.resident.iter().all(|&r| r)
+    }
+
+    /// All currently-resident blocks, flattened (the whole corpus
+    /// in-core).
+    pub fn resident_blocks(&self) -> Vec<&TokenBlock> {
+        self.blocks
+            .iter()
+            .zip(&self.resident)
+            .filter(|(_, &r)| r)
+            .flat_map(|(diag, _)| diag.iter())
+            .collect()
+    }
+
+    /// Currently-resident token bytes (including in-flight prefetches).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// High-water mark of [`Self::resident_bytes`] over the container's
+    /// lifetime — what the memory-budget acceptance tests assert on.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak_resident_bytes
+    }
+
+    /// Total token bytes across all diagonals (resident or not).
+    pub fn total_bytes(&self) -> u64 {
+        self.diag_bytes.iter().sum()
+    }
+
+    /// The spill directory, if this container spills.
+    pub fn store_path(&self) -> Option<&Path> {
+        self.store.as_deref().map(ShardStore::path)
+    }
+
+    /// Keep the spill directory on drop (resume / inspection). Retires
+    /// the prefetch thread (it holds the other `Arc` clone of the
+    /// store); subsequent sweeps fall back to synchronous loads.
+    pub fn keep_store(&mut self) {
+        if self.store.is_some() {
+            if let Some(t) = self.pending.take() {
+                // Collect (and discard) any in-flight load first.
+                if let Some(pf) = self.prefetcher.as_mut() {
+                    let _ = pf.take();
+                }
+                self.resident_bytes -= self.diag_bytes[t];
+            }
+            self.prefetcher = None; // joins the IO thread
+            let store = self.store.as_mut().unwrap();
+            Arc::get_mut(store)
+                .expect("prefetcher joined; the store is uniquely owned")
+                .keep();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn block(n: usize, seed: u64) -> TokenBlock {
+        let mut rng = Rng::new(seed);
+        let mut b = TokenBlock::with_capacity(n);
+        for i in 0..n {
+            b.docs.push(i as u32);
+            b.words.push(rng.gen_range(50) as u32);
+            b.z.push(rng.gen_range(8) as u32);
+        }
+        b
+    }
+
+    #[test]
+    fn store_roundtrips_blocks_exactly() {
+        let store = ShardStore::create_temp("roundtrip").unwrap();
+        let b = block(1000, 1);
+        store.write_block(7, &b, 0).unwrap();
+        assert!(store.has_block(7));
+        assert!(!store.has_block(8));
+        let r = store.read_block(7).unwrap();
+        assert_eq!(b.docs, r.docs);
+        assert_eq!(b.words, r.words);
+        assert_eq!(b.z, r.z);
+    }
+
+    #[test]
+    fn write_z_rewrites_only_assignments() {
+        let store = ShardStore::create_temp("writez").unwrap();
+        let mut b = block(256, 2);
+        store.write_block(0, &b, 0).unwrap();
+        assert_eq!(store.read_block_stamped(0).unwrap().1, 0);
+        for z in &mut b.z {
+            *z = (*z + 1) % 8;
+        }
+        store.write_z(0, &b, 3).unwrap();
+        let (r, stamp) = store.read_block_stamped(0).unwrap();
+        assert_eq!(b.z, r.z, "z section rewritten");
+        assert_eq!(b.docs, r.docs, "docs untouched");
+        assert_eq!(b.words, r.words, "words untouched");
+        assert_eq!(stamp, 3, "write-back commits the new sweep stamp");
+    }
+
+    #[test]
+    fn reopened_store_sees_identical_state() {
+        // The crash-safety primitive: drop the store (kept), reopen the
+        // directory, read back bit-identical blocks.
+        let dir = {
+            let mut store = ShardStore::create_temp("reopen").unwrap();
+            store.write_block(3, &block(100, 3), 2).unwrap();
+            store.keep();
+            store.path().to_path_buf()
+        };
+        assert!(dir.is_dir(), "kept store survives drop");
+        let store = ShardStore::open(&dir).unwrap();
+        let (b, stamp) = store.read_block_stamped(3).unwrap();
+        assert_eq!(b, block(100, 3));
+        assert_eq!(stamp, 2, "sweep stamp survives reopen");
+        drop(store); // opened stores never delete
+        assert!(dir.is_dir());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn temp_store_cleans_up_on_drop() {
+        let dir = {
+            let store = ShardStore::create_temp("cleanup").unwrap();
+            store.write_block(0, &block(10, 4), 0).unwrap();
+            store.path().to_path_buf()
+        };
+        assert!(!dir.exists(), "temp store removed its directory");
+    }
+
+    #[test]
+    fn read_rejects_corrupt_files() {
+        let store = ShardStore::create_temp("corrupt").unwrap();
+        store.write_block(0, &block(10, 5), 0).unwrap();
+        // Truncate the file below its declared token count.
+        let path = store.path().join("part-00000000.blk");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let e = store.read_block(0).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+        std::fs::write(&path, b"garbage!").unwrap();
+        let e = store.read_block(0).unwrap_err().to_string();
+        assert!(e.contains("bad header"), "{e}");
+        assert!(store.read_block(99).is_err(), "missing file errors");
+    }
+
+    #[test]
+    fn prefetcher_loads_in_background() {
+        let store = Arc::new(ShardStore::create_temp("prefetch").unwrap());
+        let (b0, b1) = (block(50, 6), block(70, 7));
+        store.write_block(0, &b0, 0).unwrap();
+        store.write_block(1, &b1, 0).unwrap();
+        let mut pf = Prefetcher::new(Arc::clone(&store));
+        pf.request(vec![1, 0]);
+        let got = pf.take().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], b1, "requested order preserved");
+        assert_eq!(got[1], b0);
+        pf.request(vec![42]);
+        assert!(pf.take().is_err(), "missing block surfaces as an error");
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("4k"), Some(4096));
+        assert_eq!(parse_bytes("64M"), Some(64 << 20));
+        assert_eq!(parse_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_bytes(" 8m "), Some(8 << 20));
+        assert_eq!(parse_bytes("x"), None);
+        assert_eq!(parse_bytes(""), None);
+    }
+
+    #[test]
+    fn residency_parses_and_labels() {
+        assert_eq!(Residency::parse("in-core", 0), Some(Residency::InCore));
+        assert_eq!(
+            Residency::parse("spill", 64),
+            Some(Residency::Spill { budget_bytes: 64 })
+        );
+        assert_eq!(Residency::parse("ooc", 0), Some(Residency::Spill { budget_bytes: 0 }));
+        assert_eq!(Residency::parse("disk", 0), None);
+        assert_eq!(Residency::InCore.label(), "in-core");
+        assert_eq!(Residency::Spill { budget_bytes: 0 }.label(), "spill");
+        assert_eq!(
+            Residency::Spill { budget_bytes: 64 << 20 }.label(),
+            "spill(64.00MiB)"
+        );
+        assert_eq!(Residency::Spill { budget_bytes: 1 }.name(), "spill");
+    }
+
+    fn two_diagonals() -> (Vec<Vec<TokenBlock>>, Vec<Vec<u64>>) {
+        (
+            vec![vec![block(100, 10), block(60, 11)], vec![block(80, 12), block(40, 13)]],
+            vec![vec![0, 3], vec![1, 2]],
+        )
+    }
+
+    #[test]
+    fn in_core_container_is_always_resident() {
+        let (diags, ids) = two_diagonals();
+        let mut sb = ShardedBlocks::in_core();
+        for (d, i) in diags.into_iter().zip(ids) {
+            sb.push_diagonal(d, i).unwrap();
+        }
+        assert!(sb.fully_resident());
+        assert_eq!(sb.resident_blocks().len(), 4);
+        assert_eq!(sb.total_bytes(), 280 * BYTES_PER_TOKEN);
+        assert_eq!(sb.peak_resident_bytes(), sb.total_bytes());
+        assert_eq!(sb.acquire(0).unwrap(), 0.0);
+        sb.prefetch(1); // no-op
+        assert_eq!(sb.release(0).unwrap(), 0.0);
+        assert!(sb.fully_resident(), "in-core release never evicts");
+        let (blocks, pids) = sb.diag_parts(1);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(pids, &[1, 2]);
+    }
+
+    #[test]
+    fn spill_container_bounds_residency_and_roundtrips() {
+        let (diags, ids) = two_diagonals();
+        let store = ShardStore::create_temp("sharded").unwrap();
+        // Budget = both diagonals: prefetch allowed.
+        let mut sb = ShardedBlocks::spill(store, 280 * BYTES_PER_TOKEN);
+        for (d, i) in diags.into_iter().zip(ids) {
+            sb.push_diagonal(d, i).unwrap();
+        }
+        assert!(!sb.fully_resident());
+        assert_eq!(sb.resident_bytes(), 0, "init leaves nothing resident");
+
+        // Sweep protocol: acquire 0, prefetch 1, mutate, release 0,
+        // acquire 1 (collects the prefetch).
+        sb.acquire(0).unwrap();
+        assert_eq!(sb.resident_bytes(), 160 * BYTES_PER_TOKEN);
+        sb.prefetch(1);
+        assert_eq!(
+            sb.resident_bytes(),
+            280 * BYTES_PER_TOKEN,
+            "prefetched bytes count from request time"
+        );
+        {
+            let (blocks, _) = sb.diag_parts(0);
+            for b in blocks.iter_mut() {
+                for z in &mut b.z {
+                    *z = 7;
+                }
+            }
+        }
+        sb.release(0).unwrap();
+        assert_eq!(sb.resident_bytes(), 120 * BYTES_PER_TOKEN);
+        sb.acquire(1).unwrap();
+        let (blocks, _) = sb.diag_parts(1);
+        assert_eq!(blocks[0], block(80, 12), "diagonal 1 round-tripped");
+        sb.release(1).unwrap();
+        assert_eq!(sb.resident_bytes(), 0);
+
+        // The write-back persisted: re-acquire diagonal 0 and see z=7.
+        sb.acquire(0).unwrap();
+        let (blocks, _) = sb.diag_parts(0);
+        assert!(blocks.iter().all(|b| b.z.iter().all(|&z| z == 7)));
+        assert_eq!(sb.peak_resident_bytes(), 280 * BYTES_PER_TOKEN);
+    }
+
+    #[test]
+    fn prefetch_respects_the_budget() {
+        let (diags, ids) = two_diagonals();
+        let store = ShardStore::create_temp("budget").unwrap();
+        // Budget covers only the largest single diagonal (160 tokens):
+        // prefetching while one is resident must be declined, and the
+        // peak must stay within the budget.
+        let budget = 160 * BYTES_PER_TOKEN;
+        let mut sb = ShardedBlocks::spill(store, budget);
+        for (d, i) in diags.into_iter().zip(ids) {
+            sb.push_diagonal(d, i).unwrap();
+        }
+        for _ in 0..2 {
+            for l in 0..2 {
+                sb.acquire(l).unwrap();
+                sb.prefetch((l + 1) % 2);
+                sb.release(l).unwrap();
+            }
+        }
+        assert!(
+            sb.peak_resident_bytes() <= budget,
+            "peak {} exceeded budget {budget}",
+            sb.peak_resident_bytes()
+        );
+    }
+
+    #[test]
+    fn adopt_revisits_stored_blocks() {
+        let store = ShardStore::create_temp("adopt").unwrap();
+        let b = block(30, 20);
+        store.write_block(5, &b, 4).unwrap();
+        let mut sb = ShardedBlocks::spill(store, 0);
+        let mut seen = 0u64;
+        sb.adopt_diagonal(vec![5], 4, |blk| {
+            seen += blk.len() as u64;
+            assert_eq!(*blk, b);
+        })
+        .unwrap();
+        assert_eq!(seen, 30);
+        // A mismatched stamp (mid-sweep store) is refused.
+        let e = sb.adopt_diagonal(vec![5], 9, |_| {}).unwrap_err().to_string();
+        assert!(e.contains("sweep stamp 4"), "{e}");
+        sb.acquire(0).unwrap();
+        let (blocks, pids) = sb.diag_parts(0);
+        assert_eq!(blocks[0], b);
+        assert_eq!(pids, &[5]);
+    }
+}

@@ -9,7 +9,7 @@ use crate::partition::scheme::Cell;
 use crate::util::rng::Rng;
 
 /// SoA block of tokens with their current topic assignments.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TokenBlock {
     pub docs: Vec<u32>,
     pub words: Vec<u32>,
@@ -64,6 +64,14 @@ impl TokenBlock {
     pub fn is_empty(&self) -> bool {
         self.docs.is_empty()
     }
+
+    /// Heap bytes the token arrays occupy (12 bytes/token) — the unit of
+    /// the out-of-core resident-memory accounting (see
+    /// [`crate::corpus::shard`]).
+    #[inline]
+    pub fn heap_bytes(&self) -> u64 {
+        self.len() as u64 * crate::corpus::shard::BYTES_PER_TOKEN
+    }
 }
 
 #[cfg(test)]
@@ -91,6 +99,15 @@ mod tests {
         let b = TokenBlock::from_corpus(&bow, 8, &mut rng);
         assert_eq!(b.len() as u64, bow.num_tokens());
         assert_eq!(b.docs.iter().filter(|&&d| d == 1).count(), 5);
+    }
+
+    #[test]
+    fn heap_bytes_counts_twelve_per_token() {
+        let bow = BagOfWords::from_triplets(1, 2, [(0, 0, 3), (0, 1, 2)]);
+        let mut rng = Rng::new(4);
+        let b = TokenBlock::from_corpus(&bow, 2, &mut rng);
+        assert_eq!(b.heap_bytes(), 5 * 12);
+        assert_eq!(TokenBlock::default().heap_bytes(), 0);
     }
 
     #[test]

@@ -11,11 +11,15 @@
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //!                  [--balance static|adaptive|steal]
+//!                  [--residency in-core|spill] [--memory-budget B]
+//!                  [--spill-dir DIR]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //!                  [--balance static|adaptive|steal] [--timeline]
+//!                  [--residency in-core|spill] [--memory-budget B]
+//!                  [--spill-dir DIR]
 //! pplda artifacts-check
 //! ```
 
@@ -24,6 +28,7 @@ use std::process::ExitCode;
 use pplda::coordinator::{train_bot, train_lda, Backend, TrainConfig};
 use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
+use pplda::corpus::shard::{self, Residency};
 use pplda::corpus::{uci, BagOfWords};
 use pplda::kernel::KernelKind;
 use pplda::partition::{self, Algorithm};
@@ -82,6 +87,14 @@ static packs by token counts; adaptive re-packs each diagonal between
 sweeps against measured per-partition wallclock; steal lets idle
 workers pull unclaimed tasks from a shared per-epoch queue. All three
 train bit-identical counts — only wallclock changes.
+
+out-of-core (train/train-bot): --residency spill streams token blocks
+through per-partition spill files, keeping ~two diagonals resident so
+corpora larger than RAM train (see docs/out_of_core.md).
+--memory-budget B (bytes, k/m/g suffixes; implies spill) bounds
+resident token bytes; --spill-dir DIR picks the spill root (default
+$PPLDA_SPILL_DIR or the system temp dir). Residency never changes
+results — spill is bit-identical to the default in-core.
 ";
 
 fn profile(args: &Args) -> Profile {
@@ -145,6 +158,36 @@ fn kernel_of(args: &Args) -> KernelKind {
         Some(s) => KernelKind::parse(s)
             .unwrap_or_else(|| panic!("unknown kernel {s:?} (dense|sparse|alias)")),
         None => KernelKind::Dense,
+    }
+}
+
+/// Residency selection: `--residency in-core|spill` plus
+/// `--memory-budget BYTES` (k/m/g suffixes; a budget alone implies
+/// spill) and `--spill-dir DIR` (exported as `PPLDA_SPILL_DIR` for the
+/// trainers' temp stores).
+fn residency_of(args: &Args) -> Residency {
+    if let Some(dir) = args.get_str("spill-dir") {
+        std::env::set_var("PPLDA_SPILL_DIR", dir);
+    }
+    let budget = match args.get_str("memory-budget") {
+        Some(s) => shard::parse_bytes(s).unwrap_or_else(|| {
+            panic!("--memory-budget {s:?}: expected bytes with an optional k/m/g suffix")
+        }),
+        None => 0,
+    };
+    match args.get_str("residency") {
+        Some(s) => {
+            let r = Residency::parse(s, budget)
+                .unwrap_or_else(|| panic!("unknown residency {s:?} (in-core|spill)"));
+            if budget > 0 && r == Residency::InCore {
+                // A stale --memory-budget must not silently become an
+                // unbounded run.
+                panic!("--memory-budget only applies to --residency spill");
+            }
+            r
+        }
+        None if budget > 0 => Residency::Spill { budget_bytes: budget },
+        None => Residency::InCore,
     }
 }
 
@@ -231,13 +274,14 @@ fn cmd_train(args: &Args) -> ExitCode {
         schedule: kind,
         kernel: kernel_of(args),
         balance: balance_of(args),
+        residency: residency_of(args),
         ..Default::default()
     };
 
     let plan = partition::partition(&bow, grid, algo, cfg.seed);
     println!(
         "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | schedule {} workers={} \
-         kernel={} balance={}",
+         kernel={} balance={} residency={}",
         bow.num_docs(),
         bow.num_words(),
         bow.num_tokens(),
@@ -248,6 +292,7 @@ fn cmd_train(args: &Args) -> ExitCode {
         workers,
         cfg.kernel.name(),
         cfg.balance.name(),
+        cfg.residency.label(),
     );
     let report = train_lda(&bow, &plan, &cfg);
     println!(
@@ -301,6 +346,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         schedule: kind,
         kernel: kernel_of(args),
         balance: balance_of(args),
+        residency: residency_of(args),
         ..Default::default()
     };
 
@@ -315,13 +361,15 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     );
     let report = train_bot(&tc, p, algo, &cfg);
     println!(
-        "P={} workers={} schedule={} kernel={} balance={} perplexity={:.4} eta_dw={:.4} \
-         eta_dts={:.4} measured_eta_dw={:.4} measured_eta_dts={:.4} speedup≈{:.2} ({:.1}s)",
+        "P={} workers={} schedule={} kernel={} balance={} residency={} perplexity={:.4} \
+         eta_dw={:.4} eta_dts={:.4} measured_eta_dw={:.4} measured_eta_dts={:.4} \
+         speedup≈{:.2} ({:.1}s)",
         report.p,
         report.workers,
         report.schedule,
         report.kernel,
         report.balance,
+        report.residency,
         report.final_perplexity,
         report.eta_dw,
         report.eta_dts,

@@ -119,6 +119,16 @@ pub struct Measured {
     /// Global EWMA of nanos per token (the seed rate for unobserved
     /// partitions); 0 until the first observation.
     rate: f64,
+    /// Per-worker-slot EWMA of measured busy nanos over *predicted*
+    /// nanos for the same assignment; `NAN` = that slot has never been
+    /// measured. Normalizing by the estimator's own per-partition
+    /// predictions (not token counts) separates worker speed from
+    /// partition difficulty — a slot that keeps drawing expensive
+    /// partitions is not a slow core. Heterogeneous boxes (mixed cores,
+    /// a worker sharing its core with another process) show up here and
+    /// feed [`Self::worker_factors`], so LPT packs against worker speed
+    /// as well as partition cost.
+    worker_rate: Vec<f64>,
 }
 
 impl Measured {
@@ -127,12 +137,91 @@ impl Measured {
         Self {
             ewma: vec![f64::NAN; grid * grid],
             rate: 0.0,
+            worker_rate: Vec::new(),
         }
     }
 
     /// Observed nanos-per-token rate (0 until the first observation).
     pub fn rate(&self) -> f64 {
         self.rate
+    }
+
+    /// Fold one sweep's per-worker telemetry: `predicted[l][w]` is this
+    /// estimator's predicted cost (nanos, or tokens before the first
+    /// observations land) of the work the schedule assigned worker `w`
+    /// in epoch `l` ([`Self::predicted_worker_loads`]) and `nanos[l][w]`
+    /// the busy wallclock it measured. The ratio is a pure speed signal:
+    /// partition difficulty is already in the prediction. Meaningless
+    /// under work stealing (the assignment is only a hint there), so
+    /// trainers skip it in that mode; zero-prediction or zero-nanos
+    /// slots teach nothing.
+    pub fn observe_workers(&mut self, predicted: &[Vec<u64>], nanos: &[Vec<u64>]) {
+        for (lw, nw) in predicted.iter().zip(nanos) {
+            for (w, (&pred, &ns)) in lw.iter().zip(nw.iter()).enumerate() {
+                if pred == 0 || ns == 0 {
+                    continue;
+                }
+                if self.worker_rate.len() <= w {
+                    self.worker_rate.resize(w + 1, f64::NAN);
+                }
+                let r = ns as f64 / pred as f64;
+                let slot = &mut self.worker_rate[w];
+                *slot = if slot.is_finite() {
+                    (1.0 - EWMA_ALPHA) * *slot + EWMA_ALPHA * r
+                } else {
+                    r
+                };
+            }
+        }
+    }
+
+    /// Predicted per-worker cost of every epoch of `schedule` under this
+    /// estimator's current per-partition estimates — the baseline
+    /// [`Self::observe_workers`] compares measured busy time against.
+    pub fn predicted_worker_loads(&self, schedule: &Schedule, costs: &CostMatrix) -> Vec<Vec<u64>> {
+        let p = costs.p();
+        schedule
+            .epochs
+            .iter()
+            .enumerate()
+            .map(|(l, ep)| {
+                ep.assign
+                    .iter()
+                    .map(|list| {
+                        list.iter()
+                            .map(|&m| {
+                                let m = m as usize;
+                                let n = (m + l) % p;
+                                self.estimate(partition_id(m, n, p), costs.get(m, n))
+                            })
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Per-worker relative slowdown factors for `workers` slots,
+    /// normalized so the measured slots average 1.0 (unmeasured slots
+    /// report 1.0). Uniform until [`Self::observe_workers`] has seen
+    /// telemetry, so homogeneous boxes repack exactly as before.
+    pub fn worker_factors(&self, workers: usize) -> Vec<f64> {
+        let rates: Vec<f64> = (0..workers)
+            .map(|w| self.worker_rate.get(w).copied().unwrap_or(f64::NAN))
+            .collect();
+        let known: Vec<f64> = rates
+            .iter()
+            .copied()
+            .filter(|r| r.is_finite() && *r > 0.0)
+            .collect();
+        if known.is_empty() {
+            return vec![1.0; workers];
+        }
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        rates
+            .iter()
+            .map(|&r| if r.is_finite() && r > 0.0 { r / mean } else { 1.0 })
+            .collect()
     }
 
     /// Fold a whole sweep's telemetry into the estimator: `nanos[l][m]`
@@ -153,11 +242,15 @@ impl Measured {
     }
 
     /// Rebuild `schedule`'s per-diagonal packings against this
-    /// estimator's current cost field (no-op for diagonal schedules; see
-    /// [`Schedule::repack_with`]).
+    /// estimator's current cost field *and* its per-worker speed factors
+    /// (no-op for diagonal schedules; see [`Schedule::repack_hetero`]).
     pub fn repack(&self, schedule: &mut Schedule, costs: &CostMatrix) {
         let p = costs.p();
-        schedule.repack_with(|m, n| self.estimate(partition_id(m, n, p), costs.get(m, n)));
+        let factors = self.worker_factors(schedule.workers);
+        schedule.repack_hetero(
+            |m, n| self.estimate(partition_id(m, n, p), costs.get(m, n)),
+            &factors,
+        );
     }
 }
 
@@ -304,6 +397,50 @@ mod tests {
             .max()
             .unwrap();
         assert_eq!(crit, 9_000, "repack must isolate the measured-slow partition");
+    }
+
+    #[test]
+    fn worker_factors_default_to_uniform_and_learn_from_telemetry() {
+        let mut m = Measured::new(4);
+        assert_eq!(m.worker_factors(3), vec![1.0; 3], "unmeasured = uniform");
+        // Workers 0 and 1 were both predicted 1000 units of work; worker
+        // 1 took 3× as long as worker 0; worker 2's prediction is zero
+        // (skipped).
+        m.observe_workers(
+            &[vec![1000, 1000, 0]],
+            &[vec![100_000, 300_000, 50_000]],
+        );
+        let f = m.worker_factors(3);
+        assert!((f[0] - 0.5).abs() < 1e-9, "{f:?}");
+        assert!((f[1] - 1.5).abs() < 1e-9, "{f:?}");
+        assert_eq!(f[2], 1.0, "unmeasured slot stays neutral: {f:?}");
+        // Factors normalize over however many slots the caller asks for.
+        assert_eq!(m.worker_factors(5).len(), 5);
+    }
+
+    #[test]
+    fn repack_packs_against_worker_speed() {
+        // 4×4 grid, every partition 10 tokens (all costs tied), on 2
+        // workers whose measured speeds differ 3×: the repack must give
+        // the fast worker 3 of each diagonal's 4 partitions.
+        let mut cells = Vec::new();
+        for m in 0..4u32 {
+            for n in 0..4u32 {
+                cells.push((m, n, 10u32));
+            }
+        }
+        let bow = BagOfWords::from_triplets(4, 4, cells);
+        let costs = CostMatrix::compute_p(&bow, &[0, 1, 2, 3], &[0, 1, 2, 3], 4);
+        let mut schedule = Schedule::build(ScheduleKind::Packed { grid_factor: 2 }, &costs, 2);
+
+        let mut est = Measured::new(4);
+        // Equal predicted work, 3x measured gap: worker 1 is slow.
+        est.observe_workers(&[vec![20, 20]], &[vec![2_000, 6_000]]);
+        est.repack(&mut schedule, &costs);
+        for (l, ep) in schedule.epochs.iter().enumerate() {
+            assert_eq!(ep.assign[0].len(), 3, "epoch {l}: fast worker takes 3");
+            assert_eq!(ep.assign[1].len(), 1, "epoch {l}: slow worker takes 1");
+        }
     }
 
     #[test]

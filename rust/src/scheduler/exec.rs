@@ -1,9 +1,11 @@
 //! The parallel LDA trainer: diagonal epochs over a partition plan,
 //! executed under a [`Schedule`] mapping the grid onto `W` workers.
 
+use std::path::Path;
 use std::time::Instant;
 
 use crate::corpus::bow::BagOfWords;
+use crate::corpus::shard::{Residency, ShardedBlocks, ShardStore};
 use crate::gibbs::counts::LdaCounts;
 use crate::gibbs::perplexity;
 use crate::gibbs::sampler::Hyper;
@@ -16,6 +18,7 @@ use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// How diagonal epochs execute (see [`crate::scheduler::pool`]):
@@ -88,6 +91,13 @@ pub struct SweepStats {
     /// Update seconds: snapshot upkeep plus any adaptive
     /// observe/re-pack work between epochs and sweeps.
     pub update_secs: f64,
+    /// Out-of-core load stalls: seconds the sweep blocked waiting for
+    /// diagonal blocks (0 in-core; ≈0 when prefetch fully overlaps
+    /// sampling — see [`crate::corpus::shard`]).
+    pub io_load_secs: f64,
+    /// Out-of-core write-back seconds (dirty `z` arrays after each
+    /// epoch's barrier; 0 in-core).
+    pub io_write_secs: f64,
 }
 
 impl SweepStats {
@@ -152,6 +162,41 @@ impl SweepStats {
     }
 }
 
+/// Generate a plan's token blocks diagonal by diagonal under a residency
+/// policy, handing each block to `absorb` (count initialization) before
+/// the policy decides whether it stays resident — the invariant that
+/// keeps spill-mode init peak memory at roughly one diagonal. Shared by
+/// [`ParallelLda`] and the BoT trainer's phases; `store_tag` names the
+/// temp spill directory.
+pub(crate) fn build_blocks(
+    map: &PartitionMap,
+    p: usize,
+    k: usize,
+    rng: &mut Rng,
+    residency: Residency,
+    store_tag: &str,
+    mut absorb: impl FnMut(&TokenBlock),
+) -> Result<ShardedBlocks> {
+    let mut shards = match residency {
+        Residency::InCore => ShardedBlocks::in_core(),
+        Residency::Spill { budget_bytes } => {
+            ShardedBlocks::spill(ShardStore::create_temp(store_tag)?, budget_bytes)
+        }
+    };
+    for l in 0..p {
+        let mut diag = Vec::with_capacity(p);
+        let mut diag_ids = Vec::with_capacity(p);
+        for (m, n) in map.diagonal(l) {
+            let b = TokenBlock::from_cells(map.cells(m, n), k, rng);
+            absorb(&b);
+            diag.push(b);
+            diag_ids.push(partition_id(m, n, p));
+        }
+        shards.push_diagonal(diag, diag_ids)?;
+    }
+    Ok(shards)
+}
+
 /// Parallel partitioned collapsed-Gibbs LDA (Yan et al.'s algorithm over
 /// the paper's partition plans), scheduled onto `W` workers.
 pub struct ParallelLda {
@@ -159,11 +204,11 @@ pub struct ParallelLda {
     pub counts: LdaCounts,
     /// Grid size `P` of the partition plan.
     pub p: usize,
-    /// Token blocks, diagonal-major: `blocks[l][m]` is partition
-    /// `(m, (m+l) mod P)`.
-    blocks: Vec<Vec<TokenBlock>>,
-    /// Global partition ids, parallel to `blocks` (RNG keying).
-    ids: Vec<Vec<u64>>,
+    /// Token blocks under the residency policy, diagonal-major:
+    /// diagonal `l`'s position-`m` block is partition `(m, (m+l) mod P)`.
+    /// In-core they all stay resident; in spill mode at most ~two
+    /// diagonals are (see [`crate::corpus::shard::ShardedBlocks`]).
+    shards: ShardedBlocks,
     /// The plan's token-cost matrix; schedules are (re)built against it.
     costs: CostMatrix,
     /// Grid → worker mapping executed by [`Self::sweep`].
@@ -227,35 +272,41 @@ impl ParallelLda {
         kind: ScheduleKind,
         workers: usize,
     ) -> Self {
+        Self::init_resident(bow, plan, k, alpha, beta, seed, kind, workers, Residency::InCore)
+            .expect("in-core init performs no IO")
+    }
+
+    /// As [`Self::init_scheduled`], with an explicit [`Residency`]. Under
+    /// `Spill` each diagonal's blocks are written to a temp
+    /// [`ShardStore`] as they are generated, so init peak memory stays at
+    /// roughly one diagonal; training then streams diagonals through RAM
+    /// (see [`crate::corpus::shard`]). Residency never changes results:
+    /// blocks round-trip bit-exactly and RNG streams are keyed by
+    /// `(sweep, partition)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn init_resident(
+        bow: &BagOfWords,
+        plan: &Plan,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        residency: Residency,
+    ) -> Result<Self> {
         let p = plan.p;
         let schedule = Schedule::build(kind, &plan.costs, workers);
         let map = PartitionMap::build(bow, plan);
         let mut rng = Rng::stream(seed, 0x1417);
-        let mut blocks: Vec<Vec<TokenBlock>> = Vec::with_capacity(p);
-        let mut ids: Vec<Vec<u64>> = Vec::with_capacity(p);
-        for l in 0..p {
-            let mut diag = Vec::with_capacity(p);
-            let mut diag_ids = Vec::with_capacity(p);
-            for (m, n) in map.diagonal(l) {
-                diag.push(TokenBlock::from_cells(map.cells(m, n), k, &mut rng));
-                diag_ids.push(partition_id(m, n, p));
-            }
-            blocks.push(diag);
-            ids.push(diag_ids);
-        }
         let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
-        for diag in &blocks {
-            for b in diag {
-                counts.absorb(b);
-            }
-        }
+        let shards = build_blocks(&map, p, k, &mut rng, residency, "lda", |b| counts.absorb(b))?;
         let workers = schedule.workers;
-        Self {
+        Ok(Self {
             h: Hyper::new(k, alpha, beta, bow.num_words()),
             counts,
             p,
-            blocks,
-            ids,
+            shards,
             costs: plan.costs.clone(),
             engines: EngineCache::new(workers),
             schedule,
@@ -268,7 +319,80 @@ impl ParallelLda {
             deltas: vec![vec![0i64; k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
-        }
+        })
+    }
+
+    /// Rebuild a trainer from a kept spill directory — the crash-safety
+    /// path. Every partition's full `(docs, words, z)` state lives in the
+    /// store, so the count matrices are reconstructed exactly by
+    /// re-absorbing the stored blocks; `sweeps_done` must be the number
+    /// of completed sweeps (it keys the task RNG streams), after which
+    /// training continues bit-identically to an uninterrupted run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resume_spilled(
+        bow: &BagOfWords,
+        plan: &Plan,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        dir: &Path,
+        sweeps_done: usize,
+        residency: Residency,
+    ) -> Result<Self> {
+        let p = plan.p;
+        let schedule = Schedule::build(kind, &plan.costs, workers);
+        let map = PartitionMap::build(bow, plan);
+        let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+        let store = ShardStore::open(dir)?;
+        let expected = sweeps_done as u64;
+        let diag_ids = |l: usize| -> Vec<u64> {
+            map.diagonal(l).map(|(m, n)| partition_id(m, n, p)).collect()
+        };
+        let shards = match residency {
+            Residency::InCore => {
+                let mut shards = ShardedBlocks::in_core();
+                for l in 0..p {
+                    let ids = diag_ids(l);
+                    let mut diag = Vec::with_capacity(ids.len());
+                    for &id in &ids {
+                        let b = store.read_block_verified(id, expected)?;
+                        counts.absorb(&b);
+                        diag.push(b);
+                    }
+                    shards.push_diagonal(diag, ids)?;
+                }
+                shards // `store` drops here; opened stores keep their files
+            }
+            Residency::Spill { budget_bytes } => {
+                let mut shards = ShardedBlocks::spill(store, budget_bytes);
+                for l in 0..p {
+                    shards.adopt_diagonal(diag_ids(l), expected, |b| counts.absorb(b))?;
+                }
+                shards
+            }
+        };
+        let workers = schedule.workers;
+        Ok(Self {
+            h: Hyper::new(k, alpha, beta, bow.num_words()),
+            counts,
+            p,
+            shards,
+            costs: plan.costs.clone(),
+            engines: EngineCache::new(workers),
+            schedule,
+            kernel: KernelKind::Dense,
+            balance: BalanceMode::Static,
+            estimator: Measured::new(p),
+            seed,
+            sweeps_done,
+            snapshot: vec![0; k],
+            deltas: vec![vec![0i64; k]; p],
+            task_nanos: vec![0; p],
+            worker_nanos: vec![0; workers],
+        })
     }
 
     /// Re-map the same plan onto a different worker count / schedule
@@ -361,6 +485,10 @@ impl ParallelLda {
             workers: self.schedule.workers,
             ..SweepStats::default()
         };
+        // Spill write-backs during this sweep carry the sweep count they
+        // complete, so an at-rest store is uniformly stamped and resume
+        // can verify it is not mid-sweep.
+        self.shards.set_stamp(sweep_no as u64 + 1);
 
         // Bring the persistent snapshot buffer up to date once per sweep
         // (k u32s — cheap); per-epoch it is maintained by the merge below.
@@ -369,8 +497,19 @@ impl ParallelLda {
         stats.update_secs += update_started.elapsed().as_secs_f64();
 
         for l in 0..p {
+            // Out-of-core: make this diagonal resident (collecting the
+            // prefetch the previous epoch overlapped with its sampling),
+            // then start loading the next one on the IO thread. Both are
+            // no-ops in-core.
+            stats.io_load_secs += self
+                .shards
+                .acquire(l)
+                .expect("out-of-core: loading a diagonal from the shard store failed");
+            if p > 1 {
+                self.shards.prefetch((l + 1) % p);
+            }
             let epoch_started = Instant::now();
-            let diag = &mut self.blocks[l];
+            let (diag, ids) = self.shards.diag_parts(l);
             let ep = &self.schedule.epochs[l];
             stats
                 .epoch_max_tokens
@@ -389,7 +528,7 @@ impl ParallelLda {
             };
             let tasks = EpochTasks {
                 blocks: diag,
-                ids: &self.ids[l],
+                ids,
                 assign: &ep.assign,
                 nanos: &mut self.task_nanos[..n],
                 worker_nanos: &mut self.worker_nanos,
@@ -408,6 +547,12 @@ impl ParallelLda {
             merge_deltas(&mut self.counts.topic, &mut self.snapshot, &self.deltas[..n]);
             stats.barrier_secs += barrier_started.elapsed().as_secs_f64();
             stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
+            // Out-of-core: the barrier sequenced all sampling of this
+            // diagonal — write its dirty `z` arrays back and evict.
+            stats.io_write_secs += self
+                .shards
+                .release(l)
+                .expect("out-of-core: writing a diagonal back to the shard store failed");
         }
 
         self.sweeps_done += 1;
@@ -418,6 +563,17 @@ impl ParallelLda {
         // chase measured cost. Pure assignment motion: results unchanged.
         let update_started = Instant::now();
         self.estimator.observe_sweep(&self.costs, &stats.task_nanos);
+        if !steal {
+            // Per-worker speed telemetry (measured vs predicted busy
+            // time), so adaptive re-packing can account for
+            // heterogeneous workers. Under stealing the static
+            // assignment is only a hint, so the prediction wouldn't
+            // describe what each worker actually ran.
+            let predicted = self
+                .estimator
+                .predicted_worker_loads(&self.schedule, &self.costs);
+            self.estimator.observe_workers(&predicted, &stats.worker_nanos);
+        }
         if self.balance == BalanceMode::Adaptive {
             self.estimator.repack(&mut self.schedule, &self.costs);
         }
@@ -425,10 +581,12 @@ impl ParallelLda {
         // Debug builds (unit + integration test runs) audit the full
         // count/assignment invariant after every sweep, so a kernel
         // count-delta bug fails loudly at the sweep that introduced it
-        // instead of surfacing as a perplexity drift much later.
+        // instead of surfacing as a perplexity drift much later. The
+        // audit needs the whole corpus in RAM, so spill-mode sweeps skip
+        // it (the spill ≡ in-core matrix tests cover that path).
         #[cfg(debug_assertions)]
-        {
-            let blocks: Vec<&TokenBlock> = self.blocks.iter().flatten().collect();
+        if self.shards.fully_resident() {
+            let blocks = self.shards.resident_blocks();
             if let Err(e) = self.counts.check_consistency(&blocks) {
                 panic!(
                     "kernel {} corrupted LDA counts on sweep {sweep_no}: {e}",
@@ -474,9 +632,34 @@ impl ParallelLda {
         perplexity::perplexity(bow, &self.counts, &self.h)
     }
 
-    /// Borrow all token blocks (test/diagnostic use).
+    /// Borrow all resident token blocks (test/diagnostic use; the whole
+    /// corpus in-core, at most ~two diagonals in spill mode).
     pub fn all_blocks(&self) -> Vec<&TokenBlock> {
-        self.blocks.iter().flatten().collect()
+        self.shards.resident_blocks()
+    }
+
+    /// The residency policy this trainer runs under.
+    pub fn residency(&self) -> Residency {
+        self.shards.residency()
+    }
+
+    /// High-water mark of resident token bytes (includes in-flight
+    /// prefetches; for in-core trainers this is simply the corpus's
+    /// token bytes). The memory-budget acceptance tests assert on it.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.shards.peak_resident_bytes()
+    }
+
+    /// The spill directory, if this trainer spills.
+    pub fn spill_dir(&self) -> Option<&Path> {
+        self.shards.store_path()
+    }
+
+    /// Keep the spill directory on drop so a later
+    /// [`Self::resume_spilled`] can pick the run back up (retires the
+    /// prefetch thread; subsequent sweeps load synchronously).
+    pub fn keep_spill_store(&mut self) {
+        self.shards.keep_store();
     }
 }
 
@@ -973,5 +1156,185 @@ mod tests {
         );
         let stats = lda.sweep(ExecMode::Sequential);
         assert_eq!(stats.measured_cost(), lda.schedule().cost(&plan.costs));
+    }
+
+    fn setup_resident(
+        grid: usize,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        residency: Residency,
+    ) -> (BagOfWords, ParallelLda) {
+        let bow = generate(&Profile::tiny(), seed);
+        let plan = partition(&bow, grid, Algorithm::A3 { restarts: 3 }, seed);
+        let lda =
+            ParallelLda::init_resident(&bow, &plan, 8, 0.5, 0.1, seed, kind, workers, residency)
+                .expect("spill init");
+        (bow, lda)
+    }
+
+    #[test]
+    fn spill_matches_in_core_across_kernels_modes_and_workers() {
+        // The out-of-core acceptance matrix at trainer level: for every
+        // kernel, exec mode, and worker count, a spilled trainer is
+        // bit-identical to the in-core Sequential diagonal oracle.
+        let spill = Residency::Spill { budget_bytes: 0 };
+        for kernel in KernelKind::all() {
+            let (_bow, mut oracle) = setup(4, 121);
+            oracle.set_kernel(kernel);
+            for _ in 0..3 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                    let (_b, mut lda) = setup_resident(4, 121, kind, workers, spill);
+                    assert_eq!(lda.residency(), spill);
+                    lda.set_kernel(kernel);
+                    for _ in 0..3 {
+                        lda.sweep(mode);
+                    }
+                    assert_eq!(
+                        lda.counts.doc_topic,
+                        oracle.counts.doc_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        lda.counts.word_topic,
+                        oracle.counts.word_topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                    assert_eq!(
+                        lda.counts.topic,
+                        oracle.counts.topic,
+                        "{kernel:?} {mode:?} W={workers}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spill_respects_memory_budget_and_stays_bit_identical() {
+        // Budget the spilled trainer to its two largest adjacent
+        // diagonals: the sweep must honor the bound (asserted on the
+        // high-water mark, which includes in-flight prefetches) while
+        // training bit-identically to in-core.
+        let (_bow, mut in_core) = setup(4, 122);
+        let corpus_bytes = in_core.peak_resident_bytes();
+        for _ in 0..3 {
+            in_core.sweep(ExecMode::Sequential);
+        }
+        // Generous two-diagonal budget: in a 4×4 grid one diagonal holds
+        // ~1/4 of the corpus, so half the corpus covers current + next.
+        let budget = corpus_bytes / 2;
+        let spill = Residency::Spill { budget_bytes: budget };
+        let (_b, mut lda) = setup_resident(4, 122, ScheduleKind::Diagonal, 4, spill);
+        let mut stats = SweepStats::default();
+        for _ in 0..3 {
+            stats = lda.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(lda.counts.doc_topic, in_core.counts.doc_topic);
+        assert_eq!(lda.counts.word_topic, in_core.counts.word_topic);
+        assert_eq!(lda.counts.topic, in_core.counts.topic);
+        let peak = lda.peak_resident_bytes();
+        assert!(peak > 0, "something was resident");
+        assert!(
+            peak <= budget,
+            "resident token bytes {peak} exceeded the {budget} budget"
+        );
+        assert!(
+            peak < corpus_bytes,
+            "spill mode must hold less than the whole corpus ({peak} vs {corpus_bytes})"
+        );
+        assert!(
+            stats.io_write_secs > 0.0,
+            "write-back happened and was measured"
+        );
+    }
+
+    #[test]
+    fn spilled_trainer_resumes_from_kept_store() {
+        // Crash-safety: stop a spilled run after 2 sweeps, re-open its
+        // store, resume for a 3rd — identical to 3 uninterrupted sweeps.
+        let (_bow, mut oracle) = setup(4, 123);
+        for _ in 0..3 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let spill = Residency::Spill { budget_bytes: 0 };
+        let dir = {
+            let (_b, mut lda) = setup_resident(4, 123, ScheduleKind::Diagonal, 4, spill);
+            for _ in 0..2 {
+                lda.sweep(ExecMode::Sequential);
+            }
+            lda.keep_spill_store();
+            lda.sweep(ExecMode::Sequential); // kept stores keep training
+            let dir = lda.spill_dir().expect("spilled trainer has a dir").to_path_buf();
+            assert_eq!(lda.counts.topic, oracle.counts.topic, "pre-drop sanity");
+            drop(lda);
+            dir
+        };
+        assert!(dir.is_dir(), "kept store survives the trainer");
+
+        // Rebuild from the store at sweeps_done = 3... then roll a 4th
+        // sweep on both and compare everything.
+        let bow = generate(&Profile::tiny(), 123);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 3 }, 123);
+        // A wrong sweep count (== a store a crash left mid-sweep) is
+        // refused via the per-block sweep stamps, not trained from.
+        let err = match ParallelLda::resume_spilled(
+            &bow,
+            &plan,
+            8,
+            0.5,
+            0.1,
+            123,
+            ScheduleKind::Diagonal,
+            4,
+            &dir,
+            2,
+            spill,
+        ) {
+            Ok(_) => panic!("a mismatched-stamp store must be refused"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("sweep stamp 3"), "{err}");
+        for residency in [Residency::InCore, spill] {
+            let mut resumed = ParallelLda::resume_spilled(
+                &bow,
+                &plan,
+                8,
+                0.5,
+                0.1,
+                123,
+                ScheduleKind::Diagonal,
+                4,
+                &dir,
+                3,
+                residency,
+            )
+            .expect("resume");
+            assert_eq!(
+                resumed.counts.doc_topic, oracle.counts.doc_topic,
+                "{residency:?}: counts reconstructed from stored blocks"
+            );
+            assert_eq!(resumed.counts.word_topic, oracle.counts.word_topic);
+            assert_eq!(resumed.counts.topic, oracle.counts.topic);
+            let mut fresh = {
+                let (_b, lda) = setup(4, 123);
+                lda
+            };
+            for _ in 0..4 {
+                fresh.sweep(ExecMode::Sequential);
+            }
+            resumed.sweep(ExecMode::Sequential);
+            assert_eq!(
+                resumed.counts.doc_topic, fresh.counts.doc_topic,
+                "{residency:?}: sweep 4 continues the chain bit-identically"
+            );
+            assert_eq!(resumed.counts.word_topic, fresh.counts.word_topic);
+            assert_eq!(resumed.counts.topic, fresh.counts.topic);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

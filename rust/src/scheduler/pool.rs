@@ -49,6 +49,13 @@
 //!    one completion per submitted job. Only then does it merge deltas
 //!    and advance, so every raw pointer inside a `Job` outlives its use.
 //!
+//! The gather barrier doubles as the out-of-core synchronization point:
+//! in spill mode the trainer issues the next diagonal's load on the
+//! prefetch thread just before scattering this epoch's jobs and collects
+//! it after the gather, so disk IO overlaps the sample stage without any
+//! additional coordination (see [`crate::corpus::shard`] and
+//! `docs/out_of_core.md`).
+//!
 //! # Determinism
 //!
 //! Task RNG streams are keyed by `(seed, sweep, partition)` via
@@ -850,6 +857,8 @@ mod tests {
         let assign = identity_assign(2);
         let mut engines = EngineCache::new(2);
         let mut deltas = vec![vec![0i64; k]; 2];
+        let mut nanos = vec![0u64; 2];
+        let mut worker_nanos = vec![0u64; 2];
         let mut snapshot = counts.topic.clone();
         for (e, &kernel) in seq.iter().enumerate() {
             let spec = EpochSpec {
@@ -865,6 +874,9 @@ mod tests {
                 blocks: &mut blocks,
                 ids: &ids,
                 assign: &assign,
+                nanos: &mut nanos,
+                worker_nanos: &mut worker_nanos,
+                steal: false,
             };
             engines.get(ExecMode::Pooled).run_epoch(&spec, tasks, &mut deltas);
             merge_deltas(&mut counts.topic, &mut snapshot, &deltas);

@@ -202,14 +202,31 @@ impl Schedule {
     /// trained counts. Diagonal schedules are left untouched: with one
     /// task per worker per epoch there is no packing freedom (any
     /// permutation has the same critical path).
+    ///
+    /// Equivalent to [`Self::repack_hetero`] with uniform worker speeds;
+    /// both consult the outgoing assignment for the cache-affinity
+    /// tie-break (costs tie → a partition stays with the worker that
+    /// last ran it).
     pub fn repack_with(&mut self, cost: impl Fn(usize, usize) -> u64) {
+        let factors = vec![1.0; self.workers];
+        self.repack_hetero(cost, &factors);
+    }
+
+    /// Heterogeneity-aware re-packing: as [`Self::repack_with`], but each
+    /// placement minimizes *predicted completion time*
+    /// `(load_w + cost) · factor_w`, where `factors[w]` is worker `w`'s
+    /// relative slowdown (1.0 = machine average — see
+    /// [`crate::scheduler::adaptive::Measured::worker_factors`]). With
+    /// uniform factors this is exactly classic LPT.
+    pub fn repack_hetero(&mut self, cost: impl Fn(usize, usize) -> u64, factors: &[f64]) {
         if self.kind == ScheduleKind::Diagonal {
             return;
         }
+        assert_eq!(factors.len(), self.workers, "one speed factor per worker");
         let p = self.grid;
         let w = self.workers;
         for (l, ep) in self.epochs.iter_mut().enumerate() {
-            ep.assign = pack_lpt_by(p, w, l, &cost);
+            ep.assign = pack_lpt_hetero(p, w, l, &cost, factors, Some(&ep.assign));
         }
     }
 
@@ -254,6 +271,44 @@ pub fn pack_lpt_by(
     l: usize,
     cost: impl Fn(usize, usize) -> u64,
 ) -> Vec<Vec<u32>> {
+    let factors = vec![1.0; workers];
+    pack_lpt_hetero(p, workers, l, cost, &factors, None)
+}
+
+/// The general LPT packer behind [`pack_lpt_by`] and
+/// [`Schedule::repack_hetero`]: heterogeneous workers and cache-affinity
+/// tie-breaks.
+///
+/// Partitions are placed in descending cost order (ties toward the lower
+/// diagonal position); each goes to the worker minimizing its predicted
+/// completion time `(load_w + cost) · factors[w]`. On an exact tie the
+/// partition's previous owner in `prev` wins (keeping it on the worker
+/// whose cache lines still hold its rows), then the lower worker index —
+/// so the packing stays a pure function of `(cost, factors, prev)`.
+/// Uniform factors make completion-time minimization coincide with
+/// classic least-loaded LPT, and `prev = None` reproduces the historical
+/// lowest-index tie-break exactly.
+pub fn pack_lpt_hetero(
+    p: usize,
+    workers: usize,
+    l: usize,
+    cost: impl Fn(usize, usize) -> u64,
+    factors: &[f64],
+    prev: Option<&[Vec<u32>]>,
+) -> Vec<Vec<u32>> {
+    assert_eq!(factors.len(), workers, "one speed factor per worker");
+    // Previous owner of each diagonal position, for the affinity
+    // tie-break (usize::MAX = none).
+    let mut owner = vec![usize::MAX; p];
+    if let Some(prev) = prev {
+        for (w, list) in prev.iter().enumerate() {
+            for &m in list {
+                if (m as usize) < p {
+                    owner[m as usize] = w;
+                }
+            }
+        }
+    }
     let mut order: Vec<u32> = (0..p as u32).collect();
     order.sort_by(|&a, &b| {
         let ca = cost(a as usize, (a as usize + l) % p);
@@ -261,16 +316,22 @@ pub fn pack_lpt_by(
         cb.cmp(&ca).then(a.cmp(&b))
     });
     let mut assign: Vec<Vec<u32>> = vec![Vec::new(); workers];
-    let mut loads = vec![0u64; workers];
+    let mut loads = vec![0f64; workers];
     for m in order {
-        let w = loads
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, &load)| (load, i))
-            .map(|(i, _)| i)
-            .unwrap();
-        assign[w].push(m);
-        loads[w] += cost(m as usize, (m as usize + l) % p);
+        let c = cost(m as usize, (m as usize + l) % p) as f64;
+        let mut best = 0usize;
+        let mut best_key = f64::INFINITY;
+        for (w, (&load, &factor)) in loads.iter().zip(factors).enumerate() {
+            let key = (load + c) * factor;
+            // Strict `<` keeps the first (lowest-index) minimizer; the
+            // equality arm lets the previous owner displace it on ties.
+            if key < best_key || (key == best_key && owner[m as usize] == w) {
+                best = w;
+                best_key = key;
+            }
+        }
+        assign[best].push(m);
+        loads[best] += c;
     }
     assign
 }
@@ -447,6 +508,60 @@ mod tests {
             for (w, list) in ep.assign.iter().enumerate() {
                 assert_eq!(list.as_slice(), &[w as u32]);
             }
+        }
+    }
+
+    #[test]
+    fn affinity_tie_break_keeps_partitions_on_their_last_worker() {
+        // A diagonal whose partitions all cost the same has total packing
+        // freedom; the tie-break must keep each partition with the worker
+        // that last ran it instead of reshuffling by index. Build a 4×4
+        // grid with every cell equal (all diagonals fully tied).
+        let mut cells = Vec::new();
+        for m in 0..4u32 {
+            for n in 0..4u32 {
+                cells.push((m, n, 10u32));
+            }
+        }
+        let bow = BagOfWords::from_triplets(4, 4, cells);
+        let costs = CostMatrix::compute_p(&bow, &[0, 1, 2, 3], &[0, 1, 2, 3], 4);
+        let mut s = Schedule::build(ScheduleKind::Packed { grid_factor: 2 }, &costs, 2);
+        // Hand-pin an assignment LPT-by-index would never produce, then
+        // repack against the same (tied) cost field: affinity must keep
+        // every partition with its pinned owner.
+        for ep in &mut s.epochs {
+            ep.assign = vec![vec![1, 2], vec![0, 3]];
+        }
+        s.repack_with(|m, n| costs.get(m, n));
+        for (l, ep) in s.epochs.iter().enumerate() {
+            let mut w0 = ep.assign[0].clone();
+            let mut w1 = ep.assign[1].clone();
+            w0.sort_unstable();
+            w1.sort_unstable();
+            assert_eq!(w0, vec![1, 2], "epoch {l}: worker 0 kept its partitions");
+            assert_eq!(w1, vec![0, 3], "epoch {l}: worker 1 kept its partitions");
+        }
+    }
+
+    #[test]
+    fn hetero_packing_shifts_load_toward_fast_workers() {
+        // Four equal-cost tasks on 2 workers whose measured speeds differ
+        // 3×: completion-time LPT must give the fast worker three tasks
+        // and the slow worker one (completion 3c·0.5 = 1c·1.5).
+        let assign = pack_lpt_hetero(4, 2, 0, |_, _| 100, &[0.5, 1.5], None);
+        assert_eq!(assign[0].len(), 3, "fast worker absorbs the load: {assign:?}");
+        assert_eq!(assign[1].len(), 1, "slow worker gets one task: {assign:?}");
+    }
+
+    #[test]
+    fn hetero_packing_with_uniform_factors_matches_classic_lpt() {
+        let bow = small_bow(10);
+        let costs = costs_of(&bow, 8, 10);
+        for l in 0..8 {
+            let classic = pack_lpt_by(8, 2, l, |m, n| costs.get(m, n));
+            let hetero =
+                pack_lpt_hetero(8, 2, l, |m, n| costs.get(m, n), &[1.0, 1.0], None);
+            assert_eq!(classic, hetero, "diagonal {l}");
         }
     }
 

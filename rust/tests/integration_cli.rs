@@ -232,3 +232,66 @@ fn train_json_report() {
     assert!(json.contains("\"final_perplexity\""));
     std::fs::remove_file(path).ok();
 }
+
+#[test]
+fn train_spill_residency_via_cli() {
+    // Determinism across residency at the CLI surface: the same run
+    // in-core and spilled (with a byte budget + explicit spill dir)
+    // prints identical perplexity lines.
+    let dir = std::env::temp_dir().join(format!("pplda-cli-spill-{}", std::process::id()));
+    let base = [
+        "train", "--profile", "tiny", "--procs", "3", "--topics", "4",
+        "--iters", "3", "--eval-every", "3", "--restarts", "2",
+    ];
+    let (in_core, _, ok) = pplda(&base);
+    assert!(ok, "{in_core}");
+    let mut spill_args: Vec<&str> = base.to_vec();
+    let dir_s = dir.to_str().unwrap().to_string();
+    spill_args.extend_from_slice(&[
+        "--residency", "spill", "--memory-budget", "4m", "--spill-dir", &dir_s,
+    ]);
+    let (spilled, _, ok) = pplda(&spill_args);
+    assert!(ok, "{spilled}");
+    assert!(spilled.contains("residency=spill(4.00MiB)"), "{spilled}");
+    let perplexity_of = |out: &str| {
+        out.lines()
+            .find(|l| l.contains("final perplexity"))
+            .map(String::from)
+            .unwrap()
+    };
+    assert_eq!(perplexity_of(&spilled), perplexity_of(&in_core));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_bot_spill_residency_via_cli() {
+    let (out, _, ok) = pplda(&[
+        "train-bot", "--profile", "tiny", "--procs", "2", "--topics", "4",
+        "--iters", "2", "--restarts", "2", "--residency", "spill",
+        "--mode", "pooled",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("residency=spill"), "{out}");
+    assert!(out.contains("perplexity="), "{out}");
+}
+
+#[test]
+fn unknown_residency_fails() {
+    let (_, err, ok) = pplda(&[
+        "train", "--profile", "tiny", "--topics", "4", "--iters", "1",
+        "--residency", "tape",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown residency"), "{err}");
+}
+
+#[test]
+fn in_core_with_memory_budget_fails() {
+    // A stale --memory-budget must not silently become an unbounded run.
+    let (_, err, ok) = pplda(&[
+        "train", "--profile", "tiny", "--topics", "4", "--iters", "1",
+        "--residency", "in-core", "--memory-budget", "4m",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("only applies to --residency spill"), "{err}");
+}

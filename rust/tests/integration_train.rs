@@ -2,6 +2,7 @@
 //! BoT) — determinism, convergence, and the Table-IV equivalence claim.
 
 use pplda::coordinator::{train_bot, train_lda, TrainConfig};
+use pplda::corpus::shard::Residency;
 use pplda::corpus::synthetic::{generate, generate_timestamped, Profile, TimeProfile};
 use pplda::gibbs::serial::SerialLda;
 use pplda::kernel::KernelKind;
@@ -261,6 +262,64 @@ fn sparse_and_alias_converge_with_dense_on_nips_like() {
             r.final_perplexity
         );
     }
+}
+
+#[test]
+fn spill_residency_through_driver_is_bit_identical() {
+    // The out-of-core determinism claim end to end: `--residency spill`
+    // (with and without a byte budget) reproduces the in-core perplexity
+    // curve bit for bit, across exec modes and packed schedules.
+    let bow = generate(&small_profile(), 114);
+    let plan = partition(&bow, 4, Algorithm::A3 { restarts: 3 }, 13);
+    let mut cfg = TrainConfig::quick(8, 4);
+    cfg.eval_every = 2;
+    let in_core = train_lda(&bow, &plan, &cfg);
+    assert_eq!(in_core.residency, "in-core");
+
+    for (residency, label) in [
+        (Residency::Spill { budget_bytes: 0 }, "spill".to_string()),
+        // Half the corpus comfortably covers two of the four diagonals.
+        (
+            Residency::Spill { budget_bytes: bow.num_tokens() * 12 / 2 },
+            format!(
+                "spill({})",
+                pplda::util::human_bytes((bow.num_tokens() * 12 / 2) as usize)
+            ),
+        ),
+    ] {
+        for mode in [ExecMode::Sequential, ExecMode::Pooled] {
+            let mut c = cfg;
+            c.residency = residency;
+            c.mode = mode;
+            let r = train_lda(&bow, &plan, &c);
+            assert_eq!(r.residency, label, "{mode:?}");
+            assert_eq!(r.final_perplexity, in_core.final_perplexity, "{mode:?} {label}");
+            assert_eq!(r.curve, in_core.curve, "{mode:?} {label}");
+        }
+    }
+}
+
+#[test]
+fn spill_bot_through_driver_is_bit_identical() {
+    let mut profile = Profile::tiny();
+    profile.time = Some(TimeProfile {
+        first_year: 2000,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 4,
+    });
+    let tc = generate_timestamped(&profile, 115);
+    let mut cfg = TrainConfig::quick(8, 3);
+    let in_core = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+    assert_eq!(in_core.residency, "in-core");
+    cfg.residency = Residency::Spill { budget_bytes: 0 };
+    cfg.mode = ExecMode::Pooled;
+    let spilled = train_bot(&tc, 4, Algorithm::A3 { restarts: 3 }, &cfg);
+    assert_eq!(spilled.residency, "spill");
+    assert_eq!(spilled.final_perplexity, in_core.final_perplexity);
+    // Spill-mode phase breakdown surfaces the write-back bucket.
+    let names: Vec<&str> = spilled.phases.iter().map(|(n, _)| n.as_str()).collect();
+    assert!(names.contains(&"spill_write"), "{names:?}");
 }
 
 #[test]
