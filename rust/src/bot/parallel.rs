@@ -4,11 +4,12 @@
 //! and both scheduled onto the same `W` workers (each plan gets its own
 //! LPT packing, since their cost matrices differ).
 
+use std::path::Path;
 use std::time::Instant;
 
 use crate::bot::counts::BotCounts;
 use crate::bot::serial::BotHyper;
-use crate::corpus::shard::{Residency, ShardedBlocks};
+use crate::corpus::shard::{Residency, ShardedBlocks, ShardStore};
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::gibbs::tokens::TokenBlock;
 use crate::kernel::KernelKind;
@@ -22,6 +23,17 @@ use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
+
+/// Salt folded into the base seed for the *word* phase's task RNG keys
+/// (`task seed = trainer seed ^ BOT_WORD_SALT`), keeping the DW and DTS
+/// phases on disjoint RNG streams even though they share a sweep
+/// counter. Fault-injection keys for word-phase tasks lead with this
+/// salted seed (see `util::fault`).
+pub(crate) const BOT_WORD_SALT: u64 = 0xD0C5;
+
+/// Salt folded into the base seed for the *timestamp* phase's task RNG
+/// keys — the DTS counterpart of [`BOT_WORD_SALT`].
+pub(crate) const BOT_STAMP_SALT: u64 = 0x7135;
 
 /// Diagonal-major token blocks (under a residency policy) plus schedule
 /// and cost state for one matrix.
@@ -56,6 +68,54 @@ impl Phase {
         let p = plan.p;
         let map = PartitionMap::build(bow, plan);
         let shards = build_blocks(&map, p, k, rng, residency, store_tag, absorb)?;
+        Ok(Self {
+            shards,
+            costs: plan.costs.clone(),
+            schedule: Schedule::build(kind, &plan.costs, workers),
+            estimator: Measured::new(p),
+        })
+    }
+
+    /// Rebuild the phase by verified-reading every partition's block out
+    /// of a checkpoint store `src` (CRC32 checksums plus the `expected`
+    /// sweep stamp), re-absorbing the counts, and building a fresh block
+    /// container under `residency` — the BoT half of the copy-out resume
+    /// path (see `ParallelLda::resume_from_store`). `src` is left
+    /// untouched for future resumes.
+    #[allow(clippy::too_many_arguments)]
+    fn resume(
+        bow: &crate::corpus::bow::BagOfWords,
+        plan: &Plan,
+        kind: ScheduleKind,
+        workers: usize,
+        residency: Residency,
+        store_tag: &str,
+        src: &ShardStore,
+        expected: u64,
+        mut absorb: impl FnMut(&TokenBlock),
+    ) -> Result<Self> {
+        let p = plan.p;
+        let map = PartitionMap::build(bow, plan);
+        let mut shards = match residency {
+            Residency::InCore => ShardedBlocks::in_core(),
+            Residency::Spill { budget_bytes } => {
+                ShardedBlocks::spill(ShardStore::create_temp(store_tag)?, budget_bytes)
+            }
+        };
+        // Blocks re-spilled while rebuilding must carry the checkpoint's
+        // stamp, preserving the at-rest invariant until the next sweep
+        // bumps it.
+        shards.set_stamp(expected);
+        for l in 0..p {
+            let ids: Vec<u64> = map.diagonal(l).map(|(m, n)| partition_id(m, n, p)).collect();
+            let mut diag = Vec::with_capacity(ids.len());
+            for &id in &ids {
+                let b = src.read_block_verified(id, expected)?;
+                absorb(&b);
+                diag.push(b);
+            }
+            shards.push_diagonal(diag, ids)?;
+        }
         Ok(Self {
             shards,
             costs: plan.costs.clone(),
@@ -209,6 +269,118 @@ impl ParallelBot {
         })
     }
 
+    /// Rebuild a BoT trainer by *copying* blocks out of a pair of
+    /// checkpoint stores — `dw_store` holding the word-phase partitions,
+    /// `dts_store` the timestamp-phase ones. Every block is
+    /// verified-read (CRC32 checksums plus the `sweeps_done` stamp), the
+    /// count matrices are reconstructed exactly by re-absorption, and
+    /// fresh block containers are built under `residency`, leaving both
+    /// checkpoint stores untouched for future resumes. Task RNG streams
+    /// depend only on `(seed, sweep, partition)` per phase, so training
+    /// continues bit-identically to an uninterrupted run. The checkpoint
+    /// drivers in `crate::coordinator::checkpoint` resume through this.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resume_from_store(
+        tc: &TimestampedCorpus,
+        plan_dw: &Plan,
+        plan_dts: &Plan,
+        h: BotHyper,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        dw_store: &ShardStore,
+        dts_store: &ShardStore,
+        sweeps_done: usize,
+        residency: Residency,
+    ) -> Result<Self> {
+        assert_eq!(plan_dw.p, plan_dts.p, "DW and DTS plans must share P");
+        let p = plan_dw.p;
+        let phase_residency = match residency {
+            Residency::InCore => Residency::InCore,
+            Residency::Spill { budget_bytes } => Residency::Spill {
+                budget_bytes: budget_bytes / 2,
+            },
+        };
+        let expected = sweeps_done as u64;
+        let mut counts = BotCounts::zeros(
+            tc.bow.num_docs(),
+            tc.bow.num_words(),
+            tc.num_stamps,
+            h.k,
+        );
+        let word = Phase::resume(
+            &tc.bow,
+            plan_dw,
+            kind,
+            workers,
+            phase_residency,
+            "bot-word",
+            dw_store,
+            expected,
+            |b| counts.absorb_words(b),
+        )?;
+        let stamp = Phase::resume(
+            &tc.dts,
+            plan_dts,
+            kind,
+            workers,
+            phase_residency,
+            "bot-stamp",
+            dts_store,
+            expected,
+            |b| counts.absorb_stamps(b),
+        )?;
+        Ok(Self {
+            h,
+            counts,
+            p,
+            word,
+            stamp,
+            kernel: KernelKind::Dense,
+            balance: BalanceMode::Static,
+            residency,
+            seed,
+            sweeps_done,
+            engines: EngineCache::new(workers),
+            word_snapshot: vec![0; h.k],
+            stamp_snapshot: vec![0; h.k],
+            deltas: vec![vec![0i64; h.k]; p],
+            task_nanos: vec![0; p],
+            worker_nanos: vec![0; workers],
+        })
+    }
+
+    /// Sweeps completed so far. This is the checkpoint coordinate: task
+    /// RNG streams for sweep `s` depend only on `(phase seed, s,
+    /// partition)`, never on how the trainer reached sweep `s`.
+    pub fn sweeps_done(&self) -> usize {
+        self.sweeps_done
+    }
+
+    /// The base RNG seed this trainer was initialized with (the phase
+    /// salts [`BOT_WORD_SALT`] / [`BOT_STAMP_SALT`] are folded in per
+    /// epoch, not stored).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The live spill directories of the (word, timestamp) phases, if
+    /// spilling (`None` per phase when in-core).
+    pub fn spill_dirs(&self) -> (Option<&Path>, Option<&Path>) {
+        (self.word.shards.store_path(), self.stamp.shards.store_path())
+    }
+
+    /// Export every partition's current state into per-phase checkpoint
+    /// stores, stamped with the completed sweep count — the BoT
+    /// checkpoint primitive (see `crate::coordinator::checkpoint`). The
+    /// trainer is unchanged. Call between sweeps only (the at-rest stamp
+    /// equals `sweeps_done` there).
+    pub fn export_blocks(&self, dw: &ShardStore, dts: &ShardStore) -> Result<()> {
+        self.word.shards.export_to(dw)?;
+        self.stamp.shards.export_to(dts)?;
+        Ok(())
+    }
+
     /// Re-map both plans onto a different worker count / schedule kind
     /// mid-training; results are unaffected (partition-keyed RNG) but the
     /// executor state is rebuilt for the new worker count.
@@ -294,6 +466,12 @@ impl ParallelBot {
         // complete (see `ShardedBlocks::set_stamp`).
         self.word.shards.set_stamp(sweep_no as u64 + 1);
         self.stamp.shards.set_stamp(sweep_no as u64 + 1);
+        // Fault-tolerance telemetry: task retries are attributed to the
+        // phase whose epoch absorbed them (the engines are shared, so the
+        // counter is sliced per epoch); IO retries per phase store.
+        let mut task_retries_prev = self.engines.get(mode).retries();
+        let word_io0 = self.word.shards.io_retries();
+        let stamp_io0 = self.stamp.shards.io_retries();
 
         let update_started = Instant::now();
         self.word_snapshot.copy_from_slice(&self.counts.topic_words);
@@ -327,7 +505,7 @@ impl ParallelBot {
                     emit: SharedRows::new(&mut self.counts.word_topic, k),
                     snapshot: &self.word_snapshot,
                     h: self.h.word_hyper(),
-                    seed: self.seed ^ 0xD0C5,
+                    seed: self.seed ^ BOT_WORD_SALT,
                     sweep: sweep_no,
                     kernel: self.kernel,
                 };
@@ -343,6 +521,9 @@ impl ParallelBot {
                     .get(mode)
                     .run_epoch(&spec, tasks, &mut self.deltas[..n]);
                 wstats.sample_secs += started.elapsed().as_secs_f64();
+                let r = self.engines.get(mode).retries();
+                wstats.task_retries += r - task_retries_prev;
+                task_retries_prev = r;
                 wstats.task_nanos.push(self.task_nanos[..n].to_vec());
                 wstats.worker_nanos.push(self.worker_nanos.clone());
                 let barrier_started = Instant::now();
@@ -384,7 +565,7 @@ impl ParallelBot {
                     emit: SharedRows::new(&mut self.counts.stamp_topic, k),
                     snapshot: &self.stamp_snapshot,
                     h: self.h.stamp_hyper(),
-                    seed: self.seed ^ 0x7135,
+                    seed: self.seed ^ BOT_STAMP_SALT,
                     sweep: sweep_no,
                     kernel: self.kernel,
                 };
@@ -400,6 +581,9 @@ impl ParallelBot {
                     .get(mode)
                     .run_epoch(&spec, tasks, &mut self.deltas[..n]);
                 sstats.sample_secs += started.elapsed().as_secs_f64();
+                let r = self.engines.get(mode).retries();
+                sstats.task_retries += r - task_retries_prev;
+                task_retries_prev = r;
                 sstats.task_nanos.push(self.task_nanos[..n].to_vec());
                 sstats.worker_nanos.push(self.worker_nanos.clone());
                 let barrier_started = Instant::now();
@@ -418,6 +602,8 @@ impl ParallelBot {
             }
         }
         self.sweeps_done += 1;
+        wstats.io_retries = self.word.shards.io_retries() - word_io0;
+        sstats.io_retries = self.stamp.shards.io_retries() - stamp_io0;
         // Each phase folds its own telemetry every sweep (so a later
         // switch to `Adaptive` repacks from warm measurements) and,
         // under `Adaptive`, repacks its own schedule — the DW and DTS
@@ -985,5 +1171,168 @@ mod tests {
         let ps = ser.perplexity(&tc);
         let rel = (pp - ps).abs() / ps;
         assert!(rel < 0.05, "parallel {pp} vs serial {ps} (rel {rel})");
+    }
+
+    #[test]
+    fn export_and_resume_from_store_roundtrip_bot() {
+        // The BoT checkpoint primitive: export both phases' blocks
+        // between sweeps, rebuild a fresh trainer from the exported
+        // stores (under either residency), continue — bit-identical to
+        // the uninterrupted run.
+        let (_tc, mut oracle) = setup(4, 89);
+        for _ in 0..4 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let (tc, mut bot) = setup(4, 89);
+        let h = bot.h;
+        for _ in 0..2 {
+            bot.sweep(ExecMode::Sequential);
+        }
+        let dw = ShardStore::create_temp("bot-dw-export").expect("create DW export store");
+        let dts = ShardStore::create_temp("bot-dts-export").expect("create DTS export store");
+        bot.export_blocks(&dw, &dts).expect("export");
+        assert_eq!(bot.sweeps_done(), 2);
+        assert_eq!(bot.seed(), 89);
+        drop(bot);
+
+        let plan_dw = partition(&tc.bow, 4, Algorithm::A3 { restarts: 3 }, 89);
+        let plan_dts = partition(&tc.dts, 4, Algorithm::A3 { restarts: 3 }, 90);
+        // A wrong sweep count is refused via the per-block sweep stamps.
+        assert!(ParallelBot::resume_from_store(
+            &tc,
+            &plan_dw,
+            &plan_dts,
+            h,
+            89,
+            ScheduleKind::Diagonal,
+            4,
+            &dw,
+            &dts,
+            1,
+            Residency::InCore,
+        )
+        .is_err());
+        for residency in [Residency::InCore, Residency::Spill { budget_bytes: 0 }] {
+            let mut resumed = ParallelBot::resume_from_store(
+                &tc,
+                &plan_dw,
+                &plan_dts,
+                h,
+                89,
+                ScheduleKind::Diagonal,
+                4,
+                &dw,
+                &dts,
+                2,
+                residency,
+            )
+            .expect("resume from exported stores");
+            assert_eq!(resumed.sweeps_done(), 2);
+            for _ in 0..2 {
+                resumed.sweep(ExecMode::Sequential);
+            }
+            assert_eq!(
+                resumed.counts.doc_topic, oracle.counts.doc_topic,
+                "{residency:?}: resumed run continues the chain bit-identically"
+            );
+            assert_eq!(resumed.counts.word_topic, oracle.counts.word_topic);
+            assert_eq!(resumed.counts.stamp_topic, oracle.counts.stamp_topic);
+            assert_eq!(resumed.counts.topic_words, oracle.counts.topic_words);
+            assert_eq!(resumed.counts.topic_stamps, oracle.counts.topic_stamps);
+        }
+    }
+
+    /// The BoT fault-tolerance acceptance matrix: one injected worker
+    /// panic in each phase (and, when spilling, a transient IO error on
+    /// the DW store plus a torn write-back on the DTS store) per
+    /// training run, across kernels × exec modes × residency — every run
+    /// must complete and match the undisturbed Sequential oracle bit for
+    /// bit, with the retries attributed to the right phase's telemetry.
+    #[cfg(feature = "failpoints")]
+    mod fault_injection {
+        use super::*;
+        use crate::util::fault::{self, install, Fault, FaultKind, ANY};
+
+        #[test]
+        fn faulted_bot_training_matches_oracle_across_kernels_modes_and_residency() {
+            const SEED: u64 = 0xFA17_0021;
+            let spill = Residency::Spill { budget_bytes: 0 };
+            for kernel in KernelKind::all() {
+                let (_tc, mut oracle) = setup(4, SEED);
+                oracle.set_kernel(kernel);
+                for _ in 0..3 {
+                    oracle.sweep(ExecMode::Sequential);
+                }
+                for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                    for residency in [Residency::InCore, spill] {
+                        let (_t, mut bot) =
+                            setup_resident(4, SEED, ScheduleKind::Diagonal, 4, residency);
+                        bot.set_kernel(kernel);
+                        let mut faults = vec![
+                            Fault {
+                                site: "task",
+                                key: [SEED ^ BOT_WORD_SALT, 0, ANY],
+                                kind: FaultKind::Panic,
+                            },
+                            Fault {
+                                site: "task",
+                                key: [SEED ^ BOT_STAMP_SALT, 1, ANY],
+                                kind: FaultKind::Panic,
+                            },
+                        ];
+                        let (dw_dir, dts_dir) = bot.spill_dirs();
+                        if let Some(dir) = dw_dir {
+                            faults.push(Fault {
+                                site: "shard.read",
+                                key: [fault::path_token(dir), ANY, ANY],
+                                kind: FaultKind::IoError,
+                            });
+                        }
+                        if let Some(dir) = dts_dir {
+                            faults.push(Fault {
+                                site: "shard.write_z",
+                                key: [fault::path_token(dir), ANY, ANY],
+                                kind: FaultKind::TornWrite,
+                            });
+                        }
+                        let guard = install(faults);
+                        let mut word_retries = 0u64;
+                        let mut stamp_retries = 0u64;
+                        let mut io_retries = 0u64;
+                        for _ in 0..3 {
+                            let (ws, ss) = bot.sweep(mode);
+                            word_retries += ws.task_retries;
+                            stamp_retries += ss.task_retries;
+                            io_retries += ws.io_retries + ss.io_retries;
+                        }
+                        drop(guard);
+                        let tag = format!("{kernel:?} {mode:?} {residency:?}");
+                        assert_eq!(word_retries, 1, "{tag}: one contained DW-phase panic");
+                        assert_eq!(stamp_retries, 1, "{tag}: one contained DTS-phase panic");
+                        if residency == spill {
+                            assert_eq!(io_retries, 2, "{tag}: torn write + IO error retried");
+                        } else {
+                            assert_eq!(io_retries, 0, "{tag}: in-core performs no IO");
+                        }
+                        assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                        assert_eq!(bot.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                        assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "{tag}");
+                        assert_eq!(bot.counts.topic_words, oracle.counts.topic_words, "{tag}");
+                        assert_eq!(bot.counts.topic_stamps, oracle.counts.topic_stamps, "{tag}");
+                        if residency == Residency::InCore {
+                            assert!(
+                                bot.counts
+                                    .check_consistency(
+                                        &bot.word_blocks_flat(),
+                                        &bot.stamp_blocks_flat()
+                                    )
+                                    .is_ok(),
+                                "{tag}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,11 +1,13 @@
 //! BoT training driver (paper §IV-C + Table IV): serial or parallel with
 //! independent DW/DTS partition plans.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::bot::parallel::ParallelBot;
 use crate::bot::serial::{BotHyper, SerialBot};
 use crate::bot::timeline::{self, TopicTimeline};
+use crate::coordinator::checkpoint::{self, Manifest};
 use crate::coordinator::config::TrainConfig;
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::partition::{self, Algorithm, Plan};
@@ -47,6 +49,13 @@ pub struct BotTrainReport {
     /// sample/barrier/update/perplexity buckets over both phases (empty
     /// for serial runs).
     pub phases: Vec<(String, f64)>,
+    /// Sampling tasks re-executed after a contained worker panic over
+    /// both phases of the whole run (0 in a fault-free run) — see
+    /// `docs/fault_tolerance.md`.
+    pub task_retries: u64,
+    /// Transient spill-IO retries absorbed over the whole run (0 when
+    /// in-core or fault-free).
+    pub io_retries: u64,
     pub timelines: Vec<TopicTimeline>,
 }
 
@@ -68,6 +77,8 @@ impl BotTrainReport {
             .set("measured_eta_dts", self.measured_eta_dts)
             .set("speedup_model", self.speedup_model)
             .set("train_secs", self.train_secs)
+            .set("task_retries", self.task_retries)
+            .set("io_retries", self.io_retries)
             .set("phases", {
                 let mut ph = Json::obj();
                 for (name, secs) in &self.phases {
@@ -87,6 +98,26 @@ pub fn train_bot(
     algo: Algorithm,
     cfg: &TrainConfig,
 ) -> BotTrainReport {
+    train_bot_checkpointed(tc, p, algo, cfg, None, None)
+}
+
+/// [`train_bot`] with checkpoint/resume wired in: when `checkpoint_root`
+/// is set and `cfg.checkpoint_every > 0`, an atomic checkpoint is
+/// committed under the root every N sweeps; when `resume` is set, the
+/// run restarts from that checkpoint (a `ckpt-N` directory or a root to
+/// scan) and finishes bit-identically to the uninterrupted run. See
+/// `docs/fault_tolerance.md`.
+pub fn train_bot_checkpointed(
+    tc: &TimestampedCorpus,
+    p: usize,
+    algo: Algorithm,
+    cfg: &TrainConfig,
+    checkpoint_root: Option<&Path>,
+    resume: Option<&Path>,
+) -> BotTrainReport {
+    if (checkpoint_root.is_some() || resume.is_some()) && p == 1 {
+        panic!("checkpoint/resume requires the partitioned native backend (P > 1)");
+    }
     let h = BotHyper::new(
         cfg.topics,
         cfg.alpha,
@@ -118,6 +149,8 @@ pub fn train_bot(
             speedup_model: 1.0,
             train_secs: started.elapsed().as_secs_f64(),
             phases: Vec::new(),
+            task_retries: 0,
+            io_retries: 0,
             timelines: timeline::timelines(&bot.counts, &h),
         };
     }
@@ -126,17 +159,27 @@ pub fn train_bot(
     let plan_dts = partition::partition(&tc.dts, p, algo, cfg.seed ^ 0xD75);
     let workers = cfg.resolved_workers(p);
 
-    let mut bot = ParallelBot::init_resident(
-        tc,
-        &plan_dw,
-        &plan_dts,
-        h,
-        cfg.seed,
-        cfg.schedule,
-        workers,
-        cfg.residency,
-    )
-    .unwrap_or_else(|e| panic!("out-of-core init failed: {e}"));
+    let (mut bot, start) = match resume {
+        Some(path) => {
+            let (bot, sweeps) = checkpoint::resume_bot(tc, &plan_dw, &plan_dts, h, cfg, path)
+                .unwrap_or_else(|e| panic!("resume failed: {e}"));
+            (bot, sweeps)
+        }
+        None => {
+            let bot = ParallelBot::init_resident(
+                tc,
+                &plan_dw,
+                &plan_dts,
+                h,
+                cfg.seed,
+                cfg.schedule,
+                workers,
+                cfg.residency,
+            )
+            .unwrap_or_else(|e| panic!("out-of-core init failed: {e}"));
+            (bot, 0)
+        }
+    };
     bot.set_kernel(cfg.kernel);
     bot.set_balance(cfg.balance);
     let speedup = {
@@ -148,7 +191,8 @@ pub fn train_bot(
     let mut timer = PhaseTimer::new();
     let (mut dw_serial, mut dw_crit) = (0u64, 0u64);
     let (mut dts_serial, mut dts_crit) = (0u64, 0u64);
-    for _ in 0..cfg.iters {
+    let (mut task_retries, mut io_retries) = (0u64, 0u64);
+    for it in start + 1..=cfg.iters {
         let (ws, ss) = bot.sweep(cfg.mode);
         timer.add(
             "sample",
@@ -174,6 +218,18 @@ pub fn train_bot(
         dw_crit += ws.crit_nanos();
         dts_serial += ss.busy_total_nanos();
         dts_crit += ss.crit_nanos();
+        task_retries += ws.task_retries + ss.task_retries;
+        io_retries += ws.io_retries + ss.io_retries;
+        if cfg.checkpoint_every > 0 && it % cfg.checkpoint_every == 0 {
+            if let Some(root) = checkpoint_root {
+                let ((), dt) = time_once(|| {
+                    let m = Manifest::bot(tc, p, cfg, it);
+                    checkpoint::write_bot(&bot, &m, root)
+                        .unwrap_or_else(|e| panic!("checkpoint failed: {e}"));
+                });
+                timer.add("checkpoint", dt);
+            }
+        }
     }
     let (final_perplexity, dt) = time_once(|| bot.perplexity(tc));
     timer.add("perplexity", dt);
@@ -194,6 +250,8 @@ pub fn train_bot(
         speedup_model: speedup,
         train_secs: started.elapsed().as_secs_f64(),
         phases: timer.phases_secs(),
+        task_retries,
+        io_retries,
         timelines: timeline::timelines(&bot.counts, &h),
     }
 }
@@ -283,6 +341,37 @@ mod tests {
         assert!(s.contains("\"balance\":\"static\""));
         assert!(s.contains("\"residency\":\"in-core\""));
         assert!(s.contains("\"phases\":{"));
+        assert!(s.contains("\"task_retries\":0"));
+        assert!(s.contains("\"io_retries\":0"));
+    }
+
+    #[test]
+    fn checkpointed_bot_run_resumes_bit_identically() {
+        let tc = tiny_tc(96);
+        let algo = Algorithm::A3 { restarts: 2 };
+        let mut cfg = TrainConfig::quick(4, 6);
+        let oracle = train_bot(&tc, 4, algo, &cfg);
+        assert_eq!(oracle.task_retries, 0);
+        assert_eq!(oracle.io_retries, 0);
+
+        // Run 4 of 6 sweeps with checkpoints every 2, as if interrupted.
+        let root = std::env::temp_dir().join(format!("pplda-bot-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        cfg.iters = 4;
+        cfg.checkpoint_every = 2;
+        train_bot_checkpointed(&tc, 4, algo, &cfg, Some(&root), None);
+        assert!(root.join("ckpt-2").is_dir(), "periodic checkpoint at sweep 2");
+        assert!(root.join("ckpt-4").is_dir(), "periodic checkpoint at sweep 4");
+
+        // Resume picks the latest checkpoint and finishes the run.
+        cfg.iters = 6;
+        cfg.checkpoint_every = 0;
+        let resumed = train_bot_checkpointed(&tc, 4, algo, &cfg, None, Some(&root));
+        assert_eq!(
+            resumed.final_perplexity, oracle.final_perplexity,
+            "resumed BoT run is bit-identical to the uninterrupted one"
+        );
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

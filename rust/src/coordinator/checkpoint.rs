@@ -1,0 +1,608 @@
+//! Versioned, atomic training checkpoints for LDA and BoT.
+//!
+//! A checkpoint lives at `<root>/ckpt-<sweeps>/` and contains a text
+//! `MANIFEST` plus one shard directory per phase — `lda/` for LDA, or
+//! `dw/` + `dts/` for BoT — each holding the CRC32-checksummed
+//! `part-*.blk` files of [`crate::corpus::shard::ShardStore`], stamped
+//! with the completed sweep count. The manifest pins everything a
+//! resume must agree on (kind, seed, topics, grid size, corpus shape)
+//! and carries its own CRC32 trailer, so a torn or edited manifest is
+//! refused just like a torn block.
+//!
+//! Commits are atomic: the whole checkpoint is built in a
+//! `.tmp-ckpt-*` sibling directory and renamed into place (a crash
+//! mid-commit leaves the previous checkpoint intact plus a temp dir
+//! the next commit clears — never a torn `ckpt-*`). Resume re-reads
+//! every block through the verified path and rebuilds the count
+//! matrices by re-absorption; task RNG streams are keyed by
+//! `(seed, sweep, partition)`, so a resumed run continues bit-identically
+//! to one that never stopped. See `docs/fault_tolerance.md`.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::bot::parallel::ParallelBot;
+use crate::bot::serial::BotHyper;
+use crate::coordinator::config::TrainConfig;
+use crate::corpus::bow::BagOfWords;
+use crate::corpus::shard::ShardStore;
+use crate::corpus::timestamps::TimestampedCorpus;
+use crate::partition::Plan;
+use crate::scheduler::exec::ParallelLda;
+use crate::util::crc::crc32;
+use crate::util::error::{bail, Context, Result};
+
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST: &str = "MANIFEST";
+
+/// First manifest line; bump the version when the layout changes so old
+/// readers refuse new checkpoints (and vice versa) instead of
+/// misparsing them.
+const MAGIC_LINE: &str = "pplda-checkpoint v1";
+
+/// Which trainer a checkpoint belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptKind {
+    Lda,
+    Bot,
+}
+
+impl CkptKind {
+    fn name(self) -> &'static str {
+        match self {
+            Self::Lda => "lda",
+            Self::Bot => "bot",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lda" => Ok(Self::Lda),
+            "bot" => Ok(Self::Bot),
+            other => bail!("checkpoint manifest: unknown kind {other:?}"),
+        }
+    }
+}
+
+/// Everything a resume must agree on before any block is read. The
+/// corpus shape (docs/words/tokens, plus stamps/DTS tokens for BoT)
+/// guards against resuming onto a different corpus, which the sweep
+/// stamps alone cannot catch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub kind: CkptKind,
+    /// Completed sweeps at checkpoint time — the resume coordinate.
+    pub sweeps: usize,
+    pub seed: u64,
+    pub topics: usize,
+    /// Grid size `P` (shared by both BoT plans).
+    pub p: usize,
+    pub docs: usize,
+    pub words: usize,
+    pub tokens: u64,
+    /// BoT only: distinct timestamp count (0 for LDA).
+    pub stamps: usize,
+    /// BoT only: DTS token count (0 for LDA).
+    pub dts_tokens: u64,
+}
+
+impl Manifest {
+    /// The manifest an LDA run over `(bow, plan, cfg)` writes (and the
+    /// one a resume of that run expects to find).
+    pub fn lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig, sweeps: usize) -> Self {
+        Self {
+            kind: CkptKind::Lda,
+            sweeps,
+            seed: cfg.seed,
+            topics: cfg.topics,
+            p: plan.p,
+            docs: bow.num_docs(),
+            words: bow.num_words(),
+            tokens: bow.num_tokens(),
+            stamps: 0,
+            dts_tokens: 0,
+        }
+    }
+
+    /// The manifest a BoT run over `(tc, p, cfg)` writes.
+    pub fn bot(tc: &TimestampedCorpus, p: usize, cfg: &TrainConfig, sweeps: usize) -> Self {
+        Self {
+            kind: CkptKind::Bot,
+            sweeps,
+            seed: cfg.seed,
+            topics: cfg.topics,
+            p,
+            docs: tc.bow.num_docs(),
+            words: tc.bow.num_words(),
+            tokens: tc.bow.num_tokens(),
+            stamps: tc.num_stamps,
+            dts_tokens: tc.dts.num_tokens(),
+        }
+    }
+
+    /// Serialize: magic line, `key=value` lines, then a `crc=` trailer
+    /// (CRC32 over every preceding byte).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{MAGIC_LINE}");
+        let _ = writeln!(s, "kind={}", self.kind.name());
+        let _ = writeln!(s, "sweeps={}", self.sweeps);
+        let _ = writeln!(s, "seed={}", self.seed);
+        let _ = writeln!(s, "topics={}", self.topics);
+        let _ = writeln!(s, "p={}", self.p);
+        let _ = writeln!(s, "docs={}", self.docs);
+        let _ = writeln!(s, "words={}", self.words);
+        let _ = writeln!(s, "tokens={}", self.tokens);
+        let _ = writeln!(s, "stamps={}", self.stamps);
+        let _ = writeln!(s, "dts_tokens={}", self.dts_tokens);
+        let crc = crc32(s.as_bytes());
+        let _ = writeln!(s, "crc={crc:08X}");
+        s
+    }
+
+    /// Parse and verify a rendered manifest: the CRC trailer and magic
+    /// line are checked before any field is trusted.
+    pub fn parse(text: &str) -> Result<Self> {
+        let Some(pos) = text.rfind("\ncrc=") else {
+            bail!("checkpoint manifest: missing crc trailer");
+        };
+        let (body, trailer) = text.split_at(pos + 1);
+        let stored = trailer
+            .trim_end()
+            .strip_prefix("crc=")
+            .context("checkpoint manifest: malformed crc trailer")?;
+        let stored = u32::from_str_radix(stored, 16)
+            .context("checkpoint manifest: malformed crc trailer")?;
+        let computed = crc32(body.as_bytes());
+        if stored != computed {
+            bail!(
+                "checkpoint manifest corrupt: stored crc {stored:08X} != computed {computed:08X}"
+            );
+        }
+        let mut lines = body.lines();
+        match lines.next() {
+            Some(MAGIC_LINE) => {}
+            other => bail!(
+                "not a {MAGIC_LINE:?} manifest (found {:?})",
+                other.unwrap_or("")
+            ),
+        }
+        let mut map = HashMap::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("checkpoint manifest: malformed line {line:?}"))?;
+            map.insert(k, v);
+        }
+        let field = |k: &str| -> Result<&str> {
+            map.get(k)
+                .copied()
+                .with_context(|| format!("checkpoint manifest: missing {k}"))
+        };
+        let num = |k: &str| -> Result<u64> {
+            field(k)?
+                .parse()
+                .with_context(|| format!("checkpoint manifest: bad {k}"))
+        };
+        Ok(Self {
+            kind: CkptKind::parse(field("kind")?)?,
+            sweeps: num("sweeps")? as usize,
+            seed: num("seed")?,
+            topics: num("topics")? as usize,
+            p: num("p")? as usize,
+            docs: num("docs")? as usize,
+            words: num("words")? as usize,
+            tokens: num("tokens")?,
+            stamps: num("stamps")? as usize,
+            dts_tokens: num("dts_tokens")?,
+        })
+    }
+
+    /// Load and verify the manifest inside checkpoint directory `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(MANIFEST);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read checkpoint manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Refuse a resume whose run parameters disagree with the
+    /// checkpoint's. Every field except `sweeps` (the resume coordinate
+    /// itself) must match.
+    pub fn validate(&self, expected: &Self) -> Result<()> {
+        fn check<T: PartialEq + std::fmt::Display>(
+            name: &str,
+            stored: T,
+            expected: T,
+        ) -> Result<()> {
+            if stored != expected {
+                bail!("checkpoint {name} {stored} does not match the run's {name} {expected}");
+            }
+            Ok(())
+        }
+        check("kind", self.kind.name(), expected.kind.name())?;
+        check("seed", self.seed, expected.seed)?;
+        check("topics", self.topics, expected.topics)?;
+        check("p", self.p, expected.p)?;
+        check("docs", self.docs, expected.docs)?;
+        check("words", self.words, expected.words)?;
+        check("tokens", self.tokens, expected.tokens)?;
+        check("stamps", self.stamps, expected.stamps)?;
+        check("dts_tokens", self.dts_tokens, expected.dts_tokens)?;
+        Ok(())
+    }
+}
+
+/// The directory a checkpoint at `sweeps` completed sweeps commits to.
+pub fn dir_for(root: &Path, sweeps: usize) -> PathBuf {
+    root.join(format!("ckpt-{sweeps}"))
+}
+
+/// The highest-sweep committed checkpoint under `root`, if any.
+/// Directories without a manifest (including `.tmp-ckpt-*` leftovers a
+/// crash abandoned) are ignored.
+pub fn latest(root: &Path) -> Option<PathBuf> {
+    let entries = std::fs::read_dir(root).ok()?;
+    let mut best: Option<(usize, PathBuf)> = None;
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(n) = name.strip_prefix("ckpt-").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let path = e.path();
+        if !path.join(MANIFEST).is_file() {
+            continue;
+        }
+        let better = match &best {
+            Some((b, _)) => n > *b,
+            None => true,
+        };
+        if better {
+            best = Some((n, path));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Resolve a user-supplied resume path: a checkpoint directory itself
+/// (contains a manifest), or a checkpoint *root*, in which case the
+/// latest committed checkpoint under it is picked.
+pub fn resolve(path: &Path) -> Result<PathBuf> {
+    if path.join(MANIFEST).is_file() {
+        return Ok(path.to_path_buf());
+    }
+    latest(path).with_context(|| format!("no checkpoint found under {}", path.display()))
+}
+
+/// Removes the in-progress temp directory on every error path, so a
+/// failed commit never leaves a half-built checkpoint for `latest` (or
+/// a human) to trip over.
+struct TmpDir {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+/// Build a checkpoint in a temp sibling via `build`, then rename it
+/// into `ckpt-<sweeps>` — the one atomic-commit implementation both
+/// trainers share.
+fn commit(root: &Path, sweeps: usize, build: impl FnOnce(&Path) -> Result<()>) -> Result<PathBuf> {
+    std::fs::create_dir_all(root)
+        .with_context(|| format!("create checkpoint root {}", root.display()))?;
+    let tmp = root.join(format!(".tmp-ckpt-{sweeps}"));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp).context("clear stale checkpoint temp dir")?;
+    }
+    std::fs::create_dir_all(&tmp)?;
+    let mut guard = TmpDir { path: tmp.clone(), armed: true };
+    build(&tmp)?;
+    let dst = dir_for(root, sweeps);
+    if dst.exists() {
+        // Re-checkpointing the same sweep (e.g. a rerun) replaces it.
+        std::fs::remove_dir_all(&dst).context("replace existing checkpoint")?;
+    }
+    std::fs::rename(&tmp, &dst)
+        .with_context(|| format!("commit checkpoint {}", dst.display()))?;
+    guard.armed = false;
+    Ok(dst)
+}
+
+/// Commit an LDA checkpoint of `lda`'s current state under `root`.
+/// `manifest.sweeps` must equal the trainer's completed sweep count
+/// (checkpoints are taken between sweeps, where the at-rest block
+/// stamps equal it). Returns the committed directory.
+pub fn write_lda(lda: &ParallelLda, manifest: &Manifest, root: &Path) -> Result<PathBuf> {
+    assert_eq!(manifest.kind, CkptKind::Lda);
+    assert_eq!(manifest.sweeps, lda.sweeps_done(), "checkpoint between sweeps only");
+    commit(root, manifest.sweeps, |tmp| {
+        let mut store = ShardStore::create(tmp.join("lda"))?;
+        lda.export_blocks(&store)?;
+        store.keep();
+        std::fs::write(tmp.join(MANIFEST), manifest.render())
+            .context("write checkpoint manifest")?;
+        Ok(())
+    })
+}
+
+/// Commit a BoT checkpoint (both phases) under `root` — the BoT
+/// counterpart of [`write_lda`], with `dw/` and `dts/` shard dirs.
+pub fn write_bot(bot: &ParallelBot, manifest: &Manifest, root: &Path) -> Result<PathBuf> {
+    assert_eq!(manifest.kind, CkptKind::Bot);
+    assert_eq!(manifest.sweeps, bot.sweeps_done(), "checkpoint between sweeps only");
+    commit(root, manifest.sweeps, |tmp| {
+        let mut dw = ShardStore::create(tmp.join("dw"))?;
+        let mut dts = ShardStore::create(tmp.join("dts"))?;
+        bot.export_blocks(&dw, &dts)?;
+        dw.keep();
+        dts.keep();
+        std::fs::write(tmp.join(MANIFEST), manifest.render())
+            .context("write checkpoint manifest")?;
+        Ok(())
+    })
+}
+
+/// Resume an LDA trainer from `path` (a checkpoint directory or a
+/// checkpoint root — see [`resolve`]): verify the manifest against the
+/// run's parameters, verified-read every block, and return the rebuilt
+/// trainer plus its completed sweep count.
+pub fn resume_lda(
+    bow: &BagOfWords,
+    plan: &Plan,
+    cfg: &TrainConfig,
+    path: &Path,
+) -> Result<(ParallelLda, usize)> {
+    let dir = resolve(path)?;
+    let m = Manifest::load(&dir)?;
+    m.validate(&Manifest::lda(bow, plan, cfg, m.sweeps))?;
+    let store = ShardStore::open(dir.join("lda"))?;
+    let lda = ParallelLda::resume_from_store(
+        bow,
+        plan,
+        cfg.topics,
+        cfg.alpha,
+        cfg.beta,
+        cfg.seed,
+        cfg.schedule,
+        cfg.resolved_workers(plan.p),
+        &store,
+        m.sweeps,
+        cfg.residency,
+    )?;
+    Ok((lda, m.sweeps))
+}
+
+/// Resume a BoT trainer from `path` — the BoT counterpart of
+/// [`resume_lda`] (the caller rebuilds the DW/DTS plans, which are
+/// deterministic in the corpus and seed).
+pub fn resume_bot(
+    tc: &TimestampedCorpus,
+    plan_dw: &Plan,
+    plan_dts: &Plan,
+    h: BotHyper,
+    cfg: &TrainConfig,
+    path: &Path,
+) -> Result<(ParallelBot, usize)> {
+    let dir = resolve(path)?;
+    let m = Manifest::load(&dir)?;
+    m.validate(&Manifest::bot(tc, plan_dw.p, cfg, m.sweeps))?;
+    let dw = ShardStore::open(dir.join("dw"))?;
+    let dts = ShardStore::open(dir.join("dts"))?;
+    let bot = ParallelBot::resume_from_store(
+        tc,
+        plan_dw,
+        plan_dts,
+        h,
+        cfg.seed,
+        cfg.schedule,
+        cfg.resolved_workers(plan_dw.p),
+        &dw,
+        &dts,
+        m.sweeps,
+        cfg.residency,
+    )?;
+    Ok((bot, m.sweeps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, Profile};
+    use crate::partition::{partition, Algorithm};
+    use crate::scheduler::exec::ExecMode;
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            kind: CkptKind::Bot,
+            sweeps: 12,
+            seed: 42,
+            topics: 8,
+            p: 4,
+            docs: 120,
+            words: 300,
+            tokens: 4567,
+            stamps: 10,
+            dts_tokens: 480,
+        }
+    }
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pplda-ckpt-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let m = sample_manifest();
+        assert_eq!(Manifest::parse(&m.render()).unwrap(), m);
+        let lda = Manifest {
+            kind: CkptKind::Lda,
+            stamps: 0,
+            dts_tokens: 0,
+            ..m
+        };
+        assert_eq!(Manifest::parse(&lda.render()).unwrap(), lda);
+    }
+
+    #[test]
+    fn tampered_manifests_are_refused() {
+        let good = sample_manifest().render();
+        // Any edited field breaks the crc trailer.
+        let tampered = good.replace("sweeps=12", "sweeps=13");
+        let e = Manifest::parse(&tampered).unwrap_err().to_string();
+        assert!(e.contains("corrupt"), "{e}");
+        // Wrong magic/version is refused even with a valid crc shape.
+        let other = good.replace("pplda-checkpoint v1", "pplda-checkpoint v9");
+        let e = Manifest::parse(&other).unwrap_err().to_string();
+        assert!(e.contains("corrupt") || e.contains("manifest"), "{e}");
+        // Truncation loses the trailer.
+        let e = Manifest::parse(&good[..good.len() / 2]).unwrap_err().to_string();
+        assert!(e.contains("crc"), "{e}");
+    }
+
+    #[test]
+    fn validate_refuses_mismatched_runs() {
+        let m = sample_manifest();
+        assert!(m.validate(&m).is_ok());
+        let mut sweeps_only = m.clone();
+        sweeps_only.sweeps = 99;
+        assert!(m.validate(&sweeps_only).is_ok(), "sweeps is the resume coordinate, not pinned");
+        let mut wrong = m.clone();
+        wrong.topics = 16;
+        let e = m.validate(&wrong).unwrap_err().to_string();
+        assert!(e.contains("topics"), "{e}");
+        let mut wrong = m.clone();
+        wrong.kind = CkptKind::Lda;
+        let e = m.validate(&wrong).unwrap_err().to_string();
+        assert!(e.contains("kind"), "{e}");
+        let mut wrong = m;
+        wrong.seed = 7;
+        let e = wrong.validate(&sample_manifest()).unwrap_err().to_string();
+        assert!(e.contains("seed"), "{e}");
+    }
+
+    #[test]
+    fn latest_scans_committed_checkpoints_only() {
+        let root = temp_root("latest");
+        assert!(latest(&root).is_none(), "missing root has no checkpoints");
+        for sweeps in [2usize, 10, 4] {
+            let dir = dir_for(&root, sweeps);
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join(MANIFEST), sample_manifest().render()).unwrap();
+        }
+        // Abandoned temp dirs and junk are ignored.
+        std::fs::create_dir_all(root.join(".tmp-ckpt-99")).unwrap();
+        std::fs::create_dir_all(root.join("ckpt-77")).unwrap(); // no manifest
+        std::fs::create_dir_all(root.join("notes")).unwrap();
+        assert_eq!(latest(&root).unwrap(), dir_for(&root, 10));
+        assert_eq!(resolve(&root).unwrap(), dir_for(&root, 10));
+        // A checkpoint dir resolves to itself.
+        assert_eq!(resolve(&dir_for(&root, 2)).unwrap(), dir_for(&root, 2));
+        let empty = root.join("notes");
+        let e = resolve(&empty).unwrap_err().to_string();
+        assert!(e.contains("no checkpoint"), "{e}");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn lda_checkpoint_write_resume_roundtrip() {
+        let root = temp_root("lda-rt");
+        let bow = generate(&Profile::tiny(), 125);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 125);
+        let mut cfg = TrainConfig::quick(8, 4);
+        cfg.seed = 125;
+        let mut oracle = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 125);
+        for _ in 0..4 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 125);
+        for _ in 0..2 {
+            lda.sweep(ExecMode::Sequential);
+        }
+        let dir = write_lda(&lda, &Manifest::lda(&bow, &plan, &cfg, 2), &root).unwrap();
+        assert_eq!(dir, dir_for(&root, 2));
+        assert!(root.join(".tmp-ckpt-2").metadata().is_err(), "temp dir committed away");
+        drop(lda);
+
+        // Wrong run parameters are refused up front.
+        let mut wrong = cfg;
+        wrong.topics = 16;
+        let e = resume_lda(&bow, &plan, &wrong, &root).unwrap_err().to_string();
+        assert!(e.contains("topics"), "{e}");
+
+        let (mut resumed, sweeps) = resume_lda(&bow, &plan, &cfg, &root).unwrap();
+        assert_eq!(sweeps, 2);
+        for _ in 0..2 {
+            resumed.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(resumed.counts.doc_topic, oracle.counts.doc_topic);
+        assert_eq!(resumed.counts.word_topic, oracle.counts.word_topic);
+        assert_eq!(resumed.counts.topic, oracle.counts.topic);
+        // The checkpoint survives the resume (re-resumable).
+        assert!(dir_for(&root, 2).join(MANIFEST).is_file());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn failed_commit_leaves_no_temp_dir() {
+        let root = temp_root("fail");
+        let e = commit(&root, 5, |_tmp| bail!("boom")).unwrap_err().to_string();
+        assert_eq!(e, "boom");
+        assert!(root.join(".tmp-ckpt-5").metadata().is_err(), "temp dir cleaned up");
+        assert!(latest(&root).is_none());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn bot_checkpoint_write_resume_roundtrip() {
+        use crate::corpus::synthetic::{generate_timestamped, TimeProfile};
+        let root = temp_root("bot-rt");
+        let mut prof = Profile::tiny();
+        prof.time = Some(TimeProfile {
+            first_year: 2000,
+            last_year: 2009,
+            growth: 0.1,
+            stamps_per_doc: 4,
+        });
+        let tc = generate_timestamped(&prof, 126);
+        let plan_dw = partition(&tc.bow, 4, Algorithm::A3 { restarts: 2 }, 126);
+        let plan_dts = partition(&tc.dts, 4, Algorithm::A3 { restarts: 2 }, 127);
+        let h = BotHyper::new(8, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+        let mut cfg = TrainConfig::quick(8, 4);
+        cfg.seed = 126;
+        let mut oracle = ParallelBot::init(&tc, &plan_dw, &plan_dts, h, 126);
+        for _ in 0..4 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let mut bot = ParallelBot::init(&tc, &plan_dw, &plan_dts, h, 126);
+        for _ in 0..2 {
+            bot.sweep(ExecMode::Sequential);
+        }
+        write_bot(&bot, &Manifest::bot(&tc, 4, &cfg, 2), &root).unwrap();
+        drop(bot);
+
+        let (mut resumed, sweeps) = resume_bot(&tc, &plan_dw, &plan_dts, h, &cfg, &root).unwrap();
+        assert_eq!(sweeps, 2);
+        for _ in 0..2 {
+            resumed.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(resumed.counts.doc_topic, oracle.counts.doc_topic);
+        assert_eq!(resumed.counts.word_topic, oracle.counts.word_topic);
+        assert_eq!(resumed.counts.stamp_topic, oracle.counts.stamp_topic);
+        assert_eq!(resumed.counts.topic_words, oracle.counts.topic_words);
+        assert_eq!(resumed.counts.topic_stamps, oracle.counts.topic_stamps);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -58,6 +58,11 @@ pub struct TrainConfig {
     /// Result-invariant; the serial reference and the XLA backend are
     /// always in-core.
     pub residency: Residency,
+    /// Commit an atomic on-disk checkpoint every this many sweeps
+    /// (0 = never). Only meaningful when the driver is given a
+    /// checkpoint root; see `crate::coordinator::checkpoint` and
+    /// `docs/fault_tolerance.md`.
+    pub checkpoint_every: usize,
     pub backend: Backend,
 }
 
@@ -77,6 +82,7 @@ impl Default for TrainConfig {
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
             residency: Residency::InCore,
+            checkpoint_every: 0,
             backend: Backend::Native,
         }
     }
@@ -134,6 +140,7 @@ mod tests {
         assert_eq!(c.kernel, KernelKind::Dense);
         assert_eq!(c.balance, BalanceMode::Static);
         assert_eq!(c.residency, Residency::InCore);
+        assert_eq!(c.checkpoint_every, 0);
     }
 
     #[test]

@@ -6,11 +6,12 @@
 //! ([`crate::runtime`]) together and emits structured reports.
 
 pub mod bot_trainer;
+pub mod checkpoint;
 pub mod config;
 pub mod report;
 pub mod trainer;
 
-pub use bot_trainer::{train_bot, BotTrainReport};
+pub use bot_trainer::{train_bot, train_bot_checkpointed, BotTrainReport};
 pub use config::{Backend, TrainConfig};
 pub use report::TrainReport;
-pub use trainer::train_lda;
+pub use trainer::{train_lda, train_lda_checkpointed};

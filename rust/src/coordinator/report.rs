@@ -48,6 +48,13 @@ pub struct TrainReport {
     /// sample/barrier/update/perplexity buckets from the trainer's
     /// `PhaseTimer` (empty for serial/XLA runs).
     pub phases: Vec<(String, f64)>,
+    /// Sampling tasks re-executed after a contained worker panic over
+    /// the whole run (0 in a fault-free run) — see
+    /// `docs/fault_tolerance.md`.
+    pub task_retries: u64,
+    /// Transient spill-IO retries absorbed over the whole run (0 when
+    /// in-core or fault-free).
+    pub io_retries: u64,
 }
 
 impl TrainReport {
@@ -70,6 +77,8 @@ impl TrainReport {
             .set("speedup_model", self.speedup_model)
             .set("train_secs", self.train_secs)
             .set("tokens_per_sec", self.tokens_per_sec)
+            .set("task_retries", self.task_retries)
+            .set("io_retries", self.io_retries)
             .set("phases", {
                 let mut ph = Json::obj();
                 for (name, secs) in &self.phases {
@@ -141,6 +150,8 @@ mod tests {
             train_secs: 1.25,
             tokens_per_sec: 1e7,
             phases: vec![("sample".into(), 1.0), ("barrier".into(), 0.25)],
+            task_retries: 1,
+            io_retries: 2,
         }
     }
 
@@ -159,6 +170,8 @@ mod tests {
         assert!(s.contains("\"phases\":{"));
         assert!(s.contains("\"sample\":1"));
         assert!(s.contains("\"curve\":[{"));
+        assert!(s.contains("\"task_retries\":1"));
+        assert!(s.contains("\"io_retries\":2"));
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! LDA training driver: serial (`P == 1`) or partitioned-parallel, with
 //! native or XLA backends.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::checkpoint::{self, Manifest};
 use crate::coordinator::config::{Backend, TrainConfig};
 use crate::coordinator::report::TrainReport;
 use crate::corpus::bow::BagOfWords;
@@ -26,6 +28,30 @@ use crate::util::timer::{time_once, PhaseTimer};
 /// runs the batched serial-semantics sweep (it demonstrates the L3↔L1
 /// bridge; partition-parallel execution uses the native kernel).
 pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainReport {
+    train_lda_checkpointed(bow, plan, cfg, None, None)
+}
+
+/// As [`train_lda`], with first-class checkpoint/resume: when
+/// `checkpoint_root` is set and `cfg.checkpoint_every > 0`, an atomic
+/// on-disk checkpoint is committed under the root every
+/// `checkpoint_every` sweeps; when `resume` is set, training restarts
+/// from that checkpoint (a `ckpt-*` directory or a root, in which case
+/// the latest checkpoint wins) and continues bit-identically to a run
+/// that never stopped. Checkpointing requires the partitioned native
+/// backend (`plan.p > 1`); see `crate::coordinator::checkpoint` and
+/// `docs/fault_tolerance.md`.
+pub fn train_lda_checkpointed(
+    bow: &BagOfWords,
+    plan: &Plan,
+    cfg: &TrainConfig,
+    checkpoint_root: Option<&Path>,
+    resume: Option<&Path>,
+) -> TrainReport {
+    if (checkpoint_root.is_some() || resume.is_some())
+        && (plan.p == 1 || cfg.backend == Backend::Xla)
+    {
+        panic!("checkpoint/resume requires the partitioned native backend (P > 1)");
+    }
     let started = Instant::now();
     // Serial-equivalent defaults, overwritten by the parallel arm.
     let mut workers = 1;
@@ -39,6 +65,11 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
     let mut balance = "static".to_string();
     let mut residency = "in-core".to_string();
     let mut timer = PhaseTimer::new();
+    // Fault-tolerance telemetry (parallel native arm only).
+    let (mut task_retries, mut io_retries) = (0u64, 0u64);
+    // Sweeps actually executed this process (differs from `cfg.iters`
+    // only when resuming) — the throughput denominator.
+    let mut executed_sweeps = cfg.iters;
     let (curve, final_perplexity) = match (cfg.backend, plan.p) {
         (Backend::Native, 1) => {
             let mut lda = SerialLda::init(bow, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
@@ -51,18 +82,29 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         }
         (Backend::Native, _) => {
             let w = cfg.resolved_workers(plan.p);
-            let mut lda = ParallelLda::init_resident(
-                bow,
-                plan,
-                cfg.topics,
-                cfg.alpha,
-                cfg.beta,
-                cfg.seed,
-                cfg.schedule,
-                w,
-                cfg.residency,
-            )
-            .unwrap_or_else(|e| panic!("out-of-core init failed: {e}"));
+            let (mut lda, start) = match resume {
+                Some(path) => {
+                    let (lda, sweeps) = checkpoint::resume_lda(bow, plan, cfg, path)
+                        .unwrap_or_else(|e| panic!("resume failed: {e}"));
+                    (lda, sweeps)
+                }
+                None => {
+                    let lda = ParallelLda::init_resident(
+                        bow,
+                        plan,
+                        cfg.topics,
+                        cfg.alpha,
+                        cfg.beta,
+                        cfg.seed,
+                        cfg.schedule,
+                        w,
+                        cfg.residency,
+                    )
+                    .unwrap_or_else(|e| panic!("out-of-core init failed: {e}"));
+                    (lda, 0)
+                }
+            };
+            executed_sweeps = cfg.iters.saturating_sub(start);
             lda.set_kernel(cfg.kernel);
             lda.set_balance(cfg.balance);
             workers = w;
@@ -76,7 +118,7 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
             // accumulate the measured-η telemetry per sweep.
             let mut curve = Vec::new();
             let (mut serial_nanos, mut crit_nanos) = (0u64, 0u64);
-            for it in 1..=cfg.iters {
+            for it in start + 1..=cfg.iters {
                 let stats = lda.sweep(cfg.mode);
                 timer.add("sample", Duration::from_secs_f64(stats.sample_secs));
                 timer.add("barrier", Duration::from_secs_f64(stats.barrier_secs));
@@ -89,10 +131,22 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
                 }
                 serial_nanos += stats.busy_total_nanos();
                 crit_nanos += stats.crit_nanos();
+                task_retries += stats.task_retries;
+                io_retries += stats.io_retries;
                 if cfg.eval_every > 0 && (it % cfg.eval_every == 0 || it == cfg.iters) {
                     let (pp, dt) = time_once(|| lda.perplexity(bow));
                     timer.add("perplexity", dt);
                     curve.push((it, pp));
+                }
+                if cfg.checkpoint_every > 0 && it % cfg.checkpoint_every == 0 {
+                    if let Some(root) = checkpoint_root {
+                        let ((), dt) = time_once(|| {
+                            let m = Manifest::lda(bow, plan, cfg, it);
+                            checkpoint::write_lda(&lda, &m, root)
+                                .unwrap_or_else(|e| panic!("checkpoint failed: {e}"));
+                        });
+                        timer.add("checkpoint", dt);
+                    }
                 }
             }
             measured_eta = MeasuredReport::of_nanos(w, serial_nanos, crit_nanos).eta;
@@ -115,7 +169,7 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         (Backend::Xla, _) => train_xla(bow, cfg),
     };
     let train_secs = started.elapsed().as_secs_f64();
-    let sampled_tokens = bow.num_tokens() as f64 * cfg.iters as f64;
+    let sampled_tokens = bow.num_tokens() as f64 * executed_sweeps as f64;
 
     TrainReport {
         algorithm: plan.algorithm.to_string(),
@@ -140,6 +194,8 @@ pub fn train_lda(bow: &BagOfWords, plan: &Plan, cfg: &TrainConfig) -> TrainRepor
         train_secs,
         tokens_per_sec: sampled_tokens / train_secs.max(1e-12),
         phases: timer.phases_secs(),
+        task_retries,
+        io_retries,
     }
 }
 
@@ -330,6 +386,38 @@ mod tests {
         assert!(rs.phases.is_empty());
         assert_eq!(rs.measured_eta, 1.0);
         assert_eq!(rs.balance, "static");
+    }
+
+    #[test]
+    fn checkpointed_driver_run_resumes_bit_identically() {
+        let bow = generate(&Profile::tiny(), 89);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 89);
+        let mut cfg = TrainConfig::quick(8, 6);
+        cfg.eval_every = 3;
+        let oracle = train_lda(&bow, &plan, &cfg);
+        assert_eq!(oracle.task_retries, 0);
+        assert_eq!(oracle.io_retries, 0);
+
+        // Run 4 of 6 sweeps with checkpoints every 2, as if interrupted.
+        let root =
+            std::env::temp_dir().join(format!("pplda-trainer-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        cfg.iters = 4;
+        cfg.checkpoint_every = 2;
+        train_lda_checkpointed(&bow, &plan, &cfg, Some(&root), None);
+        assert!(root.join("ckpt-2").is_dir(), "periodic checkpoint at sweep 2");
+        assert!(root.join("ckpt-4").is_dir(), "periodic checkpoint at sweep 4");
+
+        // Resume picks the latest checkpoint and finishes the run.
+        cfg.iters = 6;
+        cfg.checkpoint_every = 0;
+        let resumed = train_lda_checkpointed(&bow, &plan, &cfg, None, Some(&root));
+        assert_eq!(
+            resumed.final_perplexity, oracle.final_perplexity,
+            "resumed run is bit-identical to the uninterrupted one"
+        );
+        assert_eq!(resumed.curve.last(), oracle.curve.last());
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

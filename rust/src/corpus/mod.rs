@@ -18,5 +18,5 @@ pub mod timestamps;
 pub mod uci;
 
 pub use bow::{BagOfWords, Entry};
-pub use shard::{Residency, ShardStore};
+pub use shard::{BlockError, Residency, ShardStore};
 pub use timestamps::TimestampedCorpus;

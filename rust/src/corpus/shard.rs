@@ -11,10 +11,11 @@
 //!   resident token bytes to a budget, keeping roughly two diagonals
 //!   resident (the one being sampled plus the prefetched next one).
 //! * [`ShardStore`] — a run directory holding one file per partition
-//!   (`part-<id>.blk`): magic + token count + sweep-stamp header, then
-//!   the SoA `docs`/`words`/`z` arrays as little-endian `u32`s. Only `z`
-//!   mutates during training, so write-back rewrites the `z` section in
-//!   place (then commits the new sweep stamp).
+//!   (`part-<id>.blk`): a checksummed header (magic + token count +
+//!   sweep stamp + per-section CRC32s), then the SoA `docs`/`words`/`z`
+//!   arrays as little-endian `u32`s. Only `z` mutates during training,
+//!   so write-back rewrites the `z` section in place, then commits the
+//!   re-checksummed header (stamp last).
 //! * [`Prefetcher`] — a long-lived IO thread that loads the next
 //!   diagonal's blocks while the executor samples the current one; the
 //!   epoch barrier already sequences everything else, so the overlap
@@ -40,16 +41,28 @@
 //! `ParallelLda::resume_spilled`), and each block carries the sweep
 //! count it was written after, so resuming from a store a crash left
 //! mid-sweep (mixed stamps) is rejected instead of silently training
-//! from a state no uninterrupted run produces. The guarantee is scoped
-//! to *process* kills: a kill inside one block's `z` rewrite (before
-//! its stamp commits) is undetectable, and across a power loss the
-//! page cache may write the stamp back before the data — closing those
-//! windows would need per-block checksums or fsync'd
-//! write-to-temp + rename, costs deliberately not paid on the
-//! per-epoch hot path.
+//! from a state no uninterrupted run produces.
+//!
+//! # Integrity
+//!
+//! Every read is verified and every failure is typed ([`BlockError`]):
+//! the header carries a CRC32 per section (`docs`/`words`/`z`) plus a
+//! CRC32 over the header itself, full-block writes go through
+//! write-temp-then-rename (a crash mid-write can never tear a
+//! *committed* block — the rename is atomic and a [`TempGuard`] removes
+//! the partial temp file on every error path), and the in-place `z`
+//! write-back commits the re-checksummed header only after the data, so
+//! a kill inside the rewrite leaves a stale stamp or a checksum
+//! mismatch a resume rejects instead of a silently-torn block.
+//! Transient IO errors are retried with bounded backoff
+//! (`io_retries()` counts them) before surfacing; corruption is never
+//! retried. Fault injection for all of this lives behind the
+//! `failpoints` cargo feature (`util::fault`).
 //!
 //! See `docs/out_of_core.md` for the residency modes, the
-//! prefetch/barrier overlap, and the write-back protocol.
+//! prefetch/barrier overlap, and the write-back protocol, and
+//! `docs/fault_tolerance.md` for the integrity format and retry
+//! policy.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -59,7 +72,9 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::gibbs::tokens::TokenBlock;
+use crate::util::crc::crc32;
 use crate::util::error::{bail, Context, Error, Result};
+use crate::util::fault::{self, FaultKind};
 
 /// Where token blocks live during training.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,12 +137,194 @@ pub fn parse_bytes(s: &str) -> Option<u64> {
 /// the on-disk format.
 pub const BYTES_PER_TOKEN: u64 = 12;
 
-const MAGIC: &[u8; 8] = b"PPSHARD2";
-/// Header layout: magic (8) | token count `n` (u64 LE) | sweep stamp
-/// (u64 LE) — the number of completed sweeps the block's `z` state
-/// corresponds to.
-const HEADER: u64 = 24;
-const STAMP_OFFSET: u64 = 16;
+const MAGIC: &[u8; 8] = b"PPSHARD3";
+/// Header layout (40 bytes): magic (8) | token count `n` (u64 LE) |
+/// sweep stamp (u64 LE, the number of completed sweeps the block's `z`
+/// state corresponds to) | CRC32 of the `docs` section (u32 LE) | CRC32
+/// of `words` | CRC32 of `z` | CRC32 of header bytes `0..36`. The
+/// trailing header CRC makes a torn header self-evident; the section
+/// CRCs make a torn or bit-rotted payload self-evident.
+const HEADER: u64 = 40;
+const STAMP_OFFSET: usize = 16;
+const CRC_DOCS_OFFSET: usize = 24;
+const CRC_WORDS_OFFSET: usize = 28;
+const CRC_Z_OFFSET: usize = 32;
+const HEADER_CRC_OFFSET: usize = 36;
+
+/// Transient-IO retry budget: attempts per store operation.
+const MAX_IO_ATTEMPTS: u32 = 3;
+
+/// Typed failure from the shard-store block IO paths. Only
+/// [`BlockError::Io`] is considered transient by the retry layer;
+/// every corruption variant is terminal and surfaces immediately.
+#[derive(Debug)]
+pub enum BlockError {
+    /// The operating system failed the read/write/rename itself.
+    Io {
+        path: PathBuf,
+        op: &'static str,
+        source: std::io::Error,
+    },
+    /// The file is shorter than its header or its declared payload.
+    Truncated { path: PathBuf, len: u64, expected: u64 },
+    /// The leading bytes are not a `PPSHARD` header at all.
+    BadMagic { path: PathBuf, found: [u8; 8] },
+    /// A `PPSHARD` header from a different format version.
+    BadVersion { path: PathBuf, found: u8 },
+    /// A checksum did not verify: the named section's bytes disagree
+    /// with the CRC32 the header recorded for them.
+    Corrupt {
+        path: PathBuf,
+        section: &'static str,
+        stored: u32,
+        computed: u32,
+    },
+    /// The block's sweep stamp disagrees with the resume's expectation.
+    StampMismatch {
+        path: PathBuf,
+        id: u64,
+        stamp: u64,
+        expected: u64,
+    },
+}
+
+impl std::fmt::Display for BlockError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io { path, op, source } => {
+                write!(f, "shard {}: {op}: {source}", path.display())
+            }
+            Self::Truncated { path, len, expected } => write!(
+                f,
+                "shard {}: truncated at {len} bytes (expected {expected})",
+                path.display()
+            ),
+            Self::BadMagic { path, found } => write!(
+                f,
+                "shard {}: bad header (magic {:?}, expected {:?})",
+                path.display(),
+                String::from_utf8_lossy(found),
+                String::from_utf8_lossy(MAGIC),
+            ),
+            Self::BadVersion { path, found } => write!(
+                f,
+                "shard {}: bad header (format version {:?}, this build reads {:?})",
+                path.display(),
+                *found as char,
+                MAGIC[7] as char,
+            ),
+            Self::Corrupt { path, section, stored, computed } => write!(
+                f,
+                "shard {}: corrupt {section} section (checksum stored {stored:#010x}, \
+                 computed {computed:#010x})",
+                path.display()
+            ),
+            Self::StampMismatch { path, id, stamp, expected } => write!(
+                f,
+                "partition {id}: sweep stamp {stamp} != expected {expected} \
+                 (store was left mid-sweep or belongs to a different run: {})",
+                path.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BlockError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Transient errors worth retrying: OS-level IO failures other than
+/// `NotFound` (a missing block will not appear on retry).
+fn retryable(e: &BlockError) -> bool {
+    matches!(
+        e,
+        BlockError::Io { source, .. } if source.kind() != std::io::ErrorKind::NotFound
+    )
+}
+
+fn io_err(path: &Path, op: &'static str, source: std::io::Error) -> BlockError {
+    BlockError::Io { path: path.to_path_buf(), op, source }
+}
+
+/// The error an injected `IoError`/`TornWrite` fault surfaces as —
+/// kind `Other`, so the retry layer treats it as transient.
+fn injected_io(path: &Path, op: &'static str) -> BlockError {
+    io_err(path, op, std::io::Error::other("injected fault"))
+}
+
+/// Validate the 8-byte magic, distinguishing "not a shard file at all"
+/// from "a shard file of a different format version".
+fn check_magic(bytes: &[u8], path: &Path) -> Result<(), BlockError> {
+    if bytes.len() < 8 {
+        return Err(BlockError::Truncated {
+            path: path.to_path_buf(),
+            len: bytes.len() as u64,
+            expected: HEADER,
+        });
+    }
+    if &bytes[..8] == MAGIC {
+        return Ok(());
+    }
+    if bytes[..7] == MAGIC[..7] {
+        return Err(BlockError::BadVersion { path: path.to_path_buf(), found: bytes[7] });
+    }
+    let mut found = [0u8; 8];
+    found.copy_from_slice(&bytes[..8]);
+    Err(BlockError::BadMagic { path: path.to_path_buf(), found })
+}
+
+/// Read a little-endian `u64` out of a length-validated header.
+fn le_u64_in(header: &[u8; HEADER as usize], offset: usize) -> u64 {
+    let mut le = [0u8; 8];
+    le.copy_from_slice(&header[offset..offset + 8]);
+    u64::from_le_bytes(le)
+}
+
+/// Read a little-endian `u32` out of a length-validated header.
+fn le_u32_in(header: &[u8; HEADER as usize], offset: usize) -> u32 {
+    let mut le = [0u8; 4];
+    le.copy_from_slice(&header[offset..offset + 4]);
+    u32::from_le_bytes(le)
+}
+
+fn u32s_to_le(arr: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * arr.len());
+    for &x in arr {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Removes a temp spill file on drop unless disarmed — every error path
+/// out of [`ShardStore::write_block`] cleans up its partial write.
+struct TempGuard {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl TempGuard {
+    fn new(path: PathBuf) -> Self {
+        Self { path, armed: true }
+    }
+
+    /// The temp file was renamed into place; nothing to clean up.
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for TempGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
 
 /// A run directory of per-partition spill files.
 ///
@@ -141,16 +338,31 @@ const STAMP_OFFSET: u64 = 16;
 pub struct ShardStore {
     dir: PathBuf,
     keep: bool,
+    /// Transient-IO retries this store has absorbed (telemetry).
+    io_retries: AtomicU64,
+    /// Fault-injection key for this store (see `util::fault`): probes
+    /// fire with `[token, partition_id, 0]`, so a fault aimed at one
+    /// store can never be consumed by another that reuses an id.
+    token: u64,
 }
 
 impl ShardStore {
+    fn from_dir(dir: PathBuf, keep: bool) -> Self {
+        Self {
+            token: fault::path_token(&dir),
+            dir,
+            keep,
+            io_retries: AtomicU64::new(0),
+        }
+    }
+
     /// Create (or reuse) `dir` as a shard directory. The store deletes
     /// the directory on drop unless [`Self::keep`] is called.
     pub fn create(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("create shard dir {}", dir.display()))?;
-        Ok(Self { dir, keep: false })
+        Ok(Self::from_dir(dir, false))
     }
 
     /// Create a uniquely-named store under `$PPLDA_SPILL_DIR` (or the
@@ -171,7 +383,34 @@ impl ShardStore {
         if !dir.is_dir() {
             bail!("shard dir {} does not exist", dir.display());
         }
-        Ok(Self { dir, keep: true })
+        Ok(Self::from_dir(dir, true))
+    }
+
+    /// Transient IO retries this store has performed (0 in a fault-free
+    /// run) — surfaced through the trainers' sweep statistics.
+    pub fn io_retries(&self) -> u64 {
+        self.io_retries.load(Ordering::Relaxed)
+    }
+
+    /// Run `op`, retrying transient IO failures (see [`retryable`])
+    /// with a short backoff. Corruption is never retried: a checksum
+    /// mismatch is the same on every read, and retrying would only
+    /// delay the refusal.
+    fn with_io_retry<T>(
+        &self,
+        mut op: impl FnMut() -> Result<T, BlockError>,
+    ) -> Result<T, BlockError> {
+        let mut attempt = 1;
+        loop {
+            match op() {
+                Err(e) if attempt < MAX_IO_ATTEMPTS && retryable(&e) => {
+                    self.io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(2u64 << attempt));
+                    attempt += 1;
+                }
+                done => return done,
+            }
+        }
     }
 
     /// Keep the directory on drop (for resume / inspection).
@@ -193,94 +432,195 @@ impl ShardStore {
     }
 
     /// Write a partition's full block (header + docs + words + z),
-    /// stamped with the sweep count its `z` state corresponds to.
-    pub fn write_block(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<()> {
-        let n = block.len();
-        let mut buf = Vec::with_capacity((HEADER + BYTES_PER_TOKEN * n as u64) as usize);
-        buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&(n as u64).to_le_bytes());
-        buf.extend_from_slice(&stamp.to_le_bytes());
-        for arr in [&block.docs, &block.words, &block.z] {
-            for &x in arr.iter() {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
-        }
+    /// stamped with the sweep count its `z` state corresponds to. The
+    /// bytes go to a temp file first and are renamed into place, so a
+    /// failure part-way (crash, injected fault, full disk) can never
+    /// tear a *committed* `part-<id>.blk` — and the temp file itself is
+    /// removed on every error path. Transient IO errors are retried.
+    pub fn write_block(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<(), BlockError> {
+        self.with_io_retry(|| self.write_block_once(id, block, stamp))
+    }
+
+    fn write_block_once(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<(), BlockError> {
         let path = self.file(id);
-        std::fs::write(&path, &buf)
-            .with_context(|| format!("write shard {}", path.display()))?;
+        if fault::fire("shard.write_block", [self.token, id, 0]).is_some() {
+            return Err(injected_io(&path, "write (injected fault)"));
+        }
+        let docs = u32s_to_le(&block.docs);
+        let words = u32s_to_le(&block.words);
+        let z = u32s_to_le(&block.z);
+        let mut header = [0u8; HEADER as usize];
+        header[..8].copy_from_slice(MAGIC);
+        header[8..STAMP_OFFSET].copy_from_slice(&(block.len() as u64).to_le_bytes());
+        header[STAMP_OFFSET..CRC_DOCS_OFFSET].copy_from_slice(&stamp.to_le_bytes());
+        header[CRC_DOCS_OFFSET..CRC_WORDS_OFFSET].copy_from_slice(&crc32(&docs).to_le_bytes());
+        header[CRC_WORDS_OFFSET..CRC_Z_OFFSET].copy_from_slice(&crc32(&words).to_le_bytes());
+        header[CRC_Z_OFFSET..HEADER_CRC_OFFSET].copy_from_slice(&crc32(&z).to_le_bytes());
+        let hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
+        header[HEADER_CRC_OFFSET..].copy_from_slice(&hcrc.to_le_bytes());
+        let cap = HEADER as usize + (BYTES_PER_TOKEN as usize) * block.len();
+        let mut buf = Vec::with_capacity(cap);
+        buf.extend_from_slice(&header);
+        buf.extend_from_slice(&docs);
+        buf.extend_from_slice(&words);
+        buf.extend_from_slice(&z);
+
+        static TMP: AtomicU64 = AtomicU64::new(0);
+        let tmp = self
+            .dir
+            .join(format!("part-{id:08}.blk.tmp-{}", TMP.fetch_add(1, Ordering::Relaxed)));
+        let guard = TempGuard::new(tmp.clone());
+        std::fs::write(&tmp, &buf).map_err(|e| io_err(&tmp, "write temp", e))?;
+        std::fs::rename(&tmp, &path).map_err(|e| io_err(&path, "rename temp into place", e))?;
+        guard.disarm();
         Ok(())
     }
 
     /// Rewrite only the `z` section of partition `id`'s file in place —
     /// the write-back path (docs/words never change after init) — then
-    /// commit the new sweep stamp. Stamp-after-data ordering keeps the
-    /// mid-*process-kill* window to a partially-written `z` section
-    /// whose stale stamp a resume will reject; across a *system* crash
-    /// the page cache may reorder the two writes, so power-loss
-    /// durability would additionally need a `sync_data` between them
-    /// (deliberately not paid on the per-epoch hot path — see
-    /// `docs/out_of_core.md`).
-    pub fn write_z(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<()> {
-        use std::io::{Seek, SeekFrom, Write};
-        let n = block.len() as u64;
+    /// commit the re-checksummed header carrying the new sweep stamp.
+    /// Data-before-header ordering keeps the mid-*process-kill* window
+    /// detectable: a kill inside the `z` rewrite leaves the old header,
+    /// whose stale stamp (and now-mismatched `z` checksum) a resume
+    /// rejects. Across a *system* crash the page cache may reorder the
+    /// two writes, so power-loss durability would additionally need a
+    /// `sync_data` between them (deliberately not paid on the per-epoch
+    /// hot path — see `docs/out_of_core.md`). Transient IO errors are
+    /// retried; a torn attempt is repaired by its retry because the
+    /// full `z` section is rewritten each time.
+    pub fn write_z(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<(), BlockError> {
+        self.with_io_retry(|| self.write_z_once(id, block, stamp))
+    }
+
+    fn write_z_once(&self, id: u64, block: &TokenBlock, stamp: u64) -> Result<(), BlockError> {
+        use std::io::{Read, Seek, SeekFrom, Write};
         let path = self.file(id);
+        let torn = match fault::fire("shard.write_z", [self.token, id, 0]) {
+            Some(FaultKind::TornWrite) => true,
+            Some(_) => return Err(injected_io(&path, "write-back (injected fault)")),
+            None => false,
+        };
         let mut f = std::fs::OpenOptions::new()
+            .read(true)
             .write(true)
             .open(&path)
-            .with_context(|| format!("open shard {} for write-back", path.display()))?;
-        f.seek(SeekFrom::Start(HEADER + 8 * n))
-            .with_context(|| format!("seek shard {}", path.display()))?;
-        let mut buf = Vec::with_capacity(4 * block.len());
-        for &x in &block.z {
-            buf.extend_from_slice(&x.to_le_bytes());
+            .map_err(|e| io_err(&path, "open for write-back", e))?;
+        let len = f
+            .metadata()
+            .map_err(|e| io_err(&path, "stat for write-back", e))?
+            .len();
+        if len < HEADER {
+            return Err(BlockError::Truncated { path, len, expected: HEADER });
         }
-        f.write_all(&buf)
-            .with_context(|| format!("write back shard {}", path.display()))?;
-        f.seek(SeekFrom::Start(STAMP_OFFSET))
-            .with_context(|| format!("seek shard {}", path.display()))?;
-        f.write_all(&stamp.to_le_bytes())
-            .with_context(|| format!("stamp shard {}", path.display()))?;
+        let mut header = [0u8; HEADER as usize];
+        f.read_exact(&mut header)
+            .map_err(|e| io_err(&path, "read header for write-back", e))?;
+        check_magic(&header, &path)?;
+        let n = le_u64_in(&header, 8);
+        assert_eq!(
+            n as usize,
+            block.len(),
+            "write-back token count mismatch for partition {id}"
+        );
+        let expected_len = HEADER + BYTES_PER_TOKEN * n;
+        if len < expected_len {
+            return Err(BlockError::Truncated { path, len, expected: expected_len });
+        }
+        let z = u32s_to_le(&block.z);
+        f.seek(SeekFrom::Start(HEADER + 8 * n))
+            .map_err(|e| io_err(&path, "seek to z section", e))?;
+        if torn {
+            // Injected torn write: half the payload lands, then the
+            // "device" fails. The old header (old stamp, old z checksum)
+            // still governs the file, so the tear stays detectable.
+            let _ = f.write_all(&z[..z.len() / 2]);
+            return Err(injected_io(&path, "write-back (injected torn write)"));
+        }
+        f.write_all(&z)
+            .map_err(|e| io_err(&path, "write back z section", e))?;
+        header[STAMP_OFFSET..CRC_DOCS_OFFSET].copy_from_slice(&stamp.to_le_bytes());
+        header[CRC_Z_OFFSET..HEADER_CRC_OFFSET].copy_from_slice(&crc32(&z).to_le_bytes());
+        let hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
+        header[HEADER_CRC_OFFSET..].copy_from_slice(&hcrc.to_le_bytes());
+        f.seek(SeekFrom::Start(0))
+            .map_err(|e| io_err(&path, "seek to header", e))?;
+        f.write_all(&header)
+            .map_err(|e| io_err(&path, "commit header", e))?;
         Ok(())
     }
 
-    /// Load partition `id`'s block, validating the header.
-    pub fn read_block(&self, id: u64) -> Result<TokenBlock> {
+    /// Load partition `id`'s block, verifying every checksum.
+    pub fn read_block(&self, id: u64) -> Result<TokenBlock, BlockError> {
         Ok(self.read_block_stamped(id)?.0)
     }
 
     /// Load partition `id`'s block and verify its sweep stamp — the one
     /// copy of the resume-validation rule (a mixed-stamp store was left
     /// mid-sweep by a kill and cannot be resumed bit-identically).
-    pub fn read_block_verified(&self, id: u64, expected_stamp: u64) -> Result<TokenBlock> {
+    pub fn read_block_verified(&self, id: u64, expected: u64) -> Result<TokenBlock, BlockError> {
         let (b, stamp) = self.read_block_stamped(id)?;
-        if stamp != expected_stamp {
-            bail!(
-                "partition {id}: sweep stamp {stamp} != expected {expected_stamp} \
-                 (store was left mid-sweep or belongs to a different run)"
-            );
+        if stamp != expected {
+            return Err(BlockError::StampMismatch { path: self.file(id), id, stamp, expected });
         }
         Ok(b)
     }
 
     /// Load partition `id`'s block plus its sweep stamp — the resume
     /// path, which must verify every block is from the same sweep.
-    pub fn read_block_stamped(&self, id: u64) -> Result<(TokenBlock, u64)> {
+    /// Transient IO errors are retried; any magic, version, length, or
+    /// checksum violation surfaces as the matching [`BlockError`].
+    pub fn read_block_stamped(&self, id: u64) -> Result<(TokenBlock, u64), BlockError> {
+        self.with_io_retry(|| self.read_block_once(id))
+    }
+
+    fn read_block_once(&self, id: u64) -> Result<(TokenBlock, u64), BlockError> {
         let path = self.file(id);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("read shard {}", path.display()))?;
-        if bytes.len() < HEADER as usize || &bytes[..8] != MAGIC {
-            bail!("shard {}: bad header", path.display());
+        if fault::fire("shard.read", [self.token, id, 0]).is_some() {
+            return Err(injected_io(&path, "read (injected fault)"));
         }
-        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-        let stamp = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let bytes = std::fs::read(&path).map_err(|e| io_err(&path, "read", e))?;
+        check_magic(&bytes, &path)?;
+        if bytes.len() < HEADER as usize {
+            return Err(BlockError::Truncated {
+                path,
+                len: bytes.len() as u64,
+                expected: HEADER,
+            });
+        }
+        let mut header = [0u8; HEADER as usize];
+        header.copy_from_slice(&bytes[..HEADER as usize]);
+        let stored_hcrc = le_u32_in(&header, HEADER_CRC_OFFSET);
+        let computed_hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
+        if stored_hcrc != computed_hcrc {
+            return Err(BlockError::Corrupt {
+                path,
+                section: "header",
+                stored: stored_hcrc,
+                computed: computed_hcrc,
+            });
+        }
+        let n = le_u64_in(&header, 8) as usize;
+        let stamp = le_u64_in(&header, STAMP_OFFSET);
         if bytes.len() as u64 != HEADER + BYTES_PER_TOKEN * n as u64 {
-            bail!(
-                "shard {}: {} bytes for {n} tokens (truncated or corrupt)",
-                path.display(),
-                bytes.len()
-            );
+            return Err(BlockError::Truncated {
+                path,
+                len: bytes.len() as u64,
+                expected: HEADER + BYTES_PER_TOKEN * n as u64,
+            });
         }
         let h = HEADER as usize;
+        let sections = [
+            ("docs", CRC_DOCS_OFFSET, h),
+            ("words", CRC_WORDS_OFFSET, h + 4 * n),
+            ("z", CRC_Z_OFFSET, h + 8 * n),
+        ];
+        for (section, crc_at, start) in sections {
+            let stored = le_u32_in(&header, crc_at);
+            let computed = crc32(&bytes[start..start + 4 * n]);
+            if stored != computed {
+                return Err(BlockError::Corrupt { path: path.clone(), section, stored, computed });
+            }
+        }
         let mut block = TokenBlock::with_capacity(n);
         read_u32s(&bytes[h..h + 4 * n], &mut block.docs);
         read_u32s(&bytes[h + 4 * n..h + 8 * n], &mut block.words);
@@ -291,7 +631,9 @@ impl ShardStore {
 
 fn read_u32s(bytes: &[u8], out: &mut Vec<u32>) {
     for c in bytes.chunks_exact(4) {
-        out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        let mut le = [0u8; 4];
+        le.copy_from_slice(c);
+        out.push(u32::from_le_bytes(le));
     }
 }
 
@@ -326,7 +668,7 @@ impl Prefetcher {
                     match store.read_block(id) {
                         Ok(b) => out.push(b),
                         Err(e) => {
-                            failed = Some(e);
+                            failed = Some(Error::from(e));
                             break;
                         }
                     }
@@ -667,6 +1009,35 @@ impl ShardedBlocks {
         self.store.as_deref().map(ShardStore::path)
     }
 
+    /// Transient IO retries the underlying store has absorbed (0
+    /// in-core) — surfaced through the trainers' sweep statistics.
+    pub fn io_retries(&self) -> u64 {
+        self.store.as_ref().map_or(0, |s| s.io_retries())
+    }
+
+    /// Write every partition's current state into `dst` — the
+    /// checkpoint primitive. Resident diagonals are copied from memory;
+    /// non-resident ones are read back from this container's own store
+    /// (verified against the current stamp), so the export never needs
+    /// more than one extra diagonal of memory and never mutates this
+    /// container. Destination blocks carry the current sweep stamp.
+    pub fn export_to(&self, dst: &ShardStore) -> Result<(), BlockError> {
+        for l in 0..self.blocks.len() {
+            if self.resident[l] {
+                for (b, &id) in self.blocks[l].iter().zip(&self.ids[l]) {
+                    dst.write_block(id, b, self.stamp)?;
+                }
+            } else {
+                let store = self.store.as_ref().expect("non-resident diagonal without a store");
+                for &id in &self.ids[l] {
+                    let b = store.read_block_verified(id, self.stamp)?;
+                    dst.write_block(id, &b, self.stamp)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Keep the spill directory on drop (resume / inspection). Retires
     /// the prefetch thread (it holds the other `Arc` clone of the
     /// store); subsequent sweeps fall back to synchronous loads.
@@ -943,5 +1314,223 @@ mod tests {
         let (blocks, pids) = sb.diag_parts(0);
         assert_eq!(blocks[0], b);
         assert_eq!(pids, &[5]);
+    }
+
+    fn flip_byte(path: &Path, offset: usize) {
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[offset] ^= 0x01;
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    #[test]
+    fn typed_errors_name_each_corruption_mode() {
+        let store = ShardStore::create_temp("typed").unwrap();
+        store.write_block(1, &block(20, 8), 2).unwrap();
+        let path = store.path().join("part-00000001.blk");
+        let pristine = std::fs::read(&path).unwrap();
+
+        // Bit-flip inside the docs payload: the section checksum names it.
+        flip_byte(&path, HEADER as usize + 3);
+        match store.read_block(1).unwrap_err() {
+            BlockError::Corrupt { section, .. } => assert_eq!(section, "docs"),
+            e => panic!("expected Corrupt, got {e}"),
+        }
+        std::fs::write(&path, &pristine).unwrap();
+
+        // Bit-flip inside the z payload.
+        flip_byte(&path, HEADER as usize + 8 * 20 + 5);
+        match store.read_block(1).unwrap_err() {
+            BlockError::Corrupt { section, .. } => assert_eq!(section, "z"),
+            e => panic!("expected Corrupt, got {e}"),
+        }
+        std::fs::write(&path, &pristine).unwrap();
+
+        // Bit-flip inside the header (the stamp): the header CRC
+        // catches it before the stamp could be believed.
+        flip_byte(&path, STAMP_OFFSET);
+        match store.read_block_verified(1, 2).unwrap_err() {
+            BlockError::Corrupt { section, .. } => assert_eq!(section, "header"),
+            e => panic!("expected Corrupt, got {e}"),
+        }
+        std::fs::write(&path, &pristine).unwrap();
+
+        // Truncated tail.
+        std::fs::write(&path, &pristine[..pristine.len() - 4]).unwrap();
+        let e = store.read_block(1).unwrap_err();
+        assert!(matches!(e, BlockError::Truncated { .. }), "{e}");
+        std::fs::write(&path, &pristine).unwrap();
+
+        // A previous format version is refused by name, not misparsed.
+        let mut old = pristine.clone();
+        old[7] = b'2';
+        std::fs::write(&path, &old).unwrap();
+        match store.read_block(1).unwrap_err() {
+            BlockError::BadVersion { found, .. } => assert_eq!(found, b'2'),
+            e => panic!("expected BadVersion, got {e}"),
+        }
+        std::fs::write(&path, &pristine).unwrap();
+
+        // A stale stamp is a typed mismatch (the resume refusal).
+        match store.read_block_verified(1, 9).unwrap_err() {
+            BlockError::StampMismatch { stamp, expected, .. } => {
+                assert_eq!((stamp, expected), (2, 9));
+            }
+            e => panic!("expected StampMismatch, got {e}"),
+        }
+        // And the pristine file still reads cleanly.
+        assert_eq!(store.read_block_verified(1, 2).unwrap(), block(20, 8));
+    }
+
+    #[test]
+    fn torn_z_write_back_is_detected_on_read() {
+        // Simulate a kill half-way through a z write-back: new z bytes
+        // land, the old header still governs the file, so the stale z
+        // checksum makes the tear loud instead of silent.
+        let store = ShardStore::create_temp("torn").unwrap();
+        let mut b = block(64, 21);
+        store.write_block(2, &b, 1).unwrap();
+        for z in &mut b.z {
+            *z ^= 1;
+        }
+        let z = u32s_to_le(&b.z);
+        let path = store.path().join("part-00000002.blk");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = HEADER as usize + 8 * 64;
+        bytes[at..at + z.len() / 2].copy_from_slice(&z[..z.len() / 2]);
+        std::fs::write(&path, &bytes).unwrap();
+        match store.read_block(2).unwrap_err() {
+            BlockError::Corrupt { section, .. } => assert_eq!(section, "z"),
+            e => panic!("expected Corrupt, got {e}"),
+        }
+    }
+
+    #[test]
+    fn failed_writes_leave_no_temp_files() {
+        let store = ShardStore::create_temp("tempclean").unwrap();
+        store.write_block(0, &block(10, 9), 0).unwrap();
+        let leftovers = std::fs::read_dir(store.path())
+            .unwrap()
+            .filter(|e| e.as_ref().unwrap().file_name().to_string_lossy().contains(".tmp-"))
+            .count();
+        assert_eq!(leftovers, 0, "successful write leaves no temp file");
+
+        // TempGuard is the error-path cleanup: armed guards remove the
+        // file on drop, disarmed guards (post-rename) leave it alone.
+        let tmp = store.path().join("part-00000000.blk.tmp-test");
+        std::fs::write(&tmp, b"partial").unwrap();
+        TempGuard::new(tmp.clone());
+        assert!(!tmp.exists(), "armed guard removes the partial file");
+        std::fs::write(&tmp, b"partial").unwrap();
+        TempGuard::new(tmp.clone()).disarm();
+        assert!(tmp.exists(), "disarmed guard leaves the file alone");
+        std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn export_to_copies_blocks_under_both_residencies() {
+        let expected = [
+            (0u64, block(100, 10)),
+            (3, block(60, 11)),
+            (1, block(80, 12)),
+            (2, block(40, 13)),
+        ];
+
+        // In-core source: blocks are exported straight from memory.
+        let (diags, ids) = two_diagonals();
+        let mut sb = ShardedBlocks::in_core();
+        sb.set_stamp(5);
+        for (d, i) in diags.into_iter().zip(ids) {
+            sb.push_diagonal(d, i).unwrap();
+        }
+        let dst = ShardStore::create_temp("export-incore").unwrap();
+        sb.export_to(&dst).unwrap();
+        for (id, b) in &expected {
+            assert_eq!(dst.read_block_verified(*id, 5).unwrap(), *b);
+        }
+
+        // Spill source with nothing resident: the export reads back
+        // from its own store and copies, without mutating it.
+        let (diags, ids) = two_diagonals();
+        let store = ShardStore::create_temp("export-src").unwrap();
+        let mut sb = ShardedBlocks::spill(store, 0);
+        sb.set_stamp(5);
+        for (d, i) in diags.into_iter().zip(ids) {
+            sb.push_diagonal(d, i).unwrap();
+        }
+        let dst = ShardStore::create_temp("export-spill").unwrap();
+        sb.export_to(&dst).unwrap();
+        for (id, b) in &expected {
+            assert_eq!(dst.read_block_verified(*id, 5).unwrap(), *b);
+        }
+        assert!(!sb.fully_resident(), "export left the source evicted");
+    }
+
+    #[cfg(feature = "failpoints")]
+    mod fault_injection {
+        use super::*;
+        use crate::util::fault::{install, Fault, ANY};
+
+        #[test]
+        fn transient_read_faults_are_retried() {
+            let store = ShardStore::create_temp("fp-read").unwrap();
+            let b = block(40, 30);
+            store.write_block(0xFA17_0001, &b, 0).unwrap();
+            let _g = install(vec![Fault {
+                site: "shard.read",
+                key: [store.token, 0xFA17_0001, ANY],
+                kind: FaultKind::IoError,
+            }]);
+            assert_eq!(store.read_block(0xFA17_0001).unwrap(), b);
+            assert_eq!(store.io_retries(), 1, "one retry absorbed the fault");
+        }
+
+        #[test]
+        fn torn_write_back_is_retried_to_success() {
+            let store = ShardStore::create_temp("fp-torn").unwrap();
+            let mut b = block(64, 31);
+            store.write_block(7, &b, 0).unwrap();
+            for z in &mut b.z {
+                *z = (*z + 3) % 8;
+            }
+            let _g = install(vec![Fault {
+                site: "shard.write_z",
+                key: [store.token, 7, ANY],
+                kind: FaultKind::TornWrite,
+            }]);
+            store.write_z(7, &b, 1).unwrap();
+            assert_eq!(store.io_retries(), 1);
+            let (r, stamp) = store.read_block_stamped(7).unwrap();
+            assert_eq!(r.z, b.z, "the retry rewrote the full z section");
+            assert_eq!(stamp, 1);
+        }
+
+        #[test]
+        fn write_block_faults_are_retried() {
+            let store = ShardStore::create_temp("fp-write").unwrap();
+            let b = block(16, 32);
+            let _g = install(vec![Fault {
+                site: "shard.write_block",
+                key: [store.token, 3, ANY],
+                kind: FaultKind::IoError,
+            }]);
+            store.write_block(3, &b, 2).unwrap();
+            assert_eq!(store.io_retries(), 1);
+            assert_eq!(store.read_block_verified(3, 2).unwrap(), b);
+        }
+
+        #[test]
+        fn a_persistent_fault_exhausts_the_retry_budget() {
+            let store = ShardStore::create_temp("fp-budget").unwrap();
+            store.write_block(9, &block(8, 33), 0).unwrap();
+            let fault = Fault {
+                site: "shard.read",
+                key: [store.token, 9, ANY],
+                kind: FaultKind::IoError,
+            };
+            let _g = install(vec![fault; MAX_IO_ATTEMPTS as usize]);
+            let e = store.read_block(9).unwrap_err();
+            assert!(matches!(e, BlockError::Io { .. }), "{e}");
+            assert_eq!(store.io_retries(), u64::from(MAX_IO_ATTEMPTS) - 1);
+        }
     }
 }

@@ -12,20 +12,23 @@
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //!                  [--balance static|adaptive|steal]
 //!                  [--residency in-core|spill] [--memory-budget B]
-//!                  [--spill-dir DIR]
+//!                  [--spill-dir DIR] [--checkpoint-every N]
+//!                  [--checkpoint-dir DIR] [--resume PATH]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //!                  [--balance static|adaptive|steal] [--timeline]
 //!                  [--residency in-core|spill] [--memory-budget B]
-//!                  [--spill-dir DIR]
+//!                  [--spill-dir DIR] [--checkpoint-every N]
+//!                  [--checkpoint-dir DIR] [--resume PATH]
 //! pplda artifacts-check
 //! ```
 
+use std::path::PathBuf;
 use std::process::ExitCode;
 
-use pplda::coordinator::{train_bot, train_lda, Backend, TrainConfig};
+use pplda::coordinator::{train_bot_checkpointed, train_lda_checkpointed, Backend, TrainConfig};
 use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
 use pplda::corpus::shard::{self, Residency};
@@ -95,6 +98,13 @@ corpora larger than RAM train (see docs/out_of_core.md).
 resident token bytes; --spill-dir DIR picks the spill root (default
 $PPLDA_SPILL_DIR or the system temp dir). Residency never changes
 results — spill is bit-identical to the default in-core.
+
+checkpointing (train/train-bot): --checkpoint-every N commits an
+atomic on-disk checkpoint under --checkpoint-dir DIR every N sweeps;
+--resume PATH restarts from a checkpoint (a ckpt-N directory, or a
+checkpoint dir to scan for the latest) and finishes bit-identically
+to the uninterrupted run (see docs/fault_tolerance.md). Requires the
+partitioned native backend (P > 1).
 ";
 
 fn profile(args: &Args) -> Profile {
@@ -200,6 +210,23 @@ fn balance_of(args: &Args) -> BalanceMode {
     }
 }
 
+/// Checkpoint flags: `--checkpoint-every N` (commits under
+/// `--checkpoint-dir DIR`) and `--resume PATH`. Both halves of the
+/// periodic pair are required together so a stale flag never silently
+/// disables checkpointing.
+fn checkpoint_of(args: &Args) -> (usize, Option<PathBuf>, Option<PathBuf>) {
+    let every = args.get::<usize>("checkpoint-every", 0);
+    let dir = args.get_str("checkpoint-dir").map(PathBuf::from);
+    let resume = args.get_str("resume").map(PathBuf::from);
+    if every > 0 && dir.is_none() {
+        panic!("--checkpoint-every requires --checkpoint-dir DIR");
+    }
+    if every == 0 && dir.is_some() {
+        panic!("--checkpoint-dir requires --checkpoint-every N");
+    }
+    (every, dir, resume)
+}
+
 fn algo_of(name: &str, restarts: usize) -> Algorithm {
     match name {
         "baseline" => Algorithm::Baseline { restarts },
@@ -259,6 +286,7 @@ fn cmd_train(args: &Args) -> ExitCode {
     let grid = kind.grid(workers);
     let restarts = args.get::<usize>("restarts", 20);
     let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
+    let (checkpoint_every, checkpoint_dir, resume) = checkpoint_of(args);
     let cfg = TrainConfig {
         topics: args.get::<usize>("topics", 64),
         iters: args.get::<usize>("iters", 100),
@@ -275,6 +303,7 @@ fn cmd_train(args: &Args) -> ExitCode {
         kernel: kernel_of(args),
         balance: balance_of(args),
         residency: residency_of(args),
+        checkpoint_every,
         ..Default::default()
     };
 
@@ -294,13 +323,25 @@ fn cmd_train(args: &Args) -> ExitCode {
         cfg.balance.name(),
         cfg.residency.label(),
     );
-    let report = train_lda(&bow, &plan, &cfg);
+    let report = train_lda_checkpointed(
+        &bow,
+        &plan,
+        &cfg,
+        checkpoint_dir.as_deref(),
+        resume.as_deref(),
+    );
     println!(
         "schedule_eta={:.4} measured_eta={:.4} speedup≈{:.2} (vs {} workers)",
         report.schedule_eta, report.measured_eta, report.speedup_model, report.workers
     );
     if !report.phases.is_empty() {
         println!("phases: {}", report.phase_summary());
+    }
+    if report.task_retries > 0 || report.io_retries > 0 {
+        println!(
+            "fault recovery: task_retries={} io_retries={}",
+            report.task_retries, report.io_retries
+        );
     }
     print!("{}", report.curve_table().to_aligned());
     println!(
@@ -337,6 +378,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
     let p = kind.grid(workers);
     let restarts = args.get::<usize>("restarts", 20);
     let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
+    let (checkpoint_every, checkpoint_dir, resume) = checkpoint_of(args);
     let cfg = TrainConfig {
         topics: args.get::<usize>("topics", 64),
         iters: args.get::<usize>("iters", 50),
@@ -347,6 +389,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         kernel: kernel_of(args),
         balance: balance_of(args),
         residency: residency_of(args),
+        checkpoint_every,
         ..Default::default()
     };
 
@@ -359,7 +402,14 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         tc.num_stamps,
         tc.dts.num_tokens()
     );
-    let report = train_bot(&tc, p, algo, &cfg);
+    let report = train_bot_checkpointed(
+        &tc,
+        p,
+        algo,
+        &cfg,
+        checkpoint_dir.as_deref(),
+        resume.as_deref(),
+    );
     println!(
         "P={} workers={} schedule={} kernel={} balance={} residency={} perplexity={:.4} \
          eta_dw={:.4} eta_dts={:.4} measured_eta_dw={:.4} measured_eta_dts={:.4} \

@@ -15,7 +15,9 @@ use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
-use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
+use crate::scheduler::pool::{
+    merge_deltas, EngineCache, EpochSpec, EpochTasks, Executor, WorkerPool,
+};
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
 use crate::util::error::Result;
@@ -38,6 +40,14 @@ pub enum ExecMode {
     Sequential,
     Pooled,
 }
+
+/// Seed salt for the LDA sweep RNG streams: task RNGs are keyed by
+/// `(seed ^ LDA_SWEEP_SALT, sweep, partition)`, so LDA and the BoT
+/// phases sharing one user seed never share streams. Named (rather than
+/// inlined) so fault-injection tests can address exact task coordinates
+/// — the `"task"` failpoint key leads with this salted seed (see
+/// `crate::util::fault` and `docs/fault_tolerance.md`).
+pub(crate) const LDA_SWEEP_SALT: u64 = 0x50AB_71C5;
 
 impl ExecMode {
     /// Parse a CLI/config spelling.
@@ -98,6 +108,14 @@ pub struct SweepStats {
     /// Out-of-core write-back seconds (dirty `z` arrays after each
     /// epoch's barrier; 0 in-core).
     pub io_write_secs: f64,
+    /// Task re-executions after contained worker panics during this
+    /// sweep (see [`crate::scheduler::pool::Executor::retries`]). Zero
+    /// on a fault-free sweep; retries never change results.
+    pub task_retries: u64,
+    /// Spill-store IO operations that failed transiently and were
+    /// retried during this sweep (reads, write-backs, and prefetches —
+    /// see [`crate::corpus::shard::ShardStore`]). Zero in-core.
+    pub io_retries: u64,
 }
 
 impl SweepStats {
@@ -395,6 +413,97 @@ impl ParallelLda {
         })
     }
 
+    /// Rebuild a trainer by *copying* blocks out of a checkpoint store.
+    /// Unlike [`Self::resume_spilled`] — which adopts the directory as
+    /// its live spill store — this verified-reads every block (CRC32
+    /// checksums plus the `sweeps_done` stamp), re-absorbs the counts,
+    /// and builds a fresh block container under `residency` (a new temp
+    /// spill store when spilling), leaving the checkpoint untouched for
+    /// future resumes. The checkpoint drivers in
+    /// `crate::coordinator::checkpoint` resume through this.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resume_from_store(
+        bow: &BagOfWords,
+        plan: &Plan,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        seed: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        store: &ShardStore,
+        sweeps_done: usize,
+        residency: Residency,
+    ) -> Result<Self> {
+        let p = plan.p;
+        let schedule = Schedule::build(kind, &plan.costs, workers);
+        let map = PartitionMap::build(bow, plan);
+        let mut counts = LdaCounts::zeros(bow.num_docs(), bow.num_words(), k);
+        let expected = sweeps_done as u64;
+        let mut shards = match residency {
+            Residency::InCore => ShardedBlocks::in_core(),
+            Residency::Spill { budget_bytes } => {
+                ShardedBlocks::spill(ShardStore::create_temp("lda")?, budget_bytes)
+            }
+        };
+        // Blocks re-spilled while rebuilding must carry the checkpoint's
+        // stamp, preserving the at-rest invariant until the next sweep
+        // bumps it.
+        shards.set_stamp(expected);
+        for l in 0..p {
+            let ids: Vec<u64> = map.diagonal(l).map(|(m, n)| partition_id(m, n, p)).collect();
+            let mut diag = Vec::with_capacity(ids.len());
+            for &id in &ids {
+                let b = store.read_block_verified(id, expected)?;
+                counts.absorb(&b);
+                diag.push(b);
+            }
+            shards.push_diagonal(diag, ids)?;
+        }
+        let workers = schedule.workers;
+        Ok(Self {
+            h: Hyper::new(k, alpha, beta, bow.num_words()),
+            counts,
+            p,
+            shards,
+            costs: plan.costs.clone(),
+            engines: EngineCache::new(workers),
+            schedule,
+            kernel: KernelKind::Dense,
+            balance: BalanceMode::Static,
+            estimator: Measured::new(p),
+            seed,
+            sweeps_done,
+            snapshot: vec![0; k],
+            deltas: vec![vec![0i64; k]; p],
+            task_nanos: vec![0; p],
+            worker_nanos: vec![0; workers],
+        })
+    }
+
+    /// Sweeps completed so far. This is the checkpoint coordinate: task
+    /// RNG streams for sweep `s` depend only on `(seed, s, partition)`,
+    /// never on how the trainer reached sweep `s`.
+    pub fn sweeps_done(&self) -> usize {
+        self.sweeps_done
+    }
+
+    /// The base RNG seed this trainer was initialized with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Export every partition's current `(docs, words, z)` state into
+    /// `dst`, stamped with the completed sweep count — the checkpoint
+    /// primitive (see `crate::coordinator::checkpoint`). Blocks are
+    /// copied from memory, or verified-read from the live spill store
+    /// when evicted; the trainer is unchanged. Call between sweeps only
+    /// (the at-rest stamp equals `sweeps_done` there).
+    pub fn export_blocks(&self, dst: &ShardStore) -> Result<()> {
+        self.shards.export_to(dst)?;
+        Ok(())
+    }
+
     /// Re-map the same plan onto a different worker count / schedule
     /// kind mid-training. Results are unaffected — RNG streams are keyed
     /// by partition, not by worker — but the executor state (including
@@ -489,6 +598,11 @@ impl ParallelLda {
         // complete, so an at-rest store is uniformly stamped and resume
         // can verify it is not mid-sweep.
         self.shards.set_stamp(sweep_no as u64 + 1);
+        // Fault-tolerance telemetry baselines: both counters are
+        // monotone over the trainer's lifetime; the sweep reports its
+        // increments.
+        let task_retries0 = self.engines.get(mode).retries();
+        let io_retries0 = self.shards.io_retries();
 
         // Bring the persistent snapshot buffer up to date once per sweep
         // (k u32s — cheap); per-epoch it is maintained by the merge below.
@@ -522,7 +636,7 @@ impl ParallelLda {
                 emit: SharedRows::new(&mut self.counts.word_topic, k),
                 snapshot: &self.snapshot,
                 h: self.h,
-                seed: self.seed ^ 0x50AB_71C5,
+                seed: self.seed ^ LDA_SWEEP_SALT,
                 sweep: sweep_no,
                 kernel: self.kernel,
             };
@@ -578,6 +692,8 @@ impl ParallelLda {
             self.estimator.repack(&mut self.schedule, &self.costs);
         }
         stats.update_secs += update_started.elapsed().as_secs_f64();
+        stats.task_retries = self.engines.get(mode).retries() - task_retries0;
+        stats.io_retries = self.shards.io_retries() - io_retries0;
         // Debug builds (unit + integration test runs) audit the full
         // count/assignment invariant after every sweep, so a kernel
         // count-delta bug fails loudly at the sweep that introduced it
@@ -1336,5 +1452,147 @@ mod tests {
             assert_eq!(resumed.counts.topic, fresh.counts.topic);
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn export_and_resume_from_store_roundtrip() {
+        // The checkpoint primitive: export a trainer's blocks between
+        // sweeps, rebuild a fresh trainer from the exported store (under
+        // either residency), continue — bit-identical to the
+        // uninterrupted run, and the exported store is left untouched
+        // (re-resumable).
+        let (_bow, mut oracle) = setup(4, 124);
+        for _ in 0..4 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let (_b, mut lda) = setup(4, 124);
+        for _ in 0..2 {
+            lda.sweep(ExecMode::Sequential);
+        }
+        let store = ShardStore::create_temp("export-test").expect("create export store");
+        lda.export_blocks(&store).expect("export");
+        assert_eq!(lda.sweeps_done(), 2);
+        assert_eq!(lda.seed(), 124);
+        drop(lda);
+
+        let bow = generate(&Profile::tiny(), 124);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 3 }, 124);
+        // A wrong sweep count is refused via the stamps, exactly like
+        // resume_spilled.
+        assert!(ParallelLda::resume_from_store(
+            &bow,
+            &plan,
+            8,
+            0.5,
+            0.1,
+            124,
+            ScheduleKind::Diagonal,
+            4,
+            &store,
+            1,
+            Residency::InCore,
+        )
+        .is_err());
+        for residency in [Residency::InCore, Residency::Spill { budget_bytes: 0 }] {
+            let mut resumed = ParallelLda::resume_from_store(
+                &bow,
+                &plan,
+                8,
+                0.5,
+                0.1,
+                124,
+                ScheduleKind::Diagonal,
+                4,
+                &store,
+                2,
+                residency,
+            )
+            .expect("resume from exported store");
+            assert_eq!(resumed.sweeps_done(), 2);
+            for _ in 0..2 {
+                resumed.sweep(ExecMode::Sequential);
+            }
+            assert_eq!(
+                resumed.counts.doc_topic, oracle.counts.doc_topic,
+                "{residency:?}: resumed run continues the chain bit-identically"
+            );
+            assert_eq!(resumed.counts.word_topic, oracle.counts.word_topic);
+            assert_eq!(resumed.counts.topic, oracle.counts.topic);
+        }
+    }
+
+    /// The LDA fault-tolerance acceptance matrix: one injected worker
+    /// panic (and, when spilling, one transient IO error plus one torn
+    /// spill write) per training run, across kernels × exec modes ×
+    /// residency — every run must complete and match the undisturbed
+    /// Sequential oracle bit for bit, with the retries surfaced in the
+    /// sweep telemetry.
+    #[cfg(feature = "failpoints")]
+    mod fault_injection {
+        use super::*;
+        use crate::util::fault::{self, install, Fault, FaultKind, ANY};
+
+        #[test]
+        fn faulted_training_matches_oracle_across_kernels_modes_and_residency() {
+            const SEED: u64 = 0xFA17_0011;
+            let spill = Residency::Spill { budget_bytes: 0 };
+            for kernel in KernelKind::all() {
+                let (_bow, mut oracle) = setup(4, SEED);
+                oracle.set_kernel(kernel);
+                for _ in 0..3 {
+                    oracle.sweep(ExecMode::Sequential);
+                }
+                for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                    for residency in [Residency::InCore, spill] {
+                        let (_b, mut lda) =
+                            setup_resident(4, SEED, ScheduleKind::Diagonal, 4, residency);
+                        lda.set_kernel(kernel);
+                        let mut faults = vec![Fault {
+                            site: "task",
+                            key: [SEED ^ LDA_SWEEP_SALT, 0, ANY],
+                            kind: FaultKind::Panic,
+                        }];
+                        if let Some(dir) = lda.spill_dir() {
+                            let token = fault::path_token(dir);
+                            faults.push(Fault {
+                                site: "shard.read",
+                                key: [token, ANY, ANY],
+                                kind: FaultKind::IoError,
+                            });
+                            faults.push(Fault {
+                                site: "shard.write_z",
+                                key: [token, ANY, ANY],
+                                kind: FaultKind::TornWrite,
+                            });
+                        }
+                        let guard = install(faults);
+                        let mut task_retries = 0u64;
+                        let mut io_retries = 0u64;
+                        for _ in 0..3 {
+                            let stats = lda.sweep(mode);
+                            task_retries += stats.task_retries;
+                            io_retries += stats.io_retries;
+                        }
+                        drop(guard);
+                        let tag = format!("{kernel:?} {mode:?} {residency:?}");
+                        assert_eq!(task_retries, 1, "{tag}: one contained panic, one retry");
+                        if residency == spill {
+                            assert_eq!(io_retries, 2, "{tag}: torn write + IO error retried");
+                        } else {
+                            assert_eq!(io_retries, 0, "{tag}: in-core performs no IO");
+                        }
+                        assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                        assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                        assert_eq!(lda.counts.topic, oracle.counts.topic, "{tag}");
+                        if residency == Residency::InCore {
+                            assert!(
+                                lda.counts.check_consistency(&lda.all_blocks()).is_ok(),
+                                "{tag}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

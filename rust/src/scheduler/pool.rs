@@ -65,9 +65,22 @@
 //! produce bit-identical counts on any worker count under any schedule
 //! of the same plan. The `pooled_equals_sequential` and packed-schedule
 //! determinism tests in `exec.rs` / `bot/parallel.rs` pin this.
+//!
+//! # Fault containment
+//!
+//! Every executor runs tasks under a panic guard ([`run_task_guarded`]):
+//! a panicking task is rolled back (shared count rows, `z` assignments,
+//! delta — exactly as if it had never started) and re-executed with a
+//! fresh kernel, up to [`MAX_TASK_ATTEMPTS`] attempts. Because the
+//! retry derives the same `(seed, sweep, partition)` RNG stream, a
+//! contained-and-retried run is bit-identical to an undisturbed one.
+//! The pool additionally tracks contained panics per worker and
+//! quarantines repeat offenders ([`QUARANTINE_PANICS`]): the suspect
+//! thread (and any kernel scratch the panics may have torn) is replaced
+//! by a fresh one in the same slot. See `docs/fault_tolerance.md`.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -77,7 +90,17 @@ use crate::gibbs::tokens::TokenBlock;
 use crate::kernel::{Kernel, KernelKind, TaskCtx};
 use crate::scheduler::exec::ExecMode;
 use crate::scheduler::shared::SharedRows;
+use crate::util::fault;
 use crate::util::rng::Rng;
+
+/// Per-task execution budget: the first attempt plus retries after
+/// contained panics. Exhausting it propagates the failure ("giving up")
+/// instead of looping on a deterministic crash.
+pub const MAX_TASK_ATTEMPTS: u32 = 3;
+
+/// Contained panics before the pool quarantines a worker: its thread is
+/// replaced by a fresh one in the same slot (see [`WorkerPool`]).
+pub const QUARANTINE_PANICS: u64 = 3;
 
 /// The deterministic RNG stream for one partition's sweep. Identical
 /// across executors, schedules, and worker counts — this is the
@@ -155,6 +178,14 @@ pub trait Executor {
         tasks: EpochTasks<'_>,
         deltas: &mut [Vec<i64>],
     );
+
+    /// Task re-executions performed after contained panics, over this
+    /// executor's lifetime. Zero on a fault-free run; the trainers
+    /// surface per-sweep increments in their telemetry (see
+    /// `SweepStats::task_retries`).
+    fn retries(&self) -> u64 {
+        0
+    }
 }
 
 /// The barrier merge shared by the trainers: fold every task's signed
@@ -235,6 +266,16 @@ fn run_task(
     delta: &mut [i64],
     kernel: &mut dyn Kernel,
 ) -> u64 {
+    // Failpoint: a deterministic injected worker crash at this exact
+    // (sweep, partition) coordinate — compiled to nothing without the
+    // `failpoints` feature (see `crate::util::fault`). Firing *before*
+    // the first token makes the containment rollback exact.
+    if fault::fire("task", [spec.seed, spec.sweep as u64, partition]).is_some() {
+        panic!(
+            "injected fault: worker panic at sweep {}, partition {partition}",
+            spec.sweep
+        );
+    }
     debug_assert_eq!(delta.len(), spec.h.k);
     let started = Instant::now();
     delta.fill(0);
@@ -247,6 +288,111 @@ fn run_task(
     };
     kernel.sweep_task(&ctx, block, delta, &mut rng);
     started.elapsed().as_nanos() as u64
+}
+
+/// [`run_task`] under a panic guard — the containment half of the retry
+/// protocol. The block's `z` is snapshotted into `backup` (a reusable
+/// scratch vector) before sampling; if the kernel panics, every count
+/// move it already applied is reversed ([`roll_back_task`]), the delta
+/// slot is re-zeroed, and `Err` asks the caller to retry. Because the
+/// shared state is then exactly as if the task had never started, the
+/// retry — which derives the same `(seed, sweep, partition)` RNG
+/// stream — is bit-identical to an undisturbed execution.
+///
+/// The rollback is exact for panics that fire before the first token
+/// (the injected-fault case, and any precondition assert); for a panic
+/// in the middle of a token's resample the in-flight token's decrement
+/// may not yet have a matching increment, so containment of organic
+/// mid-token crashes is best-effort (debug builds audit totals at the
+/// next merge via `merge_deltas`' non-negativity assert).
+fn run_task_guarded(
+    spec: &EpochSpec<'_>,
+    partition: u64,
+    block: &mut TokenBlock,
+    delta: &mut [i64],
+    kernel: &mut dyn Kernel,
+    backup: &mut Vec<u32>,
+) -> Result<u64, ()> {
+    backup.clear();
+    backup.extend_from_slice(&block.z);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        run_task(spec, partition, block, delta, kernel)
+    }));
+    match result {
+        Ok(dt) => Ok(dt),
+        Err(_) => {
+            roll_back_task(spec, block, delta, backup);
+            Err(())
+        }
+    }
+}
+
+/// Undo a partially-applied task: for every token whose `z` differs
+/// from the pre-task snapshot, reverse the count moves the collapsed
+/// Gibbs update made (−1 on the new topic, +1 on the old one, in both
+/// the document row and the emission row), restore the snapshot, and
+/// re-zero the delta slot.
+fn roll_back_task(
+    spec: &EpochSpec<'_>,
+    block: &mut TokenBlock,
+    delta: &mut [i64],
+    backup: &[u32],
+) {
+    debug_assert_eq!(backup.len(), block.z.len());
+    for i in 0..block.z.len() {
+        let old = backup[i];
+        let new = block.z[i];
+        if new == old {
+            continue;
+        }
+        let d = block.docs[i] as usize;
+        let w = block.words[i] as usize;
+        // SAFETY: the panicked task's doc/emission rows are exclusively
+        // its claimer's until the epoch barrier (diagonal non-conflict
+        // invariant), and `old`/`new` are topics drawn from `0..k`.
+        unsafe {
+            let dp = spec.doc.row_ptr(d);
+            *dp.add(new as usize) -= 1.0;
+            *dp.add(old as usize) += 1.0;
+            let ep = spec.emit.row_ptr(w);
+            *ep.add(new as usize) -= 1.0;
+            *ep.add(old as usize) += 1.0;
+        }
+        block.z[i] = old;
+    }
+    delta.fill(0);
+}
+
+/// Re-execute a contained-panic task on the calling thread, building a
+/// fresh kernel per attempt (the panic may have torn the old one's
+/// scratch). `retries` is bumped once per re-execution. Panics — with
+/// "giving up" in the message — once the task has consumed its whole
+/// [`MAX_TASK_ATTEMPTS`] budget, so a deterministic crash surfaces
+/// instead of looping.
+fn retry_task(
+    spec: &EpochSpec<'_>,
+    partition: u64,
+    block: &mut TokenBlock,
+    delta: &mut [i64],
+    retries: &mut u64,
+) -> u64 {
+    let mut backup = Vec::new();
+    let mut attempts = 1u32; // the contained failure that got us here
+    loop {
+        *retries += 1;
+        let mut kernel = spec.kernel.build();
+        match run_task_guarded(spec, partition, block, delta, kernel.as_mut(), &mut backup) {
+            Ok(dt) => return dt,
+            Err(()) => {
+                attempts += 1;
+                assert!(
+                    attempts < MAX_TASK_ATTEMPTS,
+                    "task for partition {partition} panicked \
+                     {MAX_TASK_ATTEMPTS} times; giving up"
+                );
+            }
+        }
+    }
 }
 
 /// A worker's long-lived kernel instance: rebuilt only when the
@@ -275,6 +421,10 @@ impl KernelSlot {
 #[derive(Default)]
 pub struct SequentialExec {
     kernel: KernelSlot,
+    /// Reusable `z` snapshot for the panic guard (see
+    /// [`run_task_guarded`]); grows to the largest block and stays.
+    backup: Vec<u32>,
+    retries: u64,
 }
 
 impl Executor for SequentialExec {
@@ -287,23 +437,42 @@ impl Executor for SequentialExec {
         check_tasks(&tasks, deltas);
         tasks.nanos.fill(0);
         tasks.worker_nanos.fill(0);
-        let kernel = self.kernel.get(spec.kernel);
         for (w, list) in tasks.assign.iter().enumerate() {
             let mut busy = 0u64;
             for &i in list {
                 let i = i as usize;
-                let dt = run_task(
+                let kernel = self.kernel.get(spec.kernel);
+                let dt = match run_task_guarded(
                     spec,
                     tasks.ids[i],
                     &mut tasks.blocks[i],
                     &mut deltas[i],
-                    &mut *kernel,
-                );
+                    kernel,
+                    &mut self.backup,
+                ) {
+                    Ok(dt) => dt,
+                    Err(()) => {
+                        // The panic may have torn the kernel's scratch;
+                        // drop it so the next get() rebuilds from scratch.
+                        self.kernel = KernelSlot::default();
+                        retry_task(
+                            spec,
+                            tasks.ids[i],
+                            &mut tasks.blocks[i],
+                            &mut deltas[i],
+                            &mut self.retries,
+                        )
+                    }
+                };
                 tasks.nanos[i] = dt;
                 busy += dt;
             }
             tasks.worker_nanos[w] = busy;
         }
+    }
+
+    fn retries(&self) -> u64 {
+        self.retries
     }
 }
 
@@ -325,7 +494,9 @@ unsafe impl Send for TaskArrays {}
 /// baseline the executor-overhead benchmark compares [`WorkerPool`]
 /// against.
 #[derive(Default)]
-pub struct ThreadedExec;
+pub struct ThreadedExec {
+    retries: u64,
+}
 
 impl Executor for ThreadedExec {
     fn run_epoch(
@@ -343,6 +514,12 @@ impl Executor for ThreadedExec {
         let deltas_ptr = deltas.as_mut_ptr();
         let nanos_ptr = tasks.nanos.as_mut_ptr();
         let busy_ptr = tasks.worker_nanos.as_mut_ptr();
+        // Contained-panic flags, one per task: a panicking task is rolled
+        // back in place by its thread, flagged here, and re-executed on
+        // the calling thread after the scope joins (index order, so the
+        // retry pass is deterministic).
+        let failed: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        let failed = &failed;
         if tasks.steal {
             // Shared per-epoch queue: the next unclaimed task index. A
             // fetch-add hands each task to exactly one thread, so the
@@ -360,6 +537,7 @@ impl Executor for ThreadedExec {
                     };
                     s.spawn(move || {
                         let mut kernel = spec.kernel.build();
+                        let mut backup = Vec::new();
                         let mut busy = 0u64;
                         loop {
                             let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -371,9 +549,25 @@ impl Executor for ThreadedExec {
                             // all other access.
                             let block = unsafe { &mut *arrays.blocks.add(i) };
                             let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
-                            let dt = run_task(spec, ids[i], block, delta, kernel.as_mut());
-                            unsafe { *arrays.nanos.add(i) = dt };
-                            busy += dt;
+                            match run_task_guarded(
+                                spec,
+                                ids[i],
+                                block,
+                                delta,
+                                kernel.as_mut(),
+                                &mut backup,
+                            ) {
+                                Ok(dt) => {
+                                    unsafe { *arrays.nanos.add(i) = dt };
+                                    busy += dt;
+                                }
+                                Err(()) => {
+                                    failed[i].store(true, Ordering::Relaxed);
+                                    // Scratch may be torn; rebuild before
+                                    // the next claimed task.
+                                    kernel = spec.kernel.build();
+                                }
+                            }
                         }
                         // SAFETY: slot `w` is this thread's alone.
                         unsafe { *arrays.busy.add(w) = busy };
@@ -394,6 +588,7 @@ impl Executor for ThreadedExec {
                     };
                     s.spawn(move || {
                         let mut kernel = spec.kernel.build();
+                        let mut backup = Vec::new();
                         let mut busy = 0u64;
                         for &i in list {
                             let i = i as usize;
@@ -403,9 +598,23 @@ impl Executor for ThreadedExec {
                             // exclusively ours until the scope joins.
                             let block = unsafe { &mut *arrays.blocks.add(i) };
                             let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
-                            let dt = run_task(spec, ids[i], block, delta, kernel.as_mut());
-                            unsafe { *arrays.nanos.add(i) = dt };
-                            busy += dt;
+                            match run_task_guarded(
+                                spec,
+                                ids[i],
+                                block,
+                                delta,
+                                kernel.as_mut(),
+                                &mut backup,
+                            ) {
+                                Ok(dt) => {
+                                    unsafe { *arrays.nanos.add(i) = dt };
+                                    busy += dt;
+                                }
+                                Err(()) => {
+                                    failed[i].store(true, Ordering::Relaxed);
+                                    kernel = spec.kernel.build();
+                                }
+                            }
                         }
                         // SAFETY: slot `w` is this thread's alone.
                         unsafe { *arrays.busy.add(w) = busy };
@@ -413,6 +622,34 @@ impl Executor for ThreadedExec {
                 }
             });
         }
+        // Retry pass: re-execute contained-panic tasks on the calling
+        // thread with fresh kernels. The retry's busy time is attributed
+        // to the worker slot whose static list holds the task (slot 0
+        // for an unlisted stolen task), preserving the telemetry
+        // conservation invariant sum(nanos) == sum(worker_nanos).
+        for i in 0..n {
+            if !failed[i].load(Ordering::Relaxed) {
+                continue;
+            }
+            let dt = retry_task(
+                spec,
+                tasks.ids[i],
+                &mut tasks.blocks[i],
+                &mut deltas[i],
+                &mut self.retries,
+            );
+            tasks.nanos[i] = dt;
+            let w = tasks
+                .assign
+                .iter()
+                .position(|l| l.contains(&(i as u32)))
+                .unwrap_or(0);
+            tasks.worker_nanos[w] += dt;
+        }
+    }
+
+    fn retries(&self) -> u64 {
+        self.retries
     }
 }
 
@@ -456,14 +693,25 @@ struct Job {
 // index list, and cursor (`AtomicUsize` is `Sync`) are safe to share.
 unsafe impl Send for Job {}
 
-fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool, u64)>) {
+/// One pool completion message: the worker slot, the job outcome, and
+/// the busy nanos of the job's *successful* tasks. `Some(failed)` is a
+/// normally-completed job — `failed` lists the task indices whose panics
+/// were contained and rolled back (empty on a clean job); `None` is a
+/// job-level panic outside every per-task guard, which the coordinator
+/// escalates.
+type Done = (usize, Option<Vec<u32>>, u64);
+
+fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
     // Long-lived kernel (and thereby scratch): built on the first epoch,
     // reused forever after — rebuilt only if the trainer switches kernel
-    // kinds between sweeps.
+    // kinds between sweeps, or a contained panic may have torn its
+    // scratch mid-update.
     let mut kernel = KernelSlot::default();
+    let mut backup = Vec::new();
     while let Ok(job) = rx.recv() {
         let k = job.h.k;
-        // Catch panics so a failed debug assertion surfaces as a
+        // Catch panics outside the per-task guard (kernel construction,
+        // a failed invariant in this loop itself) so they surface as a
         // coordinator panic instead of a deadlocked gather barrier.
         let result = catch_unwind(AssertUnwindSafe(|| {
             // SAFETY: see `Job` — exclusive ownership until the done
@@ -480,8 +728,8 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool, u64)>) {
                 sweep: job.sweep,
                 kernel: job.kernel,
             };
-            let kernel = kernel.get(job.kernel);
             let mut busy = 0u64;
+            let mut failed: Vec<u32> = Vec::new();
             let mut body = |i: usize| {
                 // SAFETY: index `i` is exclusively this worker's — by
                 // the `check_tasks` invariant in static mode, by the
@@ -489,9 +737,20 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool, u64)>) {
                 let block = unsafe { &mut *job.blocks.add(i) };
                 let delta = unsafe { (*job.deltas.add(i)).as_mut_slice() };
                 let id = unsafe { *job.ids.add(i) };
-                let dt = run_task(&spec, id, block, delta, &mut *kernel);
-                unsafe { *job.nanos.add(i) = dt };
-                busy += dt;
+                let kr = kernel.get(job.kernel);
+                match run_task_guarded(&spec, id, block, delta, kr, &mut backup) {
+                    Ok(dt) => {
+                        unsafe { *job.nanos.add(i) = dt };
+                        busy += dt;
+                    }
+                    Err(()) => {
+                        // Contained and rolled back; the coordinator
+                        // re-dispatches. The panic may have torn the
+                        // kernel's scratch — rebuild before the next task.
+                        kernel = KernelSlot::default();
+                        failed.push(i as u32);
+                    }
+                }
             };
             if job.queue.is_null() {
                 let assign =
@@ -511,13 +770,16 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool, u64)>) {
                     body(i);
                 }
             }
-            busy
+            (busy, failed)
         }));
-        let (ok, busy) = match result {
-            Ok(busy) => (true, busy),
-            Err(_) => (false, 0),
+        let msg: Done = match result {
+            Ok((busy, failed)) => (job.worker, Some(failed), busy),
+            Err(_) => {
+                kernel = KernelSlot::default();
+                (job.worker, None, 0)
+            }
         };
-        if done.send((job.worker, ok, busy)).is_err() {
+        if done.send(msg).is_err() {
             break; // coordinator gone
         }
     }
@@ -531,9 +793,20 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<(usize, bool, u64)>) {
 /// epochs, so an idle pool costs nothing but memory.
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
-    done_rx: Receiver<(usize, bool, u64)>,
+    /// Kept so [`Self::respawn`] can wire replacement workers into the
+    /// shared completion channel.
+    done_tx: Sender<Done>,
+    done_rx: Receiver<Done>,
     handles: Vec<JoinHandle<()>>,
     epochs_run: u64,
+    /// Contained panics per worker slot since that worker's thread was
+    /// (re)spawned — the quarantine trigger (see [`QUARANTINE_PANICS`]).
+    panics: Vec<u64>,
+    /// Worker threads replaced by quarantine over the pool's lifetime.
+    respawns: u64,
+    /// Task re-executions after contained panics (see
+    /// [`Executor::retries`]).
+    retries: u64,
     /// The shared work-stealing cursor (see [`EpochTasks::steal`]),
     /// reset before each stealing epoch. Lives in the pool so its
     /// address is valid for exactly as long as the workers are — the
@@ -543,8 +816,9 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `workers` dedicated threads. This is the only place the
-    /// pool creates threads — every subsequent epoch reuses them.
+    /// Spawn `workers` dedicated threads. Beyond this constructor the
+    /// pool creates a thread only when quarantine replaces one (see
+    /// [`Self::respawn`]); every fault-free epoch reuses the originals.
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0, "pool needs at least one worker");
         let (done_tx, done_rx) = channel();
@@ -558,15 +832,19 @@ impl WorkerPool {
         }
         Self {
             senders,
+            done_tx,
             done_rx,
             handles,
             epochs_run: 0,
+            panics: vec![0; workers],
+            respawns: 0,
+            retries: 0,
             steal_cursor: AtomicUsize::new(0),
         }
     }
 
-    /// Number of live pool workers (constant for the pool's lifetime —
-    /// the pool never respawns).
+    /// Number of pool worker slots (constant for the pool's lifetime —
+    /// quarantine replaces a slot's thread but never changes the count).
     pub fn workers(&self) -> usize {
         self.senders.len()
     }
@@ -576,6 +854,29 @@ impl WorkerPool {
     /// sweep.
     pub fn epochs_run(&self) -> u64 {
         self.epochs_run
+    }
+
+    /// Worker threads replaced by quarantine (see [`QUARANTINE_PANICS`]).
+    /// Zero on a fault-free run.
+    pub fn respawns(&self) -> u64 {
+        self.respawns
+    }
+
+    /// Replace worker `w`'s thread with a fresh one on the same slot: a
+    /// new job channel and a new thread wired into the shared completion
+    /// channel. The old thread — and any kernel scratch the panics that
+    /// got it quarantined may have torn — sees its job channel close,
+    /// exits its receive loop, and is joined here (it is idle at this
+    /// point: quarantine runs strictly after the gather barrier).
+    fn respawn(&mut self, w: usize) {
+        let (tx, rx) = channel::<Job>();
+        let done = self.done_tx.clone();
+        let fresh = std::thread::spawn(move || worker_loop(rx, done));
+        self.senders[w] = tx; // drops the old sender; old thread exits
+        let old = std::mem::replace(&mut self.handles[w], fresh);
+        let _ = old.join();
+        self.panics[w] = 0;
+        self.respawns += 1;
     }
 }
 
@@ -639,14 +940,85 @@ impl Executor for WorkerPool {
         }
         // Gather barrier: exactly one completion per submitted job. After
         // this loop no worker holds any pointer from this epoch.
-        let mut panicked = false;
+        let mut job_panicked = false;
+        let mut failed: Vec<u32> = Vec::new();
         for _ in 0..submitted {
-            let (w, ok, busy) = self.done_rx.recv().expect("pool worker died");
-            tasks.worker_nanos[w] = busy;
-            panicked |= !ok;
+            let (w, outcome, busy) = self.done_rx.recv().expect("pool worker died");
+            tasks.worker_nanos[w] += busy;
+            match outcome {
+                Some(f) => {
+                    self.panics[w] += f.len() as u64;
+                    failed.extend_from_slice(&f);
+                }
+                None => job_panicked = true,
+            }
         }
-        assert!(!panicked, "a pool worker panicked during the epoch");
+        assert!(!job_panicked, "a pool worker panicked during the epoch");
+        // Retry rounds: contained-panic tasks were rolled back in place
+        // by their workers; re-dispatch them — sorted, because gather
+        // order is racy — as one static job to the healthiest worker
+        // (fewest contained panics, ties to the lowest slot: a
+        // deterministic choice, though results never depend on it — the
+        // retry derives the same (seed, sweep, partition) RNG streams,
+        // so a retried epoch is bit-identical to an undisturbed one).
+        let mut round = 1u32;
+        while !failed.is_empty() {
+            assert!(
+                round < MAX_TASK_ATTEMPTS,
+                "tasks {failed:?} panicked {MAX_TASK_ATTEMPTS} times; giving up"
+            );
+            failed.sort_unstable();
+            let target = (0..self.senders.len())
+                .min_by_key(|&w| (self.panics[w], w))
+                .expect("pool has workers");
+            self.retries += failed.len() as u64;
+            let job = Job {
+                blocks: blocks_ptr,
+                ids: tasks.ids.as_ptr(),
+                deltas: deltas_ptr,
+                nanos: nanos_ptr,
+                assign: failed.as_ptr(),
+                assign_len: failed.len(),
+                queue: std::ptr::null(),
+                n_tasks: n,
+                doc: spec.doc.base_ptr(),
+                doc_rows: spec.doc.rows(),
+                emit: spec.emit.base_ptr(),
+                emit_rows: spec.emit.rows(),
+                snapshot: spec.snapshot.as_ptr(),
+                h: spec.h,
+                seed: spec.seed,
+                sweep: spec.sweep,
+                kernel: spec.kernel,
+                worker: target,
+            };
+            self.senders[target].send(job).expect("pool worker died");
+            // `failed` must stay alive and unmodified until this recv
+            // returns: the worker reads `assign` through a raw pointer.
+            let (w, outcome, busy) = self.done_rx.recv().expect("pool worker died");
+            tasks.worker_nanos[w] += busy;
+            match outcome {
+                Some(f) => {
+                    self.panics[w] += f.len() as u64;
+                    failed = f;
+                }
+                None => panic!("a pool worker panicked during the epoch"),
+            }
+            round += 1;
+        }
+        // Quarantine: replace any worker whose contained panics crossed
+        // the threshold. Strictly after the barrier, so every worker is
+        // idle and the join inside respawn cannot block on epoch work.
+        for w in 0..self.senders.len() {
+            if self.panics[w] >= QUARANTINE_PANICS {
+                self.respawn(w);
+            }
+        }
         self.epochs_run += 1;
+    }
+
+    fn retries(&self) -> u64 {
+        self.retries
     }
 }
 
@@ -677,7 +1049,7 @@ impl EngineCache {
         Self {
             workers,
             seq: SequentialExec::default(),
-            thr: ThreadedExec,
+            thr: ThreadedExec::default(),
             pool: None,
         }
     }
@@ -729,13 +1101,14 @@ mod tests {
         (blocks, counts, Hyper::new(k, 0.5, 0.1, 4))
     }
 
-    fn run_kernel_assignment_stealing(
+    fn run_case(
         mode: ExecMode,
         kernel: KernelKind,
         epochs: usize,
         assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
         workers: usize,
         steal: bool,
+        seed: u64,
     ) -> (Vec<TokenBlock>, LdaCounts) {
         let k = 4;
         let (mut blocks, mut counts, h) = diagonal_fixture(k, 7);
@@ -752,7 +1125,7 @@ mod tests {
                 emit: SharedRows::new(&mut counts.word_topic, k),
                 snapshot: &snapshot,
                 h,
-                seed: 99,
+                seed,
                 sweep: e,
                 kernel,
             };
@@ -776,6 +1149,17 @@ mod tests {
         (blocks, counts)
     }
 
+    fn run_kernel_assignment_stealing(
+        mode: ExecMode,
+        kernel: KernelKind,
+        epochs: usize,
+        assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
+        workers: usize,
+        steal: bool,
+    ) -> (Vec<TokenBlock>, LdaCounts) {
+        run_case(mode, kernel, epochs, assign_of, workers, steal, 99)
+    }
+
     fn run_kernel_assignment(
         mode: ExecMode,
         kernel: KernelKind,
@@ -783,7 +1167,7 @@ mod tests {
         assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
         workers: usize,
     ) -> (Vec<TokenBlock>, LdaCounts) {
-        run_kernel_assignment_stealing(mode, kernel, epochs, assign_of, workers, false)
+        run_case(mode, kernel, epochs, assign_of, workers, false, 99)
     }
 
     fn run_assignment(
@@ -940,7 +1324,7 @@ mod tests {
     }
 
     #[test]
-    fn pool_counts_epochs_and_never_respawns() {
+    fn pool_counts_epochs_and_fault_free_runs_never_respawn() {
         let k = 4;
         let (mut blocks, mut counts, h) = diagonal_fixture(k, 11);
         let ids = [0u64, 1];
@@ -973,6 +1357,8 @@ mod tests {
         let pool = engines.pool().expect("pool materialized");
         assert_eq!(pool.workers(), 2);
         assert_eq!(pool.epochs_run(), 5);
+        assert_eq!(pool.respawns(), 0, "no faults, no respawns");
+        assert_eq!(pool.retries(), 0, "no faults, no retries");
     }
 
     #[test]
@@ -1087,5 +1473,127 @@ mod tests {
             nanos.iter().sum::<u64>(),
             "busy time conserves task time"
         );
+    }
+
+    /// Deterministic fault injection (see `crate::util::fault`). Fault
+    /// keys lead with the epoch seed, and these tests use distinctive
+    /// seeds, so the fault-free tests above (seeds 99, 23, …) can never
+    /// consume an armed fault even though they run concurrently.
+    #[cfg(feature = "failpoints")]
+    mod fault_injection {
+        use super::*;
+        use crate::util::fault::{install, Fault, FaultKind};
+
+        /// One injected worker panic per epoch, at a chosen partition:
+        /// every executor must contain it, roll the task back, retry it
+        /// on the same RNG stream, and land bit-identical to the
+        /// undisturbed Sequential oracle.
+        #[test]
+        fn injected_worker_panics_retry_bit_identically() {
+            const SEED: u64 = 0xFA17_0001;
+            let ident = |_: usize| identity_assign(2);
+            let (bs, cs) =
+                run_case(ExecMode::Sequential, KernelKind::Dense, 3, ident, 2, false, SEED);
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                let guard = install(vec![
+                    Fault { site: "task", key: [SEED, 0, 0], kind: FaultKind::Panic },
+                    Fault { site: "task", key: [SEED, 1, 1], kind: FaultKind::Panic },
+                    Fault { site: "task", key: [SEED, 2, 0], kind: FaultKind::Panic },
+                ]);
+                let (b, c) = run_case(mode, KernelKind::Dense, 3, ident, 2, false, SEED);
+                drop(guard);
+                for (x, y) in bs.iter().zip(b.iter()) {
+                    assert_eq!(x.z, y.z, "{mode:?}");
+                }
+                assert_eq!(cs.doc_topic, c.doc_topic, "{mode:?}");
+                assert_eq!(cs.word_topic, c.word_topic, "{mode:?}");
+                assert_eq!(cs.topic, c.topic, "{mode:?}");
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "giving up")]
+        fn a_task_that_always_panics_exhausts_its_budget() {
+            const SEED: u64 = 0xFA17_0002;
+            let fault = Fault { site: "task", key: [SEED, 0, 0], kind: FaultKind::Panic };
+            let _guard = install(vec![fault; MAX_TASK_ATTEMPTS as usize]);
+            let _ = run_case(
+                ExecMode::Sequential,
+                KernelKind::Dense,
+                1,
+                |_| identity_assign(2),
+                2,
+                false,
+                SEED,
+            );
+        }
+
+        fn run_pool_epochs(seed: u64, epochs: usize) -> (Vec<TokenBlock>, LdaCounts, WorkerPool) {
+            let k = 4;
+            let (mut blocks, mut counts, h) = diagonal_fixture(k, 11);
+            let ids = [0u64, 1];
+            let assign = identity_assign(2);
+            let mut pool = WorkerPool::new(2);
+            let mut deltas = vec![vec![0i64; k]; 2];
+            let mut nanos = vec![0u64; 2];
+            let mut worker_nanos = vec![0u64; 2];
+            let mut snapshot = counts.topic.clone();
+            for e in 0..epochs {
+                let spec = EpochSpec {
+                    doc: SharedRows::new(&mut counts.doc_topic, k),
+                    emit: SharedRows::new(&mut counts.word_topic, k),
+                    snapshot: &snapshot,
+                    h,
+                    seed,
+                    sweep: e,
+                    kernel: KernelKind::Dense,
+                };
+                let tasks = EpochTasks {
+                    blocks: &mut blocks,
+                    ids: &ids,
+                    assign: &assign,
+                    nanos: &mut nanos,
+                    worker_nanos: &mut worker_nanos,
+                    steal: false,
+                };
+                pool.run_epoch(&spec, tasks, &mut deltas);
+                let task_total: u64 = nanos.iter().sum();
+                let busy_total: u64 = worker_nanos.iter().sum();
+                assert_eq!(task_total, busy_total, "telemetry conserved under retry");
+                merge_deltas(&mut counts.topic, &mut snapshot, &deltas);
+            }
+            (blocks, counts, pool)
+        }
+
+        /// Worker 0's task panics on three consecutive sweeps: each panic
+        /// is contained, retried on the healthier worker, and counted;
+        /// after [`QUARANTINE_PANICS`] the offender's thread is replaced
+        /// in place. Results still match the fault-free run exactly.
+        #[test]
+        fn pool_quarantines_and_respawns_a_repeat_offender() {
+            const SEED: u64 = 0xFA17_0003;
+            let (ob, oc, opool) = run_pool_epochs(SEED, 4);
+            assert_eq!(opool.retries(), 0);
+            assert_eq!(opool.respawns(), 0);
+            let guard = install(vec![
+                Fault { site: "task", key: [SEED, 0, 0], kind: FaultKind::Panic },
+                Fault { site: "task", key: [SEED, 1, 0], kind: FaultKind::Panic },
+                Fault { site: "task", key: [SEED, 2, 0], kind: FaultKind::Panic },
+            ]);
+            let (b, c, pool) = run_pool_epochs(SEED, 4);
+            drop(guard);
+            assert_eq!(pool.retries(), 3, "one re-execution per injected panic");
+            assert_eq!(pool.respawns(), 1, "worker 0 crossed QUARANTINE_PANICS");
+            assert_eq!(pool.workers(), 2, "slot count never changes");
+            assert_eq!(pool.epochs_run(), 4);
+            for (x, y) in ob.iter().zip(b.iter()) {
+                assert_eq!(x.z, y.z);
+            }
+            assert_eq!(oc.doc_topic, c.doc_topic);
+            assert_eq!(oc.word_topic, c.word_topic);
+            assert_eq!(oc.topic, c.topic);
+            let refs: Vec<&TokenBlock> = b.iter().collect();
+            assert!(c.check_consistency(&refs).is_ok());
+        }
     }
 }

@@ -1,0 +1,175 @@
+//! Deterministic fault injection (failpoints).
+//!
+//! Compiled-in probes (`fire`) sit at the runtime's fault surfaces — task
+//! execution in the executors, block IO in the shard store — and are
+//! inert unless the `failpoints` cargo feature is enabled *and* a test
+//! has installed a [`Fault`] plan. A fault is addressed by a site name
+//! plus a 3-component key (site-specific coordinates, e.g.
+//! `(seed, sweep, partition)` for tasks) so a test can schedule "worker
+//! panic at sweep 2, partition 5" and nothing else; [`ANY`] wildcards a
+//! component. Each fault fires exactly once, in installation order, which
+//! is what lets retry paths be tested deterministically: the first
+//! attempt hits the fault, the retry finds it already consumed and
+//! succeeds.
+//!
+//! The registry is process-global (the worker pool's long-lived threads
+//! preclude thread-locals), so `install` also serializes: the returned
+//! [`FaultGuard`] holds a global lock for its lifetime, keeping
+//! concurrently running fault tests from consuming each other's plans.
+//! Sites key themselves with values that are unique per test anyway
+//! (RNG seeds, per-store path tokens), so fault-oblivious tests running
+//! in parallel with an armed plan cannot match it by accident.
+
+use std::path::Path;
+
+/// Wildcard key component: matches any value at its position.
+pub const ANY: u64 = u64::MAX;
+
+/// What an armed fault does when its site fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic at the probe — simulates a crashing worker task.
+    Panic,
+    /// Return a transient IO error — simulates a failed read/write.
+    IoError,
+    /// Write only part of the payload, then fail — simulates a torn
+    /// write (only meaningful at write probes).
+    TornWrite,
+}
+
+/// One scheduled fault: fires at `site` when the probe's key matches
+/// `key` component-wise (with [`ANY`] wildcards), then is consumed.
+#[derive(Clone, Copy, Debug)]
+pub struct Fault {
+    pub site: &'static str,
+    pub key: [u64; 3],
+    pub kind: FaultKind,
+}
+
+/// Stable token for a filesystem path (FNV-1a over its UTF-8 form) —
+/// lets store-scoped fault sites key themselves by *which* store is
+/// doing IO, so a fault aimed at one trainer's spill store can never be
+/// consumed by another store that happens to reuse a partition id.
+pub fn path_token(path: &Path) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in path.to_string_lossy().as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(feature = "failpoints")]
+mod registry {
+    use super::Fault;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, MutexGuard, PoisonError};
+
+    /// Fast path: probes check this before touching the plan lock.
+    pub(super) static ARMED: AtomicBool = AtomicBool::new(false);
+    pub(super) static PLAN: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+    /// Serializes fault tests (held by the guard, not just `install`).
+    static INSTALL: Mutex<()> = Mutex::new(());
+
+    /// Disarms and clears the plan when the installing test finishes;
+    /// holds the global install lock so fault tests run one at a time.
+    pub struct FaultGuard {
+        _serial: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            ARMED.store(false, Ordering::SeqCst);
+            PLAN.lock().unwrap_or_else(PoisonError::into_inner).clear();
+        }
+    }
+
+    /// Arm `faults`; the plan stays armed until the guard drops.
+    pub fn install(faults: Vec<Fault>) -> FaultGuard {
+        // A previous fault test that panicked (they do, by design)
+        // poisons these mutexes; the state itself is always coherent.
+        let serial = INSTALL.lock().unwrap_or_else(PoisonError::into_inner);
+        *PLAN.lock().unwrap_or_else(PoisonError::into_inner) = faults;
+        ARMED.store(true, Ordering::SeqCst);
+        FaultGuard { _serial: serial }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use registry::{install, FaultGuard};
+
+/// Probe: consume and return the first armed fault matching
+/// `(site, key)`, if any. Inert (always `None`) without the
+/// `failpoints` feature.
+#[cfg(feature = "failpoints")]
+pub fn fire(site: &str, key: [u64; 3]) -> Option<FaultKind> {
+    use std::sync::atomic::Ordering;
+    use std::sync::PoisonError;
+    if !registry::ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut plan = registry::PLAN.lock().unwrap_or_else(PoisonError::into_inner);
+    let hit = plan.iter().position(|f| {
+        f.site == site
+            && f.key.iter().zip(key.iter()).all(|(&p, &k)| p == ANY || p == k)
+    })?;
+    Some(plan.remove(hit).kind)
+}
+
+/// Probe stub: the default build carries no registry and no branches.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn fire(_site: &str, _key: [u64; 3]) -> Option<FaultKind> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_token_distinguishes_paths() {
+        let a = path_token(Path::new("/tmp/store-a"));
+        let b = path_token(Path::new("/tmp/store-b"));
+        assert_ne!(a, b);
+        assert_eq!(a, path_token(Path::new("/tmp/store-a")));
+    }
+
+    #[cfg(not(feature = "failpoints"))]
+    #[test]
+    fn stub_probe_never_fires() {
+        assert_eq!(fire("task", [1, 2, 3]), None);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn faults_match_consume_and_disarm() {
+        {
+            let _g = install(vec![
+                Fault { site: "task", key: [7, 2, ANY], kind: FaultKind::Panic },
+                Fault { site: "shard.read", key: [ANY, 5, 0], kind: FaultKind::IoError },
+            ]);
+            // Wrong site / wrong key: no fire, plan intact.
+            assert_eq!(fire("task", [7, 3, 0]), None);
+            assert_eq!(fire("shard.read", [9, 6, 0]), None);
+            // Wildcard match fires once, then is consumed.
+            assert_eq!(fire("task", [7, 2, 99]), Some(FaultKind::Panic));
+            assert_eq!(fire("task", [7, 2, 99]), None);
+            assert_eq!(fire("shard.read", [123, 5, 0]), Some(FaultKind::IoError));
+        }
+        // Guard dropped: disarmed even for keys that would have matched.
+        assert_eq!(fire("task", [7, 2, 0]), None);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn duplicate_faults_fire_in_installation_order() {
+        let _g = install(vec![
+            Fault { site: "x", key: [ANY; 3], kind: FaultKind::IoError },
+            Fault { site: "x", key: [ANY; 3], kind: FaultKind::TornWrite },
+        ]);
+        assert_eq!(fire("x", [0, 0, 0]), Some(FaultKind::IoError));
+        assert_eq!(fire("x", [0, 0, 0]), Some(FaultKind::TornWrite));
+        assert_eq!(fire("x", [0, 0, 0]), None);
+    }
+}

@@ -7,7 +7,9 @@
 
 pub mod alias;
 pub mod cli;
+pub mod crc;
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -276,6 +276,94 @@ fn train_bot_spill_residency_via_cli() {
 }
 
 #[test]
+fn train_checkpoint_resume_via_cli() {
+    // Interrupt-and-resume at the CLI surface: 4 of 6 iterations with
+    // --checkpoint-every 2, then --resume from the checkpoint root,
+    // matches the uninterrupted run's final perplexity exactly.
+    let root = std::env::temp_dir().join(format!("pplda-cli-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let root_s = root.to_str().unwrap().to_string();
+    let base = [
+        "train", "--profile", "tiny", "--procs", "3", "--topics", "4",
+        "--eval-every", "6", "--restarts", "2",
+    ];
+    let mut oracle_args: Vec<&str> = base.to_vec();
+    oracle_args.extend_from_slice(&["--iters", "6"]);
+    let (oracle, _, ok) = pplda(&oracle_args);
+    assert!(ok, "{oracle}");
+
+    let mut partial_args: Vec<&str> = base.to_vec();
+    partial_args.extend_from_slice(&[
+        "--iters", "4", "--checkpoint-every", "2", "--checkpoint-dir", &root_s,
+    ]);
+    let (partial, _, ok) = pplda(&partial_args);
+    assert!(ok, "{partial}");
+    assert!(root.join("ckpt-2").is_dir(), "periodic checkpoint at sweep 2");
+    assert!(root.join("ckpt-4").is_dir(), "periodic checkpoint at sweep 4");
+
+    let mut resume_args: Vec<&str> = base.to_vec();
+    resume_args.extend_from_slice(&["--iters", "6", "--resume", &root_s]);
+    let (resumed, _, ok) = pplda(&resume_args);
+    assert!(ok, "{resumed}");
+    // Compare only the perplexity field — wall seconds differ per run.
+    let perplexity_of = |out: &str| {
+        out.lines()
+            .find(|l| l.contains("final perplexity"))
+            .and_then(|l| l.split('|').next())
+            .map(|s| s.trim().to_string())
+            .unwrap()
+    };
+    assert_eq!(perplexity_of(&resumed), perplexity_of(&oracle));
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn train_bot_checkpoint_resume_via_cli() {
+    let root = std::env::temp_dir().join(format!("pplda-cli-bot-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let root_s = root.to_str().unwrap().to_string();
+    let base = [
+        "train-bot", "--profile", "tiny", "--procs", "2", "--topics", "4",
+        "--restarts", "2",
+    ];
+    let mut oracle_args: Vec<&str> = base.to_vec();
+    oracle_args.extend_from_slice(&["--iters", "4"]);
+    let (oracle, _, ok) = pplda(&oracle_args);
+    assert!(ok, "{oracle}");
+
+    let mut partial_args: Vec<&str> = base.to_vec();
+    partial_args.extend_from_slice(&[
+        "--iters", "2", "--checkpoint-every", "2", "--checkpoint-dir", &root_s,
+    ]);
+    let (partial, _, ok) = pplda(&partial_args);
+    assert!(ok, "{partial}");
+    assert!(root.join("ckpt-2").is_dir(), "{partial}");
+
+    let mut resume_args: Vec<&str> = base.to_vec();
+    resume_args.extend_from_slice(&["--iters", "4", "--resume", &root_s]);
+    let (resumed, _, ok) = pplda(&resume_args);
+    assert!(ok, "{resumed}");
+    let perplexity_of = |out: &str| {
+        out.split_whitespace()
+            .find(|t| t.starts_with("perplexity="))
+            .map(String::from)
+            .unwrap()
+    };
+    assert_eq!(perplexity_of(&resumed), perplexity_of(&oracle));
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn checkpoint_every_without_dir_fails() {
+    let (_, err, ok) = pplda(&[
+        "train", "--profile", "tiny", "--topics", "4", "--iters", "2",
+        "--checkpoint-every", "2",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("requires --checkpoint-dir"), "{err}");
+}
+
+#[test]
 fn unknown_residency_fails() {
     let (_, err, ok) = pplda(&[
         "train", "--profile", "tiny", "--topics", "4", "--iters", "1",

@@ -1,7 +1,9 @@
 //! Cross-module integration: training pipelines (serial, parallel LDA,
 //! BoT) — determinism, convergence, and the Table-IV equivalence claim.
 
-use pplda::coordinator::{train_bot, train_lda, TrainConfig};
+use pplda::coordinator::{
+    train_bot, train_bot_checkpointed, train_lda, train_lda_checkpointed, TrainConfig,
+};
 use pplda::corpus::shard::Residency;
 use pplda::corpus::synthetic::{generate, generate_timestamped, Profile, TimeProfile};
 use pplda::gibbs::serial::SerialLda;
@@ -320,6 +322,67 @@ fn spill_bot_through_driver_is_bit_identical() {
     // Spill-mode phase breakdown surfaces the write-back bucket.
     let names: Vec<&str> = spilled.phases.iter().map(|(n, _)| n.as_str()).collect();
     assert!(names.contains(&"spill_write"), "{names:?}");
+}
+
+#[test]
+fn checkpoint_interrupt_resume_reproduces_uninterrupted_run() {
+    // The fault-tolerance acceptance claim end to end: a `--checkpoint-
+    // every 2` run interrupted after 4 of 6 sweeps and resumed from its
+    // latest checkpoint reproduces the uninterrupted run bit for bit —
+    // even when the resumed leg runs on a different executor.
+    let bow = generate(&small_profile(), 116);
+    let plan = partition(&bow, 4, Algorithm::A3 { restarts: 3 }, 14);
+    let mut cfg = TrainConfig::quick(8, 6);
+    cfg.eval_every = 3;
+    let oracle = train_lda(&bow, &plan, &cfg);
+    assert_eq!(oracle.task_retries, 0);
+    assert_eq!(oracle.io_retries, 0);
+
+    let root = std::env::temp_dir().join(format!("pplda-it-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    cfg.iters = 4;
+    cfg.checkpoint_every = 2;
+    train_lda_checkpointed(&bow, &plan, &cfg, Some(&root), None);
+    assert!(root.join("ckpt-2").is_dir() && root.join("ckpt-4").is_dir());
+
+    cfg.iters = 6;
+    cfg.checkpoint_every = 0;
+    cfg.mode = ExecMode::Pooled;
+    let resumed = train_lda_checkpointed(&bow, &plan, &cfg, None, Some(&root));
+    assert_eq!(resumed.final_perplexity, oracle.final_perplexity);
+    assert_eq!(resumed.curve.last(), oracle.curve.last());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn checkpoint_interrupt_resume_reproduces_uninterrupted_bot_run() {
+    let mut profile = Profile::tiny();
+    profile.time = Some(TimeProfile {
+        first_year: 2000,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 4,
+    });
+    let tc = generate_timestamped(&profile, 117);
+    let algo = Algorithm::A3 { restarts: 3 };
+    let mut cfg = TrainConfig::quick(8, 6);
+    let oracle = train_bot(&tc, 4, algo, &cfg);
+    assert_eq!(oracle.task_retries, 0);
+    assert_eq!(oracle.io_retries, 0);
+
+    let root = std::env::temp_dir().join(format!("pplda-it-bot-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    cfg.iters = 4;
+    cfg.checkpoint_every = 2;
+    train_bot_checkpointed(&tc, 4, algo, &cfg, Some(&root), None);
+    assert!(root.join("ckpt-4").is_dir());
+
+    cfg.iters = 6;
+    cfg.checkpoint_every = 0;
+    cfg.mode = ExecMode::Pooled;
+    let resumed = train_bot_checkpointed(&tc, 4, algo, &cfg, None, Some(&root));
+    assert_eq!(resumed.final_perplexity, oracle.final_perplexity);
+    std::fs::remove_dir_all(&root).unwrap();
 }
 
 #[test]
