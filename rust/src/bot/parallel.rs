@@ -17,8 +17,10 @@ use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
-use crate::scheduler::exec::{build_blocks, ExecMode, SweepStats};
-use crate::scheduler::pool::{merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool};
+use crate::scheduler::exec::{build_blocks, CommitMode, ExecMode, SweepStats};
+use crate::scheduler::pool::{
+    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool,
+};
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
 use crate::util::error::Result;
@@ -142,6 +144,9 @@ pub struct ParallelBot {
     /// Load-balancing strategy shared by both phases (see
     /// [`crate::scheduler::adaptive`]); result-invariant.
     balance: BalanceMode,
+    /// Delta-commit protocol shared by both phases (see
+    /// [`crate::scheduler::exec::CommitMode`]); result-invariant.
+    commit: CommitMode,
     /// The residency policy as configured (each phase holds half the
     /// spill budget; this keeps the caller's original value).
     residency: Residency,
@@ -257,6 +262,7 @@ impl ParallelBot {
             stamp,
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
+            commit: CommitMode::default(),
             residency,
             seed,
             sweeps_done: 0,
@@ -338,6 +344,7 @@ impl ParallelBot {
             stamp,
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
+            commit: CommitMode::default(),
             residency,
             seed,
             sweeps_done,
@@ -438,6 +445,19 @@ impl ParallelBot {
         self.balance
     }
 
+    /// Select the delta-commit protocol for both phases of subsequent
+    /// sweeps (see [`CommitMode`]). Result-invariant: `Ticketed` folds
+    /// each task's delta in ticket order against the same epoch-start
+    /// snapshots the barrier protocol uses.
+    pub fn set_commit(&mut self, commit: CommitMode) {
+        self.commit = commit;
+    }
+
+    /// The commit protocol governing this trainer's sweeps.
+    pub fn commit(&self) -> CommitMode {
+        self.commit
+    }
+
     /// The (DW, DTS) schedules executing this trainer's sweeps.
     pub fn schedules(&self) -> (&Schedule, &Schedule) {
         (&self.word.schedule, &self.stamp.schedule)
@@ -450,10 +470,8 @@ impl ParallelBot {
     /// (sharing one persistent pool in `Pooled` mode), with their
     /// phase-total snapshots double-buffered instead of cloned per epoch.
     pub fn sweep(&mut self, mode: ExecMode) -> (SweepStats, SweepStats) {
-        let p = self.p;
-        let k = self.h.k;
         let sweep_no = self.sweeps_done;
-        let steal = self.balance == BalanceMode::Steal;
+        let steal = self.balance.is_steal();
         let mut wstats = SweepStats {
             workers: self.word.schedule.workers,
             ..SweepStats::default()
@@ -466,10 +484,9 @@ impl ParallelBot {
         // complete (see `ShardedBlocks::set_stamp`).
         self.word.shards.set_stamp(sweep_no as u64 + 1);
         self.stamp.shards.set_stamp(sweep_no as u64 + 1);
-        // Fault-tolerance telemetry: task retries are attributed to the
-        // phase whose epoch absorbed them (the engines are shared, so the
-        // counter is sliced per epoch); IO retries per phase store.
-        let mut task_retries_prev = self.engines.get(mode).retries();
+        // Fault-tolerance telemetry: IO retries are attributed per phase
+        // store here; task retries are sliced per epoch inside the epoch
+        // loops (the engines are shared by the phases).
         let word_io0 = self.word.shards.io_retries();
         let stamp_io0 = self.stamp.shards.io_retries();
 
@@ -479,6 +496,73 @@ impl ParallelBot {
             .copy_from_slice(&self.counts.topic_stamps);
         wstats.update_secs += update_started.elapsed().as_secs_f64();
 
+        if self.commit == CommitMode::Ticketed {
+            self.ticketed_epochs(mode, &mut wstats, &mut sstats, sweep_no, steal);
+        } else {
+            self.barrier_epochs(mode, &mut wstats, &mut sstats, sweep_no, steal);
+        }
+        self.sweeps_done += 1;
+        wstats.io_retries = self.word.shards.io_retries() - word_io0;
+        sstats.io_retries = self.stamp.shards.io_retries() - stamp_io0;
+        // Each phase folds its own telemetry every sweep (so a later
+        // switch to `Adaptive` repacks from warm measurements) and,
+        // under `Adaptive`, repacks its own schedule — the DW and DTS
+        // grids balance independently.
+        let update_started = Instant::now();
+        self.word.estimator.observe_sweep(&self.word.costs, &wstats.task_nanos);
+        self.stamp.estimator.observe_sweep(&self.stamp.costs, &sstats.task_nanos);
+        if !steal {
+            // Per-worker speed telemetry (measured vs predicted busy
+            // time) for heterogeneity-aware re-packing (meaningless
+            // under stealing — assignments are hints there); each phase
+            // learns against its own schedule.
+            for (phase, stats) in [(&mut self.word, &wstats), (&mut self.stamp, &sstats)] {
+                let predicted = phase
+                    .estimator
+                    .predicted_worker_loads(&phase.schedule, &phase.costs);
+                phase.estimator.observe_workers(&predicted, &stats.worker_nanos);
+            }
+        }
+        if self.balance == BalanceMode::Adaptive {
+            self.word.estimator.repack(&mut self.word.schedule, &self.word.costs);
+            self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
+        }
+        let dt = update_started.elapsed().as_secs_f64() / 2.0;
+        wstats.update_secs += dt;
+        sstats.update_secs += dt;
+        // Debug builds audit the full two-matrix invariant per sweep so
+        // kernel count-delta bugs fail at the offending sweep (see the
+        // matching check in `scheduler::exec::ParallelLda::sweep`). The
+        // audit needs every block in RAM, so spill-mode sweeps skip it
+        // (the spill ≡ in-core matrix tests cover that path).
+        #[cfg(debug_assertions)]
+        if self.word.shards.fully_resident() && self.stamp.shards.fully_resident() {
+            let words = self.word.shards.resident_blocks();
+            let stamps = self.stamp.shards.resident_blocks();
+            if let Err(e) = self.counts.check_consistency(&words, &stamps) {
+                panic!(
+                    "kernel {} corrupted BoT counts on sweep {sweep_no}: {e}",
+                    self.kernel.name()
+                );
+            }
+        }
+        (wstats, sstats)
+    }
+
+    /// The classic scatter → sample → gather loop: each phase-epoch ends
+    /// with a full [`merge_deltas`] barrier (fold every delta, republish
+    /// the phase snapshot) before anything else proceeds.
+    fn barrier_epochs(
+        &mut self,
+        mode: ExecMode,
+        wstats: &mut SweepStats,
+        sstats: &mut SweepStats,
+        sweep_no: usize,
+        steal: bool,
+    ) {
+        let p = self.p;
+        let k = self.h.k;
+        let mut task_retries_prev = self.engines.get(mode).retries();
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
             {
@@ -601,52 +685,202 @@ impl ParallelBot {
                     .expect("out-of-core: writing a DTS diagonal back failed");
             }
         }
-        self.sweeps_done += 1;
-        wstats.io_retries = self.word.shards.io_retries() - word_io0;
-        sstats.io_retries = self.stamp.shards.io_retries() - stamp_io0;
-        // Each phase folds its own telemetry every sweep (so a later
-        // switch to `Adaptive` repacks from warm measurements) and,
-        // under `Adaptive`, repacks its own schedule — the DW and DTS
-        // grids balance independently.
-        let update_started = Instant::now();
-        self.word.estimator.observe_sweep(&self.word.costs, &wstats.task_nanos);
-        self.stamp.estimator.observe_sweep(&self.stamp.costs, &sstats.task_nanos);
-        if !steal {
-            // Per-worker speed telemetry (measured vs predicted busy
-            // time) for heterogeneity-aware re-packing (meaningless
-            // under stealing — assignments are hints there); each phase
-            // learns against its own schedule.
-            for (phase, stats) in [(&mut self.word, &wstats), (&mut self.stamp, &sstats)] {
-                let predicted = phase
-                    .estimator
-                    .predicted_worker_loads(&phase.schedule, &phase.costs);
-                phase.estimator.observe_workers(&predicted, &stats.worker_nanos);
-            }
-        }
-        if self.balance == BalanceMode::Adaptive {
-            self.word.estimator.repack(&mut self.word.schedule, &self.word.costs);
-            self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
-        }
-        let dt = update_started.elapsed().as_secs_f64() / 2.0;
-        wstats.update_secs += dt;
-        sstats.update_secs += dt;
-        // Debug builds audit the full two-matrix invariant per sweep so
-        // kernel count-delta bugs fail at the offending sweep (see the
-        // matching check in `scheduler::exec::ParallelLda::sweep`). The
-        // audit needs every block in RAM, so spill-mode sweeps skip it
-        // (the spill ≡ in-core matrix tests cover that path).
-        #[cfg(debug_assertions)]
-        if self.word.shards.fully_resident() && self.stamp.shards.fully_resident() {
-            let words = self.word.shards.resident_blocks();
-            let stamps = self.stamp.shards.resident_blocks();
-            if let Err(e) = self.counts.check_consistency(&words, &stamps) {
-                panic!(
-                    "kernel {} corrupted BoT counts on sweep {sweep_no}: {e}",
-                    self.kernel.name()
+    }
+
+    /// The ticketed pipeline (see `docs/executor.md`, § "Ticketed
+    /// commit"): tasks carry monotonically increasing tickets and a
+    /// committer folds each delta into the phase totals in strict ticket
+    /// order while later tickets are still sampling. Each phase-epoch's
+    /// overlap hook drives the *other* phase's shard IO — writing its
+    /// finished diagonal back and prefetching its next one — so the
+    /// word l → stamp l → word l+1 chain hides spill traffic behind
+    /// sampling instead of serializing it at the barrier. The phase
+    /// snapshot is republished only after an epoch drains (an O(K) copy,
+    /// the residual "barrier" bucket); workers always sample against the
+    /// same epoch-start snapshot the barrier protocol uses, so results
+    /// are bit-identical.
+    fn ticketed_epochs(
+        &mut self,
+        mode: ExecMode,
+        wstats: &mut SweepStats,
+        sstats: &mut SweepStats,
+        sweep_no: usize,
+        steal: bool,
+    ) {
+        let p = self.p;
+        let k = self.h.k;
+        let mut task_retries_prev = self.engines.get(mode).retries();
+        for l in 0..p {
+            // ---- word phase on DW diagonal l ----
+            {
+                wstats.io_load_secs += self
+                    .word
+                    .shards
+                    .acquire(l)
+                    .expect("out-of-core: loading a DW diagonal failed");
+                let started = Instant::now();
+                let (diag, ids) = self.word.shards.diag_parts(l);
+                let ep = &self.word.schedule.epochs[l];
+                wstats
+                    .epoch_max_tokens
+                    .push(ep.max_assigned(|i| diag[i].len() as u64));
+                wstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+                let n = diag.len();
+                let spec = EpochSpec {
+                    doc: SharedRows::new(&mut self.counts.doc_topic, k),
+                    emit: SharedRows::new(&mut self.counts.word_topic, k),
+                    snapshot: &self.word_snapshot,
+                    h: self.h.word_hyper(),
+                    seed: self.seed ^ BOT_WORD_SALT,
+                    sweep: sweep_no,
+                    kernel: self.kernel,
+                };
+                let tasks = EpochTasks {
+                    blocks: diag,
+                    ids,
+                    assign: &ep.assign,
+                    nanos: &mut self.task_nanos[..n],
+                    worker_nanos: &mut self.worker_nanos,
+                    steal,
+                };
+                let stamp_shards = &mut self.stamp.shards;
+                let mut stamp_io_write = 0.0f64;
+                // Once the word tasks are dispatched this epoch's IO
+                // slot belongs to the *timestamp* store: write its
+                // previous diagonal back (release-before-prefetch keeps
+                // the DTS budget seeing at most two diagonals), then
+                // pull in diagonal l for the timestamp epoch below.
+                let mut overlap = || {
+                    if l > 0 {
+                        stamp_io_write += stamp_shards
+                            .release(l - 1)
+                            .expect("out-of-core: writing a DTS diagonal back failed");
+                    }
+                    stamp_shards.prefetch(l);
+                };
+                let topic_words = &mut self.counts.topic_words;
+                let mut runahead = 0.0f64;
+                let mut blocking = 0.0f64;
+                let mut commit = |_t: usize, delta: &[i64], in_flight: usize| {
+                    let fold_started = Instant::now();
+                    commit_delta(topic_words, delta);
+                    let secs = fold_started.elapsed().as_secs_f64();
+                    if in_flight > 0 {
+                        runahead += secs;
+                    } else {
+                        blocking += secs;
+                    }
+                };
+                self.engines.get(mode).run_epoch_ticketed(
+                    &spec,
+                    tasks,
+                    &mut self.deltas[..n],
+                    &mut overlap,
+                    &mut commit,
                 );
+                wstats.sample_secs += started.elapsed().as_secs_f64();
+                sstats.io_write_secs += stamp_io_write;
+                wstats.runahead_secs += runahead;
+                wstats.commit_secs += blocking;
+                let r = self.engines.get(mode).retries();
+                wstats.task_retries += r - task_retries_prev;
+                task_retries_prev = r;
+                wstats.task_nanos.push(self.task_nanos[..n].to_vec());
+                wstats.worker_nanos.push(self.worker_nanos.clone());
+                let barrier_started = Instant::now();
+                self.word_snapshot.copy_from_slice(&self.counts.topic_words);
+                wstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+                wstats.epoch_secs.push(started.elapsed().as_secs_f64());
+            }
+
+            // ---- timestamp phase on DTS diagonal l ----
+            {
+                sstats.io_load_secs += self
+                    .stamp
+                    .shards
+                    .acquire(l)
+                    .expect("out-of-core: loading a DTS diagonal failed");
+                let started = Instant::now();
+                let (diag, ids) = self.stamp.shards.diag_parts(l);
+                let ep = &self.stamp.schedule.epochs[l];
+                sstats
+                    .epoch_max_tokens
+                    .push(ep.max_assigned(|i| diag[i].len() as u64));
+                sstats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+                let n = diag.len();
+                let spec = EpochSpec {
+                    doc: SharedRows::new(&mut self.counts.doc_topic, k),
+                    emit: SharedRows::new(&mut self.counts.stamp_topic, k),
+                    snapshot: &self.stamp_snapshot,
+                    h: self.h.stamp_hyper(),
+                    seed: self.seed ^ BOT_STAMP_SALT,
+                    sweep: sweep_no,
+                    kernel: self.kernel,
+                };
+                let tasks = EpochTasks {
+                    blocks: diag,
+                    ids,
+                    assign: &ep.assign,
+                    nanos: &mut self.task_nanos[..n],
+                    worker_nanos: &mut self.worker_nanos,
+                    steal,
+                };
+                let word_shards = &mut self.word.shards;
+                let mut word_io_write = 0.0f64;
+                // The word epoch for this diagonal has fully committed,
+                // so its blocks are written back while the timestamp
+                // tasks sample; the write-back precedes the prefetch so
+                // even P = 1 reads fresh state for the next sweep
+                // (matching the barrier path's release/prefetch order).
+                let mut overlap = || {
+                    word_io_write += word_shards
+                        .release(l)
+                        .expect("out-of-core: writing a DW diagonal back failed");
+                    word_shards.prefetch((l + 1) % p);
+                };
+                let topic_stamps = &mut self.counts.topic_stamps;
+                let mut runahead = 0.0f64;
+                let mut blocking = 0.0f64;
+                let mut commit = |_t: usize, delta: &[i64], in_flight: usize| {
+                    let fold_started = Instant::now();
+                    commit_delta(topic_stamps, delta);
+                    let secs = fold_started.elapsed().as_secs_f64();
+                    if in_flight > 0 {
+                        runahead += secs;
+                    } else {
+                        blocking += secs;
+                    }
+                };
+                self.engines.get(mode).run_epoch_ticketed(
+                    &spec,
+                    tasks,
+                    &mut self.deltas[..n],
+                    &mut overlap,
+                    &mut commit,
+                );
+                sstats.sample_secs += started.elapsed().as_secs_f64();
+                wstats.io_write_secs += word_io_write;
+                sstats.runahead_secs += runahead;
+                sstats.commit_secs += blocking;
+                let r = self.engines.get(mode).retries();
+                sstats.task_retries += r - task_retries_prev;
+                task_retries_prev = r;
+                sstats.task_nanos.push(self.task_nanos[..n].to_vec());
+                sstats.worker_nanos.push(self.worker_nanos.clone());
+                let barrier_started = Instant::now();
+                self.stamp_snapshot
+                    .copy_from_slice(&self.counts.topic_stamps);
+                sstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+                sstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
         }
-        (wstats, sstats)
+        // The final timestamp diagonal has no following word epoch whose
+        // overlap would write it back; settle it here (in-core: no-op).
+        sstats.io_write_secs += self
+            .stamp
+            .shards
+            .release(p - 1)
+            .expect("out-of-core: writing a DTS diagonal back failed");
     }
 
     /// The persistent worker pool, if any `Pooled`-mode sweep has run on
@@ -957,6 +1191,148 @@ mod tests {
                     ParallelBot::init_scheduled(&tc, &plan_dw, &plan_dts, h, seed, kind, w);
                 bot.set_kernel(kernel);
                 bot.set_balance(BalanceMode::Steal);
+                bot.sweep(mode);
+                assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{kernel:?} {mode:?}");
+                assert_eq!(
+                    bot.counts.word_topic,
+                    oracle.counts.word_topic,
+                    "{kernel:?} {mode:?}"
+                );
+                assert_eq!(
+                    bot.counts.stamp_topic,
+                    oracle.counts.stamp_topic,
+                    "{kernel:?} {mode:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn ticketed_bot_is_bit_identical_across_kernels_modes_and_workers() {
+        // The ticketed-commit acceptance for BoT: both phases pipeline
+        // their in-order commits, and every kernel × mode × W matches
+        // the barrier Sequential oracle bit for bit.
+        for kernel in KernelKind::all() {
+            let (_tc, mut oracle) = setup(4, 141);
+            oracle.set_kernel(kernel);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                for mode in [ExecMode::Sequential, ExecMode::Pooled] {
+                    let (_t, mut bot) = setup_scheduled(4, 141, kind, workers);
+                    bot.set_kernel(kernel);
+                    bot.set_commit(CommitMode::Ticketed);
+                    assert_eq!(bot.commit(), CommitMode::Ticketed);
+                    for _ in 0..2 {
+                        bot.sweep(mode);
+                    }
+                    let tag = format!("{kernel:?} {mode:?} W={workers}");
+                    assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                    assert_eq!(bot.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                    assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "{tag}");
+                    assert_eq!(bot.counts.topic_words, oracle.counts.topic_words, "{tag}");
+                    assert_eq!(bot.counts.topic_stamps, oracle.counts.topic_stamps, "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ticketed_bot_spill_steal_and_adaptive_match_barrier() {
+        // Ticketed commit composes with spilling, stealing, and
+        // adaptive re-packing in both phases: the overlap hooks carry
+        // the cross-phase IO chain and results stay bit-identical.
+        let spill = Residency::Spill { budget_bytes: 0 };
+        let (_tc, mut oracle) = setup(4, 142);
+        for _ in 0..2 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        for (balance, residency) in [
+            (BalanceMode::Static, spill),
+            (BalanceMode::Steal, Residency::InCore),
+            (BalanceMode::Steal, spill),
+            (BalanceMode::Adaptive, Residency::InCore),
+        ] {
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let kind = ScheduleKind::Packed { grid_factor: 2 };
+                let (_t, mut bot) = setup_resident(4, 142, kind, 2, residency);
+                bot.set_commit(CommitMode::Ticketed);
+                bot.set_balance(balance);
+                for _ in 0..2 {
+                    bot.sweep(mode);
+                }
+                let tag = format!("{balance:?} {residency:?} {mode:?}");
+                assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                assert_eq!(bot.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "{tag}");
+                assert_eq!(bot.counts.topic_words, oracle.counts.topic_words, "{tag}");
+                assert_eq!(bot.counts.topic_stamps, oracle.counts.topic_stamps, "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn ticketed_bot_switches_modes_and_fills_commit_buckets() {
+        let (_tc, mut oracle) = setup(4, 143);
+        for _ in 0..3 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let (_t, mut bot) = setup_scheduled(4, 143, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (wb, sb) = bot.sweep(ExecMode::Pooled);
+        for stats in [&wb, &sb] {
+            assert_eq!(stats.runahead_secs, 0.0, "barrier meters no early folds");
+            assert_eq!(stats.commit_secs, 0.0);
+        }
+        bot.set_commit(CommitMode::Ticketed);
+        let (wt, st) = bot.sweep(ExecMode::Pooled);
+        for stats in [&wt, &st] {
+            assert!(
+                stats.runahead_secs + stats.commit_secs > 0.0,
+                "ticketed folds are metered"
+            );
+            assert_eq!(stats.epoch_secs.len(), 4);
+        }
+        bot.set_commit(CommitMode::Barrier);
+        bot.sweep(ExecMode::Pooled);
+        assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic);
+        assert_eq!(bot.counts.word_topic, oracle.counts.word_topic);
+        assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic);
+    }
+
+    #[test]
+    fn ticketed_bot_matches_barrier_on_random_schedules() {
+        // Property form of the ticketed acceptance: random (g, W) and
+        // kernel, ticketed Threaded/Pooled vs the barrier Sequential
+        // oracle over both phases.
+        crate::testing::prop::check("bot-ticketed-bit-identical", 0xB07_71C4, 4, |rng| {
+            let w = [1usize, 2, 4][rng.gen_range(3)];
+            let g = 1 + rng.gen_range(2);
+            let p = g * w;
+            let seed = rng.next_u64() | 1;
+            let tc = tiny_tc(seed);
+            let plan_dw = partition(&tc.bow, p, Algorithm::A3 { restarts: 1 }, seed);
+            let plan_dts = partition(&tc.dts, p, Algorithm::A3 { restarts: 1 }, seed + 1);
+            let h = super::super::serial::BotHyper::new(
+                4,
+                0.5,
+                0.1,
+                0.1,
+                tc.bow.num_words(),
+                tc.num_stamps,
+            );
+            let kernel = KernelKind::all()[rng.gen_range(3)];
+            let kind = ScheduleKind::Packed { grid_factor: g };
+            let mut oracle =
+                ParallelBot::init_scheduled(&tc, &plan_dw, &plan_dts, h, seed, kind, w);
+            oracle.set_kernel(kernel);
+            oracle.sweep(ExecMode::Sequential);
+            for mode in [ExecMode::Threaded, ExecMode::Pooled] {
+                let mut bot =
+                    ParallelBot::init_scheduled(&tc, &plan_dw, &plan_dts, h, seed, kind, w);
+                bot.set_kernel(kernel);
+                bot.set_commit(CommitMode::Ticketed);
                 bot.sweep(mode);
                 assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{kernel:?} {mode:?}");
                 assert_eq!(
@@ -1331,6 +1707,55 @@ mod tests {
                             );
                         }
                     }
+                }
+            }
+        }
+
+        #[test]
+        fn ticketed_bot_commit_faults_roll_back_and_match_oracle() {
+            // The `commit` failpoint fires after a task has fully
+            // sampled, so the rollback must undo a *completed* task
+            // exactly in whichever phase it hit; the ticketed retry then
+            // recommits bit-identically in ticket order.
+            const SEED: u64 = 0xFA17_0051;
+            let spill = Residency::Spill { budget_bytes: 0 };
+            let (_tc, mut oracle) = setup(4, SEED);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                for residency in [Residency::InCore, spill] {
+                    let (_t, mut bot) =
+                        setup_resident(4, SEED, ScheduleKind::Diagonal, 4, residency);
+                    bot.set_commit(CommitMode::Ticketed);
+                    let guard = install(vec![
+                        Fault {
+                            site: "commit",
+                            key: [SEED ^ BOT_WORD_SALT, 0, ANY],
+                            kind: FaultKind::Panic,
+                        },
+                        Fault {
+                            site: "commit",
+                            key: [SEED ^ BOT_STAMP_SALT, 1, ANY],
+                            kind: FaultKind::Panic,
+                        },
+                    ]);
+                    let mut word_retries = 0u64;
+                    let mut stamp_retries = 0u64;
+                    for _ in 0..2 {
+                        let (ws, ss) = bot.sweep(mode);
+                        word_retries += ws.task_retries;
+                        stamp_retries += ss.task_retries;
+                    }
+                    drop(guard);
+                    let tag = format!("{mode:?} {residency:?}");
+                    assert_eq!(word_retries, 1, "{tag}: one DW-phase commit fault");
+                    assert_eq!(stamp_retries, 1, "{tag}: one DTS-phase commit fault");
+                    assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                    assert_eq!(bot.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                    assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "{tag}");
+                    assert_eq!(bot.counts.topic_words, oracle.counts.topic_words, "{tag}");
+                    assert_eq!(bot.counts.topic_stamps, oracle.counts.topic_stamps, "{tag}");
                 }
             }
         }

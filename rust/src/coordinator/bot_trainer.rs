@@ -26,6 +26,8 @@ pub struct BotTrainReport {
     pub kernel: String,
     /// Balance-mode label ("static" for the serial reference).
     pub balance: String,
+    /// Commit-protocol label ("barrier" for the serial reference).
+    pub commit: String,
     /// Residency label ("in-core" for the serial reference).
     pub residency: String,
     pub topics: usize,
@@ -67,6 +69,7 @@ impl BotTrainReport {
             .set("schedule", self.schedule.as_str())
             .set("kernel", self.kernel.as_str())
             .set("balance", self.balance.as_str())
+            .set("commit", self.commit.as_str())
             .set("residency", self.residency.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
@@ -138,6 +141,7 @@ pub fn train_bot_checkpointed(
             schedule: "serial".to_string(),
             kernel: "dense".to_string(),
             balance: "static".to_string(),
+            commit: "barrier".to_string(),
             residency: "in-core".to_string(),
             topics: cfg.topics,
             iters: cfg.iters,
@@ -182,6 +186,7 @@ pub fn train_bot_checkpointed(
     };
     bot.set_kernel(cfg.kernel);
     bot.set_balance(cfg.balance);
+    bot.set_commit(cfg.commit);
     let speedup = {
         let (sdw, sdts) = bot.schedules();
         combined_speedup_scheduled(&plan_dw, &plan_dts, sdw, sdts)
@@ -206,6 +211,14 @@ pub fn train_bot_checkpointed(
             "update",
             Duration::from_secs_f64(ws.update_secs + ss.update_secs),
         );
+        let commit_secs = ws.commit_secs + ss.commit_secs;
+        if commit_secs > 0.0 {
+            timer.add("commit", Duration::from_secs_f64(commit_secs));
+        }
+        let runahead = ws.runahead_secs + ss.runahead_secs;
+        if runahead > 0.0 {
+            timer.add("runahead", Duration::from_secs_f64(runahead));
+        }
         let io_load = ws.io_load_secs + ss.io_load_secs;
         if io_load > 0.0 {
             timer.add("spill_load", Duration::from_secs_f64(io_load));
@@ -239,6 +252,7 @@ pub fn train_bot_checkpointed(
         schedule: cfg.schedule.label(),
         kernel: cfg.kernel.name().to_string(),
         balance: cfg.balance.name().to_string(),
+        commit: cfg.commit.name().to_string(),
         residency: cfg.residency.label(),
         topics: cfg.topics,
         iters: cfg.iters,
@@ -339,6 +353,7 @@ mod tests {
         assert!(s.contains("eta_dw"));
         assert!(s.contains("measured_eta_dts"));
         assert!(s.contains("\"balance\":\"static\""));
+        assert!(s.contains("\"commit\":\"barrier\""));
         assert!(s.contains("\"residency\":\"in-core\""));
         assert!(s.contains("\"phases\":{"));
         assert!(s.contains("\"task_retries\":0"));
@@ -409,5 +424,30 @@ mod tests {
             assert!(names.contains(&"sample"), "{names:?}");
             assert!(names.contains(&"perplexity"), "{names:?}");
         }
+    }
+
+    #[test]
+    fn bot_commit_modes_through_driver_are_bit_identical() {
+        use crate::scheduler::exec::{CommitMode, ExecMode};
+        use crate::scheduler::schedule::ScheduleKind;
+
+        let tc = tiny_tc(97);
+        let mut cfg = TrainConfig::quick(4, 3);
+        cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+        cfg.workers = 2;
+        cfg.mode = ExecMode::Pooled;
+        let barrier = train_bot(&tc, 4, Algorithm::A3 { restarts: 2 }, &cfg);
+        assert_eq!(barrier.commit, "barrier");
+
+        cfg.commit = CommitMode::Ticketed;
+        let ticketed = train_bot(&tc, 4, Algorithm::A3 { restarts: 2 }, &cfg);
+        assert_eq!(ticketed.commit, "ticketed");
+        // The commit protocol moves work in time, never results.
+        assert_eq!(ticketed.final_perplexity, barrier.final_perplexity);
+        let names: Vec<&str> = ticketed.phases.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(
+            names.contains(&"commit") || names.contains(&"runahead"),
+            "{names:?}"
+        );
     }
 }

@@ -4,7 +4,7 @@
 use crate::corpus::shard::Residency;
 use crate::kernel::KernelKind;
 use crate::scheduler::adaptive::BalanceMode;
-use crate::scheduler::exec::ExecMode;
+use crate::scheduler::exec::{CommitMode, ExecMode};
 use crate::scheduler::schedule::ScheduleKind;
 
 /// Which sampler/perplexity implementation runs the hot path.
@@ -51,6 +51,13 @@ pub struct TrainConfig {
     /// `Steal` within-epoch work stealing. Result-invariant — all three
     /// train bit-identical counts; see `docs/scheduling.md`.
     pub balance: BalanceMode,
+    /// Delta-commit protocol for the parallel native path: `Barrier`
+    /// (default) gathers every epoch's deltas at a full merge barrier;
+    /// `Ticketed` folds them in ticket order while later tasks are still
+    /// sampling, hiding the gather and the spill IO behind sampling.
+    /// Result-invariant — both train bit-identical counts; see
+    /// `docs/executor.md`.
+    pub commit: CommitMode,
     /// Token-block residency for the parallel native path: `InCore`
     /// (default) keeps every block in RAM; `Spill` streams diagonals
     /// through a bounded working set backed by per-partition spill files
@@ -81,6 +88,7 @@ impl Default for TrainConfig {
             schedule: ScheduleKind::Diagonal,
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
+            commit: CommitMode::Barrier,
             residency: Residency::InCore,
             checkpoint_every: 0,
             backend: Backend::Native,
@@ -139,6 +147,7 @@ mod tests {
         assert_eq!(c.schedule, ScheduleKind::Diagonal);
         assert_eq!(c.kernel, KernelKind::Dense);
         assert_eq!(c.balance, BalanceMode::Static);
+        assert_eq!(c.commit, CommitMode::Barrier);
         assert_eq!(c.residency, Residency::InCore);
         assert_eq!(c.checkpoint_every, 0);
     }

@@ -20,6 +20,9 @@ pub struct TrainReport {
     /// Balance-mode label: "static", "adaptive", or "steal" ("static"
     /// for the serial reference and the XLA backend).
     pub balance: String,
+    /// Commit-protocol label: "barrier" or "ticketed" ("barrier" for the
+    /// serial reference and the XLA backend).
+    pub commit: String,
     /// Residency label: "in-core" or "spill(<budget>)" ("in-core" for
     /// the serial reference and the XLA backend).
     pub residency: String,
@@ -67,6 +70,7 @@ impl TrainReport {
             .set("schedule", self.schedule.as_str())
             .set("kernel", self.kernel.as_str())
             .set("balance", self.balance.as_str())
+            .set("commit", self.commit.as_str())
             .set("residency", self.residency.as_str())
             .set("topics", self.topics)
             .set("iters", self.iters)
@@ -138,6 +142,7 @@ mod tests {
             schedule: "diagonal".into(),
             kernel: "sparse".into(),
             balance: "adaptive".into(),
+            commit: "ticketed".into(),
             residency: "in-core".into(),
             topics: 64,
             iters: 50,
@@ -164,6 +169,7 @@ mod tests {
         assert!(s.contains("\"schedule\":\"diagonal\""));
         assert!(s.contains("\"kernel\":\"sparse\""));
         assert!(s.contains("\"balance\":\"adaptive\""));
+        assert!(s.contains("\"commit\":\"ticketed\""));
         assert!(s.contains("\"residency\":\"in-core\""));
         assert!(s.contains("\"schedule_eta\":0.98"));
         assert!(s.contains("\"measured_eta\":0.91"));

@@ -63,6 +63,7 @@ pub fn train_lda_checkpointed(
     // configured kernel, balance mode, and residency.
     let mut kernel = "dense".to_string();
     let mut balance = "static".to_string();
+    let mut commit = "barrier".to_string();
     let mut residency = "in-core".to_string();
     let mut timer = PhaseTimer::new();
     // Fault-tolerance telemetry (parallel native arm only).
@@ -107,11 +108,13 @@ pub fn train_lda_checkpointed(
             executed_sweeps = cfg.iters.saturating_sub(start);
             lda.set_kernel(cfg.kernel);
             lda.set_balance(cfg.balance);
+            lda.set_commit(cfg.commit);
             workers = w;
             schedule = cfg.schedule.label();
             schedule_eta = EtaComparison::of(plan, lda.schedule()).schedule.eta;
             kernel = cfg.kernel.name().to_string();
             balance = cfg.balance.name().to_string();
+            commit = cfg.commit.name().to_string();
             residency = cfg.residency.label();
             // The sweep loop lives here (not in `ParallelLda::train`) so
             // the driver can bucket wallclock into the PhaseTimer and
@@ -123,6 +126,12 @@ pub fn train_lda_checkpointed(
                 timer.add("sample", Duration::from_secs_f64(stats.sample_secs));
                 timer.add("barrier", Duration::from_secs_f64(stats.barrier_secs));
                 timer.add("update", Duration::from_secs_f64(stats.update_secs));
+                if stats.commit_secs > 0.0 {
+                    timer.add("commit", Duration::from_secs_f64(stats.commit_secs));
+                }
+                if stats.runahead_secs > 0.0 {
+                    timer.add("runahead", Duration::from_secs_f64(stats.runahead_secs));
+                }
                 if stats.io_load_secs > 0.0 {
                     timer.add("spill_load", Duration::from_secs_f64(stats.io_load_secs));
                 }
@@ -182,6 +191,7 @@ pub fn train_lda_checkpointed(
         schedule,
         kernel,
         balance,
+        commit,
         residency,
         topics: cfg.topics,
         iters: cfg.iters,
@@ -363,6 +373,38 @@ mod tests {
                 r.measured_eta
             );
         }
+    }
+
+    #[test]
+    fn commit_modes_through_driver_are_bit_identical() {
+        use crate::scheduler::exec::{CommitMode, ExecMode};
+        use crate::scheduler::schedule::ScheduleKind;
+
+        let bow = generate(&Profile::tiny(), 91);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 91);
+        let mut cfg = TrainConfig::quick(8, 6);
+        cfg.eval_every = 3;
+        cfg.schedule = ScheduleKind::Packed { grid_factor: 2 };
+        cfg.workers = 2;
+        cfg.mode = ExecMode::Pooled;
+        let barrier = train_lda(&bow, &plan, &cfg);
+        assert_eq!(barrier.commit, "barrier");
+        let names: Vec<&str> = barrier.phases.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(!names.contains(&"commit"), "{names:?}");
+        assert!(!names.contains(&"runahead"), "{names:?}");
+
+        cfg.commit = CommitMode::Ticketed;
+        let ticketed = train_lda(&bow, &plan, &cfg);
+        assert_eq!(ticketed.commit, "ticketed");
+        // The commit protocol moves work in time, never results.
+        assert_eq!(ticketed.final_perplexity, barrier.final_perplexity);
+        assert_eq!(ticketed.curve, barrier.curve);
+        // Folds are metered into the new buckets instead of the barrier.
+        let names: Vec<&str> = ticketed.phases.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(
+            names.contains(&"commit") || names.contains(&"runahead"),
+            "{names:?}"
+        );
     }
 
     #[test]

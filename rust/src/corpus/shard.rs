@@ -971,6 +971,26 @@ impl ShardedBlocks {
         (&mut self.blocks[l], &self.ids[l])
     }
 
+    /// Detach diagonal `l`'s resident blocks (plus a copy of their ids)
+    /// so the caller can sample them while still scheduling IO on `self`
+    /// — the ticketed-commit trainers release the previous diagonal and
+    /// prefetch the next one *during* the epoch they are sampling, which
+    /// a [`Self::diag_parts`] borrow would forbid. The diagonal stays
+    /// accounted as resident (its bytes still count against the spill
+    /// budget); only `l` itself must not be acquired/released/prefetched
+    /// until [`Self::restore_diagonal`] puts the blocks back.
+    pub fn take_diagonal(&mut self, l: usize) -> (Vec<TokenBlock>, Vec<u64>) {
+        assert!(self.resident[l], "diagonal {l} is not resident");
+        (std::mem::take(&mut self.blocks[l]), self.ids[l].clone())
+    }
+
+    /// Reattach blocks detached by [`Self::take_diagonal`].
+    pub fn restore_diagonal(&mut self, l: usize, diag: Vec<TokenBlock>) {
+        debug_assert!(self.resident[l], "restore of a non-resident diagonal");
+        debug_assert!(self.blocks[l].is_empty(), "restore over live blocks");
+        self.blocks[l] = diag;
+    }
+
     /// Every diagonal is resident (always true in-core) — the
     /// precondition for whole-corpus consistency audits.
     pub fn fully_resident(&self) -> bool {

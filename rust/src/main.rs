@@ -11,6 +11,7 @@
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //!                  [--balance static|adaptive|steal]
+//!                  [--commit barrier|ticketed]
 //!                  [--residency in-core|spill] [--memory-budget B]
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
@@ -19,6 +20,7 @@
 //!                  [--schedule diagonal|packed] [--workers W]
 //!                  [--grid-factor G] [--kernel dense|sparse|alias]
 //!                  [--balance static|adaptive|steal] [--timeline]
+//!                  [--commit barrier|ticketed]
 //!                  [--residency in-core|spill] [--memory-budget B]
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
@@ -38,7 +40,7 @@ use pplda::partition::{self, Algorithm};
 #[cfg(feature = "xla")]
 use pplda::runtime::executor::Artifacts;
 use pplda::scheduler::adaptive::BalanceMode;
-use pplda::scheduler::exec::ExecMode;
+use pplda::scheduler::exec::{CommitMode, ExecMode};
 use pplda::scheduler::schedule::ScheduleKind;
 use pplda::util::cli::Args;
 use pplda::util::tsv::{f, Table};
@@ -90,6 +92,12 @@ static packs by token counts; adaptive re-packs each diagonal between
 sweeps against measured per-partition wallclock; steal lets idle
 workers pull unclaimed tasks from a shared per-epoch queue. All three
 train bit-identical counts — only wallclock changes.
+
+committing (train/train-bot): --commit barrier|ticketed picks the
+delta-commit protocol (see docs/executor.md). barrier gathers every
+epoch's deltas at a full merge barrier; ticketed folds them in ticket
+order while later tasks still sample, hiding the gather and the spill
+IO behind sampling. Both train bit-identical counts.
 
 out-of-core (train/train-bot): --residency spill streams token blocks
 through per-partition spill files, keeping ~two diagonals resident so
@@ -210,6 +218,16 @@ fn balance_of(args: &Args) -> BalanceMode {
     }
 }
 
+/// Commit-protocol selection: `--commit barrier|ticketed` (default
+/// barrier).
+fn commit_of(args: &Args) -> CommitMode {
+    match args.get_str("commit") {
+        Some(s) => CommitMode::parse(s)
+            .unwrap_or_else(|| panic!("unknown commit mode {s:?} (barrier|ticketed)")),
+        None => CommitMode::Barrier,
+    }
+}
+
 /// Checkpoint flags: `--checkpoint-every N` (commits under
 /// `--checkpoint-dir DIR`) and `--resume PATH`. Both halves of the
 /// periodic pair are required together so a stale flag never silently
@@ -302,6 +320,7 @@ fn cmd_train(args: &Args) -> ExitCode {
         schedule: kind,
         kernel: kernel_of(args),
         balance: balance_of(args),
+        commit: commit_of(args),
         residency: residency_of(args),
         checkpoint_every,
         ..Default::default()
@@ -310,7 +329,7 @@ fn cmd_train(args: &Args) -> ExitCode {
     let plan = partition::partition(&bow, grid, algo, cfg.seed);
     println!(
         "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | schedule {} workers={} \
-         kernel={} balance={} residency={}",
+         kernel={} balance={} commit={} residency={}",
         bow.num_docs(),
         bow.num_words(),
         bow.num_tokens(),
@@ -321,6 +340,7 @@ fn cmd_train(args: &Args) -> ExitCode {
         workers,
         cfg.kernel.name(),
         cfg.balance.name(),
+        cfg.commit.name(),
         cfg.residency.label(),
     );
     let report = train_lda_checkpointed(
@@ -388,6 +408,7 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         schedule: kind,
         kernel: kernel_of(args),
         balance: balance_of(args),
+        commit: commit_of(args),
         residency: residency_of(args),
         checkpoint_every,
         ..Default::default()
@@ -411,14 +432,15 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         resume.as_deref(),
     );
     println!(
-        "P={} workers={} schedule={} kernel={} balance={} residency={} perplexity={:.4} \
-         eta_dw={:.4} eta_dts={:.4} measured_eta_dw={:.4} measured_eta_dts={:.4} \
-         speedup≈{:.2} ({:.1}s)",
+        "P={} workers={} schedule={} kernel={} balance={} commit={} residency={} \
+         perplexity={:.4} eta_dw={:.4} eta_dts={:.4} measured_eta_dw={:.4} \
+         measured_eta_dts={:.4} speedup≈{:.2} ({:.1}s)",
         report.p,
         report.workers,
         report.schedule,
         report.kernel,
         report.balance,
+        report.commit,
         report.residency,
         report.final_perplexity,
         report.eta_dw,

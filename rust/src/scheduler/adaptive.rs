@@ -65,6 +65,15 @@ impl BalanceMode {
             Self::Steal => "steal",
         }
     }
+
+    /// Whether per-epoch task assignments are hints rather than binding
+    /// (idle workers pull from the shared queue at runtime). Trainers
+    /// branch on this to skip per-worker speed telemetry, and the
+    /// ticketed committer uses the same eligibility rule either way —
+    /// ticket order is independent of who sampled what.
+    pub fn is_steal(self) -> bool {
+        matches!(self, Self::Steal)
+    }
 }
 
 /// Predicts what one partition's sweep will cost, in abstract cost units

@@ -16,7 +16,7 @@ use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::pool::{
-    merge_deltas, EngineCache, EpochSpec, EpochTasks, Executor, WorkerPool,
+    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, Executor, WorkerPool,
 };
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
@@ -69,6 +69,47 @@ impl ExecMode {
     }
 }
 
+/// How epoch results reconcile into the shared topic totals (see
+/// `docs/executor.md` § "Ticketed commit"):
+///
+/// * `Barrier` — scatter/gather: all deltas are merged after the epoch's
+///   full gather barrier (the historical protocol).
+/// * `Ticketed` — pipelined: each task's index is its *ticket* (its
+///   canonical merge position); a single-threaded committer folds
+///   finished deltas in strict ticket order while later tickets are
+///   still sampling, so only the epoch's tail folds block. The `barrier`
+///   bucket shrinks to one O(K) snapshot republish per epoch; the fold
+///   time moves into the `runahead` (overlapped) and `commit` (blocking
+///   tail) buckets.
+///
+/// Both modes commit in the same canonical order against the same
+/// epoch-start snapshot, so results are bit-identical — the protocol
+/// changes *when* reconciliation work runs, never what it produces.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CommitMode {
+    #[default]
+    Barrier,
+    Ticketed,
+}
+
+impl CommitMode {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "barrier" => Some(Self::Barrier),
+            "ticketed" | "ticket" => Some(Self::Ticketed),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Barrier => "barrier",
+            Self::Ticketed => "ticketed",
+        }
+    }
+}
+
 /// Per-sweep timing/cost telemetry.
 #[derive(Clone, Debug, Default)]
 pub struct SweepStats {
@@ -96,8 +137,20 @@ pub struct SweepStats {
     /// Executor (sampling) seconds summed over epochs — the "sample"
     /// phase bucket.
     pub sample_secs: f64,
-    /// Barrier seconds (delta merging) summed over epochs.
+    /// Barrier seconds summed over epochs: delta merging under
+    /// [`CommitMode::Barrier`]; only the O(K) end-of-epoch snapshot
+    /// republish under [`CommitMode::Ticketed`] (the fold time moves to
+    /// `runahead_secs`/`commit_secs`).
     pub barrier_secs: f64,
+    /// Ticketed commit only: seconds the committer spent folding deltas
+    /// *while sampling was still in flight* — run-ahead work hidden in
+    /// the shadow of the epoch, costing no wallclock. Always 0 under
+    /// `Barrier`.
+    pub runahead_secs: f64,
+    /// Ticketed commit only: seconds spent folding the epoch's tail
+    /// deltas after sampling had drained — the blocking residue the
+    /// pipeline could not hide. Always 0 under `Barrier`.
+    pub commit_secs: f64,
     /// Update seconds: snapshot upkeep plus any adaptive
     /// observe/re-pack work between epochs and sweeps.
     pub update_secs: f64,
@@ -243,6 +296,9 @@ pub struct ParallelLda {
     /// balance mode, so switching to `Adaptive` mid-training starts
     /// warm.
     estimator: Measured,
+    /// Commit protocol (barrier gather vs ticketed pipeline). Result-
+    /// invariant; see [`CommitMode`].
+    commit: CommitMode,
     seed: u64,
     sweeps_done: usize,
     /// Executor state; the persistent worker pool (if `Pooled` mode is
@@ -331,6 +387,7 @@ impl ParallelLda {
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
             estimator: Measured::new(p),
+            commit: CommitMode::default(),
             seed,
             sweeps_done: 0,
             snapshot: vec![0; k],
@@ -404,6 +461,7 @@ impl ParallelLda {
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
             estimator: Measured::new(p),
+            commit: CommitMode::default(),
             seed,
             sweeps_done,
             snapshot: vec![0; k],
@@ -472,6 +530,7 @@ impl ParallelLda {
             kernel: KernelKind::Dense,
             balance: BalanceMode::Static,
             estimator: Measured::new(p),
+            commit: CommitMode::default(),
             seed,
             sweeps_done,
             snapshot: vec![0; k],
@@ -566,6 +625,20 @@ impl ParallelLda {
         self.balance
     }
 
+    /// Select the commit protocol for subsequent sweeps (see
+    /// [`CommitMode`]). Result-invariant — both protocols fold deltas in
+    /// the same canonical order against the same epoch-start snapshot —
+    /// so it may be switched mid-training; only where reconciliation
+    /// time is spent (and therefore wallclock) changes.
+    pub fn set_commit(&mut self, commit: CommitMode) {
+        self.commit = commit;
+    }
+
+    /// The commit protocol governing this trainer's sweeps.
+    pub fn commit(&self) -> CommitMode {
+        self.commit
+    }
+
     /// The measured per-partition cost estimator (telemetry-fed; drives
     /// `Adaptive` re-packing).
     pub fn estimator(&self) -> &Measured {
@@ -577,7 +650,9 @@ impl ParallelLda {
         self.schedule.workers
     }
 
-    /// One full Gibbs sweep = `P` diagonal epochs with barriers.
+    /// One full Gibbs sweep = `P` diagonal epochs, reconciled under the
+    /// configured [`CommitMode`] (gather barrier, or the ticketed
+    /// pipelined commit — see [`Self::set_commit`]).
     ///
     /// Epochs dispatch through the [`crate::scheduler::pool::Executor`]
     /// selected by `mode`, each executing its schedule epoch's per-worker
@@ -586,10 +661,8 @@ impl ParallelLda {
     /// performs no per-epoch heap allocation in `Sequential` and
     /// `Pooled` modes.
     pub fn sweep(&mut self, mode: ExecMode) -> SweepStats {
-        let p = self.p;
-        let k = self.h.k;
         let sweep_no = self.sweeps_done;
-        let steal = self.balance == BalanceMode::Steal;
+        let steal = self.balance.is_steal();
         let mut stats = SweepStats {
             workers: self.schedule.workers,
             ..SweepStats::default()
@@ -610,6 +683,68 @@ impl ParallelLda {
         self.snapshot.copy_from_slice(&self.counts.topic);
         stats.update_secs += update_started.elapsed().as_secs_f64();
 
+        if self.commit == CommitMode::Ticketed {
+            self.ticketed_epochs(mode, &mut stats, sweep_no, steal);
+        } else {
+            self.barrier_epochs(mode, &mut stats, sweep_no, steal);
+        }
+
+        self.sweeps_done += 1;
+        // Fold the sweep's telemetry into the estimator regardless of
+        // balance mode (O(P) per sweep), so switching to `Adaptive`
+        // mid-training repacks from warm measurements; under `Adaptive`
+        // also re-pack each diagonal so the next sweep's assignments
+        // chase measured cost. Pure assignment motion: results unchanged.
+        let update_started = Instant::now();
+        self.estimator.observe_sweep(&self.costs, &stats.task_nanos);
+        if !steal {
+            // Per-worker speed telemetry (measured vs predicted busy
+            // time), so adaptive re-packing can account for
+            // heterogeneous workers. Under stealing the static
+            // assignment is only a hint, so the prediction wouldn't
+            // describe what each worker actually ran.
+            let predicted = self
+                .estimator
+                .predicted_worker_loads(&self.schedule, &self.costs);
+            self.estimator.observe_workers(&predicted, &stats.worker_nanos);
+        }
+        if self.balance == BalanceMode::Adaptive {
+            self.estimator.repack(&mut self.schedule, &self.costs);
+        }
+        stats.update_secs += update_started.elapsed().as_secs_f64();
+        stats.task_retries = self.engines.get(mode).retries() - task_retries0;
+        stats.io_retries = self.shards.io_retries() - io_retries0;
+        // Debug builds (unit + integration test runs) audit the full
+        // count/assignment invariant after every sweep, so a kernel
+        // count-delta bug fails loudly at the sweep that introduced it
+        // instead of surfacing as a perplexity drift much later. The
+        // audit needs the whole corpus in RAM, so spill-mode sweeps skip
+        // it (the spill ≡ in-core matrix tests cover that path).
+        #[cfg(debug_assertions)]
+        if self.shards.fully_resident() {
+            let blocks = self.shards.resident_blocks();
+            if let Err(e) = self.counts.check_consistency(&blocks) {
+                panic!(
+                    "kernel {} corrupted LDA counts on sweep {sweep_no}: {e}",
+                    self.kernel.name()
+                );
+            }
+        }
+        stats
+    }
+
+    /// The barrier epoch loop of [`Self::sweep`]
+    /// ([`CommitMode::Barrier`]): scatter, gather, merge all deltas,
+    /// write back.
+    fn barrier_epochs(
+        &mut self,
+        mode: ExecMode,
+        stats: &mut SweepStats,
+        sweep_no: usize,
+        steal: bool,
+    ) {
+        let p = self.p;
+        let k = self.h.k;
         for l in 0..p {
             // Out-of-core: make this diagonal resident (collecting the
             // prefetch the previous epoch overlapped with its sampling),
@@ -668,49 +803,121 @@ impl ParallelLda {
                 .release(l)
                 .expect("out-of-core: writing a diagonal back to the shard store failed");
         }
+    }
 
-        self.sweeps_done += 1;
-        // Fold the sweep's telemetry into the estimator regardless of
-        // balance mode (O(P) per sweep), so switching to `Adaptive`
-        // mid-training repacks from warm measurements; under `Adaptive`
-        // also re-pack each diagonal so the next sweep's assignments
-        // chase measured cost. Pure assignment motion: results unchanged.
-        let update_started = Instant::now();
-        self.estimator.observe_sweep(&self.costs, &stats.task_nanos);
-        if !steal {
-            // Per-worker speed telemetry (measured vs predicted busy
-            // time), so adaptive re-packing can account for
-            // heterogeneous workers. Under stealing the static
-            // assignment is only a hint, so the prediction wouldn't
-            // describe what each worker actually ran.
-            let predicted = self
-                .estimator
-                .predicted_worker_loads(&self.schedule, &self.costs);
-            self.estimator.observe_workers(&predicted, &stats.worker_nanos);
+    /// The ticketed epoch loop of [`Self::sweep`]
+    /// ([`CommitMode::Ticketed`]): the executor commits each task's
+    /// delta into the authoritative topic totals in strict ticket order
+    /// *while the epoch's tail is still sampling* (in-flight tasks read
+    /// the immutable epoch-start snapshot, whose denominators the
+    /// commits must not perturb — see `docs/executor.md`). The gather
+    /// barrier shrinks to one O(K) snapshot republish per epoch, and the
+    /// spill write-back of the previous diagonal plus the prefetch of
+    /// the next both run in the `overlap` hook, in the shadow of
+    /// sampling.
+    fn ticketed_epochs(
+        &mut self,
+        mode: ExecMode,
+        stats: &mut SweepStats,
+        sweep_no: usize,
+        steal: bool,
+    ) {
+        let p = self.p;
+        let k = self.h.k;
+        for l in 0..p {
+            // The previous epoch's overlap hook started loading this
+            // diagonal; its write-back of diagonal `l - 1` happens in
+            // *this* epoch's hook below.
+            stats.io_load_secs += self
+                .shards
+                .acquire(l)
+                .expect("out-of-core: loading a diagonal from the shard store failed");
+            let epoch_started = Instant::now();
+            // Detach the diagonal so the overlap hook can schedule IO on
+            // the shard container while the executor samples its blocks
+            // (the diagonal stays accounted against the spill budget).
+            let (mut diag, ids) = self.shards.take_diagonal(l);
+            let ep = &self.schedule.epochs[l];
+            stats
+                .epoch_max_tokens
+                .push(ep.max_assigned(|i| diag[i].len() as u64));
+            stats.total_tokens += diag.iter().map(|b| b.len() as u64).sum::<u64>();
+            let n = diag.len();
+
+            let spec = EpochSpec {
+                doc: SharedRows::new(&mut self.counts.doc_topic, k),
+                emit: SharedRows::new(&mut self.counts.word_topic, k),
+                snapshot: &self.snapshot,
+                h: self.h,
+                seed: self.seed ^ LDA_SWEEP_SALT,
+                sweep: sweep_no,
+                kernel: self.kernel,
+            };
+            let tasks = EpochTasks {
+                blocks: &mut diag,
+                ids: &ids,
+                assign: &ep.assign,
+                nanos: &mut self.task_nanos[..n],
+                worker_nanos: &mut self.worker_nanos,
+                steal,
+            };
+            let shards = &mut self.shards;
+            let mut io_write = 0.0f64;
+            // Release before prefetch: freeing the previous diagonal
+            // first keeps the budget check seeing at most two diagonals,
+            // exactly like the barrier path's residency profile.
+            let mut overlap = || {
+                if l > 0 {
+                    io_write += shards
+                        .release(l - 1)
+                        .expect("out-of-core: writing a diagonal back to the shard store failed");
+                }
+                if p > 1 {
+                    shards.prefetch((l + 1) % p);
+                }
+            };
+            let topic = &mut self.counts.topic;
+            let mut runahead = 0.0f64;
+            let mut blocking = 0.0f64;
+            let mut commit = |_t: usize, delta: &[i64], in_flight: usize| {
+                let fold_started = Instant::now();
+                commit_delta(topic, delta);
+                let secs = fold_started.elapsed().as_secs_f64();
+                if in_flight > 0 {
+                    runahead += secs;
+                } else {
+                    blocking += secs;
+                }
+            };
+            self.engines.get(mode).run_epoch_ticketed(
+                &spec,
+                tasks,
+                &mut self.deltas[..n],
+                &mut overlap,
+                &mut commit,
+            );
+            stats.sample_secs += epoch_started.elapsed().as_secs_f64();
+            stats.io_write_secs += io_write;
+            stats.runahead_secs += runahead;
+            stats.commit_secs += blocking;
+            stats.task_nanos.push(self.task_nanos[..n].to_vec());
+            stats.worker_nanos.push(self.worker_nanos.clone());
+
+            // The epoch drained: every delta is already folded into the
+            // authoritative totals, so the "barrier" is one O(K)
+            // snapshot republish for the next epoch's readers.
+            let barrier_started = Instant::now();
+            self.snapshot.copy_from_slice(&self.counts.topic);
+            stats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+            stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
+            self.shards.restore_diagonal(l, diag);
         }
-        if self.balance == BalanceMode::Adaptive {
-            self.estimator.repack(&mut self.schedule, &self.costs);
-        }
-        stats.update_secs += update_started.elapsed().as_secs_f64();
-        stats.task_retries = self.engines.get(mode).retries() - task_retries0;
-        stats.io_retries = self.shards.io_retries() - io_retries0;
-        // Debug builds (unit + integration test runs) audit the full
-        // count/assignment invariant after every sweep, so a kernel
-        // count-delta bug fails loudly at the sweep that introduced it
-        // instead of surfacing as a perplexity drift much later. The
-        // audit needs the whole corpus in RAM, so spill-mode sweeps skip
-        // it (the spill ≡ in-core matrix tests cover that path).
-        #[cfg(debug_assertions)]
-        if self.shards.fully_resident() {
-            let blocks = self.shards.resident_blocks();
-            if let Err(e) = self.counts.check_consistency(&blocks) {
-                panic!(
-                    "kernel {} corrupted LDA counts on sweep {sweep_no}: {e}",
-                    self.kernel.name()
-                );
-            }
-        }
-        stats
+        // The last diagonal has no successor epoch to shadow its
+        // write-back; flush it here (no-op in-core).
+        stats.io_write_secs += self
+            .shards
+            .release(p - 1)
+            .expect("out-of-core: writing a diagonal back to the shard store failed");
     }
 
     /// The persistent worker pool, if any `Pooled`-mode sweep has run on
@@ -1521,6 +1728,161 @@ mod tests {
         }
     }
 
+    #[test]
+    fn ticketed_commit_is_bit_identical_across_kernels_modes_and_workers() {
+        // The ticketed-protocol acceptance matrix at trainer level: for
+        // each kernel, the barrier Sequential diagonal run is the
+        // oracle; ticketed commit under packed schedules at W ∈ {1, 2,
+        // 4} in every exec mode matches bit for bit (the pipeline
+        // changes when deltas fold, never what they fold to).
+        for kernel in KernelKind::all() {
+            let (_bow, mut oracle) = setup(4, 131);
+            oracle.set_kernel(kernel);
+            for _ in 0..3 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for workers in [1usize, 2, 4] {
+                let kind = ScheduleKind::Packed { grid_factor: 4 / workers };
+                for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                    let (_b, mut lda) = setup_scheduled(4, 131, kind, workers);
+                    lda.set_kernel(kernel);
+                    lda.set_commit(CommitMode::Ticketed);
+                    assert_eq!(lda.commit(), CommitMode::Ticketed);
+                    for _ in 0..3 {
+                        lda.sweep(mode);
+                    }
+                    let tag = format!("{kernel:?} {mode:?} W={workers} ticketed");
+                    assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                    assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                    assert_eq!(lda.counts.topic, oracle.counts.topic, "{tag}");
+                    assert!(lda.counts.check_consistency(&lda.all_blocks()).is_ok(), "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ticketed_spill_steal_and_adaptive_match_barrier() {
+        // The commit × balance × residency corner of the acceptance
+        // matrix: ticketed sweeps under stealing, adaptive re-packing,
+        // and spill residency all reproduce the barrier Sequential
+        // oracle bit for bit.
+        let (_bow, mut oracle) = setup(4, 132);
+        for _ in 0..3 {
+            oracle.sweep(ExecMode::Sequential);
+        }
+        let spill = Residency::Spill { budget_bytes: 0 };
+        for (balance, residency) in [
+            (BalanceMode::Static, spill),
+            (BalanceMode::Steal, Residency::InCore),
+            (BalanceMode::Steal, spill),
+            (BalanceMode::Adaptive, Residency::InCore),
+        ] {
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                let kind = ScheduleKind::Packed { grid_factor: 2 };
+                let (_b, mut lda) = setup_resident(4, 132, kind, 2, residency);
+                lda.set_commit(CommitMode::Ticketed);
+                lda.set_balance(balance);
+                for _ in 0..3 {
+                    lda.sweep(mode);
+                }
+                let tag = format!("{balance:?} {residency:?} {mode:?} ticketed");
+                assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                assert_eq!(lda.counts.topic, oracle.counts.topic, "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn commit_modes_can_be_switched_between_sweeps() {
+        // The commit protocol is result-invariant, so it may be toggled
+        // mid-training (like kernels, schedules, and balance modes).
+        let (_bow, mut a) = setup_scheduled(4, 133, ScheduleKind::Packed { grid_factor: 2 }, 2);
+        let (_bow2, mut b) = setup(4, 133);
+        a.sweep(ExecMode::Pooled);
+        a.set_commit(CommitMode::Ticketed);
+        a.sweep(ExecMode::Pooled);
+        a.sweep(ExecMode::Threaded);
+        a.set_commit(CommitMode::Barrier);
+        a.sweep(ExecMode::Sequential);
+        for _ in 0..4 {
+            b.sweep(ExecMode::Sequential);
+        }
+        assert_eq!(a.counts.doc_topic, b.counts.doc_topic);
+        assert_eq!(a.counts.word_topic, b.counts.word_topic);
+        assert_eq!(a.counts.topic, b.counts.topic);
+    }
+
+    #[test]
+    fn ticketed_telemetry_moves_barrier_time_into_commit_buckets() {
+        let (bow, mut lda) = setup_scheduled(6, 134, ScheduleKind::Packed { grid_factor: 3 }, 2);
+        let barrier_stats = lda.sweep(ExecMode::Pooled);
+        assert_eq!(barrier_stats.runahead_secs, 0.0, "barrier mode never runs ahead");
+        assert_eq!(barrier_stats.commit_secs, 0.0, "barrier mode has no commit bucket");
+        assert!(barrier_stats.barrier_secs > 0.0, "barrier merge is measured");
+        lda.set_commit(CommitMode::Ticketed);
+        let stats = lda.sweep(ExecMode::Pooled);
+        assert_eq!(stats.total_tokens, bow.num_tokens());
+        assert_eq!(stats.epoch_secs.len(), 6);
+        // Every delta fold lands in exactly one of the two new buckets.
+        assert!(stats.runahead_secs + stats.commit_secs > 0.0, "folds were timed");
+        // The telemetry contracts (conservation, Eq. 2 bounds) hold
+        // under the ticketed protocol too.
+        let task_total: u64 = stats.task_nanos.iter().flatten().sum();
+        assert_eq!(task_total, stats.busy_total_nanos());
+        assert!(task_total > 0);
+        let eta = stats.measured_eta();
+        assert!(eta > 0.0 && eta <= 1.0 + 1e-12, "measured eta {eta}");
+        assert!(stats.sample_secs > 0.0);
+    }
+
+    #[test]
+    fn ticketed_matches_barrier_on_random_schedules() {
+        // Property form of the ticketed guarantee: random corpora,
+        // random (g, W), every kernel — ticketed Pooled ≡ barrier
+        // Pooled ≡ barrier Sequential, bit for bit.
+        crate::testing::prop::check("ticketed-bit-identical", 0x71C4ED, 6, |rng| {
+            let w = [1usize, 2, 4][rng.gen_range(3)];
+            let g = 1 + rng.gen_range(3);
+            let p = g * w;
+            let bow = crate::testing::prop::gen_bow(rng, 30, 30);
+            if bow.num_tokens() == 0 {
+                return;
+            }
+            let plan = partition(&bow, p, Algorithm::A3 { restarts: 1 }, rng.next_u64());
+            let kernel = KernelKind::all()[rng.gen_range(3)];
+            let kind = ScheduleKind::Packed { grid_factor: g };
+
+            let mut oracle = ParallelLda::init_scheduled(&bow, &plan, 4, 0.5, 0.1, 7, kind, w);
+            oracle.set_kernel(kernel);
+            let mut barrier = ParallelLda::init_scheduled(&bow, &plan, 4, 0.5, 0.1, 7, kind, w);
+            barrier.set_kernel(kernel);
+            let mut ticketed = ParallelLda::init_scheduled(&bow, &plan, 4, 0.5, 0.1, 7, kind, w);
+            ticketed.set_kernel(kernel);
+            ticketed.set_commit(CommitMode::Ticketed);
+            for _ in 0..2 {
+                oracle.sweep(ExecMode::Sequential);
+                barrier.sweep(ExecMode::Pooled);
+                ticketed.sweep(ExecMode::Pooled);
+            }
+            assert_eq!(barrier.counts.topic, oracle.counts.topic, "{kernel:?} barrier");
+            assert_eq!(ticketed.counts.doc_topic, oracle.counts.doc_topic, "{kernel:?}");
+            assert_eq!(ticketed.counts.word_topic, oracle.counts.word_topic, "{kernel:?}");
+            assert_eq!(ticketed.counts.topic, oracle.counts.topic, "{kernel:?}");
+        });
+    }
+
+    #[test]
+    fn commit_mode_parses_cli_spellings() {
+        assert_eq!(CommitMode::parse("barrier"), Some(CommitMode::Barrier));
+        assert_eq!(CommitMode::parse("ticketed"), Some(CommitMode::Ticketed));
+        assert_eq!(CommitMode::parse("ticket"), Some(CommitMode::Ticketed));
+        assert_eq!(CommitMode::parse("async"), None);
+        assert_eq!(CommitMode::Ticketed.name(), "ticketed");
+        assert_eq!(CommitMode::default(), CommitMode::Barrier);
+    }
+
     /// The LDA fault-tolerance acceptance matrix: one injected worker
     /// panic (and, when spilling, one transient IO error plus one torn
     /// spill write) per training run, across kernels × exec modes ×
@@ -1591,6 +1953,55 @@ mod tests {
                             );
                         }
                     }
+                }
+            }
+        }
+
+        #[test]
+        fn ticketed_commit_faults_roll_back_tickets_and_match_oracle() {
+            // The run-ahead rollback acceptance: a worker that crashes
+            // *after* sampling but before its result reaches the
+            // committer (the `commit` failpoint) revokes its ticket —
+            // the committer's watermark stalls, nothing after it
+            // commits, and the retry re-executes the identical
+            // `(seed, sweep, partition)` RNG stream after the exact
+            // count rollback. Matrix over exec modes × residency, with
+            // a mid-sampling crash on the next sweep covering the other
+            // revocation path; the undisturbed barrier Sequential run
+            // is the oracle.
+            const SEED: u64 = 0xFA17_0041;
+            let spill = Residency::Spill { budget_bytes: 0 };
+            let (_bow, mut oracle) = setup(4, SEED);
+            for _ in 0..3 {
+                oracle.sweep(ExecMode::Sequential);
+            }
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                for residency in [Residency::InCore, spill] {
+                    let (_b, mut lda) =
+                        setup_resident(4, SEED, ScheduleKind::Diagonal, 4, residency);
+                    lda.set_commit(CommitMode::Ticketed);
+                    let guard = install(vec![
+                        Fault {
+                            site: fault::sites::COMMIT,
+                            key: [SEED ^ LDA_SWEEP_SALT, 0, ANY],
+                            kind: FaultKind::Panic,
+                        },
+                        Fault {
+                            site: fault::sites::TASK,
+                            key: [SEED ^ LDA_SWEEP_SALT, 1, ANY],
+                            kind: FaultKind::Panic,
+                        },
+                    ]);
+                    let mut task_retries = 0u64;
+                    for _ in 0..3 {
+                        task_retries += lda.sweep(mode).task_retries;
+                    }
+                    drop(guard);
+                    let tag = format!("{mode:?} {residency:?} ticketed");
+                    assert_eq!(task_retries, 2, "{tag}: two contained panics, two retries");
+                    assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{tag}");
+                    assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "{tag}");
+                    assert_eq!(lda.counts.topic, oracle.counts.topic, "{tag}");
                 }
             }
         }

@@ -56,6 +56,19 @@
 //! additional coordination (see [`crate::corpus::shard`] and
 //! `docs/out_of_core.md`).
 //!
+//! # Ticketed protocol
+//!
+//! [`Executor::run_epoch_ticketed`] replaces the gather barrier with a
+//! pipelined in-order commit: each task's index is its *ticket*, workers
+//! report per-task completions as they finish, and the coordinator folds
+//! the contiguous prefix of ready deltas through the caller's `commit`
+//! callback in strict ticket order — overlapped with the sampling tail
+//! instead of serialized after it. A contained panic *revokes* the
+//! ticket (the watermark stalls there until the retry re-executes the
+//! task), so commit order — and therefore the result — is exactly the
+//! barrier path's, bit for bit. See `docs/executor.md` § Ticketed
+//! commit.
+//!
 //! # Determinism
 //!
 //! Task RNG streams are keyed by `(seed, sweep, partition)` via
@@ -179,6 +192,47 @@ pub trait Executor {
         deltas: &mut [Vec<i64>],
     );
 
+    /// One diagonal epoch under the *ticketed* protocol: the epoch's
+    /// barrier is replaced by a pipelined in-order commit. Each task's
+    /// index is its ticket; the executor invokes `commit(ticket, delta,
+    /// in_flight)` exactly once per task, in strictly ascending ticket
+    /// order, only after that task sampled successfully (post-retry) —
+    /// overlapped with the sampling tail wherever the executor can.
+    /// `in_flight` is the number of tasks not yet sampled at commit
+    /// time: `> 0` means the fold ran in the shadow of sampling
+    /// (run-ahead), `0` means sampling had drained and the fold was
+    /// blocking — the caller buckets its timers accordingly.
+    ///
+    /// `overlap` is invoked exactly once, immediately after the epoch's
+    /// work is dispatched (at the start, for the sequential executor):
+    /// the trainer's hook for spill release/prefetch IO that should run
+    /// in the shadow of sampling.
+    ///
+    /// Ascending ticket order is the barrier path's merge order, and
+    /// task RNG streams are per-partition ([`task_rng`]), so a ticketed
+    /// epoch is bit-identical to a barrier epoch — the protocol changes
+    /// *when* deltas fold, never what they fold to. Telemetry contracts
+    /// (`nanos`, `worker_nanos`, retries) are identical to
+    /// [`Executor::run_epoch`].
+    ///
+    /// The default implementation is the degenerate pipeline — run the
+    /// barrier epoch, then commit every ticket in order with zero
+    /// overlap — which is exactly right for in-order executors.
+    fn run_epoch_ticketed(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        tasks: EpochTasks<'_>,
+        deltas: &mut [Vec<i64>],
+        overlap: &mut dyn FnMut(),
+        commit: &mut dyn FnMut(usize, &[i64], usize),
+    ) {
+        overlap();
+        self.run_epoch(spec, tasks, deltas);
+        for (t, delta) in deltas.iter().enumerate() {
+            commit(t, delta, 0);
+        }
+    }
+
     /// Task re-executions performed after contained panics, over this
     /// executor's lifetime. Zero on a fault-free run; the trainers
     /// surface per-sweep increments in their telemetry (see
@@ -200,6 +254,72 @@ pub fn merge_deltas(totals: &mut [u32], snapshot: &mut [u32], deltas: &[Vec<i64>
             totals[t] = v as u32;
             snapshot[t] = v as u32;
         }
+    }
+}
+
+/// The ticketed commit step: fold one task's signed delta into the
+/// authoritative topic totals *only*. Unlike [`merge_deltas`] it leaves
+/// the epoch-start snapshot untouched — under run-ahead the snapshot is
+/// still being read by concurrently sampling tasks of the same epoch,
+/// and the trainer republishes it once per epoch after the last commit.
+pub fn commit_delta(totals: &mut [u32], delta: &[i64]) {
+    for (t, &d) in delta.iter().enumerate() {
+        let v = totals[t] as i64 + d;
+        debug_assert!(v >= 0, "topic total went negative");
+        totals[t] = v as u32;
+    }
+}
+
+/// The single-threaded committer state for one ticketed epoch: which
+/// tickets have sampled successfully, and the watermark below which
+/// every ticket is committed. Ticket `t` is the task's index within the
+/// epoch — the barrier path's merge order — so draining the contiguous
+/// ready prefix in watermark order reproduces the barrier result
+/// bit for bit. A task whose panic was contained is simply *not* marked
+/// ready (its ticket is revoked): the watermark stalls at it, nothing
+/// after it commits, and the eventual successful retry re-arms the
+/// ticket with the identical delta (same `(seed, sweep, partition)` RNG
+/// stream).
+struct TicketCommitter {
+    /// Per-ticket "sampled successfully, delta ready to fold" flags.
+    ready: Vec<bool>,
+    /// Next ticket to commit; everything below is folded.
+    watermark: usize,
+    /// Tickets marked ready so far (committed or awaiting the watermark).
+    sampled: usize,
+}
+
+impl TicketCommitter {
+    fn new(n: usize) -> Self {
+        Self { ready: vec![false; n], watermark: 0, sampled: 0 }
+    }
+
+    /// Mark ticket `t`'s task as sampled successfully.
+    fn mark_ready(&mut self, t: usize) {
+        debug_assert!(!self.ready[t], "ticket {t} completed twice");
+        self.ready[t] = true;
+        self.sampled += 1;
+    }
+
+    /// The watermark ticket, if its delta is ready to fold.
+    fn next_committable(&self) -> Option<usize> {
+        (self.watermark < self.ready.len() && self.ready[self.watermark])
+            .then_some(self.watermark)
+    }
+
+    /// Record that [`Self::next_committable`]'s ticket was committed.
+    fn advance(&mut self) {
+        self.watermark += 1;
+    }
+
+    /// Tasks not yet sampled — the `in_flight` the commit callback sees.
+    fn in_flight(&self) -> usize {
+        self.ready.len() - self.sampled
+    }
+
+    /// Every ticket committed (the epoch's exit invariant).
+    fn finished(&self) -> bool {
+        self.watermark == self.ready.len()
     }
 }
 
@@ -270,7 +390,7 @@ fn run_task(
     // (sweep, partition) coordinate — compiled to nothing without the
     // `failpoints` feature (see `crate::util::fault`). Firing *before*
     // the first token makes the containment rollback exact.
-    if fault::fire("task", [spec.seed, spec.sweep as u64, partition]).is_some() {
+    if fault::fire(fault::sites::TASK, [spec.seed, spec.sweep as u64, partition]).is_some() {
         panic!(
             "injected fault: worker panic at sweep {}, partition {partition}",
             spec.sweep
@@ -287,6 +407,18 @@ fn run_task(
         h: spec.h,
     };
     kernel.sweep_task(&ctx, block, delta, &mut rng);
+    // Failpoint: a deterministic crash *after* the kernel finished but
+    // before the task's result is handed to the committer — the worst
+    // spot for the ticketed protocol, which must revoke the ticket and
+    // re-execute instead of committing a rolled-back delta. Still inside
+    // the caller's panic guard, so containment rolls the task back
+    // exactly as for a mid-sampling crash.
+    if fault::fire(fault::sites::COMMIT, [spec.seed, spec.sweep as u64, partition]).is_some() {
+        panic!(
+            "injected fault: pre-commit crash at sweep {}, partition {partition}",
+            spec.sweep
+        );
+    }
     started.elapsed().as_nanos() as u64
 }
 
@@ -648,6 +780,159 @@ impl Executor for ThreadedExec {
         }
     }
 
+    fn run_epoch_ticketed(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        tasks: EpochTasks<'_>,
+        deltas: &mut [Vec<i64>],
+        overlap: &mut dyn FnMut(),
+        commit: &mut dyn FnMut(usize, &[i64], usize),
+    ) {
+        check_tasks(&tasks, deltas);
+        tasks.nanos.fill(0);
+        tasks.worker_nanos.fill(0);
+        let ids = tasks.ids;
+        let n = tasks.blocks.len();
+        let blocks_ptr = tasks.blocks.as_mut_ptr();
+        let deltas_ptr = deltas.as_mut_ptr();
+        let nanos_ptr = tasks.nanos.as_mut_ptr();
+        let busy_ptr = tasks.worker_nanos.as_mut_ptr();
+        let mut committer = TicketCommitter::new(n);
+        let mut failed = vec![false; n];
+        // Per-task completion channel: `(ticket, sampled_ok)`. Each send
+        // happens-after its worker's writes to the task's delta and
+        // nanos slots, so receiving a ticket licenses the committer to
+        // read them while the other threads keep sampling.
+        let (done_tx, done_rx) = channel::<(usize, bool)>();
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let cursor = &cursor;
+            let spawned = if tasks.steal {
+                tasks.assign.len().min(n)
+            } else {
+                tasks.assign.len()
+            };
+            for (w, list) in tasks.assign.iter().enumerate().take(spawned) {
+                if !tasks.steal && list.is_empty() {
+                    continue;
+                }
+                let arrays = TaskArrays {
+                    blocks: blocks_ptr,
+                    deltas: deltas_ptr,
+                    nanos: nanos_ptr,
+                    busy: busy_ptr,
+                };
+                let done = done_tx.clone();
+                let steal = tasks.steal;
+                s.spawn(move || {
+                    let mut kernel = spec.kernel.build();
+                    let mut backup = Vec::new();
+                    let mut busy = 0u64;
+                    let mut body = |i: usize| {
+                        // SAFETY: index `i` is exclusively this thread's
+                        // — by the `check_tasks` invariant in static
+                        // mode, by the unique fetch-add in stealing mode
+                        // — until its completion message below is
+                        // received.
+                        let block = unsafe { &mut *arrays.blocks.add(i) };
+                        let delta = unsafe { (*arrays.deltas.add(i)).as_mut_slice() };
+                        let ok = match run_task_guarded(
+                            spec,
+                            ids[i],
+                            block,
+                            delta,
+                            kernel.as_mut(),
+                            &mut backup,
+                        ) {
+                            Ok(dt) => {
+                                unsafe { *arrays.nanos.add(i) = dt };
+                                busy += dt;
+                                true
+                            }
+                            Err(()) => {
+                                // Contained and rolled back; scratch may
+                                // be torn — rebuild before the next task.
+                                kernel = spec.kernel.build();
+                                false
+                            }
+                        };
+                        let _ = done.send((i, ok));
+                    };
+                    if steal {
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            body(i);
+                        }
+                    } else {
+                        for &i in list {
+                            body(i as usize);
+                        }
+                    }
+                    // SAFETY: slot `w` is this thread's alone.
+                    unsafe { *arrays.busy.add(w) = busy };
+                });
+            }
+            drop(done_tx);
+            // Dispatch done — the caller's overlapped IO (spill
+            // release/prefetch) runs now, in the shadow of the sampling
+            // the threads just started.
+            overlap();
+            // Committer loop: exactly one message per task. Fold the
+            // contiguous ready prefix as tickets arrive; a failed task's
+            // ticket is revoked — the watermark stalls there until the
+            // post-join retry pass re-arms it.
+            for _ in 0..n {
+                let (t, ok) = done_rx.recv().expect("a worker thread died mid-epoch");
+                if ok {
+                    committer.mark_ready(t);
+                    while let Some(c) = committer.next_committable() {
+                        // SAFETY: ticket `c`'s completion message has
+                        // been received, and its claimer's last write to
+                        // the delta slot happens-before that send.
+                        let delta = unsafe { (*deltas_ptr.add(c)).as_slice() };
+                        commit(c, delta, committer.in_flight());
+                        committer.advance();
+                    }
+                } else {
+                    failed[t] = true;
+                }
+            }
+        });
+        // Retry pass, exactly as in the barrier path — except each
+        // re-executed task also re-arms its revoked ticket, so the
+        // stalled commits drain here in ticket order (the retry derives
+        // the same `(seed, sweep, partition)` RNG stream, so the delta
+        // it commits is the one an undisturbed run would have).
+        for i in 0..n {
+            if !failed[i] {
+                continue;
+            }
+            let dt = retry_task(
+                spec,
+                tasks.ids[i],
+                &mut tasks.blocks[i],
+                &mut deltas[i],
+                &mut self.retries,
+            );
+            tasks.nanos[i] = dt;
+            let w = tasks
+                .assign
+                .iter()
+                .position(|l| l.contains(&(i as u32)))
+                .unwrap_or(0);
+            tasks.worker_nanos[w] += dt;
+            committer.mark_ready(i);
+            while let Some(c) = committer.next_committable() {
+                commit(c, &deltas[c], committer.in_flight());
+                committer.advance();
+            }
+        }
+        assert!(committer.finished(), "ticketed epoch left uncommitted tickets");
+    }
+
     fn retries(&self) -> u64 {
         self.retries
     }
@@ -683,6 +968,10 @@ struct Job {
     sweep: usize,
     kernel: KernelKind,
     worker: usize,
+    /// Ticketed protocol: send a [`Done::Task`] message after every
+    /// task (before the job's own [`Done::Job`] completion), so the
+    /// coordinator can commit tickets while the job is still sampling.
+    per_task: bool,
 }
 
 // SAFETY: Job transfers *exclusive logical ownership* of the worker's
@@ -693,13 +982,27 @@ struct Job {
 // index list, and cursor (`AtomicUsize` is `Sync`) are safe to share.
 unsafe impl Send for Job {}
 
-/// One pool completion message: the worker slot, the job outcome, and
-/// the busy nanos of the job's *successful* tasks. `Some(failed)` is a
-/// normally-completed job — `failed` lists the task indices whose panics
-/// were contained and rolled back (empty on a clean job); `None` is a
-/// job-level panic outside every per-task guard, which the coordinator
-/// escalates.
-type Done = (usize, Option<Vec<u32>>, u64);
+/// One pool completion message.
+enum Done {
+    /// Job-level completion — the gather unit, one per submitted
+    /// [`Job`]: the worker slot, the job outcome, and the busy nanos of
+    /// the job's *successful* tasks. `Some(failed)` is a
+    /// normally-completed job — `failed` lists the task indices whose
+    /// panics were contained and rolled back (empty on a clean job);
+    /// `None` is a job-level panic outside every per-task guard, which
+    /// the coordinator escalates.
+    Job {
+        worker: usize,
+        outcome: Option<Vec<u32>>,
+        busy: u64,
+    },
+    /// Per-task progress under the ticketed protocol (sent only when
+    /// the job was dispatched with [`Job::per_task`]): task `task`
+    /// finished sampling successfully (`ok`) or panicked and was rolled
+    /// back (`!ok`, a revoked ticket). The send happens-after the
+    /// worker's writes to the task's delta and nanos slots.
+    Task { task: usize, ok: bool },
+}
 
 fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
     // Long-lived kernel (and thereby scratch): built on the first epoch,
@@ -738,10 +1041,11 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
                 let delta = unsafe { (*job.deltas.add(i)).as_mut_slice() };
                 let id = unsafe { *job.ids.add(i) };
                 let kr = kernel.get(job.kernel);
-                match run_task_guarded(&spec, id, block, delta, kr, &mut backup) {
+                let ok = match run_task_guarded(&spec, id, block, delta, kr, &mut backup) {
                     Ok(dt) => {
                         unsafe { *job.nanos.add(i) = dt };
                         busy += dt;
+                        true
                     }
                     Err(()) => {
                         // Contained and rolled back; the coordinator
@@ -749,7 +1053,15 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
                         // kernel's scratch — rebuild before the next task.
                         kernel = KernelSlot::default();
                         failed.push(i as u32);
+                        false
                     }
+                };
+                if job.per_task {
+                    // Ticketed protocol: stream the ticket to the
+                    // committer while the rest of the job keeps
+                    // sampling. A send error means the coordinator is
+                    // gone; the final job message below will notice.
+                    let _ = done.send(Done::Task { task: i, ok });
                 }
             };
             if job.queue.is_null() {
@@ -773,10 +1085,10 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
             (busy, failed)
         }));
         let msg: Done = match result {
-            Ok((busy, failed)) => (job.worker, Some(failed), busy),
+            Ok((busy, failed)) => Done::Job { worker: job.worker, outcome: Some(failed), busy },
             Err(_) => {
                 kernel = KernelSlot::default();
-                (job.worker, None, 0)
+                Done::Job { worker: job.worker, outcome: None, busy: 0 }
             }
         };
         if done.send(msg).is_err() {
@@ -878,6 +1190,19 @@ impl WorkerPool {
         self.panics[w] = 0;
         self.respawns += 1;
     }
+
+    /// Receive the next *job-level* completion. Only valid when no
+    /// outstanding job was dispatched with `per_task` (the barrier path
+    /// and the ticketed retry rounds): a stray per-task message here
+    /// would mean the gather accounting is broken, so it panics.
+    fn recv_job(&self) -> (usize, Option<Vec<u32>>, u64) {
+        match self.done_rx.recv().expect("pool worker died") {
+            Done::Job { worker, outcome, busy } => (worker, outcome, busy),
+            Done::Task { task, .. } => {
+                panic!("unexpected per-task message (task {task}) outside a ticketed gather")
+            }
+        }
+    }
 }
 
 impl Executor for WorkerPool {
@@ -934,6 +1259,7 @@ impl Executor for WorkerPool {
                 sweep: spec.sweep,
                 kernel: spec.kernel,
                 worker: w,
+                per_task: false,
             };
             self.senders[w].send(job).expect("pool worker died");
             submitted += 1;
@@ -943,7 +1269,7 @@ impl Executor for WorkerPool {
         let mut job_panicked = false;
         let mut failed: Vec<u32> = Vec::new();
         for _ in 0..submitted {
-            let (w, outcome, busy) = self.done_rx.recv().expect("pool worker died");
+            let (w, outcome, busy) = self.recv_job();
             tasks.worker_nanos[w] += busy;
             match outcome {
                 Some(f) => {
@@ -991,11 +1317,12 @@ impl Executor for WorkerPool {
                 sweep: spec.sweep,
                 kernel: spec.kernel,
                 worker: target,
+                per_task: false,
             };
             self.senders[target].send(job).expect("pool worker died");
             // `failed` must stay alive and unmodified until this recv
             // returns: the worker reads `assign` through a raw pointer.
-            let (w, outcome, busy) = self.done_rx.recv().expect("pool worker died");
+            let (w, outcome, busy) = self.recv_job();
             tasks.worker_nanos[w] += busy;
             match outcome {
                 Some(f) => {
@@ -1009,6 +1336,182 @@ impl Executor for WorkerPool {
         // Quarantine: replace any worker whose contained panics crossed
         // the threshold. Strictly after the barrier, so every worker is
         // idle and the join inside respawn cannot block on epoch work.
+        for w in 0..self.senders.len() {
+            if self.panics[w] >= QUARANTINE_PANICS {
+                self.respawn(w);
+            }
+        }
+        self.epochs_run += 1;
+    }
+
+    fn run_epoch_ticketed(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        tasks: EpochTasks<'_>,
+        deltas: &mut [Vec<i64>],
+        overlap: &mut dyn FnMut(),
+        commit: &mut dyn FnMut(usize, &[i64], usize),
+    ) {
+        check_tasks(&tasks, deltas);
+        assert!(
+            tasks.assign.len() <= self.senders.len(),
+            "schedule uses {} worker slots but the pool has {} workers",
+            tasks.assign.len(),
+            self.senders.len()
+        );
+        tasks.nanos.fill(0);
+        tasks.worker_nanos.fill(0);
+        let n = tasks.blocks.len();
+        // Scatter, exactly as the barrier path — but with per-task
+        // completion messages switched on.
+        let queue: *const AtomicUsize = if tasks.steal {
+            self.steal_cursor.store(0, Ordering::Relaxed);
+            &self.steal_cursor
+        } else {
+            std::ptr::null()
+        };
+        let blocks_ptr = tasks.blocks.as_mut_ptr();
+        let deltas_ptr = deltas.as_mut_ptr();
+        let nanos_ptr = tasks.nanos.as_mut_ptr();
+        let mut submitted = 0usize;
+        for (w, list) in tasks.assign.iter().enumerate() {
+            let busy_slot = if tasks.steal { w < n } else { !list.is_empty() };
+            if !busy_slot {
+                continue;
+            }
+            let job = Job {
+                blocks: blocks_ptr,
+                ids: tasks.ids.as_ptr(),
+                deltas: deltas_ptr,
+                nanos: nanos_ptr,
+                assign: list.as_ptr(),
+                assign_len: list.len(),
+                queue,
+                n_tasks: n,
+                doc: spec.doc.base_ptr(),
+                doc_rows: spec.doc.rows(),
+                emit: spec.emit.base_ptr(),
+                emit_rows: spec.emit.rows(),
+                snapshot: spec.snapshot.as_ptr(),
+                h: spec.h,
+                seed: spec.seed,
+                sweep: spec.sweep,
+                kernel: spec.kernel,
+                worker: w,
+                per_task: true,
+            };
+            self.senders[w].send(job).expect("pool worker died");
+            submitted += 1;
+        }
+        // Dispatch done — the caller's overlapped IO (spill
+        // release/prefetch) runs now, in the shadow of sampling.
+        overlap();
+        // Streaming gather: per-task tickets interleave with job
+        // completions on the shared channel; fold the contiguous ready
+        // prefix as it forms, so commit work hides inside the epoch's
+        // sampling tail instead of serializing after it.
+        let mut committer = TicketCommitter::new(n);
+        let mut job_panicked = false;
+        let mut failed: Vec<u32> = Vec::new();
+        let mut jobs_done = 0usize;
+        while jobs_done < submitted {
+            match self.done_rx.recv().expect("pool worker died") {
+                Done::Task { task, ok } => {
+                    if ok {
+                        committer.mark_ready(task);
+                        while let Some(c) = committer.next_committable() {
+                            // SAFETY: ticket `c`'s completion message
+                            // has been received; its claimer's last
+                            // write to the delta slot happens-before
+                            // that send, and a claimed slot is never
+                            // touched again.
+                            let delta = unsafe { (*deltas_ptr.add(c)).as_slice() };
+                            commit(c, delta, committer.in_flight());
+                            committer.advance();
+                        }
+                    }
+                    // `!ok`: the ticket is revoked — the watermark
+                    // stalls there until a retry round re-arms it.
+                }
+                Done::Job { worker, outcome, busy } => {
+                    tasks.worker_nanos[worker] += busy;
+                    match outcome {
+                        Some(f) => {
+                            self.panics[worker] += f.len() as u64;
+                            failed.extend_from_slice(&f);
+                        }
+                        None => job_panicked = true,
+                    }
+                    jobs_done += 1;
+                }
+            }
+        }
+        assert!(!job_panicked, "a pool worker panicked during the epoch");
+        // Retry rounds, as in the barrier path (job-level completions
+        // only — the retry job runs with `per_task` off). Every task a
+        // round recovers re-arms its revoked ticket; the retry derives
+        // the same `(seed, sweep, partition)` RNG stream, so the delta
+        // it commits is the one an undisturbed run would have, and the
+        // watermark drains in canonical ticket order regardless of how
+        // many rounds it takes.
+        let mut round = 1u32;
+        while !failed.is_empty() {
+            assert!(
+                round < MAX_TASK_ATTEMPTS,
+                "tasks {failed:?} panicked {MAX_TASK_ATTEMPTS} times; giving up"
+            );
+            failed.sort_unstable();
+            let target = (0..self.senders.len())
+                .min_by_key(|&w| (self.panics[w], w))
+                .expect("pool has workers");
+            self.retries += failed.len() as u64;
+            let job = Job {
+                blocks: tasks.blocks.as_mut_ptr(),
+                ids: tasks.ids.as_ptr(),
+                deltas: deltas.as_mut_ptr(),
+                nanos: tasks.nanos.as_mut_ptr(),
+                assign: failed.as_ptr(),
+                assign_len: failed.len(),
+                queue: std::ptr::null(),
+                n_tasks: n,
+                doc: spec.doc.base_ptr(),
+                doc_rows: spec.doc.rows(),
+                emit: spec.emit.base_ptr(),
+                emit_rows: spec.emit.rows(),
+                snapshot: spec.snapshot.as_ptr(),
+                h: spec.h,
+                seed: spec.seed,
+                sweep: spec.sweep,
+                kernel: spec.kernel,
+                worker: target,
+                per_task: false,
+            };
+            self.senders[target].send(job).expect("pool worker died");
+            // `failed` must stay alive and unmodified until this recv
+            // returns: the worker reads `assign` through a raw pointer.
+            let (w, outcome, busy) = self.recv_job();
+            tasks.worker_nanos[w] += busy;
+            let still = match outcome {
+                Some(f) => f,
+                None => panic!("a pool worker panicked during the epoch"),
+            };
+            self.panics[w] += still.len() as u64;
+            // Re-arm the tickets this round recovered, then drain the
+            // watermark (the retry worker is idle now, so direct delta
+            // reads are race-free).
+            for &i in &failed {
+                if !still.contains(&i) {
+                    committer.mark_ready(i as usize);
+                }
+            }
+            while let Some(c) = committer.next_committable() {
+                commit(c, &deltas[c], committer.in_flight());
+                committer.advance();
+            }
+            failed = still;
+            round += 1;
+        }
+        assert!(committer.finished(), "ticketed epoch left uncommitted tickets");
         for w in 0..self.senders.len() {
             if self.panics[w] >= QUARANTINE_PANICS {
                 self.respawn(w);
@@ -1181,6 +1684,119 @@ mod tests {
 
     fn run_mode(mode: ExecMode, epochs: usize) -> (Vec<TokenBlock>, LdaCounts) {
         run_assignment(mode, epochs, |_| identity_assign(2), 2)
+    }
+
+    /// Ticketed-protocol mirror of `run_case`: drives the same epochs
+    /// through `run_epoch_ticketed`, folding each ticket's delta into
+    /// the topic totals via `commit_delta` and republishing the
+    /// snapshot once per epoch — the trainer-side ticketed protocol.
+    /// Also pins the executor contract: `overlap` fires exactly once
+    /// per epoch, tickets commit in strictly ascending order, and the
+    /// final ticket commits with nothing left in flight.
+    fn run_case_ticketed(
+        mode: ExecMode,
+        kernel: KernelKind,
+        epochs: usize,
+        assign_of: impl Fn(usize) -> Vec<Vec<u32>>,
+        workers: usize,
+        steal: bool,
+        seed: u64,
+    ) -> (Vec<TokenBlock>, LdaCounts) {
+        let k = 4;
+        let (mut blocks, mut counts, h) = diagonal_fixture(k, 7);
+        let n = blocks.len();
+        let ids = [0u64, 1];
+        let mut engines = EngineCache::new(workers);
+        let mut deltas = vec![vec![0i64; k]; n];
+        let mut nanos = vec![0u64; n];
+        let mut snapshot = counts.topic.clone();
+        for e in 0..epochs {
+            let assign = assign_of(e);
+            let mut worker_nanos = vec![0u64; assign.len()];
+            let spec = EpochSpec {
+                doc: SharedRows::new(&mut counts.doc_topic, k),
+                emit: SharedRows::new(&mut counts.word_topic, k),
+                snapshot: &snapshot,
+                h,
+                seed,
+                sweep: e,
+                kernel,
+            };
+            let tasks = EpochTasks {
+                blocks: &mut blocks,
+                ids: &ids,
+                assign: &assign,
+                nanos: &mut nanos,
+                worker_nanos: &mut worker_nanos,
+                steal,
+            };
+            let mut overlaps = 0u32;
+            let mut next_ticket = 0usize;
+            let topic = &mut counts.topic;
+            engines.get(mode).run_epoch_ticketed(
+                &spec,
+                tasks,
+                &mut deltas,
+                &mut || overlaps += 1,
+                &mut |t, delta, in_flight| {
+                    assert_eq!(t, next_ticket, "tickets commit in strict order");
+                    next_ticket = t + 1;
+                    assert!(in_flight < n, "in_flight counts only unsampled tasks");
+                    if t + 1 == n {
+                        assert_eq!(in_flight, 0, "last ticket commits after drain");
+                    }
+                    commit_delta(topic, delta);
+                },
+            );
+            assert_eq!(overlaps, 1, "overlap hook fires exactly once");
+            assert_eq!(next_ticket, n, "every ticket committed");
+            let task_total: u64 = nanos.iter().sum();
+            let busy_total: u64 = worker_nanos.iter().sum();
+            assert_eq!(task_total, busy_total, "{mode:?} ticketed steal={steal}");
+            snapshot.copy_from_slice(&counts.topic);
+        }
+        (blocks, counts)
+    }
+
+    #[test]
+    fn ticketed_matches_barrier_for_every_mode_and_kernel() {
+        // The ticketed protocol changes when deltas fold, never what
+        // they fold to: for each kernel, every executor under the
+        // ticketed protocol (static and stealing, plus a packed task
+        // list) matches the barrier Sequential oracle bit for bit.
+        for kernel in KernelKind::all() {
+            let (bs, cs) =
+                run_case(ExecMode::Sequential, kernel, 3, |_| identity_assign(2), 2, false, 99);
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                for steal in [false, true] {
+                    let (b, c) = run_case_ticketed(
+                        mode,
+                        kernel,
+                        3,
+                        |_| identity_assign(2),
+                        2,
+                        steal,
+                        99,
+                    );
+                    for (x, y) in bs.iter().zip(b.iter()) {
+                        assert_eq!(x.z, y.z, "{kernel:?} {mode:?} steal={steal}");
+                    }
+                    assert_eq!(cs.doc_topic, c.doc_topic, "{kernel:?} {mode:?} steal={steal}");
+                    assert_eq!(cs.word_topic, c.word_topic, "{kernel:?} {mode:?} steal={steal}");
+                    assert_eq!(cs.topic, c.topic, "{kernel:?} {mode:?} steal={steal}");
+                }
+            }
+            // A packed task list (both tasks on one worker) changes
+            // nothing under the ticketed protocol either.
+            let (bp, cp) =
+                run_case_ticketed(ExecMode::Pooled, kernel, 3, |_| vec![vec![0, 1]], 1, false, 99);
+            for (x, y) in bs.iter().zip(bp.iter()) {
+                assert_eq!(x.z, y.z, "{kernel:?} ticketed packed");
+            }
+            assert_eq!(cs.topic, cp.topic, "{kernel:?} ticketed packed");
+            let refs: Vec<&TokenBlock> = bp.iter().collect();
+            assert!(cp.check_consistency(&refs).is_ok(), "{kernel:?}");
+        }
     }
 
     #[test]
@@ -1482,7 +2098,7 @@ mod tests {
     #[cfg(feature = "failpoints")]
     mod fault_injection {
         use super::*;
-        use crate::util::fault::{install, Fault, FaultKind};
+        use crate::util::fault::{install, sites, Fault, FaultKind};
 
         /// One injected worker panic per epoch, at a chosen partition:
         /// every executor must contain it, roll the task back, retry it
@@ -1501,6 +2117,36 @@ mod tests {
                     Fault { site: "task", key: [SEED, 2, 0], kind: FaultKind::Panic },
                 ]);
                 let (b, c) = run_case(mode, KernelKind::Dense, 3, ident, 2, false, SEED);
+                drop(guard);
+                for (x, y) in bs.iter().zip(b.iter()) {
+                    assert_eq!(x.z, y.z, "{mode:?}");
+                }
+                assert_eq!(cs.doc_topic, c.doc_topic, "{mode:?}");
+                assert_eq!(cs.word_topic, c.word_topic, "{mode:?}");
+                assert_eq!(cs.topic, c.topic, "{mode:?}");
+            }
+        }
+
+        /// A crash *after* sampling but *before* commit (the `commit`
+        /// failpoint), under the ticketed protocol: the contained panic
+        /// revokes the ticket, the watermark stalls, nothing after the
+        /// revoked ticket commits early, and the retry re-executes on
+        /// the same RNG stream — bit-identical to the undisturbed
+        /// barrier Sequential oracle. Mixed with a plain start-of-task
+        /// crash to cover both fault surfaces in one run.
+        #[test]
+        fn precommit_crash_revokes_ticket_and_retries_bit_identically() {
+            const SEED: u64 = 0xFA17_0031;
+            let ident = |_: usize| identity_assign(2);
+            let (bs, cs) =
+                run_case(ExecMode::Sequential, KernelKind::Dense, 3, ident, 2, false, SEED);
+            for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                let guard = install(vec![
+                    Fault { site: sites::COMMIT, key: [SEED, 0, 0], kind: FaultKind::Panic },
+                    Fault { site: sites::COMMIT, key: [SEED, 1, 1], kind: FaultKind::Panic },
+                    Fault { site: sites::TASK, key: [SEED, 2, 0], kind: FaultKind::Panic },
+                ]);
+                let (b, c) = run_case_ticketed(mode, KernelKind::Dense, 3, ident, 2, false, SEED);
                 drop(guard);
                 for (x, y) in bs.iter().zip(b.iter()) {
                     assert_eq!(x.z, y.z, "{mode:?}");

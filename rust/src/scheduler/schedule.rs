@@ -98,6 +98,35 @@ pub fn identity_assign(n: usize) -> Vec<Vec<u32>> {
     (0..n as u32).map(|i| vec![i]).collect()
 }
 
+/// The conflict/eligibility graph between consecutive diagonals — the
+/// dependency structure the ticketed commit protocol serializes on (see
+/// `docs/executor.md`, "Ticketed commit").
+///
+/// Position `m` of diagonal `l` is partition `(m, (m+l) mod P)`. Its
+/// *conflict predecessors* are the diagonal-`(l-1)` positions touching
+/// the same count rows:
+///
+/// * position `m` — partition `(m, (m+l-1) mod P)` shares **row** `m`
+///   (the same document-count rows);
+/// * position `(m+1) mod P` — partition `((m+1) mod P, (m+l) mod P)`
+///   shares **column** `(m+l) mod P` (the same emission-count rows),
+///   since `m' + (l-1) ≡ m + l (mod P)` solves to `m' = (m+1) mod P`.
+///
+/// No other diagonal-`(l-1)` position conflicts (rows and columns are
+/// each hit exactly once per diagonal), so a diagonal-`l` task is
+/// *eligible* as soon as these two predecessors have committed. The
+/// topic-total snapshot every task samples against adds a third,
+/// stronger dependency — each task reads the totals as of the end of
+/// diagonal `l-1`, i.e. *all* of its tasks — which is why the executor
+/// run-ahead pipelines the commit stage rather than sampling across
+/// diagonals; see `docs/executor.md`.
+pub fn conflict_predecessors(m: usize, p: usize) -> Vec<usize> {
+    if p == 1 {
+        return vec![0];
+    }
+    vec![m, (m + 1) % p]
+}
+
 /// One epoch's worker assignment over the diagonal's partitions.
 #[derive(Clone, Debug)]
 pub struct EpochPlan {
@@ -610,6 +639,82 @@ mod tests {
                 }
             }
             assert!(seen.iter().all(|&s| s), "some partition never scheduled");
+        });
+    }
+
+    /// Eligibility-graph unit test: the conflict predecessors of every
+    /// diagonal-`l` position are exactly the diagonal-`(l-1)` positions
+    /// sharing a row or column with it — no in-flight pair within a
+    /// diagonal ever conflicts, and nothing outside the predecessor set
+    /// does either.
+    #[test]
+    fn conflict_predecessors_are_exactly_the_row_column_sharers() {
+        for p in [1usize, 2, 3, 4, 7, 8] {
+            for l in 0..p {
+                for m in 0..p {
+                    let n = (m + l) % p;
+                    let preds = conflict_predecessors(m, p);
+                    assert!(!preds.is_empty());
+                    for m2 in 0..p {
+                        // Diagonal l-1 position m2 = partition
+                        // (m2, (m2 + l - 1) mod p).
+                        let n2 = (m2 + l + p - 1) % p;
+                        let conflicts = m2 == m || n2 == n;
+                        assert_eq!(
+                            preds.contains(&m2),
+                            conflicts,
+                            "p={p} l={l}: diag-l pos {m} vs diag-(l-1) pos {m2}"
+                        );
+                    }
+                    // Within the same diagonal nothing conflicts: every
+                    // other position has a different row and column.
+                    for m2 in 0..p {
+                        if m2 != m {
+                            assert_ne!((m2 + l) % p, n, "in-flight tasks share a column");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property form over random packed schedules: tasks in flight
+    /// together (same diagonal, any worker grouping) never share a row
+    /// or column, and each task's predecessor set covers every
+    /// row/column sharer in the previous diagonal.
+    #[test]
+    fn eligibility_graph_holds_on_random_schedules() {
+        prop::check("eligibility-graph", 0x71C4E7, 24, |rng| {
+            let w = 1 + rng.gen_range(4);
+            let g = 1 + rng.gen_range(3);
+            let p = g * w;
+            let bow = prop::gen_bow(rng, 30, 30);
+            let plan = partition(&bow, p, Algorithm::A3 { restarts: 1 }, rng.next_u64());
+            let s = Schedule::build(ScheduleKind::Packed { grid_factor: g }, &plan.costs, w);
+            for (l, ep) in s.epochs.iter().enumerate() {
+                let mut rows = vec![false; p];
+                let mut cols = vec![false; p];
+                for list in &ep.assign {
+                    for &m in list {
+                        let m = m as usize;
+                        let n = (m + l) % p;
+                        assert!(!rows[m] && !cols[n], "in-flight conflict at epoch {l}");
+                        rows[m] = true;
+                        cols[n] = true;
+                        if l > 0 {
+                            for m2 in 0..p {
+                                let n2 = (m2 + l - 1) % p;
+                                if m2 == m || n2 == n {
+                                    assert!(
+                                        conflict_predecessors(m, p).contains(&m2),
+                                        "missed predecessor {m2} of (l={l}, m={m})"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
         });
     }
 }

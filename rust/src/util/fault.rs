@@ -25,6 +25,27 @@ use std::path::Path;
 /// Wildcard key component: matches any value at its position.
 pub const ANY: u64 = u64::MAX;
 
+/// The registered probe sites, as constants so tests and probes spell
+/// them identically (a typo'd site name would silently never fire).
+pub mod sites {
+    /// Start of a sampling task, keyed `(seed, sweep, partition)` —
+    /// fires before the first token is sampled.
+    pub const TASK: &str = "task";
+    /// End of a sampling task, keyed `(seed, sweep, partition)` — fires
+    /// after the kernel finished but before the task's delta is
+    /// committed, modeling a worker that crashes between execution and
+    /// commit (the ticketed committer must revoke the ticket; see
+    /// `docs/executor.md`).
+    pub const COMMIT: &str = "commit";
+    /// Spill-block read, keyed `(store path token, partition, ANY)`.
+    pub const SHARD_READ: &str = "shard.read";
+    /// Spill write-back of a block's `z` payload, keyed by store path
+    /// token.
+    pub const SHARD_WRITE_Z: &str = "shard.write_z";
+    /// Spill write-back of a whole block, keyed by store path token.
+    pub const SHARD_WRITE_BLOCK: &str = "shard.write_block";
+}
+
 /// What an armed fault does when its site fires.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
