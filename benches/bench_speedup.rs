@@ -6,9 +6,12 @@
 //! from the measured single-core sampling rate. This regenerates the
 //! paper's speedup narrative on hardware with fewer cores than P.
 
+use std::sync::Arc;
+
 use pplda::corpus::shard::Residency;
 use pplda::corpus::synthetic::{generate, Profile};
 use pplda::kernel::KernelKind;
+use pplda::obs::trace::{EventKind, Tracer};
 use pplda::partition::eta::EtaComparison;
 use pplda::partition::{partition, Algorithm};
 use pplda::scheduler::adaptive::{BalanceMode, Measured};
@@ -90,6 +93,123 @@ fn main() {
     balance_comparison(seed, fast);
     barrier_vs_ticketed(seed, fast);
     out_of_core_smoke(seed, fast);
+    tracing_overhead(seed, fast);
+}
+
+/// Observability contract: per-task span tracing must be (a) strictly
+/// observational — traced training is bit-identical to untraced
+/// (asserted) — and (b) cheap enough that the untraced path shows no
+/// wallclock regression and the traced path stays within noise of it
+/// (asserted in slow mode only; FAST micro-runs are hiccup-dominated).
+/// Also asserts full span coverage: exactly one Task span per scheduled
+/// task, none lost to ring overflow. Emits a `BENCH_JSON
+/// tracing_overhead` line for the perf trajectory.
+fn tracing_overhead(seed: u64, fast: bool) {
+    let w = 4usize;
+    let g = 4usize;
+    let grid = g * w;
+    let topics = if fast { 16 } else { 64 };
+    let sweeps = if fast { 3 } else { 10 };
+    let restarts = if fast { 10 } else { 50 };
+    let bow = generate(&Profile::nips_like(), seed);
+    let plan = partition(&bow, grid, Algorithm::A3 { restarts }, seed);
+    println!(
+        "\ntracing overhead: D={} W={} N={} K={topics} grid={grid} workers={w} \
+         ({sweeps} sweeps/mode, ticketed pooled)",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    let mut table = Table::new(["tracing", "sweep_ms", "events", "dropped"]);
+    let mut rows = Vec::new();
+    let mut wall = Vec::new();
+    let mut topic_counts: Vec<Vec<u32>> = Vec::new();
+    for traced in [false, true] {
+        let mut lda = ParallelLda::init_scheduled(
+            &bow,
+            &plan,
+            topics,
+            0.5,
+            0.1,
+            seed,
+            ScheduleKind::Packed { grid_factor: g },
+            w,
+        );
+        lda.set_commit(CommitMode::Ticketed);
+        let tracer = traced.then(|| Arc::new(Tracer::new(w)));
+        lda.set_tracer(tracer.clone());
+        lda.sweep(ExecMode::Pooled); // warm: pool, scratch
+        let t = std::time::Instant::now();
+        for _ in 0..sweeps {
+            lda.sweep(ExecMode::Pooled);
+        }
+        let per_sweep = t.elapsed().as_secs_f64() / sweeps as f64;
+        let (events, dropped, task_spans) = match &tracer {
+            Some(tr) => {
+                let evs = tr.take();
+                let tasks = evs.iter().filter(|e| e.kind == EventKind::Task).count();
+                (evs.len() as u64, tr.dropped(), tasks as u64)
+            }
+            None => (0, 0, 0),
+        };
+        table.row([
+            if traced { "on" } else { "off" }.to_string(),
+            format!("{:.3}", per_sweep * 1e3),
+            events.to_string(),
+            dropped.to_string(),
+        ]);
+        let mut j = Json::obj();
+        j.set("tracing", traced)
+            .set("sweep_secs", per_sweep)
+            .set("events", events)
+            .set("dropped", dropped);
+        rows.push(j);
+        wall.push(per_sweep);
+        topic_counts.push(lda.counts.topic.clone());
+        if traced {
+            assert_eq!(dropped, 0, "trace rings overflowed");
+            // Warm sweep + timed sweeps, grid x grid tasks per sweep,
+            // each covered by exactly one Task span.
+            let expect = ((sweeps + 1) * grid * grid) as u64;
+            assert_eq!(
+                task_spans, expect,
+                "trace must cover every scheduled task exactly once"
+            );
+        }
+    }
+    println!("{}", table.to_aligned());
+    assert_eq!(
+        topic_counts[0], topic_counts[1],
+        "traced training must be bit-identical to untraced"
+    );
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "tracing_overhead")
+        .set("corpus", "nips-like")
+        .set("workers", w)
+        .set("grid_factor", g)
+        .set("topics", topics)
+        .set("sweeps", sweeps)
+        .set("results", rows);
+    println!("BENCH_JSON {}", summary.to_string());
+    println!(
+        "traced/untraced wallclock = {:.3}x (bit-identical counts)",
+        wall[1] / wall[0].max(1e-12)
+    );
+
+    // Wallclock bound: slow mode only (micro-benchmark noise; see the
+    // executor-overhead bench for the rationale).
+    if fast {
+        return;
+    }
+    assert!(
+        wall[1] <= wall[0] * 1.25,
+        "tracing overhead broke the noise bound: {:.4}s traced vs {:.4}s untraced per sweep",
+        wall[1],
+        wall[0]
+    );
 }
 
 /// Tentpole payoff: the scatter → epoch-barrier → gather protocol vs the

@@ -5,6 +5,7 @@
 //! LPT packing, since their cost matrices differ).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::bot::counts::BotCounts;
@@ -13,13 +14,15 @@ use crate::corpus::shard::{Residency, ShardedBlocks, ShardStore};
 use crate::corpus::timestamps::TimestampedCorpus;
 use crate::gibbs::tokens::TokenBlock;
 use crate::kernel::KernelKind;
+use crate::obs::metrics::{Family, Phase as MetricPhase, Registry};
+use crate::obs::trace::{Event, EventKind, Tracer};
 use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::exec::{build_blocks, CommitMode, ExecMode, SweepStats};
 use crate::scheduler::pool::{
-    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, WorkerPool,
+    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, TaskObs, WorkerPool,
 };
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
@@ -165,6 +168,14 @@ pub struct ParallelBot {
     task_nanos: Vec<u64>,
     /// Per-worker busy nanos (telemetry scratch, shared by phases).
     worker_nanos: Vec<u64>,
+    /// Structured tracer, when attached (`--trace-out`). Strictly
+    /// observational; word tasks carry family 0, timestamp tasks
+    /// family 1.
+    tracer: Option<Arc<Tracer>>,
+    /// Metrics registry both phases account into (word = `Family::Word`,
+    /// timestamp = `Family::Stamp`); the per-sweep `SweepStats` pairs
+    /// and the report `PhaseTimer` are views over it.
+    metrics: Registry,
 }
 
 impl ParallelBot {
@@ -272,6 +283,8 @@ impl ParallelBot {
             deltas: vec![vec![0i64; h.k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
+            tracer: None,
+            metrics: Registry::new(),
         })
     }
 
@@ -354,6 +367,8 @@ impl ParallelBot {
             deltas: vec![vec![0i64; h.k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
+            tracer: None,
+            metrics: Registry::new(),
         })
     }
 
@@ -405,6 +420,26 @@ impl ParallelBot {
     /// Worker slots the current schedules run on.
     pub fn workers(&self) -> usize {
         self.word.schedule.workers
+    }
+
+    /// Attach (or detach) a structured tracer. Subsequent sweeps emit
+    /// per-task spans (word phase = family 0, timestamp phase =
+    /// family 1) and commit spans into its ring buffers, drained at
+    /// each sweep boundary. Strictly observational: results are
+    /// bit-identical with or without it.
+    pub fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
+        self.tracer = tracer;
+    }
+
+    /// The attached tracer, if any.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// The trainer's metrics registry (both phases account into it;
+    /// the report phase breakdown is a view over this).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Select the sampling kernel for both phases of subsequent sweeps.
@@ -480,6 +515,12 @@ impl ParallelBot {
             workers: self.stamp.schedule.workers,
             ..SweepStats::default()
         };
+        // Phase seconds are accumulated in the registry (word phase
+        // under `Family::Word`, timestamp under `Family::Stamp`); the
+        // sweep snapshots the accounts and reports its increments as
+        // the two `SweepStats` below.
+        let phases0 = self.metrics.phase_snapshot();
+        let sweep_t0 = self.tracer.as_deref().map(Tracer::now);
         // Spill write-backs during this sweep carry the sweep count they
         // complete (see `ShardedBlocks::set_stamp`).
         self.word.shards.set_stamp(sweep_no as u64 + 1);
@@ -494,7 +535,8 @@ impl ParallelBot {
         self.word_snapshot.copy_from_slice(&self.counts.topic_words);
         self.stamp_snapshot
             .copy_from_slice(&self.counts.topic_stamps);
-        wstats.update_secs += update_started.elapsed().as_secs_f64();
+        self.metrics
+            .add_phase(Family::Word, MetricPhase::Update, update_started.elapsed());
 
         if self.commit == CommitMode::Ticketed {
             self.ticketed_epochs(mode, &mut wstats, &mut sstats, sweep_no, steal);
@@ -528,8 +570,62 @@ impl ParallelBot {
             self.stamp.estimator.repack(&mut self.stamp.schedule, &self.stamp.costs);
         }
         let dt = update_started.elapsed().as_secs_f64() / 2.0;
-        wstats.update_secs += dt;
-        sstats.update_secs += dt;
+        self.metrics
+            .add_phase_secs(Family::Word, MetricPhase::Update, dt);
+        self.metrics
+            .add_phase_secs(Family::Stamp, MetricPhase::Update, dt);
+
+        // Both `SweepStats` second-buckets are views over the registry:
+        // this sweep's increments of each family's phase accounts.
+        let m = &self.metrics;
+        for (family, stats) in [(Family::Word, &mut wstats), (Family::Stamp, &mut sstats)] {
+            stats.sample_secs = m.delta_secs(&phases0, family, MetricPhase::Sample);
+            stats.barrier_secs = m.delta_secs(&phases0, family, MetricPhase::Barrier);
+            stats.update_secs = m.delta_secs(&phases0, family, MetricPhase::Update);
+            stats.commit_secs = m.delta_secs(&phases0, family, MetricPhase::Commit);
+            stats.runahead_secs = m.delta_secs(&phases0, family, MetricPhase::Runahead);
+            stats.io_load_secs = m.delta_secs(&phases0, family, MetricPhase::SpillLoad);
+            stats.io_write_secs = m.delta_secs(&phases0, family, MetricPhase::SpillWrite);
+            m.task_retries.add(stats.task_retries);
+            m.io_retries.add(stats.io_retries);
+            m.tasks
+                .add(stats.task_nanos.iter().map(|v| v.len() as u64).sum());
+            for &ns in stats.task_nanos.iter().flatten() {
+                m.task_ns.observe(ns);
+            }
+            m.observe_eta(family, stats.busy_total_nanos(), stats.crit_nanos());
+        }
+        m.sweeps.inc();
+        let resident =
+            self.word.shards.resident_bytes() + self.stamp.shards.resident_bytes();
+        m.resident_bytes.set(resident);
+        m.peak_resident_bytes.set_max(
+            self.word.shards.peak_resident_bytes() + self.stamp.shards.peak_resident_bytes(),
+        );
+
+        if let Some(tr) = self.tracer.as_deref() {
+            let t0 = sweep_t0.unwrap_or(0);
+            tr.emit(Event {
+                lane: tr.coord_lane(),
+                sweep: sweep_no as u32,
+                t0_ns: t0,
+                dur_ns: tr.now().saturating_sub(t0),
+                ..Event::of(EventKind::Sweep)
+            });
+            for (family, stats) in [(Family::Word, &wstats), (Family::Stamp, &sstats)] {
+                if stats.io_retries > 0 {
+                    tr.emit(Event {
+                        family: family as u8,
+                        lane: tr.io_lane(),
+                        sweep: sweep_no as u32,
+                        t0_ns: tr.now(),
+                        arg: stats.io_retries,
+                        ..Event::of(EventKind::IoRetry)
+                    });
+                }
+            }
+            tr.drain();
+        }
         // Debug builds audit the full two-matrix invariant per sweep so
         // kernel count-delta bugs fail at the offending sweep (see the
         // matching check in `scheduler::exec::ParallelLda::sweep`). The
@@ -570,11 +666,13 @@ impl ParallelBot {
                 // *timestamp* phase's diagonal-l load with the word
                 // sampling below (the phases alternate, so the prefetch
                 // chain is word l → stamp l → word l+1 → ...).
-                wstats.io_load_secs += self
+                let load_secs = self
                     .word
                     .shards
                     .acquire(l)
                     .expect("out-of-core: loading a DW diagonal failed");
+                self.metrics
+                    .add_phase_secs(Family::Word, MetricPhase::SpillLoad, load_secs);
                 self.stamp.shards.prefetch(l);
                 let started = Instant::now();
                 let (diag, ids) = self.word.shards.diag_parts(l);
@@ -592,6 +690,11 @@ impl ParallelBot {
                     seed: self.seed ^ BOT_WORD_SALT,
                     sweep: sweep_no,
                     kernel: self.kernel,
+                    obs: TaskObs {
+                        trace: self.tracer.as_deref(),
+                        epoch: l as u32,
+                        family: Family::Word as u8,
+                    },
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
@@ -604,7 +707,8 @@ impl ParallelBot {
                 self.engines
                     .get(mode)
                     .run_epoch(&spec, tasks, &mut self.deltas[..n]);
-                wstats.sample_secs += started.elapsed().as_secs_f64();
+                self.metrics
+                    .add_phase(Family::Word, MetricPhase::Sample, started.elapsed());
                 let r = self.engines.get(mode).retries();
                 wstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
@@ -616,22 +720,27 @@ impl ParallelBot {
                     &mut self.word_snapshot,
                     &self.deltas[..n],
                 );
-                wstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+                self.metrics
+                    .add_phase(Family::Word, MetricPhase::Barrier, barrier_started.elapsed());
                 wstats.epoch_secs.push(started.elapsed().as_secs_f64());
-                wstats.io_write_secs += self
+                let write_secs = self
                     .word
                     .shards
                     .release(l)
                     .expect("out-of-core: writing a DW diagonal back failed");
+                self.metrics
+                    .add_phase_secs(Family::Word, MetricPhase::SpillWrite, write_secs);
             }
 
             // ---- timestamp phase on DTS diagonal l ----
             {
-                sstats.io_load_secs += self
+                let load_secs = self
                     .stamp
                     .shards
                     .acquire(l)
                     .expect("out-of-core: loading a DTS diagonal failed");
+                self.metrics
+                    .add_phase_secs(Family::Stamp, MetricPhase::SpillLoad, load_secs);
                 // Overlap the next word diagonal's load (the word phase
                 // just wrote diagonal l back, so even P = 1 reads fresh
                 // state for the next sweep).
@@ -652,6 +761,11 @@ impl ParallelBot {
                     seed: self.seed ^ BOT_STAMP_SALT,
                     sweep: sweep_no,
                     kernel: self.kernel,
+                    obs: TaskObs {
+                        trace: self.tracer.as_deref(),
+                        epoch: l as u32,
+                        family: Family::Stamp as u8,
+                    },
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
@@ -664,7 +778,8 @@ impl ParallelBot {
                 self.engines
                     .get(mode)
                     .run_epoch(&spec, tasks, &mut self.deltas[..n]);
-                sstats.sample_secs += started.elapsed().as_secs_f64();
+                self.metrics
+                    .add_phase(Family::Stamp, MetricPhase::Sample, started.elapsed());
                 let r = self.engines.get(mode).retries();
                 sstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
@@ -676,13 +791,16 @@ impl ParallelBot {
                     &mut self.stamp_snapshot,
                     &self.deltas[..n],
                 );
-                sstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+                self.metrics
+                    .add_phase(Family::Stamp, MetricPhase::Barrier, barrier_started.elapsed());
                 sstats.epoch_secs.push(started.elapsed().as_secs_f64());
-                sstats.io_write_secs += self
+                let write_secs = self
                     .stamp
                     .shards
                     .release(l)
                     .expect("out-of-core: writing a DTS diagonal back failed");
+                self.metrics
+                    .add_phase_secs(Family::Stamp, MetricPhase::SpillWrite, write_secs);
             }
         }
     }
@@ -713,11 +831,13 @@ impl ParallelBot {
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
             {
-                wstats.io_load_secs += self
+                let load_secs = self
                     .word
                     .shards
                     .acquire(l)
                     .expect("out-of-core: loading a DW diagonal failed");
+                self.metrics
+                    .add_phase_secs(Family::Word, MetricPhase::SpillLoad, load_secs);
                 let started = Instant::now();
                 let (diag, ids) = self.word.shards.diag_parts(l);
                 let ep = &self.word.schedule.epochs[l];
@@ -734,6 +854,11 @@ impl ParallelBot {
                     seed: self.seed ^ BOT_WORD_SALT,
                     sweep: sweep_no,
                     kernel: self.kernel,
+                    obs: TaskObs {
+                        trace: self.tracer.as_deref(),
+                        epoch: l as u32,
+                        family: Family::Word as u8,
+                    },
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
@@ -759,9 +884,10 @@ impl ParallelBot {
                     stamp_shards.prefetch(l);
                 };
                 let topic_words = &mut self.counts.topic_words;
+                let tr_commit = self.tracer.as_deref();
                 let mut runahead = 0.0f64;
                 let mut blocking = 0.0f64;
-                let mut commit = |_t: usize, delta: &[i64], in_flight: usize| {
+                let mut commit = |t: usize, delta: &[i64], in_flight: usize| {
                     let fold_started = Instant::now();
                     commit_delta(topic_words, delta);
                     let secs = fold_started.elapsed().as_secs_f64();
@@ -769,6 +895,20 @@ impl ParallelBot {
                         runahead += secs;
                     } else {
                         blocking += secs;
+                    }
+                    if let Some(tr) = tr_commit {
+                        let dur = (secs * 1e9) as u64;
+                        tr.emit(Event {
+                            family: Family::Word as u8,
+                            lane: tr.coord_lane(),
+                            sweep: sweep_no as u32,
+                            epoch: l as u32,
+                            ticket: t as u32,
+                            t0_ns: tr.now().saturating_sub(dur),
+                            dur_ns: dur,
+                            arg: in_flight as u64,
+                            ..Event::of(EventKind::Commit)
+                        });
                     }
                 };
                 self.engines.get(mode).run_epoch_ticketed(
@@ -778,10 +918,11 @@ impl ParallelBot {
                     &mut overlap,
                     &mut commit,
                 );
-                wstats.sample_secs += started.elapsed().as_secs_f64();
-                sstats.io_write_secs += stamp_io_write;
-                wstats.runahead_secs += runahead;
-                wstats.commit_secs += blocking;
+                let m = &self.metrics;
+                m.add_phase(Family::Word, MetricPhase::Sample, started.elapsed());
+                m.add_phase_secs(Family::Stamp, MetricPhase::SpillWrite, stamp_io_write);
+                m.add_phase_secs(Family::Word, MetricPhase::Runahead, runahead);
+                m.add_phase_secs(Family::Word, MetricPhase::Commit, blocking);
                 let r = self.engines.get(mode).retries();
                 wstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
@@ -789,17 +930,20 @@ impl ParallelBot {
                 wstats.worker_nanos.push(self.worker_nanos.clone());
                 let barrier_started = Instant::now();
                 self.word_snapshot.copy_from_slice(&self.counts.topic_words);
-                wstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+                self.metrics
+                    .add_phase(Family::Word, MetricPhase::Barrier, barrier_started.elapsed());
                 wstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
 
             // ---- timestamp phase on DTS diagonal l ----
             {
-                sstats.io_load_secs += self
+                let load_secs = self
                     .stamp
                     .shards
                     .acquire(l)
                     .expect("out-of-core: loading a DTS diagonal failed");
+                self.metrics
+                    .add_phase_secs(Family::Stamp, MetricPhase::SpillLoad, load_secs);
                 let started = Instant::now();
                 let (diag, ids) = self.stamp.shards.diag_parts(l);
                 let ep = &self.stamp.schedule.epochs[l];
@@ -816,6 +960,11 @@ impl ParallelBot {
                     seed: self.seed ^ BOT_STAMP_SALT,
                     sweep: sweep_no,
                     kernel: self.kernel,
+                    obs: TaskObs {
+                        trace: self.tracer.as_deref(),
+                        epoch: l as u32,
+                        family: Family::Stamp as u8,
+                    },
                 };
                 let tasks = EpochTasks {
                     blocks: diag,
@@ -839,9 +988,10 @@ impl ParallelBot {
                     word_shards.prefetch((l + 1) % p);
                 };
                 let topic_stamps = &mut self.counts.topic_stamps;
+                let tr_commit = self.tracer.as_deref();
                 let mut runahead = 0.0f64;
                 let mut blocking = 0.0f64;
-                let mut commit = |_t: usize, delta: &[i64], in_flight: usize| {
+                let mut commit = |t: usize, delta: &[i64], in_flight: usize| {
                     let fold_started = Instant::now();
                     commit_delta(topic_stamps, delta);
                     let secs = fold_started.elapsed().as_secs_f64();
@@ -849,6 +999,20 @@ impl ParallelBot {
                         runahead += secs;
                     } else {
                         blocking += secs;
+                    }
+                    if let Some(tr) = tr_commit {
+                        let dur = (secs * 1e9) as u64;
+                        tr.emit(Event {
+                            family: Family::Stamp as u8,
+                            lane: tr.coord_lane(),
+                            sweep: sweep_no as u32,
+                            epoch: l as u32,
+                            ticket: t as u32,
+                            t0_ns: tr.now().saturating_sub(dur),
+                            dur_ns: dur,
+                            arg: in_flight as u64,
+                            ..Event::of(EventKind::Commit)
+                        });
                     }
                 };
                 self.engines.get(mode).run_epoch_ticketed(
@@ -858,10 +1022,11 @@ impl ParallelBot {
                     &mut overlap,
                     &mut commit,
                 );
-                sstats.sample_secs += started.elapsed().as_secs_f64();
-                wstats.io_write_secs += word_io_write;
-                sstats.runahead_secs += runahead;
-                sstats.commit_secs += blocking;
+                let m = &self.metrics;
+                m.add_phase(Family::Stamp, MetricPhase::Sample, started.elapsed());
+                m.add_phase_secs(Family::Word, MetricPhase::SpillWrite, word_io_write);
+                m.add_phase_secs(Family::Stamp, MetricPhase::Runahead, runahead);
+                m.add_phase_secs(Family::Stamp, MetricPhase::Commit, blocking);
                 let r = self.engines.get(mode).retries();
                 sstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
@@ -870,17 +1035,20 @@ impl ParallelBot {
                 let barrier_started = Instant::now();
                 self.stamp_snapshot
                     .copy_from_slice(&self.counts.topic_stamps);
-                sstats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+                self.metrics
+                    .add_phase(Family::Stamp, MetricPhase::Barrier, barrier_started.elapsed());
                 sstats.epoch_secs.push(started.elapsed().as_secs_f64());
             }
         }
         // The final timestamp diagonal has no following word epoch whose
         // overlap would write it back; settle it here (in-core: no-op).
-        sstats.io_write_secs += self
+        let write_secs = self
             .stamp
             .shards
             .release(p - 1)
             .expect("out-of-core: writing a DTS diagonal back failed");
+        self.metrics
+            .add_phase_secs(Family::Stamp, MetricPhase::SpillWrite, write_secs);
     }
 
     /// The persistent worker pool, if any `Pooled`-mode sweep has run on

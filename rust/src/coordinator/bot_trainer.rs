@@ -2,7 +2,8 @@
 //! independent DW/DTS partition plans.
 
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::bot::parallel::ParallelBot;
 use crate::bot::serial::{BotHyper, SerialBot};
@@ -10,10 +11,12 @@ use crate::bot::timeline::{self, TopicTimeline};
 use crate::coordinator::checkpoint::{self, Manifest};
 use crate::coordinator::config::TrainConfig;
 use crate::corpus::timestamps::TimestampedCorpus;
+use crate::obs::metrics::{Family, Phase};
+use crate::obs::trace::{Event, EventKind, Tracer};
 use crate::partition::{self, Algorithm, Plan};
 use crate::scheduler::cost_model::MeasuredReport;
 use crate::util::json::Json;
-use crate::util::timer::{time_once, PhaseTimer};
+use crate::util::timer::time_once;
 
 #[derive(Clone, Debug)]
 pub struct BotTrainReport {
@@ -118,6 +121,22 @@ pub fn train_bot_checkpointed(
     checkpoint_root: Option<&Path>,
     resume: Option<&Path>,
 ) -> BotTrainReport {
+    train_bot_traced(tc, p, algo, cfg, checkpoint_root, resume, None)
+}
+
+/// As [`train_bot_checkpointed`], with a [`Tracer`] attached to the
+/// parallel engine: both phase families (word = 0, stamp = 1) land their
+/// task/commit/IO events in the tracer's ring buffers. Tracing is
+/// strictly observational — results are bit-identical with and without.
+pub fn train_bot_traced(
+    tc: &TimestampedCorpus,
+    p: usize,
+    algo: Algorithm,
+    cfg: &TrainConfig,
+    checkpoint_root: Option<&Path>,
+    resume: Option<&Path>,
+    tracer: Option<&Arc<Tracer>>,
+) -> BotTrainReport {
     if (checkpoint_root.is_some() || resume.is_some()) && p == 1 {
         panic!("checkpoint/resume requires the partitioned native backend (P > 1)");
     }
@@ -187,46 +206,20 @@ pub fn train_bot_checkpointed(
     bot.set_kernel(cfg.kernel);
     bot.set_balance(cfg.balance);
     bot.set_commit(cfg.commit);
+    bot.set_tracer(tracer.cloned());
     let speedup = {
         let (sdw, sdts) = bot.schedules();
         combined_speedup_scheduled(&plan_dw, &plan_dts, sdw, sdts)
     };
-    // The sweep loop lives here so the driver can bucket wallclock into
-    // the PhaseTimer and accumulate per-phase measured-η telemetry.
-    let mut timer = PhaseTimer::new();
+    // The sweep loop lives here so the driver can meter eval/checkpoint
+    // phases and accumulate per-phase measured-η telemetry. Per-phase
+    // seconds live in the engine's metrics registry (word + stamp
+    // families summed); the report's phase list is a view over it.
     let (mut dw_serial, mut dw_crit) = (0u64, 0u64);
     let (mut dts_serial, mut dts_crit) = (0u64, 0u64);
     let (mut task_retries, mut io_retries) = (0u64, 0u64);
     for it in start + 1..=cfg.iters {
         let (ws, ss) = bot.sweep(cfg.mode);
-        timer.add(
-            "sample",
-            Duration::from_secs_f64(ws.sample_secs + ss.sample_secs),
-        );
-        timer.add(
-            "barrier",
-            Duration::from_secs_f64(ws.barrier_secs + ss.barrier_secs),
-        );
-        timer.add(
-            "update",
-            Duration::from_secs_f64(ws.update_secs + ss.update_secs),
-        );
-        let commit_secs = ws.commit_secs + ss.commit_secs;
-        if commit_secs > 0.0 {
-            timer.add("commit", Duration::from_secs_f64(commit_secs));
-        }
-        let runahead = ws.runahead_secs + ss.runahead_secs;
-        if runahead > 0.0 {
-            timer.add("runahead", Duration::from_secs_f64(runahead));
-        }
-        let io_load = ws.io_load_secs + ss.io_load_secs;
-        if io_load > 0.0 {
-            timer.add("spill_load", Duration::from_secs_f64(io_load));
-        }
-        let io_write = ws.io_write_secs + ss.io_write_secs;
-        if io_write > 0.0 {
-            timer.add("spill_write", Duration::from_secs_f64(io_write));
-        }
         dw_serial += ws.busy_total_nanos();
         dw_crit += ws.crit_nanos();
         dts_serial += ss.busy_total_nanos();
@@ -240,12 +233,24 @@ pub fn train_bot_checkpointed(
                     checkpoint::write_bot(&bot, &m, root)
                         .unwrap_or_else(|e| panic!("checkpoint failed: {e}"));
                 });
-                timer.add("checkpoint", dt);
+                let m = bot.metrics();
+                m.add_phase(Family::Word, Phase::Checkpoint, dt);
+                m.checkpoints.inc();
+                if let Some(tr) = tracer {
+                    let dur = (dt.as_secs_f64() * 1e9) as u64;
+                    tr.emit(Event {
+                        lane: tr.coord_lane(),
+                        sweep: it as u32,
+                        t0_ns: tr.now().saturating_sub(dur),
+                        dur_ns: dur,
+                        ..Event::of(EventKind::Checkpoint)
+                    });
+                }
             }
         }
     }
     let (final_perplexity, dt) = time_once(|| bot.perplexity(tc));
-    timer.add("perplexity", dt);
+    bot.metrics().add_phase(Family::Word, Phase::Perplexity, dt);
     BotTrainReport {
         p,
         workers,
@@ -263,7 +268,7 @@ pub fn train_bot_checkpointed(
         measured_eta_dts: MeasuredReport::of_nanos(workers, dts_serial, dts_crit).eta,
         speedup_model: speedup,
         train_secs: started.elapsed().as_secs_f64(),
-        phases: timer.phases_secs(),
+        phases: bot.metrics().phases_secs(),
         task_retries,
         io_retries,
         timelines: timeline::timelines(&bot.counts, &h),

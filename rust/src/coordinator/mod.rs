@@ -11,7 +11,7 @@ pub mod config;
 pub mod report;
 pub mod trainer;
 
-pub use bot_trainer::{train_bot, train_bot_checkpointed, BotTrainReport};
+pub use bot_trainer::{train_bot, train_bot_checkpointed, train_bot_traced, BotTrainReport};
 pub use config::{Backend, TrainConfig};
 pub use report::TrainReport;
-pub use trainer::{train_lda, train_lda_checkpointed};
+pub use trainer::{train_lda, train_lda_checkpointed, train_lda_traced};

@@ -2,13 +2,16 @@
 //! native or XLA backends.
 
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::coordinator::checkpoint::{self, Manifest};
 use crate::coordinator::config::{Backend, TrainConfig};
 use crate::coordinator::report::TrainReport;
 use crate::corpus::bow::BagOfWords;
 use crate::gibbs::serial::SerialLda;
+use crate::obs::metrics::{Family, Phase};
+use crate::obs::trace::{Event, EventKind, Tracer};
 use crate::partition::eta::EtaComparison;
 use crate::partition::Plan;
 #[cfg(feature = "xla")]
@@ -46,6 +49,22 @@ pub fn train_lda_checkpointed(
     cfg: &TrainConfig,
     checkpoint_root: Option<&Path>,
     resume: Option<&Path>,
+) -> TrainReport {
+    train_lda_traced(bow, plan, cfg, checkpoint_root, resume, None)
+}
+
+/// As [`train_lda_checkpointed`], with a [`Tracer`] attached to the
+/// parallel engine: every task/steal/commit/IO event of the run lands in
+/// the tracer's ring buffers, ready for `obs::export::write_trace` +
+/// `pplda analyze-trace`. Tracing is strictly observational — the
+/// trained model is bit-identical with and without it.
+pub fn train_lda_traced(
+    bow: &BagOfWords,
+    plan: &Plan,
+    cfg: &TrainConfig,
+    checkpoint_root: Option<&Path>,
+    resume: Option<&Path>,
+    tracer: Option<&Arc<Tracer>>,
 ) -> TrainReport {
     if (checkpoint_root.is_some() || resume.is_some())
         && (plan.p == 1 || cfg.backend == Backend::Xla)
@@ -109,6 +128,7 @@ pub fn train_lda_checkpointed(
             lda.set_kernel(cfg.kernel);
             lda.set_balance(cfg.balance);
             lda.set_commit(cfg.commit);
+            lda.set_tracer(tracer.cloned());
             workers = w;
             schedule = cfg.schedule.label();
             schedule_eta = EtaComparison::of(plan, lda.schedule()).schedule.eta;
@@ -117,34 +137,21 @@ pub fn train_lda_checkpointed(
             commit = cfg.commit.name().to_string();
             residency = cfg.residency.label();
             // The sweep loop lives here (not in `ParallelLda::train`) so
-            // the driver can bucket wallclock into the PhaseTimer and
-            // accumulate the measured-η telemetry per sweep.
+            // the driver can meter eval/checkpoint phases and accumulate
+            // the measured-η telemetry per sweep. Per-phase seconds live
+            // in the engine's metrics registry; the report's PhaseTimer
+            // is a view over it, built after the loop.
             let mut curve = Vec::new();
             let (mut serial_nanos, mut crit_nanos) = (0u64, 0u64);
             for it in start + 1..=cfg.iters {
                 let stats = lda.sweep(cfg.mode);
-                timer.add("sample", Duration::from_secs_f64(stats.sample_secs));
-                timer.add("barrier", Duration::from_secs_f64(stats.barrier_secs));
-                timer.add("update", Duration::from_secs_f64(stats.update_secs));
-                if stats.commit_secs > 0.0 {
-                    timer.add("commit", Duration::from_secs_f64(stats.commit_secs));
-                }
-                if stats.runahead_secs > 0.0 {
-                    timer.add("runahead", Duration::from_secs_f64(stats.runahead_secs));
-                }
-                if stats.io_load_secs > 0.0 {
-                    timer.add("spill_load", Duration::from_secs_f64(stats.io_load_secs));
-                }
-                if stats.io_write_secs > 0.0 {
-                    timer.add("spill_write", Duration::from_secs_f64(stats.io_write_secs));
-                }
                 serial_nanos += stats.busy_total_nanos();
                 crit_nanos += stats.crit_nanos();
                 task_retries += stats.task_retries;
                 io_retries += stats.io_retries;
                 if cfg.eval_every > 0 && (it % cfg.eval_every == 0 || it == cfg.iters) {
                     let (pp, dt) = time_once(|| lda.perplexity(bow));
-                    timer.add("perplexity", dt);
+                    lda.metrics().add_phase(Family::Word, Phase::Perplexity, dt);
                     curve.push((it, pp));
                 }
                 if cfg.checkpoint_every > 0 && it % cfg.checkpoint_every == 0 {
@@ -154,7 +161,19 @@ pub fn train_lda_checkpointed(
                             checkpoint::write_lda(&lda, &m, root)
                                 .unwrap_or_else(|e| panic!("checkpoint failed: {e}"));
                         });
-                        timer.add("checkpoint", dt);
+                        let m = lda.metrics();
+                        m.add_phase(Family::Word, Phase::Checkpoint, dt);
+                        m.checkpoints.inc();
+                        if let Some(tr) = tracer {
+                            let dur = (dt.as_secs_f64() * 1e9) as u64;
+                            tr.emit(Event {
+                                lane: tr.coord_lane(),
+                                sweep: it as u32,
+                                t0_ns: tr.now().saturating_sub(dur),
+                                dur_ns: dur,
+                                ..Event::of(EventKind::Checkpoint)
+                            });
+                        }
                     }
                 }
             }
@@ -166,13 +185,14 @@ pub fn train_lda_checkpointed(
                 Some(&(it, pp)) if it == cfg.iters => pp,
                 _ => {
                     let (pp, dt) = time_once(|| lda.perplexity(bow));
-                    timer.add("perplexity", dt);
+                    lda.metrics().add_phase(Family::Word, Phase::Perplexity, dt);
                     pp
                 }
             };
             if curve.is_empty() {
                 curve.push((cfg.iters, fin));
             }
+            timer = lda.metrics().phase_timer();
             (curve, fin)
         }
         (Backend::Xla, _) => train_xla(bow, cfg),

@@ -1013,6 +1013,13 @@ impl ShardedBlocks {
         self.resident_bytes
     }
 
+    /// Token bytes reserved by the in-flight prefetch (0 when none).
+    /// Already counted inside [`Self::resident_bytes`]; surfaced
+    /// separately so tracing can report prefetcher IO load.
+    pub fn inflight_bytes(&self) -> u64 {
+        self.pending.map_or(0, |t| self.diag_bytes[t])
+    }
+
     /// High-water mark of [`Self::resident_bytes`] over the container's
     /// lifetime — what the memory-budget acceptance tests assert on.
     pub fn peak_resident_bytes(&self) -> u64 {

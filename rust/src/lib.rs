@@ -39,6 +39,10 @@
 //!   Compiled only with the `xla` cargo feature (needs the external `xla`
 //!   bindings crate); the default build is dependency-free.
 //! * [`coordinator`] — the training drivers tying everything together.
+//! * [`obs`] — structured tracing (per-task spans into lock-free ring
+//!   buffers, Perfetto/JSONL export, `analyze-trace`) and the metrics
+//!   registry the phase reports are views over (see
+//!   `docs/observability.md`).
 //! * [`util`], [`testing`], [`bench`] — in-tree substrates (PRNG, CLI,
 //!   stats, JSON/TSV, property-testing, bench harness) required by the
 //!   offline build environment.
@@ -64,6 +68,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod gibbs;
 pub mod kernel;
+pub mod obs;
 pub mod partition;
 #[cfg(feature = "xla")]
 pub mod runtime;

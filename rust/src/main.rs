@@ -15,6 +15,7 @@
 //!                  [--residency in-core|spill] [--memory-budget B]
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
+//!                  [--trace-out FILE]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
 //!                  [--schedule diagonal|packed] [--workers W]
@@ -24,18 +25,25 @@
 //!                  [--residency in-core|spill] [--memory-budget B]
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
+//!                  [--trace-out FILE]
+//! pplda analyze-trace FILE
 //! pplda artifacts-check
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
 
-use pplda::coordinator::{train_bot_checkpointed, train_lda_checkpointed, Backend, TrainConfig};
+use pplda::coordinator::{train_bot_traced, train_lda_traced, Backend, TrainConfig};
 use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
 use pplda::corpus::shard::{self, Residency};
 use pplda::corpus::{uci, BagOfWords};
 use pplda::kernel::KernelKind;
+use pplda::obs::analyze::{analyze, render};
+use pplda::obs::export::{read_trace, write_trace};
+use pplda::obs::trace::Tracer;
+use pplda::obs::TraceMeta;
 use pplda::partition::{self, Algorithm};
 #[cfg(feature = "xla")]
 use pplda::runtime::executor::Artifacts;
@@ -52,6 +60,7 @@ fn main() -> ExitCode {
         Some("partition") => cmd_partition(&args),
         Some("train") => cmd_train(&args),
         Some("train-bot") => cmd_train_bot(&args),
+        Some("analyze-trace") => cmd_analyze_trace(&args),
         Some("artifacts-check") => cmd_artifacts_check(),
         other => {
             if let Some(cmd) = other {
@@ -64,12 +73,13 @@ fn main() -> ExitCode {
 }
 
 const USAGE: &str = "\
-usage: pplda <stats|partition|train|train-bot|artifacts-check> [flags]
+usage: pplda <stats|partition|train|train-bot|analyze-trace|artifacts-check> [flags]
 
   stats            print Table-I statistics for a corpus
   partition        run partitioning algorithms, print eta per P (Tables II/III)
   train            train (parallel) LDA, print perplexity curve
   train-bot        train (parallel) Bag of Timestamps, print Table-IV row
+  analyze-trace    reconstruct critical path / idle gaps / eta from a trace
   artifacts-check  verify the AOT artifacts load and execute
 
 common flags: --profile nips|nytimes|mas|tiny   --scale N   --seed S
@@ -113,6 +123,14 @@ atomic on-disk checkpoint under --checkpoint-dir DIR every N sweeps;
 checkpoint dir to scan for the latest) and finishes bit-identically
 to the uninterrupted run (see docs/fault_tolerance.md). Requires the
 partitioned native backend (P > 1).
+
+tracing (train/train-bot): --trace-out FILE records per-task spans and
+scheduler/IO events into per-worker ring buffers and writes them on
+exit — Chrome-trace JSON (Perfetto-loadable) for .json paths, JSONL
+otherwise. `pplda analyze-trace FILE` reconstructs the per-sweep
+critical path, per-worker idle gaps, steal effectiveness, and
+measured eta from the trace (see docs/observability.md). Tracing
+never changes results — traced runs are bit-identical to untraced.
 ";
 
 fn profile(args: &Args) -> Profile {
@@ -245,6 +263,31 @@ fn checkpoint_of(args: &Args) -> (usize, Option<PathBuf>, Option<PathBuf>) {
     (every, dir, resume)
 }
 
+/// Tracing selection: `--trace-out FILE` attaches a [`Tracer`] sized
+/// for `workers` lanes; the trace is written to FILE after training
+/// (Chrome-trace JSON for `.json` paths, JSONL otherwise).
+fn tracer_of(args: &Args, workers: usize) -> Option<(PathBuf, Arc<Tracer>)> {
+    args.get_str("trace-out")
+        .map(|path| (PathBuf::from(path), Arc::new(Tracer::new(workers))))
+}
+
+/// Flush a recorded trace to disk and report where it went.
+fn write_trace_out(path: &Path, tracer: &Tracer, label: String) {
+    let events = tracer.take();
+    let meta = TraceMeta {
+        workers: tracer.workers(),
+        dropped: tracer.dropped(),
+        label,
+    };
+    write_trace(path, &events, &meta).expect("write trace");
+    println!(
+        "wrote {} ({} events, {} dropped)",
+        path.display(),
+        events.len(),
+        meta.dropped
+    );
+}
+
 fn algo_of(name: &str, restarts: usize) -> Algorithm {
     match name {
         "baseline" => Algorithm::Baseline { restarts },
@@ -343,13 +386,18 @@ fn cmd_train(args: &Args) -> ExitCode {
         cfg.commit.name(),
         cfg.residency.label(),
     );
-    let report = train_lda_checkpointed(
+    let trace = tracer_of(args, workers);
+    let report = train_lda_traced(
         &bow,
         &plan,
         &cfg,
         checkpoint_dir.as_deref(),
         resume.as_deref(),
+        trace.as_ref().map(|(_, tr)| tr),
     );
+    if let Some((path, tr)) = &trace {
+        write_trace_out(path, tr, format!("pplda train --profile {name}"));
+    }
     println!(
         "schedule_eta={:.4} measured_eta={:.4} speedup≈{:.2} (vs {} workers)",
         report.schedule_eta, report.measured_eta, report.speedup_model, report.workers
@@ -423,14 +471,19 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         tc.num_stamps,
         tc.dts.num_tokens()
     );
-    let report = train_bot_checkpointed(
+    let trace = tracer_of(args, workers);
+    let report = train_bot_traced(
         &tc,
         p,
         algo,
         &cfg,
         checkpoint_dir.as_deref(),
         resume.as_deref(),
+        trace.as_ref().map(|(_, tr)| tr),
     );
+    if let Some((path, tr)) = &trace {
+        write_trace_out(path, tr, format!("pplda train-bot --profile {}", p_profile.name));
+    }
     println!(
         "P={} workers={} schedule={} kernel={} balance={} commit={} residency={} \
          perplexity={:.4} eta_dw={:.4} eta_dts={:.4} measured_eta_dw={:.4} \
@@ -458,6 +511,33 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         );
     }
     ExitCode::SUCCESS
+}
+
+fn cmd_analyze_trace(args: &Args) -> ExitCode {
+    let Some(path) = args.positional(1) else {
+        eprintln!("usage: pplda analyze-trace FILE");
+        return ExitCode::FAILURE;
+    };
+    let (events, meta) = match read_trace(Path::new(path)) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("analyze-trace: {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if !meta.label.is_empty() {
+        println!("run: {}", meta.label);
+    }
+    match analyze(&events, &meta) {
+        Ok(an) => {
+            print!("{}", render(&an));
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("analyze-trace: {path}: invalid trace: {e}");
+            ExitCode::FAILURE
+        }
+    }
 }
 
 #[cfg(not(feature = "xla"))]

@@ -1,0 +1,491 @@
+//! Trace analyzer backing `pplda analyze-trace`: schema validation
+//! (every scheduled task appears exactly once), per-sweep critical-path
+//! reconstruction, per-worker busy/idle timelines, steal
+//! effectiveness, latency quantiles, and a measured-η recomputed from
+//! raw task spans — cross-checkable against the trainer's own
+//! `measured_eta` (same accounting: busy / (workers · Σ_epoch max-lane
+//! busy)).
+
+use std::collections::BTreeMap;
+
+use crate::obs::export::TraceMeta;
+use crate::obs::metrics::Histogram;
+use crate::obs::trace::{Event, EventKind};
+
+/// Critical-path accounting for one `(family, sweep)`.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub family: u8,
+    pub sweep: u32,
+    pub epochs: u32,
+    pub tasks: u64,
+    /// Serial-equivalent work: Σ task durations.
+    pub busy_ns: u64,
+    /// Critical path: Σ over epochs of the max per-lane busy time.
+    pub crit_ns: u64,
+    /// `busy / (workers · crit)` — the paper's load-balance ratio.
+    pub eta: f64,
+}
+
+/// Busy/steal accounting for one worker lane.
+#[derive(Clone, Debug)]
+pub struct WorkerRow {
+    pub lane: u16,
+    pub tasks: u64,
+    pub busy_ns: u64,
+    /// Tasks this lane executed from the steal queue.
+    pub stolen_tasks: u64,
+    /// Busy nanos of those stolen tasks.
+    pub stolen_ns: u64,
+    /// Idle share vs the measured critical path (0 for the busiest
+    /// lane of every epoch, by construction).
+    pub idle_frac: f64,
+}
+
+/// Everything `analyze-trace` reports.
+#[derive(Debug)]
+pub struct Analysis {
+    pub workers: usize,
+    pub events: usize,
+    pub dropped: u64,
+    pub sweeps: Vec<SweepRow>,
+    pub worker_rows: Vec<WorkerRow>,
+    /// Overall measured-η per family present in the trace.
+    pub eta: Vec<(u8, f64)>,
+    pub busy_ns: u64,
+    pub crit_ns: u64,
+    pub steals: u64,
+    pub rollbacks: u64,
+    pub retries: u64,
+    pub io_retries: u64,
+    pub io_load_ns: u64,
+    pub io_write_ns: u64,
+    pub commit_blocking: u64,
+    pub commit_runahead: u64,
+    pub commit_ns: u64,
+    pub checkpoints: u64,
+    pub peak_resident_bytes: u64,
+    pub task_ns: Histogram,
+    pub queue_wait_ns: Histogram,
+}
+
+impl Analysis {
+    /// Overall measured-η for family 0 (the LDA / BoT-word phase).
+    pub fn measured_eta(&self) -> f64 {
+        self.eta
+            .iter()
+            .find(|(f, _)| *f == 0)
+            .map(|(_, e)| *e)
+            .unwrap_or(1.0)
+    }
+}
+
+/// Validate the span schema and reduce the event stream.
+///
+/// Schema: within each `(family, sweep, epoch)` group, task tickets
+/// must be exactly `{0..n-1}`, each exactly once, with distinct
+/// partitions — i.e. every scheduled task is covered exactly once.
+/// Duplicates always fail; gaps fail only when the recorder reported
+/// no dropped events (a lossy trace can legitimately have holes).
+pub fn analyze(events: &[Event], meta: &TraceMeta) -> Result<Analysis, String> {
+    let workers = meta
+        .workers
+        .max(
+            events
+                .iter()
+                .filter(|e| e.kind == EventKind::Task)
+                .map(|e| e.lane as usize + 1)
+                .max()
+                .unwrap_or(1),
+        )
+        .max(1);
+
+    // (family, sweep, epoch) -> tickets seen, per-lane busy, partitions.
+    #[derive(Default)]
+    struct EpochAcc {
+        tickets: Vec<u32>,
+        partitions: Vec<u64>,
+        lane_busy: BTreeMap<u16, u64>,
+    }
+    let mut groups: BTreeMap<(u8, u32, u32), EpochAcc> = BTreeMap::new();
+    let mut worker_rows: BTreeMap<u16, WorkerRow> = BTreeMap::new();
+    let task_ns = Histogram::new();
+    let queue_wait_ns = Histogram::new();
+    let mut an = Analysis {
+        workers,
+        events: events.len(),
+        dropped: meta.dropped,
+        sweeps: Vec::new(),
+        worker_rows: Vec::new(),
+        eta: Vec::new(),
+        busy_ns: 0,
+        crit_ns: 0,
+        steals: 0,
+        rollbacks: 0,
+        retries: 0,
+        io_retries: 0,
+        io_load_ns: 0,
+        io_write_ns: 0,
+        commit_blocking: 0,
+        commit_runahead: 0,
+        commit_ns: 0,
+        checkpoints: 0,
+        peak_resident_bytes: 0,
+        task_ns: Histogram::new(),
+        queue_wait_ns: Histogram::new(),
+    };
+
+    for ev in events {
+        match ev.kind {
+            EventKind::Task => {
+                if (ev.lane as usize) >= workers {
+                    return Err(format!(
+                        "task span on non-worker lane {} (workers={})",
+                        ev.lane, workers
+                    ));
+                }
+                let g = groups.entry((ev.family, ev.sweep, ev.epoch)).or_default();
+                g.tickets.push(ev.ticket);
+                g.partitions.push(ev.partition);
+                *g.lane_busy.entry(ev.lane).or_default() += ev.dur_ns;
+                let w = worker_rows.entry(ev.lane).or_insert(WorkerRow {
+                    lane: ev.lane,
+                    tasks: 0,
+                    busy_ns: 0,
+                    stolen_tasks: 0,
+                    stolen_ns: 0,
+                    idle_frac: 0.0,
+                });
+                w.tasks += 1;
+                w.busy_ns += ev.dur_ns;
+                task_ns.observe(ev.dur_ns);
+            }
+            EventKind::Steal => {
+                an.steals += 1;
+                let w = worker_rows.entry(ev.lane).or_insert(WorkerRow {
+                    lane: ev.lane,
+                    tasks: 0,
+                    busy_ns: 0,
+                    stolen_tasks: 0,
+                    stolen_ns: 0,
+                    idle_frac: 0.0,
+                });
+                w.stolen_tasks += 1;
+                w.stolen_ns += ev.arg;
+            }
+            EventKind::QueueWait => queue_wait_ns.observe(ev.dur_ns),
+            EventKind::Rollback => an.rollbacks += 1,
+            EventKind::Retry => an.retries += 1,
+            EventKind::IoRetry => an.io_retries += ev.arg,
+            EventKind::IoLoad => an.io_load_ns += ev.dur_ns,
+            EventKind::IoWrite => an.io_write_ns += ev.dur_ns,
+            EventKind::Commit => {
+                an.commit_ns += ev.dur_ns;
+                if ev.arg == 0 {
+                    an.commit_blocking += 1;
+                } else {
+                    an.commit_runahead += 1;
+                }
+            }
+            EventKind::Checkpoint => an.checkpoints += 1,
+            EventKind::ResidentBytes => {
+                an.peak_resident_bytes = an.peak_resident_bytes.max(ev.arg)
+            }
+            _ => {}
+        }
+    }
+
+    // Schema validation + per-sweep critical path.
+    let lossless = meta.dropped == 0;
+    let mut sweep_acc: BTreeMap<(u8, u32), SweepRow> = BTreeMap::new();
+    for ((family, sweep, epoch), g) in &groups {
+        let mut tickets = g.tickets.clone();
+        tickets.sort_unstable();
+        if tickets.windows(2).any(|w| w[0] == w[1]) {
+            return Err(format!(
+                "duplicate task ticket in family {family} sweep {sweep} epoch {epoch}"
+            ));
+        }
+        let mut parts = g.partitions.clone();
+        parts.sort_unstable();
+        if parts.windows(2).any(|w| w[0] == w[1]) {
+            return Err(format!(
+                "duplicate partition in family {family} sweep {sweep} epoch {epoch}"
+            ));
+        }
+        let contiguous = tickets
+            .iter()
+            .enumerate()
+            .all(|(i, &t)| t == i as u32);
+        if lossless && !contiguous {
+            return Err(format!(
+                "ticket gap in family {family} sweep {sweep} epoch {epoch}: \
+                 expected 0..{}, got {:?}",
+                tickets.len(),
+                &tickets[..tickets.len().min(8)]
+            ));
+        }
+        let epoch_busy: u64 = g.lane_busy.values().sum();
+        let epoch_crit: u64 = g.lane_busy.values().copied().max().unwrap_or(0);
+        let row = sweep_acc.entry((*family, *sweep)).or_insert(SweepRow {
+            family: *family,
+            sweep: *sweep,
+            epochs: 0,
+            tasks: 0,
+            busy_ns: 0,
+            crit_ns: 0,
+            eta: 1.0,
+        });
+        row.epochs += 1;
+        row.tasks += g.tickets.len() as u64;
+        row.busy_ns += epoch_busy;
+        row.crit_ns += epoch_crit;
+    }
+
+    let mut fam_busy: BTreeMap<u8, (u64, u64)> = BTreeMap::new();
+    for row in sweep_acc.values_mut() {
+        if row.crit_ns > 0 {
+            row.eta = row.busy_ns as f64 / (workers as f64 * row.crit_ns as f64);
+        }
+        let f = fam_busy.entry(row.family).or_default();
+        f.0 += row.busy_ns;
+        f.1 += row.crit_ns;
+        an.busy_ns += row.busy_ns;
+        an.crit_ns += row.crit_ns;
+    }
+    an.eta = fam_busy
+        .into_iter()
+        .map(|(f, (busy, crit))| {
+            let eta = if crit == 0 {
+                1.0
+            } else {
+                busy as f64 / (workers as f64 * crit as f64)
+            };
+            (f, eta)
+        })
+        .collect();
+    an.sweeps = sweep_acc.into_values().collect();
+
+    // Idle fraction: 1 - busy / crit-path wallclock available to lanes.
+    let crit_total = an.crit_ns.max(1);
+    for w in worker_rows.values_mut() {
+        w.idle_frac = 1.0 - (w.busy_ns as f64 / crit_total as f64).min(1.0);
+    }
+    an.worker_rows = worker_rows.into_values().collect();
+    an.task_ns = task_ns;
+    an.queue_wait_ns = queue_wait_ns;
+    Ok(an)
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Human-readable report for the CLI.
+pub fn render(an: &Analysis) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "trace: {} events, {} workers, {} dropped",
+        an.events, an.workers, an.dropped
+    );
+    for (f, eta) in &an.eta {
+        let name = if *f == 0 { "word" } else { "stamp" };
+        let _ = writeln!(s, "measured_eta[{name}] = {eta:.4}");
+    }
+    let _ = writeln!(
+        s,
+        "critical path: busy {} / crit {} across {} sweep-rows",
+        fmt_ns(an.busy_ns),
+        fmt_ns(an.crit_ns),
+        an.sweeps.len()
+    );
+    if an.task_ns.count() > 0 {
+        let _ = writeln!(
+            s,
+            "task span: n={} p50={} p95={} p99={} max={}",
+            an.task_ns.count(),
+            fmt_ns(an.task_ns.p50()),
+            fmt_ns(an.task_ns.p95()),
+            fmt_ns(an.task_ns.p99()),
+            fmt_ns(an.task_ns.max()),
+        );
+    }
+    if an.queue_wait_ns.count() > 0 {
+        let _ = writeln!(
+            s,
+            "queue wait: n={} p50={} p99={}",
+            an.queue_wait_ns.count(),
+            fmt_ns(an.queue_wait_ns.p50()),
+            fmt_ns(an.queue_wait_ns.p99()),
+        );
+    }
+    let _ = writeln!(s, "workers (busy | idle-gap | stolen):");
+    for w in &an.worker_rows {
+        let _ = writeln!(
+            s,
+            "  lane {:>2}: {:>10} busy  {:>5.1}% idle  {} tasks  {} stolen ({})",
+            w.lane,
+            fmt_ns(w.busy_ns),
+            100.0 * w.idle_frac,
+            w.tasks,
+            w.stolen_tasks,
+            fmt_ns(w.stolen_ns),
+        );
+    }
+    if an.steals > 0 {
+        let stolen_ns: u64 = an.worker_rows.iter().map(|w| w.stolen_ns).sum();
+        let _ = writeln!(
+            s,
+            "steal effectiveness: {} steals moved {} ({:.2}% of busy)",
+            an.steals,
+            fmt_ns(stolen_ns),
+            100.0 * stolen_ns as f64 / an.busy_ns.max(1) as f64
+        );
+    }
+    if an.commit_blocking + an.commit_runahead > 0 {
+        let _ = writeln!(
+            s,
+            "ticketed commits: {} run-ahead, {} blocking, {} fold time",
+            an.commit_runahead,
+            an.commit_blocking,
+            fmt_ns(an.commit_ns)
+        );
+    }
+    if an.io_load_ns + an.io_write_ns > 0 || an.io_retries > 0 {
+        let _ = writeln!(
+            s,
+            "spill io: load {} write {} retries {}",
+            fmt_ns(an.io_load_ns),
+            fmt_ns(an.io_write_ns),
+            an.io_retries
+        );
+    }
+    if an.rollbacks + an.retries > 0 {
+        let _ = writeln!(s, "faults: {} rollbacks, {} retries", an.rollbacks, an.retries);
+    }
+    if an.checkpoints > 0 {
+        let _ = writeln!(s, "checkpoints: {}", an.checkpoints);
+    }
+    if an.peak_resident_bytes > 0 {
+        let _ = writeln!(
+            s,
+            "peak resident+inflight: {:.1} MiB",
+            an.peak_resident_bytes as f64 / (1 << 20) as f64
+        );
+    }
+    let show = an.sweeps.len().min(12);
+    let _ = writeln!(s, "per-sweep critical path (first {show}):");
+    for row in an.sweeps.iter().take(show) {
+        let name = if row.family == 0 { "word" } else { "stamp" };
+        let _ = writeln!(
+            s,
+            "  {name} sweep {:>3}: {:>2} epochs {:>4} tasks busy {:>10} crit {:>10} eta {:.4}",
+            row.sweep,
+            row.epochs,
+            row.tasks,
+            fmt_ns(row.busy_ns),
+            fmt_ns(row.crit_ns),
+            row.eta
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(lane: u16, sweep: u32, epoch: u32, ticket: u32, part: u64, dur: u64) -> Event {
+        Event {
+            lane,
+            sweep,
+            epoch,
+            ticket,
+            partition: part,
+            dur_ns: dur,
+            ..Event::of(EventKind::Task)
+        }
+    }
+
+    #[test]
+    fn eta_matches_hand_computation() {
+        // 2 workers, 1 sweep, 2 epochs; epoch 0: lanes busy 100/50,
+        // epoch 1: 80/80. busy=310, crit=100+80=180, eta=310/(2*180).
+        let evs = vec![
+            task(0, 0, 0, 0, 0, 100),
+            task(1, 0, 0, 1, 3, 50),
+            task(0, 0, 1, 0, 1, 80),
+            task(1, 0, 1, 1, 2, 80),
+        ];
+        let meta = TraceMeta { workers: 2, ..Default::default() };
+        let an = analyze(&evs, &meta).unwrap();
+        let want = 310.0 / (2.0 * 180.0);
+        assert!((an.measured_eta() - want).abs() < 1e-12);
+        assert_eq!(an.sweeps.len(), 1);
+        assert_eq!(an.sweeps[0].epochs, 2);
+        assert_eq!(an.sweeps[0].tasks, 4);
+        assert_eq!(an.busy_ns, 310);
+        assert_eq!(an.crit_ns, 180);
+        // Lane 1 idle: busy 130 of 180 available.
+        let w1 = an.worker_rows.iter().find(|w| w.lane == 1).unwrap();
+        assert!((w1.idle_frac - (1.0 - 130.0 / 180.0)).abs() < 1e-12);
+        assert!(!render(&an).is_empty());
+    }
+
+    #[test]
+    fn schema_rejects_duplicate_ticket() {
+        let evs = vec![task(0, 0, 0, 0, 0, 10), task(1, 0, 0, 0, 1, 10)];
+        let meta = TraceMeta { workers: 2, ..Default::default() };
+        let err = analyze(&evs, &meta).unwrap_err();
+        assert!(err.contains("duplicate task ticket"), "{err}");
+    }
+
+    #[test]
+    fn schema_rejects_ticket_gap_when_lossless() {
+        let evs = vec![task(0, 0, 0, 0, 0, 10), task(1, 0, 0, 2, 1, 10)];
+        let mut meta = TraceMeta { workers: 2, ..Default::default() };
+        assert!(analyze(&evs, &meta).unwrap_err().contains("ticket gap"));
+        // With recorded drops, gaps are tolerated.
+        meta.dropped = 5;
+        assert!(analyze(&evs, &meta).is_ok());
+    }
+
+    #[test]
+    fn schema_rejects_duplicate_partition() {
+        let evs = vec![task(0, 0, 0, 0, 7, 10), task(1, 0, 0, 1, 7, 10)];
+        let meta = TraceMeta { workers: 2, ..Default::default() };
+        assert!(analyze(&evs, &meta).unwrap_err().contains("duplicate partition"));
+    }
+
+    #[test]
+    fn counts_instants_and_commits() {
+        let mut evs = vec![task(0, 0, 0, 0, 0, 10)];
+        evs.push(Event { arg: 3, ..Event::of(EventKind::Steal) });
+        evs.push(Event { ..Event::of(EventKind::Rollback) });
+        evs.push(Event { arg: 1, ..Event::of(EventKind::Retry) });
+        evs.push(Event { arg: 4, ..Event::of(EventKind::IoRetry) });
+        evs.push(Event { dur_ns: 9, arg: 0, ..Event::of(EventKind::Commit) });
+        evs.push(Event { dur_ns: 2, arg: 3, ..Event::of(EventKind::Commit) });
+        evs.push(Event { arg: 1 << 21, ..Event::of(EventKind::ResidentBytes) });
+        let meta = TraceMeta { workers: 1, ..Default::default() };
+        let an = analyze(&evs, &meta).unwrap();
+        assert_eq!(an.steals, 1);
+        assert_eq!(an.rollbacks, 1);
+        assert_eq!(an.retries, 1);
+        assert_eq!(an.io_retries, 4);
+        assert_eq!(an.commit_blocking, 1);
+        assert_eq!(an.commit_runahead, 1);
+        assert_eq!(an.commit_ns, 11);
+        assert_eq!(an.peak_resident_bytes, 1 << 21);
+    }
+}

@@ -1,0 +1,337 @@
+//! Trace export/import: Chrome-trace (Perfetto-loadable) JSON and
+//! newline-delimited JSONL, plus a reader that sniffs either format so
+//! `pplda analyze-trace` consumes both.
+//!
+//! The Chrome form renders spans as complete events (`ph:"X"`, µs
+//! timestamps) with every raw field preserved in `args` — export is
+//! lossless and `read_events` reconstructs the exact [`Event`] stream.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::obs::trace::{Event, EventKind};
+use crate::util::json::Json;
+
+/// Run-level context carried alongside the event stream.
+#[derive(Clone, Debug, Default)]
+pub struct TraceMeta {
+    /// Worker count (lane layout: `0..workers` workers, then
+    /// coordinator, then IO).
+    pub workers: usize,
+    /// Events lost to full rings during recording.
+    pub dropped: u64,
+    /// Free-form run label (e.g. the CLI invocation).
+    pub label: String,
+}
+
+fn lane_name(lane: u16, workers: usize) -> String {
+    let lane = lane as usize;
+    if lane < workers {
+        format!("worker {lane}")
+    } else if lane == workers {
+        "coordinator".to_string()
+    } else {
+        "io".to_string()
+    }
+}
+
+fn family_name(family: u8) -> &'static str {
+    if family == 0 {
+        "word"
+    } else {
+        "stamp"
+    }
+}
+
+/// The raw-field args object shared by both formats — the lossless
+/// encoding `read_events` parses back.
+fn args_json(ev: &Event) -> Json {
+    let mut a = Json::obj();
+    a.set("kind", ev.kind.name())
+        .set("family", ev.family as u64)
+        .set("lane", ev.lane as u64)
+        .set("sweep", ev.sweep as u64)
+        .set("epoch", ev.epoch as u64)
+        .set("ticket", ev.ticket as u64)
+        .set("partition", ev.partition)
+        .set("t0_ns", ev.t0_ns)
+        .set("dur_ns", ev.dur_ns)
+        .set("arg", ev.arg);
+    a
+}
+
+fn event_from_args(j: &Json) -> Result<Event, String> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .and_then(EventKind::parse)
+        .ok_or("missing/unknown event kind")?;
+    let num = |key: &str| j.get(key).and_then(Json::as_u64).unwrap_or(0);
+    Ok(Event {
+        kind,
+        family: num("family") as u8,
+        lane: num("lane") as u16,
+        sweep: num("sweep") as u32,
+        epoch: num("epoch") as u32,
+        ticket: num("ticket") as u32,
+        partition: num("partition"),
+        t0_ns: num("t0_ns"),
+        dur_ns: num("dur_ns"),
+        arg: num("arg"),
+    })
+}
+
+/// Build the Chrome-trace document (object form: `traceEvents` +
+/// `otherData`), loadable by Perfetto / `chrome://tracing`.
+pub fn chrome_trace(events: &[Event], meta: &TraceMeta) -> Json {
+    let mut trace_events = Vec::new();
+    // Thread-name metadata rows so Perfetto labels the lanes.
+    let max_lane = events.iter().map(|e| e.lane).max().unwrap_or(0);
+    let lanes = (meta.workers + 2).max(max_lane as usize + 1);
+    for lane in 0..lanes as u16 {
+        let mut m = Json::obj();
+        let mut args = Json::obj();
+        args.set("name", lane_name(lane, meta.workers));
+        m.set("name", "thread_name")
+            .set("ph", "M")
+            .set("pid", 0u64)
+            .set("tid", lane as u64)
+            .set("args", args);
+        trace_events.push(m);
+    }
+    for ev in events {
+        let mut e = Json::obj();
+        e.set("name", ev.kind.name())
+            .set("cat", family_name(ev.family))
+            .set("pid", 0u64)
+            .set("tid", ev.lane as u64)
+            .set("ts", ev.t0_ns as f64 / 1e3)
+            .set("args", args_json(ev));
+        if ev.kind == EventKind::ResidentBytes {
+            e.set("ph", "C");
+        } else if ev.kind.is_span() {
+            e.set("ph", "X").set("dur", ev.dur_ns as f64 / 1e3);
+        } else {
+            e.set("ph", "i").set("s", "t");
+        }
+        trace_events.push(e);
+    }
+    let mut other = Json::obj();
+    other
+        .set("tool", "pplda")
+        .set("workers", meta.workers)
+        .set("dropped", meta.dropped)
+        .set("label", meta.label.as_str());
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(trace_events))
+        .set("displayTimeUnit", "ms")
+        .set("otherData", other);
+    doc
+}
+
+/// JSONL form: a leading meta record, then one event object per line.
+pub fn jsonl(events: &[Event], meta: &TraceMeta) -> String {
+    let mut out = String::new();
+    let mut m = Json::obj();
+    m.set("meta", true)
+        .set("tool", "pplda")
+        .set("workers", meta.workers)
+        .set("dropped", meta.dropped)
+        .set("label", meta.label.as_str());
+    out.push_str(&m.to_string());
+    out.push('\n');
+    for ev in events {
+        out.push_str(&args_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write `events` to `path`; `.jsonl` extension selects JSONL,
+/// anything else gets Chrome-trace JSON.
+pub fn write_trace(path: &Path, events: &[Event], meta: &TraceMeta) -> std::io::Result<()> {
+    let text = if path.extension().is_some_and(|e| e == "jsonl") {
+        jsonl(events, meta)
+    } else {
+        chrome_trace(events, meta).to_string()
+    };
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(text.as_bytes())?;
+    f.flush()
+}
+
+/// Parse a trace previously written by [`write_trace`] (either
+/// format, sniffed from content).
+pub fn parse_trace(text: &str) -> Result<(Vec<Event>, TraceMeta), String> {
+    let trimmed = text.trim_start();
+    if trimmed.starts_with('{') && !trimmed.lines().next().unwrap_or("").contains("\"meta\"") {
+        parse_chrome(text)
+    } else {
+        parse_jsonl(text)
+    }
+}
+
+/// Read and parse a trace file.
+pub fn read_trace(path: &Path) -> Result<(Vec<Event>, TraceMeta), String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_trace(&text)
+}
+
+fn parse_chrome(text: &str) -> Result<(Vec<Event>, TraceMeta), String> {
+    let doc = Json::parse(text)?;
+    let rows = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    let mut events = Vec::new();
+    for row in rows {
+        if row.get("ph").and_then(Json::as_str) == Some("M") {
+            continue;
+        }
+        let args = row.get("args").ok_or("trace event without args")?;
+        events.push(event_from_args(args)?);
+    }
+    let other = doc.get("otherData");
+    let meta = TraceMeta {
+        workers: other
+            .and_then(|o| o.get("workers"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0) as usize,
+        dropped: other
+            .and_then(|o| o.get("dropped"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0),
+        label: other
+            .and_then(|o| o.get("label"))
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+    };
+    Ok((events, meta))
+}
+
+fn parse_jsonl(text: &str) -> Result<(Vec<Event>, TraceMeta), String> {
+    let mut events = Vec::new();
+    let mut meta = TraceMeta::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        if j.get("meta").is_some() {
+            meta.workers = j.get("workers").and_then(Json::as_u64).unwrap_or(0) as usize;
+            meta.dropped = j.get("dropped").and_then(Json::as_u64).unwrap_or(0);
+            meta.label = j
+                .get("label")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            continue;
+        }
+        events.push(event_from_args(&j).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok((events, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event {
+                lane: 0,
+                sweep: 1,
+                epoch: 2,
+                ticket: 3,
+                partition: 42,
+                t0_ns: 1_000,
+                dur_ns: 5_000,
+                ..Event::of(EventKind::Task)
+            },
+            Event {
+                family: 1,
+                lane: 4,
+                sweep: 1,
+                t0_ns: 7_000,
+                arg: 2,
+                ..Event::of(EventKind::Rollback)
+            },
+            Event {
+                lane: 5,
+                t0_ns: 9_000,
+                arg: 123_456,
+                ..Event::of(EventKind::ResidentBytes)
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_round_trip_is_lossless() {
+        let evs = sample_events();
+        let meta = TraceMeta { workers: 4, dropped: 1, label: "t".into() };
+        let text = chrome_trace(&evs, &meta).to_string();
+        let (back, m) = parse_trace(&text).unwrap();
+        assert_eq!(back, evs);
+        assert_eq!(m.workers, 4);
+        assert_eq!(m.dropped, 1);
+        assert_eq!(m.label, "t");
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_lossless() {
+        let evs = sample_events();
+        let meta = TraceMeta { workers: 4, dropped: 0, label: "run".into() };
+        let text = jsonl(&evs, &meta);
+        assert_eq!(text.lines().count(), evs.len() + 1);
+        let (back, m) = parse_trace(&text).unwrap();
+        assert_eq!(back, evs);
+        assert_eq!(m.workers, 4);
+        assert_eq!(m.label, "run");
+    }
+
+    #[test]
+    fn chrome_doc_has_perfetto_shape() {
+        let evs = sample_events();
+        let meta = TraceMeta { workers: 4, ..Default::default() };
+        let doc = chrome_trace(&evs, &meta);
+        let rows = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 6 thread-name metadata rows (4 workers + coord + io) + events.
+        let metas: Vec<_> = rows
+            .iter()
+            .filter(|r| r.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 6);
+        let span = rows
+            .iter()
+            .find(|r| r.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("task span present");
+        assert_eq!(span.get("name").and_then(Json::as_str), Some("task"));
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(span.get("dur").and_then(Json::as_f64), Some(5.0));
+        assert!(rows
+            .iter()
+            .any(|r| r.get("ph").and_then(Json::as_str) == Some("C")));
+        assert!(rows
+            .iter()
+            .any(|r| r.get("ph").and_then(Json::as_str) == Some("i")));
+    }
+
+    #[test]
+    fn file_round_trip_by_extension() {
+        let dir = std::env::temp_dir().join(format!("pplda_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let evs = sample_events();
+        let meta = TraceMeta { workers: 2, ..Default::default() };
+        for name in ["t.json", "t.jsonl"] {
+            let p = dir.join(name);
+            write_trace(&p, &evs, &meta).unwrap();
+            let (back, m) = read_trace(&p).unwrap();
+            assert_eq!(back, evs, "{name}");
+            assert_eq!(m.workers, 2, "{name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,600 @@
+//! Metrics registry: counters, gauges, log-bucketed histograms, and the
+//! per-phase wallclock accounts that `SweepStats` and the train reports
+//! are views over.
+//!
+//! Everything here is lock-free (`AtomicU64`, relaxed ordering) so the
+//! trainers can record through `&self` while telemetry readers snapshot
+//! concurrently. Determinism is untouched by construction: metrics only
+//! *observe* — no sampling decision ever reads them.
+//!
+//! # One clock, one truth
+//!
+//! Before this module, the per-sweep `SweepStats` second-buckets and the
+//! drivers' `PhaseTimer` kept parallel books over the same measurements.
+//! Now the trainer records each phase measurement exactly once into a
+//! [`Registry`] ([`Registry::add_phase`]); `SweepStats` fields are
+//! per-sweep deltas of those accounts ([`Registry::phase_snapshot`] /
+//! [`Registry::delta_secs`]) and the report's phase breakdown is the
+//! cumulative view ([`Registry::phases_secs`]) — same names, same
+//! values, single source. See `docs/observability.md`.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+use crate::util::timer::PhaseTimer;
+
+/// A monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// A last-written-value gauge (e.g. resident bytes).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Raise the gauge to `v` if larger (high-water marks).
+    #[inline]
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Sub-buckets per power-of-two octave: values within an octave resolve
+/// to 8 geometric steps, bounding the relative quantile error at ~1/8.
+const SUB: usize = 8;
+const SUB_BITS: u32 = 3;
+/// Values `0..8` get exact unit buckets; octaves 3..=63 get [`SUB`]
+/// buckets each.
+const BUCKETS: usize = SUB + 61 * SUB;
+
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let o = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (o as u32 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        (o - 2) * SUB + sub
+    }
+}
+
+/// Inclusive lower bound of bucket `idx`.
+#[inline]
+fn bucket_lo(idx: usize) -> u64 {
+    if idx < SUB {
+        idx as u64
+    } else {
+        let o = idx / SUB + 2;
+        let sub = (idx % SUB) as u64;
+        (1u64 << o) + (sub << (o as u32 - SUB_BITS))
+    }
+}
+
+/// The value a bucket reports for quantiles: its geometric midpoint.
+#[inline]
+fn bucket_mid(idx: usize) -> u64 {
+    if idx < SUB {
+        idx as u64
+    } else {
+        let o = idx / SUB + 2;
+        let width = 1u64 << (o as u32 - SUB_BITS);
+        bucket_lo(idx) + width / 2
+    }
+}
+
+/// A log-bucketed histogram over `u64` samples (nanoseconds in
+/// practice): 8 sub-buckets per power-of-two octave, so `p50`/`p95`/
+/// `p99` are answered in O(buckets) with a bounded ~6% relative error,
+/// at a fixed 4 KiB of `AtomicU64` state. Concurrent `observe` is safe
+/// from any thread; merging across per-worker instances is bucket-wise
+/// addition ([`Histogram::merge_from`]).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) as the geometric midpoint of the
+    /// bucket holding the rank-`⌈q·n⌉` sample; 0 when empty. The exact
+    /// max is reported for `q == 1.0`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        if q >= 1.0 {
+            return self.max();
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Relaxed);
+            if seen >= rank {
+                return bucket_mid(i);
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram's samples into this one (bucket-wise
+    /// addition — the cross-worker merge).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = b.load(Relaxed);
+            if n > 0 {
+                a.fetch_add(n, Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Relaxed);
+        self.sum.fetch_add(other.sum(), Relaxed);
+        self.max.fetch_max(other.max(), Relaxed);
+    }
+}
+
+/// The canonical phase buckets of a training run. Names are the stable
+/// report/JSON keys the pre-registry `PhaseTimer` used — do not rename.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    Sample = 0,
+    Barrier,
+    Update,
+    Commit,
+    Runahead,
+    SpillLoad,
+    SpillWrite,
+    Checkpoint,
+    Perplexity,
+}
+
+/// All phases in canonical report order.
+pub const PHASES: [Phase; 9] = [
+    Phase::Sample,
+    Phase::Barrier,
+    Phase::Update,
+    Phase::Commit,
+    Phase::Runahead,
+    Phase::SpillLoad,
+    Phase::SpillWrite,
+    Phase::Checkpoint,
+    Phase::Perplexity,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Sample => "sample",
+            Phase::Barrier => "barrier",
+            Phase::Update => "update",
+            Phase::Commit => "commit",
+            Phase::Runahead => "runahead",
+            Phase::SpillLoad => "spill_load",
+            Phase::SpillWrite => "spill_write",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Perplexity => "perplexity",
+        }
+    }
+}
+
+/// Which trainer phase family an account belongs to: LDA (and the BoT
+/// word phase) vs the BoT timestamp phase. Keeping the two families
+/// separate lets BoT's `wstats`/`sstats` both be registry views while
+/// the report sums them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Family {
+    Word = 0,
+    Stamp = 1,
+}
+
+const N_PHASES: usize = PHASES.len();
+const N_FAMILIES: usize = 2;
+
+/// A point-in-time copy of the registry's phase accounts, used to
+/// compute per-sweep deltas (the `SweepStats` view).
+#[derive(Clone, Debug)]
+pub struct PhaseSnapshot([[u64; N_PHASES]; N_FAMILIES]);
+
+/// The trainer-owned metrics registry: phase wallclock accounts (nanos),
+/// fault/balance counters, the per-task duration histogram, and memory
+/// gauges. One instance per trainer; the driver reads it for the report.
+#[derive(Debug)]
+pub struct Registry {
+    phase_ns: [[AtomicU64; N_PHASES]; N_FAMILIES],
+    /// Sweeps recorded (gates the always-present phase buckets in
+    /// [`Self::phases_secs`] so untouched registries render empty).
+    pub sweeps: Counter,
+    /// Tasks executed (one per partition per epoch).
+    pub tasks: Counter,
+    /// Tasks re-executed after contained panics.
+    pub task_retries: Counter,
+    /// Transient spill-IO retries absorbed.
+    pub io_retries: Counter,
+    /// Checkpoints committed.
+    pub checkpoints: Counter,
+    /// Serial-equivalent busy nanos per family (measured-η numerator).
+    busy_ns: [Counter; N_FAMILIES],
+    /// Measured critical-path nanos per family (Σ_epoch max_worker).
+    crit_ns: [Counter; N_FAMILIES],
+    /// Measured per-task sweep nanos across all workers and sweeps.
+    pub task_ns: Histogram,
+    /// Last observed resident + in-flight token bytes (spill mode).
+    pub resident_bytes: Gauge,
+    /// High-water mark of `resident_bytes`.
+    pub peak_resident_bytes: Gauge,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            phase_ns: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+            sweeps: Counter::new(),
+            tasks: Counter::new(),
+            task_retries: Counter::new(),
+            io_retries: Counter::new(),
+            checkpoints: Counter::new(),
+            busy_ns: std::array::from_fn(|_| Counter::new()),
+            crit_ns: std::array::from_fn(|_| Counter::new()),
+            task_ns: Histogram::new(),
+            resident_bytes: Gauge::new(),
+            peak_resident_bytes: Gauge::new(),
+        }
+    }
+
+    #[inline]
+    pub fn add_phase(&self, family: Family, phase: Phase, d: Duration) {
+        self.add_phase_nanos(family, phase, d.as_nanos() as u64);
+    }
+
+    #[inline]
+    pub fn add_phase_secs(&self, family: Family, phase: Phase, secs: f64) {
+        if secs > 0.0 {
+            self.add_phase_nanos(family, phase, (secs * 1e9) as u64);
+        }
+    }
+
+    #[inline]
+    pub fn add_phase_nanos(&self, family: Family, phase: Phase, ns: u64) {
+        self.phase_ns[family as usize][phase as usize].fetch_add(ns, Relaxed);
+    }
+
+    pub fn phase_nanos(&self, family: Family, phase: Phase) -> u64 {
+        self.phase_ns[family as usize][phase as usize].load(Relaxed)
+    }
+
+    /// Phase account summed over both families.
+    pub fn phase_total_nanos(&self, phase: Phase) -> u64 {
+        (0..N_FAMILIES)
+            .map(|f| self.phase_ns[f][phase as usize].load(Relaxed))
+            .sum()
+    }
+
+    /// Snapshot every phase account — taken at sweep start so the sweep
+    /// can report its increments as `SweepStats` seconds.
+    pub fn phase_snapshot(&self) -> PhaseSnapshot {
+        PhaseSnapshot(std::array::from_fn(|f| {
+            std::array::from_fn(|p| self.phase_ns[f][p].load(Relaxed))
+        }))
+    }
+
+    /// Seconds accumulated in `(family, phase)` since `snap`.
+    pub fn delta_secs(&self, snap: &PhaseSnapshot, family: Family, phase: Phase) -> f64 {
+        let now = self.phase_ns[family as usize][phase as usize].load(Relaxed);
+        (now - snap.0[family as usize][phase as usize]) as f64 / 1e9
+    }
+
+    /// Record one sweep's measured-η inputs for `family`.
+    pub fn observe_eta(&self, family: Family, busy_ns: u64, crit_ns: u64) {
+        self.busy_ns[family as usize].add(busy_ns);
+        self.crit_ns[family as usize].add(crit_ns);
+    }
+
+    pub fn busy_nanos(&self, family: Family) -> u64 {
+        self.busy_ns[family as usize].get()
+    }
+
+    pub fn crit_nanos(&self, family: Family) -> u64 {
+        self.crit_ns[family as usize].get()
+    }
+
+    /// Measured-η over everything recorded for `family`:
+    /// `busy / (workers · crit)`; 1.0 when nothing was measured.
+    pub fn measured_eta(&self, family: Family, workers: usize) -> f64 {
+        let crit = self.crit_nanos(family);
+        if crit == 0 {
+            return 1.0;
+        }
+        self.busy_nanos(family) as f64 / (workers.max(1) as f64 * crit as f64)
+    }
+
+    /// The report phase breakdown, families summed, in canonical order.
+    /// The always-measured buckets (sample/barrier/update) appear
+    /// whenever any sweep was recorded; conditional buckets (commit,
+    /// runahead, spill/checkpoint/perplexity) appear only when non-zero
+    /// — exactly the presence rules the pre-registry drivers had. An
+    /// untouched registry (serial runs) renders empty.
+    pub fn phases_secs(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        if self.sweeps.get() == 0 {
+            return out;
+        }
+        for ph in PHASES {
+            let ns = self.phase_total_nanos(ph);
+            let always = matches!(ph, Phase::Sample | Phase::Barrier | Phase::Update);
+            if always || ns > 0 {
+                out.push((ph.name().to_string(), ns as f64 / 1e9));
+            }
+        }
+        out
+    }
+
+    /// The cumulative phase view as a [`PhaseTimer`] — what drivers used
+    /// to accumulate by hand.
+    pub fn phase_timer(&self) -> PhaseTimer {
+        PhaseTimer::from_secs(self.phases_secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_and_subs() {
+        // Small values are exact.
+        for v in 0..8u64 {
+            assert_eq!(bucket_lo(bucket_index(v)), v);
+            assert_eq!(bucket_mid(bucket_index(v)), v);
+        }
+        // Octave starts land on their own bucket's lower bound.
+        for o in 3..=62u32 {
+            let v = 1u64 << o;
+            let idx = bucket_index(v);
+            assert_eq!(bucket_lo(idx), v, "octave {o}");
+            // Last value before the octave lives in the previous bucket.
+            assert_ne!(bucket_index(v - 1), idx, "octave {o}");
+        }
+        // Sub-bucket width is 1/8 of the octave.
+        let idx16 = bucket_index(16);
+        assert_eq!(bucket_index(17), idx16, "width-2 bucket at 16");
+        assert_ne!(bucket_index(18), idx16);
+        // Values 8..16 remain exact (width-1 buckets).
+        for v in 8..16u64 {
+            assert_eq!(bucket_lo(bucket_index(v)), v);
+        }
+        // Monotone, in-bounds.
+        let mut prev = 0;
+        for v in [0u64, 1, 7, 8, 100, 1_000, 1 << 20, 1 << 40, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS);
+            assert!(idx >= prev, "non-monotone at {v}");
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn quantiles_on_known_distributions() {
+        // Uniform 1..=1000: p50 ≈ 500, p99 ≈ 990, within bucket error.
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        let p50 = h.p50() as f64;
+        let p99 = h.p99() as f64;
+        assert!((p50 - 500.0).abs() / 500.0 < 0.10, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.10, "p99 {p99}");
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.quantile(1.0), 1000);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+
+        // Bimodal: 90% at ~100, 10% at ~100_000 — p50 in the low mode,
+        // p95/p99 in the high one.
+        let h = Histogram::new();
+        for _ in 0..900 {
+            h.observe(100);
+        }
+        for _ in 0..100 {
+            h.observe(100_000);
+        }
+        assert!((h.p50() as f64 - 100.0).abs() / 100.0 < 0.10, "{}", h.p50());
+        assert!(
+            (h.p99() as f64 - 100_000.0).abs() / 100_000.0 < 0.10,
+            "{}",
+            h.p99()
+        );
+
+        // Degenerate: constant distribution.
+        let h = Histogram::new();
+        for _ in 0..50 {
+            h.observe(42);
+        }
+        let p = h.p50() as f64;
+        assert!((p - 42.0).abs() / 42.0 < 0.07, "{p}");
+        assert_eq!(h.quantile(0.0), h.quantile(0.01));
+
+        // Empty histogram answers zeros.
+        let h = Histogram::new();
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_across_workers_matches_single_stream() {
+        let merged = Histogram::new();
+        let whole = Histogram::new();
+        let parts: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+        for v in 0..4000u64 {
+            let x = (v * 2654435761) % 1_000_000;
+            parts[(v % 4) as usize].observe(x);
+            whole.observe(x);
+        }
+        for p in &parts {
+            merged.merge_from(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.sum(), whole.sum());
+        assert_eq!(merged.max(), whole.max());
+        for q in [0.1, 0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_concurrent_observe() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.observe(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn registry_phase_accounts_and_views() {
+        let reg = Registry::new();
+        assert!(reg.phases_secs().is_empty(), "untouched registry is empty");
+        reg.sweeps.inc();
+        reg.add_phase(Family::Word, Phase::Sample, Duration::from_millis(30));
+        reg.add_phase(Family::Stamp, Phase::Sample, Duration::from_millis(10));
+        reg.add_phase(Family::Word, Phase::Barrier, Duration::from_millis(5));
+        let ph = reg.phases_secs();
+        let names: Vec<&str> = ph.iter().map(|(n, _)| n.as_str()).collect();
+        // Always-present buckets appear (update at 0.0), conditional
+        // ones only when non-zero.
+        assert_eq!(names, vec!["sample", "barrier", "update"]);
+        let sample = ph.iter().find(|(n, _)| n == "sample").unwrap().1;
+        assert!((sample - 0.040).abs() < 1e-6, "families sum: {sample}");
+
+        reg.add_phase(Family::Word, Phase::Commit, Duration::from_millis(2));
+        reg.add_phase(Family::Word, Phase::Perplexity, Duration::from_millis(1));
+        let names: Vec<String> = reg.phases_secs().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["sample", "barrier", "update", "commit", "perplexity"]);
+
+        // Per-sweep delta view (the SweepStats contract).
+        let snap = reg.phase_snapshot();
+        reg.add_phase(Family::Word, Phase::Sample, Duration::from_millis(7));
+        assert!((reg.delta_secs(&snap, Family::Word, Phase::Sample) - 0.007).abs() < 1e-6);
+        assert_eq!(reg.delta_secs(&snap, Family::Stamp, Phase::Sample), 0.0);
+
+        // PhaseTimer view mirrors phases_secs.
+        let t = reg.phase_timer();
+        assert!(t.get("sample").as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn registry_measured_eta() {
+        let reg = Registry::new();
+        assert_eq!(reg.measured_eta(Family::Word, 4), 1.0);
+        reg.observe_eta(Family::Word, 800, 250);
+        assert!((reg.measured_eta(Family::Word, 4) - 0.8).abs() < 1e-12);
+        reg.observe_eta(Family::Stamp, 100, 100);
+        assert!((reg.measured_eta(Family::Stamp, 1) - 1.0).abs() < 1e-12);
+    }
+}

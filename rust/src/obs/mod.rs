@@ -1,0 +1,28 @@
+//! Observability: structured tracing and metrics for the partitioned
+//! trainer.
+//!
+//! - [`trace`] — zero-cost-when-off per-task spans and events in
+//!   lock-free per-lane ring buffers ([`trace::Tracer`]), drained at
+//!   sweep boundaries.
+//! - [`metrics`] — counters, gauges, log-bucketed histograms, and the
+//!   phase-time [`metrics::Registry`] that `SweepStats` second-buckets
+//!   and the report `PhaseTimer` are views over.
+//! - [`export`] — Chrome-trace/Perfetto JSON and JSONL writers plus a
+//!   lossless reader.
+//! - [`analyze`] — the `pplda analyze-trace` engine: span-schema
+//!   validation, per-sweep critical path, idle gaps, steal
+//!   effectiveness, and measured-η recomputed from raw spans.
+//!
+//! Tracing is strictly observational: no sampling decision ever reads
+//! it, so tracing on ≡ tracing off bit-for-bit (pinned by the matrix
+//! tests in `scheduler::exec`). See `docs/observability.md` for the
+//! event taxonomy, span schema, and overhead contract.
+
+pub mod analyze;
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::TraceMeta;
+pub use metrics::{Family, Phase, Registry};
+pub use trace::{Event, EventKind, Tracer};

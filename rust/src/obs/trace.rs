@@ -1,0 +1,442 @@
+//! Structured tracing: per-task spans and events recorded into
+//! lock-free per-lane ring buffers, drained at sweep boundaries.
+//!
+//! # Design
+//!
+//! A [`Tracer`] owns one single-producer/single-consumer ring per
+//! *lane*. Lanes are timelines: one per worker (`0..workers`), one for
+//! the coordinator thread ([`Tracer::coord_lane`]), and one for the IO
+//! timeline ([`Tracer::io_lane`]). The SPSC invariant is upheld by
+//! construction, not by locks:
+//!
+//! - worker lane `w` is written only by the thread currently executing
+//!   worker `w`'s tasks (scoped thread, pool worker, or — for
+//!   `SequentialExec` — the coordinator itself, which visits lanes one
+//!   at a time);
+//! - the coordinator and IO lanes are written only by the coordinator
+//!   thread (IO durations are measured around `acquire`/`release`/
+//!   `prefetch` calls; the prefetcher's own thread never touches the
+//!   tracer);
+//! - draining happens at sweep boundaries, when every executor has
+//!   joined/parked its workers, and is additionally serialized by the
+//!   sink mutex.
+//!
+//! A full ring drops the event and counts it ([`Tracer::dropped`])
+//! rather than blocking or reallocating — tracing must never perturb
+//! the schedule. Determinism is structural: the tracer only *observes*
+//! (no sampling decision ever reads it), so tracing on ≡ tracing off
+//! bit-for-bit; the matrix tests pin this.
+//!
+//! # Overhead contract
+//!
+//! Tracing **off** (`trace: None` in `TaskObs`): the per-task cost is
+//! one `Option` test on an already-loaded struct field — no timestamp,
+//! no atomic. Tracing **on**: two `Instant` reads and one ring push
+//! (~3 relaxed/acq-rel atomics) per event. See `docs/observability.md`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default per-lane ring capacity (events). A sweep drains the rings,
+/// so this bounds events per lane per sweep, not per run.
+pub const DEFAULT_LANE_CAP: usize = 1 << 15;
+
+/// What an [`Event`] records. Span kinds carry a duration; instant
+/// kinds mark a point; `ResidentBytes` is a counter sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// One full sweep (coordinator lane).
+    Sweep = 0,
+    /// One diagonal epoch (coordinator lane).
+    Epoch,
+    /// One task's sampling span (worker lane; `dur_ns` is the same
+    /// measured duration `SweepStats::task_nanos` records).
+    Task,
+    /// Time a pool worker waited for its next job (worker lane).
+    QueueWait,
+    /// A task executed from the steal queue rather than its owner's
+    /// static list (worker lane, instant; `arg` = task nanos).
+    Steal,
+    /// A ticketed in-order delta fold (coordinator lane; `arg` =
+    /// in-flight tasks at fold time — 0 means the committer blocked).
+    Commit,
+    /// Barrier-mode gather/merge of an epoch's deltas (coordinator).
+    Barrier,
+    /// A contained task panic rolled back (instant; `arg` = attempt).
+    Rollback,
+    /// A task re-execution attempt after a rollback (instant; `arg` =
+    /// attempt number).
+    Retry,
+    /// Spill-block load wait on the sampling path (IO lane).
+    IoLoad,
+    /// Spill-block writeback wait (IO lane).
+    IoWrite,
+    /// Transient spill-IO retries absorbed this sweep (instant; `arg`
+    /// = retry count delta).
+    IoRetry,
+    /// Prefetch issued for a diagonal (IO lane, instant; `partition`
+    /// = diagonal index).
+    Prefetch,
+    /// Sampled resident + in-flight token bytes (counter; `arg` =
+    /// bytes).
+    ResidentBytes,
+    /// One atomic checkpoint write (coordinator lane).
+    Checkpoint,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 15] = [
+        EventKind::Sweep,
+        EventKind::Epoch,
+        EventKind::Task,
+        EventKind::QueueWait,
+        EventKind::Steal,
+        EventKind::Commit,
+        EventKind::Barrier,
+        EventKind::Rollback,
+        EventKind::Retry,
+        EventKind::IoLoad,
+        EventKind::IoWrite,
+        EventKind::IoRetry,
+        EventKind::Prefetch,
+        EventKind::ResidentBytes,
+        EventKind::Checkpoint,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Sweep => "sweep",
+            EventKind::Epoch => "epoch",
+            EventKind::Task => "task",
+            EventKind::QueueWait => "queue_wait",
+            EventKind::Steal => "steal",
+            EventKind::Commit => "commit",
+            EventKind::Barrier => "barrier",
+            EventKind::Rollback => "rollback",
+            EventKind::Retry => "retry",
+            EventKind::IoLoad => "io_load",
+            EventKind::IoWrite => "io_write",
+            EventKind::IoRetry => "io_retry",
+            EventKind::Prefetch => "prefetch",
+            EventKind::ResidentBytes => "resident_bytes",
+            EventKind::Checkpoint => "checkpoint",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Span kinds render as Chrome complete (`ph:"X"`) events; instants
+    /// as `ph:"i"`; `ResidentBytes` as a counter (`ph:"C"`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::Sweep
+                | EventKind::Epoch
+                | EventKind::Task
+                | EventKind::QueueWait
+                | EventKind::Commit
+                | EventKind::Barrier
+                | EventKind::IoLoad
+                | EventKind::IoWrite
+                | EventKind::Checkpoint
+        )
+    }
+}
+
+/// One fixed-size trace record. `Copy` so ring slots never allocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Phase family: 0 = word (LDA), 1 = stamp (BoT phase two).
+    pub family: u8,
+    /// Timeline index: worker id, or the coordinator/IO lanes.
+    pub lane: u16,
+    pub sweep: u32,
+    /// Diagonal epoch within the sweep.
+    pub epoch: u32,
+    /// Task index within the epoch (commit order).
+    pub ticket: u32,
+    /// Partition id (`ids[ticket]`), or a kind-specific index.
+    pub partition: u64,
+    /// Nanoseconds since the tracer's time base.
+    pub t0_ns: u64,
+    /// Span duration in nanoseconds (0 for instants).
+    pub dur_ns: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub arg: u64,
+}
+
+impl Event {
+    /// A zeroed template; call sites fill fields with struct-update
+    /// syntax: `Event { lane, t0_ns, .. Event::of(EventKind::Task) }`.
+    pub fn of(kind: EventKind) -> Event {
+        Event {
+            kind,
+            family: 0,
+            lane: 0,
+            sweep: 0,
+            epoch: 0,
+            ticket: 0,
+            partition: 0,
+            t0_ns: 0,
+            dur_ns: 0,
+            arg: 0,
+        }
+    }
+}
+
+/// A bounded SPSC ring. Exactly one thread pushes (the lane's current
+/// owner) and one thread drains (the coordinator, under the sink
+/// mutex); `head`/`tail` are free-running counters masked into the
+/// power-of-two slot array.
+struct Ring {
+    slots: Box<[UnsafeCell<Event>]>,
+    mask: usize,
+    /// Next write position; owned by the producer, Release-published.
+    head: AtomicUsize,
+    /// Next read position; owned by the consumer, Release-published.
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: slot `i` is written only by the single producer while
+// `i ∉ [tail, head)` (i.e. not yet published) and read only by the
+// single consumer after the Release store of `head` made the write
+// visible (Acquire load in `drain_into`). Producer/consumer roles are
+// exclusive per lane by construction (module docs).
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        let cap = cap.next_power_of_two().max(64);
+        Ring {
+            slots: (0..cap).map(|_| UnsafeCell::new(Event::of(EventKind::Sweep))).collect(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) > self.mask {
+            // Full: drop and count rather than block the sampler.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe { *self.slots[head & self.mask].get() = ev };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    fn drain_into(&self, out: &mut Vec<Event>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail != head {
+            out.push(unsafe { *self.slots[tail & self.mask].get() });
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+}
+
+/// The trace recorder: per-lane rings plus a coordinator-drained sink.
+/// Shared by reference into the executors (`TaskObs`); `emit` is safe
+/// from any lane's producer thread.
+pub struct Tracer {
+    t0: Instant,
+    workers: usize,
+    lanes: Vec<Ring>,
+    sink: Mutex<Vec<Event>>,
+}
+
+impl Tracer {
+    pub fn new(workers: usize) -> Tracer {
+        Tracer::with_capacity(workers, DEFAULT_LANE_CAP)
+    }
+
+    pub fn with_capacity(workers: usize, lane_cap: usize) -> Tracer {
+        let workers = workers.max(1);
+        Tracer {
+            t0: Instant::now(),
+            workers,
+            lanes: (0..workers + 2).map(|_| Ring::new(lane_cap)).collect(),
+            sink: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The coordinator thread's timeline (sweep/epoch/commit/barrier/
+    /// checkpoint spans).
+    pub fn coord_lane(&self) -> u16 {
+        self.workers as u16
+    }
+
+    /// The IO timeline (spill load/write waits, prefetch issues,
+    /// resident-bytes samples).
+    pub fn io_lane(&self) -> u16 {
+        (self.workers + 1) as u16
+    }
+
+    /// Nanoseconds since the tracer's time base.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Record `ev` on its `lane`'s ring. Caller must be the lane's
+    /// current producer (module docs); out-of-range lanes are counted
+    /// as drops on lane 0.
+    #[inline]
+    pub fn emit(&self, ev: Event) {
+        match self.lanes.get(ev.lane as usize) {
+            Some(ring) => ring.push(ev),
+            None => self.lanes[0].dropped.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    /// Move all ring contents into the sink. Call at sweep boundaries,
+    /// when workers are parked/joined.
+    pub fn drain(&self) {
+        let mut sink = self.sink.lock().unwrap();
+        for ring in &self.lanes {
+            ring.drain_into(&mut sink);
+        }
+    }
+
+    /// Events dropped to full rings so far (0 in healthy runs).
+    pub fn dropped(&self) -> u64 {
+        self.lanes.iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Final drain + take: every event recorded so far, sorted by
+    /// `(t0_ns, lane)` into one timeline. Leaves the sink empty.
+    pub fn take(&self) -> Vec<Event> {
+        self.drain();
+        let mut out = std::mem::take(&mut *self.sink.lock().unwrap());
+        out.sort_by_key(|e| (e.t0_ns, e.lane, e.kind as u8));
+        out
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("workers", &self.workers)
+            .field("lanes", &self.lanes.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drain_preserves_order_no_loss_no_dup() {
+        let tr = Tracer::with_capacity(2, 1 << 10);
+        for i in 0..100u64 {
+            tr.emit(Event {
+                lane: (i % 2) as u16,
+                partition: i,
+                t0_ns: i,
+                ..Event::of(EventKind::Task)
+            });
+        }
+        let evs = tr.take();
+        assert_eq!(evs.len(), 100);
+        assert_eq!(tr.dropped(), 0);
+        let mut seen: Vec<u64> = evs.iter().map(|e| e.partition).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+        // Second take is empty (no duplication).
+        assert!(tr.take().is_empty());
+    }
+
+    #[test]
+    fn ring_full_drops_and_counts_instead_of_blocking() {
+        let tr = Tracer::with_capacity(1, 64);
+        for i in 0..200u64 {
+            tr.emit(Event { partition: i, ..Event::of(EventKind::Task) });
+        }
+        assert_eq!(tr.dropped(), 200 - 64);
+        let evs = tr.take();
+        assert_eq!(evs.len(), 64);
+        // The *oldest* events survive (drop-newest policy).
+        assert_eq!(evs[0].partition, 0);
+    }
+
+    #[test]
+    fn drain_between_pushes_wraps_ring_without_loss() {
+        let tr = Tracer::with_capacity(1, 64);
+        let mut total = 0u64;
+        for round in 0..10u64 {
+            for i in 0..50u64 {
+                tr.emit(Event { partition: round * 50 + i, ..Event::of(EventKind::Task) });
+            }
+            tr.drain();
+            total += 50;
+        }
+        let evs = tr.take();
+        assert_eq!(evs.len() as u64, total);
+        assert_eq!(tr.dropped(), 0);
+        let mut parts: Vec<u64> = evs.iter().map(|e| e.partition).collect();
+        parts.sort_unstable();
+        assert_eq!(parts, (0..total).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_producers_one_per_lane() {
+        let tr = Tracer::with_capacity(4, 1 << 12);
+        std::thread::scope(|s| {
+            for lane in 0..4u16 {
+                let tr = &tr;
+                s.spawn(move || {
+                    for i in 0..2000u64 {
+                        tr.emit(Event {
+                            lane,
+                            partition: lane as u64 * 10_000 + i,
+                            ..Event::of(EventKind::Task)
+                        });
+                    }
+                });
+            }
+        });
+        let evs = tr.take();
+        assert_eq!(evs.len(), 8000);
+        assert_eq!(tr.dropped(), 0);
+        for lane in 0..4u16 {
+            let mut parts: Vec<u64> = evs
+                .iter()
+                .filter(|e| e.lane == lane)
+                .map(|e| e.partition)
+                .collect();
+            parts.sort_unstable();
+            let want: Vec<u64> = (0..2000).map(|i| lane as u64 * 10_000 + i).collect();
+            assert_eq!(parts, want, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn event_kind_names_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("nope"), None);
+    }
+}

@@ -2,6 +2,7 @@
 //! executed under a [`Schedule`] mapping the grid onto `W` workers.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::corpus::bow::BagOfWords;
@@ -11,12 +12,14 @@ use crate::gibbs::perplexity;
 use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
 use crate::kernel::KernelKind;
+use crate::obs::metrics::{Family, Phase, Registry};
+use crate::obs::trace::{Event, EventKind, Tracer};
 use crate::partition::eta::CostMatrix;
 use crate::partition::scheme::PartitionMap;
 use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::pool::{
-    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, Executor, WorkerPool,
+    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, Executor, TaskObs, WorkerPool,
 };
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
@@ -313,6 +316,14 @@ pub struct ParallelLda {
     task_nanos: Vec<u64>,
     /// Per-worker busy nanos, rewritten each epoch (telemetry scratch).
     worker_nanos: Vec<u64>,
+    /// Structured tracer, when attached (`--trace-out`). Strictly
+    /// observational — no sampling decision reads it — so tracing on ≡
+    /// off bit-for-bit (see `docs/observability.md`).
+    tracer: Option<Arc<Tracer>>,
+    /// Metrics registry: the single source of truth the per-sweep
+    /// `SweepStats` second-buckets and the report `PhaseTimer` are
+    /// views over.
+    metrics: Registry,
 }
 
 impl ParallelLda {
@@ -394,6 +405,8 @@ impl ParallelLda {
             deltas: vec![vec![0i64; k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
+            tracer: None,
+            metrics: Registry::new(),
         })
     }
 
@@ -468,6 +481,8 @@ impl ParallelLda {
             deltas: vec![vec![0i64; k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
+            tracer: None,
+            metrics: Registry::new(),
         })
     }
 
@@ -537,6 +552,8 @@ impl ParallelLda {
             deltas: vec![vec![0i64; k]; p],
             task_nanos: vec![0; p],
             worker_nanos: vec![0; workers],
+            tracer: None,
+            metrics: Registry::new(),
         })
     }
 
@@ -650,6 +667,28 @@ impl ParallelLda {
         self.schedule.workers
     }
 
+    /// Attach (or detach) a structured tracer. Subsequent sweeps emit
+    /// per-task spans and coordinator/IO events into its ring buffers
+    /// and drain them at each sweep boundary. Tracing is strictly
+    /// observational: results are bit-identical with or without it.
+    /// The tracer should be sized for [`Self::workers`] lanes.
+    pub fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
+        self.tracer = tracer;
+    }
+
+    /// The attached tracer, if any.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// The trainer's metrics registry — phase wallclock accounts,
+    /// fault/balance counters, the per-task duration histogram, and
+    /// memory gauges. `SweepStats` second-buckets and the report phase
+    /// breakdown are views over this.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
     /// One full Gibbs sweep = `P` diagonal epochs, reconciled under the
     /// configured [`CommitMode`] (gather barrier, or the ticketed
     /// pipelined commit — see [`Self::set_commit`]).
@@ -667,6 +706,11 @@ impl ParallelLda {
             workers: self.schedule.workers,
             ..SweepStats::default()
         };
+        // Phase seconds are accumulated in the registry; the sweep
+        // snapshots the accounts here and reports its increments as the
+        // `SweepStats` second-buckets below.
+        let phases0 = self.metrics.phase_snapshot();
+        let sweep_t0 = self.tracer.as_deref().map(Tracer::now);
         // Spill write-backs during this sweep carry the sweep count they
         // complete, so an at-rest store is uniformly stamped and resume
         // can verify it is not mid-sweep.
@@ -681,7 +725,8 @@ impl ParallelLda {
         // (k u32s — cheap); per-epoch it is maintained by the merge below.
         let update_started = Instant::now();
         self.snapshot.copy_from_slice(&self.counts.topic);
-        stats.update_secs += update_started.elapsed().as_secs_f64();
+        self.metrics
+            .add_phase(Family::Word, Phase::Update, update_started.elapsed());
 
         if self.commit == CommitMode::Ticketed {
             self.ticketed_epochs(mode, &mut stats, sweep_no, steal);
@@ -711,9 +756,56 @@ impl ParallelLda {
         if self.balance == BalanceMode::Adaptive {
             self.estimator.repack(&mut self.schedule, &self.costs);
         }
-        stats.update_secs += update_started.elapsed().as_secs_f64();
+        self.metrics
+            .add_phase(Family::Word, Phase::Update, update_started.elapsed());
         stats.task_retries = self.engines.get(mode).retries() - task_retries0;
         stats.io_retries = self.shards.io_retries() - io_retries0;
+
+        // The `SweepStats` second-buckets are views over the registry:
+        // this sweep's increments of the phase accounts.
+        let m = &self.metrics;
+        stats.sample_secs = m.delta_secs(&phases0, Family::Word, Phase::Sample);
+        stats.barrier_secs = m.delta_secs(&phases0, Family::Word, Phase::Barrier);
+        stats.update_secs = m.delta_secs(&phases0, Family::Word, Phase::Update);
+        stats.commit_secs = m.delta_secs(&phases0, Family::Word, Phase::Commit);
+        stats.runahead_secs = m.delta_secs(&phases0, Family::Word, Phase::Runahead);
+        stats.io_load_secs = m.delta_secs(&phases0, Family::Word, Phase::SpillLoad);
+        stats.io_write_secs = m.delta_secs(&phases0, Family::Word, Phase::SpillWrite);
+        m.sweeps.inc();
+        m.tasks
+            .add(stats.task_nanos.iter().map(|v| v.len() as u64).sum());
+        m.task_retries.add(stats.task_retries);
+        m.io_retries.add(stats.io_retries);
+        for &ns in stats.task_nanos.iter().flatten() {
+            m.task_ns.observe(ns);
+        }
+        m.observe_eta(Family::Word, stats.busy_total_nanos(), stats.crit_nanos());
+        m.resident_bytes.set(self.shards.resident_bytes());
+        m.peak_resident_bytes
+            .set_max(self.shards.peak_resident_bytes());
+
+        if let Some(tr) = self.tracer.as_deref() {
+            let t0 = sweep_t0.unwrap_or(0);
+            tr.emit(Event {
+                lane: tr.coord_lane(),
+                sweep: sweep_no as u32,
+                t0_ns: t0,
+                dur_ns: tr.now().saturating_sub(t0),
+                ..Event::of(EventKind::Sweep)
+            });
+            if stats.io_retries > 0 {
+                tr.emit(Event {
+                    lane: tr.io_lane(),
+                    sweep: sweep_no as u32,
+                    t0_ns: tr.now(),
+                    arg: stats.io_retries,
+                    ..Event::of(EventKind::IoRetry)
+                });
+            }
+            // Sweep boundary: move this sweep's ring contents to the
+            // sink so rings never need more than one sweep of capacity.
+            tr.drain();
+        }
         // Debug builds (unit + integration test runs) audit the full
         // count/assignment invariant after every sweep, so a kernel
         // count-delta bug fails loudly at the sweep that introduced it
@@ -745,19 +837,24 @@ impl ParallelLda {
     ) {
         let p = self.p;
         let k = self.h.k;
+        let spill = self.shards.residency() != Residency::InCore;
         for l in 0..p {
             // Out-of-core: make this diagonal resident (collecting the
             // prefetch the previous epoch overlapped with its sampling),
             // then start loading the next one on the IO thread. Both are
             // no-ops in-core.
-            stats.io_load_secs += self
+            let load_secs = self
                 .shards
                 .acquire(l)
                 .expect("out-of-core: loading a diagonal from the shard store failed");
+            self.metrics
+                .add_phase_secs(Family::Word, Phase::SpillLoad, load_secs);
             if p > 1 {
                 self.shards.prefetch((l + 1) % p);
             }
+            self.trace_io(sweep_no, l, EventKind::IoLoad, load_secs, spill);
             let epoch_started = Instant::now();
+            let epoch_t0 = self.tracer.as_deref().map(Tracer::now);
             let (diag, ids) = self.shards.diag_parts(l);
             let ep = &self.schedule.epochs[l];
             stats
@@ -774,6 +871,11 @@ impl ParallelLda {
                 seed: self.seed ^ LDA_SWEEP_SALT,
                 sweep: sweep_no,
                 kernel: self.kernel,
+                obs: TaskObs {
+                    trace: self.tracer.as_deref(),
+                    epoch: l as u32,
+                    family: Family::Word as u8,
+                },
             };
             let tasks = EpochTasks {
                 blocks: diag,
@@ -786,7 +888,8 @@ impl ParallelLda {
             self.engines
                 .get(mode)
                 .run_epoch(&spec, tasks, &mut self.deltas[..n]);
-            stats.sample_secs += epoch_started.elapsed().as_secs_f64();
+            self.metrics
+                .add_phase(Family::Word, Phase::Sample, epoch_started.elapsed());
             stats.task_nanos.push(self.task_nanos[..n].to_vec());
             stats.worker_nanos.push(self.worker_nanos.clone());
 
@@ -794,14 +897,78 @@ impl ParallelLda {
             // counts and the snapshot buffer for the next epoch.
             let barrier_started = Instant::now();
             merge_deltas(&mut self.counts.topic, &mut self.snapshot, &self.deltas[..n]);
-            stats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+            let barrier_dur = barrier_started.elapsed();
+            self.metrics
+                .add_phase(Family::Word, Phase::Barrier, barrier_dur);
             stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
+            if let Some(tr) = self.tracer.as_deref() {
+                let bns = barrier_dur.as_nanos() as u64;
+                tr.emit(Event {
+                    lane: tr.coord_lane(),
+                    sweep: sweep_no as u32,
+                    epoch: l as u32,
+                    t0_ns: tr.now().saturating_sub(bns),
+                    dur_ns: bns,
+                    ..Event::of(EventKind::Barrier)
+                });
+                let t0 = epoch_t0.unwrap_or(0);
+                tr.emit(Event {
+                    lane: tr.coord_lane(),
+                    sweep: sweep_no as u32,
+                    epoch: l as u32,
+                    t0_ns: t0,
+                    dur_ns: tr.now().saturating_sub(t0),
+                    ..Event::of(EventKind::Epoch)
+                });
+            }
             // Out-of-core: the barrier sequenced all sampling of this
             // diagonal — write its dirty `z` arrays back and evict.
-            stats.io_write_secs += self
+            let write_secs = self
                 .shards
                 .release(l)
                 .expect("out-of-core: writing a diagonal back to the shard store failed");
+            self.metrics
+                .add_phase_secs(Family::Word, Phase::SpillWrite, write_secs);
+            self.trace_io(sweep_no, l, EventKind::IoWrite, write_secs, spill);
+        }
+    }
+
+    /// Emit the IO-lane telemetry for one epoch boundary: a load or
+    /// write-back span (when any stall was measured) plus, in spill
+    /// mode, a prefetch-reservation instant and a resident-bytes
+    /// counter sample. No-op without a tracer.
+    fn trace_io(&self, sweep_no: usize, l: usize, kind: EventKind, secs: f64, spill: bool) {
+        let Some(tr) = self.tracer.as_deref() else {
+            return;
+        };
+        if secs > 0.0 {
+            let dur = (secs * 1e9) as u64;
+            tr.emit(Event {
+                lane: tr.io_lane(),
+                sweep: sweep_no as u32,
+                epoch: l as u32,
+                t0_ns: tr.now().saturating_sub(dur),
+                dur_ns: dur,
+                ..Event::of(kind)
+            });
+        }
+        if spill {
+            tr.emit(Event {
+                lane: tr.io_lane(),
+                sweep: sweep_no as u32,
+                epoch: l as u32,
+                t0_ns: tr.now(),
+                arg: self.shards.inflight_bytes(),
+                ..Event::of(EventKind::Prefetch)
+            });
+            tr.emit(Event {
+                lane: tr.io_lane(),
+                sweep: sweep_no as u32,
+                epoch: l as u32,
+                t0_ns: tr.now(),
+                arg: self.shards.resident_bytes(),
+                ..Event::of(EventKind::ResidentBytes)
+            });
         }
     }
 
@@ -824,15 +991,20 @@ impl ParallelLda {
     ) {
         let p = self.p;
         let k = self.h.k;
+        let spill = self.shards.residency() != Residency::InCore;
         for l in 0..p {
             // The previous epoch's overlap hook started loading this
             // diagonal; its write-back of diagonal `l - 1` happens in
             // *this* epoch's hook below.
-            stats.io_load_secs += self
+            let load_secs = self
                 .shards
                 .acquire(l)
                 .expect("out-of-core: loading a diagonal from the shard store failed");
+            self.metrics
+                .add_phase_secs(Family::Word, Phase::SpillLoad, load_secs);
+            self.trace_io(sweep_no, l, EventKind::IoLoad, load_secs, spill);
             let epoch_started = Instant::now();
+            let epoch_t0 = self.tracer.as_deref().map(Tracer::now);
             // Detach the diagonal so the overlap hook can schedule IO on
             // the shard container while the executor samples its blocks
             // (the diagonal stays accounted against the spill budget).
@@ -852,6 +1024,11 @@ impl ParallelLda {
                 seed: self.seed ^ LDA_SWEEP_SALT,
                 sweep: sweep_no,
                 kernel: self.kernel,
+                obs: TaskObs {
+                    trace: self.tracer.as_deref(),
+                    epoch: l as u32,
+                    family: Family::Word as u8,
+                },
             };
             let tasks = EpochTasks {
                 blocks: &mut diag,
@@ -877,9 +1054,12 @@ impl ParallelLda {
                 }
             };
             let topic = &mut self.counts.topic;
+            let tr_commit = self.tracer.as_deref();
             let mut runahead = 0.0f64;
             let mut blocking = 0.0f64;
-            let mut commit = |_t: usize, delta: &[i64], in_flight: usize| {
+            // The committer runs on the coordinator thread in every
+            // executor, so its spans go to the coordinator lane.
+            let mut commit = |t: usize, delta: &[i64], in_flight: usize| {
                 let fold_started = Instant::now();
                 commit_delta(topic, delta);
                 let secs = fold_started.elapsed().as_secs_f64();
@@ -887,6 +1067,19 @@ impl ParallelLda {
                     runahead += secs;
                 } else {
                     blocking += secs;
+                }
+                if let Some(tr) = tr_commit {
+                    let dur = (secs * 1e9) as u64;
+                    tr.emit(Event {
+                        lane: tr.coord_lane(),
+                        sweep: sweep_no as u32,
+                        epoch: l as u32,
+                        ticket: t as u32,
+                        t0_ns: tr.now().saturating_sub(dur),
+                        dur_ns: dur,
+                        arg: in_flight as u64,
+                        ..Event::of(EventKind::Commit)
+                    });
                 }
             };
             self.engines.get(mode).run_epoch_ticketed(
@@ -896,28 +1089,55 @@ impl ParallelLda {
                 &mut overlap,
                 &mut commit,
             );
-            stats.sample_secs += epoch_started.elapsed().as_secs_f64();
-            stats.io_write_secs += io_write;
-            stats.runahead_secs += runahead;
-            stats.commit_secs += blocking;
+            let m = &self.metrics;
+            m.add_phase(Family::Word, Phase::Sample, epoch_started.elapsed());
+            m.add_phase_secs(Family::Word, Phase::SpillWrite, io_write);
+            m.add_phase_secs(Family::Word, Phase::Runahead, runahead);
+            m.add_phase_secs(Family::Word, Phase::Commit, blocking);
             stats.task_nanos.push(self.task_nanos[..n].to_vec());
             stats.worker_nanos.push(self.worker_nanos.clone());
+            self.trace_io(sweep_no, l, EventKind::IoWrite, io_write, spill);
 
             // The epoch drained: every delta is already folded into the
             // authoritative totals, so the "barrier" is one O(K)
             // snapshot republish for the next epoch's readers.
             let barrier_started = Instant::now();
             self.snapshot.copy_from_slice(&self.counts.topic);
-            stats.barrier_secs += barrier_started.elapsed().as_secs_f64();
+            let barrier_dur = barrier_started.elapsed();
+            self.metrics
+                .add_phase(Family::Word, Phase::Barrier, barrier_dur);
             stats.epoch_secs.push(epoch_started.elapsed().as_secs_f64());
+            if let Some(tr) = self.tracer.as_deref() {
+                let bns = barrier_dur.as_nanos() as u64;
+                tr.emit(Event {
+                    lane: tr.coord_lane(),
+                    sweep: sweep_no as u32,
+                    epoch: l as u32,
+                    t0_ns: tr.now().saturating_sub(bns),
+                    dur_ns: bns,
+                    ..Event::of(EventKind::Barrier)
+                });
+                let t0 = epoch_t0.unwrap_or(0);
+                tr.emit(Event {
+                    lane: tr.coord_lane(),
+                    sweep: sweep_no as u32,
+                    epoch: l as u32,
+                    t0_ns: t0,
+                    dur_ns: tr.now().saturating_sub(t0),
+                    ..Event::of(EventKind::Epoch)
+                });
+            }
             self.shards.restore_diagonal(l, diag);
         }
         // The last diagonal has no successor epoch to shadow its
         // write-back; flush it here (no-op in-core).
-        stats.io_write_secs += self
+        let write_secs = self
             .shards
             .release(p - 1)
             .expect("out-of-core: writing a diagonal back to the shard store failed");
+        self.metrics
+            .add_phase_secs(Family::Word, Phase::SpillWrite, write_secs);
+        self.trace_io(sweep_no, p - 1, EventKind::IoWrite, write_secs, spill);
     }
 
     /// The persistent worker pool, if any `Pooled`-mode sweep has run on
@@ -2004,6 +2224,141 @@ mod tests {
                     assert_eq!(lda.counts.topic, oracle.counts.topic, "{tag}");
                 }
             }
+        }
+    }
+
+    mod tracing {
+        use super::*;
+        use crate::obs::analyze::analyze;
+        use crate::obs::{Family, TraceMeta, Tracer};
+        use std::sync::Arc;
+
+        fn traced(
+            mut lda: ParallelLda,
+            mode: ExecMode,
+            sweeps: usize,
+        ) -> (ParallelLda, Arc<Tracer>) {
+            let tr = Arc::new(Tracer::new(lda.workers()));
+            lda.set_tracer(Some(Arc::clone(&tr)));
+            for _ in 0..sweeps {
+                lda.sweep(mode);
+            }
+            (lda, tr)
+        }
+
+        #[test]
+        fn tracing_on_equals_off_across_kernels_modes_and_commits() {
+            // The observational contract: attaching a tracer changes no
+            // sampled bit, for every kernel x exec mode x commit mode.
+            for kernel in KernelKind::all() {
+                for mode in [ExecMode::Sequential, ExecMode::Threaded, ExecMode::Pooled] {
+                    for commit in [CommitMode::Barrier, CommitMode::Ticketed] {
+                        let (_b, mut plain) = setup(3, 0xB17);
+                        plain.set_kernel(kernel);
+                        plain.set_commit(commit);
+                        for _ in 0..2 {
+                            plain.sweep(mode);
+                        }
+                        let (_b2, mut lda) = setup(3, 0xB17);
+                        lda.set_kernel(kernel);
+                        lda.set_commit(commit);
+                        let (lda, tr) = traced(lda, mode, 2);
+                        let tag = format!("{kernel:?} {mode:?} {commit:?}");
+                        assert_eq!(tr.dropped(), 0, "{tag}");
+                        assert!(!tr.take().is_empty(), "{tag}: trace recorded");
+                        assert_eq!(lda.counts.doc_topic, plain.counts.doc_topic, "{tag}");
+                        assert_eq!(lda.counts.word_topic, plain.counts.word_topic, "{tag}");
+                        assert_eq!(lda.counts.topic, plain.counts.topic, "{tag}");
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn trace_covers_every_task_exactly_once_under_pooled_steal() {
+            // Ring-buffer drain acceptance: with the persistent pool
+            // and work stealing racing the coordinator, the drained
+            // stream still holds exactly one Task span per scheduled
+            // task per sweep -- no losses, no duplicates. The analyzer
+            // enforces this (per-epoch ticket sets must be exactly
+            // {0..n-1} with distinct partitions).
+            let sweeps = 3usize;
+            let grid = 4usize;
+            let (_b, mut lda) =
+                setup_scheduled(grid, 0x5EA1, ScheduleKind::Packed { grid_factor: 2 }, 2);
+            lda.set_balance(BalanceMode::Steal);
+            let (lda, tr) = traced(lda, ExecMode::Pooled, sweeps);
+            assert_eq!(tr.dropped(), 0);
+            let events = tr.take();
+            let meta = TraceMeta {
+                workers: lda.workers(),
+                dropped: 0,
+                label: String::new(),
+            };
+            let an = analyze(&events, &meta).expect("trace passes span-schema validation");
+            let tasks: u64 = an.sweeps.iter().map(|s| s.tasks).sum();
+            assert_eq!(tasks as usize, sweeps * grid * grid);
+            assert_eq!(an.sweeps.len(), sweeps, "one row per (family, sweep)");
+            assert_eq!(an.task_ns.count(), tasks);
+        }
+
+        #[test]
+        fn analyzer_eta_matches_trainer_registry() {
+            // The analyzer recomputes measured-eta from raw Task spans
+            // with the trainer's own accounting (busy / (W * sum of
+            // per-epoch max-lane busy)); both views must agree to
+            // within 1%.
+            let (_b, mut lda) =
+                setup_scheduled(4, 0xE7A, ScheduleKind::Packed { grid_factor: 2 }, 2);
+            lda.set_commit(CommitMode::Ticketed);
+            let (lda, tr) = traced(lda, ExecMode::Pooled, 3);
+            assert_eq!(tr.dropped(), 0);
+            let events = tr.take();
+            let meta = TraceMeta {
+                workers: lda.workers(),
+                dropped: 0,
+                label: String::new(),
+            };
+            let an = analyze(&events, &meta).expect("valid trace");
+            let trainer = lda.metrics().measured_eta(Family::Word, lda.workers());
+            let traced_eta = an.measured_eta();
+            assert!(
+                (traced_eta - trainer).abs() <= 0.01 * trainer,
+                "trace eta {traced_eta} vs trainer eta {trainer}"
+            );
+            // Commit spans cover every ticket under the ticketed mode.
+            assert_eq!(an.commit_blocking + an.commit_runahead, 3 * 4 * 4);
+        }
+
+        #[test]
+        fn sweep_stats_secs_are_registry_views() {
+            // Satellite of the registry refactor: the SweepStats
+            // second-buckets are per-sweep deltas of the registry phase
+            // accounts, so their totals reconcile exactly.
+            let (_b, mut lda) = setup(3, 0x51A7);
+            let mut sample = 0.0;
+            let mut barrier = 0.0;
+            let mut update = 0.0;
+            for _ in 0..3 {
+                let s = lda.sweep(ExecMode::Sequential);
+                sample += s.sample_secs;
+                barrier += s.barrier_secs;
+                update += s.update_secs;
+            }
+            let m = lda.metrics();
+            assert_eq!(m.sweeps.get(), 3);
+            assert_eq!(m.tasks.get(), 3 * 9);
+            assert_eq!(m.task_ns.count(), 3 * 9);
+            let close = |a: f64, b: u64| (a - b as f64 / 1e9).abs() < 1e-6;
+            assert!(close(sample, m.phase_nanos(Family::Word, Phase::Sample)));
+            assert!(close(barrier, m.phase_nanos(Family::Word, Phase::Barrier)));
+            assert!(close(update, m.phase_nanos(Family::Word, Phase::Update)));
+            // The report phase breakdown is a view over the same
+            // accounts, with the always-present buckets first.
+            let phases = m.phases_secs();
+            assert_eq!(phases[0].0, "sample");
+            assert_eq!(phases[1].0, "barrier");
+            assert_eq!(phases[2].0, "update");
         }
     }
 }

@@ -101,6 +101,7 @@ use std::time::Instant;
 use crate::gibbs::sampler::Hyper;
 use crate::gibbs::tokens::TokenBlock;
 use crate::kernel::{Kernel, KernelKind, TaskCtx};
+use crate::obs::trace::{Event, EventKind, Tracer};
 use crate::scheduler::exec::ExecMode;
 use crate::scheduler::shared::SharedRows;
 use crate::util::fault;
@@ -143,6 +144,95 @@ pub struct EpochSpec<'a> {
     /// kernel instance of this kind, rebuilt only when the kind
     /// changes, so kernel scratch persists across epochs and sweeps.
     pub kernel: KernelKind,
+    /// Observability context (see [`TaskObs`]); `Default` = tracing off.
+    pub obs: TaskObs<'a>,
+}
+
+/// Observability context threaded through [`EpochSpec`]: an optional
+/// trace recorder plus the trace coordinates the spec does not already
+/// carry. Strictly observational — executors only *emit* through it, so
+/// results are bit-identical with tracing on or off. The default
+/// (`trace: None`) is the zero-cost path: per task, one `Option` test
+/// on an already-loaded field.
+#[derive(Clone, Copy, Default)]
+pub struct TaskObs<'a> {
+    /// Trace recorder, or `None` for the zero-cost path.
+    pub trace: Option<&'a Tracer>,
+    /// Diagonal epoch index within the sweep (a trace coordinate;
+    /// execution never reads it).
+    pub epoch: u32,
+    /// Phase family: 0 = word (LDA and BoT word phase), 1 = BoT stamp.
+    pub family: u8,
+}
+
+/// Emit one successful task's span — the single emission point shared
+/// by every executor path, so a trace covers each scheduled task
+/// exactly once (ticket = the task's index within its epoch, the
+/// commit order). `dt` is the same measured duration the task's
+/// `nanos` telemetry slot receives, so an analyzer recomputing
+/// measured-η from spans reproduces `SweepStats::measured_eta`. A
+/// stolen task additionally gets a [`EventKind::Steal`] marker.
+#[inline]
+fn trace_task(
+    spec: &EpochSpec<'_>,
+    lane: usize,
+    ticket: usize,
+    partition: u64,
+    dt: u64,
+    stolen: bool,
+) {
+    let Some(tr) = spec.obs.trace else { return };
+    let ev = Event {
+        kind: EventKind::Task,
+        family: spec.obs.family,
+        lane: lane as u16,
+        sweep: spec.sweep as u32,
+        epoch: spec.obs.epoch,
+        ticket: ticket as u32,
+        partition,
+        t0_ns: tr.now().saturating_sub(dt),
+        dur_ns: dt,
+        arg: stolen as u64,
+    };
+    tr.emit(ev);
+    if stolen {
+        tr.emit(Event { kind: EventKind::Steal, dur_ns: 0, arg: dt, ..ev });
+    }
+}
+
+/// Emit an instant event (rollback/retry) on `lane` with task
+/// coordinates. No-op when tracing is off.
+#[inline]
+fn trace_instant(
+    spec: &EpochSpec<'_>,
+    lane: usize,
+    kind: EventKind,
+    ticket: usize,
+    partition: u64,
+    arg: u64,
+) {
+    let Some(tr) = spec.obs.trace else { return };
+    tr.emit(Event {
+        kind,
+        family: spec.obs.family,
+        lane: lane as u16,
+        sweep: spec.sweep as u32,
+        epoch: spec.obs.epoch,
+        ticket: ticket as u32,
+        partition,
+        t0_ns: tr.now(),
+        dur_ns: 0,
+        arg,
+    });
+}
+
+/// The lifetime-erased tracer pointer a pool [`Job`] carries
+/// (null = tracing off).
+#[inline]
+fn trace_ptr(spec: &EpochSpec<'_>) -> *const Tracer {
+    spec.obs
+        .trace
+        .map_or(std::ptr::null(), |t| t as *const Tracer)
 }
 
 /// One epoch's work: the diagonal's token blocks plus the schedule's
@@ -501,8 +591,16 @@ fn roll_back_task(
 /// "giving up" in the message — once the task has consumed its whole
 /// [`MAX_TASK_ATTEMPTS`] budget, so a deterministic crash surfaces
 /// instead of looping.
+///
+/// `lane`/`ticket` attribute the trace: each attempt emits a
+/// [`EventKind::Retry`] instant, a contained failure a
+/// [`EventKind::Rollback`], and the eventual success the task's one
+/// span — the calling thread is the lane's sole producer here (workers
+/// have joined/parked), so the SPSC contract holds.
 fn retry_task(
     spec: &EpochSpec<'_>,
+    lane: usize,
+    ticket: usize,
     partition: u64,
     block: &mut TokenBlock,
     delta: &mut [i64],
@@ -512,10 +610,22 @@ fn retry_task(
     let mut attempts = 1u32; // the contained failure that got us here
     loop {
         *retries += 1;
+        trace_instant(spec, lane, EventKind::Retry, ticket, partition, attempts as u64);
         let mut kernel = spec.kernel.build();
         match run_task_guarded(spec, partition, block, delta, kernel.as_mut(), &mut backup) {
-            Ok(dt) => return dt,
+            Ok(dt) => {
+                trace_task(spec, lane, ticket, partition, dt, false);
+                return dt;
+            }
             Err(()) => {
+                trace_instant(
+                    spec,
+                    lane,
+                    EventKind::Rollback,
+                    ticket,
+                    partition,
+                    attempts as u64,
+                );
                 attempts += 1;
                 assert!(
                     attempts < MAX_TASK_ATTEMPTS,
@@ -582,13 +692,19 @@ impl Executor for SequentialExec {
                     kernel,
                     &mut self.backup,
                 ) {
-                    Ok(dt) => dt,
+                    Ok(dt) => {
+                        trace_task(spec, w, i, tasks.ids[i], dt, false);
+                        dt
+                    }
                     Err(()) => {
+                        trace_instant(spec, w, EventKind::Rollback, i, tasks.ids[i], 1);
                         // The panic may have torn the kernel's scratch;
                         // drop it so the next get() rebuilds from scratch.
                         self.kernel = KernelSlot::default();
                         retry_task(
                             spec,
+                            w,
+                            i,
                             tasks.ids[i],
                             &mut tasks.blocks[i],
                             &mut deltas[i],
@@ -659,6 +775,7 @@ impl Executor for ThreadedExec {
             // static lists.
             let cursor = AtomicUsize::new(0);
             let cursor = &cursor;
+            let assign = tasks.assign;
             std::thread::scope(|s| {
                 for w in 0..tasks.assign.len().min(n) {
                     let arrays = TaskArrays {
@@ -692,8 +809,20 @@ impl Executor for ThreadedExec {
                                 Ok(dt) => {
                                     unsafe { *arrays.nanos.add(i) = dt };
                                     busy += dt;
+                                    if spec.obs.trace.is_some() {
+                                        let stolen = !assign[w].contains(&(i as u32));
+                                        trace_task(spec, w, i, ids[i], dt, stolen);
+                                    }
                                 }
                                 Err(()) => {
+                                    trace_instant(
+                                        spec,
+                                        w,
+                                        EventKind::Rollback,
+                                        i,
+                                        ids[i],
+                                        1,
+                                    );
                                     failed[i].store(true, Ordering::Relaxed);
                                     // Scratch may be torn; rebuild before
                                     // the next claimed task.
@@ -741,8 +870,17 @@ impl Executor for ThreadedExec {
                                 Ok(dt) => {
                                     unsafe { *arrays.nanos.add(i) = dt };
                                     busy += dt;
+                                    trace_task(spec, w, i, ids[i], dt, false);
                                 }
                                 Err(()) => {
+                                    trace_instant(
+                                        spec,
+                                        w,
+                                        EventKind::Rollback,
+                                        i,
+                                        ids[i],
+                                        1,
+                                    );
                                     failed[i].store(true, Ordering::Relaxed);
                                     kernel = spec.kernel.build();
                                 }
@@ -763,19 +901,21 @@ impl Executor for ThreadedExec {
             if !failed[i].load(Ordering::Relaxed) {
                 continue;
             }
+            let w = tasks
+                .assign
+                .iter()
+                .position(|l| l.contains(&(i as u32)))
+                .unwrap_or(0);
             let dt = retry_task(
                 spec,
+                w,
+                i,
                 tasks.ids[i],
                 &mut tasks.blocks[i],
                 &mut deltas[i],
                 &mut self.retries,
             );
             tasks.nanos[i] = dt;
-            let w = tasks
-                .assign
-                .iter()
-                .position(|l| l.contains(&(i as u32)))
-                .unwrap_or(0);
             tasks.worker_nanos[w] += dt;
         }
     }
@@ -847,9 +987,22 @@ impl Executor for ThreadedExec {
                             Ok(dt) => {
                                 unsafe { *arrays.nanos.add(i) = dt };
                                 busy += dt;
+                                if spec.obs.trace.is_some() {
+                                    let stolen =
+                                        steal && !list.contains(&(i as u32));
+                                    trace_task(spec, w, i, ids[i], dt, stolen);
+                                }
                                 true
                             }
                             Err(()) => {
+                                trace_instant(
+                                    spec,
+                                    w,
+                                    EventKind::Rollback,
+                                    i,
+                                    ids[i],
+                                    1,
+                                );
                                 // Contained and rolled back; scratch may
                                 // be torn — rebuild before the next task.
                                 kernel = spec.kernel.build();
@@ -910,19 +1063,21 @@ impl Executor for ThreadedExec {
             if !failed[i] {
                 continue;
             }
+            let w = tasks
+                .assign
+                .iter()
+                .position(|l| l.contains(&(i as u32)))
+                .unwrap_or(0);
             let dt = retry_task(
                 spec,
+                w,
+                i,
                 tasks.ids[i],
                 &mut tasks.blocks[i],
                 &mut deltas[i],
                 &mut self.retries,
             );
             tasks.nanos[i] = dt;
-            let w = tasks
-                .assign
-                .iter()
-                .position(|l| l.contains(&(i as u32)))
-                .unwrap_or(0);
             tasks.worker_nanos[w] += dt;
             committer.mark_ready(i);
             while let Some(c) = committer.next_committable() {
@@ -972,6 +1127,12 @@ struct Job {
     /// task (before the job's own [`Done::Job`] completion), so the
     /// coordinator can commit tickets while the job is still sampling.
     per_task: bool,
+    /// Trace recorder (null = tracing off) plus the epoch/family trace
+    /// coordinates — the lifetime-erased form of [`TaskObs`]. Valid
+    /// until the job's completion signal, like every other pointer here.
+    trace: *const Tracer,
+    epoch: u32,
+    family: u8,
 }
 
 // SAFETY: Job transfers *exclusive logical ownership* of the worker's
@@ -1011,7 +1172,13 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
     // scratch mid-update.
     let mut kernel = KernelSlot::default();
     let mut backup = Vec::new();
-    while let Ok(job) = rx.recv() {
+    loop {
+        // Queue-wait telemetry: how long this worker idled for its next
+        // job. One timestamp per dispatch — negligible against an
+        // epoch's sampling — and only *emitted* when the job traces.
+        let waited = Instant::now();
+        let Ok(job) = rx.recv() else { break };
+        let wait_ns = waited.elapsed().as_nanos() as u64;
         let k = job.h.k;
         // Catch panics outside the per-task guard (kernel construction,
         // a failed invariant in this loop itself) so they surface as a
@@ -1030,9 +1197,33 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
                 seed: job.seed,
                 sweep: job.sweep,
                 kernel: job.kernel,
+                obs: TaskObs {
+                    // SAFETY: the tracer (when set) is owned by the
+                    // trainer driving the gather barrier, so it outlives
+                    // the job like every other Job pointer.
+                    trace: unsafe { job.trace.as_ref() },
+                    epoch: job.epoch,
+                    family: job.family,
+                },
             };
+            if let Some(tr) = spec.obs.trace {
+                tr.emit(Event {
+                    kind: EventKind::QueueWait,
+                    family: job.family,
+                    lane: job.worker as u16,
+                    sweep: job.sweep as u32,
+                    epoch: job.epoch,
+                    ticket: 0,
+                    partition: 0,
+                    t0_ns: tr.now().saturating_sub(wait_ns),
+                    dur_ns: wait_ns,
+                    arg: 0,
+                });
+            }
             let mut busy = 0u64;
             let mut failed: Vec<u32> = Vec::new();
+            let assign_list =
+                unsafe { std::slice::from_raw_parts(job.assign, job.assign_len) };
             let mut body = |i: usize| {
                 // SAFETY: index `i` is exclusively this worker's — by
                 // the `check_tasks` invariant in static mode, by the
@@ -1045,9 +1236,22 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
                     Ok(dt) => {
                         unsafe { *job.nanos.add(i) = dt };
                         busy += dt;
+                        if spec.obs.trace.is_some() {
+                            let stolen = !job.queue.is_null()
+                                && !assign_list.contains(&(i as u32));
+                            trace_task(&spec, job.worker, i, id, dt, stolen);
+                        }
                         true
                     }
                     Err(()) => {
+                        trace_instant(
+                            &spec,
+                            job.worker,
+                            EventKind::Rollback,
+                            i,
+                            id,
+                            1,
+                        );
                         // Contained and rolled back; the coordinator
                         // re-dispatches. The panic may have torn the
                         // kernel's scratch — rebuild before the next task.
@@ -1065,9 +1269,7 @@ fn worker_loop(rx: Receiver<Job>, done: Sender<Done>) {
                 }
             };
             if job.queue.is_null() {
-                let assign =
-                    unsafe { std::slice::from_raw_parts(job.assign, job.assign_len) };
-                for &i in assign {
+                for &i in assign_list {
                     body(i as usize);
                 }
             } else {
@@ -1260,6 +1462,9 @@ impl Executor for WorkerPool {
                 kernel: spec.kernel,
                 worker: w,
                 per_task: false,
+                trace: trace_ptr(spec),
+                epoch: spec.obs.epoch,
+                family: spec.obs.family,
             };
             self.senders[w].send(job).expect("pool worker died");
             submitted += 1;
@@ -1294,6 +1499,21 @@ impl Executor for WorkerPool {
                 "tasks {failed:?} panicked {MAX_TASK_ATTEMPTS} times; giving up"
             );
             failed.sort_unstable();
+            if let Some(tr) = spec.obs.trace {
+                // Retry markers land on the coordinator lane — the
+                // retry job itself emits its Task spans from the target
+                // worker's lane, like any other job.
+                for &i in &failed {
+                    trace_instant(
+                        spec,
+                        tr.coord_lane() as usize,
+                        EventKind::Retry,
+                        i as usize,
+                        tasks.ids[i as usize],
+                        round as u64,
+                    );
+                }
+            }
             let target = (0..self.senders.len())
                 .min_by_key(|&w| (self.panics[w], w))
                 .expect("pool has workers");
@@ -1318,6 +1538,9 @@ impl Executor for WorkerPool {
                 kernel: spec.kernel,
                 worker: target,
                 per_task: false,
+                trace: trace_ptr(spec),
+                epoch: spec.obs.epoch,
+                family: spec.obs.family,
             };
             self.senders[target].send(job).expect("pool worker died");
             // `failed` must stay alive and unmodified until this recv
@@ -1399,6 +1622,9 @@ impl Executor for WorkerPool {
                 kernel: spec.kernel,
                 worker: w,
                 per_task: true,
+                trace: trace_ptr(spec),
+                epoch: spec.obs.epoch,
+                family: spec.obs.family,
             };
             self.senders[w].send(job).expect("pool worker died");
             submitted += 1;
@@ -1461,6 +1687,21 @@ impl Executor for WorkerPool {
                 "tasks {failed:?} panicked {MAX_TASK_ATTEMPTS} times; giving up"
             );
             failed.sort_unstable();
+            if let Some(tr) = spec.obs.trace {
+                // Retry markers land on the coordinator lane — the
+                // retry job itself emits its Task spans from the target
+                // worker's lane, like any other job.
+                for &i in &failed {
+                    trace_instant(
+                        spec,
+                        tr.coord_lane() as usize,
+                        EventKind::Retry,
+                        i as usize,
+                        tasks.ids[i as usize],
+                        round as u64,
+                    );
+                }
+            }
             let target = (0..self.senders.len())
                 .min_by_key(|&w| (self.panics[w], w))
                 .expect("pool has workers");
@@ -1485,6 +1726,9 @@ impl Executor for WorkerPool {
                 kernel: spec.kernel,
                 worker: target,
                 per_task: false,
+                trace: trace_ptr(spec),
+                epoch: spec.obs.epoch,
+                family: spec.obs.family,
             };
             self.senders[target].send(job).expect("pool worker died");
             // `failed` must stay alive and unmodified until this recv
@@ -1631,6 +1875,7 @@ mod tests {
                 seed,
                 sweep: e,
                 kernel,
+                obs: TaskObs::default(),
             };
             let tasks = EpochTasks {
                 blocks: &mut blocks,
@@ -1721,6 +1966,7 @@ mod tests {
                 seed,
                 sweep: e,
                 kernel,
+                obs: TaskObs::default(),
             };
             let tasks = EpochTasks {
                 blocks: &mut blocks,
@@ -1869,6 +2115,7 @@ mod tests {
                 seed: 23,
                 sweep: e,
                 kernel,
+                obs: TaskObs::default(),
             };
             let tasks = EpochTasks {
                 blocks: &mut blocks,
@@ -1959,6 +2206,7 @@ mod tests {
                 seed: 1,
                 sweep: e,
                 kernel: KernelKind::Dense,
+                obs: TaskObs::default(),
             };
             let tasks = EpochTasks {
                 blocks: &mut blocks,
@@ -2006,6 +2254,7 @@ mod tests {
             seed: 5,
             sweep: 0,
             kernel: KernelKind::Dense,
+            obs: TaskObs::default(),
         };
         let tasks = EpochTasks {
             blocks: &mut blocks,
@@ -2072,6 +2321,7 @@ mod tests {
             seed: 9,
             sweep: 0,
             kernel: KernelKind::Dense,
+            obs: TaskObs::default(),
         };
         let tasks = EpochTasks {
             blocks: &mut blocks,
@@ -2193,6 +2443,7 @@ mod tests {
                     seed,
                     sweep: e,
                     kernel: KernelKind::Dense,
+                    obs: TaskObs::default(),
                 };
                 let tasks = EpochTasks {
                     blocks: &mut blocks,

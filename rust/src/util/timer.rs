@@ -9,8 +9,12 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     (out, start.elapsed())
 }
 
-/// A stopwatch accumulating named phases — used to break a training sweep
-/// into sample/barrier/update/perplexity buckets for the perf log.
+/// A stopwatch accumulating named phases — the presentation form of the
+/// training phase breakdown. Since the obs registry landed, trainers no
+/// longer accumulate into this by hand: the canonical accounts live in
+/// `obs::Registry` and this type is built as a *view* over them
+/// (`Registry::phase_timer` / [`PhaseTimer::from_secs`]). Benches and
+/// ad-hoc callers still use it directly as a stopwatch.
 #[derive(Debug, Default)]
 pub struct PhaseTimer {
     phases: Vec<(String, Duration)>,
@@ -19,6 +23,18 @@ pub struct PhaseTimer {
 impl PhaseTimer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Build a timer from `(name, seconds)` pairs, preserving order —
+    /// the inverse of [`PhaseTimer::phases_secs`], used to present
+    /// registry accounts through the existing report path.
+    pub fn from_secs(phases: Vec<(String, f64)>) -> Self {
+        Self {
+            phases: phases
+                .into_iter()
+                .map(|(n, s)| (n, Duration::from_secs_f64(s.max(0.0))))
+                .collect(),
+        }
     }
 
     pub fn record<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
@@ -92,6 +108,15 @@ mod tests {
         assert_eq!(t.get("sample"), Duration::from_millis(15));
         assert_eq!(t.total(), Duration::from_millis(16));
         assert!(t.report().contains("sample"));
+    }
+
+    #[test]
+    fn from_secs_inverts_phases_secs() {
+        let mut t = PhaseTimer::new();
+        t.add("sample", Duration::from_millis(20));
+        t.add("barrier", Duration::from_millis(5));
+        let view = PhaseTimer::from_secs(t.phases_secs());
+        assert_eq!(view.phases_secs(), t.phases_secs());
     }
 
     #[test]

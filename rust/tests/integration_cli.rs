@@ -354,6 +354,64 @@ fn train_bot_checkpoint_resume_via_cli() {
 }
 
 #[test]
+fn train_trace_out_and_analyze_trace_via_cli() {
+    // Record a trace through the CLI surface, then feed it back through
+    // `analyze-trace`: the trace must validate against the span schema
+    // (every task covered exactly once) and yield a measured η.
+    let path = std::env::temp_dir().join(format!("pplda-cli-trace-{}.json", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    let (out, _, ok) = pplda(&[
+        "train", "--profile", "tiny", "--workers", "2", "--grid-factor", "2",
+        "--schedule", "packed", "--topics", "4", "--iters", "3", "--restarts", "2",
+        "--mode", "pooled", "--commit", "ticketed", "--trace-out", &path_s,
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("wrote "), "{out}");
+    assert!(out.contains("events, 0 dropped"), "{out}");
+    let raw = std::fs::read_to_string(&path).unwrap();
+    assert!(raw.contains("\"traceEvents\""), "Perfetto-loadable Chrome trace");
+    assert!(raw.contains("\"ph\":\"X\""), "{}", &raw[..200.min(raw.len())]);
+
+    let (an, err, ok) = pplda(&["analyze-trace", &path_s]);
+    assert!(ok, "{an}\n{err}");
+    assert!(an.contains("measured_eta[word]"), "{an}");
+    assert!(an.contains("critical path"), "{an}");
+    assert!(an.contains("workers (busy"), "{an}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn train_bot_trace_out_via_cli() {
+    let path =
+        std::env::temp_dir().join(format!("pplda-cli-bot-trace-{}.jsonl", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    let (out, _, ok) = pplda(&[
+        "train-bot", "--profile", "tiny", "--procs", "2", "--topics", "4",
+        "--iters", "2", "--restarts", "2", "--mode", "pooled", "--trace-out", &path_s,
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("events, 0 dropped"), "{out}");
+    // Both phase families appear in the JSONL stream.
+    let raw = std::fs::read_to_string(&path).unwrap();
+    assert!(raw.lines().any(|l| l.contains("\"family\":0")), "word-phase events");
+    assert!(raw.lines().any(|l| l.contains("\"family\":1")), "stamp-phase events");
+    let (an, err, ok) = pplda(&["analyze-trace", &path_s]);
+    assert!(ok, "{an}\n{err}");
+    assert!(an.contains("measured_eta[stamp]"), "{an}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn analyze_trace_rejects_garbage() {
+    let path = std::env::temp_dir().join(format!("pplda-cli-bad-trace-{}", std::process::id()));
+    std::fs::write(&path, "not a trace").unwrap();
+    let (_, err, ok) = pplda(&["analyze-trace", path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("analyze-trace"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn checkpoint_every_without_dir_fails() {
     let (_, err, ok) = pplda(&[
         "train", "--profile", "tiny", "--topics", "4", "--iters", "2",
