@@ -1,0 +1,171 @@
+//! Serve-path throughput/latency benchmark: an in-process
+//! [`QueryServer`] driven by concurrent clients under a uniform and a
+//! skewed (head-heavy) word mix, plus a forced-degradation row. Emits
+//! one `BENCH_JSON serve_qps` line per mix with client-side p50/p99 and
+//! QPS — the latency meter for the robustness deliverable (see
+//! `docs/serving.md`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::gibbs::serial::SerialLda;
+use pplda::serve::server::{QueryServer, ServeConfig};
+use pplda::serve::snapshot::ModelSnapshot;
+use pplda::util::json::Json;
+use pplda::util::rng::Rng;
+
+const SEED: u64 = 42;
+const K: usize = 16;
+
+struct MixResult {
+    ok: u64,
+    degraded: u64,
+    errors: u64,
+    qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let (requests, clients) = if fast { (400usize, 4usize) } else { (4000, 8) };
+
+    // A real (briefly trained) model, frozen into the serve snapshot.
+    let bow = generate(&Profile::tiny(), SEED);
+    let mut lda = SerialLda::init(&bow, K, 0.5, 0.1, SEED);
+    for _ in 0..5 {
+        lda.sweep();
+    }
+    let make_snap = || ModelSnapshot::from_counts(&lda.counts, 0.5, 0.1, SEED);
+    let v = bow.num_words();
+    println!(
+        "bench_serve_qps: V={v} K={K} | {requests} requests x {clients} clients per mix"
+    );
+
+    let normal = ServeConfig::default();
+    // Forced degradation: tiny queue, ramp over its whole range, one
+    // worker so concurrent clients keep depth > 0 at dequeue.
+    let degraded_cfg = ServeConfig {
+        workers: 1,
+        queue_capacity: 8,
+        max_batch: 4,
+        degrade_at: 0.0,
+        ..ServeConfig::default()
+    };
+
+    let mut rows = Vec::new();
+    for (mix, skewed, cfg) in [
+        ("uniform", false, normal),
+        ("skewed", true, normal),
+        ("degraded", false, degraded_cfg),
+    ] {
+        let r = run_mix(make_snap(), cfg, mix, skewed, v, requests, clients);
+        println!(
+            "{mix:9} {:5} ok ({:8.1} qps) | p50 {:7.3}ms p99 {:7.3}ms | degraded {} errors {}",
+            r.ok, r.qps, r.p50_ms, r.p99_ms, r.degraded, r.errors
+        );
+        let mut row = Json::obj();
+        row.set("bench", "serve_qps")
+            .set("mix", mix)
+            .set("v", v)
+            .set("k", K)
+            .set("requests", requests)
+            .set("clients", clients)
+            .set("ok", r.ok)
+            .set("degraded", r.degraded)
+            .set("errors", r.errors)
+            .set("qps", r.qps)
+            .set("p50_ms", r.p50_ms)
+            .set("p99_ms", r.p99_ms);
+        println!("BENCH_JSON {}", row.to_string());
+        rows.push((mix, r));
+    }
+
+    // Acceptance: the normal mixes never degrade and lose nothing; the
+    // forced-degradation config actually sheds iterations.
+    for (mix, r) in &rows {
+        assert_eq!(r.errors, 0, "{mix}: queries failed");
+        assert_eq!(r.ok, requests as u64, "{mix}: lost replies");
+        assert!(r.qps > 0.0 && r.p99_ms > 0.0, "{mix}: empty measurement");
+    }
+    assert_eq!(rows[0].1.degraded, 0, "uniform mix must not degrade");
+    assert_eq!(rows[1].1.degraded, 0, "skewed mix must not degrade");
+    assert!(
+        rows[2].1.degraded > 0,
+        "forced-degradation mix produced no degraded replies"
+    );
+}
+
+fn run_mix(
+    snap: ModelSnapshot,
+    cfg: ServeConfig,
+    mix: &str,
+    skewed: bool,
+    v: usize,
+    requests: usize,
+    clients: usize,
+) -> MixResult {
+    let server = Arc::new(QueryServer::start(snap, cfg));
+    let per_client = requests / clients;
+    let started = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let server = Arc::clone(&server);
+            let mix = mix.to_string();
+            std::thread::spawn(move || {
+                let mut rng = Rng::stream(SEED ^ mix.len() as u64, c as u64);
+                let mut lat_ms = Vec::with_capacity(per_client);
+                let (mut ok, mut degraded, mut errors) = (0u64, 0u64, 0u64);
+                for i in 0..per_client {
+                    let id = (c * per_client + i) as u64;
+                    let words: Vec<u32> = (0..16)
+                        .map(|_| {
+                            if skewed {
+                                let u = rng.f64();
+                                ((u * u * u * v as f64) as usize).min(v - 1) as u32
+                            } else {
+                                rng.gen_range(v) as u32
+                            }
+                        })
+                        .collect();
+                    let t = Instant::now();
+                    match server.query(id, words, None) {
+                        Ok(reply) => {
+                            ok += 1;
+                            degraded += u64::from(reply.degraded);
+                            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                        }
+                        Err(_) => errors += 1,
+                    }
+                }
+                (lat_ms, ok, degraded, errors)
+            })
+        })
+        .collect();
+    let (mut lat_ms, mut ok, mut degraded, mut errors) = (Vec::new(), 0, 0, 0);
+    for t in threads {
+        let (l, o, d, e) = t.join().unwrap();
+        lat_ms.extend(l);
+        ok += o;
+        degraded += d;
+        errors += e;
+    }
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    server.drain();
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| -> f64 {
+        if lat_ms.is_empty() {
+            return 0.0;
+        }
+        lat_ms[((lat_ms.len() as f64 - 1.0) * p).round() as usize]
+    };
+    MixResult {
+        ok,
+        degraded,
+        errors,
+        qps: ok as f64 / elapsed,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+    }
+}

@@ -61,6 +61,10 @@ pub struct BotTrainReport {
     /// Transient spill-IO retries absorbed over the whole run (0 when
     /// in-core or fault-free).
     pub io_retries: u64,
+    /// `Some(sweep)` when the run stopped early at a graceful-interrupt
+    /// checkpoint (SIGINT with `--checkpoint-every` set) — see
+    /// `crate::util::interrupt`.
+    pub interrupted_at: Option<usize>,
     pub timelines: Vec<TopicTimeline>,
 }
 
@@ -85,6 +89,10 @@ impl BotTrainReport {
             .set("train_secs", self.train_secs)
             .set("task_retries", self.task_retries)
             .set("io_retries", self.io_retries)
+            .set("interrupted_at", match self.interrupted_at {
+                Some(it) => Json::from(it),
+                None => Json::Null,
+            })
             .set("phases", {
                 let mut ph = Json::obj();
                 for (name, secs) in &self.phases {
@@ -174,6 +182,7 @@ pub fn train_bot_traced(
             phases: Vec::new(),
             task_retries: 0,
             io_retries: 0,
+            interrupted_at: None,
             timelines: timeline::timelines(&bot.counts, &h),
         };
     }
@@ -218,6 +227,7 @@ pub fn train_bot_traced(
     let (mut dw_serial, mut dw_crit) = (0u64, 0u64);
     let (mut dts_serial, mut dts_crit) = (0u64, 0u64);
     let (mut task_retries, mut io_retries) = (0u64, 0u64);
+    let mut interrupted_at = None;
     for it in start + 1..=cfg.iters {
         let (ws, ss) = bot.sweep(cfg.mode);
         dw_serial += ws.busy_total_nanos();
@@ -226,6 +236,7 @@ pub fn train_bot_traced(
         dts_crit += ss.crit_nanos();
         task_retries += ws.task_retries + ss.task_retries;
         io_retries += ws.io_retries + ss.io_retries;
+        let mut checkpointed = false;
         if cfg.checkpoint_every > 0 && it % cfg.checkpoint_every == 0 {
             if let Some(root) = checkpoint_root {
                 let ((), dt) = time_once(|| {
@@ -236,6 +247,7 @@ pub fn train_bot_traced(
                 let m = bot.metrics();
                 m.add_phase(Family::Word, Phase::Checkpoint, dt);
                 m.checkpoints.inc();
+                checkpointed = true;
                 if let Some(tr) = tracer {
                     let dur = (dt.as_secs_f64() * 1e9) as u64;
                     tr.emit(Event {
@@ -246,6 +258,21 @@ pub fn train_bot_traced(
                         ..Event::of(EventKind::Checkpoint)
                     });
                 }
+            }
+        }
+        // Graceful interrupt: the in-flight sweep finished above;
+        // commit a final checkpoint at this sweep (unless the periodic
+        // cadence just wrote one) and stop.
+        if it < cfg.iters && cfg.checkpoint_every > 0 && crate::util::interrupt::requested() {
+            if let Some(root) = checkpoint_root {
+                if !checkpointed {
+                    let m = Manifest::bot(tc, p, cfg, it);
+                    checkpoint::write_bot(&bot, &m, root)
+                        .unwrap_or_else(|e| panic!("checkpoint failed: {e}"));
+                    bot.metrics().checkpoints.inc();
+                }
+                interrupted_at = Some(it);
+                break;
             }
         }
     }
@@ -271,6 +298,7 @@ pub fn train_bot_traced(
         phases: bot.metrics().phases_secs(),
         task_retries,
         io_retries,
+        interrupted_at,
         timelines: timeline::timelines(&bot.counts, &h),
     }
 }
@@ -363,6 +391,7 @@ mod tests {
         assert!(s.contains("\"phases\":{"));
         assert!(s.contains("\"task_retries\":0"));
         assert!(s.contains("\"io_retries\":0"));
+        assert!(s.contains("\"interrupted_at\":null"));
     }
 
     #[test]
@@ -391,6 +420,32 @@ mod tests {
             resumed.final_perplexity, oracle.final_perplexity,
             "resumed BoT run is bit-identical to the uninterrupted one"
         );
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn sigint_latch_checkpoints_bot_and_stops_early() {
+        let tc = tiny_tc(98);
+        let algo = Algorithm::A3 { restarts: 2 };
+        let mut cfg = TrainConfig::quick(4, 6);
+        let oracle = train_bot(&tc, 4, algo, &cfg);
+        assert_eq!(oracle.interrupted_at, None);
+
+        let root = std::env::temp_dir().join(format!("pplda-bot-int-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        cfg.checkpoint_every = 2;
+        crate::util::interrupt::trigger();
+        let stopped = train_bot_checkpointed(&tc, 4, algo, &cfg, Some(&root), None);
+        crate::util::interrupt::reset();
+        assert_eq!(stopped.interrupted_at, Some(1));
+        assert!(root.join("ckpt-1").is_dir(), "final interrupt checkpoint");
+
+        // Resuming from the interrupt checkpoint completes the run
+        // bit-identically to one that was never interrupted.
+        cfg.checkpoint_every = 0;
+        let resumed = train_bot_checkpointed(&tc, 4, algo, &cfg, None, Some(&root));
+        assert_eq!(resumed.interrupted_at, None);
+        assert_eq!(resumed.final_perplexity, oracle.final_perplexity);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -14,4 +14,4 @@ pub mod trainer;
 pub use bot_trainer::{train_bot, train_bot_checkpointed, train_bot_traced, BotTrainReport};
 pub use config::{Backend, TrainConfig};
 pub use report::TrainReport;
-pub use trainer::{train_lda, train_lda_checkpointed, train_lda_traced};
+pub use trainer::{train_lda, train_lda_checkpointed, train_lda_traced, train_lda_with_snapshot};

@@ -58,6 +58,10 @@ pub struct TrainReport {
     /// Transient spill-IO retries absorbed over the whole run (0 when
     /// in-core or fault-free).
     pub io_retries: u64,
+    /// `Some(sweep)` when the run stopped early at a graceful-interrupt
+    /// checkpoint (SIGINT with `--checkpoint-every` set) instead of
+    /// completing all `iters` sweeps — see `crate::util::interrupt`.
+    pub interrupted_at: Option<usize>,
 }
 
 impl TrainReport {
@@ -83,6 +87,10 @@ impl TrainReport {
             .set("tokens_per_sec", self.tokens_per_sec)
             .set("task_retries", self.task_retries)
             .set("io_retries", self.io_retries)
+            .set("interrupted_at", match self.interrupted_at {
+                Some(it) => Json::from(it),
+                None => Json::Null,
+            })
             .set("phases", {
                 let mut ph = Json::obj();
                 for (name, secs) in &self.phases {
@@ -157,6 +165,7 @@ mod tests {
             phases: vec![("sample".into(), 1.0), ("barrier".into(), 0.25)],
             task_retries: 1,
             io_retries: 2,
+            interrupted_at: None,
         }
     }
 
@@ -178,6 +187,7 @@ mod tests {
         assert!(s.contains("\"curve\":[{"));
         assert!(s.contains("\"task_retries\":1"));
         assert!(s.contains("\"io_retries\":2"));
+        assert!(s.contains("\"interrupted_at\":null"));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::coordinator::checkpoint::{self, Manifest};
 use crate::coordinator::config::{Backend, TrainConfig};
 use crate::coordinator::report::TrainReport;
 use crate::corpus::bow::BagOfWords;
+use crate::gibbs::counts::LdaCounts;
 use crate::gibbs::serial::SerialLda;
 use crate::obs::metrics::{Family, Phase};
 use crate::obs::trace::{Event, EventKind, Tracer};
@@ -20,6 +21,8 @@ use crate::runtime::executor::Artifacts;
 use crate::runtime::sampler_xla::{XlaPerplexity, XlaSampler};
 use crate::scheduler::cost_model::MeasuredReport;
 use crate::scheduler::exec::ParallelLda;
+use crate::serve::snapshot::ModelSnapshot;
+use crate::util::interrupt;
 #[cfg(feature = "xla")]
 use crate::util::rng::Rng;
 use crate::util::timer::{time_once, PhaseTimer};
@@ -66,6 +69,32 @@ pub fn train_lda_traced(
     resume: Option<&Path>,
     tracer: Option<&Arc<Tracer>>,
 ) -> TrainReport {
+    train_lda_with_snapshot(bow, plan, cfg, checkpoint_root, resume, tracer, None)
+}
+
+/// As [`train_lda_traced`], optionally exporting a serve-ready
+/// [`ModelSnapshot`] (`PPSNAP1`, see `docs/serving.md`) to
+/// `snapshot_out` when training finishes. Export is supported on both
+/// native arms (serial and partitioned); the XLA backend does not
+/// export. Two robustness behaviours live here as well:
+///
+/// * **Graceful interrupt**: when `cfg.checkpoint_every > 0` and a
+///   checkpoint root is set, a SIGINT latched via
+///   [`crate::util::interrupt`] finishes the in-flight sweep, commits a
+///   final checkpoint at that sweep, and returns early with
+///   `interrupted_at = Some(sweep)` instead of tearing the process
+///   down mid-write.
+/// * An interrupted run still exports its snapshot: the model written
+///   is the one the final checkpoint describes.
+pub fn train_lda_with_snapshot(
+    bow: &BagOfWords,
+    plan: &Plan,
+    cfg: &TrainConfig,
+    checkpoint_root: Option<&Path>,
+    resume: Option<&Path>,
+    tracer: Option<&Arc<Tracer>>,
+    snapshot_out: Option<&Path>,
+) -> TrainReport {
     if (checkpoint_root.is_some() || resume.is_some())
         && (plan.p == 1 || cfg.backend == Backend::Xla)
     {
@@ -90,6 +119,9 @@ pub fn train_lda_traced(
     // Sweeps actually executed this process (differs from `cfg.iters`
     // only when resuming) — the throughput denominator.
     let mut executed_sweeps = cfg.iters;
+    // `Some(sweep)` when a latched SIGINT stopped the run early at a
+    // final checkpoint (parallel native arm only).
+    let mut interrupted_at = None;
     let (curve, final_perplexity) = match (cfg.backend, plan.p) {
         (Backend::Native, 1) => {
             let mut lda = SerialLda::init(bow, cfg.topics, cfg.alpha, cfg.beta, cfg.seed);
@@ -98,6 +130,7 @@ pub fn train_lda_traced(
             if curve.is_empty() {
                 curve.push((cfg.iters, fin));
             }
+            export_snapshot(snapshot_out, &lda.counts, cfg);
             (curve, fin)
         }
         (Backend::Native, _) => {
@@ -154,6 +187,7 @@ pub fn train_lda_traced(
                     lda.metrics().add_phase(Family::Word, Phase::Perplexity, dt);
                     curve.push((it, pp));
                 }
+                let mut checkpointed = false;
                 if cfg.checkpoint_every > 0 && it % cfg.checkpoint_every == 0 {
                     if let Some(root) = checkpoint_root {
                         let ((), dt) = time_once(|| {
@@ -164,6 +198,7 @@ pub fn train_lda_traced(
                         let m = lda.metrics();
                         m.add_phase(Family::Word, Phase::Checkpoint, dt);
                         m.checkpoints.inc();
+                        checkpointed = true;
                         if let Some(tr) = tracer {
                             let dur = (dt.as_secs_f64() * 1e9) as u64;
                             tr.emit(Event {
@@ -174,6 +209,22 @@ pub fn train_lda_traced(
                                 ..Event::of(EventKind::Checkpoint)
                             });
                         }
+                    }
+                }
+                // Graceful interrupt: the in-flight sweep finished
+                // above; commit a final checkpoint at this sweep (if
+                // the periodic cadence didn't just write one) and stop.
+                if it < cfg.iters && cfg.checkpoint_every > 0 && interrupt::requested() {
+                    if let Some(root) = checkpoint_root {
+                        if !checkpointed {
+                            let m = Manifest::lda(bow, plan, cfg, it);
+                            checkpoint::write_lda(&lda, &m, root)
+                                .unwrap_or_else(|e| panic!("checkpoint failed: {e}"));
+                            lda.metrics().checkpoints.inc();
+                        }
+                        interrupted_at = Some(it);
+                        executed_sweeps = it.saturating_sub(start);
+                        break;
                     }
                 }
             }
@@ -193,9 +244,16 @@ pub fn train_lda_traced(
                 curve.push((cfg.iters, fin));
             }
             timer = lda.metrics().phase_timer();
+            export_snapshot(snapshot_out, &lda.counts, cfg);
             (curve, fin)
         }
-        (Backend::Xla, _) => train_xla(bow, cfg),
+        (Backend::Xla, _) => {
+            assert!(
+                snapshot_out.is_none(),
+                "snapshot export requires the native backend"
+            );
+            train_xla(bow, cfg)
+        }
     };
     let train_secs = started.elapsed().as_secs_f64();
     let sampled_tokens = bow.num_tokens() as f64 * executed_sweeps as f64;
@@ -226,6 +284,16 @@ pub fn train_lda_traced(
         phases: timer.phases_secs(),
         task_retries,
         io_retries,
+        interrupted_at,
+    }
+}
+
+/// Export the trained counts as a serve snapshot when requested.
+fn export_snapshot(path: Option<&Path>, counts: &LdaCounts, cfg: &TrainConfig) {
+    if let Some(path) = path {
+        ModelSnapshot::from_counts(counts, cfg.alpha, cfg.beta, cfg.seed)
+            .write(path)
+            .unwrap_or_else(|e| panic!("snapshot export failed: {e}"));
     }
 }
 
@@ -480,6 +548,75 @@ mod tests {
         );
         assert_eq!(resumed.curve.last(), oracle.curve.last());
         std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn sigint_latch_checkpoints_and_stops_early() {
+        let bow = generate(&Profile::tiny(), 93);
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 93);
+        let mut cfg = TrainConfig::quick(8, 6);
+        cfg.eval_every = 3;
+        let oracle = train_lda(&bow, &plan, &cfg);
+        assert_eq!(oracle.interrupted_at, None);
+
+        // Latch the (test-scoped) interrupt before training: the run
+        // finishes exactly one sweep, commits a final checkpoint at it
+        // (off the periodic cadence — checkpoint_every is 2), and
+        // reports where it stopped.
+        let root = std::env::temp_dir().join(format!("pplda-trainer-int-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        cfg.checkpoint_every = 2;
+        interrupt::trigger();
+        let stopped = train_lda_checkpointed(&bow, &plan, &cfg, Some(&root), None);
+        interrupt::reset();
+        assert_eq!(stopped.interrupted_at, Some(1));
+        assert!(root.join("ckpt-1").is_dir(), "final interrupt checkpoint");
+
+        // Resuming from the interrupt checkpoint completes the run
+        // bit-identically to one that was never interrupted.
+        cfg.checkpoint_every = 0;
+        let resumed = train_lda_checkpointed(&bow, &plan, &cfg, None, Some(&root));
+        assert_eq!(resumed.interrupted_at, None);
+        assert_eq!(resumed.final_perplexity, oracle.final_perplexity);
+        assert_eq!(resumed.curve.last(), oracle.curve.last());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn without_checkpointing_the_latch_is_ignored() {
+        let bow = generate(&Profile::tiny(), 94);
+        let plan = partition(&bow, 3, Algorithm::A2, 94);
+        let cfg = TrainConfig::quick(4, 4);
+        interrupt::trigger();
+        let r = train_lda(&bow, &plan, &cfg);
+        interrupt::reset();
+        // No checkpoint cadence configured: the run completes normally.
+        assert_eq!(r.interrupted_at, None);
+    }
+
+    #[test]
+    fn train_end_snapshot_export_round_trips() {
+        let bow = generate(&Profile::tiny(), 95);
+        let cfg = TrainConfig::quick(8, 5);
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+
+        let serial_plan = partition(&bow, 1, Algorithm::A1, 95);
+        let spath = dir.join(format!("pplda-trainer-snap-serial-{pid}.ppsnap"));
+        train_lda_with_snapshot(&bow, &serial_plan, &cfg, None, None, None, Some(&spath));
+        let snap = ModelSnapshot::load(&spath).expect("serial snapshot loads");
+        assert_eq!(snap.k, cfg.topics);
+        assert_eq!(snap.v, bow.num_words());
+        assert_eq!(snap.seed, cfg.seed);
+        std::fs::remove_file(&spath).unwrap();
+
+        let plan = partition(&bow, 4, Algorithm::A3 { restarts: 2 }, 95);
+        let ppath = dir.join(format!("pplda-trainer-snap-par-{pid}.ppsnap"));
+        train_lda_with_snapshot(&bow, &plan, &cfg, None, None, None, Some(&ppath));
+        let snap = ModelSnapshot::load(&ppath).expect("parallel snapshot loads");
+        assert_eq!(snap.k, cfg.topics);
+        assert_eq!(snap.v, bow.num_words());
+        std::fs::remove_file(&ppath).unwrap();
     }
 
     #[test]

@@ -251,6 +251,29 @@ fn io_err(path: &Path, op: &'static str, source: std::io::Error) -> BlockError {
     BlockError::Io { path: path.to_path_buf(), op, source }
 }
 
+/// Backoff before retry `attempt` (1-based): the exponential base
+/// `2 << attempt` ms plus a deterministic jitter in `[0, base)`, i.e.
+/// bounded to `[base, 2·base)`. The jitter decorrelates the workers of
+/// one run (they share a store but arrive with distinct retry sequence
+/// numbers `seq`) without sacrificing reproducibility: it is a pure
+/// hash of `(store token, attempt, seq)`, so a rerun under the same
+/// injected faults sleeps the same schedule and retry *counts* are
+/// bit-stable.
+fn backoff_ms(token: u64, attempt: u32, seq: u64) -> u64 {
+    let base = 2u64 << attempt;
+    // splitmix64-style finalizer over the three inputs.
+    let mut x = token
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(u64::from(attempt))
+        .wrapping_add(seq.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    base + x % base
+}
+
 /// The error an injected `IoError`/`TornWrite` fault surfaces as —
 /// kind `Other`, so the retry layer treats it as transient.
 fn injected_io(path: &Path, op: &'static str) -> BlockError {
@@ -393,9 +416,9 @@ impl ShardStore {
     }
 
     /// Run `op`, retrying transient IO failures (see [`retryable`])
-    /// with a short backoff. Corruption is never retried: a checksum
-    /// mismatch is the same on every read, and retrying would only
-    /// delay the refusal.
+    /// with a short jittered backoff. Corruption is never retried: a
+    /// checksum mismatch is the same on every read, and retrying would
+    /// only delay the refusal.
     fn with_io_retry<T>(
         &self,
         mut op: impl FnMut() -> Result<T, BlockError>,
@@ -404,8 +427,9 @@ impl ShardStore {
         loop {
             match op() {
                 Err(e) if attempt < MAX_IO_ATTEMPTS && retryable(&e) => {
-                    self.io_retries.fetch_add(1, Ordering::Relaxed);
-                    std::thread::sleep(std::time::Duration::from_millis(2u64 << attempt));
+                    let seq = self.io_retries.fetch_add(1, Ordering::Relaxed);
+                    let ms = backoff_ms(self.token, attempt, seq);
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
                     attempt += 1;
                 }
                 done => return done,
@@ -1492,6 +1516,30 @@ mod tests {
         assert!(!sb.fully_resident(), "export left the source evicted");
     }
 
+    #[test]
+    fn backoff_is_jittered_bounded_and_deterministic() {
+        for attempt in 1..MAX_IO_ATTEMPTS {
+            let base = 2u64 << attempt;
+            let mut seen = std::collections::HashSet::new();
+            for seq in 0..64u64 {
+                let ms = backoff_ms(0xDEAD_BEEF, attempt, seq);
+                assert!(
+                    (base..2 * base).contains(&ms),
+                    "attempt {attempt} seq {seq}: {ms} outside [{base}, {})",
+                    2 * base
+                );
+                // Pure function of its inputs: a rerun sleeps the same.
+                assert_eq!(ms, backoff_ms(0xDEAD_BEEF, attempt, seq));
+                seen.insert(ms);
+            }
+            assert!(seen.len() > 1, "attempt {attempt}: jitter never varied");
+        }
+        // Distinct stores decorrelate even at the same (attempt, seq).
+        let spread: std::collections::HashSet<u64> =
+            (0..64u64).map(|t| backoff_ms(t, 1, 0)).collect();
+        assert!(spread.len() > 1, "token never moved the jitter");
+    }
+
     #[cfg(feature = "failpoints")]
     mod fault_injection {
         use super::*;
@@ -1558,6 +1606,13 @@ mod tests {
             let e = store.read_block(9).unwrap_err();
             assert!(matches!(e, BlockError::Io { .. }), "{e}");
             assert_eq!(store.io_retries(), u64::from(MAX_IO_ATTEMPTS) - 1);
+            // The jittered backoff moves only the sleep, never the
+            // count: an identical second burst costs the same budget.
+            drop(_g);
+            let _g = install(vec![fault; MAX_IO_ATTEMPTS as usize]);
+            let e = store.read_block(9).unwrap_err();
+            assert!(matches!(e, BlockError::Io { .. }), "{e}");
+            assert_eq!(store.io_retries(), 2 * (u64::from(MAX_IO_ATTEMPTS) - 1));
         }
     }
 }

@@ -39,6 +39,11 @@
 //!   Compiled only with the `xla` cargo feature (needs the external `xla`
 //!   bindings crate); the default build is dependency-free.
 //! * [`coordinator`] — the training drivers tying everything together.
+//! * [`serve`] — the production-facing inference half: crash-safe
+//!   `PPSNAP1` model snapshots with atomic hot-reload, an exact O(1)
+//!   per-token fold-in engine, and a batched query server with bounded
+//!   admission, deadlines, graceful degradation, panic containment, and
+//!   graceful drain (see `docs/serving.md`).
 //! * [`obs`] — structured tracing (per-task spans into lock-free ring
 //!   buffers, Perfetto/JSONL export, `analyze-trace`) and the metrics
 //!   registry the phase reports are views over (see
@@ -73,5 +78,6 @@ pub mod partition;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod testing;
 pub mod util;

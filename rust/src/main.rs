@@ -15,7 +15,7 @@
 //!                  [--residency in-core|spill] [--memory-budget B]
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
-//!                  [--trace-out FILE]
+//!                  [--trace-out FILE] [--snapshot-out FILE]
 //! pplda train-bot  [--scale N] [--procs P] [--algo A3] [--topics K]
 //!                  [--iters N] [--mode sequential|threaded|pooled]
 //!                  [--schedule diagonal|packed] [--workers W]
@@ -26,6 +26,13 @@
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
 //!                  [--trace-out FILE]
+//! pplda export-snapshot --from CKPT --out FILE [corpus/train flags]
+//! pplda serve SNAPSHOT [--addr HOST:PORT] [--serve-workers N]
+//!                  [--queue-cap N] [--max-batch N] [--fold-iters N]
+//!                  [--min-fold-iters N] [--degrade-at F] [--no-watch]
+//!                  [--trace-out FILE]
+//! pplda query-bench --addr HOST:PORT [--requests N] [--words N]
+//!                  [--deadline-ms MS] [--seed S]
 //! pplda analyze-trace FILE
 //! pplda artifacts-check
 //! ```
@@ -33,8 +40,11 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::Arc;
+use std::time::Instant;
 
-use pplda::coordinator::{train_bot_traced, train_lda_traced, Backend, TrainConfig};
+use pplda::coordinator::{
+    checkpoint, train_bot_traced, train_lda_with_snapshot, Backend, TrainConfig,
+};
 use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
 use pplda::corpus::shard::{self, Residency};
@@ -50,7 +60,13 @@ use pplda::runtime::executor::Artifacts;
 use pplda::scheduler::adaptive::BalanceMode;
 use pplda::scheduler::exec::{CommitMode, ExecMode};
 use pplda::scheduler::schedule::ScheduleKind;
+use pplda::serve::net::{self, Client, NetOptions};
+use pplda::serve::server::ServeConfig;
+use pplda::serve::snapshot::ModelSnapshot;
 use pplda::util::cli::Args;
+use pplda::util::interrupt;
+use pplda::util::json::Json;
+use pplda::util::rng::Rng;
 use pplda::util::tsv::{f, Table};
 
 fn main() -> ExitCode {
@@ -60,6 +76,9 @@ fn main() -> ExitCode {
         Some("partition") => cmd_partition(&args),
         Some("train") => cmd_train(&args),
         Some("train-bot") => cmd_train_bot(&args),
+        Some("export-snapshot") => cmd_export_snapshot(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("query-bench") => cmd_query_bench(&args),
         Some("analyze-trace") => cmd_analyze_trace(&args),
         Some("artifacts-check") => cmd_artifacts_check(),
         other => {
@@ -73,12 +92,15 @@ fn main() -> ExitCode {
 }
 
 const USAGE: &str = "\
-usage: pplda <stats|partition|train|train-bot|analyze-trace|artifacts-check> [flags]
+usage: pplda <stats|partition|train|train-bot|export-snapshot|serve|query-bench|analyze-trace|artifacts-check> [flags]
 
   stats            print Table-I statistics for a corpus
   partition        run partitioning algorithms, print eta per P (Tables II/III)
   train            train (parallel) LDA, print perplexity curve
   train-bot        train (parallel) Bag of Timestamps, print Table-IV row
+  export-snapshot  convert a training checkpoint into a serve snapshot
+  serve            serve fold-in queries from a snapshot over TCP (JSON lines)
+  query-bench      drive a running server, print latency percentiles
   analyze-trace    reconstruct critical path / idle gaps / eta from a trace
   artifacts-check  verify the AOT artifacts load and execute
 
@@ -122,7 +144,24 @@ atomic on-disk checkpoint under --checkpoint-dir DIR every N sweeps;
 --resume PATH restarts from a checkpoint (a ckpt-N directory, or a
 checkpoint dir to scan for the latest) and finishes bit-identically
 to the uninterrupted run (see docs/fault_tolerance.md). Requires the
-partitioned native backend (P > 1).
+partitioned native backend (P > 1). With a checkpoint cadence set,
+SIGINT is graceful: the in-flight sweep finishes, a final checkpoint
+is committed, and the run exits 0 with a `checkpointed at sweep N`
+line instead of dying mid-write.
+
+serving: `pplda train --snapshot-out FILE` (or `pplda export-snapshot
+--from CKPT --out FILE` with the same corpus/train flags as the
+original run) writes an immutable PPSNAP1 model snapshot.
+`pplda serve SNAPSHOT` serves fold-in queries over a JSON-lines TCP
+protocol with bounded admission (--queue-cap), micro-batching
+(--max-batch, --serve-workers), per-request deadlines, and graceful
+degradation (--fold-iters ramps down to --min-fold-iters past
+--degrade-at queue fill). The snapshot file is watched and hot-swapped
+atomically on change (disable with --no-watch); a corrupt or torn
+publish is rejected and the old model keeps serving. SIGINT or a
+shutdown command drains gracefully. `pplda query-bench --addr A`
+measures client-side latency percentiles under uniform and skewed word
+mixes and emits BENCH_JSON rows (see docs/serving.md).
 
 tracing (train/train-bot): --trace-out FILE records per-task spans and
 scheduler/IO events into per-worker ring buffers and writes them on
@@ -386,17 +425,27 @@ fn cmd_train(args: &Args) -> ExitCode {
         cfg.commit.name(),
         cfg.residency.label(),
     );
+    if cfg.checkpoint_every > 0 {
+        // SIGINT finishes the in-flight sweep and checkpoints instead
+        // of killing the process mid-write.
+        interrupt::install();
+    }
+    let snapshot_out = args.get_str("snapshot-out").map(PathBuf::from);
     let trace = tracer_of(args, workers);
-    let report = train_lda_traced(
+    let report = train_lda_with_snapshot(
         &bow,
         &plan,
         &cfg,
         checkpoint_dir.as_deref(),
         resume.as_deref(),
         trace.as_ref().map(|(_, tr)| tr),
+        snapshot_out.as_deref(),
     );
     if let Some((path, tr)) = &trace {
         write_trace_out(path, tr, format!("pplda train --profile {name}"));
+    }
+    if let Some(path) = &snapshot_out {
+        println!("wrote snapshot {}", path.display());
     }
     println!(
         "schedule_eta={:.4} measured_eta={:.4} speedup≈{:.2} (vs {} workers)",
@@ -421,6 +470,9 @@ fn cmd_train(args: &Args) -> ExitCode {
     if let Some(path) = args.get_str("json") {
         std::fs::write(path, report.to_json().to_string_pretty()).expect("write json");
         println!("wrote {path}");
+    }
+    if let Some(it) = report.interrupted_at {
+        println!("checkpointed at sweep {it}");
     }
     ExitCode::SUCCESS
 }
@@ -471,6 +523,9 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
         tc.num_stamps,
         tc.dts.num_tokens()
     );
+    if cfg.checkpoint_every > 0 {
+        interrupt::install();
+    }
     let trace = tracer_of(args, workers);
     let report = train_bot_traced(
         &tc,
@@ -510,6 +565,169 @@ fn cmd_train_bot(args: &Args) -> ExitCode {
             pplda::bot::timeline::trend_table(&report.timelines, first, 5).to_aligned()
         );
     }
+    if let Some(it) = report.interrupted_at {
+        println!("checkpointed at sweep {it}");
+    }
+    ExitCode::SUCCESS
+}
+
+/// Convert a training checkpoint into a serve snapshot. The corpus and
+/// train flags must match the run that wrote the checkpoint (the
+/// checkpoint manifest validates them), exactly as `--resume` does.
+fn cmd_export_snapshot(args: &Args) -> ExitCode {
+    let Some(from) = args.get_str("from") else {
+        eprintln!("usage: pplda export-snapshot --from CKPT --out FILE [corpus/train flags]");
+        return ExitCode::FAILURE;
+    };
+    let Some(out) = args.get_str("out") else {
+        eprintln!("usage: pplda export-snapshot --from CKPT --out FILE [corpus/train flags]");
+        return ExitCode::FAILURE;
+    };
+    let (name, bow) = load_corpus(args);
+    let procs = args.get::<usize>("procs", 8);
+    let (kind, workers) = schedule_of(args, procs);
+    let grid = kind.grid(workers);
+    let restarts = args.get::<usize>("restarts", 20);
+    let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
+    let cfg = TrainConfig {
+        topics: args.get::<usize>("topics", 64),
+        iters: args.get::<usize>("iters", 100),
+        seed: args.get::<u64>("seed", 42),
+        workers,
+        schedule: kind,
+        ..Default::default()
+    };
+    let plan = partition::partition(&bow, grid, algo, cfg.seed);
+    let (lda, sweeps) = checkpoint::resume_lda(&bow, &plan, &cfg, Path::new(from))
+        .unwrap_or_else(|e| panic!("resume failed: {e}"));
+    let snap = ModelSnapshot::from_counts(&lda.counts, cfg.alpha, cfg.beta, cfg.seed);
+    snap.write(Path::new(out))
+        .unwrap_or_else(|e| panic!("snapshot write failed: {e}"));
+    println!(
+        "exported snapshot {out} (corpus {name}, K={} V={} seed={}, sweep {sweeps})",
+        snap.k, snap.v, snap.seed
+    );
+    ExitCode::SUCCESS
+}
+
+/// Serve fold-in queries from a snapshot over the JSON-lines TCP
+/// protocol until SIGINT or a `shutdown` command, then drain.
+fn cmd_serve(args: &Args) -> ExitCode {
+    let Some(snap_path) = args.positional(1) else {
+        eprintln!("usage: pplda serve SNAPSHOT [--addr HOST:PORT] [flags]");
+        return ExitCode::FAILURE;
+    };
+    interrupt::install();
+    let cfg = ServeConfig {
+        workers: args.get::<usize>("serve-workers", 2),
+        queue_capacity: args.get::<usize>("queue-cap", 256),
+        max_batch: args.get::<usize>("max-batch", 8),
+        fold_iters: args.get::<usize>("fold-iters", 10),
+        min_fold_iters: args.get::<usize>("min-fold-iters", 2),
+        degrade_at: args.get::<f64>("degrade-at", 0.5),
+    };
+    let opts = NetOptions {
+        addr: args.get_str("addr").unwrap_or("127.0.0.1:0").to_string(),
+        watch: !args.has("no-watch"),
+    };
+    let trace = tracer_of(args, cfg.workers);
+    match net::serve(
+        Path::new(snap_path),
+        &opts,
+        cfg,
+        trace.as_ref().map(|(_, tr)| Arc::clone(tr)),
+    ) {
+        Ok(()) => {
+            if let Some((path, tr)) = &trace {
+                write_trace_out(path, tr, "pplda serve".to_string());
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Drive a running server with uniform and skewed word mixes; print
+/// client-side latency percentiles and emit one BENCH_JSON row per mix.
+fn cmd_query_bench(args: &Args) -> ExitCode {
+    let Some(addr) = args.get_str("addr") else {
+        eprintln!("usage: pplda query-bench --addr HOST:PORT [--requests N] [--words N]");
+        return ExitCode::FAILURE;
+    };
+    let addr: std::net::SocketAddr = addr.parse().expect("--addr must be HOST:PORT");
+    let requests = args.get::<usize>("requests", 200);
+    let words_per = args.get::<usize>("words", 16);
+    let deadline_ms = args.get::<u64>("deadline-ms", 0);
+    let deadline = (deadline_ms > 0).then_some(deadline_ms);
+    let seed = args.get::<u64>("seed", 42);
+
+    let mut client = Client::connect(&addr).expect("connect to server");
+    let info = client.info().expect("info command");
+    let v = info.get("v").and_then(Json::as_u64).expect("server reports V") as usize;
+    assert!(v > 0, "server vocabulary is empty");
+
+    for (mix, skewed) in [("uniform", false), ("skewed", true)] {
+        let mut rng = Rng::stream(seed, if skewed { 1 } else { 0 });
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+        let (mut ok, mut degraded, mut errors) = (0u64, 0u64, 0u64);
+        let started = Instant::now();
+        for i in 0..requests {
+            let words: Vec<u32> = (0..words_per)
+                .map(|_| {
+                    if skewed {
+                        // Head-heavy mix: cubing the uniform draw piles
+                        // the mass onto low word ids (Zipf-ish).
+                        let u = rng.f64();
+                        ((u * u * u * v as f64) as usize).min(v - 1) as u32
+                    } else {
+                        rng.gen_range(v) as u32
+                    }
+                })
+                .collect();
+            let t = Instant::now();
+            let reply = client.query(i as u64, &words, deadline).expect("query");
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+                ok += 1;
+                lat_ms.push(ms);
+                if reply.get("degraded").and_then(Json::as_bool) == Some(true) {
+                    degraded += 1;
+                }
+            } else {
+                errors += 1;
+            }
+        }
+        let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+        lat_ms.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if lat_ms.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat_ms.len() as f64 - 1.0) * p).round() as usize;
+            lat_ms[idx]
+        };
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        println!(
+            "query-bench {mix}: {ok}/{requests} ok ({:.1} qps) | p50 {p50:.2}ms p99 {p99:.2}ms \
+             | degraded {degraded} errors {errors}",
+            ok as f64 / elapsed
+        );
+        let mut row = Json::obj();
+        row.set("bench", "query_bench")
+            .set("mix", mix)
+            .set("requests", requests)
+            .set("ok", ok)
+            .set("degraded", degraded)
+            .set("errors", errors)
+            .set("qps", ok as f64 / elapsed)
+            .set("p50_ms", p50)
+            .set("p99_ms", p99);
+        println!("BENCH_JSON {}", row.to_string());
+    }
+    let _ = client.stats();
     ExitCode::SUCCESS
 }
 

@@ -1,0 +1,255 @@
+//! Fold-in inference over a frozen [`ModelSnapshot`].
+//!
+//! A query is a bag of word ids; the engine Gibbs-samples topic
+//! assignments for the query's tokens against the *fixed* trained
+//! word–topic counts and returns the document–topic mixture θ. Because
+//! the model never moves, the per-token conditional
+//!
+//! ```text
+//! p(t) ∝ (n_dk[t] + α) · φ_wt
+//!      =  n_dk[t]·φ_wt   (doc bucket — nonzero only for topics in the doc)
+//!      +  α·φ_wt         (word bucket — the snapshot's alias table)
+//! ```
+//!
+//! splits into an exact two-bucket mixture: the doc bucket is a walk of
+//! the document's nonzero topic list (O(k_doc), k_doc ≤ doc length), and
+//! the word bucket is a precomputed O(1) alias draw with total mass
+//! `wtotal[w]` straight from the snapshot. One uniform per token decides
+//! the bucket *and* the draw within it — unlike the training alias
+//! kernel there is no staleness and therefore no Metropolis–Hastings
+//! correction; this is an exact Gibbs step.
+//!
+//! ## Determinism contract
+//!
+//! The RNG is `Rng::stream(snapshot.seed, request_id)`, and the sampler
+//! consumes exactly one `f64` per token per pass (initialization counts
+//! as one pass). A reply is therefore a pure function of
+//! `(snapshot, request_id, words, iters)` — independent of batching,
+//! worker count, queue state, or wall clock. Degraded replies (fewer
+//! iterations under overload) consume a strict *prefix* of the stream,
+//! so they are reproducible by re-running the oracle at the reported
+//! iteration count.
+
+use crate::serve::snapshot::ModelSnapshot;
+use crate::util::rng::Rng;
+
+/// Reusable per-worker scratch: zero allocation per request once the
+/// high-water marks are reached.
+#[derive(Default)]
+pub struct FoldScratch {
+    /// Dense per-topic counts of the query document, `[K]`.
+    n_dk: Vec<u32>,
+    /// Topics with `n_dk > 0`, in first-touch order — the doc-bucket
+    /// walk order (deterministic; part of the sampling procedure).
+    nonzero: Vec<u32>,
+    /// Current assignment per token.
+    z: Vec<u32>,
+}
+
+impl FoldScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, k: usize, tokens: usize) {
+        self.n_dk.clear();
+        self.n_dk.resize(k, 0);
+        self.nonzero.clear();
+        self.z.clear();
+        self.z.reserve(tokens);
+    }
+
+    #[inline]
+    fn add(&mut self, t: u32) {
+        if self.n_dk[t as usize] == 0 {
+            self.nonzero.push(t);
+        }
+        self.n_dk[t as usize] += 1;
+    }
+
+    #[inline]
+    fn remove(&mut self, t: u32) {
+        self.n_dk[t as usize] -= 1;
+        if self.n_dk[t as usize] == 0 {
+            let at = self.nonzero.iter().position(|&x| x == t).unwrap();
+            self.nonzero.swap_remove(at);
+        }
+    }
+
+    /// One exact Gibbs draw for word `w` given the current doc counts.
+    #[inline]
+    fn draw(&self, snap: &ModelSnapshot, w: usize, u: f64) -> u32 {
+        // Doc bucket mass: Σ_{t: n_dk>0} n_dk[t]·φ_wt.
+        let mut pd = 0.0f64;
+        for &t in &self.nonzero {
+            pd += self.n_dk[t as usize] as f64 * snap.phi(w, t as usize);
+        }
+        let pw = snap.wtotal[w];
+        let scaled = u * (pd + pw);
+        if scaled < pd {
+            // Walk the nonzero list to invert the doc-bucket CDF.
+            let mut acc = 0.0f64;
+            for &t in &self.nonzero {
+                acc += self.n_dk[t as usize] as f64 * snap.phi(w, t as usize);
+                if scaled < acc {
+                    return t;
+                }
+            }
+            // fp slack at the boundary: last nonzero topic.
+            *self.nonzero.last().unwrap()
+        } else {
+            // Word bucket: rescale the leftover uniform into [0,1) and
+            // alias-sample (clamped at 1.0 by `sample_with`).
+            snap.tables[w].sample_with((scaled - pd) / pw) as u32
+        }
+    }
+}
+
+/// Fold a query document into the snapshot's topic space.
+///
+/// `words` must all be `< snap.v` (the server validates before
+/// dispatch). Returns θ over the K topics:
+/// `θ_t = (n_dk[t] + α) / (len + K·α)`.
+pub fn fold_in(
+    snap: &ModelSnapshot,
+    scratch: &mut FoldScratch,
+    words: &[u32],
+    request_id: u64,
+    iters: usize,
+) -> Vec<f32> {
+    debug_assert!(words.iter().all(|&w| (w as usize) < snap.v));
+    let k = snap.k;
+    let mut rng = Rng::stream(snap.seed, request_id);
+    scratch.reset(k, words.len());
+    // Initialization pass: sample each token against the doc counts
+    // accumulated so far (the first token's conditional is exactly the
+    // word bucket: all-zero doc counts).
+    for &w in words {
+        let t = scratch.draw(snap, w as usize, rng.f64());
+        scratch.add(t);
+        scratch.z.push(t);
+    }
+    // Gibbs passes: remove, resample, re-add.
+    for _ in 0..iters {
+        for (i, &w) in words.iter().enumerate() {
+            let old = scratch.z[i];
+            scratch.remove(old);
+            let t = scratch.draw(snap, w as usize, rng.f64());
+            scratch.add(t);
+            scratch.z[i] = t;
+        }
+    }
+    let alpha = snap.alpha;
+    let denom = words.len() as f32 + k as f32 * alpha;
+    scratch.n_dk.iter().map(|&c| (c as f32 + alpha) / denom).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gibbs::counts::LdaCounts;
+
+    /// Snapshot with a planted block structure: word w prefers topic
+    /// w % k strongly.
+    fn planted(k: usize, v: usize, seed: u64) -> ModelSnapshot {
+        let mut counts = LdaCounts::zeros(4, v, k);
+        for w in 0..v {
+            for t in 0..k {
+                let c = if t == w % k { 500.0 } else { 1.0 };
+                counts.word_topic[w * k + t] = c;
+                counts.topic[t] += c as u32;
+            }
+        }
+        ModelSnapshot::from_counts(&counts, 0.5, 0.1, seed)
+    }
+
+    #[test]
+    fn replies_are_deterministic_in_request_id() {
+        let snap = planted(8, 64, 42);
+        let words: Vec<u32> = vec![3, 11, 19, 3, 27, 5];
+        let mut s1 = FoldScratch::new();
+        let mut s2 = FoldScratch::new();
+        let a = fold_in(&snap, &mut s1, &words, 7, 5);
+        let b = fold_in(&snap, &mut s2, &words, 7, 5);
+        assert_eq!(a, b, "same (snapshot, id) must be bit-identical");
+        // Scratch reuse across different requests must not leak state.
+        let c = fold_in(&snap, &mut s1, &words, 8, 5);
+        let a_again = fold_in(&snap, &mut s1, &words, 7, 5);
+        assert_eq!(a, a_again, "scratch reuse changed the reply");
+        assert_ne!(a, c, "different ids should (generically) differ");
+    }
+
+    #[test]
+    fn theta_is_a_distribution() {
+        let snap = planted(8, 64, 1);
+        let mut s = FoldScratch::new();
+        let theta = fold_in(&snap, &mut s, &[1, 2, 3, 4, 5], 99, 3);
+        assert_eq!(theta.len(), 8);
+        let sum: f32 = theta.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+        assert!(theta.iter().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn empty_document_is_the_prior() {
+        let snap = planted(4, 16, 2);
+        let mut s = FoldScratch::new();
+        let theta = fold_in(&snap, &mut s, &[], 0, 10);
+        for &p in &theta {
+            assert!((p - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn recovers_planted_topic() {
+        // A document of words all preferring topic 3 should land its
+        // mass there, across many request ids.
+        let (k, v) = (8usize, 64usize);
+        let snap = planted(k, v, 3);
+        let words: Vec<u32> = (0..30).map(|i| (3 + (i % 4) * k as u32 * 2) % v as u32).collect();
+        // All words ≡ 3 mod k by construction:
+        assert!(words.iter().all(|&w| w as usize % k == 3));
+        let mut s = FoldScratch::new();
+        let mut mass3 = 0.0f64;
+        for id in 0..50u64 {
+            let theta = fold_in(&snap, &mut s, &words, id, 5);
+            mass3 += theta[3] as f64;
+        }
+        mass3 /= 50.0;
+        assert!(mass3 > 0.8, "planted topic mass {mass3}");
+    }
+
+    #[test]
+    fn degraded_iterations_are_a_prefix_of_the_stream() {
+        // The contract the server's degradation mode relies on: running
+        // fewer iterations is reproducible by an oracle run at that
+        // count (same id, same snapshot) — not some divergent state.
+        let snap = planted(8, 64, 4);
+        let words = vec![9u32, 17, 25, 33, 41];
+        let mut s = FoldScratch::new();
+        for iters in [0usize, 1, 2, 5] {
+            let a = fold_in(&snap, &mut s, &words, 123, iters);
+            let b = fold_in(&snap, &mut s, &words, 123, iters);
+            assert_eq!(a, b, "iters={iters}");
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trip_preserves_replies_bit_exactly() {
+        // Serving from a loaded snapshot must equal serving from the
+        // in-memory original — the bytes on disk define the behaviour.
+        let snap = planted(8, 64, 5);
+        let path = std::env::temp_dir()
+            .join(format!("ppsnap-engine-{}", std::process::id()));
+        snap.write(&path).unwrap();
+        let loaded = ModelSnapshot::load(&path).unwrap();
+        let words = vec![2u32, 14, 30, 2, 61];
+        let mut s = FoldScratch::new();
+        for id in [0u64, 1, 99, 12345] {
+            let a = fold_in(&snap, &mut s, &words, id, 4);
+            let b = fold_in(&loaded, &mut s, &words, id, 4);
+            assert_eq!(a, b, "id={id}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,114 @@
+//! Serve-path metrics, built on the PR-8 [`crate::obs::metrics`]
+//! primitives: log-bucketed [`Histogram`]s for the latency decomposition
+//! (queue wait / work / end-to-end) and [`Counter`]s for every outcome a
+//! request can have. One instance lives in the server's shared state;
+//! workers record lock-free.
+
+use crate::obs::metrics::{Counter, Histogram};
+use crate::util::json::Json;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// End-to-end: admission to reply fulfilled.
+    pub latency_ns: Histogram,
+    /// Admission to dequeue by a worker.
+    pub queue_ns: Histogram,
+    /// Fold-in execution alone.
+    pub work_ns: Histogram,
+    pub accepted: Counter,
+    pub completed: Counter,
+    /// Admission refusals: queue full.
+    pub rejected_overload: Counter,
+    /// Dropped at dequeue with an expired deadline — never sampled.
+    pub shed_deadline: Counter,
+    /// Replies served with reduced fold-in iterations.
+    pub degraded: Counter,
+    /// Request panics caught by the containment boundary.
+    pub panics_contained: Counter,
+    /// Contained failures given their one retry.
+    pub retries: Counter,
+    /// Requests failed after the retry budget (typed `Panicked`).
+    pub failed: Counter,
+    pub reloads_ok: Counter,
+    pub reloads_rejected: Counter,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One summary object (the shape the serve CLI prints and the bench
+    /// embeds in BENCH_JSON rows).
+    pub fn summary_json(&self, elapsed: Duration) -> Json {
+        let q = |h: &Histogram, p: f64| h.quantile(p) as f64 / 1e6;
+        let secs = elapsed.as_secs_f64().max(1e-9);
+        let mut j = Json::obj();
+        j.set("accepted", self.accepted.get())
+            .set("completed", self.completed.get())
+            .set("rejected_overload", self.rejected_overload.get())
+            .set("shed_deadline", self.shed_deadline.get())
+            .set("degraded", self.degraded.get())
+            .set("panics_contained", self.panics_contained.get())
+            .set("retries", self.retries.get())
+            .set("failed", self.failed.get())
+            .set("reloads_ok", self.reloads_ok.get())
+            .set("reloads_rejected", self.reloads_rejected.get())
+            .set("qps", self.completed.get() as f64 / secs)
+            .set("latency_p50_ms", q(&self.latency_ns, 0.50))
+            .set("latency_p95_ms", q(&self.latency_ns, 0.95))
+            .set("latency_p99_ms", q(&self.latency_ns, 0.99))
+            .set("queue_p99_ms", q(&self.queue_ns, 0.99))
+            .set("work_p99_ms", q(&self.work_ns, 0.99));
+        j
+    }
+
+    /// Human-readable one-screen summary (serve shutdown line).
+    pub fn render(&self, elapsed: Duration) -> String {
+        let secs = elapsed.as_secs_f64().max(1e-9);
+        format!(
+            "served {} ok ({:.1} qps) | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | \
+             overload {} deadline {} degraded {} | panics {} retries {} failed {} | \
+             reloads {}+{}",
+            self.completed.get(),
+            self.completed.get() as f64 / secs,
+            self.latency_ns.quantile(0.50) as f64 / 1e6,
+            self.latency_ns.quantile(0.95) as f64 / 1e6,
+            self.latency_ns.quantile(0.99) as f64 / 1e6,
+            self.rejected_overload.get(),
+            self.shed_deadline.get(),
+            self.degraded.get(),
+            self.panics_contained.get(),
+            self.retries.get(),
+            self.failed.get(),
+            self.reloads_ok.get(),
+            self.reloads_rejected.get(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_reports_counts_and_quantiles() {
+        let m = ServeMetrics::new();
+        m.accepted.add(10);
+        m.completed.add(9);
+        m.rejected_overload.inc();
+        for i in 1..=9u64 {
+            m.latency_ns.observe(i * 1_000_000);
+        }
+        let j = m.summary_json(Duration::from_secs(3));
+        assert_eq!(j.get("accepted").and_then(Json::as_u64), Some(10));
+        assert_eq!(j.get("completed").and_then(Json::as_u64), Some(9));
+        let qps = j.get("qps").and_then(Json::as_f64).unwrap();
+        assert!((qps - 3.0).abs() < 1e-9);
+        let p50 = j.get("latency_p50_ms").and_then(Json::as_f64).unwrap();
+        assert!(p50 > 0.0 && p50 < 10.0, "p50={p50}");
+        let line = m.render(Duration::from_secs(3));
+        assert!(line.contains("served 9 ok"), "{line}");
+    }
+}

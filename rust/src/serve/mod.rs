@@ -1,0 +1,22 @@
+//! The serve path: production-facing inference over a trained model.
+//!
+//! - [`snapshot`] — the crash-safe `PPSNAP1` immutable model format
+//!   (CRC'd sections, temp-then-rename publish, typed
+//!   [`snapshot::SnapshotError`] rejection, atomic hot-reload support).
+//! - [`engine`] — exact O(1)-per-token fold-in Gibbs sampling against a
+//!   frozen snapshot, deterministic given `(snapshot, request id)`.
+//! - [`server`] — the batched [`server::QueryServer`]: bounded
+//!   admission, micro-batching worker pool, deadlines, graceful
+//!   degradation, panic containment, hot reload, graceful drain.
+//! - [`metrics`] — serve-side latency/outcome metrics on the `obs`
+//!   primitives.
+//! - [`net`] — the JSON-lines TCP front end (`pplda serve`) and client.
+//!
+//! Design rationale and the robustness state machine are documented in
+//! `docs/serving.md`.
+
+pub mod engine;
+pub mod metrics;
+pub mod net;
+pub mod server;
+pub mod snapshot;

@@ -1,0 +1,334 @@
+//! TCP wire layer for the query server: one JSON object per line.
+//!
+//! Requests: `{"id":N,"words":[..],"deadline_ms":M}` (deadline
+//! optional), plus control commands `{"cmd":"info"}`,
+//! `{"cmd":"stats"}`, and `{"cmd":"shutdown"}` (graceful drain).
+//! Replies: `{"id":N,"ok":true,"degraded":b,"iters":I,"theta":[..]}`
+//! or `{"id":N,"ok":false,"error":"<tag>"}` with the typed
+//! [`ServeError`] tag, so clients can tell *overloaded* (back off) from
+//! *deadline* (give up) from *bad-request* (fix the query).
+//!
+//! The accept loop is nonblocking and polls between accepts: the glibc
+//! `signal` binding has `SA_RESTART` semantics, so a blocking `accept`
+//! would never observe the SIGINT latch ([`crate::util::interrupt`]).
+//! The same poll drives snapshot **hot reload**: when watching is on and
+//! the snapshot file's mtime moves, the candidate is fully validated and
+//! atomically swapped in ([`QueryServer::reload_from`]) — a torn or
+//! corrupt publish is rejected and the old model keeps serving.
+
+use crate::serve::server::{QueryServer, ServeConfig, ServeError};
+use crate::serve::snapshot::ModelSnapshot;
+use crate::util::json::Json;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime};
+
+/// Accept-loop poll period (SIGINT + shutdown-command latency bound).
+const POLL: Duration = Duration::from_millis(20);
+/// Snapshot watch period.
+const WATCH_EVERY: Duration = Duration::from_millis(500);
+
+pub struct NetOptions {
+    /// Bind address; port 0 picks a free port (announced on stdout).
+    pub addr: String,
+    /// Watch the snapshot path and hot-reload on mtime change.
+    pub watch: bool,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:0".into(), watch: true }
+    }
+}
+
+/// Serve `snapshot_path` until SIGINT or a `shutdown` command, then
+/// drain gracefully. Announces readiness as
+/// `serve: listening on <addr>` and exits with a `serve: drained` line
+/// plus a machine-readable `SERVE_JSON {..}` metrics summary.
+pub fn serve(
+    snapshot_path: &Path,
+    opts: &NetOptions,
+    cfg: ServeConfig,
+    tracer: Option<Arc<crate::obs::trace::Tracer>>,
+) -> io::Result<()> {
+    let snap = ModelSnapshot::load(snapshot_path)
+        .map_err(|e| io::Error::other(e.to_string()))?;
+    println!(
+        "serve: snapshot {} (K={} V={} seed={})",
+        snapshot_path.display(),
+        snap.k,
+        snap.v,
+        snap.seed
+    );
+    let server = Arc::new(QueryServer::start_traced(snap, cfg, tracer.clone()));
+    let listener = TcpListener::bind(&opts.addr)?;
+    listener.set_nonblocking(true)?;
+    println!("serve: listening on {}", listener.local_addr()?);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let started = Instant::now();
+    let mut watcher = Watcher::new(snapshot_path, opts.watch);
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if crate::util::interrupt::requested() || shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let server = Arc::clone(&server);
+                let shutdown = Arc::clone(&shutdown);
+                conns.push(
+                    std::thread::Builder::new()
+                        .name(format!("serve-conn-{peer}"))
+                        .spawn(move || {
+                            let _ = handle_conn(stream, &server, &shutdown, cfg);
+                        })
+                        .expect("spawn connection thread"),
+                );
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+                // This thread is the tracer's sole drainer (the
+                // coordinator role): keep the worker rings from
+                // overflowing on long serves.
+                if let Some(tr) = &tracer {
+                    tr.drain();
+                }
+                if let Some(result) = watcher.poll(&server) {
+                    match result {
+                        Ok(()) => println!("serve: snapshot hot-reloaded"),
+                        Err(msg) => {
+                            eprintln!("serve: reload rejected (old snapshot keeps serving): {msg}")
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    println!("serve: draining");
+    drop(listener);
+    shutdown.store(true, Ordering::SeqCst);
+    server.drain();
+    for h in conns {
+        let _ = h.join();
+    }
+    let elapsed = started.elapsed();
+    println!("serve: drained | {}", server.metrics().render(elapsed));
+    println!("SERVE_JSON {}", server.metrics().summary_json(elapsed).to_string());
+    Ok(())
+}
+
+/// Polls the snapshot file's mtime and triggers hot reloads.
+struct Watcher {
+    path: PathBuf,
+    enabled: bool,
+    last_mtime: Option<SystemTime>,
+    last_check: Instant,
+}
+
+impl Watcher {
+    fn new(path: &Path, enabled: bool) -> Self {
+        Self {
+            path: path.to_path_buf(),
+            enabled,
+            last_mtime: mtime(path),
+            last_check: Instant::now(),
+        }
+    }
+
+    /// `Some(result)` when a reload was attempted.
+    fn poll(&mut self, server: &QueryServer) -> Option<Result<(), String>> {
+        if !self.enabled || self.last_check.elapsed() < WATCH_EVERY {
+            return None;
+        }
+        self.last_check = Instant::now();
+        let now = mtime(&self.path)?;
+        if self.last_mtime == Some(now) {
+            return None;
+        }
+        self.last_mtime = Some(now);
+        Some(server.reload_from(&self.path).map_err(|e| e.to_string()))
+    }
+}
+
+fn mtime(path: &Path) -> Option<SystemTime> {
+    std::fs::metadata(path).and_then(|m| m.modified()).ok()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    server: &QueryServer,
+    shutdown: &AtomicBool,
+    cfg: ServeConfig,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let reply = dispatch(line.trim(), server, shutdown, &cfg);
+                writer.write_all(reply.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return Ok(()), // connection dropped
+        }
+    }
+}
+
+fn dispatch(line: &str, server: &QueryServer, shutdown: &AtomicBool, cfg: &ServeConfig) -> Json {
+    if line.is_empty() {
+        return error_reply(None, "bad-request");
+    }
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(_) => return error_reply(None, "bad-request"),
+    };
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("info") => {
+            let snap = server.snapshot();
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("k", snap.k)
+                .set("v", snap.v)
+                .set("seed", snap.seed)
+                .set("fold_iters", cfg.fold_iters);
+            return j;
+        }
+        Some("stats") => {
+            let mut j = server.metrics().summary_json(Duration::from_secs(0));
+            j.set("ok", true);
+            return j;
+        }
+        Some("shutdown") => {
+            shutdown.store(true, Ordering::SeqCst);
+            let mut j = Json::obj();
+            j.set("ok", true).set("draining", true);
+            return j;
+        }
+        Some(_) => return error_reply(None, "bad-request"),
+        None => {}
+    }
+    let id = match req.get("id").and_then(Json::as_u64) {
+        Some(id) => id,
+        None => return error_reply(None, "bad-request"),
+    };
+    let words: Option<Vec<u32>> = req.get("words").and_then(Json::as_arr).map(|arr| {
+        arr.iter().filter_map(Json::as_u64).map(|w| w as u32).collect()
+    });
+    let words = match words {
+        Some(w) => w,
+        None => return error_reply(Some(id), "bad-request"),
+    };
+    let deadline =
+        req.get("deadline_ms").and_then(Json::as_u64).map(Duration::from_millis);
+    match server.query(id, words, deadline) {
+        Ok(reply) => {
+            let mut j = Json::obj();
+            j.set("id", reply.id)
+                .set("ok", true)
+                .set("degraded", reply.degraded)
+                .set("iters", reply.iters)
+                .set(
+                    "theta",
+                    Json::Arr(reply.theta.iter().map(|&p| Json::from(p as f64)).collect()),
+                );
+            j
+        }
+        Err(e) => {
+            let mut j = error_reply(Some(id), e.tag());
+            if let ServeError::BadRequest(msg) = e {
+                j.set("detail", msg);
+            }
+            j
+        }
+    }
+}
+
+fn error_reply(id: Option<u64>, tag: &str) -> Json {
+    let mut j = Json::obj();
+    if let Some(id) = id {
+        j.set("id", id);
+    }
+    j.set("ok", false).set("error", tag);
+    j
+}
+
+/// Line-protocol client, used by `pplda query-bench` and the
+/// integration tests.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { writer, reader: BufReader::new(stream) })
+    }
+
+    fn roundtrip(&mut self, req: &Json) -> io::Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "server closed"));
+        }
+        Json::parse(line.trim()).map_err(io::Error::other)
+    }
+
+    pub fn info(&mut self) -> io::Result<Json> {
+        let mut j = Json::obj();
+        j.set("cmd", "info");
+        self.roundtrip(&j)
+    }
+
+    pub fn stats(&mut self) -> io::Result<Json> {
+        let mut j = Json::obj();
+        j.set("cmd", "stats");
+        self.roundtrip(&j)
+    }
+
+    pub fn shutdown(&mut self) -> io::Result<Json> {
+        let mut j = Json::obj();
+        j.set("cmd", "shutdown");
+        self.roundtrip(&j)
+    }
+
+    /// One query round-trip; the raw JSON reply (ok or typed error).
+    pub fn query(
+        &mut self,
+        id: u64,
+        words: &[u32],
+        deadline_ms: Option<u64>,
+    ) -> io::Result<Json> {
+        let mut j = Json::obj();
+        j.set("id", id).set(
+            "words",
+            Json::Arr(words.iter().map(|&w| Json::from(u64::from(w))).collect()),
+        );
+        if let Some(ms) = deadline_ms {
+            j.set("deadline_ms", ms);
+        }
+        self.roundtrip(&j)
+    }
+}

@@ -1,0 +1,829 @@
+//! The batched fold-in query server.
+//!
+//! Requests enter a **bounded admission queue** (a full queue is a typed
+//! [`ServeError::Overloaded`] rejection, never an unbounded backlog),
+//! worker threads pull **micro-batches** off the queue and fold each
+//! request in against the current [`ModelSnapshot`] using reusable
+//! per-worker scratch. Robustness is layered on explicitly:
+//!
+//! - **Deadlines** — a request carrying a deadline that expires while
+//!   queued is shed at dequeue with [`ServeError::Deadline`]; it is
+//!   never sampled (no work is spent on a reply nobody is waiting for).
+//! - **Graceful degradation** — when the queue runs past a configured
+//!   depth fraction, fold-in iterations shrink linearly toward a floor;
+//!   the reply is flagged `degraded` and carries the iteration count
+//!   actually used, so it remains reproducible (the engine's RNG-prefix
+//!   contract, see [`crate::serve::engine`]).
+//! - **Panic containment** — each request runs under `catch_unwind`
+//!   with one retry; a request that panics twice gets a typed
+//!   [`ServeError::Panicked`] reply and the worker keeps serving. The
+//!   `serve.request` failpoint drives this path in chaos tests.
+//! - **Atomic hot reload** — [`QueryServer::reload_from`] validates a
+//!   candidate snapshot *completely* (including under the
+//!   `serve.reload` failpoint) before a single pointer swap; any
+//!   failure leaves the old snapshot serving.
+//! - **Graceful drain** — stop admitting, finish everything in flight,
+//!   fulfil stragglers with [`ServeError::ShuttingDown`], join workers.
+//!
+//! Queue waits, work time, and end-to-end latency flow into
+//! [`ServeMetrics`] histograms; when a [`Tracer`] is attached each
+//! request also emits `QueueWait` + `Task` spans on its worker's lane,
+//! so `pplda analyze-trace` works on serve traces unchanged.
+
+use crate::obs::trace::{Event, EventKind, Tracer};
+use crate::serve::engine::{self, FoldScratch};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::snapshot::{ModelSnapshot, SnapshotError};
+use crate::util::fault::{self, sites, FaultKind};
+use std::collections::VecDeque;
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Typed request outcome short of a reply. The wire layer maps `tag()`
+/// into the error field of a JSON reply; clients switch on it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue full — back off and retry.
+    Overloaded,
+    /// Deadline expired while queued; the request was never sampled.
+    Deadline,
+    /// The request panicked past its retry budget (contained).
+    Panicked,
+    /// Server is draining or stopped.
+    ShuttingDown,
+    /// Malformed request (e.g. word id out of vocabulary).
+    BadRequest(String),
+}
+
+impl ServeError {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Self::Overloaded => "overloaded",
+            Self::Deadline => "deadline",
+            Self::Panicked => "panicked",
+            Self::ShuttingDown => "shutting-down",
+            Self::BadRequest(_) => "bad-request",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            other => f.write_str(other.tag()),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A successful fold-in reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reply {
+    pub id: u64,
+    /// Document–topic mixture over the snapshot's K topics.
+    pub theta: Vec<f32>,
+    /// Fold-in iterations actually run (may be below nominal when
+    /// `degraded`); replaying the engine at this count reproduces
+    /// `theta` bit-exactly.
+    pub iters: usize,
+    pub degraded: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads. `0` is allowed (nothing dequeues) — used by
+    /// admission-control tests.
+    pub workers: usize,
+    /// Admission queue bound; beyond it, `Overloaded`.
+    pub queue_capacity: usize,
+    /// Max requests a worker claims per dequeue.
+    pub max_batch: usize,
+    /// Nominal fold-in Gibbs iterations.
+    pub fold_iters: usize,
+    /// Degradation floor.
+    pub min_fold_iters: usize,
+    /// Queue-depth fraction where degradation starts (1.0 disables).
+    pub degrade_at: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 8,
+            fold_iters: 10,
+            min_fold_iters: 2,
+            degrade_at: 0.5,
+        }
+    }
+}
+
+const RUNNING: u8 = 0;
+const DRAINING: u8 = 1;
+const STOPPED: u8 = 2;
+
+/// One-shot reply slot a client blocks on.
+#[derive(Default)]
+struct Promise {
+    slot: Mutex<Option<Result<Reply, ServeError>>>,
+    cv: Condvar,
+}
+
+fn fulfill(p: &Promise, r: Result<Reply, ServeError>) {
+    *p.slot.lock().unwrap() = Some(r);
+    p.cv.notify_all();
+}
+
+/// Client-side handle for a submitted request.
+pub struct Handle {
+    promise: Arc<Promise>,
+}
+
+impl Handle {
+    /// Block until the server fulfils the request.
+    pub fn wait(self) -> Result<Reply, ServeError> {
+        let mut slot = self.promise.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.promise.cv.wait(slot).unwrap();
+        }
+    }
+}
+
+struct Pending {
+    id: u64,
+    words: Vec<u32>,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    promise: Arc<Promise>,
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    state: AtomicU8,
+    snapshot: RwLock<Arc<ModelSnapshot>>,
+    metrics: ServeMetrics,
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl Inner {
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::SeqCst)
+    }
+
+    /// Fold-in iterations for a dequeue that found `depth` requests
+    /// queued: nominal below the degradation threshold, then a linear
+    /// ramp down to the floor at a full queue.
+    fn iters_for_depth(&self, depth: usize) -> usize {
+        let cfg = &self.cfg;
+        let frac = depth as f64 / cfg.queue_capacity.max(1) as f64;
+        if frac <= cfg.degrade_at {
+            return cfg.fold_iters;
+        }
+        let span = (1.0 - cfg.degrade_at).max(1e-9);
+        let x = ((frac - cfg.degrade_at) / span).min(1.0);
+        let target = cfg.fold_iters as f64 - x * (cfg.fold_iters - cfg.min_fold_iters) as f64;
+        (target.round() as usize).max(cfg.min_fold_iters)
+    }
+
+    fn worker_loop(&self, lane: usize) {
+        let mut scratch = FoldScratch::new();
+        loop {
+            let (batch, depth) = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if !q.is_empty() {
+                        break;
+                    }
+                    if self.state() != RUNNING {
+                        return; // drained: queue empty, no more admits
+                    }
+                    q = self.cv.wait(q).unwrap();
+                }
+                let depth = q.len();
+                let n = depth.min(self.cfg.max_batch.max(1));
+                (q.drain(..n).collect::<Vec<_>>(), depth)
+            };
+            let iters = self.iters_for_depth(depth);
+            for p in batch {
+                self.process(p, iters, &mut scratch, lane);
+            }
+        }
+    }
+
+    fn process(&self, p: Pending, iters: usize, scratch: &mut FoldScratch, lane: usize) {
+        let dequeued = Instant::now();
+        let queue_ns = dequeued.duration_since(p.enqueued).as_nanos() as u64;
+        self.metrics.queue_ns.observe(queue_ns);
+        if p.deadline.is_some_and(|dl| dequeued >= dl) {
+            self.metrics.shed_deadline.inc();
+            fulfill(&p.promise, Err(ServeError::Deadline));
+            return;
+        }
+        let snap = self.snapshot.read().unwrap().clone();
+        let t_work = self.tracer.as_ref().map(|tr| tr.now());
+        // Containment boundary: the fold-in (and its chaos probe) runs
+        // under `catch_unwind` with one retry. A panic cannot take the
+        // worker down, and the retry is bit-identical to an undisturbed
+        // run because the engine reseeds from (snapshot, request id).
+        // `AssertUnwindSafe` is sound: `fold_in` resets the scratch
+        // before touching it, so a mid-request unwind leaves no state a
+        // later request can observe.
+        let mut theta = None;
+        for attempt in 0..=1u64 {
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match fault::fire(sites::SERVE_REQUEST, [snap.seed, p.id, attempt]) {
+                    Some(FaultKind::Panic) => panic!("injected fault: serve.request"),
+                    // Injected transient failure (io-error / torn-write
+                    // flavors): fail the attempt without unwinding.
+                    Some(_) => None,
+                    None => Some(engine::fold_in(&snap, scratch, &p.words, p.id, iters)),
+                }
+            }));
+            match run {
+                Ok(Some(t)) => {
+                    theta = Some(t);
+                    break;
+                }
+                Ok(None) => {}
+                Err(_) => self.metrics.panics_contained.inc(),
+            }
+            if attempt == 0 {
+                self.metrics.retries.inc();
+            }
+        }
+        let work_ns = dequeued.elapsed().as_nanos() as u64;
+        self.metrics.work_ns.observe(work_ns);
+        self.metrics.latency_ns.observe(queue_ns + work_ns);
+        if let (Some(tr), Some(t0)) = (self.tracer.as_ref(), t_work) {
+            let lane = lane as u16;
+            let ticket = p.id as u32;
+            tr.emit(Event {
+                lane,
+                ticket,
+                partition: p.id,
+                t0_ns: t0.saturating_sub(queue_ns),
+                dur_ns: queue_ns,
+                ..Event::of(EventKind::QueueWait)
+            });
+            tr.emit(Event {
+                lane,
+                ticket,
+                partition: p.id,
+                t0_ns: t0,
+                dur_ns: tr.now().saturating_sub(t0),
+                arg: iters as u64,
+                ..Event::of(EventKind::Task)
+            });
+        }
+        match theta {
+            Some(theta) => {
+                let degraded = iters < self.cfg.fold_iters;
+                if degraded {
+                    self.metrics.degraded.inc();
+                }
+                self.metrics.completed.inc();
+                fulfill(&p.promise, Ok(Reply { id: p.id, theta, iters, degraded }));
+            }
+            None => {
+                self.metrics.failed.inc();
+                fulfill(&p.promise, Err(ServeError::Panicked));
+            }
+        }
+    }
+}
+
+/// The server: shared state + owned worker threads.
+pub struct QueryServer {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl QueryServer {
+    pub fn start(snapshot: ModelSnapshot, cfg: ServeConfig) -> Self {
+        Self::start_traced(snapshot, cfg, None)
+    }
+
+    /// Start with an optional tracer; worker `i` owns tracer lane `i`
+    /// (the tracer must have been created with ≥ `cfg.workers` lanes).
+    pub fn start_traced(
+        snapshot: ModelSnapshot,
+        cfg: ServeConfig,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Self {
+        let inner = Arc::new(Inner {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            state: AtomicU8::new(RUNNING),
+            snapshot: RwLock::new(Arc::new(snapshot)),
+            metrics: ServeMetrics::new(),
+            tracer,
+        });
+        let workers = (0..cfg.workers)
+            .map(|lane| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("serve-{lane}"))
+                    .spawn(move || inner.worker_loop(lane))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Self { inner, workers: Mutex::new(workers) }
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.inner.metrics
+    }
+
+    /// The snapshot currently serving.
+    pub fn snapshot(&self) -> Arc<ModelSnapshot> {
+        self.inner.snapshot.read().unwrap().clone()
+    }
+
+    /// Non-blocking admission. Typed rejection when full, draining, or
+    /// malformed; otherwise a [`Handle`] to wait on.
+    pub fn submit(
+        &self,
+        id: u64,
+        words: Vec<u32>,
+        deadline: Option<Duration>,
+    ) -> Result<Handle, ServeError> {
+        if self.inner.state() != RUNNING {
+            return Err(ServeError::ShuttingDown);
+        }
+        let v = self.inner.snapshot.read().unwrap().v;
+        if let Some(&w) = words.iter().find(|&&w| w as usize >= v) {
+            return Err(ServeError::BadRequest(format!("word id {w} out of range (V={v})")));
+        }
+        let now = Instant::now();
+        let promise = Arc::new(Promise::default());
+        let handle = Handle { promise: Arc::clone(&promise) };
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            // Re-check under the queue lock: drain flushes the queue
+            // after joining workers, so an admit racing the drain must
+            // not strand a waiter.
+            if self.inner.state() != RUNNING {
+                return Err(ServeError::ShuttingDown);
+            }
+            if q.len() >= self.inner.cfg.queue_capacity {
+                self.inner.metrics.rejected_overload.inc();
+                return Err(ServeError::Overloaded);
+            }
+            q.push_back(Pending {
+                id,
+                words,
+                deadline: deadline.map(|d| now + d),
+                enqueued: now,
+                promise,
+            });
+        }
+        self.inner.metrics.accepted.inc();
+        self.inner.cv.notify_one();
+        Ok(handle)
+    }
+
+    /// Submit and block for the reply.
+    pub fn query(
+        &self,
+        id: u64,
+        words: Vec<u32>,
+        deadline: Option<Duration>,
+    ) -> Result<Reply, ServeError> {
+        self.submit(id, words, deadline)?.wait()
+    }
+
+    /// Atomic hot reload: fully validate the candidate at `path`, then
+    /// pointer-swap. On *any* failure — unreadable, torn, corrupt,
+    /// shape-mismatched, or a panic out of the loader (contained here) —
+    /// the old snapshot keeps serving and the error is returned typed.
+    pub fn reload_from(&self, path: &Path) -> Result<(), SnapshotError> {
+        let token = fault::path_token(path);
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            match fault::fire(sites::SERVE_RELOAD, [token, 0, 0]) {
+                Some(FaultKind::Panic) => panic!("injected fault: serve.reload"),
+                Some(FaultKind::IoError) => {
+                    return Err(SnapshotError::Io {
+                        path: path.to_path_buf(),
+                        op: "reload",
+                        source: std::io::Error::other("injected fault"),
+                    });
+                }
+                Some(FaultKind::TornWrite) => {
+                    return Err(SnapshotError::Truncated {
+                        path: path.to_path_buf(),
+                        len: 0,
+                        expected: 0,
+                    });
+                }
+                None => {}
+            }
+            ModelSnapshot::load(path)
+        }));
+        let loaded = run.unwrap_or_else(|_| {
+            Err(SnapshotError::Corrupt {
+                path: path.to_path_buf(),
+                section: "reload (panic contained)",
+            })
+        });
+        let new = match loaded {
+            Ok(new) => new,
+            Err(e) => {
+                self.inner.metrics.reloads_rejected.inc();
+                return Err(e);
+            }
+        };
+        {
+            let cur = self.inner.snapshot.read().unwrap();
+            if new.k != cur.k || new.v != cur.v {
+                let detail =
+                    format!("serving K={} V={}, candidate K={} V={}", cur.k, cur.v, new.k, new.v);
+                drop(cur);
+                self.inner.metrics.reloads_rejected.inc();
+                return Err(SnapshotError::Mismatch { path: path.to_path_buf(), detail });
+            }
+        }
+        *self.inner.snapshot.write().unwrap() = Arc::new(new);
+        self.inner.metrics.reloads_ok.inc();
+        Ok(())
+    }
+
+    /// Graceful drain: stop admitting, let workers finish everything
+    /// already queued, fulfil any straggler with `ShuttingDown`, join.
+    /// Idempotent.
+    pub fn drain(&self) {
+        self.inner.state.store(DRAINING, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // With zero workers (or an admit that raced the join) entries
+        // may remain; nobody will serve them — fail them typed.
+        let stragglers: Vec<Pending> =
+            self.inner.queue.lock().unwrap().drain(..).collect();
+        for p in stragglers {
+            fulfill(&p.promise, Err(ServeError::ShuttingDown));
+        }
+        self.inner.state.store(STOPPED, Ordering::SeqCst);
+    }
+}
+
+impl Drop for QueryServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gibbs::counts::LdaCounts;
+    use crate::util::rng::Rng;
+
+    fn snapshot(seed: u64, k: usize, v: usize) -> ModelSnapshot {
+        let mut rng = Rng::new(seed);
+        let mut counts = LdaCounts::zeros(4, v, k);
+        for w in 0..v {
+            for t in 0..k {
+                let c = (1 + rng.gen_range(50)) as f32;
+                counts.word_topic[w * k + t] = c;
+                counts.topic[t] += c as u32;
+            }
+        }
+        ModelSnapshot::from_counts(&counts, 0.5, 0.1, seed)
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { workers: 2, queue_capacity: 16, max_batch: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn replies_match_the_engine_oracle() {
+        let snap = snapshot(31, 8, 64);
+        let words = vec![1u32, 5, 9, 1, 40];
+        let mut scratch = FoldScratch::new();
+        let oracle = engine::fold_in(&snap, &mut scratch, &words, 77, 10);
+        let server = QueryServer::start(snapshot(31, 8, 64), cfg());
+        let reply = server.query(77, words, None).unwrap();
+        assert_eq!(reply.id, 77);
+        assert_eq!(reply.iters, 10);
+        assert!(!reply.degraded);
+        assert_eq!(reply.theta, oracle, "server reply must be bit-identical to oracle");
+        server.drain();
+        assert_eq!(server.metrics().completed.get(), 1);
+    }
+
+    #[test]
+    fn concurrent_queries_are_independent_of_batching() {
+        let server = Arc::new(QueryServer::start(snapshot(32, 8, 64), cfg()));
+        let mut scratch = FoldScratch::new();
+        let oracle_snap = snapshot(32, 8, 64);
+        let words = |id: u64| vec![(id % 64) as u32, 3, 17, 60];
+        let threads: Vec<_> = (0..24u64)
+            .map(|id| {
+                let server = Arc::clone(&server);
+                std::thread::spawn(move || (id, server.query(id, words(id), None).unwrap()))
+            })
+            .collect();
+        for t in threads {
+            let (id, reply) = t.join().unwrap();
+            let oracle =
+                engine::fold_in(&oracle_snap, &mut scratch, &words(id), id, reply.iters);
+            assert_eq!(reply.theta, oracle, "id={id}");
+        }
+        server.drain();
+    }
+
+    #[test]
+    fn full_queue_is_typed_overload() {
+        // Zero workers: nothing dequeues, so admission control is
+        // exercised deterministically.
+        let c = ServeConfig { workers: 0, queue_capacity: 3, ..cfg() };
+        let server = QueryServer::start(snapshot(33, 4, 16), c);
+        let mut handles = Vec::new();
+        for id in 0..3 {
+            handles.push(server.submit(id, vec![1, 2], None).unwrap());
+        }
+        assert_eq!(server.submit(9, vec![1], None).unwrap_err(), ServeError::Overloaded);
+        assert_eq!(server.metrics().rejected_overload.get(), 1);
+        server.drain();
+        for h in handles {
+            assert_eq!(h.wait().unwrap_err(), ServeError::ShuttingDown);
+        }
+        assert_eq!(server.submit(10, vec![1], None).unwrap_err(), ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_without_sampling() {
+        let server = QueryServer::start(snapshot(34, 4, 16), cfg());
+        let err = server.query(1, vec![1, 2, 3], Some(Duration::ZERO)).unwrap_err();
+        assert_eq!(err, ServeError::Deadline);
+        server.drain();
+        assert_eq!(server.metrics().shed_deadline.get(), 1);
+        assert_eq!(server.metrics().completed.get(), 0);
+    }
+
+    #[test]
+    fn out_of_vocab_word_is_bad_request() {
+        let server = QueryServer::start(snapshot(35, 4, 16), cfg());
+        match server.query(1, vec![16], None) {
+            Err(ServeError::BadRequest(msg)) => assert!(msg.contains("16"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        server.drain();
+    }
+
+    #[test]
+    fn degradation_ramps_iterations_toward_the_floor() {
+        let inner = Inner {
+            cfg: ServeConfig {
+                workers: 0,
+                queue_capacity: 100,
+                max_batch: 8,
+                fold_iters: 10,
+                min_fold_iters: 2,
+                degrade_at: 0.5,
+            },
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            state: AtomicU8::new(RUNNING),
+            snapshot: RwLock::new(Arc::new(snapshot(36, 4, 16))),
+            metrics: ServeMetrics::new(),
+            tracer: None,
+        };
+        assert_eq!(inner.iters_for_depth(0), 10);
+        assert_eq!(inner.iters_for_depth(50), 10); // at the threshold
+        assert_eq!(inner.iters_for_depth(75), 6); // halfway down the ramp
+        assert_eq!(inner.iters_for_depth(100), 2); // full queue: floor
+        assert_eq!(inner.iters_for_depth(1000), 2); // never below floor
+    }
+
+    #[test]
+    fn degraded_reply_is_flagged_and_reproducible() {
+        // Force permanent degradation (degrade_at = 0 ramps the whole
+        // queue range; any nonzero depth at dequeue shrinks iters).
+        let c = ServeConfig {
+            workers: 1,
+            queue_capacity: 4,
+            max_batch: 1,
+            fold_iters: 10,
+            min_fold_iters: 2,
+            degrade_at: 0.0,
+        };
+        let server = QueryServer::start(snapshot(37, 8, 64), c);
+        let reply = server.query(5, vec![1, 2, 3], None).unwrap();
+        assert!(reply.degraded);
+        assert!(reply.iters < 10 && reply.iters >= 2);
+        // Reproducible at the reported count.
+        let mut scratch = FoldScratch::new();
+        let oracle =
+            engine::fold_in(&snapshot(37, 8, 64), &mut scratch, &[1, 2, 3], 5, reply.iters);
+        assert_eq!(reply.theta, oracle);
+        server.drain();
+        assert_eq!(server.metrics().degraded.get(), 1);
+    }
+
+    #[test]
+    fn hot_reload_swaps_and_rejections_keep_serving() {
+        let dir = std::env::temp_dir().join(format!("ppserve-reload-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let server = QueryServer::start(snapshot(40, 8, 64), cfg());
+        let before = server.query(1, vec![4, 8], None).unwrap();
+
+        // Corrupt candidate: rejected typed, old snapshot still serves.
+        let bad = dir.join("bad.ppsnap");
+        std::fs::write(&bad, b"PPSNAP1\0 garbage garbage garbage garbage garbage").unwrap();
+        assert!(server.reload_from(&bad).is_err());
+        assert_eq!(server.metrics().reloads_rejected.get(), 1);
+        let after_reject = server.query(1, vec![4, 8], None).unwrap();
+        assert_eq!(before.theta, after_reject.theta);
+
+        // Shape mismatch: rejected typed.
+        let small = dir.join("small.ppsnap");
+        snapshot(41, 4, 64).write(&small).unwrap();
+        match server.reload_from(&small) {
+            Err(SnapshotError::Mismatch { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+
+        // Good candidate (same shape, new seed): swapped atomically.
+        let good = dir.join("good.ppsnap");
+        snapshot(42, 8, 64).write(&good).unwrap();
+        server.reload_from(&good).unwrap();
+        assert_eq!(server.metrics().reloads_ok.get(), 1);
+        let after = server.query(1, vec![4, 8], None).unwrap();
+        assert_ne!(before.theta, after.theta, "new snapshot should answer differently");
+        // And deterministically against the reloaded model.
+        let mut scratch = FoldScratch::new();
+        let oracle = engine::fold_in(
+            &ModelSnapshot::load(&good).unwrap(),
+            &mut scratch,
+            &[4, 8],
+            1,
+            after.iters,
+        );
+        assert_eq!(after.theta, oracle);
+        server.drain();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drain_completes_queued_work() {
+        let server = QueryServer::start(snapshot(43, 8, 64), cfg());
+        let handles: Vec<_> =
+            (0..10u64).map(|id| server.submit(id, vec![1, 2, 3], None).unwrap()).collect();
+        server.drain();
+        let mut ok = 0;
+        for h in handles {
+            if h.wait().is_ok() {
+                ok += 1;
+            }
+        }
+        // Every admitted request was fulfilled (served before the drain
+        // finished — none lost, none left hanging).
+        assert_eq!(ok + server.metrics().shed_deadline.get() as usize, 10);
+        assert_eq!(server.metrics().completed.get() as usize, ok);
+    }
+
+    #[cfg(feature = "failpoints")]
+    mod chaos {
+        use super::*;
+        use crate::util::fault::{install, Fault, ANY};
+
+        #[test]
+        fn request_panic_is_contained_and_retried_bit_identically() {
+            let snap_seed = 50u64;
+            let mut scratch = FoldScratch::new();
+            let oracle =
+                engine::fold_in(&snapshot(snap_seed, 8, 64), &mut scratch, &[7, 9], 3, 10);
+            let server = QueryServer::start(snapshot(snap_seed, 8, 64), cfg());
+            let _g = install(vec![Fault {
+                site: sites::SERVE_REQUEST,
+                key: [ANY, 3, 0], // request id 3, first attempt
+                kind: FaultKind::Panic,
+            }]);
+            let reply = server.query(3, vec![7, 9], None).unwrap();
+            assert_eq!(reply.theta, oracle, "retried reply must equal undisturbed oracle");
+            assert_eq!(server.metrics().panics_contained.get(), 1);
+            assert_eq!(server.metrics().retries.get(), 1);
+            // The worker survived: it can still serve.
+            assert!(server.query(4, vec![1], None).is_ok());
+            server.drain();
+            assert_eq!(server.metrics().failed.get(), 0);
+        }
+
+        #[test]
+        fn repeated_panic_exhausts_retry_into_typed_failure() {
+            let server = QueryServer::start(snapshot(51, 8, 64), cfg());
+            let _g = install(vec![
+                Fault { site: sites::SERVE_REQUEST, key: [ANY, 6, 0], kind: FaultKind::Panic },
+                Fault { site: sites::SERVE_REQUEST, key: [ANY, 6, 1], kind: FaultKind::Panic },
+            ]);
+            assert_eq!(server.query(6, vec![2], None).unwrap_err(), ServeError::Panicked);
+            assert_eq!(server.metrics().panics_contained.get(), 2);
+            assert_eq!(server.metrics().failed.get(), 1);
+            // Server still healthy afterwards.
+            assert!(server.query(7, vec![2], None).is_ok());
+            server.drain();
+        }
+
+        #[test]
+        fn transient_request_faults_retry_to_the_oracle_reply() {
+            for kind in [FaultKind::IoError, FaultKind::TornWrite] {
+                let mut scratch = FoldScratch::new();
+                let oracle =
+                    engine::fold_in(&snapshot(52, 8, 64), &mut scratch, &[5, 6], 8, 10);
+                let server = QueryServer::start(snapshot(52, 8, 64), cfg());
+                let _g = install(vec![Fault {
+                    site: sites::SERVE_REQUEST,
+                    key: [ANY, 8, ANY],
+                    kind,
+                }]);
+                let reply = server.query(8, vec![5, 6], None).unwrap();
+                assert_eq!(reply.theta, oracle, "{kind:?}");
+                server.drain();
+                assert_eq!(server.metrics().failed.get(), 0);
+            }
+        }
+
+        #[test]
+        fn reload_faults_never_unseat_the_serving_snapshot() {
+            let dir =
+                std::env::temp_dir().join(format!("ppserve-chaos-reload-{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let good = dir.join("good.ppsnap");
+            snapshot(61, 8, 64).write(&good).unwrap();
+            let server = QueryServer::start(snapshot(60, 8, 64), cfg());
+            let before = server.query(1, vec![3], None).unwrap();
+            for kind in [FaultKind::Panic, FaultKind::IoError, FaultKind::TornWrite] {
+                let _g = install(vec![Fault {
+                    site: sites::SERVE_RELOAD,
+                    key: [fault::path_token(&good), ANY, ANY],
+                    kind,
+                }]);
+                assert!(server.reload_from(&good).is_err(), "{kind:?}");
+                // Old snapshot still serving, bit-identically.
+                let again = server.query(1, vec![3], None).unwrap();
+                assert_eq!(again.theta, before.theta, "{kind:?}");
+            }
+            assert_eq!(server.metrics().reloads_rejected.get(), 3);
+            // Without a fault, the same candidate loads fine.
+            server.reload_from(&good).unwrap();
+            server.drain();
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+
+        #[test]
+        fn snapshot_read_faults_during_reload_are_contained() {
+            let dir =
+                std::env::temp_dir().join(format!("ppserve-chaos-snapread-{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let good = dir.join("good.ppsnap");
+            snapshot(63, 8, 64).write(&good).unwrap();
+            let server = QueryServer::start(snapshot(62, 8, 64), cfg());
+            let before = server.query(2, vec![11], None).unwrap();
+            // Panic inside the loader itself (snapshot.read site): the
+            // reload boundary contains it and the old model serves on.
+            {
+                let _g = install(vec![Fault {
+                    site: sites::SNAPSHOT_READ,
+                    key: [fault::path_token(&good), ANY, ANY],
+                    kind: FaultKind::Panic,
+                }]);
+                match server.reload_from(&good) {
+                    Err(SnapshotError::Corrupt { section, .. }) => {
+                        assert!(section.contains("panic"), "{section}")
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            // Transient read error: absorbed by the loader's retry, the
+            // reload succeeds.
+            {
+                let _g = install(vec![Fault {
+                    site: sites::SNAPSHOT_READ,
+                    key: [fault::path_token(&good), ANY, ANY],
+                    kind: FaultKind::IoError,
+                }]);
+                server.reload_from(&good).unwrap();
+            }
+            let after = server.query(2, vec![11], None).unwrap();
+            assert_ne!(before.theta, after.theta);
+            server.drain();
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+}

@@ -1,0 +1,680 @@
+//! Crash-safe immutable model snapshots (`PPSNAP1`).
+//!
+//! A snapshot freezes a trained model's word–topic state into a single
+//! versioned file the serve path can load read-only: the `n_wk`/`n_k`
+//! counts plus *precomputed per-word alias tables* over the word-topic
+//! conditional φ_wt = (n_wk+β)/(n_k+Vβ), so fold-in sampling is O(1) per
+//! token with no per-query table construction. Because the model is
+//! frozen at serve time the tables are never stale — unlike the training
+//! alias kernel there is no Metropolis–Hastings correction anywhere on
+//! the serve path; draws from the mixture are exact.
+//!
+//! Integrity follows the spill-v3 playbook ([`crate::corpus::shard`]):
+//! a magic/version header, a CRC32 per section plus one over the header
+//! itself, explicit length accounting (truncation is detected before any
+//! section is parsed), and temp-then-rename publication so a crash
+//! mid-export can never leave a half-written file at the published path.
+//! Every rejection is a typed [`SnapshotError`]; the hot-reload path in
+//! [`crate::serve::server`] relies on load being all-or-nothing to keep
+//! the old snapshot serving when a candidate is torn or corrupt.
+//!
+//! ## Layout (all little-endian)
+//!
+//! ```text
+//! offset  size      field
+//! 0       8         magic  b"PPSNAP1\0"
+//! 8       4         kind   (0 = LDA)
+//! 12      4         K      topics
+//! 16      8         V      vocabulary size
+//! 24      8         seed   training seed (keys per-request RNG streams)
+//! 32      4         alpha  (f32)
+//! 36      4         beta   (f32)
+//! 40      16        section CRC32s: n_wk, n_k, prob, alias
+//! 56      4         CRC32 of bytes [0, 56)
+//! 60      V*K*4     n_wk   u32, word-major
+//! ..      K*4       n_k    u32
+//! ..      V*K*8     prob   f64, per-word alias-table probabilities
+//! ..      V*K*4     alias  u32, per-word alias-table aliases
+//! ```
+//!
+//! `wtotal[w] = α·Σ_t φ_wt` and the per-topic denominators are *derived*
+//! at load from the checksummed counts (a pure function of them), so
+//! they need no bytes and cannot disagree with the counts they summarize.
+
+use crate::gibbs::counts::LdaCounts;
+use crate::util::alias::AliasTable;
+use crate::util::crc::crc32;
+use crate::util::fault::{self, sites, FaultKind};
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Size of the fixed header in bytes.
+const HEADER_LEN: usize = 60;
+const MAGIC: &[u8; 8] = b"PPSNAP1\0";
+/// Magic prefix shared by all snapshot versions; a file starting with it
+/// but not matching [`MAGIC`] is a version mismatch, not garbage.
+const MAGIC_STEM: &[u8; 6] = b"PPSNAP";
+const KIND_LDA: u32 = 0;
+/// Transient-IO retry budget for loads, matching the shard store's.
+const MAX_IO_ATTEMPTS: u32 = 3;
+
+/// Typed rejection from snapshot IO — the serve path switches on these
+/// to decide between "retry", "keep the old snapshot", and "refuse to
+/// start".
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Underlying IO failure (`op` names the operation).
+    Io { path: PathBuf, op: &'static str, source: std::io::Error },
+    /// File shorter than its header-implied size (torn write/read).
+    Truncated { path: PathBuf, len: u64, expected: u64 },
+    /// Leading bytes are not a snapshot magic at all.
+    BadMagic { path: PathBuf },
+    /// Snapshot magic stem with an unknown version marker.
+    BadVersion { path: PathBuf, found: String },
+    /// A section's bytes don't match their checksum, or decode to
+    /// out-of-range values.
+    Corrupt { path: PathBuf, section: &'static str },
+    /// Valid snapshot, wrong shape for this server (hot-reload with a
+    /// different K/V than the snapshot currently serving).
+    Mismatch { path: PathBuf, detail: String },
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Io { path, op, source } => {
+                write!(f, "snapshot {op} {}: {source}", path.display())
+            }
+            Self::Truncated { path, len, expected } => write!(
+                f,
+                "snapshot {} truncated: {len} bytes, expected {expected}",
+                path.display()
+            ),
+            Self::BadMagic { path } => {
+                write!(f, "snapshot {}: bad magic", path.display())
+            }
+            Self::BadVersion { path, found } => write!(
+                f,
+                "snapshot {}: unsupported version {found:?} (expected PPSNAP1)",
+                path.display()
+            ),
+            Self::Corrupt { path, section } => write!(
+                f,
+                "snapshot {}: corrupt {section} section",
+                path.display()
+            ),
+            Self::Mismatch { path, detail } => {
+                write!(f, "snapshot {}: shape mismatch: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl SnapshotError {
+    /// Stable lower-case tag for logs/metrics/wire replies.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Self::Io { .. } => "io",
+            Self::Truncated { .. } => "truncated",
+            Self::BadMagic { .. } => "bad-magic",
+            Self::BadVersion { .. } => "bad-version",
+            Self::Corrupt { .. } => "corrupt",
+            Self::Mismatch { .. } => "mismatch",
+        }
+    }
+}
+
+/// Is a load-time IO failure worth retrying? (Mirrors the shard store:
+/// everything except `NotFound`, which a retry cannot fix.)
+fn retryable(e: &SnapshotError) -> bool {
+    matches!(
+        e,
+        SnapshotError::Io { source, .. }
+            if source.kind() != std::io::ErrorKind::NotFound
+    )
+}
+
+/// An immutable trained model, ready to answer fold-in queries.
+///
+/// Shared read-only behind an `Arc` by the serve worker pool; all
+/// mutable per-request state lives in [`crate::serve::engine`] scratch.
+pub struct ModelSnapshot {
+    pub k: usize,
+    pub v: usize,
+    /// Training seed; keys the per-request RNG streams so replies are a
+    /// pure function of (snapshot, request id).
+    pub seed: u64,
+    pub alpha: f32,
+    pub beta: f32,
+    /// Word–topic counts, word-major `[V][K]`.
+    pub n_wk: Vec<u32>,
+    /// Per-topic totals `[K]`.
+    pub n_k: Vec<u32>,
+    /// Per-word alias tables over φ_wt (one table of K buckets per word).
+    pub tables: Vec<AliasTable>,
+    /// Word-bucket mass `α·Σ_t φ_wt` per word, derived from the counts.
+    pub wtotal: Vec<f64>,
+    /// `1 / (n_k[t] + V·β)` per topic, derived — φ_wt on demand is one
+    /// add and one multiply.
+    pub inv_denom: Vec<f64>,
+}
+
+impl ModelSnapshot {
+    /// Freeze trained counts into a snapshot. `word_topic` counts are
+    /// exact integers stored as f32 (< 2^24 by the training invariant),
+    /// so the u32 cast is lossless.
+    pub fn from_counts(counts: &LdaCounts, alpha: f32, beta: f32, seed: u64) -> Self {
+        let k = counts.k;
+        let v = counts.num_words;
+        let mut n_wk = Vec::with_capacity(v * k);
+        for &c in &counts.word_topic {
+            debug_assert!(c >= 0.0 && c.fract() == 0.0, "non-integral count {c}");
+            n_wk.push(c as u32);
+        }
+        let n_k = counts.topic.clone();
+        Self::assemble(k, v, seed, alpha, beta, n_wk, n_k)
+    }
+
+    /// Build the derived state and per-word tables from raw counts.
+    fn assemble(
+        k: usize,
+        v: usize,
+        seed: u64,
+        alpha: f32,
+        beta: f32,
+        n_wk: Vec<u32>,
+        n_k: Vec<u32>,
+    ) -> Self {
+        let (inv_denom, wtotal) = derive(&n_wk, &n_k, k, v, alpha, beta);
+        let mut weights = vec![0.0f64; k];
+        let tables = (0..v)
+            .map(|w| {
+                phi_row(&n_wk[w * k..(w + 1) * k], &inv_denom, beta, &mut weights);
+                AliasTable::new(&weights)
+            })
+            .collect();
+        Self { k, v, seed, alpha, beta, n_wk, n_k, tables, wtotal, inv_denom }
+    }
+
+    /// φ_wt for one (word, topic) pair.
+    #[inline]
+    pub fn phi(&self, w: usize, t: usize) -> f64 {
+        (self.n_wk[w * self.k + t] as f64 + self.beta as f64) * self.inv_denom[t]
+    }
+
+    /// Atomically publish to `path`: write a sibling temp file, fsync,
+    /// rename. A crash at any point leaves either the old file or a
+    /// `.tmp` orphan — never a torn snapshot at the published path.
+    pub fn write(&self, path: &Path) -> Result<(), SnapshotError> {
+        let io = |op: &'static str| {
+            let p = path.to_path_buf();
+            move |e: std::io::Error| SnapshotError::Io { path: p, op, source: e }
+        };
+        let bytes = self.encode();
+        let tmp = tmp_path(path);
+        let guard = TmpGuard(&tmp);
+        let mut f = std::fs::File::create(&tmp).map_err(io("create"))?;
+        f.write_all(&bytes).map_err(io("write"))?;
+        f.sync_all().map_err(io("sync"))?;
+        drop(f);
+        std::fs::rename(&tmp, path).map_err(io("rename"))?;
+        std::mem::forget(guard);
+        Ok(())
+    }
+
+    /// Serialize to the PPSNAP1 byte layout.
+    fn encode(&self) -> Vec<u8> {
+        let (k, v) = (self.k, self.v);
+        let mut n_wk = Vec::with_capacity(v * k * 4);
+        for &c in &self.n_wk {
+            n_wk.extend_from_slice(&c.to_le_bytes());
+        }
+        let mut n_k = Vec::with_capacity(k * 4);
+        for &c in &self.n_k {
+            n_k.extend_from_slice(&c.to_le_bytes());
+        }
+        let mut prob = Vec::with_capacity(v * k * 8);
+        let mut alias = Vec::with_capacity(v * k * 4);
+        for table in &self.tables {
+            let (p, a) = table.parts();
+            for &x in p {
+                prob.extend_from_slice(&x.to_le_bytes());
+            }
+            for &x in a {
+                alias.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let mut out =
+            Vec::with_capacity(HEADER_LEN + n_wk.len() + n_k.len() + prob.len() + alias.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&KIND_LDA.to_le_bytes());
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        out.extend_from_slice(&(v as u64).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.alpha.to_le_bytes());
+        out.extend_from_slice(&self.beta.to_le_bytes());
+        for sec in [&n_wk, &n_k, &prob, &alias] {
+            out.extend_from_slice(&crc32(sec).to_le_bytes());
+        }
+        out.extend_from_slice(&crc32(&out).to_le_bytes());
+        debug_assert_eq!(out.len(), HEADER_LEN);
+        out.extend_from_slice(&n_wk);
+        out.extend_from_slice(&n_k);
+        out.extend_from_slice(&prob);
+        out.extend_from_slice(&alias);
+        out
+    }
+
+    /// Load and fully validate a snapshot, retrying transient IO up to
+    /// the same budget as the shard store. Returns only a snapshot that
+    /// passed every check — callers may pointer-swap it into service
+    /// unconditionally.
+    pub fn load(path: &Path) -> Result<Self, SnapshotError> {
+        let token = fault::path_token(path);
+        let mut attempt = 1;
+        loop {
+            match Self::load_once(path, token, attempt) {
+                Err(e) if attempt < MAX_IO_ATTEMPTS && retryable(&e) => {
+                    std::thread::sleep(std::time::Duration::from_millis(2u64 << attempt));
+                    attempt += 1;
+                }
+                done => return done,
+            }
+        }
+    }
+
+    fn load_once(path: &Path, token: u64, attempt: u32) -> Result<Self, SnapshotError> {
+        // Chaos probe: a scheduled fault here models the read itself
+        // failing (IoError), reading a torn file (TornWrite → short
+        // read), or the loader crashing (Panic — the hot-reload path
+        // must contain it).
+        match fault::fire(sites::SNAPSHOT_READ, [token, u64::from(attempt), 0]) {
+            Some(FaultKind::Panic) => panic!("injected fault: snapshot.read"),
+            Some(FaultKind::IoError) => {
+                return Err(SnapshotError::Io {
+                    path: path.to_path_buf(),
+                    op: "read",
+                    source: std::io::Error::other("injected fault"),
+                });
+            }
+            Some(FaultKind::TornWrite) => {
+                return Err(SnapshotError::Truncated {
+                    path: path.to_path_buf(),
+                    len: 0,
+                    expected: HEADER_LEN as u64,
+                });
+            }
+            None => {}
+        }
+        let bytes = std::fs::read(path).map_err(|e| SnapshotError::Io {
+            path: path.to_path_buf(),
+            op: "read",
+            source: e,
+        })?;
+        Self::decode(path, &bytes)
+    }
+
+    /// Validate and decode a full snapshot image.
+    fn decode(path: &Path, bytes: &[u8]) -> Result<Self, SnapshotError> {
+        let err_corrupt = |section| SnapshotError::Corrupt { path: path.to_path_buf(), section };
+        if bytes.len() < HEADER_LEN {
+            if bytes.len() >= MAGIC_STEM.len() && !bytes.starts_with(MAGIC_STEM) {
+                return Err(SnapshotError::BadMagic { path: path.to_path_buf() });
+            }
+            return Err(SnapshotError::Truncated {
+                path: path.to_path_buf(),
+                len: bytes.len() as u64,
+                expected: HEADER_LEN as u64,
+            });
+        }
+        if &bytes[..8] != MAGIC {
+            if bytes.starts_with(MAGIC_STEM) {
+                return Err(SnapshotError::BadVersion {
+                    path: path.to_path_buf(),
+                    found: String::from_utf8_lossy(&bytes[6..8]).into_owned(),
+                });
+            }
+            return Err(SnapshotError::BadMagic { path: path.to_path_buf() });
+        }
+        // Header CRC before trusting any header-derived offset.
+        if crc32(&bytes[..56]) != read_u32(bytes, 56) {
+            return Err(err_corrupt("header"));
+        }
+        let kind = read_u32(bytes, 8);
+        let k = read_u32(bytes, 12) as usize;
+        let v = read_u64(bytes, 16) as usize;
+        let seed = read_u64(bytes, 24);
+        let alpha = f32::from_le_bytes(bytes[32..36].try_into().unwrap());
+        let beta = f32::from_le_bytes(bytes[36..40].try_into().unwrap());
+        if kind != KIND_LDA || k == 0 || v == 0 || !alpha.is_finite() || !beta.is_finite() {
+            return Err(err_corrupt("header"));
+        }
+        let sec_crc: Vec<u32> = (0..4).map(|i| read_u32(bytes, 40 + i * 4)).collect();
+        let sizes = [v * k * 4, k * 4, v * k * 8, v * k * 4];
+        let expected = HEADER_LEN as u64 + sizes.iter().map(|&s| s as u64).sum::<u64>();
+        if bytes.len() as u64 != expected {
+            return Err(SnapshotError::Truncated {
+                path: path.to_path_buf(),
+                len: bytes.len() as u64,
+                expected,
+            });
+        }
+        let names = ["n_wk", "n_k", "prob", "alias"];
+        let mut off = HEADER_LEN;
+        let mut sections = Vec::with_capacity(4);
+        for (i, &size) in sizes.iter().enumerate() {
+            let sec = &bytes[off..off + size];
+            if crc32(sec) != sec_crc[i] {
+                return Err(err_corrupt(names[i]));
+            }
+            sections.push(sec);
+            off += size;
+        }
+        let n_wk: Vec<u32> = sections[0]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let n_k: Vec<u32> = sections[1]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let prob: Vec<f64> = sections[2]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let alias: Vec<u32> = sections[3]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        // Semantic validation: the CRCs prove the bytes are what the
+        // writer wrote, these prove the writer wrote a usable table.
+        if alias.iter().any(|&a| a as usize >= k) {
+            return Err(err_corrupt("alias"));
+        }
+        if prob.iter().any(|p| !p.is_finite() || *p < 0.0) {
+            return Err(err_corrupt("prob"));
+        }
+        let (inv_denom, wtotal) = derive(&n_wk, &n_k, k, v, alpha, beta);
+        let tables = (0..v)
+            .map(|w| {
+                AliasTable::from_parts(
+                    prob[w * k..(w + 1) * k].to_vec(),
+                    alias[w * k..(w + 1) * k].to_vec(),
+                )
+            })
+            .collect();
+        Ok(Self { k, v, seed, alpha, beta, n_wk, n_k, tables, wtotal, inv_denom })
+    }
+}
+
+/// Derived per-topic inverse denominators and per-word bucket masses —
+/// a pure function of the checksummed counts, recomputed at load.
+fn derive(
+    n_wk: &[u32],
+    n_k: &[u32],
+    k: usize,
+    v: usize,
+    alpha: f32,
+    beta: f32,
+) -> (Vec<f64>, Vec<f64>) {
+    let beta = beta as f64;
+    let inv_denom: Vec<f64> =
+        n_k.iter().map(|&c| 1.0 / (c as f64 + v as f64 * beta)).collect();
+    let wtotal = (0..v)
+        .map(|w| {
+            let row = &n_wk[w * k..(w + 1) * k];
+            alpha as f64
+                * row
+                    .iter()
+                    .zip(&inv_denom)
+                    .map(|(&c, &inv)| (c as f64 + beta) * inv)
+                    .sum::<f64>()
+        })
+        .collect();
+    (inv_denom, wtotal)
+}
+
+/// One word's φ row into `out` (alias-table weights).
+fn phi_row(row: &[u32], inv_denom: &[f64], beta: f32, out: &mut [f64]) {
+    for ((o, &c), &inv) in out.iter_mut().zip(row).zip(inv_denom) {
+        *o = (c as f64 + beta as f64) * inv;
+    }
+}
+
+fn read_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Sibling temp path for atomic publication.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Removes the temp file if the write never reached the rename.
+struct TmpGuard<'a>(&'a Path);
+
+impl Drop for TmpGuard<'_> {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(self.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A small but non-trivial trained-count fixture.
+    fn fixture(seed: u64) -> ModelSnapshot {
+        let (k, v) = (8usize, 40usize);
+        let mut rng = Rng::new(seed);
+        let mut counts = LdaCounts::zeros(10, v, k);
+        for w in 0..v {
+            for t in 0..k {
+                let c = rng.gen_range(20) as f32;
+                counts.word_topic[w * k + t] = c;
+                counts.topic[t] += c as u32;
+            }
+        }
+        ModelSnapshot::from_counts(&counts, 0.5, 0.1, seed)
+    }
+
+    fn tmp_file(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ppsnap-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_is_byte_exact() {
+        let snap = fixture(11);
+        let path = tmp_file("roundtrip");
+        snap.write(&path).unwrap();
+        let loaded = ModelSnapshot::load(&path).unwrap();
+        assert_eq!(loaded.k, snap.k);
+        assert_eq!(loaded.v, snap.v);
+        assert_eq!(loaded.seed, snap.seed);
+        assert_eq!(loaded.n_wk, snap.n_wk);
+        assert_eq!(loaded.n_k, snap.n_k);
+        assert_eq!(loaded.wtotal, snap.wtotal);
+        assert_eq!(loaded.inv_denom, snap.inv_denom);
+        for (a, b) in loaded.tables.iter().zip(&snap.tables) {
+            assert_eq!(a.parts(), b.parts());
+        }
+        // Re-encoding the loaded snapshot reproduces the same bytes.
+        assert_eq!(loaded.encode(), snap.encode());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn write_leaves_no_temp_behind() {
+        let snap = fixture(12);
+        let path = tmp_file("notemp");
+        snap.write(&path).unwrap();
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_io_not_retried_forever() {
+        let path = tmp_file("missing");
+        match ModelSnapshot::load(&path) {
+            Err(SnapshotError::Io { op, .. }) => assert_eq!(op, "read"),
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    /// Satellite: the corrupted-snapshot rejection matrix. One bit flip
+    /// per section, truncations at several boundaries, foreign magic,
+    /// future version — every case must surface the *typed* variant and
+    /// never a panic or a silently-loaded model.
+    #[test]
+    fn corruption_matrix_rejects_with_typed_errors() {
+        let snap = fixture(13);
+        let path = tmp_file("matrix");
+        snap.write(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let (k, v) = (snap.k, snap.v);
+        let sec_off = [
+            (HEADER_LEN, "n_wk"),
+            (HEADER_LEN + v * k * 4, "n_k"),
+            (HEADER_LEN + v * k * 4 + k * 4, "prob"),
+            (HEADER_LEN + v * k * 4 + k * 4 + v * k * 8, "alias"),
+        ];
+        let check = |bytes: Vec<u8>, want: &str, case: &str| {
+            std::fs::write(&path, &bytes).unwrap();
+            let err = ModelSnapshot::load(&path).expect_err(case);
+            assert_eq!(err.tag(), want, "{case}: {err}");
+        };
+        // Bit flip inside each section → Corrupt naming that section.
+        for &(off, name) in &sec_off {
+            let mut bad = good.clone();
+            bad[off + 3] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            match ModelSnapshot::load(&path) {
+                Err(SnapshotError::Corrupt { section, .. }) => {
+                    assert_eq!(section, name)
+                }
+                other => panic!("flip in {name}: {other:?}"),
+            }
+        }
+        // Bit flip in the header → header corruption.
+        let mut bad = good.clone();
+        bad[13] ^= 0x01;
+        check(bad, "corrupt", "header flip");
+        // Truncations: empty, mid-header, mid-section, one byte short.
+        check(Vec::new(), "truncated", "empty file");
+        check(good[..30].to_vec(), "truncated", "mid-header");
+        check(good[..HEADER_LEN + 5].to_vec(), "truncated", "mid-section");
+        check(good[..good.len() - 1].to_vec(), "truncated", "one byte short");
+        // Foreign bytes → BadMagic (even when long enough to be a header).
+        check(b"not a snapshot at all, sorry".to_vec(), "bad-magic", "foreign short");
+        let mut foreign = good.clone();
+        foreign[..8].copy_from_slice(b"SPILLv3\0");
+        check(foreign, "bad-magic", "foreign full");
+        // Right stem, future version → BadVersion.
+        let mut future = good.clone();
+        future[..8].copy_from_slice(b"PPSNAP2\0");
+        match {
+            std::fs::write(&path, &future).unwrap();
+            ModelSnapshot::load(&path)
+        } {
+            Err(SnapshotError::BadVersion { found, .. }) => {
+                assert!(found.starts_with('2'), "found={found:?}")
+            }
+            other => panic!("future version: {other:?}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stale_tmp_orphan_never_shadows_published_snapshot() {
+        // A crash between `create` and `rename` leaves `<name>.tmp`; the
+        // published path must still load, and a fresh write must
+        // atomically replace both.
+        let snap = fixture(14);
+        let path = tmp_file("orphan");
+        snap.write(&path).unwrap();
+        std::fs::write(tmp_path(&path), b"torn half-written junk").unwrap();
+        let loaded = ModelSnapshot::load(&path).unwrap();
+        assert_eq!(loaded.n_wk, snap.n_wk);
+        let snap2 = fixture(15);
+        snap2.write(&path).unwrap();
+        assert!(!tmp_path(&path).exists(), "rewrite must consume the tmp slot");
+        assert_eq!(ModelSnapshot::load(&path).unwrap().n_wk, snap2.n_wk);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn derived_state_matches_definition() {
+        let snap = fixture(16);
+        let (k, v) = (snap.k, snap.v);
+        for t in 0..k {
+            let denom = snap.n_k[t] as f64 + v as f64 * snap.beta as f64;
+            assert!((snap.inv_denom[t] - 1.0 / denom).abs() < 1e-15);
+        }
+        for w in 0..v {
+            let sum: f64 = (0..k).map(|t| snap.phi(w, t)).sum();
+            let expect = snap.alpha as f64 * sum;
+            assert!(
+                (snap.wtotal[w] - expect).abs() < 1e-12,
+                "w={w}: {} vs {expect}",
+                snap.wtotal[w]
+            );
+        }
+    }
+
+    #[cfg(feature = "failpoints")]
+    mod chaos {
+        use super::*;
+        use crate::util::fault::{install, Fault, ANY};
+
+        #[test]
+        fn injected_io_error_is_retried_and_absorbed() {
+            let snap = fixture(21);
+            let path = tmp_file("chaos-io");
+            snap.write(&path).unwrap();
+            let _g = install(vec![Fault {
+                site: sites::SNAPSHOT_READ,
+                key: [fault::path_token(&path), ANY, ANY],
+                kind: FaultKind::IoError,
+            }]);
+            // One transient failure: the bounded retry absorbs it.
+            let loaded = ModelSnapshot::load(&path).unwrap();
+            assert_eq!(loaded.n_wk, snap.n_wk);
+            std::fs::remove_file(&path).unwrap();
+        }
+
+        #[test]
+        fn injected_torn_read_is_typed_truncation() {
+            let snap = fixture(22);
+            let path = tmp_file("chaos-torn");
+            snap.write(&path).unwrap();
+            // A torn file is not transient — no retry, typed error out.
+            let _g = install(vec![Fault {
+                site: sites::SNAPSHOT_READ,
+                key: [fault::path_token(&path), ANY, ANY],
+                kind: FaultKind::TornWrite,
+            }]);
+            match ModelSnapshot::load(&path) {
+                Err(SnapshotError::Truncated { .. }) => {}
+                other => panic!("expected Truncated, got {other:?}"),
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}

@@ -106,6 +106,24 @@ impl AliasTable {
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }
+
+    /// The built table as `(prob, alias)` slices — the serialization
+    /// view used by the model-snapshot format, which persists tables so
+    /// a serving process never pays the O(V·K) rebuild (and so the
+    /// on-disk bytes, not a rebuild, define the sampling behaviour).
+    pub fn parts(&self) -> (&[f64], &[u32]) {
+        (&self.prob, &self.alias)
+    }
+
+    /// Reassemble a table from serialized [`Self::parts`]. The pair must
+    /// come from a built table: `prob` entries in `[0, 1]` scale and
+    /// `alias` entries in-range, which [`crate::serve::snapshot`]
+    /// validates before calling.
+    pub fn from_parts(prob: Vec<f64>, alias: Vec<u32>) -> Self {
+        assert_eq!(prob.len(), alias.len(), "prob/alias length mismatch");
+        assert!(!prob.is_empty(), "AliasTable over empty support");
+        Self { prob, alias, small: Vec::new(), large: Vec::new() }
+    }
 }
 
 #[cfg(test)]

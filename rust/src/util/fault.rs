@@ -44,6 +44,18 @@ pub mod sites {
     pub const SHARD_WRITE_Z: &str = "shard.write_z";
     /// Spill write-back of a whole block, keyed by store path token.
     pub const SHARD_WRITE_BLOCK: &str = "shard.write_block";
+    /// Model-snapshot read on the serve path, keyed
+    /// `(snapshot path token, ANY, ANY)` — fires before the file is
+    /// opened, modeling a failing or torn snapshot read.
+    pub const SNAPSHOT_READ: &str = "snapshot.read";
+    /// One serve request's fold-in execution, keyed
+    /// `(snapshot seed, request id, attempt)` — fires before the first
+    /// token is sampled, modeling a crashing worker mid-request.
+    pub const SERVE_REQUEST: &str = "serve.request";
+    /// Snapshot hot-reload on the serve path, keyed
+    /// `(candidate path token, ANY, ANY)` — fires before the candidate
+    /// is validated, modeling a reload racing a torn publish.
+    pub const SERVE_RELOAD: &str = "serve.reload";
 }
 
 /// What an armed fault does when its site fires.

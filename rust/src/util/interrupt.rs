@@ -1,0 +1,99 @@
+//! Cooperative SIGINT handling.
+//!
+//! The trainers' sweep loops and the serve accept loop poll
+//! [`requested`] at safe points (end of sweep, between accepts) and wind
+//! down cleanly — finish the unit of work in flight, write a final
+//! checkpoint or drain the queue, exit 0 — instead of dying mid-write.
+//! [`install`] registers the process-wide handler; it only sets a flag,
+//! so everything observable happens on the polling thread.
+//!
+//! Two latches feed [`requested`]:
+//!
+//! - a process-global `AtomicBool` set by the real signal handler (a
+//!   signal can land on any thread, so this must be global), and
+//! - a thread-local test latch set by [`trigger`], so tests can simulate
+//!   Ctrl-C without a global flag bleeding into *other* tests' trainer
+//!   loops running concurrently — the sweep loop under test runs on the
+//!   test's own thread, which is exactly the thread-local's scope.
+//!
+//! Note the glibc `signal(2)` binding gives BSD semantics (`SA_RESTART`):
+//! blocking syscalls resume after the handler runs, so loops must poll —
+//! the serve listener runs nonblocking with a sleep for this reason.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set (only) by the installed signal handler.
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    /// Test-only latch, scoped to the triggering thread.
+    static TEST_LATCH: Cell<bool> = const { Cell::new(false) };
+}
+
+#[cfg(unix)]
+extern "C" {
+    /// Hand-declared to avoid a libc dependency; `usize` for the handler
+    /// slot covers both `SIG_DFL`-style constants and function pointers.
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+#[cfg(unix)]
+const SIGINT: i32 = 2;
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_signum: i32) {
+    // Async-signal-safe: a single atomic store, nothing else.
+    SIGNALED.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT handler. Idempotent; call once at process start
+/// for any subcommand that wants graceful wind-down.
+pub fn install() {
+    #[cfg(unix)]
+    unsafe {
+        signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+/// Has an interrupt been requested (real SIGINT on any thread, or a
+/// [`trigger`] on this thread)?
+pub fn requested() -> bool {
+    SIGNALED.load(Ordering::Relaxed) || TEST_LATCH.with(Cell::get)
+}
+
+/// Test hook: simulate Ctrl-C for code running on *this* thread.
+pub fn trigger() {
+    TEST_LATCH.with(|l| l.set(true));
+}
+
+/// Clear both latches (test teardown, or after a handled interrupt).
+pub fn reset() {
+    SIGNALED.store(false, Ordering::SeqCst);
+    TEST_LATCH.with(|l| l.set(false));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trigger_is_thread_local() {
+        reset();
+        assert!(!requested());
+        trigger();
+        assert!(requested());
+        // Another thread must not observe this thread's test latch.
+        let seen = std::thread::spawn(requested).join().unwrap();
+        assert!(!seen);
+        reset();
+        assert!(!requested());
+    }
+
+    #[test]
+    fn install_is_idempotent() {
+        install();
+        install();
+        assert!(!TEST_LATCH.with(Cell::get));
+    }
+}

@@ -10,6 +10,7 @@ pub mod cli;
 pub mod crc;
 pub mod error;
 pub mod fault;
+pub mod interrupt;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,277 @@
+//! End-to-end serve path: snapshot export at the CLI surface, the TCP
+//! JSON-lines protocol against a live `pplda serve` process (info /
+//! query / typed errors / shutdown), hot reload triggered by a snapshot
+//! publish, rejection of a corrupt publish, SIGINT drain, and the
+//! `query-bench` driver. Everything runs against the real binary via
+//! `CARGO_BIN_EXE_pplda`; in-process oracles come from the library
+//! (`serve::engine::fold_in`), which the server must match bit for bit.
+
+use std::io::{BufRead, BufReader, Read};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::gibbs::serial::SerialLda;
+use pplda::serve::engine::{fold_in, FoldScratch};
+use pplda::serve::net::Client;
+use pplda::serve::snapshot::ModelSnapshot;
+use pplda::util::json::Json;
+
+fn pplda(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pplda"))
+        .args(args)
+        .output()
+        .expect("spawn pplda");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pplda-serve-{}-{name}", std::process::id()))
+}
+
+/// A briefly-trained tiny model, written as a snapshot at `path`.
+fn write_snapshot(path: &Path, seed: u64) -> ModelSnapshot {
+    let bow = generate(&Profile::tiny(), 42);
+    let mut lda = SerialLda::init(&bow, 8, 0.5, 0.1, 42);
+    for _ in 0..3 {
+        lda.sweep();
+    }
+    let snap = ModelSnapshot::from_counts(&lda.counts, 0.5, 0.1, seed);
+    snap.write(path).expect("write snapshot");
+    snap
+}
+
+/// Spawn `pplda serve` and block until it announces its bound address.
+/// Returns the child, the parsed address, and the reader positioned
+/// just past the `listening` line (for watching later stdout).
+fn spawn_serve(snap: &Path, extra: &[&str]) -> (Child, SocketAddr, BufReader<ChildStdout>) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_pplda"))
+        .arg("serve")
+        .arg(snap)
+        .args(["--addr", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn pplda serve");
+    let mut reader = BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if reader.read_line(&mut line).expect("read serve stdout") == 0 {
+            panic!("serve exited before announcing its address");
+        }
+        if let Some(rest) = line.trim().strip_prefix("serve: listening on ") {
+            break rest.parse::<SocketAddr>().expect("parse announced address");
+        }
+    };
+    (child, addr, reader)
+}
+
+/// Reap the child after a graceful stop and return (stdout_rest, stderr).
+fn finish(mut child: Child, mut reader: BufReader<ChildStdout>) -> (String, String) {
+    let status = child.wait().expect("wait for serve");
+    assert!(status.success(), "serve exited nonzero: {status:?}");
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).expect("drain stdout");
+    let mut err = String::new();
+    if let Some(mut stderr) = child.stderr.take() {
+        stderr.read_to_string(&mut err).expect("drain stderr");
+    }
+    (rest, err)
+}
+
+#[test]
+fn train_snapshot_out_matches_export_snapshot_byte_for_byte() {
+    // The same final counts reached two ways — train-end `--snapshot-out`
+    // and `export-snapshot` from the sweep-4 checkpoint — must produce
+    // identical snapshot files (the format has no timestamps or other
+    // nondeterminism).
+    let root = tmp("ckpt");
+    let _ = std::fs::remove_dir_all(&root);
+    let snap_a = tmp("train-end.ppsnap");
+    let snap_b = tmp("exported.ppsnap");
+    let root_s = root.to_str().unwrap().to_string();
+    let (a_s, b_s) = (snap_a.to_str().unwrap(), snap_b.to_str().unwrap());
+
+    let flags = [
+        "--profile", "tiny", "--procs", "3", "--topics", "4", "--iters", "4",
+        "--seed", "42", "--restarts", "2",
+    ];
+    let mut train_args = vec!["train"];
+    train_args.extend_from_slice(&flags);
+    train_args.extend_from_slice(&[
+        "--eval-every", "4", "--checkpoint-every", "4", "--checkpoint-dir", &root_s,
+        "--snapshot-out", a_s,
+    ]);
+    let (out, err, ok) = pplda(&train_args);
+    assert!(ok, "{out}\n{err}");
+    assert!(out.contains("wrote snapshot"), "{out}");
+    assert!(!out.contains("checkpointed at sweep"), "no interrupt happened: {out}");
+    assert!(root.join("ckpt-4").is_dir(), "{out}");
+
+    let mut export_args = vec!["export-snapshot"];
+    export_args.extend_from_slice(&flags);
+    export_args.extend_from_slice(&["--from", &root_s, "--out", b_s]);
+    let (out, err, ok) = pplda(&export_args);
+    assert!(ok, "{out}\n{err}");
+    assert!(out.contains("exported snapshot"), "{out}");
+
+    let bytes_a = std::fs::read(&snap_a).unwrap();
+    let bytes_b = std::fs::read(&snap_b).unwrap();
+    assert_eq!(bytes_a, bytes_b, "snapshot files differ");
+
+    // And the file round-trips through the loader.
+    let loaded = ModelSnapshot::load(&snap_a).expect("load train-end snapshot");
+    assert_eq!(loaded.k, 4);
+    assert_eq!(loaded.seed, 42);
+
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_file(&snap_a).ok();
+    std::fs::remove_file(&snap_b).ok();
+}
+
+#[test]
+fn serve_protocol_round_trip_with_oracle_and_typed_errors() {
+    let path = tmp("proto.ppsnap");
+    let snap = write_snapshot(&path, 7);
+    let (child, addr, reader) = spawn_serve(&path, &["--no-watch"]);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let info = client.info().expect("info");
+    assert_eq!(info.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(info.get("k").and_then(Json::as_u64), Some(snap.k as u64));
+    assert_eq!(info.get("v").and_then(Json::as_u64), Some(snap.v as u64));
+    assert_eq!(info.get("seed").and_then(Json::as_u64), Some(7));
+
+    // Replies over the wire are bit-identical to the in-process engine
+    // oracle: floats serialize shortest-roundtrip, so equality is exact.
+    let words: Vec<u32> = (0..12).map(|i| (i * 3 % snap.v) as u32).collect();
+    for id in [0u64, 9, 1 << 40] {
+        let reply = client.query(id, &words, None).expect("query");
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{}", reply.to_string());
+        assert_eq!(reply.get("degraded").and_then(Json::as_bool), Some(false));
+        let oracle = fold_in(&snap, &mut FoldScratch::new(), &words, id, 10);
+        let theta = reply.get("theta").and_then(Json::as_arr).expect("theta array");
+        assert_eq!(theta.len(), snap.k);
+        for (i, j) in theta.iter().enumerate() {
+            assert_eq!(j.as_f64(), Some(f64::from(oracle[i])), "theta[{i}] of id {id}");
+        }
+    }
+
+    // Typed errors come back as tags, and the connection keeps working.
+    let bad = client.query(99, &[snap.v as u32], None).expect("oov query");
+    assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(bad.get("error").and_then(Json::as_str), Some("bad-request"));
+
+    let late = client.query(100, &words, Some(0)).expect("expired query");
+    assert_eq!(late.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(late.get("error").and_then(Json::as_str), Some("deadline"));
+
+    let ok_again = client.query(101, &words, None).expect("recovery query");
+    assert_eq!(ok_again.get("ok").and_then(Json::as_bool), Some(true));
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+
+    let bye = client.shutdown().expect("shutdown");
+    assert_eq!(bye.get("draining").and_then(Json::as_bool), Some(true));
+    let (rest, err) = finish(child, reader);
+    assert!(rest.contains("serve: draining"), "{rest}\n{err}");
+    assert!(rest.contains("serve: drained |"), "{rest}");
+    assert!(rest.contains("SERVE_JSON "), "{rest}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn hot_reload_swaps_on_publish_and_survives_a_corrupt_publish() {
+    let path = tmp("reload.ppsnap");
+    write_snapshot(&path, 1);
+    let (child, addr, reader) = spawn_serve(&path, &[]);
+    let mut client = Client::connect(&addr).expect("connect");
+    assert_eq!(client.info().unwrap().get("seed").and_then(Json::as_u64), Some(1));
+
+    // Publish a new snapshot (same K/V, new seed) the way a trainer
+    // would: full write + atomic rename. The watcher must swap it in.
+    std::thread::sleep(Duration::from_millis(50));
+    write_snapshot(&path, 2);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let seed = client.info().expect("info").get("seed").and_then(Json::as_u64);
+        if seed == Some(2) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "snapshot never hot-reloaded (seed {seed:?})");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // A corrupt publish (truncated garbage straight into the path) must
+    // be rejected while the old snapshot keeps serving.
+    std::fs::write(&path, b"PPSNAP1\0 definitely not a snapshot").unwrap();
+    std::thread::sleep(Duration::from_millis(1200));
+    let info = client.info().expect("server still serving");
+    assert_eq!(info.get("seed").and_then(Json::as_u64), Some(2));
+    let reply = client.query(5, &[0, 1, 2], None).expect("query after bad publish");
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+
+    client.shutdown().expect("shutdown");
+    let (rest, err) = finish(child, reader);
+    assert!(rest.contains("serve: snapshot hot-reloaded"), "{rest}");
+    assert!(err.contains("reload rejected"), "stderr: {err}\nstdout: {rest}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn sigint_drains_the_server_gracefully() {
+    let path = tmp("sigint.ppsnap");
+    write_snapshot(&path, 3);
+    let (child, addr, reader) = spawn_serve(&path, &["--no-watch"]);
+    let mut client = Client::connect(&addr).expect("connect");
+    let reply = client.query(1, &[0, 1], None).expect("query");
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+
+    let kill = Command::new("kill")
+        .args(["-INT", &child.id().to_string()])
+        .status()
+        .expect("send SIGINT");
+    assert!(kill.success());
+    let (rest, err) = finish(child, reader);
+    assert!(rest.contains("serve: drained |"), "{rest}\n{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn query_bench_drives_a_live_server() {
+    let path = tmp("qbench.ppsnap");
+    write_snapshot(&path, 4);
+    let (child, addr, reader) = spawn_serve(&path, &["--no-watch"]);
+
+    let addr_s = addr.to_string();
+    let (out, err, ok) = pplda(&[
+        "query-bench", "--addr", &addr_s, "--requests", "40", "--words", "8",
+    ]);
+    assert!(ok, "{out}\n{err}");
+    let bench_rows: Vec<&str> =
+        out.lines().filter(|l| l.starts_with("BENCH_JSON ")).collect();
+    assert_eq!(bench_rows.len(), 2, "{out}");
+    for (row, mix) in bench_rows.iter().zip(["uniform", "skewed"]) {
+        assert!(out.contains(&format!("query-bench {mix}:")), "{out}");
+        assert!(row.contains("\"bench\":\"query_bench\""), "{row}");
+        assert!(row.contains(&format!("\"mix\":\"{mix}\"")), "{row}");
+        assert!(row.contains("\"errors\":0"), "{row}");
+    }
+    assert!(out.contains("errors 0"), "{out}");
+
+    let mut client = Client::connect(&addr).expect("connect");
+    client.shutdown().expect("shutdown");
+    let (rest, _) = finish(child, reader);
+    assert!(rest.contains("serve: drained |"), "{rest}");
+    std::fs::remove_file(&path).ok();
+}
