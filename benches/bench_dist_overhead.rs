@@ -1,0 +1,142 @@
+//! Distributed execution overhead: the same sweep loop driven through
+//! an in-process executor vs a [`DistExec`] coordinator shipping every
+//! task over real localhost TCP to two `serve_on` workers.
+//!
+//! The distributed path pays serialization (block encode/decode, row
+//! gather/scatter), kernel-state rebuilds on the worker (no resident
+//! model), and socket round-trips — none of which exist in-process.
+//! This bench quantifies that tax so the trajectory can watch it, and
+//! asserts the contract that justifies the whole design: distributed
+//! counts are bit-identical to Sequential, so the overhead buys fault
+//! tolerance without buying drift.
+//!
+//! Emits a `BENCH_JSON dist_overhead` line with per-path sweep
+//! wallclock. No wallclock bound is asserted even in slow mode: the
+//! distributed path's cost is dominated by loopback latency and
+//! per-task re-initialization, both of which are environment-dependent
+//! in ways an in-tree bound would flake on.
+
+use std::net::{SocketAddr, TcpListener};
+use std::thread::{self, JoinHandle};
+
+use pplda::corpus::synthetic::{generate, Profile};
+use pplda::dist::{DistExec, DistOptions, WorkerOptions};
+use pplda::partition::{partition, Algorithm};
+use pplda::scheduler::exec::{CommitMode, ExecMode, ParallelLda};
+use pplda::util::json::Json;
+use pplda::util::tsv::Table;
+
+fn spawn_workers(n: usize) -> (Vec<SocketAddr>, Vec<JoinHandle<()>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker");
+        addrs.push(listener.local_addr().expect("local addr"));
+        handles.push(thread::spawn(move || {
+            let opts = WorkerOptions {
+                once: true,
+                ..WorkerOptions::default()
+            };
+            let _ = pplda::dist::serve_on(listener, &opts);
+        }));
+    }
+    (addrs, handles)
+}
+
+fn main() {
+    let fast = std::env::var("PPLDA_BENCH_FAST").as_deref() == Ok("1");
+    let scale = if fast { 30 } else { 6 };
+    let topics = if fast { 8 } else { 32 };
+    let sweeps = if fast { 3 } else { 8 };
+    let restarts = if fast { 10 } else { 50 };
+    let p = 4usize;
+    let seed = 42;
+
+    let bow = generate(&Profile::nips_like().scaled(scale), seed);
+    let plan = partition(&bow, p, Algorithm::A3 { restarts }, seed);
+    println!(
+        "bench_dist_overhead: D={} W={} N={} K={topics} P={p} workers=2 \
+         ({sweeps} sweeps/path, ticketed)",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens()
+    );
+
+    let mut table = Table::new(["path", "sweep_ms", "reassigns"]);
+    let mut rows = Vec::new();
+    let mut wall = Vec::new();
+    let mut topic_counts: Vec<Vec<u32>> = Vec::new();
+
+    // In-process oracle: the single-process Sequential executor.
+    {
+        let mut lda = ParallelLda::init(&bow, &plan, topics, 0.5, 0.1, seed);
+        lda.set_commit(CommitMode::Ticketed);
+        lda.sweep(ExecMode::Sequential); // warm: scratch, snapshot
+        let t = std::time::Instant::now();
+        for _ in 0..sweeps {
+            lda.sweep(ExecMode::Sequential);
+        }
+        let per_sweep = t.elapsed().as_secs_f64() / sweeps as f64;
+        table.row(["sequential".to_string(), format!("{:.3}", per_sweep * 1e3), "0".to_string()]);
+        let mut j = Json::obj();
+        j.set("path", "sequential").set("sweep_secs", per_sweep);
+        rows.push(j);
+        wall.push(per_sweep);
+        topic_counts.push(lda.counts.topic.clone());
+    }
+
+    // Distributed: two localhost workers behind a DistExec coordinator.
+    {
+        let (addrs, handles) = spawn_workers(2);
+        let mut exec =
+            DistExec::connect(&addrs, DistOptions::default()).expect("connect workers");
+        let mut lda = ParallelLda::init(&bow, &plan, topics, 0.5, 0.1, seed);
+        lda.set_commit(CommitMode::Ticketed);
+        lda.sweep_with(&mut exec); // warm: connections, worker scratch
+        let t = std::time::Instant::now();
+        for _ in 0..sweeps {
+            lda.sweep_with(&mut exec);
+        }
+        let per_sweep = t.elapsed().as_secs_f64() / sweeps as f64;
+        assert_eq!(exec.reassigns(), 0, "clean run must not reassign");
+        assert_eq!(exec.local_fallbacks(), 0, "workers must do all the work");
+        table.row([
+            "dist-2".to_string(),
+            format!("{:.3}", per_sweep * 1e3),
+            exec.reassigns().to_string(),
+        ]);
+        let mut j = Json::obj();
+        j.set("path", "dist-2")
+            .set("sweep_secs", per_sweep)
+            .set("reassigns", exec.reassigns())
+            .set("speculations", exec.speculations());
+        rows.push(j);
+        wall.push(per_sweep);
+        topic_counts.push(lda.counts.topic.clone());
+        exec.shutdown();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    println!("{}", table.to_aligned());
+    assert_eq!(
+        topic_counts[0], topic_counts[1],
+        "distributed training must be bit-identical to sequential"
+    );
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "dist_overhead")
+        .set("corpus", "nips-like")
+        .set("scale", scale)
+        .set("topics", topics)
+        .set("p", p)
+        .set("sweeps", sweeps)
+        .set("results", rows);
+    println!("BENCH_JSON {}", summary.to_string());
+    println!(
+        "dist/sequential wallclock = {:.3}x (bit-identical counts)",
+        wall[1] / wall[0].max(1e-12)
+    );
+}

@@ -22,7 +22,7 @@ use crate::partition::Plan;
 use crate::scheduler::adaptive::{BalanceMode, Measured};
 use crate::scheduler::exec::{build_blocks, CommitMode, ExecMode, SweepStats};
 use crate::scheduler::pool::{
-    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, TaskObs, WorkerPool,
+    commit_delta, merge_deltas, EngineCache, EpochSpec, EpochTasks, Executor, TaskObs, WorkerPool,
 };
 use crate::scheduler::schedule::{partition_id, Schedule, ScheduleKind};
 use crate::scheduler::shared::SharedRows;
@@ -505,6 +505,19 @@ impl ParallelBot {
     /// (sharing one persistent pool in `Pooled` mode), with their
     /// phase-total snapshots double-buffered instead of cloned per epoch.
     pub fn sweep(&mut self, mode: ExecMode) -> (SweepStats, SweepStats) {
+        // Detach the engine cache so the executor and `self` can be
+        // borrowed mutably at once (see the matching swap in
+        // `ParallelLda::sweep`); the placeholder builds nothing.
+        let mut engines = std::mem::replace(&mut self.engines, EngineCache::new(0));
+        let stats = self.sweep_with(engines.get(mode));
+        self.engines = engines;
+        stats
+    }
+
+    /// [`Self::sweep`] against an explicit [`Executor`] — the seam that
+    /// lets `crate::dist::DistExec` drive both BoT phases over remote
+    /// workers through the unchanged epoch loops.
+    pub fn sweep_with(&mut self, exec: &mut dyn Executor) -> (SweepStats, SweepStats) {
         let sweep_no = self.sweeps_done;
         let steal = self.balance.is_steal();
         let mut wstats = SweepStats {
@@ -539,9 +552,9 @@ impl ParallelBot {
             .add_phase(Family::Word, MetricPhase::Update, update_started.elapsed());
 
         if self.commit == CommitMode::Ticketed {
-            self.ticketed_epochs(mode, &mut wstats, &mut sstats, sweep_no, steal);
+            self.ticketed_epochs(exec, &mut wstats, &mut sstats, sweep_no, steal);
         } else {
-            self.barrier_epochs(mode, &mut wstats, &mut sstats, sweep_no, steal);
+            self.barrier_epochs(exec, &mut wstats, &mut sstats, sweep_no, steal);
         }
         self.sweeps_done += 1;
         wstats.io_retries = self.word.shards.io_retries() - word_io0;
@@ -650,7 +663,7 @@ impl ParallelBot {
     /// the phase snapshot) before anything else proceeds.
     fn barrier_epochs(
         &mut self,
-        mode: ExecMode,
+        exec: &mut dyn Executor,
         wstats: &mut SweepStats,
         sstats: &mut SweepStats,
         sweep_no: usize,
@@ -658,7 +671,7 @@ impl ParallelBot {
     ) {
         let p = self.p;
         let k = self.h.k;
-        let mut task_retries_prev = self.engines.get(mode).retries();
+        let mut task_retries_prev = exec.retries();
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
             {
@@ -704,12 +717,10 @@ impl ParallelBot {
                     worker_nanos: &mut self.worker_nanos,
                     steal,
                 };
-                self.engines
-                    .get(mode)
-                    .run_epoch(&spec, tasks, &mut self.deltas[..n]);
+                exec.run_epoch(&spec, tasks, &mut self.deltas[..n]);
                 self.metrics
                     .add_phase(Family::Word, MetricPhase::Sample, started.elapsed());
-                let r = self.engines.get(mode).retries();
+                let r = exec.retries();
                 wstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
                 wstats.task_nanos.push(self.task_nanos[..n].to_vec());
@@ -775,12 +786,10 @@ impl ParallelBot {
                     worker_nanos: &mut self.worker_nanos,
                     steal,
                 };
-                self.engines
-                    .get(mode)
-                    .run_epoch(&spec, tasks, &mut self.deltas[..n]);
+                exec.run_epoch(&spec, tasks, &mut self.deltas[..n]);
                 self.metrics
                     .add_phase(Family::Stamp, MetricPhase::Sample, started.elapsed());
-                let r = self.engines.get(mode).retries();
+                let r = exec.retries();
                 sstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
                 sstats.task_nanos.push(self.task_nanos[..n].to_vec());
@@ -819,7 +828,7 @@ impl ParallelBot {
     /// are bit-identical.
     fn ticketed_epochs(
         &mut self,
-        mode: ExecMode,
+        exec: &mut dyn Executor,
         wstats: &mut SweepStats,
         sstats: &mut SweepStats,
         sweep_no: usize,
@@ -827,7 +836,7 @@ impl ParallelBot {
     ) {
         let p = self.p;
         let k = self.h.k;
-        let mut task_retries_prev = self.engines.get(mode).retries();
+        let mut task_retries_prev = exec.retries();
         for l in 0..p {
             // ---- word phase on DW diagonal l ----
             {
@@ -911,7 +920,7 @@ impl ParallelBot {
                         });
                     }
                 };
-                self.engines.get(mode).run_epoch_ticketed(
+                exec.run_epoch_ticketed(
                     &spec,
                     tasks,
                     &mut self.deltas[..n],
@@ -923,7 +932,7 @@ impl ParallelBot {
                 m.add_phase_secs(Family::Stamp, MetricPhase::SpillWrite, stamp_io_write);
                 m.add_phase_secs(Family::Word, MetricPhase::Runahead, runahead);
                 m.add_phase_secs(Family::Word, MetricPhase::Commit, blocking);
-                let r = self.engines.get(mode).retries();
+                let r = exec.retries();
                 wstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
                 wstats.task_nanos.push(self.task_nanos[..n].to_vec());
@@ -1015,7 +1024,7 @@ impl ParallelBot {
                         });
                     }
                 };
-                self.engines.get(mode).run_epoch_ticketed(
+                exec.run_epoch_ticketed(
                     &spec,
                     tasks,
                     &mut self.deltas[..n],
@@ -1027,7 +1036,7 @@ impl ParallelBot {
                 m.add_phase_secs(Family::Word, MetricPhase::SpillWrite, word_io_write);
                 m.add_phase_secs(Family::Stamp, MetricPhase::Runahead, runahead);
                 m.add_phase_secs(Family::Stamp, MetricPhase::Commit, blocking);
-                let r = self.engines.get(mode).retries();
+                let r = exec.retries();
                 sstats.task_retries += r - task_retries_prev;
                 task_retries_prev = r;
                 sstats.task_nanos.push(self.task_nanos[..n].to_vec());

@@ -470,24 +470,7 @@ impl ShardStore {
         if fault::fire("shard.write_block", [self.token, id, 0]).is_some() {
             return Err(injected_io(&path, "write (injected fault)"));
         }
-        let docs = u32s_to_le(&block.docs);
-        let words = u32s_to_le(&block.words);
-        let z = u32s_to_le(&block.z);
-        let mut header = [0u8; HEADER as usize];
-        header[..8].copy_from_slice(MAGIC);
-        header[8..STAMP_OFFSET].copy_from_slice(&(block.len() as u64).to_le_bytes());
-        header[STAMP_OFFSET..CRC_DOCS_OFFSET].copy_from_slice(&stamp.to_le_bytes());
-        header[CRC_DOCS_OFFSET..CRC_WORDS_OFFSET].copy_from_slice(&crc32(&docs).to_le_bytes());
-        header[CRC_WORDS_OFFSET..CRC_Z_OFFSET].copy_from_slice(&crc32(&words).to_le_bytes());
-        header[CRC_Z_OFFSET..HEADER_CRC_OFFSET].copy_from_slice(&crc32(&z).to_le_bytes());
-        let hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
-        header[HEADER_CRC_OFFSET..].copy_from_slice(&hcrc.to_le_bytes());
-        let cap = HEADER as usize + (BYTES_PER_TOKEN as usize) * block.len();
-        let mut buf = Vec::with_capacity(cap);
-        buf.extend_from_slice(&header);
-        buf.extend_from_slice(&docs);
-        buf.extend_from_slice(&words);
-        buf.extend_from_slice(&z);
+        let buf = encode_block(block, stamp);
 
         static TMP: AtomicU64 = AtomicU64::new(0);
         let tmp = self
@@ -603,53 +586,7 @@ impl ShardStore {
             return Err(injected_io(&path, "read (injected fault)"));
         }
         let bytes = std::fs::read(&path).map_err(|e| io_err(&path, "read", e))?;
-        check_magic(&bytes, &path)?;
-        if bytes.len() < HEADER as usize {
-            return Err(BlockError::Truncated {
-                path,
-                len: bytes.len() as u64,
-                expected: HEADER,
-            });
-        }
-        let mut header = [0u8; HEADER as usize];
-        header.copy_from_slice(&bytes[..HEADER as usize]);
-        let stored_hcrc = le_u32_in(&header, HEADER_CRC_OFFSET);
-        let computed_hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
-        if stored_hcrc != computed_hcrc {
-            return Err(BlockError::Corrupt {
-                path,
-                section: "header",
-                stored: stored_hcrc,
-                computed: computed_hcrc,
-            });
-        }
-        let n = le_u64_in(&header, 8) as usize;
-        let stamp = le_u64_in(&header, STAMP_OFFSET);
-        if bytes.len() as u64 != HEADER + BYTES_PER_TOKEN * n as u64 {
-            return Err(BlockError::Truncated {
-                path,
-                len: bytes.len() as u64,
-                expected: HEADER + BYTES_PER_TOKEN * n as u64,
-            });
-        }
-        let h = HEADER as usize;
-        let sections = [
-            ("docs", CRC_DOCS_OFFSET, h),
-            ("words", CRC_WORDS_OFFSET, h + 4 * n),
-            ("z", CRC_Z_OFFSET, h + 8 * n),
-        ];
-        for (section, crc_at, start) in sections {
-            let stored = le_u32_in(&header, crc_at);
-            let computed = crc32(&bytes[start..start + 4 * n]);
-            if stored != computed {
-                return Err(BlockError::Corrupt { path: path.clone(), section, stored, computed });
-            }
-        }
-        let mut block = TokenBlock::with_capacity(n);
-        read_u32s(&bytes[h..h + 4 * n], &mut block.docs);
-        read_u32s(&bytes[h + 4 * n..h + 8 * n], &mut block.words);
-        read_u32s(&bytes[h + 8 * n..h + 12 * n], &mut block.z);
-        Ok((block, stamp))
+        decode_block(&bytes, &path)
     }
 }
 
@@ -659,6 +596,93 @@ fn read_u32s(bytes: &[u8], out: &mut Vec<u32>) {
         le.copy_from_slice(c);
         out.push(u32::from_le_bytes(le));
     }
+}
+
+/// Serialize a block to its `PPSHARD3` byte image (checksummed header +
+/// docs + words + z sections). The one copy of the layout: the spill
+/// store's atomic file writes and the distributed wire protocol
+/// ([`crate::dist::wire`], which ships partitions to workers as exactly
+/// these bytes) both call it.
+pub(crate) fn encode_block(block: &TokenBlock, stamp: u64) -> Vec<u8> {
+    let docs = u32s_to_le(&block.docs);
+    let words = u32s_to_le(&block.words);
+    let z = u32s_to_le(&block.z);
+    let mut header = [0u8; HEADER as usize];
+    header[..8].copy_from_slice(MAGIC);
+    header[8..STAMP_OFFSET].copy_from_slice(&(block.len() as u64).to_le_bytes());
+    header[STAMP_OFFSET..CRC_DOCS_OFFSET].copy_from_slice(&stamp.to_le_bytes());
+    header[CRC_DOCS_OFFSET..CRC_WORDS_OFFSET].copy_from_slice(&crc32(&docs).to_le_bytes());
+    header[CRC_WORDS_OFFSET..CRC_Z_OFFSET].copy_from_slice(&crc32(&words).to_le_bytes());
+    header[CRC_Z_OFFSET..HEADER_CRC_OFFSET].copy_from_slice(&crc32(&z).to_le_bytes());
+    let hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
+    header[HEADER_CRC_OFFSET..].copy_from_slice(&hcrc.to_le_bytes());
+    let cap = HEADER as usize + (BYTES_PER_TOKEN as usize) * block.len();
+    let mut buf = Vec::with_capacity(cap);
+    buf.extend_from_slice(&header);
+    buf.extend_from_slice(&docs);
+    buf.extend_from_slice(&words);
+    buf.extend_from_slice(&z);
+    buf
+}
+
+/// Decode a `PPSHARD3` byte image produced by [`encode_block`] (a spill
+/// file's contents, or a block section of a wire frame), verifying the
+/// magic, header CRC, declared length, and all three section CRCs.
+/// `origin` labels the error (a filesystem path, or a pseudo-path like
+/// `wire://node-3/part-7` for frames).
+pub(crate) fn decode_block(bytes: &[u8], origin: &Path) -> Result<(TokenBlock, u64), BlockError> {
+    check_magic(bytes, origin)?;
+    if bytes.len() < HEADER as usize {
+        return Err(BlockError::Truncated {
+            path: origin.to_path_buf(),
+            len: bytes.len() as u64,
+            expected: HEADER,
+        });
+    }
+    let mut header = [0u8; HEADER as usize];
+    header.copy_from_slice(&bytes[..HEADER as usize]);
+    let stored_hcrc = le_u32_in(&header, HEADER_CRC_OFFSET);
+    let computed_hcrc = crc32(&header[..HEADER_CRC_OFFSET]);
+    if stored_hcrc != computed_hcrc {
+        return Err(BlockError::Corrupt {
+            path: origin.to_path_buf(),
+            section: "header",
+            stored: stored_hcrc,
+            computed: computed_hcrc,
+        });
+    }
+    let n = le_u64_in(&header, 8) as usize;
+    let stamp = le_u64_in(&header, STAMP_OFFSET);
+    if bytes.len() as u64 != HEADER + BYTES_PER_TOKEN * n as u64 {
+        return Err(BlockError::Truncated {
+            path: origin.to_path_buf(),
+            len: bytes.len() as u64,
+            expected: HEADER + BYTES_PER_TOKEN * n as u64,
+        });
+    }
+    let h = HEADER as usize;
+    let sections = [
+        ("docs", CRC_DOCS_OFFSET, h),
+        ("words", CRC_WORDS_OFFSET, h + 4 * n),
+        ("z", CRC_Z_OFFSET, h + 8 * n),
+    ];
+    for (section, crc_at, start) in sections {
+        let stored = le_u32_in(&header, crc_at);
+        let computed = crc32(&bytes[start..start + 4 * n]);
+        if stored != computed {
+            return Err(BlockError::Corrupt {
+                path: origin.to_path_buf(),
+                section,
+                stored,
+                computed,
+            });
+        }
+    }
+    let mut block = TokenBlock::with_capacity(n);
+    read_u32s(&bytes[h..h + 4 * n], &mut block.docs);
+    read_u32s(&bytes[h + 4 * n..h + 8 * n], &mut block.words);
+    read_u32s(&bytes[h + 8 * n..h + 12 * n], &mut block.z);
+    Ok((block, stamp))
 }
 
 impl Drop for ShardStore {

@@ -1,0 +1,1034 @@
+//! Coordinator side of distributed training: [`DistExec`], an
+//! [`Executor`] whose "workers" are remote `pplda worker` processes
+//! reached over TCP instead of threads in a local pool.
+//!
+//! # Architecture
+//!
+//! The coordinator owns everything global — the schedule, the shared
+//! `n_dw`/`n_wt` rows, checkpointing, tracing — and ships each epoch
+//! task to a worker as a self-contained [`TaskMsg`]: hyperparameters,
+//! the pre-salted RNG seed, the topic snapshot, the *slices* of the
+//! shared rows the task's block touches (gathered by id), and the block
+//! itself as a checksummed `PPSHARD3` image. Workers are stateless
+//! between tasks; the reply ([`DeltaMsg`]) carries **absolute** row
+//! values, so a duplicate delivery (speculation, replay after a
+//! reconnect) is idempotent — applying it twice writes the same bytes.
+//!
+//! # Determinism
+//!
+//! A task's sampling stream is keyed only by `(seed, sweep, partition)`
+//! (see [`crate::scheduler::pool::task_rng`]), never by which node runs
+//! it or how many times it is retried. Reassignment after a crash,
+//! speculative duplicates, and the no-workers-left local fallback all
+//! replay the *same* stream over the *same* input block, so the result
+//! is bit-identical to a single-process run — the property the chaos
+//! tests in `integration_dist.rs` assert.
+//!
+//! # Failure handling
+//!
+//! * Per-node reader threads turn frames, pongs, EOFs and decode errors
+//!   into [`NodeEvent`]s on one channel; the epoch driver is a single
+//!   event loop, so there is no locking on the hot path.
+//! * A node is declared **dead** on: send failure, connection EOF, an
+//!   undecodable frame, or a liveness timeout (no pong while it holds
+//!   in-flight work). Its in-flight tickets rejoin the dispatch queue —
+//!   each requeue counts one *reassign* (surfaced as
+//!   `SweepStats::task_retries` through [`Executor::retries`]).
+//! * Stragglers: once a node's EWMA task time is established, a task
+//!   exceeding `spec_factor ×` the estimate is speculatively duplicated
+//!   onto an idle node; the first reply wins, the loser is dropped by
+//!   the `completed` set.
+//! * Dead nodes get one reconnect attempt per epoch while
+//!   `max_reconnects` lasts; with no live node left, tasks run locally
+//!   through the same [`pool::run_task`] the workers use.
+//!
+//! Fault injection: [`fault::sites::DIST_SEND`] fires before a task
+//! frame is written (TornWrite/IoError → node dead), and
+//! [`fault::sites::DIST_RECV`] fires when a delta arrives (any kind →
+//! delta discarded, node dead). Both are keyed `(node, sweep, ticket)`.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::dist::wire::{
+    self, send_frame, DeltaMsg, Incoming, TaskMsg, KIND_DELTA, KIND_TASK,
+};
+use crate::dist::worker::PROTO_VERSION;
+use crate::gibbs::tokens::TokenBlock;
+use crate::kernel::Kernel;
+use crate::obs::EventKind;
+use crate::scheduler::pool::{self, EpochSpec, EpochTasks, Executor};
+use crate::scheduler::shared::SharedRows;
+use crate::util::fault::{self, FaultKind};
+use crate::util::json::Json;
+use crate::util::net::{connect, send_line};
+
+/// Tuning knobs for the coordinator's failure detector and straggler
+/// mitigation. Defaults suit a LAN; tests shrink the timeouts.
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Ping period while an epoch is in flight.
+    pub heartbeat_ms: u64,
+    /// A node holding in-flight work that has not been heard from (no
+    /// pong, no delta) for this long is declared dead.
+    pub liveness_timeout_ms: u64,
+    /// Speculative re-execution threshold: a task is duplicated onto an
+    /// idle node once it has run `spec_factor ×` the owner's EWMA task
+    /// time. `f64::INFINITY` disables speculation.
+    pub spec_factor: f64,
+    /// Connection attempts per node at startup (with deterministic
+    /// exponential backoff between attempts).
+    pub connect_attempts: u32,
+    /// Lifetime budget of reconnect attempts per node after it dies
+    /// (one try per epoch start).
+    pub max_reconnects: u32,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            heartbeat_ms: 500,
+            liveness_timeout_ms: 2000,
+            spec_factor: 3.0,
+            connect_attempts: 10,
+            max_reconnects: 3,
+        }
+    }
+}
+
+/// Why a worker node could not be brought up.
+#[derive(Debug)]
+pub enum NodeError {
+    /// TCP connect kept failing after all startup attempts.
+    Connect {
+        addr: String,
+        attempts: u32,
+        last: String,
+    },
+    /// Connected, but the hello/hello_ack exchange went wrong.
+    Handshake { addr: String, detail: String },
+}
+
+impl std::fmt::Display for NodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeError::Connect {
+                addr,
+                attempts,
+                last,
+            } => write!(f, "connect to {addr} failed after {attempts} attempts: {last}"),
+            NodeError::Handshake { addr, detail } => {
+                write!(f, "handshake with {addr} failed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NodeError {}
+
+/// What a per-node reader thread can report to the epoch driver.
+enum Ev {
+    /// A decoded worker reply.
+    Delta(DeltaMsg),
+    /// Heartbeat answer.
+    Pong,
+    /// Clean or crash hangup — the socket reached EOF.
+    Eof,
+    /// Protocol damage: undecodable frame, unexpected kind, IO error.
+    Bad(String),
+}
+
+struct NodeEvent {
+    node: usize,
+    ev: Ev,
+}
+
+/// One remote worker as the coordinator sees it. `writer: None` means
+/// dead (until a reconnect succeeds).
+struct Node {
+    addr: SocketAddr,
+    writer: Option<TcpStream>,
+    reader: Option<JoinHandle<()>>,
+    /// Last time we heard *anything* from the node (pong or delta).
+    last_seen: Instant,
+    /// EWMA of reported task nanos — the speculation baseline.
+    ewma_nanos: f64,
+    reconnects_left: u32,
+    /// Tasks currently assigned (primary or speculative copy); used to
+    /// find idle nodes for speculation.
+    busy: usize,
+}
+
+/// Per-ticket dispatch state while an epoch is in flight.
+struct Flight {
+    node: usize,
+    spec_node: Option<usize>,
+    sent_at: Instant,
+    speculated: bool,
+}
+
+/// The id lists a ticket's rows were gathered by — kept per ticket (not
+/// per flight) so a late delta from an already-buried node can still be
+/// scattered back, and so re-sends reuse the same (deterministic) maps.
+struct TicketIds {
+    doc: Vec<u64>,
+    emit: Vec<u64>,
+}
+
+/// A distributed [`Executor`]: drives remote workers over TCP with
+/// heartbeats, deterministic reassignment, speculation, and a local
+/// fallback. Construct with [`DistExec::connect`], then hand to
+/// `ParallelLda::sweep_with` / `ParallelBot::sweep_with`.
+pub struct DistExec {
+    nodes: Vec<Node>,
+    opts: DistOptions,
+    tx: Sender<NodeEvent>,
+    rx: Receiver<NodeEvent>,
+    reassigns: u64,
+    speculations: u64,
+    local_tasks: u64,
+    pings: u64,
+    ping_seq: u64,
+    /// Kernel for the no-workers-left local fallback, cached across
+    /// epochs like a pool worker's.
+    local_kernel: Option<Box<dyn Kernel>>,
+}
+
+impl DistExec {
+    /// Connect to every worker address and complete the hello handshake
+    /// with each. Node index == position in `addrs`; the worker learns
+    /// its index from the hello, so lanes and failpoint keys agree on
+    /// both sides. Fails hard if any node cannot be brought up — a
+    /// degraded *start* is a config error, unlike a mid-run death.
+    pub fn connect(addrs: &[SocketAddr], opts: DistOptions) -> Result<DistExec, NodeError> {
+        assert!(!addrs.is_empty(), "need at least one worker address");
+        let (tx, rx) = channel();
+        let mut exec = DistExec {
+            nodes: Vec::with_capacity(addrs.len()),
+            opts,
+            tx,
+            rx,
+            reassigns: 0,
+            speculations: 0,
+            local_tasks: 0,
+            pings: 0,
+            ping_seq: 0,
+            local_kernel: None,
+        };
+        for &addr in addrs {
+            exec.nodes.push(Node {
+                addr,
+                writer: None,
+                reader: None,
+                last_seen: Instant::now(),
+                ewma_nanos: 0.0,
+                reconnects_left: exec.opts.max_reconnects,
+                busy: 0,
+            });
+        }
+        for i in 0..exec.nodes.len() {
+            exec.connect_node(i, exec.opts.connect_attempts)?;
+        }
+        Ok(exec)
+    }
+
+    /// Number of configured nodes (live or dead).
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Nodes currently connected.
+    pub fn live_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.writer.is_some()).count()
+    }
+
+    /// Tasks re-dispatched because their node died (== what
+    /// [`Executor::retries`] reports).
+    pub fn reassigns(&self) -> u64 {
+        self.reassigns
+    }
+
+    /// Speculative duplicates dispatched for suspected stragglers.
+    pub fn speculations(&self) -> u64 {
+        self.speculations
+    }
+
+    /// Tasks run on the coordinator because no worker was live.
+    pub fn local_fallbacks(&self) -> u64 {
+        self.local_tasks
+    }
+
+    /// Heartbeat pings sent (telemetry; tests assert it advances).
+    pub fn pings_sent(&self) -> u64 {
+        self.pings
+    }
+
+    /// Politely shut every worker down (send `shutdown`, close sockets,
+    /// join readers). Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        for i in 0..self.nodes.len() {
+            if let Some(w) = &mut self.nodes[i].writer {
+                let mut bye = Json::obj();
+                bye.set("cmd", "shutdown");
+                let _ = send_line(w, &bye);
+                let _ = w.shutdown(Shutdown::Both);
+            }
+            self.nodes[i].writer = None;
+            if let Some(h) = self.nodes[i].reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Bring node `i` up: connect (with deterministic backoff between
+    /// attempts), handshake, spawn its reader thread.
+    fn connect_node(&mut self, i: usize, attempts: u32) -> Result<(), NodeError> {
+        let addr = self.nodes[i].addr;
+        let mut last = String::from("no attempt made");
+        for attempt in 0..attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(backoff_ms(i as u64, attempt)));
+            }
+            match self.try_handshake(&addr, i) {
+                Ok((writer, reader)) => {
+                    self.spawn_reader(i, reader);
+                    self.nodes[i].writer = Some(writer);
+                    self.nodes[i].last_seen = Instant::now();
+                    self.nodes[i].busy = 0;
+                    return Ok(());
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(NodeError::Connect {
+            addr: addr.to_string(),
+            attempts: attempts.max(1),
+            last,
+        })
+    }
+
+    /// One connect + hello/hello_ack exchange. The handshake read runs
+    /// under a timeout (a hung accept loop must not wedge startup);
+    /// the timeout is cleared before the stream becomes the reader
+    /// thread's, which blocks indefinitely by design.
+    fn try_handshake(
+        &self,
+        addr: &SocketAddr,
+        node: usize,
+    ) -> Result<(TcpStream, BufReader<TcpStream>), String> {
+        let stream = connect(addr).map_err(|e| e.to_string())?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(
+                self.opts.liveness_timeout_ms.max(100),
+            )))
+            .map_err(|e| e.to_string())?;
+        let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+        let mut hello = Json::obj();
+        hello.set("cmd", "hello");
+        hello.set("node", node as u64);
+        hello.set("proto", PROTO_VERSION);
+        send_line(&mut writer, &hello).map_err(|e| e.to_string())?;
+        let mut reader = BufReader::new(stream);
+        match wire::recv_mixed(&mut reader) {
+            Ok(Incoming::Line(line)) => {
+                let ack = Json::parse(&line)?;
+                if ack.get("cmd").and_then(Json::as_str) != Some("hello_ack") {
+                    return Err(format!("expected hello_ack, got: {line}"));
+                }
+                if ack.get("node").and_then(Json::as_u64) != Some(node as u64) {
+                    return Err(format!("hello_ack for wrong node: {line}"));
+                }
+            }
+            Ok(other) => return Err(format!("expected hello_ack line, got {other:?}")),
+            Err(e) => return Err(e.to_string()),
+        }
+        reader
+            .get_ref()
+            .set_read_timeout(None)
+            .map_err(|e| e.to_string())?;
+        Ok((writer, reader))
+    }
+
+    /// Reader thread: everything the node says becomes a [`NodeEvent`].
+    /// The thread exits after reporting EOF or any damage — a damaged
+    /// stream has lost framing and cannot be resynchronised.
+    fn spawn_reader(&mut self, i: usize, mut reader: BufReader<TcpStream>) {
+        let tx = self.tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("dist-coord-reader-{i}"))
+            .spawn(move || loop {
+                let ev = match wire::recv_mixed(&mut reader) {
+                    Ok(Incoming::Frame { kind, payload }) if kind == KIND_DELTA => {
+                        match DeltaMsg::decode(&payload) {
+                            Ok(msg) => Ev::Delta(msg),
+                            Err(e) => Ev::Bad(format!("bad delta frame: {e}")),
+                        }
+                    }
+                    Ok(Incoming::Frame { kind, .. }) => {
+                        Ev::Bad(format!("unexpected frame kind {kind} from worker"))
+                    }
+                    Ok(Incoming::Line(line)) => match Json::parse(&line) {
+                        Ok(msg) => match msg.get("cmd").and_then(Json::as_str) {
+                            Some("pong") => Ev::Pong,
+                            Some(other) => Ev::Bad(format!("unexpected command {other:?}")),
+                            None => Ev::Bad(format!("line without cmd: {line}")),
+                        },
+                        Err(e) => Ev::Bad(format!("unparseable line: {e}")),
+                    },
+                    Ok(Incoming::Eof) => Ev::Eof,
+                    Err(e) => Ev::Bad(e.to_string()),
+                };
+                let fatal = matches!(ev, Ev::Eof | Ev::Bad(_));
+                if tx.send(NodeEvent { node: i, ev }).is_err() || fatal {
+                    break;
+                }
+            })
+            .expect("spawn coordinator reader thread");
+        self.nodes[i].reader = Some(handle);
+    }
+
+    /// Declare node `i` dead: close its socket (which unblocks its
+    /// reader) and drop the writer. The reader handle is detached here
+    /// and joined at shutdown.
+    fn kill_node(&mut self, i: usize) {
+        if let Some(w) = self.nodes[i].writer.take() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        self.nodes[i].busy = 0;
+    }
+
+    /// Round-robin over live nodes in index order. Deterministic given
+    /// the failure sequence: with no faults, ticket `t` lands on live
+    /// node `t mod live_count`.
+    fn pick_node(&self, rr: &mut usize) -> Option<usize> {
+        let live: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].writer.is_some())
+            .collect();
+        if live.is_empty() {
+            return None;
+        }
+        let n = live[*rr % live.len()];
+        *rr += 1;
+        Some(n)
+    }
+
+    /// Write one task frame to a node, honouring the `dist.send`
+    /// failpoint. On any failure the caller must bury the node.
+    fn send_task(&mut self, node: usize, sweep: u64, msg: &TaskMsg) -> Result<(), String> {
+        let payload = msg.encode();
+        let w = self.nodes[node]
+            .writer
+            .as_mut()
+            .ok_or_else(|| "node is dead".to_string())?;
+        match fault::fire(
+            fault::sites::DIST_SEND,
+            [node as u64, sweep, msg.ticket as u64],
+        ) {
+            Some(FaultKind::TornWrite) => {
+                // Write a believable prefix — magic + kind + a length
+                // that promises more than will ever come — then hang up.
+                // The worker sees Truncated, the coordinator a dead node.
+                let mut head = Vec::with_capacity(wire::HEADER);
+                head.extend_from_slice(&wire::MAGIC);
+                head.push(KIND_TASK);
+                head.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                let _ = w.write_all(&head[..wire::HEADER.min(head.len())]);
+                let _ = w.flush();
+                return Err(format!(
+                    "injected torn write to node {node} (sweep {sweep}, ticket {})",
+                    msg.ticket
+                ));
+            }
+            Some(_) => {
+                return Err(format!(
+                    "injected send fault to node {node} (sweep {sweep}, ticket {})",
+                    msg.ticket
+                ));
+            }
+            None => {}
+        }
+        send_frame(w, KIND_TASK, &payload).map_err(|e| e.to_string())
+    }
+
+    /// Ping every live node. A failed ping write buries the node and
+    /// returns its index so the caller can requeue its flights.
+    fn ping_all(&mut self) -> Vec<usize> {
+        let mut died = Vec::new();
+        self.ping_seq += 1;
+        let seq = self.ping_seq;
+        for i in 0..self.nodes.len() {
+            let Some(w) = self.nodes[i].writer.as_mut() else {
+                continue;
+            };
+            let mut ping = Json::obj();
+            ping.set("cmd", "ping");
+            ping.set("seq", seq);
+            if send_line(w, &ping).is_err() {
+                died.push(i);
+            }
+        }
+        for &i in &died {
+            self.kill_node(i);
+        }
+        self.pings += 1;
+        died
+    }
+
+    /// Run one ticket on the coordinator itself — the degraded mode
+    /// when every worker is gone. Same `pool::run_task`, same RNG key,
+    /// so the result is bit-identical to a remote execution.
+    fn run_local(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        partition: u64,
+        block: &mut TokenBlock,
+        delta: &mut [i64],
+    ) -> u64 {
+        let kern = match &mut self.local_kernel {
+            Some(k) if k.kind() == spec.kernel => k,
+            slot => slot.insert(spec.kernel.build()),
+        };
+        self.local_tasks += 1;
+        pool::run_task(spec, partition, block, delta, kern.as_mut())
+    }
+
+    /// EWMA update for a node's task-time estimate (α = 0.25).
+    fn observe_nanos(&mut self, node: usize, nanos: u64) {
+        let e = &mut self.nodes[node].ewma_nanos;
+        *e = if *e <= 0.0 {
+            nanos as f64
+        } else {
+            0.75 * *e + 0.25 * nanos as f64
+        };
+    }
+
+    /// The epoch driver shared by the barrier and ticketed paths: the
+    /// ticketed path passes `overlap`/`commit`, the barrier path runs
+    /// with both `None` and simply leaves results in `deltas`/`blocks`.
+    fn drive_epoch(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        tasks: EpochTasks<'_>,
+        deltas: &mut [Vec<i64>],
+        mut overlap: Option<&mut dyn FnMut()>,
+        mut commit: Option<&mut dyn FnMut(usize, &[i64], usize)>,
+    ) {
+        pool::check_tasks(&tasks, deltas);
+        let EpochTasks {
+            blocks,
+            ids,
+            assign: _,
+            nanos,
+            worker_nanos,
+            steal: _,
+        } = tasks;
+        let n = blocks.len();
+        for x in nanos.iter_mut() {
+            *x = 0;
+        }
+        for x in worker_nanos.iter_mut() {
+            *x = 0;
+        }
+        if n == 0 {
+            if let Some(ov) = overlap.as_mut() {
+                ov();
+            }
+            return;
+        }
+
+        // Epoch-start housekeeping: one reconnect attempt per dead node
+        // while its budget lasts, then reset the liveness clocks — time
+        // spent between epochs (perplexity, checkpoints) must not count
+        // against the workers.
+        for i in 0..self.nodes.len() {
+            if self.nodes[i].writer.is_none() && self.nodes[i].reconnects_left > 0 {
+                self.nodes[i].reconnects_left -= 1;
+                if let Some(h) = self.nodes[i].reader.take() {
+                    let _ = h.join();
+                }
+                let _ = self.connect_node(i, 1);
+            }
+        }
+        let now = Instant::now();
+        for node in &mut self.nodes {
+            node.last_seen = now;
+            node.busy = 0;
+        }
+        // Drain stale events from buried connections of past epochs.
+        while self.rx.try_recv().is_ok() {}
+
+        let mut flights: Vec<Option<Flight>> = (0..n).map(|_| None).collect();
+        let mut ticket_ids: Vec<Option<TicketIds>> = (0..n).map(|_| None).collect();
+        let mut completed = vec![false; n];
+        let mut done = 0usize;
+        let mut watermark = 0usize;
+        let mut rr = 0usize;
+        let mut queue: VecDeque<usize> = (0..n).collect();
+        let mut overlap_pending = true;
+
+        let hb = Duration::from_millis(self.opts.heartbeat_ms.max(1));
+        let liveness = Duration::from_millis(self.opts.liveness_timeout_ms.max(1));
+        let tick = Duration::from_millis(self.opts.heartbeat_ms.clamp(1, 20));
+        let mut last_ping = Instant::now();
+
+        while done < n {
+            // Phase 1: (re)dispatch everything queued. A send failure
+            // buries the node and requeues its whole in-flight set.
+            while let Some(t) = queue.pop_front() {
+                if completed[t] {
+                    continue;
+                }
+                match self.pick_node(&mut rr) {
+                    Some(node) => {
+                        let (msg, tids) = build_task(spec, t, ids[t], &blocks[t]);
+                        if ticket_ids[t].is_none() {
+                            ticket_ids[t] = Some(tids);
+                        }
+                        match self.send_task(node, spec.sweep as u64, &msg) {
+                            Ok(()) => {
+                                self.nodes[node].busy += 1;
+                                flights[t] = Some(Flight {
+                                    node,
+                                    spec_node: None,
+                                    sent_at: Instant::now(),
+                                    speculated: false,
+                                });
+                            }
+                            Err(_) => {
+                                self.kill_node(node);
+                                self.reassigns += 1;
+                                pool::trace_instant(spec, 0, EventKind::Retry, t, ids[t], 1);
+                                requeue_node(node, &mut flights, &mut queue, &mut self.reassigns, spec, ids);
+                                queue.push_front(t);
+                            }
+                        }
+                    }
+                    None => {
+                        // No live workers: degraded local execution.
+                        let dt = self.run_local(spec, ids[t], &mut blocks[t], &mut deltas[t]);
+                        nanos[t] = dt;
+                        worker_nanos[0] += dt;
+                        pool::trace_task(spec, 0, t, ids[t], dt, false);
+                        completed[t] = true;
+                        done += 1;
+                        flights[t] = None;
+                        advance_watermark(&mut commit, &mut watermark, &completed, deltas, done, n);
+                    }
+                }
+            }
+            if overlap_pending {
+                // First full dispatch is out: the coordinator's own
+                // shadow work (snapshot rebuilds etc.) overlaps with
+                // remote sampling, mirroring the in-process executors.
+                overlap_pending = false;
+                if let Some(ov) = overlap.as_mut() {
+                    ov();
+                }
+            }
+            if done >= n {
+                break;
+            }
+
+            // Phase 2: wait for worker events, with a heartbeat tick.
+            match self.rx.recv_timeout(tick) {
+                Ok(NodeEvent { node, ev }) => match ev {
+                    Ev::Delta(msg) => {
+                        self.nodes[node].last_seen = Instant::now();
+                        let t = msg.ticket as usize;
+                        if let Some(kind) = fault::fire(
+                            fault::sites::DIST_RECV,
+                            [node as u64, spec.sweep as u64, msg.ticket as u64],
+                        ) {
+                            let _ = kind;
+                            self.kill_node(node);
+                            requeue_node(node, &mut flights, &mut queue, &mut self.reassigns, spec, ids);
+                            continue;
+                        }
+                        if t >= n || completed[t] {
+                            continue; // speculation loser or stale replay
+                        }
+                        let Some(tids) = ticket_ids[t].as_ref() else {
+                            continue;
+                        };
+                        if let Err(detail) = apply_delta(
+                            spec, &msg, ids[t], tids, &mut blocks[t], &mut deltas[t],
+                        ) {
+                            // The frame decoded but its shape is wrong —
+                            // a protocol bug or silent corruption. Treat
+                            // the node as compromised.
+                            let _ = detail;
+                            self.kill_node(node);
+                            requeue_node(node, &mut flights, &mut queue, &mut self.reassigns, spec, ids);
+                            continue;
+                        }
+                        nanos[t] = msg.nanos;
+                        worker_nanos[node % worker_nanos.len()] += msg.nanos;
+                        self.observe_nanos(node, msg.nanos);
+                        pool::trace_task(spec, node, t, ids[t], msg.nanos, false);
+                        if let Some(f) = flights[t].take() {
+                            self.nodes[f.node].busy = self.nodes[f.node].busy.saturating_sub(1);
+                            if let Some(s) = f.spec_node {
+                                self.nodes[s].busy = self.nodes[s].busy.saturating_sub(1);
+                            }
+                        }
+                        completed[t] = true;
+                        done += 1;
+                        advance_watermark(&mut commit, &mut watermark, &completed, deltas, done, n);
+                    }
+                    Ev::Pong => {
+                        self.nodes[node].last_seen = Instant::now();
+                    }
+                    Ev::Eof | Ev::Bad(_) => {
+                        if self.nodes[node].writer.is_some() {
+                            self.kill_node(node);
+                            requeue_node(node, &mut flights, &mut queue, &mut self.reassigns, spec, ids);
+                        }
+                    }
+                },
+                Err(RecvTimeoutError::Timeout) => {
+                    let now = Instant::now();
+                    if now.duration_since(last_ping) >= hb {
+                        last_ping = now;
+                        for node in self.ping_all() {
+                            requeue_node(node, &mut flights, &mut queue, &mut self.reassigns, spec, ids);
+                        }
+                    }
+                    // Liveness: only nodes holding work are on the
+                    // clock; an idle frozen node is caught at next send.
+                    for i in 0..self.nodes.len() {
+                        let stale = self.nodes[i].writer.is_some()
+                            && self.nodes[i].busy > 0
+                            && now.duration_since(self.nodes[i].last_seen) > liveness;
+                        if stale {
+                            self.kill_node(i);
+                            requeue_node(i, &mut flights, &mut queue, &mut self.reassigns, spec, ids);
+                        }
+                    }
+                    self.maybe_speculate(spec, ids, blocks, &mut flights, &completed, now);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    unreachable!("coordinator holds a sender; channel cannot disconnect")
+                }
+            }
+        }
+    }
+
+    /// Duplicate suspected stragglers onto idle nodes. First reply
+    /// wins; the duplicate is harmless because deltas are absolute.
+    fn maybe_speculate(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        ids: &[u64],
+        blocks: &[TokenBlock],
+        flights: &mut [Option<Flight>],
+        completed: &[bool],
+        now: Instant,
+    ) {
+        if !self.opts.spec_factor.is_finite() {
+            return;
+        }
+        for t in 0..flights.len() {
+            if completed[t] {
+                continue;
+            }
+            let Some(f) = &flights[t] else { continue };
+            if f.speculated {
+                continue;
+            }
+            let est = self.nodes[f.node].ewma_nanos;
+            if est <= 0.0 {
+                continue;
+            }
+            let elapsed = now.duration_since(f.sent_at).as_nanos() as f64;
+            if elapsed < self.opts.spec_factor * est {
+                continue;
+            }
+            let owner = f.node;
+            let Some(idle) = (0..self.nodes.len())
+                .find(|&i| i != owner && self.nodes[i].writer.is_some() && self.nodes[i].busy == 0)
+            else {
+                continue;
+            };
+            let (msg, _) = build_task(spec, t, ids[t], &blocks[t]);
+            if self.send_task(idle, spec.sweep as u64, &msg).is_ok() {
+                self.nodes[idle].busy += 1;
+                self.speculations += 1;
+                let f = flights[t].as_mut().expect("flight checked above");
+                f.speculated = true;
+                f.spec_node = Some(idle);
+            } else {
+                self.kill_node(idle);
+                // The idle node held nothing in flight; nothing to requeue.
+            }
+        }
+    }
+}
+
+impl Executor for DistExec {
+    fn run_epoch(&mut self, spec: &EpochSpec<'_>, tasks: EpochTasks<'_>, deltas: &mut [Vec<i64>]) {
+        self.drive_epoch(spec, tasks, deltas, None, None);
+    }
+
+    fn run_epoch_ticketed(
+        &mut self,
+        spec: &EpochSpec<'_>,
+        tasks: EpochTasks<'_>,
+        deltas: &mut [Vec<i64>],
+        overlap: &mut dyn FnMut(),
+        commit: &mut dyn FnMut(usize, &[i64], usize),
+    ) {
+        self.drive_epoch(spec, tasks, deltas, Some(overlap), Some(commit));
+    }
+
+    fn retries(&self) -> u64 {
+        self.reassigns
+    }
+}
+
+impl Drop for DistExec {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Requeue every ticket whose primary copy sits on a now-dead node.
+/// Each requeued ticket is one *reassign*. Tickets whose only copy on
+/// the dead node was speculative keep their primary flight.
+fn requeue_node(
+    node: usize,
+    flights: &mut [Option<Flight>],
+    queue: &mut VecDeque<usize>,
+    reassigns: &mut u64,
+    spec: &EpochSpec<'_>,
+    ids: &[u64],
+) {
+    for t in 0..flights.len() {
+        let requeue = match &flights[t] {
+            Some(f) if f.node == node => true,
+            _ => false,
+        };
+        if requeue {
+            flights[t] = None;
+            queue.push_back(t);
+            *reassigns += 1;
+            pool::trace_instant(spec, node, EventKind::Retry, t, ids[t], 1);
+        } else if let Some(f) = flights[t].as_mut() {
+            if f.spec_node == Some(node) {
+                f.spec_node = None;
+            }
+        }
+    }
+}
+
+/// Commit every contiguous completed ticket at the watermark (ticketed
+/// mode only). `in_flight` mirrors the in-process executors: tasks not
+/// yet finished at the instant this commit runs.
+fn advance_watermark(
+    commit: &mut Option<&mut dyn FnMut(usize, &[i64], usize)>,
+    watermark: &mut usize,
+    completed: &[bool],
+    deltas: &[Vec<i64>],
+    done: usize,
+    n: usize,
+) {
+    let Some(cb) = commit.as_mut() else { return };
+    while *watermark < n && completed[*watermark] {
+        cb(*watermark, &deltas[*watermark], n - done);
+        *watermark += 1;
+    }
+}
+
+/// Build the self-contained wire task for ticket `t`: gather the block's
+/// touched doc/word rows by id, remap the block's global ids onto the
+/// gathered (sorted-unique) lists, and serialise the block as a
+/// checksummed `PPSHARD3` image stamped with its partition id.
+fn build_task(
+    spec: &EpochSpec<'_>,
+    ticket: usize,
+    partition: u64,
+    block: &TokenBlock,
+) -> (TaskMsg, TicketIds) {
+    let mut doc_ids: Vec<u64> = block.docs.iter().map(|&d| d as u64).collect();
+    doc_ids.sort_unstable();
+    doc_ids.dedup();
+    let mut emit_ids: Vec<u64> = block.words.iter().map(|&w| w as u64).collect();
+    emit_ids.sort_unstable();
+    emit_ids.dedup();
+    let doc_rows = gather_rows(&spec.doc, &doc_ids);
+    let emit_rows = gather_rows(&spec.emit, &emit_ids);
+    let mut local = TokenBlock::with_capacity(block.len());
+    for &d in &block.docs {
+        let j = doc_ids
+            .binary_search(&(d as u64))
+            .expect("doc id came from this block");
+        local.docs.push(j as u32);
+    }
+    for &w in &block.words {
+        let j = emit_ids
+            .binary_search(&(w as u64))
+            .expect("word id came from this block");
+        local.words.push(j as u32);
+    }
+    local.z.extend_from_slice(&block.z);
+    let image = crate::corpus::shard::encode_block(&local, partition);
+    let msg = TaskMsg {
+        ticket: ticket as u32,
+        epoch: spec.obs.epoch,
+        sweep: spec.sweep as u64,
+        partition,
+        family: spec.obs.family,
+        kernel: spec.kernel,
+        k: spec.h.k as u32,
+        alpha: spec.h.alpha,
+        beta: spec.h.beta,
+        wbeta: spec.h.wbeta,
+        seed: spec.seed,
+        snapshot: spec.snapshot.to_vec(),
+        doc_ids: doc_ids.clone(),
+        doc_rows,
+        emit_ids: emit_ids.clone(),
+        emit_rows,
+        block: image,
+    };
+    (
+        msg,
+        TicketIds {
+            doc: doc_ids,
+            emit: emit_ids,
+        },
+    )
+}
+
+/// Copy the rows named by `ids` out of the shared matrix, in id order.
+fn gather_rows(shared: &SharedRows<'_>, row_ids: &[u64]) -> Vec<f32> {
+    let k = shared.k();
+    let mut out = Vec::with_capacity(row_ids.len() * k);
+    for &id in row_ids {
+        debug_assert!((id as usize) < shared.rows());
+        // SAFETY: the coordinator is the only writer of these rows
+        // while the epoch is in flight (task rows are disjoint by the
+        // diagonal-schedule invariant), and `id` indexes a row of this
+        // matrix because it came from a scheduled block.
+        unsafe {
+            let p = shared.row_ptr(id as usize);
+            out.extend_from_slice(std::slice::from_raw_parts(p, k));
+        }
+    }
+    out
+}
+
+/// Scatter a worker's absolute result rows back into the shared
+/// matrices, and take its z assignments and count delta. Validates
+/// every length against the coordinator's own records first, so a
+/// malformed (but checksum-clean) reply cannot write out of bounds.
+fn apply_delta(
+    spec: &EpochSpec<'_>,
+    msg: &DeltaMsg,
+    partition: u64,
+    tids: &TicketIds,
+    block: &mut TokenBlock,
+    delta: &mut [i64],
+) -> Result<(), String> {
+    if msg.partition != partition {
+        return Err(format!(
+            "delta for partition {} on a ticket scheduled as {partition}",
+            msg.partition
+        ));
+    }
+    let k = spec.h.k;
+    if msg.delta.len() != k || delta.len() != k {
+        return Err(format!("delta length {} != k {k}", msg.delta.len()));
+    }
+    if msg.doc_rows.len() != tids.doc.len() * k {
+        return Err(format!(
+            "doc rows {} != {} ids x {k}",
+            msg.doc_rows.len(),
+            tids.doc.len()
+        ));
+    }
+    if msg.emit_rows.len() != tids.emit.len() * k {
+        return Err(format!(
+            "emit rows {} != {} ids x {k}",
+            msg.emit_rows.len(),
+            tids.emit.len()
+        ));
+    }
+    if msg.z.len() != block.z.len() {
+        return Err(format!(
+            "z length {} != block length {}",
+            msg.z.len(),
+            block.z.len()
+        ));
+    }
+    scatter_rows(&spec.doc, &tids.doc, &msg.doc_rows)?;
+    scatter_rows(&spec.emit, &tids.emit, &msg.emit_rows)?;
+    block.z.copy_from_slice(&msg.z);
+    delta.copy_from_slice(&msg.delta);
+    Ok(())
+}
+
+/// Write absolute rows back by id — the inverse of [`gather_rows`].
+fn scatter_rows(shared: &SharedRows<'_>, row_ids: &[u64], rows: &[f32]) -> Result<(), String> {
+    let k = shared.k();
+    if rows.len() != row_ids.len() * k {
+        return Err("row payload length mismatch".into());
+    }
+    for (j, &id) in row_ids.iter().enumerate() {
+        if id as usize >= shared.rows() {
+            return Err(format!("row id {id} out of range ({})", shared.rows()));
+        }
+        // SAFETY: same exclusivity argument as [`gather_rows`]; bounds
+        // checked just above. Absolute values make re-application (a
+        // speculative duplicate, a replay) idempotent.
+        unsafe {
+            let dst = shared.row_ptr(id as usize);
+            std::ptr::copy_nonoverlapping(rows.as_ptr().add(j * k), dst, k);
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic exponential backoff with a node-keyed jitter, so a
+/// fleet of coordinators retrying a shared worker does not thundering-
+/// herd it. Attempt 1 → ~10ms, doubling, capped near 640ms.
+fn backoff_ms(node: u64, attempt: u32) -> u64 {
+    let base = 10u64 << (attempt - 1).min(6);
+    let mut x = node
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(attempt as u64);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    base + x % base.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_stays_bounded() {
+        let mut prev_base = 0;
+        for attempt in 1..10 {
+            let d = backoff_ms(3, attempt);
+            let base = 10u64 << (attempt - 1).min(6);
+            assert!(d >= base && d < 2 * base, "attempt {attempt}: {d}");
+            assert!(base >= prev_base);
+            prev_base = base;
+        }
+        // Node-keyed jitter: two nodes retrying in lockstep spread out.
+        assert_ne!(backoff_ms(0, 3), backoff_ms(1, 3));
+    }
+
+    #[test]
+    fn default_options_are_sane() {
+        let o = DistOptions::default();
+        assert!(o.heartbeat_ms < o.liveness_timeout_ms);
+        assert!(o.spec_factor > 1.0);
+        assert!(o.connect_attempts >= 1 && o.max_reconnects >= 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Distributed multi-process training: a coordinator process drives
+//! `pplda worker` processes over TCP, with heartbeats, deterministic
+//! shard reassignment, and bit-identical crash recovery.
+//!
+//! The split follows the paper's data-parallel structure: partitioning
+//! already makes epoch tasks independent (disjoint doc/word rows), so
+//! the only state a worker needs is the task itself. That keeps workers
+//! stateless and makes every fault-handling policy — reassignment,
+//! speculation, local fallback — a pure re-execution of the same
+//! `(sweep, partition)` RNG stream over the same input block, which is
+//! how distributed runs stay bit-identical to a single process
+//! (`docs/distributed.md` states the full contract).
+//!
+//! * [`wire`] — the two-plane protocol: JSON-lines control messages
+//!   (hello/ping/pong/shutdown, shared with [`crate::util::net`]) and
+//!   CRC-framed binary task/delta frames.
+//! * [`worker`] — the worker process: accept loop, heartbeat responder,
+//!   task execution through the same [`crate::scheduler::pool::run_task`]
+//!   the in-process executors use.
+//! * [`coordinator`] — [`DistExec`], the [`Executor`] that ships epochs
+//!   to workers; failure detection and recovery live here.
+//!
+//! [`Executor`]: crate::scheduler::pool::Executor
+
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{DistExec, DistOptions, NodeError};
+pub use worker::{serve_on, serve_worker, WorkerOptions};
+
+use std::io;
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::checkpoint::{self, Manifest};
+use crate::coordinator::TrainConfig;
+use crate::corpus::BagOfWords;
+use crate::obs::trace::Tracer;
+use crate::partition::Plan;
+use crate::scheduler::exec::ParallelLda;
+use crate::util::interrupt;
+
+/// Parse a workers file: one `host:port` per line, `#` comments and
+/// blank lines ignored. Node index == line order, and determines both
+/// the worker's trace lane and its failpoint key.
+pub fn parse_workers_file(path: &Path) -> io::Result<Vec<SocketAddr>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let addr = line
+            .to_socket_addrs()
+            .map_err(|e| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("{}:{}: bad worker address {line:?}: {e}", path.display(), lineno + 1),
+                )
+            })?
+            .next()
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("{}:{}: {line:?} resolved to nothing", path.display(), lineno + 1),
+                )
+            })?;
+        out.push(addr);
+    }
+    if out.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("{}: no worker addresses", path.display()),
+        ));
+    }
+    Ok(out)
+}
+
+/// What a distributed training run reports back to the CLI.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    /// Sweeps actually completed (< `cfg.iters` only when interrupted).
+    pub sweeps: usize,
+    /// `(sweep, perplexity)` evaluation curve.
+    pub curve: Vec<(usize, f64)>,
+    pub final_perplexity: f64,
+    pub train_secs: f64,
+    pub tokens_per_sec: f64,
+    /// Tasks re-dispatched after a node died.
+    pub reassigns: u64,
+    /// Speculative straggler duplicates dispatched.
+    pub speculations: u64,
+    /// Tasks the coordinator ran itself with no worker left.
+    pub local_fallbacks: u64,
+    /// Path of the final checkpoint, when one was requested.
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+/// Train LDA through a [`DistExec`]: the distributed counterpart of the
+/// single-process train loop. The model, schedule, and evaluation all
+/// live in this process; only epoch task execution is remote, so the
+/// resulting counts are bit-identical to `--mode sequential` over the
+/// same `(corpus, plan, seed)` — faults included.
+pub fn train_lda_dist(
+    bow: &BagOfWords,
+    plan: &Plan,
+    cfg: &TrainConfig,
+    exec: &mut DistExec,
+    tracer: Option<&Arc<Tracer>>,
+    checkpoint_dir: Option<&Path>,
+) -> DistReport {
+    let mut lda = ParallelLda::init_scheduled(
+        bow,
+        plan,
+        cfg.topics,
+        cfg.alpha,
+        cfg.beta,
+        cfg.seed,
+        cfg.schedule,
+        cfg.resolved_workers(plan.p),
+    );
+    lda.set_kernel(cfg.kernel);
+    lda.set_balance(cfg.balance);
+    lda.set_commit(cfg.commit);
+    if let Some(tr) = tracer {
+        lda.set_tracer(Some(tr.clone()));
+    }
+    let t0 = Instant::now();
+    let mut curve = Vec::new();
+    for s in 0..cfg.iters {
+        lda.sweep_with(exec);
+        if cfg.eval_every > 0 && (s + 1) % cfg.eval_every == 0 && s + 1 < cfg.iters {
+            curve.push((s + 1, lda.perplexity(bow)));
+        }
+        if interrupt::requested() {
+            break;
+        }
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+    let sweeps = lda.sweeps_done();
+    let final_perplexity = lda.perplexity(bow);
+    curve.push((sweeps, final_perplexity));
+    let checkpoint = checkpoint_dir.map(|dir| {
+        let manifest = Manifest::lda(bow, plan, cfg, sweeps);
+        checkpoint::write_lda(&lda, &manifest, dir).expect("write final checkpoint")
+    });
+    DistReport {
+        sweeps,
+        curve,
+        final_perplexity,
+        train_secs,
+        tokens_per_sec: if train_secs > 0.0 {
+            bow.num_tokens() as f64 * sweeps as f64 / train_secs
+        } else {
+            0.0
+        },
+        reassigns: exec.reassigns(),
+        speculations: exec.speculations(),
+        local_fallbacks: exec.local_fallbacks(),
+        checkpoint,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_file_parses_addresses_comments_and_blanks() {
+        let dir = std::env::temp_dir().join(format!("pplda-workers-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("workers.txt");
+        std::fs::write(
+            &path,
+            "# fleet\n127.0.0.1:7001\n\n127.0.0.1:7002   # second box\n",
+        )
+        .unwrap();
+        let addrs = parse_workers_file(&path).unwrap();
+        assert_eq!(addrs.len(), 2);
+        assert_eq!(addrs[0].port(), 7001);
+        assert_eq!(addrs[1].port(), 7002);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn workers_file_rejects_garbage_and_empty() {
+        let dir = std::env::temp_dir().join(format!("pplda-workers-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.txt");
+        std::fs::write(&bad, "not-an-address\n").unwrap();
+        assert!(parse_workers_file(&bad).is_err());
+        let empty = dir.join("empty.txt");
+        std::fs::write(&empty, "# only comments\n\n").unwrap();
+        assert!(parse_workers_file(&empty).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

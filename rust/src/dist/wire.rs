@@ -1,0 +1,746 @@
+//! The distributed wire protocol: CRC-framed binary data plane.
+//!
+//! One TCP stream per worker carries two interleaved planes:
+//!
+//! - **Control plane** — newline-delimited JSON (hello/ping/pong/
+//!   shutdown/err), sharing the line primitives in [`crate::util::net`]
+//!   with the serve protocol. A control line always starts with `{`.
+//! - **Data plane** — binary frames for task payloads and count deltas.
+//!   A frame starts with the magic `PPW1`, so a reader can sniff the
+//!   first byte of the stream and parse either plane ([`recv_mixed`]).
+//!
+//! # Frame layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"PPW1"
+//! 4       1     kind   (1 = task, 2 = delta)
+//! 5       4     payload length, u32 LE
+//! 9       4     crc32(payload), u32 LE
+//! 13      len   payload
+//! ```
+//!
+//! Every defect a hostile or failing transport can produce — torn
+//! header, torn payload, flipped bit, wrong magic, absurd length —
+//! surfaces as a typed [`WireError`], never a panic and never a
+//! silently wrong message: the frame CRC covers the whole payload, and
+//! the task payload's embedded token block is additionally a complete
+//! checksummed `PPSHARD3` image ([`crate::corpus::shard`]), so a
+//! partition crosses the network under exactly the integrity checks it
+//! crosses the spill store with.
+//!
+//! # Payloads
+//!
+//! All integers little-endian. [`TaskMsg`]: the full closure of one
+//! task — hyperparameters, pre-salted RNG seed, topic-total snapshot,
+//! the doc/emit count rows the task touches (with their global row
+//! ids), and the token block with doc/word ids *remapped to local row
+//! indices* (kernels use ids only as row indices, so the worker's
+//! compact matrices behave identically to the coordinator's full ones).
+//! [`DeltaMsg`]: the task's signed topic-total delta plus the
+//! *absolute* updated rows and `z` — absolute so that a duplicate
+//! delivery (speculative re-execution, retransmit) is idempotent under
+//! the coordinator's first-ticket-wins dedup.
+
+use crate::corpus::shard;
+use crate::gibbs::tokens::TokenBlock;
+use crate::kernel::KernelKind;
+use crate::util::crc::crc32;
+use std::io::{self, BufRead, Read, Write};
+use std::path::Path;
+
+/// Frame magic. First byte (`P`) differs from `{`, which is what lets
+/// [`recv_mixed`] sniff the plane.
+pub const MAGIC: [u8; 4] = *b"PPW1";
+/// Frame header bytes: magic + kind + len + crc.
+pub const HEADER: usize = 13;
+/// Largest accepted payload (1 GiB). A declared length beyond this is
+/// reported as [`WireError::TooLarge`] instead of attempted — a flipped
+/// length byte must not look like an allocation request.
+pub const MAX_FRAME: u32 = 1 << 30;
+/// Frame kind: coordinator → worker task payload.
+pub const KIND_TASK: u8 = 1;
+/// Frame kind: worker → coordinator delta payload.
+pub const KIND_DELTA: u8 = 2;
+
+/// Typed failure taxonomy of the wire layer. Everything the transport
+/// or a corrupt peer can do lands here; nothing in this module panics
+/// on malformed input.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport failure (includes read timeouts — classify with
+    /// [`crate::util::net::is_timeout`]).
+    Io(io::Error),
+    /// Frame did not start with [`MAGIC`] — the stream is unsynced.
+    BadMagic([u8; 4]),
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// Declared payload length exceeds [`MAX_FRAME`].
+    TooLarge(u64),
+    /// Stream ended mid-header or mid-payload (torn frame).
+    Truncated { want: usize, got: usize },
+    /// An integrity check failed: `kind` names the failing layer
+    /// ("frame" CRC, "block" image, payload "layout").
+    Corrupt { kind: &'static str, detail: String },
+    /// Structurally valid bytes that violate the protocol (unexpected
+    /// message, inconsistent counts).
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::TooLarge(n) => write!(f, "frame payload of {n} bytes exceeds cap"),
+            WireError::Truncated { want, got } => {
+                write!(f, "torn frame: wanted {want} bytes, stream ended at {got}")
+            }
+            WireError::Corrupt { kind, detail } => write!(f, "corrupt {kind}: {detail}"),
+            WireError::Protocol(d) => write!(f, "protocol violation: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// One unit read off the mixed stream.
+#[derive(Debug)]
+pub enum Incoming {
+    /// A control-plane JSON line (already newline-stripped, unparsed).
+    Line(String),
+    /// A CRC-verified data-plane frame.
+    Frame { kind: u8, payload: Vec<u8> },
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Write one frame: header ([`MAGIC`], kind, length, payload CRC) then
+/// the payload, flushed.
+pub fn send_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let mut head = [0u8; HEADER];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4] = kind;
+    head[5..9].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[9..13].copy_from_slice(&crc32(payload).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read the next unit off the mixed stream: sniff the first available
+/// byte — `{` starts a JSON control line, anything else must be a
+/// binary frame (whose magic check then catches unsynced garbage).
+pub fn recv_mixed<R: BufRead>(r: &mut R) -> Result<Incoming, WireError> {
+    let first = {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(Incoming::Eof);
+        }
+        buf[0]
+    };
+    if first == b'{' {
+        let mut line = String::new();
+        if !crate::util::net::recv_line(r, &mut line)? {
+            return Ok(Incoming::Eof);
+        }
+        Ok(Incoming::Line(line))
+    } else {
+        recv_frame(r)
+    }
+}
+
+/// Read one binary frame (header + CRC-verified payload). A stream that
+/// ends mid-frame yields [`WireError::Truncated`]; a payload whose CRC
+/// does not match its header yields [`WireError::Corrupt`].
+pub fn recv_frame<R: Read>(r: &mut R) -> Result<Incoming, WireError> {
+    let mut head = [0u8; HEADER];
+    read_full(r, &mut head)?;
+    if head[..4] != MAGIC {
+        return Err(WireError::BadMagic([head[0], head[1], head[2], head[3]]));
+    }
+    let kind = head[4];
+    if kind != KIND_TASK && kind != KIND_DELTA {
+        return Err(WireError::BadKind(kind));
+    }
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]);
+    if len > MAX_FRAME {
+        return Err(WireError::TooLarge(len as u64));
+    }
+    let want = u32::from_le_bytes([head[9], head[10], head[11], head[12]]);
+    let mut payload = vec![0u8; len as usize];
+    read_full(r, &mut payload)?;
+    let got = crc32(&payload);
+    if got != want {
+        return Err(WireError::Corrupt {
+            kind: "frame",
+            detail: format!("payload crc {got:#010x} != header {want:#010x}"),
+        });
+    }
+    Ok(Incoming::Frame { kind, payload })
+}
+
+/// `read_exact` that reports *how far* a torn stream got (and retries
+/// `Interrupted`), so truncation diagnostics carry real byte counts.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Err(WireError::Truncated { want: buf.len(), got }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Stable u8 code for a kernel kind (index into [`KernelKind::all`]).
+pub fn kernel_code(kind: KernelKind) -> u8 {
+    KernelKind::all()
+        .iter()
+        .position(|&k| k == kind)
+        .expect("every kind is in all()") as u8
+}
+
+/// Inverse of [`kernel_code`].
+pub fn kernel_from_code(code: u8) -> Option<KernelKind> {
+    KernelKind::all().get(code as usize).copied()
+}
+
+/// Coordinator → worker: one task's complete execution closure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskMsg {
+    /// Commit ticket (the task's index within its epoch).
+    pub ticket: u32,
+    /// Diagonal epoch within the sweep (trace coordinate).
+    pub epoch: u32,
+    pub sweep: u64,
+    /// Grid-global partition id — the RNG stream key.
+    pub partition: u64,
+    /// Phase family (0 = word, 1 = BoT stamp) — a trace coordinate.
+    pub family: u8,
+    pub kernel: KernelKind,
+    pub k: u32,
+    pub alpha: f32,
+    pub beta: f32,
+    pub wbeta: f32,
+    /// Pre-salted trainer/phase seed (see `scheduler::pool::task_rng`).
+    pub seed: u64,
+    /// Epoch-start topic totals (`k` entries).
+    pub snapshot: Vec<u32>,
+    /// Global row ids of the doc rows shipped in `doc_rows`, in the
+    /// order the rows are packed (the block's doc ids are remapped to
+    /// indices into this list).
+    pub doc_ids: Vec<u64>,
+    /// `doc_ids.len() * k` row-major counts.
+    pub doc_rows: Vec<f32>,
+    /// Global row ids of the emission-side rows (words, or BoT stamps).
+    pub emit_ids: Vec<u64>,
+    pub emit_rows: Vec<f32>,
+    /// A `PPSHARD3` image of the token block, ids remapped local,
+    /// stamped with the partition id.
+    pub block: Vec<u8>,
+}
+
+/// Worker → coordinator: one completed task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaMsg {
+    pub ticket: u32,
+    pub partition: u64,
+    /// Measured task nanos (telemetry; feeds the adaptive estimators
+    /// and the straggler EWMA, never results).
+    pub nanos: u64,
+    /// Signed topic-total delta (`k` entries).
+    pub delta: Vec<i64>,
+    /// Absolute updated doc rows, same order/shape as the task's
+    /// `doc_ids`/`doc_rows`.
+    pub doc_rows: Vec<f32>,
+    pub emit_rows: Vec<f32>,
+    /// The block's updated topic assignments.
+    pub z: Vec<u32>,
+}
+
+impl TaskMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            64 + 4 * self.snapshot.len()
+                + 12 * self.doc_ids.len()
+                + 4 * self.doc_rows.len()
+                + 12 * self.emit_ids.len()
+                + 4 * self.emit_rows.len()
+                + self.block.len(),
+        );
+        b.extend_from_slice(&self.ticket.to_le_bytes());
+        b.extend_from_slice(&self.epoch.to_le_bytes());
+        b.extend_from_slice(&self.sweep.to_le_bytes());
+        b.extend_from_slice(&self.partition.to_le_bytes());
+        b.push(self.family);
+        b.push(kernel_code(self.kernel));
+        b.extend_from_slice(&[0u8; 2]); // pad to 4-byte alignment of what follows
+        b.extend_from_slice(&self.k.to_le_bytes());
+        b.extend_from_slice(&self.alpha.to_le_bytes());
+        b.extend_from_slice(&self.beta.to_le_bytes());
+        b.extend_from_slice(&self.wbeta.to_le_bytes());
+        b.extend_from_slice(&self.seed.to_le_bytes());
+        put_u32s(&mut b, &self.snapshot);
+        put_u64s(&mut b, &self.doc_ids);
+        put_f32s(&mut b, &self.doc_rows);
+        put_u64s(&mut b, &self.emit_ids);
+        put_f32s(&mut b, &self.emit_rows);
+        b.extend_from_slice(&(self.block.len() as u64).to_le_bytes());
+        b.extend_from_slice(&self.block);
+        b
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<TaskMsg, WireError> {
+        let mut c = Cur::new(bytes);
+        let ticket = c.u32()?;
+        let epoch = c.u32()?;
+        let sweep = c.u64()?;
+        let partition = c.u64()?;
+        let family = c.u8()?;
+        let kernel = kernel_from_code(c.u8()?)
+            .ok_or_else(|| WireError::Protocol("unknown kernel code".into()))?;
+        c.take(2)?; // pad
+        let k = c.u32()?;
+        let alpha = c.f32()?;
+        let beta = c.f32()?;
+        let wbeta = c.f32()?;
+        let seed = c.u64()?;
+        let snapshot = c.u32s()?;
+        if snapshot.len() != k as usize {
+            return Err(WireError::Corrupt {
+                kind: "layout",
+                detail: format!("snapshot has {} entries for k={k}", snapshot.len()),
+            });
+        }
+        let doc_ids = c.u64s()?;
+        let doc_rows = c.f32s()?;
+        let emit_ids = c.u64s()?;
+        let emit_rows = c.f32s()?;
+        if doc_rows.len() != doc_ids.len() * k as usize
+            || emit_rows.len() != emit_ids.len() * k as usize
+        {
+            return Err(WireError::Corrupt {
+                kind: "layout",
+                detail: "row matrices do not match id counts".into(),
+            });
+        }
+        let block_len = c.u64()? as usize;
+        let block = c.take(block_len)?.to_vec();
+        c.done()?;
+        Ok(TaskMsg {
+            ticket,
+            epoch,
+            sweep,
+            partition,
+            family,
+            kernel,
+            k,
+            alpha,
+            beta,
+            wbeta,
+            seed,
+            snapshot,
+            doc_ids,
+            doc_rows,
+            emit_ids,
+            emit_rows,
+            block,
+        })
+    }
+
+    /// Decode and verify the embedded `PPSHARD3` block image. `origin`
+    /// labels integrity errors (e.g. `wire://node-2/part-7`).
+    pub fn decode_task_block(&self, origin: &Path) -> Result<TokenBlock, WireError> {
+        let (block, stamp) = shard::decode_block(&self.block, origin).map_err(|e| {
+            WireError::Corrupt { kind: "block", detail: e.to_string() }
+        })?;
+        if stamp != self.partition {
+            return Err(WireError::Corrupt {
+                kind: "block",
+                detail: format!("block stamped {stamp}, task is partition {}", self.partition),
+            });
+        }
+        Ok(block)
+    }
+}
+
+impl DeltaMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            40 + 8 * self.delta.len()
+                + 4 * (self.doc_rows.len() + self.emit_rows.len() + self.z.len()),
+        );
+        b.extend_from_slice(&self.ticket.to_le_bytes());
+        b.extend_from_slice(&self.partition.to_le_bytes());
+        b.extend_from_slice(&self.nanos.to_le_bytes());
+        b.extend_from_slice(&(self.delta.len() as u32).to_le_bytes());
+        for &d in &self.delta {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        put_f32s(&mut b, &self.doc_rows);
+        put_f32s(&mut b, &self.emit_rows);
+        put_u32s(&mut b, &self.z);
+        b
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<DeltaMsg, WireError> {
+        let mut c = Cur::new(bytes);
+        let ticket = c.u32()?;
+        let partition = c.u64()?;
+        let nanos = c.u64()?;
+        let n = c.u32()? as usize;
+        let raw = c.take(8 * n)?;
+        let mut delta = Vec::with_capacity(n);
+        for ch in raw.chunks_exact(8) {
+            let mut le = [0u8; 8];
+            le.copy_from_slice(ch);
+            delta.push(i64::from_le_bytes(le));
+        }
+        let doc_rows = c.f32s()?;
+        let emit_rows = c.f32s()?;
+        let z = c.u32s()?;
+        c.done()?;
+        Ok(DeltaMsg { ticket, partition, nanos, delta, doc_rows, emit_rows, z })
+    }
+}
+
+fn put_u32s(b: &mut Vec<u8>, v: &[u32]) {
+    b.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for &x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u64s(b: &mut Vec<u8>, v: &[u64]) {
+    b.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for &x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32s(b: &mut Vec<u8>, v: &[f32]) {
+    b.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for &x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian cursor. Every overrun is a typed
+/// [`WireError::Truncated`]; element counts are validated against the
+/// remaining byte budget *before* any allocation, so a corrupt count
+/// cannot request a huge buffer.
+struct Cur<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.b.len()).ok_or(
+            WireError::Truncated { want: self.at.saturating_add(n), got: self.b.len() },
+        )?;
+        let s = &self.b[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        let mut le = [0u8; 8];
+        le.copy_from_slice(s);
+        Ok(u64::from_le_bytes(le))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        Ok(self.u32s()?.into_iter().map(f32::from_bits).collect())
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(8 * n)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                let mut le = [0u8; 8];
+                le.copy_from_slice(c);
+                u64::from_le_bytes(le)
+            })
+            .collect())
+    }
+
+    /// Trailing garbage is a layout error, not silently ignored.
+    fn done(&self) -> Result<(), WireError> {
+        if self.at != self.b.len() {
+            return Err(WireError::Corrupt {
+                kind: "layout",
+                detail: format!("{} trailing bytes after payload", self.b.len() - self.at),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn random_delta(rng: &mut Rng) -> DeltaMsg {
+        let k = 1 + rng.gen_range(8);
+        let n_doc = rng.gen_range(4);
+        let n_emit = rng.gen_range(4);
+        let z_len = rng.gen_range(16);
+        DeltaMsg {
+            ticket: rng.gen_range(64) as u32,
+            partition: rng.gen_range(1 << 20) as u64,
+            nanos: rng.gen_range(1 << 30) as u64,
+            delta: (0..k).map(|_| rng.gen_range(2001) as i64 - 1000).collect(),
+            doc_rows: (0..n_doc * k).map(|_| rng.f64() as f32).collect(),
+            emit_rows: (0..n_emit * k).map(|_| rng.f64() as f32).collect(),
+            z: (0..z_len).map(|_| rng.gen_range(256) as u32).collect(),
+        }
+    }
+
+    fn framed(msg: &DeltaMsg) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        send_frame(&mut bytes, KIND_DELTA, &msg.encode()).unwrap();
+        bytes
+    }
+
+    /// Satellite: random deltas round-trip the frame + payload encoding
+    /// exactly (f32 bit patterns included — `PartialEq` on the structs
+    /// compares the decoded floats, and the generator only produces
+    /// non-NaN values).
+    #[test]
+    fn delta_frames_round_trip_exactly() {
+        prop::check("wire_delta_round_trip", 0xD157_0001, prop::DEFAULT_CASES, |rng| {
+            let msg = random_delta(rng);
+            let bytes = framed(&msg);
+            let mut r = io::BufReader::new(&bytes[..]);
+            match recv_mixed(&mut r).expect("clean frame decodes") {
+                Incoming::Frame { kind, payload } => {
+                    assert_eq!(kind, KIND_DELTA);
+                    let back = DeltaMsg::decode(&payload).expect("payload decodes");
+                    assert_eq!(back, msg);
+                }
+                other => panic!("expected a frame, got {other:?}"),
+            }
+            // The stream position is exact: a second read sees clean EOF.
+            assert!(matches!(recv_mixed(&mut r).unwrap(), Incoming::Eof));
+        });
+    }
+
+    /// Satellite: every truncation of a valid frame surfaces as a typed
+    /// error (torn header or torn payload), never a panic and never a
+    /// successful decode.
+    #[test]
+    fn truncations_surface_as_typed_errors() {
+        prop::check("wire_truncation", 0xD157_0002, prop::DEFAULT_CASES, |rng| {
+            let bytes = framed(&random_delta(rng));
+            let cut = rng.gen_range(bytes.len()); // strictly shorter
+            let mut r = io::BufReader::new(&bytes[..cut]);
+            match recv_mixed(&mut r) {
+                Ok(Incoming::Eof) => assert_eq!(cut, 0, "only an empty stream is clean EOF"),
+                Ok(other) => panic!("torn frame decoded: {other:?}"),
+                Err(WireError::Truncated { want, got }) => {
+                    assert!(got < want, "truncation reports got {got} < want {want}")
+                }
+                Err(e) => panic!("torn frame misclassified: {e}"),
+            }
+        });
+    }
+
+    /// Satellite: a single flipped bit anywhere in the frame is either
+    /// detected as a typed [`WireError`] or diverts the plane sniff (a
+    /// magic byte flipped to `{` reads as a — then unparseable — control
+    /// line). It never panics and never yields the original message via
+    /// a clean decode of a *different* byte stream.
+    #[test]
+    fn bit_flips_never_pass_silently_and_never_panic() {
+        prop::check("wire_bit_flip", 0xD157_0003, prop::DEFAULT_CASES, |rng| {
+            let msg = random_delta(rng);
+            let mut bytes = framed(&msg);
+            let at = rng.gen_range(bytes.len());
+            let bit = 1u8 << rng.gen_range(8);
+            bytes[at] ^= bit;
+            let mut r = io::BufReader::new(&bytes[..]);
+            match recv_mixed(&mut r) {
+                // Typed detection: the expected outcome.
+                Err(
+                    WireError::BadMagic(_)
+                    | WireError::BadKind(_)
+                    | WireError::TooLarge(_)
+                    | WireError::Truncated { .. }
+                    | WireError::Corrupt { .. },
+                ) => {}
+                Err(e) => panic!("unexpected error class: {e}"),
+                // First byte flipped to '{': sniffed as a control line;
+                // the JSON layer rejects it (it is binary garbage).
+                Ok(Incoming::Line(l)) => {
+                    assert!(crate::util::json::Json::parse(&l).is_err());
+                }
+                Ok(Incoming::Eof) => panic!("flip cannot empty the stream"),
+                Ok(Incoming::Frame { kind, payload }) => {
+                    // A flip the frame CRC cannot see must be confined to
+                    // the CRC field colliding — impossible for one bit —
+                    // or to header bytes that do not alter acceptance.
+                    // The only such byte is the kind (1 <-> 2 is one bit
+                    // flip... but 1^2 = 3, i.e. *two* bits differ), so a
+                    // surviving frame must decode to the original.
+                    assert_eq!(kind, KIND_DELTA, "kind flip must be rejected");
+                    assert_eq!(
+                        DeltaMsg::decode(&payload).expect("surviving frame decodes"),
+                        msg,
+                        "accepted frame must be byte-identical"
+                    );
+                    panic!("a one-bit flip was accepted — CRC missed it");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mixed_stream_interleaves_lines_and_frames() {
+        let msg = DeltaMsg {
+            ticket: 3,
+            partition: 9,
+            nanos: 17,
+            delta: vec![1, -2],
+            doc_rows: vec![0.5, 1.5],
+            emit_rows: vec![],
+            z: vec![0, 1, 1],
+        };
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"{\"cmd\":\"pong\",\"seq\":4}\n");
+        send_frame(&mut bytes, KIND_DELTA, &msg.encode()).unwrap();
+        bytes.extend_from_slice(b"{\"cmd\":\"shutdown\"}\n");
+        let mut r = io::BufReader::new(&bytes[..]);
+        assert!(matches!(recv_mixed(&mut r).unwrap(), Incoming::Line(l) if l.contains("pong")));
+        match recv_mixed(&mut r).unwrap() {
+            Incoming::Frame { kind, payload } => {
+                assert_eq!(kind, KIND_DELTA);
+                assert_eq!(DeltaMsg::decode(&payload).unwrap(), msg);
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert!(matches!(recv_mixed(&mut r).unwrap(), Incoming::Line(l) if l.contains("shutdown")));
+        assert!(matches!(recv_mixed(&mut r).unwrap(), Incoming::Eof));
+    }
+
+    #[test]
+    fn task_round_trip_with_embedded_block() {
+        let mut block = TokenBlock::with_capacity(3);
+        block.docs.extend_from_slice(&[0, 1, 0]);
+        block.words.extend_from_slice(&[2, 0, 1]);
+        block.z.extend_from_slice(&[5, 6, 7]);
+        let msg = TaskMsg {
+            ticket: 1,
+            epoch: 2,
+            sweep: 3,
+            partition: 42,
+            family: 0,
+            kernel: KernelKind::Sparse,
+            k: 2,
+            alpha: 0.5,
+            beta: 0.1,
+            wbeta: 0.1 * 3.0,
+            seed: 0xABCD,
+            snapshot: vec![10, 20],
+            doc_ids: vec![100, 200],
+            doc_rows: vec![1.0, 2.0, 3.0, 4.0],
+            emit_ids: vec![7, 8, 9],
+            emit_rows: vec![0.0; 6],
+            block: shard::encode_block(&block, 42),
+        };
+        let back = TaskMsg::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+        let decoded = back.decode_task_block(Path::new("wire://test")).unwrap();
+        assert_eq!(decoded.docs, block.docs);
+        assert_eq!(decoded.words, block.words);
+        assert_eq!(decoded.z, block.z);
+    }
+
+    #[test]
+    fn corrupt_embedded_block_is_a_typed_error() {
+        let mut block = TokenBlock::with_capacity(1);
+        block.docs.push(0);
+        block.words.push(0);
+        block.z.push(1);
+        let mut image = shard::encode_block(&block, 7);
+        let last = image.len() - 1;
+        image[last] ^= 0x01; // flip inside the z section
+        let msg = TaskMsg {
+            ticket: 0,
+            epoch: 0,
+            sweep: 0,
+            partition: 7,
+            family: 0,
+            kernel: KernelKind::Dense,
+            k: 1,
+            alpha: 0.1,
+            beta: 0.1,
+            wbeta: 0.1,
+            seed: 1,
+            snapshot: vec![1],
+            doc_ids: vec![0],
+            doc_rows: vec![1.0],
+            emit_ids: vec![0],
+            emit_rows: vec![1.0],
+            block: image,
+        };
+        let err = msg.decode_task_block(Path::new("wire://test")).unwrap_err();
+        assert!(matches!(err, WireError::Corrupt { kind: "block", .. }), "{err}");
+    }
+
+    #[test]
+    fn kernel_codes_are_total_and_stable() {
+        for kind in KernelKind::all() {
+            assert_eq!(kernel_from_code(kernel_code(kind)), Some(kind));
+        }
+        assert_eq!(kernel_from_code(250), None);
+    }
+}

@@ -1,0 +1,301 @@
+//! The worker process: executes shipped tasks, answers heartbeats.
+//!
+//! A worker is deliberately thin — it owns no schedule, no corpus, and
+//! no persistent model state. It accepts one coordinator connection at
+//! a time, handshakes (the coordinator assigns its node id), and then
+//! runs two loops over the shared stream:
+//!
+//! - a **reader thread** that answers `ping` control lines immediately
+//!   (so heartbeats stay responsive while a long task samples) and
+//!   forwards task frames to the compute loop over a channel, and
+//! - the **compute loop**, which decodes each [`TaskMsg`], rebuilds the
+//!   task's compact local state (doc/emit row matrices, snapshot,
+//!   checksummed token block), and hands it to the *same*
+//!   `scheduler::pool::run_task` body every in-process executor uses —
+//!   same failpoint sites, same `(seed, sweep, partition)` RNG stream —
+//!   so a task's result is bit-identical wherever it runs.
+//!
+//! Crash semantics: the compute loop runs tasks **unguarded**. A panic
+//! (organic, or injected at the `dist.worker` failpoint) unwinds through
+//! a drop guard that shuts the socket down, so the coordinator observes
+//! EOF promptly and reassigns — the distributed analogue of the
+//! in-process containment-and-retry protocol, with the coordinator
+//! playing the retrying side. The `dist.heartbeat` failpoint instead
+//! latches the worker *frozen* (it stops answering pings and stops
+//! accepting tasks, but keeps the socket open), which is how the chaos
+//! tests exercise the liveness-timeout path as opposed to the EOF path.
+
+use crate::dist::wire::{
+    self, recv_mixed, send_frame, DeltaMsg, Incoming, TaskMsg, WireError, KIND_TASK,
+};
+use crate::gibbs::sampler::Hyper;
+use crate::kernel::Kernel;
+use crate::obs::trace::{Event, EventKind, Tracer};
+use crate::scheduler::pool;
+use crate::scheduler::shared::SharedRows;
+use crate::util::fault;
+use crate::util::interrupt;
+use crate::util::json::Json;
+use crate::util::net::send_line;
+use std::io::{self, BufReader};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Accept/compute poll period (interrupt-latch latency bound).
+const POLL: Duration = Duration::from_millis(20);
+
+/// Protocol version spoken in the hello handshake.
+pub const PROTO_VERSION: u64 = 1;
+
+#[derive(Clone, Default)]
+pub struct WorkerOptions {
+    /// Exit after serving one coordinator connection (tests, CI smoke).
+    pub once: bool,
+    /// Write this worker's own trace (its task spans) here on exit, for
+    /// merging with the coordinator's via `pplda analyze-trace a b ...`.
+    pub trace_out: Option<PathBuf>,
+    /// Label stamped into the trace meta (defaults to `worker-<node>`).
+    pub label: Option<String>,
+}
+
+/// Bind `addr` (port 0 picks a free port), announce
+/// `worker: listening on <addr>` on stdout, and serve coordinator
+/// connections until SIGINT/SIGTERM (or after one connection with
+/// [`WorkerOptions::once`]).
+pub fn serve_worker(addr: &str, opts: &WorkerOptions) -> io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    serve_on(listener, opts)
+}
+
+/// [`serve_worker`] over an already-bound listener — the in-process
+/// test entry (bind first, hand the coordinator the real port).
+pub fn serve_on(listener: TcpListener, opts: &WorkerOptions) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    println!("worker: listening on {}", listener.local_addr()?);
+    loop {
+        if interrupt::requested() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                match serve_coordinator(stream, opts) {
+                    Ok(node) => println!("worker: coordinator {peer} done (node {node})"),
+                    Err(e) => eprintln!("worker: connection {peer} failed: {e}"),
+                }
+                if opts.once {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Shuts the connection down when dropped — including a drop during
+/// panic unwind, which is what turns an injected worker crash into a
+/// prompt coordinator-visible EOF instead of a dangling open socket
+/// (the reader thread and any in-process test clone share the fd).
+struct HangupGuard(TcpStream);
+
+impl Drop for HangupGuard {
+    fn drop(&mut self) {
+        let _ = self.0.shutdown(Shutdown::Both);
+    }
+}
+
+/// Serve one coordinator over `stream`; returns the node id this worker
+/// was assigned. See the module docs for the thread layout.
+fn serve_coordinator(stream: TcpStream, opts: &WorkerOptions) -> Result<u64, WireError> {
+    stream.set_nodelay(true).map_err(WireError::Io)?;
+    let _hangup = HangupGuard(stream.try_clone().map_err(WireError::Io)?);
+    let writer = Arc::new(Mutex::new(stream.try_clone().map_err(WireError::Io)?));
+    let mut reader = BufReader::new(stream);
+
+    // Handshake: the coordinator leads with hello and assigns our id.
+    let node = match recv_mixed(&mut reader)? {
+        Incoming::Line(line) => {
+            let msg = Json::parse(&line).map_err(WireError::Protocol)?;
+            if msg.get("cmd").and_then(Json::as_str) != Some("hello") {
+                return Err(WireError::Protocol("expected hello".into()));
+            }
+            let proto = msg.get("proto").and_then(Json::as_u64).unwrap_or(0);
+            if proto != PROTO_VERSION {
+                return Err(WireError::Protocol(format!("protocol version {proto}")));
+            }
+            msg.get("node")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| WireError::Protocol("hello without node id".into()))?
+        }
+        Incoming::Eof => return Err(WireError::Protocol("hangup before hello".into())),
+        other => return Err(WireError::Protocol(format!("expected hello, got {other:?}"))),
+    };
+    {
+        let mut ack = Json::obj();
+        ack.set("cmd", "hello_ack");
+        ack.set("node", node);
+        ack.set("pid", std::process::id() as u64);
+        let mut w = writer.lock().unwrap();
+        send_line(&mut *w, &ack).map_err(WireError::Io)?;
+    }
+
+    // Reader thread: pings answered inline, tasks forwarded, shutdown
+    // latched. `frozen` models a stalled process (dist.heartbeat).
+    let (task_tx, task_rx): (Sender<Vec<u8>>, Receiver<Vec<u8>>) = channel();
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader_writer = Arc::clone(&writer);
+    let reader_stop = Arc::clone(&stop);
+    let reader_handle = std::thread::Builder::new()
+        .name(format!("dist-worker-{node}-reader"))
+        .spawn(move || {
+            let mut frozen = false;
+            loop {
+                match recv_mixed(&mut reader) {
+                    Ok(Incoming::Line(line)) => {
+                        let Ok(msg) = Json::parse(&line) else { continue };
+                        match msg.get("cmd").and_then(Json::as_str) {
+                            Some("ping") => {
+                                let seq = msg.get("seq").and_then(Json::as_u64).unwrap_or(0);
+                                if fault::fire(fault::sites::DIST_HEARTBEAT, [node, seq, 0])
+                                    .is_some()
+                                {
+                                    frozen = true;
+                                }
+                                if frozen {
+                                    continue;
+                                }
+                                let mut pong = Json::obj();
+                                pong.set("cmd", "pong");
+                                pong.set("seq", seq);
+                                pong.set("node", node);
+                                let mut w = reader_writer.lock().unwrap();
+                                if send_line(&mut *w, &pong).is_err() {
+                                    break;
+                                }
+                            }
+                            Some("shutdown") => break,
+                            _ => {}
+                        }
+                    }
+                    Ok(Incoming::Frame { kind: KIND_TASK, payload }) => {
+                        // A frozen worker also stops taking work: the
+                        // coordinator must detect it via the liveness
+                        // timeout, not via a trickle of late results.
+                        if !frozen && task_tx.send(payload).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Incoming::Frame { .. }) => break, // not ours to receive
+                    Ok(Incoming::Eof) | Err(_) => break,
+                }
+            }
+            reader_stop.store(true, Ordering::SeqCst);
+        })
+        .expect("spawn worker reader thread");
+
+    // Compute loop. Long-lived kernel (scratch persists across tasks,
+    // rebuilt only when the kind changes) and an optional local tracer.
+    let tracer = opts.trace_out.as_ref().map(|_| Tracer::new(1));
+    let mut kernel: Option<Box<dyn Kernel>> = None;
+    let mut tasks_run = 0u64;
+    while !(stop.load(Ordering::SeqCst) || interrupt::requested()) {
+        let payload = match task_rx.recv_timeout(POLL) {
+            Ok(p) => p,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let reply = run_one(node, &payload, &mut kernel, tracer.as_ref())?;
+        tasks_run += 1;
+        let mut w = writer.lock().unwrap();
+        send_frame(&mut *w, wire::KIND_DELTA, &reply.encode()).map_err(WireError::Io)?;
+    }
+
+    // Unblock and join the reader (EOF via the shared-socket shutdown).
+    drop(_hangup);
+    let _ = reader_handle.join();
+    if let (Some(path), Some(tr)) = (&opts.trace_out, &tracer) {
+        let label = opts
+            .label
+            .clone()
+            .unwrap_or_else(|| format!("worker-{node}"));
+        let meta = crate::obs::TraceMeta { workers: 1, dropped: tr.dropped(), label };
+        crate::obs::export::write_trace(path, &tr.take(), &meta).map_err(WireError::Io)?;
+    }
+    println!("worker: node {node} ran {tasks_run} tasks");
+    Ok(node)
+}
+
+/// Decode and execute one task, returning its delta reply. Split out of
+/// the serve loop so the failpoint fires with the full task coordinates
+/// and the unguarded-panic surface is exactly one function.
+fn run_one(
+    node: u64,
+    payload: &[u8],
+    kernel: &mut Option<Box<dyn Kernel>>,
+    tracer: Option<&Tracer>,
+) -> Result<DeltaMsg, WireError> {
+    let msg = TaskMsg::decode(payload)?;
+    // Failpoint: an injected worker crash right before the kernel runs —
+    // unguarded on purpose (see module docs).
+    if fault::fire(fault::sites::DIST_WORKER, [node, msg.sweep, msg.partition]).is_some() {
+        panic!(
+            "injected fault: worker {node} crash at sweep {}, partition {}",
+            msg.sweep, msg.partition
+        );
+    }
+    let origin = PathBuf::from(format!("wire://node-{node}/part-{}", msg.partition));
+    let mut block = msg.decode_task_block(&origin)?;
+    let k = msg.k as usize;
+    let mut doc_rows = msg.doc_rows.clone();
+    let mut emit_rows = msg.emit_rows.clone();
+    let h = Hyper { k, alpha: msg.alpha, beta: msg.beta, wbeta: msg.wbeta };
+    let kern = match kernel {
+        Some(kern) if kern.kind() == msg.kernel => kern,
+        slot => slot.insert(msg.kernel.build()),
+    };
+    let mut delta = vec![0i64; k];
+    let spec = pool::EpochSpec {
+        doc: SharedRows::new(&mut doc_rows, k),
+        emit: SharedRows::new(&mut emit_rows, k),
+        snapshot: &msg.snapshot,
+        h,
+        seed: msg.seed,
+        sweep: msg.sweep as usize,
+        kernel: msg.kernel,
+        obs: pool::TaskObs::default(),
+    };
+    let nanos = pool::run_task(&spec, msg.partition, &mut block, &mut delta, kern.as_mut());
+    if let Some(tr) = tracer {
+        // This worker's own view of the task (lane 0 of its private
+        // tracer). The coordinator emits the authoritative span; the
+        // trace merger dedups by (family, sweep, epoch, ticket).
+        tr.emit(Event {
+            kind: EventKind::Task,
+            family: msg.family,
+            lane: 0,
+            sweep: msg.sweep as u32,
+            epoch: msg.epoch,
+            ticket: msg.ticket,
+            partition: msg.partition,
+            t0_ns: tr.now().saturating_sub(nanos),
+            dur_ns: nanos,
+            arg: 0,
+        });
+        tr.drain();
+    }
+    Ok(DeltaMsg {
+        ticket: msg.ticket,
+        partition: msg.partition,
+        nanos,
+        delta,
+        doc_rows,
+        emit_rows,
+        z: block.z,
+    })
+}

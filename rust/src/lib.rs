@@ -39,6 +39,12 @@
 //!   Compiled only with the `xla` cargo feature (needs the external `xla`
 //!   bindings crate); the default build is dependency-free.
 //! * [`coordinator`] — the training drivers tying everything together.
+//! * [`dist`] — the fault-tolerant distributed execution layer: a
+//!   coordinator/worker multi-process protocol (JSON-lines control
+//!   plane, CRC-framed binary task/delta plane) with heartbeats,
+//!   liveness timeouts, deterministic shard reassignment on worker
+//!   death, and speculative re-execution of stragglers — bit-identical
+//!   to single-process training (see `docs/distributed.md`).
 //! * [`serve`] — the production-facing inference half: crash-safe
 //!   `PPSNAP1` model snapshots with atomic hot-reload, an exact O(1)
 //!   per-token fold-in engine, and a batched query server with bounded
@@ -71,6 +77,7 @@ pub mod bench;
 pub mod bot;
 pub mod coordinator;
 pub mod corpus;
+pub mod dist;
 pub mod gibbs;
 pub mod kernel;
 pub mod obs;

@@ -26,6 +26,12 @@
 //!                  [--spill-dir DIR] [--checkpoint-every N]
 //!                  [--checkpoint-dir DIR] [--resume PATH]
 //!                  [--trace-out FILE]
+//! pplda worker     [--addr HOST:PORT] [--once] [--trace-out FILE]
+//!                  [--label NAME]
+//! pplda coordinator --dist WORKERS_FILE [train flags]
+//!                  [--heartbeat-ms MS] [--liveness-timeout-ms MS]
+//!                  [--spec-factor F] [--connect-attempts N]
+//!                  [--max-reconnects N]
 //! pplda export-snapshot --from CKPT --out FILE [corpus/train flags]
 //! pplda serve SNAPSHOT [--addr HOST:PORT] [--serve-workers N]
 //!                  [--queue-cap N] [--max-batch N] [--fold-iters N]
@@ -33,7 +39,7 @@
 //!                  [--trace-out FILE]
 //! pplda query-bench --addr HOST:PORT [--requests N] [--words N]
 //!                  [--deadline-ms MS] [--seed S]
-//! pplda analyze-trace FILE
+//! pplda analyze-trace FILE [FILE..]
 //! pplda artifacts-check
 //! ```
 
@@ -49,8 +55,9 @@ use pplda::corpus::stats::{table_i, CorpusStats};
 use pplda::corpus::synthetic::{self, Profile};
 use pplda::corpus::shard::{self, Residency};
 use pplda::corpus::{uci, BagOfWords};
+use pplda::dist::{self, DistExec, DistOptions};
 use pplda::kernel::KernelKind;
-use pplda::obs::analyze::{analyze, render};
+use pplda::obs::analyze::{analyze, merge_traces, render};
 use pplda::obs::export::{read_trace, write_trace};
 use pplda::obs::trace::Tracer;
 use pplda::obs::TraceMeta;
@@ -76,6 +83,8 @@ fn main() -> ExitCode {
         Some("partition") => cmd_partition(&args),
         Some("train") => cmd_train(&args),
         Some("train-bot") => cmd_train_bot(&args),
+        Some("coordinator") => cmd_train_dist(&args),
+        Some("worker") => cmd_worker(&args),
         Some("export-snapshot") => cmd_export_snapshot(&args),
         Some("serve") => cmd_serve(&args),
         Some("query-bench") => cmd_query_bench(&args),
@@ -92,16 +101,18 @@ fn main() -> ExitCode {
 }
 
 const USAGE: &str = "\
-usage: pplda <stats|partition|train|train-bot|export-snapshot|serve|query-bench|analyze-trace|artifacts-check> [flags]
+usage: pplda <stats|partition|train|train-bot|coordinator|worker|export-snapshot|serve|query-bench|analyze-trace|artifacts-check> [flags]
 
   stats            print Table-I statistics for a corpus
   partition        run partitioning algorithms, print eta per P (Tables II/III)
   train            train (parallel) LDA, print perplexity curve
   train-bot        train (parallel) Bag of Timestamps, print Table-IV row
+  coordinator      train LDA across worker processes (== train --dist FILE)
+  worker           serve sampling tasks to a coordinator over TCP
   export-snapshot  convert a training checkpoint into a serve snapshot
   serve            serve fold-in queries from a snapshot over TCP (JSON lines)
   query-bench      drive a running server, print latency percentiles
-  analyze-trace    reconstruct critical path / idle gaps / eta from a trace
+  analyze-trace    reconstruct critical path / idle gaps / eta from trace(s)
   artifacts-check  verify the AOT artifacts load and execute
 
 common flags: --profile nips|nytimes|mas|tiny   --scale N   --seed S
@@ -162,6 +173,17 @@ publish is rejected and the old model keeps serving. SIGINT or a
 shutdown command drains gracefully. `pplda query-bench --addr A`
 measures client-side latency percentiles under uniform and skewed word
 mixes and emits BENCH_JSON rows (see docs/serving.md).
+
+distributed (train/coordinator/worker): `pplda train --dist FILE` (or
+`pplda coordinator --dist FILE`) ships epoch tasks to `pplda worker`
+processes listed one host:port per line in FILE, with heartbeats
+(--heartbeat-ms), a liveness timeout (--liveness-timeout-ms),
+speculative straggler re-execution (--spec-factor), and deterministic
+reassignment after a crash — results stay bit-identical to --mode
+sequential, faults included (see docs/distributed.md). Workers are
+stateless; start them with `pplda worker --addr HOST:PORT` (--once
+exits after one coordinator session; --trace-out records a per-node
+trace to merge with `analyze-trace FILE FILE..`).
 
 tracing (train/train-bot): --trace-out FILE records per-task spans and
 scheduler/IO events into per-worker ring buffers and writes them on
@@ -380,6 +402,9 @@ fn cmd_partition(args: &Args) -> ExitCode {
 }
 
 fn cmd_train(args: &Args) -> ExitCode {
+    if args.get_str("dist").is_some() {
+        return cmd_train_dist(args);
+    }
     let (name, bow) = load_corpus(args);
     let procs = args.get::<usize>("procs", 8);
     let (kind, workers) = schedule_of(args, procs);
@@ -475,6 +500,180 @@ fn cmd_train(args: &Args) -> ExitCode {
         println!("checkpointed at sweep {it}");
     }
     ExitCode::SUCCESS
+}
+
+/// Distributed LDA training: the `coordinator` subcommand, also reached
+/// through `train --dist FILE`. Same corpus/plan/train flags as `train`;
+/// epoch execution goes to the workers listed in FILE.
+fn cmd_train_dist(args: &Args) -> ExitCode {
+    let Some(dist_file) = args.get_str("dist") else {
+        eprintln!("coordinator: --dist WORKERS_FILE is required (one host:port per line)");
+        return ExitCode::FAILURE;
+    };
+    let addrs = match dist::parse_workers_file(Path::new(dist_file)) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("coordinator: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (name, bow) = load_corpus(args);
+    let procs = args.get::<usize>("procs", 8);
+    let (kind, workers) = schedule_of(args, procs);
+    let grid = kind.grid(workers);
+    let restarts = args.get::<usize>("restarts", 20);
+    let algo = algo_of(args.get_str("algo").unwrap_or("A3"), restarts);
+    let (checkpoint_every, checkpoint_dir, _resume) = checkpoint_of(args);
+    let cfg = TrainConfig {
+        topics: args.get::<usize>("topics", 64),
+        iters: args.get::<usize>("iters", 100),
+        eval_every: args.get::<usize>("eval-every", 10),
+        seed: args.get::<u64>("seed", 42),
+        workers,
+        schedule: kind,
+        kernel: kernel_of(args),
+        balance: balance_of(args),
+        commit: commit_of(args),
+        checkpoint_every,
+        ..Default::default()
+    };
+    let opts = DistOptions {
+        heartbeat_ms: args.get::<u64>("heartbeat-ms", 500),
+        liveness_timeout_ms: args.get::<u64>("liveness-timeout-ms", 2000),
+        spec_factor: args.get::<f64>("spec-factor", 3.0),
+        connect_attempts: args.get::<u32>("connect-attempts", 10),
+        max_reconnects: args.get::<u32>("max-reconnects", 3),
+    };
+    let plan = partition::partition(&bow, grid, algo, cfg.seed);
+    println!(
+        "corpus {name}: D={} W={} N={} | plan {} P={} eta={:.4} | dist nodes={} \
+         schedule {} workers={} kernel={} balance={} commit={}",
+        bow.num_docs(),
+        bow.num_words(),
+        bow.num_tokens(),
+        plan.algorithm,
+        plan.p,
+        plan.eta,
+        addrs.len(),
+        kind.label(),
+        workers,
+        cfg.kernel.name(),
+        cfg.balance.name(),
+        cfg.commit.name(),
+    );
+    interrupt::install();
+    let mut exec = match DistExec::connect(&addrs, opts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("coordinator: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("connected to {} worker(s)", exec.live_nodes());
+    // Trace lanes: one per node (remote task spans land on the owning
+    // node's lane), never fewer than the schedule's worker count.
+    let trace = tracer_of(args, workers.max(addrs.len()));
+    let report = dist::train_lda_dist(
+        &bow,
+        &plan,
+        &cfg,
+        &mut exec,
+        trace.as_ref().map(|(_, tr)| tr),
+        checkpoint_dir.as_deref(),
+    );
+    exec.shutdown();
+    if let Some((path, tr)) = &trace {
+        write_trace_out(path, tr, format!("pplda coordinator --profile {name}"));
+    }
+    let mut curve = Table::new(vec!["sweep".into(), "perplexity".into()]);
+    for (s, p) in &report.curve {
+        curve.row(vec![s.to_string(), f(*p, 4)]);
+    }
+    print!("{}", curve.to_aligned());
+    if report.reassigns > 0 || report.speculations > 0 || report.local_fallbacks > 0 {
+        println!(
+            "fault recovery: reassigns={} speculations={} local_fallbacks={}",
+            report.reassigns, report.speculations, report.local_fallbacks
+        );
+    }
+    if let Some(path) = &report.checkpoint {
+        println!("checkpointed at sweep {} -> {}", report.sweeps, path.display());
+    }
+    println!(
+        "final perplexity {:.4} | {:.1}s | {} tokens/s",
+        report.final_perplexity,
+        report.train_secs,
+        pplda::util::human_rate(report.tokens_per_sec)
+    );
+    if let Some(path) = args.get_str("json") {
+        let mut j = Json::obj();
+        j.set("final_perplexity", report.final_perplexity);
+        j.set("sweeps", report.sweeps as u64);
+        j.set("nodes", exec.nodes() as u64);
+        j.set("reassigns", report.reassigns);
+        j.set("speculations", report.speculations);
+        j.set("local_fallbacks", report.local_fallbacks);
+        j.set("train_secs", report.train_secs);
+        std::fs::write(path, j.to_string()).expect("write json");
+        println!("wrote {path}");
+    }
+    ExitCode::SUCCESS
+}
+
+/// The worker process: serve sampling tasks to a coordinator. Stateless
+/// between tasks; SIGINT/SIGTERM exit the accept loop cleanly.
+fn cmd_worker(args: &Args) -> ExitCode {
+    let addr = args.get_str("addr").unwrap_or("127.0.0.1:7700");
+    interrupt::install();
+    // Chaos hook for the distributed smoke test: `--chaos-kill S,P`
+    // arms a worker-side panic at sweep S, partition P (requires a
+    // `--features failpoints` build; rejected otherwise so a stale
+    // flag never silently no-ops).
+    if let Some(spec) = args.get_str("chaos-kill") {
+        match install_chaos_kill(spec) {
+            Ok(()) => println!("worker: chaos-kill armed at {spec}"),
+            Err(e) => {
+                eprintln!("worker: --chaos-kill {spec}: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let opts = dist::WorkerOptions {
+        once: args.has("once"),
+        trace_out: args.get_str("trace-out").map(PathBuf::from),
+        label: args.get_str("label").map(String::from),
+    };
+    match dist::serve_worker(addr, &opts) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("worker: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+fn install_chaos_kill(spec: &str) -> Result<(), String> {
+    use pplda::util::fault::{self, Fault, FaultKind};
+    let (sweep, part) = spec
+        .split_once(',')
+        .ok_or_else(|| "expected SWEEP,PARTITION".to_string())?;
+    let sweep: u64 = sweep.trim().parse().map_err(|_| format!("bad sweep {sweep:?}"))?;
+    let part: u64 = part.trim().parse().map_err(|_| format!("bad partition {part:?}"))?;
+    let guard = fault::install(vec![Fault {
+        site: fault::sites::DIST_WORKER,
+        key: [fault::ANY, sweep, part],
+        kind: FaultKind::Panic,
+    }]);
+    // The plan must stay armed for the process lifetime — this is a
+    // one-shot chaos process, not a test with cleanup.
+    std::mem::forget(guard);
+    Ok(())
+}
+
+#[cfg(not(feature = "failpoints"))]
+fn install_chaos_kill(_spec: &str) -> Result<(), String> {
+    Err("this build has no failpoints; rebuild with --features failpoints".into())
 }
 
 fn cmd_train_bot(args: &Args) -> ExitCode {
@@ -731,17 +930,34 @@ fn cmd_query_bench(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Analyze one trace, or merge several (a distributed run's coordinator
+/// trace plus per-worker traces — coordinator first, see
+/// [`merge_traces`]) into node-banded lanes and analyze the union.
 fn cmd_analyze_trace(args: &Args) -> ExitCode {
-    let Some(path) = args.positional(1) else {
-        eprintln!("usage: pplda analyze-trace FILE");
+    let mut paths = Vec::new();
+    let mut i = 1;
+    while let Some(p) = args.positional(i) {
+        paths.push(p.to_string());
+        i += 1;
+    }
+    if paths.is_empty() {
+        eprintln!("usage: pplda analyze-trace FILE [FILE..]");
         return ExitCode::FAILURE;
-    };
-    let (events, meta) = match read_trace(Path::new(path)) {
-        Ok(v) => v,
-        Err(e) => {
-            eprintln!("analyze-trace: {path}: {e}");
-            return ExitCode::FAILURE;
+    }
+    let mut traces = Vec::with_capacity(paths.len());
+    for path in &paths {
+        match read_trace(Path::new(path)) {
+            Ok(v) => traces.push(v),
+            Err(e) => {
+                eprintln!("analyze-trace: {path}: {e}");
+                return ExitCode::FAILURE;
+            }
         }
+    }
+    let (events, meta) = if traces.len() == 1 {
+        traces.pop().expect("one trace")
+    } else {
+        merge_traces(&traces)
     };
     if !meta.label.is_empty() {
         println!("run: {}", meta.label);
@@ -752,7 +968,7 @@ fn cmd_analyze_trace(args: &Args) -> ExitCode {
             ExitCode::SUCCESS
         }
         Err(e) => {
-            eprintln!("analyze-trace: {path}: invalid trace: {e}");
+            eprintln!("analyze-trace: {}: invalid trace: {e}", paths.join(" "));
             ExitCode::FAILURE
         }
     }

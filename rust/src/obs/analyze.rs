@@ -277,6 +277,69 @@ pub fn analyze(events: &[Event], meta: &TraceMeta) -> Result<Analysis, String> {
     Ok(an)
 }
 
+/// Merge per-node traces from one distributed run into a single
+/// timeline with node-prefixed lane bands.
+///
+/// Lane remapping: file `i`'s worker lanes `0..workers_i` move to a
+/// contiguous band starting at `Σ_{j<i} workers_j`; every file's
+/// coordinator lane folds onto the merged coordinator lane (total
+/// workers) and its IO lane onto the merged IO lane (total + 1).
+///
+/// Task spans are deduplicated across files by `(family, sweep, epoch,
+/// ticket)`, keeping the **first** occurrence in argument order: in a
+/// distributed run the coordinator's trace carries the authoritative
+/// span for every ticket (on the owning node's lane), while each
+/// worker's own trace repeats its tickets on its local lane 0 — list
+/// the coordinator's file first and worker files add only their
+/// non-task events plus any tickets the coordinator never saw
+/// (speculation losers, tasks cut off by a crash). Without dedup the
+/// merged trace would double-count busy time and fail the
+/// exactly-once schema check in [`analyze`].
+///
+/// Timestamps are left untouched: each recorder has its own time base,
+/// and the analyzer only aggregates durations within lanes. The merged
+/// label joins the inputs' labels with `" + "`.
+pub fn merge_traces(traces: &[(Vec<Event>, TraceMeta)]) -> (Vec<Event>, TraceMeta) {
+    let total: usize = traces.iter().map(|(_, m)| m.workers.max(1)).sum();
+    let coord = total as u16;
+    let io = coord + 1;
+    let mut seen = std::collections::BTreeSet::new();
+    let mut events = Vec::with_capacity(traces.iter().map(|(e, _)| e.len()).sum());
+    let mut dropped = 0u64;
+    let mut labels: Vec<&str> = Vec::new();
+    let mut base = 0u16;
+    for (file_events, meta) in traces {
+        let workers = meta.workers.max(1) as u16;
+        dropped += meta.dropped;
+        if !meta.label.is_empty() {
+            labels.push(&meta.label);
+        }
+        for ev in file_events {
+            if ev.kind == EventKind::Task
+                && !seen.insert((ev.family, ev.sweep, ev.epoch, ev.ticket))
+            {
+                continue;
+            }
+            let mut ev = *ev;
+            ev.lane = if ev.lane < workers {
+                base + ev.lane
+            } else if ev.lane == workers {
+                coord
+            } else {
+                io
+            };
+            events.push(ev);
+        }
+        base += workers;
+    }
+    let meta = TraceMeta {
+        workers: total,
+        dropped,
+        label: labels.join(" + "),
+    };
+    (events, meta)
+}
+
 fn fmt_ns(ns: u64) -> String {
     if ns >= 1_000_000_000 {
         format!("{:.3}s", ns as f64 / 1e9)
@@ -487,5 +550,54 @@ mod tests {
         assert_eq!(an.commit_runahead, 1);
         assert_eq!(an.commit_ns, 11);
         assert_eq!(an.peak_resident_bytes, 1 << 21);
+    }
+
+    #[test]
+    fn merge_remaps_lanes_into_node_bands() {
+        // Coordinator file: 2 worker lanes + coordinator(2) + io(3).
+        let coord = vec![
+            task(0, 0, 0, 0, 0, 100),
+            task(1, 0, 0, 1, 3, 50),
+            Event { lane: 2, ..Event::of(EventKind::Sweep) },
+            Event { lane: 3, ..Event::of(EventKind::IoLoad) },
+        ];
+        let cmeta = TraceMeta { workers: 2, label: "coord".into(), ..Default::default() };
+        // One worker file: 1 worker lane + coordinator(1) + io(2).
+        let wk = vec![
+            task(0, 0, 0, 0, 0, 100), // duplicate of coordinator's ticket 0
+            Event { lane: 1, ..Event::of(EventKind::Barrier) },
+        ];
+        let wmeta = TraceMeta { workers: 1, dropped: 2, label: "node-0".into(), ..Default::default() };
+        let (evs, meta) = merge_traces(&[(coord, cmeta), (wk, wmeta)]);
+        assert_eq!(meta.workers, 3);
+        assert_eq!(meta.dropped, 2);
+        assert_eq!(meta.label, "coord + node-0");
+        // The duplicate task span was dropped; first file won.
+        let tasks: Vec<&Event> = evs.iter().filter(|e| e.kind == EventKind::Task).collect();
+        assert_eq!(tasks.len(), 2);
+        assert!(tasks.iter().all(|e| e.lane < 2), "coordinator lanes win");
+        // File 0's coordinator lane folded onto merged lane 3, io onto 4;
+        // file 1's coordinator lane likewise.
+        assert!(evs.iter().any(|e| e.kind == EventKind::Sweep && e.lane == 3));
+        assert!(evs.iter().any(|e| e.kind == EventKind::IoLoad && e.lane == 4));
+        assert!(evs.iter().any(|e| e.kind == EventKind::Barrier && e.lane == 3));
+        // The merged trace passes the analyzer's exactly-once schema.
+        analyze(&evs, &meta).unwrap();
+    }
+
+    #[test]
+    fn merge_keeps_tickets_only_one_file_saw() {
+        // Worker file contributes ticket 1, which the coordinator's
+        // trace lost to a crash; bands shift it onto lane 2.
+        let coord = vec![task(0, 0, 0, 0, 0, 10)];
+        let cmeta = TraceMeta { workers: 2, dropped: 1, ..Default::default() };
+        let wk = vec![task(0, 0, 0, 1, 5, 20)];
+        let wmeta = TraceMeta { workers: 1, ..Default::default() };
+        let (evs, meta) = merge_traces(&[(coord, cmeta), (wk, wmeta)]);
+        let tasks: Vec<&Event> = evs.iter().filter(|e| e.kind == EventKind::Task).collect();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[1].lane, 2, "worker band starts after coordinator's lanes");
+        let an = analyze(&evs, &meta).unwrap();
+        assert_eq!(an.busy_ns, 30);
     }
 }

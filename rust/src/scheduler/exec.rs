@@ -700,6 +700,23 @@ impl ParallelLda {
     /// performs no per-epoch heap allocation in `Sequential` and
     /// `Pooled` modes.
     pub fn sweep(&mut self, mode: ExecMode) -> SweepStats {
+        // Detach the engine cache so the chosen executor can be borrowed
+        // mutably alongside `self` (the epoch loops take `&mut self` for
+        // counts/shards and `&mut dyn Executor` separately). The
+        // placeholder cache is never exercised: `EngineCache::new` builds
+        // its pool lazily, so the swap is allocation-free.
+        let mut engines = std::mem::replace(&mut self.engines, EngineCache::new(0));
+        let stats = self.sweep_with(engines.get(mode));
+        self.engines = engines;
+        stats
+    }
+
+    /// [`Self::sweep`] against an explicit [`Executor`] — the seam the
+    /// distributed layer plugs into: `crate::dist::DistExec` implements
+    /// [`Executor`] over remote workers, and driving it through this
+    /// method reuses the whole sweep loop (scheduling, snapshots,
+    /// telemetry, spill IO) unchanged.
+    pub fn sweep_with(&mut self, exec: &mut dyn Executor) -> SweepStats {
         let sweep_no = self.sweeps_done;
         let steal = self.balance.is_steal();
         let mut stats = SweepStats {
@@ -718,7 +735,7 @@ impl ParallelLda {
         // Fault-tolerance telemetry baselines: both counters are
         // monotone over the trainer's lifetime; the sweep reports its
         // increments.
-        let task_retries0 = self.engines.get(mode).retries();
+        let task_retries0 = exec.retries();
         let io_retries0 = self.shards.io_retries();
 
         // Bring the persistent snapshot buffer up to date once per sweep
@@ -729,9 +746,9 @@ impl ParallelLda {
             .add_phase(Family::Word, Phase::Update, update_started.elapsed());
 
         if self.commit == CommitMode::Ticketed {
-            self.ticketed_epochs(mode, &mut stats, sweep_no, steal);
+            self.ticketed_epochs(exec, &mut stats, sweep_no, steal);
         } else {
-            self.barrier_epochs(mode, &mut stats, sweep_no, steal);
+            self.barrier_epochs(exec, &mut stats, sweep_no, steal);
         }
 
         self.sweeps_done += 1;
@@ -758,7 +775,7 @@ impl ParallelLda {
         }
         self.metrics
             .add_phase(Family::Word, Phase::Update, update_started.elapsed());
-        stats.task_retries = self.engines.get(mode).retries() - task_retries0;
+        stats.task_retries = exec.retries() - task_retries0;
         stats.io_retries = self.shards.io_retries() - io_retries0;
 
         // The `SweepStats` second-buckets are views over the registry:
@@ -830,7 +847,7 @@ impl ParallelLda {
     /// write back.
     fn barrier_epochs(
         &mut self,
-        mode: ExecMode,
+        exec: &mut dyn Executor,
         stats: &mut SweepStats,
         sweep_no: usize,
         steal: bool,
@@ -885,9 +902,7 @@ impl ParallelLda {
                 worker_nanos: &mut self.worker_nanos,
                 steal,
             };
-            self.engines
-                .get(mode)
-                .run_epoch(&spec, tasks, &mut self.deltas[..n]);
+            exec.run_epoch(&spec, tasks, &mut self.deltas[..n]);
             self.metrics
                 .add_phase(Family::Word, Phase::Sample, epoch_started.elapsed());
             stats.task_nanos.push(self.task_nanos[..n].to_vec());
@@ -984,7 +999,7 @@ impl ParallelLda {
     /// sampling.
     fn ticketed_epochs(
         &mut self,
-        mode: ExecMode,
+        exec: &mut dyn Executor,
         stats: &mut SweepStats,
         sweep_no: usize,
         steal: bool,
@@ -1082,13 +1097,7 @@ impl ParallelLda {
                     });
                 }
             };
-            self.engines.get(mode).run_epoch_ticketed(
-                &spec,
-                tasks,
-                &mut self.deltas[..n],
-                &mut overlap,
-                &mut commit,
-            );
+            exec.run_epoch_ticketed(&spec, tasks, &mut self.deltas[..n], &mut overlap, &mut commit);
             let m = &self.metrics;
             m.add_phase(Family::Word, Phase::Sample, epoch_started.elapsed());
             m.add_phase_secs(Family::Word, Phase::SpillWrite, io_write);

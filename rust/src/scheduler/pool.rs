@@ -173,7 +173,7 @@ pub struct TaskObs<'a> {
 /// measured-η from spans reproduces `SweepStats::measured_eta`. A
 /// stolen task additionally gets a [`EventKind::Steal`] marker.
 #[inline]
-fn trace_task(
+pub(crate) fn trace_task(
     spec: &EpochSpec<'_>,
     lane: usize,
     ticket: usize,
@@ -203,7 +203,7 @@ fn trace_task(
 /// Emit an instant event (rollback/retry) on `lane` with task
 /// coordinates. No-op when tracing is off.
 #[inline]
-fn trace_instant(
+pub(crate) fn trace_instant(
     spec: &EpochSpec<'_>,
     lane: usize,
     kind: EventKind,
@@ -419,7 +419,7 @@ impl TicketCommitter {
 /// pooled executors index raw pointers off this assignment, so a bad
 /// `EpochTasks` from safe code must fail here, not corrupt memory; the
 /// check is O(P) per epoch, negligible next to sampling.
-fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
+pub(crate) fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
     let n = tasks.blocks.len();
     assert_eq!(n, tasks.ids.len(), "one id per block");
     assert_eq!(n, deltas.len(), "one delta slot per block");
@@ -469,7 +469,13 @@ fn check_tasks(tasks: &EpochTasks<'_>, deltas: &[Vec<i64>]) {
 /// race-free. Returns the task's measured sweep nanos — the telemetry
 /// the worker stamps into the task's `nanos` slot and the
 /// [`crate::scheduler::adaptive::Measured`] estimator learns from.
-fn run_task(
+/// `pub(crate)` because the distributed layer reuses it verbatim: a
+/// remote worker (`crate::dist::worker`) runs the same body on its
+/// shipped partition, and the coordinator's local-fallback path runs it
+/// in-process — both therefore share the failpoint sites and the
+/// `(seed, sweep, partition)` RNG-stream keying that make distributed
+/// replay bit-identical.
+pub(crate) fn run_task(
     spec: &EpochSpec<'_>,
     partition: u64,
     block: &mut TokenBlock,

@@ -293,6 +293,23 @@ impl ModelSnapshot {
         }
     }
 
+    /// Cheap change token for the hot-reload watcher: the stored header
+    /// CRC (a digest over kind/shape/seed/priors *and* all four section
+    /// CRCs, so any republish — even within the same mtime second —
+    /// moves it). Reads only the fixed-size header; `None` when the file
+    /// is missing, short, or not a snapshot (the watcher then falls back
+    /// to mtime alone).
+    pub(crate) fn peek_header_crc(path: &Path) -> Option<u32> {
+        use std::io::Read as _;
+        let mut head = [0u8; HEADER_LEN];
+        let mut f = std::fs::File::open(path).ok()?;
+        f.read_exact(&mut head).ok()?;
+        if !head.starts_with(MAGIC_STEM) {
+            return None;
+        }
+        Some(u32::from_le_bytes([head[56], head[57], head[58], head[59]]))
+    }
+
     fn load_once(path: &Path, token: u64, attempt: u32) -> Result<Self, SnapshotError> {
         // Chaos probe: a scheduled fault here models the read itself
         // failing (IoError), reading a torn file (TornWrite → short

@@ -56,6 +56,27 @@ pub mod sites {
     /// `(candidate path token, ANY, ANY)` — fires before the candidate
     /// is validated, modeling a reload racing a torn publish.
     pub const SERVE_RELOAD: &str = "serve.reload";
+    /// Coordinator→worker task send, keyed `(node, sweep, ticket)` —
+    /// fires before the frame is written. `TornWrite` sends a truncated
+    /// frame then breaks the connection; `IoError` fails the write
+    /// outright. Either way the worker connection is lost and the
+    /// coordinator must reassign (see `docs/distributed.md`).
+    pub const DIST_SEND: &str = "dist.send";
+    /// Coordinator-side delta receive, keyed `(node, sweep, ticket)` —
+    /// fires when a worker's delta arrives, before it is applied.
+    /// Models a corrupt/undecodable frame from that node: the delta is
+    /// discarded, the node declared dead, its in-flight work reassigned.
+    pub const DIST_RECV: &str = "dist.recv";
+    /// Worker-side task execution, keyed `(node, sweep, partition)` —
+    /// fires before the kernel runs. `Panic` kills the worker (thread or
+    /// process) mid-sweep, modeling a crash; the coordinator sees the
+    /// connection drop and replays the task elsewhere.
+    pub const DIST_WORKER: &str = "dist.worker";
+    /// Worker-side heartbeat answer, keyed `(node, ANY, ANY)` — firing
+    /// latches the worker *frozen*: it stops answering pings and stops
+    /// taking tasks (but keeps the socket open), modeling a stalled
+    /// process the liveness timeout / speculation machinery must detect.
+    pub const DIST_HEARTBEAT: &str = "dist.heartbeat";
 }
 
 /// What an armed fault does when its site fires.

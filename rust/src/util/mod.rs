@@ -12,6 +12,7 @@ pub mod error;
 pub mod fault;
 pub mod interrupt;
 pub mod json;
+pub mod net;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,103 @@
+//! Shared JSON-lines TCP framing.
+//!
+//! Two subsystems speak newline-delimited JSON over TCP — the serve
+//! path's query protocol ([`crate::serve::net`]) and the distributed
+//! control plane ([`crate::dist`]) — so the line primitives live here
+//! once: connect with `TCP_NODELAY` (messages are line-sized; Nagle only
+//! adds latency), write one object per `\n`-terminated line, read one
+//! trimmed line with clean-EOF detection, and classify read-timeout
+//! errors (both protocols poll with socket read timeouts so shutdown
+//! latches stay responsive).
+//!
+//! The distributed *data* plane (task and delta payloads) is binary and
+//! CRC-framed — see [`crate::dist::wire`] — but shares the same stream:
+//! a JSON control line always starts with `{`, a binary frame with its
+//! magic byte, so a reader can sniff the first byte and parse either.
+
+use std::io::{self, BufRead, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Connect with `TCP_NODELAY` set.
+pub fn connect(addr: &SocketAddr) -> io::Result<TcpStream> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+/// Serialize `msg` and send it as one `\n`-terminated line.
+pub fn send_line<W: Write>(w: &mut W, msg: &crate::util::json::Json) -> io::Result<()> {
+    let mut text = msg.to_string();
+    text.push('\n');
+    w.write_all(text.as_bytes())?;
+    w.flush()
+}
+
+/// Read one line into `buf` (cleared first), stripping the trailing
+/// newline. `Ok(false)` means clean EOF.
+pub fn recv_line<R: BufRead>(r: &mut R, buf: &mut String) -> io::Result<bool> {
+    buf.clear();
+    if r.read_line(buf)? == 0 {
+        return Ok(false);
+    }
+    while buf.ends_with('\n') || buf.ends_with('\r') {
+        buf.pop();
+    }
+    Ok(true)
+}
+
+/// True when `e` is a socket read-timeout (the poll tick of a loop with
+/// a read timeout set), not a real failure. Both `WouldBlock` and
+/// `TimedOut` appear in the wild depending on platform.
+pub fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::io::BufReader;
+    use std::net::TcpListener;
+
+    #[test]
+    fn line_round_trip_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            assert!(recv_line(&mut reader, &mut line).unwrap());
+            let req = Json::parse(&line).unwrap();
+            let mut reply = Json::obj();
+            reply.set("echo", req.get("x").and_then(Json::as_u64).unwrap());
+            send_line(&mut writer, &reply).unwrap();
+            // Client hangs up: clean EOF, not an error.
+            assert!(!recv_line(&mut reader, &mut line).unwrap());
+        });
+        let stream = connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut msg = Json::obj();
+        msg.set("x", 7u64);
+        send_line(&mut writer, &msg).unwrap();
+        let mut line = String::new();
+        assert!(recv_line(&mut reader, &mut line).unwrap());
+        let reply = Json::parse(&line).unwrap();
+        assert_eq!(reply.get("echo").and_then(Json::as_u64), Some(7));
+        drop(writer);
+        drop(reader);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_classification() {
+        let to = io::Error::new(io::ErrorKind::WouldBlock, "t");
+        assert!(is_timeout(&to));
+        let to = io::Error::new(io::ErrorKind::TimedOut, "t");
+        assert!(is_timeout(&to));
+        let real = io::Error::new(io::ErrorKind::ConnectionReset, "r");
+        assert!(!is_timeout(&real));
+    }
+}

@@ -1,0 +1,341 @@
+//! Distributed training end-to-end over real localhost TCP: in-process
+//! `serve_on` workers driven by a [`DistExec`] coordinator, asserted
+//! bit-identical to the Sequential oracle — with and without injected
+//! faults (worker crash, torn send, corrupt receive, frozen worker,
+//! total worker loss).
+//!
+//! Every test takes the file-local `SERIAL` lock: the fault plan is
+//! process-global, so a wildcard fault armed by one test must never be
+//! consumed by another test's worker threads.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::{Mutex, MutexGuard};
+use std::thread::{self, JoinHandle};
+
+use pplda::bot::{BotHyper, ParallelBot};
+use pplda::corpus::synthetic::{generate, generate_timestamped, Profile, TimeProfile};
+use pplda::corpus::BagOfWords;
+use pplda::dist::{DistExec, DistOptions, WorkerOptions};
+use pplda::kernel::KernelKind;
+use pplda::partition::{partition, Algorithm, Plan};
+use pplda::scheduler::exec::{CommitMode, ExecMode, ParallelLda};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A fault test that panicked by design poisons the lock; the state
+    // it guards (the global fault plan) is cleared by its guard drop.
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_bow() -> BagOfWords {
+    let mut p = Profile::nips_like().scaled(15);
+    p.len_sigma = 0.4;
+    generate(&p, 2101)
+}
+
+fn small_plan(bow: &BagOfWords) -> Plan {
+    partition(bow, 3, Algorithm::A3 { restarts: 3 }, 7)
+}
+
+/// Bind `n` ephemeral listeners and serve one coordinator session on
+/// each from its own thread. `once` workers exit when the session ends
+/// (shutdown, crash, or socket teardown), so joining is safe.
+fn spawn_workers(n: usize) -> (Vec<SocketAddr>, Vec<JoinHandle<()>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker");
+        addrs.push(listener.local_addr().expect("local addr"));
+        handles.push(thread::spawn(move || {
+            let opts = WorkerOptions {
+                once: true,
+                ..WorkerOptions::default()
+            };
+            let _ = pplda::dist::serve_on(listener, &opts);
+        }));
+    }
+    (addrs, handles)
+}
+
+/// Join worker threads, tolerating the ones an injected fault panicked.
+fn reap(handles: Vec<JoinHandle<()>>) {
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn fast_opts() -> DistOptions {
+    DistOptions {
+        heartbeat_ms: 25,
+        liveness_timeout_ms: 2000,
+        spec_factor: f64::INFINITY,
+        connect_attempts: 20,
+        max_reconnects: 3,
+    }
+}
+
+fn oracle_lda(
+    bow: &BagOfWords,
+    plan: &Plan,
+    kernel: KernelKind,
+    commit: CommitMode,
+    sweeps: usize,
+) -> ParallelLda {
+    let mut lda = ParallelLda::init(bow, plan, 8, 0.5, 0.1, 11);
+    lda.set_kernel(kernel);
+    lda.set_commit(commit);
+    for _ in 0..sweeps {
+        lda.sweep(ExecMode::Sequential);
+    }
+    lda
+}
+
+fn assert_lda_counts_match(lda: &ParallelLda, oracle: &ParallelLda, tag: &str) {
+    assert_eq!(lda.counts.doc_topic, oracle.counts.doc_topic, "{tag}: n_dk");
+    assert_eq!(lda.counts.word_topic, oracle.counts.word_topic, "{tag}: n_wk");
+    assert_eq!(lda.counts.topic, oracle.counts.topic, "{tag}: n_k");
+}
+
+#[test]
+fn dist_lda_bit_identical_across_kernels_and_commit_modes() {
+    let _g = lock();
+    let bow = small_bow();
+    let plan = small_plan(&bow);
+    for kernel in KernelKind::all() {
+        for commit in [CommitMode::Barrier, CommitMode::Ticketed] {
+            let tag = format!("{kernel:?}/{commit:?}");
+            let oracle = oracle_lda(&bow, &plan, kernel, commit, 3);
+            let (addrs, handles) = spawn_workers(2);
+            let mut exec = DistExec::connect(&addrs, fast_opts()).expect("connect");
+            let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 11);
+            lda.set_kernel(kernel);
+            lda.set_commit(commit);
+            for _ in 0..3 {
+                lda.sweep_with(&mut exec);
+            }
+            assert_eq!(exec.reassigns(), 0, "{tag}: clean run reassigns nothing");
+            assert_eq!(exec.local_fallbacks(), 0, "{tag}: workers did all the work");
+            assert_lda_counts_match(&lda, &oracle, &tag);
+            assert_eq!(
+                lda.perplexity(&bow).to_bits(),
+                oracle.perplexity(&bow).to_bits(),
+                "{tag}: perplexity bits"
+            );
+            exec.shutdown();
+            reap(handles);
+        }
+    }
+}
+
+#[test]
+fn dist_bot_bit_identical_to_sequential() {
+    let _g = lock();
+    let mut profile = Profile::tiny();
+    profile.time = Some(TimeProfile {
+        first_year: 2000,
+        last_year: 2009,
+        growth: 0.1,
+        stamps_per_doc: 4,
+    });
+    let tc = generate_timestamped(&profile, 2104);
+    let plan_dw = partition(&tc.bow, 3, Algorithm::A3 { restarts: 3 }, 9);
+    let plan_dts = partition(&tc.dts, 3, Algorithm::A3 { restarts: 3 }, 9 ^ 0xD75);
+    let h = BotHyper::new(8, 0.5, 0.1, 0.1, tc.bow.num_words(), tc.num_stamps);
+
+    let mut oracle = ParallelBot::init(&tc, &plan_dw, &plan_dts, h, 13);
+    oracle.set_commit(CommitMode::Ticketed);
+    for _ in 0..3 {
+        oracle.sweep(ExecMode::Sequential);
+    }
+
+    let (addrs, handles) = spawn_workers(2);
+    let mut exec = DistExec::connect(&addrs, fast_opts()).expect("connect");
+    let mut bot = ParallelBot::init(&tc, &plan_dw, &plan_dts, h, 13);
+    bot.set_commit(CommitMode::Ticketed);
+    for _ in 0..3 {
+        bot.sweep_with(&mut exec);
+    }
+    assert_eq!(exec.reassigns(), 0, "clean BoT run reassigns nothing");
+    assert_eq!(bot.counts.doc_topic, oracle.counts.doc_topic, "n_jk");
+    assert_eq!(bot.counts.word_topic, oracle.counts.word_topic, "n_kw");
+    assert_eq!(bot.counts.stamp_topic, oracle.counts.stamp_topic, "n_ks");
+    exec.shutdown();
+    reap(handles);
+}
+
+/// The chaos matrix. Reassignment counts are exact because assignment
+/// is round-robin over live nodes in index order and every fault is
+/// keyed to a deterministic `(node, sweep, ticket/partition)` site.
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use super::*;
+    use pplda::util::fault::{self, install, Fault, FaultKind, ANY};
+
+    /// A worker panic mid-sweep: node 0 dies executing its first task
+    /// (ticket 0), so both of its round-robin tickets {0, 2} of the
+    /// 3-task epoch replay on node 1 — exactly 2 reassigns, and the
+    /// replayed `(sweep, partition)` RNG streams keep the run
+    /// bit-identical to the undisturbed oracle.
+    #[test]
+    fn worker_crash_mid_sweep_replays_bit_identically() {
+        let _g = lock();
+        let bow = small_bow();
+        let plan = small_plan(&bow);
+        for commit in [CommitMode::Barrier, CommitMode::Ticketed] {
+            let tag = format!("crash/{commit:?}");
+            let oracle = oracle_lda(&bow, &plan, KernelKind::Dense, commit, 3);
+            let (addrs, handles) = spawn_workers(2);
+            let mut exec = DistExec::connect(&addrs, fast_opts()).expect("connect");
+            let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 11);
+            lda.set_commit(commit);
+            let guard = install(vec![Fault {
+                site: fault::sites::DIST_WORKER,
+                key: [0, ANY, ANY],
+                kind: FaultKind::Panic,
+            }]);
+            for _ in 0..3 {
+                lda.sweep_with(&mut exec);
+            }
+            drop(guard);
+            assert_eq!(exec.reassigns(), 2, "{tag}: node 0 held tickets 0 and 2");
+            assert_lda_counts_match(&lda, &oracle, &tag);
+            exec.shutdown();
+            reap(handles);
+        }
+    }
+
+    /// A torn task write to node 1 at `(sweep 0, ticket 1)`: the frame
+    /// is cut mid-header, the node is buried, and only that one ticket
+    /// (node 1's first — nothing else was in flight there) reassigns.
+    #[test]
+    fn torn_send_reassigns_exactly_one_ticket() {
+        let _g = lock();
+        let bow = small_bow();
+        let plan = small_plan(&bow);
+        let oracle = oracle_lda(&bow, &plan, KernelKind::Dense, CommitMode::Barrier, 3);
+        let (addrs, handles) = spawn_workers(2);
+        let mut exec = DistExec::connect(&addrs, fast_opts()).expect("connect");
+        let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 11);
+        let guard = install(vec![Fault {
+            site: fault::sites::DIST_SEND,
+            key: [1, 0, 1],
+            kind: FaultKind::TornWrite,
+        }]);
+        for _ in 0..3 {
+            lda.sweep_with(&mut exec);
+        }
+        drop(guard);
+        assert_eq!(exec.reassigns(), 1, "only ticket 1 was in flight on node 1");
+        assert_eq!(exec.live_nodes(), 1, "node 1 stays buried (its worker exited)");
+        assert_lda_counts_match(&lda, &oracle, "torn-send");
+        exec.shutdown();
+        reap(handles);
+    }
+
+    /// A corrupt delta from node 0: the first reply it sends in sweep 0
+    /// is discarded at receipt, the node is buried, and both of its
+    /// in-flight tickets {0, 2} replay elsewhere — exactly 2 reassigns,
+    /// and the discarded half-result never touches the model (the
+    /// replay writes the same absolute rows the clean run would).
+    #[test]
+    fn corrupt_delta_discards_node_and_replays() {
+        let _g = lock();
+        let bow = small_bow();
+        let plan = small_plan(&bow);
+        let oracle = oracle_lda(&bow, &plan, KernelKind::Dense, CommitMode::Ticketed, 3);
+        let (addrs, handles) = spawn_workers(2);
+        let mut exec = DistExec::connect(&addrs, fast_opts()).expect("connect");
+        let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 11);
+        lda.set_commit(CommitMode::Ticketed);
+        let guard = install(vec![Fault {
+            site: fault::sites::DIST_RECV,
+            key: [0, 0, ANY],
+            kind: FaultKind::IoError,
+        }]);
+        for _ in 0..3 {
+            lda.sweep_with(&mut exec);
+        }
+        drop(guard);
+        assert_eq!(exec.reassigns(), 2, "node 0 held tickets 0 and 2 at discard time");
+        assert_lda_counts_match(&lda, &oracle, "corrupt-recv");
+        exec.shutdown();
+        reap(handles);
+    }
+
+    /// Losing every worker degrades to local execution: with one node,
+    /// a send fault on the very first task buries it, reconnects are
+    /// exhausted (budget 0), and all 27 tasks (3 sweeps × 3 epochs × 3
+    /// partitions) run on the coordinator through the same
+    /// `pool::run_task` — still bit-identical.
+    #[test]
+    fn total_worker_loss_falls_back_to_local_execution() {
+        let _g = lock();
+        let bow = small_bow();
+        let plan = small_plan(&bow);
+        let oracle = oracle_lda(&bow, &plan, KernelKind::Sparse, CommitMode::Barrier, 3);
+        let (addrs, handles) = spawn_workers(1);
+        let opts = DistOptions {
+            max_reconnects: 0,
+            ..fast_opts()
+        };
+        let mut exec = DistExec::connect(&addrs, opts).expect("connect");
+        let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 11);
+        lda.set_kernel(KernelKind::Sparse);
+        let guard = install(vec![Fault {
+            site: fault::sites::DIST_SEND,
+            key: [0, ANY, ANY],
+            kind: FaultKind::IoError,
+        }]);
+        for _ in 0..3 {
+            lda.sweep_with(&mut exec);
+        }
+        drop(guard);
+        assert_eq!(exec.reassigns(), 1, "the failed first send");
+        assert_eq!(exec.local_fallbacks(), 27, "every task ran locally");
+        assert_eq!(exec.live_nodes(), 0);
+        assert_lda_counts_match(&lda, &oracle, "local-fallback");
+        exec.shutdown();
+        reap(handles);
+    }
+
+    /// A frozen worker (stops ponging and taking tasks, socket open):
+    /// the liveness timeout buries it and its stalled work replays.
+    /// The freeze latches on the first heartbeat that reaches node 1,
+    /// whose timing depends on event-loop gaps, so this asserts bounds,
+    /// not exact counts — sweeps continue until the detector has fired.
+    #[test]
+    fn frozen_worker_is_detected_by_liveness_timeout() {
+        let _g = lock();
+        let bow = small_bow();
+        let plan = small_plan(&bow);
+        let (addrs, handles) = spawn_workers(2);
+        let opts = DistOptions {
+            heartbeat_ms: 1,
+            liveness_timeout_ms: 150,
+            ..fast_opts()
+        };
+        let mut exec = DistExec::connect(&addrs, opts).expect("connect");
+        let mut lda = ParallelLda::init(&bow, &plan, 8, 0.5, 0.1, 11);
+        let guard = install(vec![Fault {
+            site: fault::sites::DIST_HEARTBEAT,
+            key: [1, ANY, ANY],
+            kind: FaultKind::IoError,
+        }]);
+        let mut sweeps = 0;
+        while sweeps < 30 && (exec.reassigns() == 0 || sweeps < 3) {
+            lda.sweep_with(&mut exec);
+            sweeps += 1;
+        }
+        drop(guard);
+        assert!(exec.pings_sent() > 0, "heartbeats were exchanged");
+        assert!(
+            exec.reassigns() >= 1,
+            "the frozen node's stalled tickets were reassigned"
+        );
+        let oracle = oracle_lda(&bow, &plan, KernelKind::Dense, CommitMode::Barrier, sweeps);
+        assert_lda_counts_match(&lda, &oracle, "frozen-worker");
+        exec.shutdown();
+        reap(handles);
+    }
+}
